@@ -1,0 +1,83 @@
+//! Run the paper's holistic DSE (Fig 2) for a chosen CNN and print the
+//! chosen accelerator designs next to the paper's Table II, plus the
+//! Table IV-style system metrics of the winner.
+//!
+//! Run: `cargo run --release --example dse_explore -- [resnet18|resnet50|resnet152] [wq]`
+
+use mpcnn::cnn::{resnet, workload};
+use mpcnn::config::RunConfig;
+use mpcnn::dse;
+use mpcnn::report::paper;
+use mpcnn::util::table::{fnum, Table};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cnn_name = args.first().map(|s| s.as_str()).unwrap_or("resnet18");
+    let wq: u32 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(2);
+
+    let cnn = resnet::by_name(cnn_name)
+        .unwrap_or_else(|| {
+            eprintln!("unknown CNN '{cnn_name}'");
+            std::process::exit(2);
+        })
+        .with_uniform_wq(wq);
+    let cfg = RunConfig::default();
+
+    println!(
+        "=== holistic DSE: {} (inner w_Q = {wq}, avg w_Q = {:.2}) on {} ===\n",
+        cnn.name,
+        workload::mac_weighted_avg_wq(&cnn),
+        cfg.fpga.name
+    );
+
+    // Phase 1 result (blue box): the winning PE family.
+    let pe = dse::pe_winner_for(&cnn, &cfg);
+    println!(
+        "PE DSE winner: {} ({:.0} LUTs, {:.0} MHz, {:.1} Mbit/s/LUT)\n",
+        pe.design,
+        pe.luts,
+        pe.fmax_mhz,
+        pe.bits_per_s_per_lut / 1e6
+    );
+
+    // Phases 2+3 per slice.
+    let report = dse::explore(&cnn, &cfg);
+    let mut t = Table::new("array DSE + system evaluation").headers(&[
+        "k", "dims", "N_PE", "paper N_PE*", "U avg", "kLUT", "BRAM", "fps", "GOps/s", "mJ/frame",
+    ]);
+    for o in &report.per_k {
+        let paper_npe = paper::TABLE2
+            .iter()
+            .find(|r| r.k == o.k && r.cnn.starts_with(&cnn.name[..8.min(cnn.name.len())]))
+            .map(|r| r.n_pe.to_string())
+            .unwrap_or_else(|| "-".into());
+        t.row(vec![
+            o.k.to_string(),
+            o.array.dims.to_string(),
+            o.array.n_pe.to_string(),
+            paper_npe,
+            fnum(o.array.avg_utilization, 3),
+            fnum(o.sim.kluts, 1),
+            o.sim.brams.to_string(),
+            fnum(o.sim.fps, 1),
+            fnum(o.sim.gops, 1),
+            fnum(o.sim.e_total_mj(), 2),
+        ]);
+    }
+    t.note("* paper Table II (designs optimized for w_Q = 8 CNNs)");
+    print!("{}", t.render());
+
+    let best = report.best_outcome();
+    println!(
+        "\nchosen: BP-ST-1D k={} @ {} -> {:.1} fps, {:.2} TOps/s, {:.1} GOps/s/W",
+        best.k,
+        best.array.dims,
+        best.sim.fps,
+        best.sim.gops / 1000.0,
+        best.sim.gops_per_w()
+    );
+
+    // Per-layer breakdown of the winner.
+    println!();
+    print!("{}", mpcnn::sim::trace::layer_table(&best.sim).render());
+}

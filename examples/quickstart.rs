@@ -1,0 +1,53 @@
+//! Quickstart: load an AOT-compiled quantized ResNet-8 through PJRT and
+//! classify a few held-out images — the minimal end-to-end path.
+//!
+//! Prereq: `make artifacts`. Run: `cargo run --release --example quickstart`
+
+use anyhow::{anyhow, Result};
+use mpcnn::runtime::{artifacts_dir, Engine, TestSet};
+
+fn main() -> Result<()> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!(
+            "artifacts not found at {} — run `make artifacts` first",
+            dir.display()
+        );
+        std::process::exit(2);
+    }
+
+    // 1. Bring up the PJRT CPU client and compile every exported variant.
+    let engine = Engine::load_all(&dir)?;
+    println!(
+        "engine: platform={}, models={:?}",
+        engine.platform(),
+        engine.loaded_names()
+    );
+
+    // 2. Load the held-out testset exported by aot.py.
+    let ts = TestSet::load(dir.join(
+        engine
+            .manifest
+            .testset
+            .clone()
+            .ok_or_else(|| anyhow!("no testset in manifest"))?,
+    ))?;
+    println!("testset: {} images of {}x{}x{}", ts.n, ts.h, ts.w, ts.c);
+
+    // 3. Classify ten images with the 4-bit model and report.
+    let model = engine
+        .model_for(4, 1)
+        .ok_or_else(|| anyhow!("no wq=4 batch-1 model exported"))?;
+    let mut correct = 0;
+    for i in 0..10.min(ts.n) {
+        let pred = model.classify(ts.image(i))?[0];
+        let truth = ts.labels[i] as usize;
+        println!(
+            "image {i}: predicted {pred}, label {truth} {}",
+            if pred == truth { "✓" } else { "✗" }
+        );
+        correct += (pred == truth) as usize;
+    }
+    println!("quickstart accuracy: {correct}/10");
+    Ok(())
+}

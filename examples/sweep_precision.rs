@@ -1,0 +1,48 @@
+//! Fig 9 analog: sweep weight word-lengths across the ResNet family and
+//! print the accuracy-throughput frontier produced by per-CNN DSE-designed
+//! accelerators (one "FPGA image" per point, as in the paper).
+//!
+//! Run: `cargo run --release --example sweep_precision`
+
+use mpcnn::cnn::{resnet, workload};
+use mpcnn::config::RunConfig;
+use mpcnn::dse;
+use mpcnn::report::paper;
+use mpcnn::util::table::{fnum, ratio, Table};
+
+fn main() {
+    let cfg = RunConfig::default();
+    let mut t = Table::new("accuracy-throughput frontier (k = w_Q designs, Fig 9 analog)")
+        .headers(&[
+            "CNN", "wq", "Top-5 %*", "fps", "GOps/s", "mJ/frame", "GOps/s/W", "wt compression",
+        ]);
+    for (name, build) in [
+        ("ResNet-18", resnet::resnet18 as fn() -> mpcnn::cnn::Cnn),
+        ("ResNet-50", resnet::resnet50),
+        ("ResNet-152", resnet::resnet152),
+    ] {
+        for wq in [1u32, 2, 4] {
+            let cnn = build().with_uniform_wq(wq);
+            let out = dse::explore_k(&cnn, &cfg, wq);
+            t.row(vec![
+                name.to_string(),
+                wq.to_string(),
+                paper::top5_accuracy(name, wq)
+                    .map(|a| fnum(a, 2))
+                    .unwrap_or_else(|| "-".into()),
+                fnum(out.sim.fps, 1),
+                fnum(out.sim.gops, 1),
+                fnum(out.sim.e_total_mj(), 2),
+                fnum(out.sim.gops_per_w(), 1),
+                ratio(workload::weight_compression_factor(&cnn)),
+            ]);
+        }
+        t.sep();
+    }
+    t.note("* paper-reported ImageNet Top-5 (Table III); our small-scale QAT ordering check is in EXPERIMENTS.md");
+    print!("{}", t.render());
+
+    println!("\npaper headlines for comparison:");
+    println!("  ResNet-18 w2: 245 fps @ 87.48% Top-5 (Table IV)");
+    println!("  ResNet-152 w2: 1.13 TOps/s @ 92.9% Top-5 (Table V)");
+}

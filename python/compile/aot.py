@@ -1,0 +1,131 @@
+"""AOT export: lower the bit-sliced inference model to HLO **text** and
+write the artifact bundle the rust runtime consumes.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the `xla` crate) rejects; the text parser reassigns ids
+(see /opt/xla-example/README.md).
+
+Outputs under --out-dir (default ../artifacts):
+  resnet8_w{wq}_b{batch}.hlo.txt   per (wq, batch) variant
+  params_w{wq}.npz                 trained parameters (inputs, kept for repro)
+  testset.bin                      held-out eval set (rust TestSet format)
+  manifest.json                    index of all of the above
+
+Usage: cd python && python -m compile.aot [--wq 1,2,4,8] [--batches 1,8]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import data
+from .model import forward_infer, init_params, load_params
+
+# Canonical operand slice for the exported datapath. The numerical result
+# is k-independent (property-tested); k=2 matches the paper's headline
+# design (Table IV/V use the k=2 image for the flagship results).
+EXPORT_K = 2
+
+HW = data.HW
+CHANNELS = data.CHANNELS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default printer elides big literals as
+    # `constant({...})`, which silently zeroes the baked weights after the
+    # text round-trip (the rust parser accepts the placeholder!).
+    text = comp.as_hlo_text(True)
+    assert "{...}" not in text, "HLO printer elided a constant"
+    return text
+
+
+def export_model(params, wq: int, batch: int, out_path: str) -> int:
+    """Lower forward_infer closed over ``params`` at a fixed batch size.
+    Returns the HLO text size in bytes."""
+
+    def fn(x):
+        return (forward_infer(params, x, wq, EXPORT_K),)
+
+    spec = jax.ShapeDtypeStruct((batch, HW, HW, CHANNELS), jnp.float32)
+    lowered = jax.jit(fn).lower(spec)
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", type=str, default="../artifacts")
+    ap.add_argument("--wq", type=str, default="1,2,4,8")
+    ap.add_argument("--batches", type=str, default="1,8")
+    ap.add_argument(
+        "--random-params",
+        action="store_true",
+        help="export with fixed-seed random params when no trained npz exists",
+    )
+    ap.add_argument("--n-test-per-class", type=int, default=40)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    wqs = [int(w) for w in args.wq.split(",")]
+    batches = [int(b) for b in args.batches.split(",")]
+
+    models = []
+    for wq in wqs:
+        params_path = os.path.join(args.out_dir, f"params_w{wq}.npz")
+        if os.path.exists(params_path):
+            params = load_params(params_path)
+            print(f"w{wq}: loaded trained params from {params_path}")
+        elif args.random_params:
+            params = init_params(jax.random.PRNGKey(7), wq)
+            print(f"w{wq}: WARNING — using random params (no {params_path})")
+        else:
+            raise SystemExit(
+                f"missing {params_path}; run train_qat first or pass --random-params"
+            )
+        for batch in batches:
+            name = f"resnet8_w{wq}_b{batch}"
+            path = f"{name}.hlo.txt"
+            nbytes = export_model(params, wq, batch, os.path.join(args.out_dir, path))
+            print(f"  exported {name}: {nbytes} bytes of HLO text")
+            models.append(
+                {
+                    "name": name,
+                    "path": path,
+                    "wq": wq,
+                    "batch": batch,
+                    "input": [batch, HW, HW, CHANNELS],
+                    "classes": data.N_CLASSES,
+                }
+            )
+
+    # Held-out evaluation set (same generator family, disjoint seed).
+    test_x, test_y = data.make_dataset(args.n_test_per_class, seed=10_000)
+    ts_path = os.path.join(args.out_dir, "testset.bin")
+    data.write_testset_bin(ts_path, test_x, test_y)
+    print(f"wrote testset: {test_x.shape[0]} images -> {ts_path}")
+
+    manifest = {
+        "models": models,
+        "testset": "testset.bin",
+        "export_k": EXPORT_K,
+        "generator": "python/compile/aot.py",
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(models)} models")
+
+
+if __name__ == "__main__":
+    main()

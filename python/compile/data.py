@@ -1,0 +1,103 @@
+"""Synthetic "shapes" dataset — the ImageNet substitution (DESIGN.md §4).
+
+Ten procedurally generated 32x32x3 pattern classes with per-sample random
+phase, orientation jitter, color and noise. Classifiable to high accuracy
+by a small CNN but not linearly separable, which is what the QAT accuracy
+ordering check (FP ≈ 4 bit > 2 bit >> 1 bit) needs.
+
+Deterministic given the seed; the held-out split is exported to
+``artifacts/testset.bin`` so the rust serving path measures real accuracy.
+"""
+
+import numpy as np
+
+N_CLASSES = 10
+HW = 32
+CHANNELS = 3
+
+
+def _grid():
+    y, x = np.meshgrid(np.arange(HW), np.arange(HW), indexing="ij")
+    return y.astype(np.float32), x.astype(np.float32)
+
+
+def _pattern(cls: int, rng: np.random.Generator) -> np.ndarray:
+    """One [HW, HW] grayscale pattern in [0, 1] for class ``cls``."""
+    y, x = _grid()
+    phase = rng.uniform(0, 2 * np.pi)
+    freq = rng.uniform(0.55, 0.85)
+    cy, cx = rng.uniform(10, 22, size=2)
+    if cls == 0:  # horizontal stripes
+        return 0.5 + 0.5 * np.sin(freq * y + phase)
+    if cls == 1:  # vertical stripes
+        return 0.5 + 0.5 * np.sin(freq * x + phase)
+    if cls == 2:  # diagonal stripes
+        return 0.5 + 0.5 * np.sin(freq * (x + y) / np.sqrt(2) + phase)
+    if cls == 3:  # checkerboard
+        return 0.5 + 0.5 * np.sin(freq * x + phase) * np.sin(freq * y + phase)
+    if cls == 4:  # filled disk
+        r = np.sqrt((y - cy) ** 2 + (x - cx) ** 2)
+        return (r < rng.uniform(6, 10)).astype(np.float32)
+    if cls == 5:  # square frame
+        half = rng.uniform(7, 12)
+        dy, dx = np.abs(y - cy), np.abs(x - cx)
+        outer = np.maximum(dy, dx) < half
+        inner = np.maximum(dy, dx) < half - 3
+        return (outer & ~inner).astype(np.float32)
+    if cls == 6:  # radial gradient
+        r = np.sqrt((y - cy) ** 2 + (x - cx) ** 2)
+        return np.clip(1.0 - r / 24.0, 0.0, 1.0)
+    if cls == 7:  # linear gradient (random direction)
+        ang = rng.uniform(0, 2 * np.pi)
+        proj = (x * np.cos(ang) + y * np.sin(ang)) / HW
+        return (proj - proj.min()) / max(float(np.ptp(proj)), 1e-6)
+    if cls == 8:  # three gaussian blobs
+        img = np.zeros((HW, HW), np.float32)
+        for _ in range(3):
+            by, bx = rng.uniform(4, 28, size=2)
+            img += np.exp(-((y - by) ** 2 + (x - bx) ** 2) / (2 * 3.0**2))
+        return np.clip(img, 0, 1)
+    if cls == 9:  # cross
+        wid = rng.uniform(1.5, 3.5)
+        return ((np.abs(y - cy) < wid) | (np.abs(x - cx) < wid)).astype(np.float32)
+    raise ValueError(f"class {cls} out of range")
+
+
+def make_dataset(n_per_class: int, seed: int = 0, noise: float = 0.08):
+    """Generate (images [N, 32, 32, 3] f32 in [0,1], labels [N] u8),
+    shuffled deterministically."""
+    rng = np.random.default_rng(seed)
+    n = n_per_class * N_CLASSES
+    images = np.zeros((n, HW, HW, CHANNELS), np.float32)
+    labels = np.zeros(n, np.uint8)
+    i = 0
+    for cls in range(N_CLASSES):
+        for _ in range(n_per_class):
+            base = _pattern(cls, rng)
+            color = rng.uniform(0.4, 1.0, size=CHANNELS).astype(np.float32)
+            img = base[..., None] * color[None, None, :]
+            img += rng.normal(0, noise, img.shape).astype(np.float32)
+            images[i] = np.clip(img, 0.0, 1.0)
+            labels[i] = cls
+            i += 1
+    perm = rng.permutation(n)
+    return images[perm], labels[perm]
+
+
+def train_test_split(n_train_per_class: int, n_test_per_class: int, seed: int = 0):
+    """Disjoint train/test sets (different seeds => different samples)."""
+    train = make_dataset(n_train_per_class, seed=seed)
+    test = make_dataset(n_test_per_class, seed=seed + 10_000)
+    return train, test
+
+
+def write_testset_bin(path: str, images: np.ndarray, labels: np.ndarray):
+    """Serialize in the rust ``TestSet`` format (see runtime/testset.rs):
+    magic 'MPTS', u32 n/h/w/c, f32 images, u8 labels (little-endian)."""
+    n, h, w, c = images.shape
+    with open(path, "wb") as f:
+        f.write(b"MPTS")
+        for v in (n, h, w, c):
+            f.write(np.uint32(v).tobytes())
+        f.write(images.astype("<f4").tobytes())
+        f.write(labels.astype(np.uint8).tobytes())

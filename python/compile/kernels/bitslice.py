@@ -1,0 +1,149 @@
+"""L1 Pallas kernels: the paper's BP-ST-1D bit-sliced MAC datapath.
+
+``bitslice_matmul`` is the compute hot-spot of the whole stack: a tiled
+matmul where the weight matrix arrives decomposed into ``S = ceil(wq/k)``
+k-bit digit planes (PPG operands). Inside one tile the kernel computes one
+partial product per digit plane (the PPG array), shift-aligns each by
+``2^(k*s)`` (the barrel shifters) and sums them (the Sum-Together adder
+tree) — exactly the Fig 1b / Fig 6b datapath, expressed for a TPU-shaped
+machine (see DESIGN.md §6 Hardware-Adaptation):
+
+- PPG array        -> one MXU contraction per digit plane
+- shift + ST tree  -> scalar-weighted accumulation over the plane axis
+- BRAM broadcast   -> BlockSpec: the (block_m, K) activation tile and all S
+                      (K, block_n) digit tiles are resident in VMEM while
+                      the grid walks output tiles (activations stream, the
+                      weight tile is reused — the H×W×D spatial reuse).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO, which is what
+``aot.py`` exports and the rust runtime executes.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def bitslice_matmul(a, w_slices, k: int, block_m: int = 1024, block_n: int = 128):
+    """Bit-sliced matmul: ``sum_s (a @ w_slices[s]) * 2^(k*s)``.
+
+    a:        [M, K] integer-valued (activation codes), int32 or float32
+    w_slices: [S, K, N] integer-valued digit planes (top plane signed)
+    returns:  [M, N] in a.dtype — equal to ``a @ reconstruct(w_slices)``
+
+    The decomposition is exact in int32, and exact in float32 while every
+    partial dot stays below 2^24 (true for all trained models here; the
+    int32 path is what the property tests drive).
+
+    Tile defaults (1024, 128) are the §Perf result: grid-iteration
+    overhead dominates interpret/CPU wallclock AND the HBM↔VMEM
+    round-trips on real hardware, so tiles are sized to the largest block
+    that keeps the activation tile + all digit planes + the output tile
+    within VMEM (~3.5 MiB at K = 576, S = 2 — 21 % of a 16 MiB VMEM);
+    measured ~9x faster than the initial 64x64 tiles end-to-end
+    (EXPERIMENTS.md §Perf).
+    """
+    assert a.ndim == 2 and w_slices.ndim == 3
+    m, kk = a.shape
+    s, kk2, n = w_slices.shape
+    assert kk == kk2, f"contraction mismatch: {kk} vs {kk2}"
+    dtype = a.dtype
+    assert w_slices.dtype == dtype, "operand dtypes must match"
+
+    bm = min(block_m, _ceil_to(m, 8))
+    bn = min(block_n, _ceil_to(n, 8))
+    mp, np_ = _ceil_to(m, bm), _ceil_to(n, bn)
+    a_p = jnp.pad(a, ((0, mp - m), (0, 0)))
+    w_p = jnp.pad(w_slices, ((0, 0), (0, 0), (0, np_ - n)))
+
+    shift = [dtype.type(2 ** (k * i)) for i in range(s)]
+
+    def kernel(a_ref, w_ref, o_ref):
+        # PPG array: one contraction per digit plane; ST adder tree: the
+        # shift-weighted sum. Unrolled statically over the plane axis.
+        a_tile = a_ref[...]
+        acc = jnp.zeros(o_ref.shape, dtype)
+        for i in range(s):
+            pp = jax.lax.dot_general(
+                a_tile,
+                w_ref[i],
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=dtype,
+            )
+            acc = acc + pp * shift[i]
+        o_ref[...] = acc
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, kk), lambda i, j: (i, 0)),
+            pl.BlockSpec((s, kk, bn), lambda i, j: (0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), dtype),
+        interpret=True,
+    )(a_p, w_p)
+    return out[:m, :n]
+
+
+def lsq_quantize_kernel(x, gamma, qn: float, qp: float, block: int = 32768):
+    """Elementwise LSQ quantizer (Eq 5) as a Pallas kernel:
+    ``round(clamp(x/gamma, qn, qp)) * gamma``.
+
+    x: any shape, float32. gamma: scalar array.
+    """
+    orig_shape = x.shape
+    flat = x.reshape(-1)
+    nelem = flat.shape[0]
+    b = min(block, _ceil_to(nelem, 8))
+    npad = _ceil_to(nelem, b)
+    flat_p = jnp.pad(flat, (0, npad - nelem))
+    gamma_arr = jnp.asarray(gamma, jnp.float32).reshape(1)
+
+    def kernel(x_ref, g_ref, o_ref):
+        g = g_ref[0]
+        v = jnp.clip(x_ref[...] / g, qn, qp)
+        o_ref[...] = jnp.round(v) * g
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(npad // b,),
+        in_specs=[
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((npad,), jnp.float32),
+        interpret=True,
+    )(flat_p, gamma_arr)
+    return out[:nelem].reshape(orig_shape)
+
+
+@partial(jax.jit, static_argnums=(2,))
+def bitslice_matmul_jit(a, w_slices, k: int):
+    """Jitted wrapper (tests + benchmarking)."""
+    return bitslice_matmul(a, w_slices, k)
+
+
+def vmem_footprint_bytes(block_m: int, block_n: int, kk: int, s: int, itemsize: int = 4):
+    """Estimated VMEM residency of one grid step (activation tile + all
+    digit planes + output tile) — the L1 'profile' quantity recorded in
+    EXPERIMENTS.md §Perf (interpret mode has no real TPU timing)."""
+    return itemsize * (block_m * kk + s * kk * block_n + block_m * block_n)
+
+
+def mxu_utilization_estimate(block_m: int, block_n: int, kk: int):
+    """Fraction of a 128x128 MXU a (block_m x kk x block_n) contraction
+    keeps busy per pass — structural estimate for DESIGN.md §Perf."""
+    eff_m = min(block_m, 128) / 128.0
+    eff_n = min(block_n, 128) / 128.0
+    eff_k = min(kk, 128) / 128.0
+    return eff_m * eff_n * eff_k

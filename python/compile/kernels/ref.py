@@ -1,0 +1,53 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Everything here is the "obvious" implementation; the Pallas kernels in
+``bitslice.py`` must match these bit-exactly on integer inputs (pytest +
+hypothesis sweep shapes and word-lengths).
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a, w):
+    """Plain dot product: the full-precision MAC array."""
+    return a @ w
+
+
+def bitslice_matmul_ref(a, w_slices, k: int):
+    """What the BP-ST-1D datapath computes: per-slice partial products,
+    shift-aligned and summed. On exact inputs this equals
+    ``a @ reconstruct(w_slices)``."""
+    s = w_slices.shape[0]
+    acc = None
+    for i in range(s):
+        pp = a @ w_slices[i]
+        term = pp * (2 ** (k * i))
+        acc = term if acc is None else acc + term
+    return acc
+
+
+def lsq_quantize_ref(x, gamma, qn: float, qp: float):
+    """Eq 5 without STE."""
+    return jnp.round(jnp.clip(x / gamma, qn, qp)) * gamma
+
+
+def conv2d_nhwc_ref(x, w, stride: int = 1):
+    """Reference conv via jax.lax (float path), with *symmetric* half
+    padding ``((K-1)//2, K-1-(K-1)//2)`` so the output grid matches the
+    im2col extraction in ``model._im2col`` for every stride (lax's 'SAME'
+    uses asymmetric low/high padding at stride 2, which would misalign the
+    two datapaths by one pixel).
+
+    x: [B, H, W, C], w: [KH, KW, C, O]. Output spatial = ceil(H/stride).
+    """
+    import jax.lax as lax
+
+    kh, kw = w.shape[0], w.shape[1]
+    ph, pw = (kh - 1) // 2, (kw - 1) // 2
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=((ph, kh - 1 - ph), (pw, kw - 1 - pw)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )

@@ -1,0 +1,331 @@
+"""L2: the quantized ResNet (JAX), in two mathematically-identical forms.
+
+- ``forward_train``: LSQ fake-quantization (STE) + ``lax.conv`` — the QAT
+  path used by ``train_qat.py``. With ``train=False`` it uses BN running
+  stats and is the float oracle for the export path.
+- ``forward_infer``: the **bit-sliced datapath** — integer activation codes
+  and k-bit weight digit planes flowing through the L1 Pallas kernels
+  (``bitslice_matmul`` + ``lsq_quantize_kernel``), exactly what the paper's
+  BP-ST-1D array executes. ``aot.py`` lowers this form to HLO for the rust
+  runtime.
+
+The topology mirrors ``rust/src/cnn/resnet.rs::resnet_small`` exactly
+(ResNet-8: conv1 + three basic blocks at 16/32/64 channels + FC), so the
+rust simulator's shape model corresponds 1:1 to the executable artifact.
+
+Quantization scheme (paper §IV-C): activations 8-bit unsigned everywhere;
+first (conv1) and last (fc) layer weights at 8 bit; inner weights at
+``wq_inner`` ∈ {1, 2, 4, 8}. ``wq_inner = 0`` disables quantization (the
+FP32 baseline of Table III).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.bitslice import bitslice_matmul, lsq_quantize_kernel
+from .kernels.ref import conv2d_nhwc_ref
+from .quantize import (
+    lsq_init_gamma,
+    lsq_quantize,
+    quantize_int,
+    slice_signed_int,
+)
+
+BN_EPS = 1e-5
+ACT_BITS = 8
+N_CLASSES = 10
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+
+def _he_init(key, shape):
+    fan_in = 1
+    for d in shape[:-1]:
+        fan_in *= d
+    return jax.random.normal(key, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+
+def _conv_params(key, kh, kw, cin, cout, wq):
+    w = _he_init(key, (kh, kw, cin, cout))
+    return {
+        "w": w,
+        "gamma_w": lsq_init_gamma(w, max(wq, 1), signed=True),
+        "bn_scale": jnp.ones(cout),
+        "bn_bias": jnp.zeros(cout),
+        "bn_mean": jnp.zeros(cout),
+        "bn_var": jnp.ones(cout),
+        "gamma_a": jnp.asarray(0.04),  # refined by LSQ during QAT
+    }
+
+
+def init_params(key, wq_inner: int, width: int = 16):
+    """Initialize the ResNet-8 parameter pytree."""
+    keys = jax.random.split(key, 16)
+    w1, w2, w3 = width, width * 2, width * 4
+    params = {
+        "gamma_in": jnp.asarray(1.0 / 255.0),
+        "conv1": _conv_params(keys[0], 3, 3, 3, w1, 8),
+        "block1": {
+            "conv1": _conv_params(keys[1], 3, 3, w1, w1, wq_inner),
+            "conv2": _conv_params(keys[2], 3, 3, w1, w1, wq_inner),
+        },
+        "block2": {
+            "conv1": _conv_params(keys[3], 3, 3, w1, w2, wq_inner),
+            "conv2": _conv_params(keys[4], 3, 3, w2, w2, wq_inner),
+            "ds": _conv_params(keys[5], 1, 1, w1, w2, wq_inner),
+        },
+        "block3": {
+            "conv1": _conv_params(keys[6], 3, 3, w2, w3, wq_inner),
+            "conv2": _conv_params(keys[7], 3, 3, w3, w3, wq_inner),
+            "ds": _conv_params(keys[8], 1, 1, w2, w3, wq_inner),
+        },
+        "fc": {
+            "w": _he_init(keys[9], (w3, N_CLASSES)),
+            "b": jnp.zeros(N_CLASSES),
+            "gamma_w": jnp.asarray(0.01),
+            "gamma_a": jnp.asarray(0.04),
+        },
+    }
+    params["fc"]["gamma_w"] = lsq_init_gamma(params["fc"]["w"], 8, signed=True)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Training / oracle path (fake quantization, lax.conv)
+# ---------------------------------------------------------------------------
+
+
+def _bn(y, p, train: bool):
+    """BatchNorm. Returns (out, (batch_mean, batch_var)) — the caller folds
+    the batch stats into the running averages."""
+    if train:
+        mean = jnp.mean(y, axis=(0, 1, 2))
+        var = jnp.var(y, axis=(0, 1, 2))
+    else:
+        mean, var = p["bn_mean"], p["bn_var"]
+    out = (y - mean) / jnp.sqrt(var + BN_EPS) * p["bn_scale"] + p["bn_bias"]
+    return out, (mean, var)
+
+
+def _act_q(y, gamma_a, quantize: bool):
+    """Unsigned 8-bit activation quantization. The clamp at Qn=0 doubles as
+    the ReLU (negative pre-activations map to code 0)."""
+    if not quantize:
+        return jax.nn.relu(y)
+    return lsq_quantize(y, gamma_a, ACT_BITS, False)
+
+
+def _qconv_train(x, p, wq: int, stride: int, train: bool, stats: list):
+    if wq == 0:
+        w_q = p["w"]
+    else:
+        w_q = lsq_quantize(p["w"], p["gamma_w"], wq, True)
+    y = conv2d_nhwc_ref(x, w_q, stride)
+    out, bn_stats = _bn(y, p, train)
+    stats.append(bn_stats)
+    return out
+
+
+def forward_train(params, x, wq_inner: int, train: bool = True):
+    """QAT/oracle forward. Returns (logits, bn_batch_stats list in layer
+    order) — pass the stats to :func:`update_bn` after a training step."""
+    q = wq_inner > 0
+    stats: list = []
+    xq = _act_q(x, params["gamma_in"], q)
+
+    h = _qconv_train(xq, params["conv1"], 8 if q else 0, 1, train, stats)
+    h = _act_q(h, params["conv1"]["gamma_a"], q)
+
+    # block1 (16 -> 16, stride 1, identity shortcut)
+    b = params["block1"]
+    y = _qconv_train(h, b["conv1"], wq_inner, 1, train, stats)
+    y = _act_q(y, b["conv1"]["gamma_a"], q)
+    y = _qconv_train(y, b["conv2"], wq_inner, 1, train, stats)
+    h = _act_q(y + h, b["conv2"]["gamma_a"], q)
+
+    # blocks 2, 3 (stride 2, 1x1 downsample shortcut)
+    for name in ("block2", "block3"):
+        b = params[name]
+        y = _qconv_train(h, b["conv1"], wq_inner, 2, train, stats)
+        y = _act_q(y, b["conv1"]["gamma_a"], q)
+        y = _qconv_train(y, b["conv2"], wq_inner, 1, train, stats)
+        sc = _qconv_train(h, b["ds"], wq_inner, 2, train, stats)
+        h = _act_q(y + sc, b["conv2"]["gamma_a"], q)
+
+    # global average pool + quantized FC
+    pooled = jnp.mean(h, axis=(1, 2))
+    fc = params["fc"]
+    pq = _act_q(pooled, fc["gamma_a"], q)
+    if q:
+        w_q = lsq_quantize(fc["w"], fc["gamma_w"], 8, True)
+    else:
+        w_q = fc["w"]
+    logits = pq @ w_q + fc["b"]
+    return logits, stats
+
+
+_BN_LAYER_ORDER = [
+    ("conv1",),
+    ("block1", "conv1"),
+    ("block1", "conv2"),
+    ("block2", "conv1"),
+    ("block2", "conv2"),
+    ("block2", "ds"),
+    ("block3", "conv1"),
+    ("block3", "conv2"),
+    ("block3", "ds"),
+]
+
+
+def update_bn(params, stats, momentum: float = 0.9):
+    """Fold a step's batch statistics into the running BN averages."""
+    new = jax.tree_util.tree_map(lambda v: v, params)  # shallow-ish copy
+    for path, (mean, var) in zip(_BN_LAYER_ORDER, stats):
+        node = new
+        for k in path:
+            node = node[k]
+        node["bn_mean"] = momentum * node["bn_mean"] + (1 - momentum) * mean
+        node["bn_var"] = momentum * node["bn_var"] + (1 - momentum) * var
+    return new
+
+
+# ---------------------------------------------------------------------------
+# Inference / export path (bit-sliced Pallas datapath)
+# ---------------------------------------------------------------------------
+
+
+def _im2col(codes, kh: int, kw: int, stride: int):
+    """SAME-padded patch extraction. codes: [B, H, W, C] ->
+    [B*OH*OW, kh*kw*C], ordering (dy, dx, c) to match the HWIO weight
+    reshape. Zero padding is exact: activation code 0 is real value 0."""
+    b, h, w, c = codes.shape
+    ph, pw = (kh - 1) // 2, (kw - 1) // 2
+    x = jnp.pad(codes, ((0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw), (0, 0)))
+    oh = -(-h // stride)
+    ow = -(-w // stride)
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            patch = x[:, dy : dy + h : stride, dx : dx + w : stride, :]
+            cols.append(patch[:, :oh, :ow, :])
+    stacked = jnp.concatenate(cols, axis=-1)  # [B, OH, OW, kh*kw*C]
+    return stacked.reshape(b * oh * ow, kh * kw * c), (b, oh, ow)
+
+
+def _qconv_infer(codes, gamma_prev, p, wq: int, stride: int, k: int):
+    """One conv on the bit-sliced datapath.
+
+    codes: integer-valued activation codes [B,H,W,C] (f32).
+    Returns the *real-valued*, BN-folded output [B,OH,OW,O].
+    """
+    kh, kw, cin, cout = p["w"].shape
+    w_int = quantize_int(p["w"], p["gamma_w"], wq, True)  # [kh,kw,cin,cout]
+    planes = slice_signed_int(w_int, wq, k)  # [S, kh,kw,cin,cout]
+    s = planes.shape[0]
+    planes2d = planes.reshape(s, kh * kw * cin, cout)
+    patches, (b, oh, ow) = _im2col(codes, kh, kw, stride)
+    y_int = bitslice_matmul(patches, planes2d, k)  # [B*OH*OW, cout]
+    y = y_int.reshape(b, oh, ow, cout) * (gamma_prev * p["gamma_w"])
+    out = (y - p["bn_mean"]) / jnp.sqrt(p["bn_var"] + BN_EPS) * p["bn_scale"] + p[
+        "bn_bias"
+    ]
+    return out
+
+
+def _act_codes(y, gamma_a):
+    """Real values -> integer activation codes via the Pallas LSQ kernel
+    (divide the quantized value back by gamma; exact because the kernel
+    rounds to an integer multiple of gamma)."""
+    q = lsq_quantize_kernel(y, gamma_a, 0.0, float(2**ACT_BITS - 1))
+    return q / gamma_a
+
+
+def forward_infer(params, x, wq_inner: int, k: int):
+    """Bit-sliced inference forward: logits [B, 10].
+
+    Must match ``forward_train(..., train=False)`` to float tolerance —
+    property-tested in python/tests/test_model.py.
+    """
+    wq_inner = int(wq_inner)
+    gamma_in = params["gamma_in"]
+    codes = quantize_int(x, gamma_in, ACT_BITS, False)
+
+    h_real = _qconv_infer(codes, gamma_in, params["conv1"], 8, 1, k)
+    g = params["conv1"]["gamma_a"]
+    h = _act_codes(h_real, g)
+
+    b = params["block1"]
+    y = _qconv_infer(h, g, b["conv1"], wq_inner, 1, k)
+    y_codes = _act_codes(y, b["conv1"]["gamma_a"])
+    y2 = _qconv_infer(y_codes, b["conv1"]["gamma_a"], b["conv2"], wq_inner, 1, k)
+    h_real = y2 + h * g  # shortcut adds the real value of the block input
+    g = b["conv2"]["gamma_a"]
+    h = _act_codes(h_real, g)
+
+    for name in ("block2", "block3"):
+        b = params[name]
+        y = _qconv_infer(h, g, b["conv1"], wq_inner, 2, k)
+        y_codes = _act_codes(y, b["conv1"]["gamma_a"])
+        y2 = _qconv_infer(y_codes, b["conv1"]["gamma_a"], b["conv2"], wq_inner, 1, k)
+        sc = _qconv_infer(h, g, b["ds"], wq_inner, 2, k)
+        h_real = y2 + sc
+        g = b["conv2"]["gamma_a"]
+        h = _act_codes(h_real, g)
+
+    pooled = jnp.mean(h * g, axis=(1, 2))
+    fc = params["fc"]
+    p_codes = _act_codes(pooled, fc["gamma_a"])
+    w_int = quantize_int(fc["w"], fc["gamma_w"], 8, True)
+    planes = slice_signed_int(w_int, 8, k)
+    logits_int = bitslice_matmul(p_codes, planes, k)
+    logits = logits_int * (fc["gamma_a"] * fc["gamma_w"]) + fc["b"]
+    return logits
+
+
+@partial(jax.jit, static_argnums=(2, 3))
+def forward_infer_jit(params, x, wq_inner: int, k: int):
+    return forward_infer(params, x, wq_inner, k)
+
+
+# ---------------------------------------------------------------------------
+# (De)serialization — npz with '/'-joined keys
+# ---------------------------------------------------------------------------
+
+
+def flatten_params(params, prefix=""):
+    out = {}
+    for key, val in params.items():
+        name = f"{prefix}{key}"
+        if isinstance(val, dict):
+            out.update(flatten_params(val, prefix=name + "/"))
+        else:
+            out[name] = val
+    return out
+
+
+def unflatten_params(flat):
+    params: dict = {}
+    for name, val in flat.items():
+        node = params
+        parts = name.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jnp.asarray(val)
+    return params
+
+
+def save_params(path, params):
+    import numpy as np
+
+    np.savez(path, **{k: np.asarray(v) for k, v in flatten_params(params).items()})
+
+
+def load_params(path):
+    import numpy as np
+
+    with np.load(path) as data:
+        return unflatten_params({k: data[k] for k in data.files})

@@ -1,0 +1,105 @@
+"""LSQ quantization (paper Eq 5; Esser et al. [10]) and two's-complement
+bit-slicing — the L2-side mirror of ``rust/src/quant/``.
+
+Quantizer convention (paper §IV-C):
+  activations: unsigned, Qn = 0,        Qp = 2^b - 1
+  weights:     signed,   Qn = -2^{b-1}, Qp = 2^{b-1} - 1
+  v_int   = round(clamp(v / gamma, Qn, Qp))
+  v_quant = v_int * gamma
+
+The straight-through estimator passes gradients through the round() and
+clamp() per the LSQ paper (gradient w.r.t. gamma as in Esser et al. §3).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def qbounds(bits: int, signed: bool):
+    """(Qn, Qp) clamp bounds for a ``bits``-wide quantizer."""
+    if signed:
+        return -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    return 0, 2**bits - 1
+
+
+def lsq_init_gamma(x, bits: int, signed: bool):
+    """LSQ step-size initialization: gamma = 2 E[|x|] / sqrt(Qp).
+
+    Qp is floored at 1 so the 1-bit signed case (Qp = 0, levels {-1, 0})
+    still yields a finite positive step."""
+    _, qp = qbounds(bits, signed)
+    return jnp.maximum(2.0 * jnp.mean(jnp.abs(x)) / jnp.sqrt(float(max(qp, 1))), 1e-6)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def lsq_quantize(x, gamma, bits: int, signed: bool):
+    """Fake-quantize ``x`` with trained step size ``gamma`` (Eq 5)."""
+    qn, qp = qbounds(bits, signed)
+    v = jnp.clip(x / gamma, qn, qp)
+    return jnp.round(v) * gamma
+
+
+def _lsq_fwd(x, gamma, bits, signed):
+    return lsq_quantize(x, gamma, bits, signed), (x, gamma)
+
+
+def _lsq_bwd(bits, signed, res, g):
+    x, gamma = res
+    qn, qp = qbounds(bits, signed)
+    v = x / gamma
+    inside = (v >= qn) & (v <= qp)
+    # dL/dx: straight-through inside the clamp range.
+    gx = g * inside.astype(g.dtype)
+    # dL/dgamma (LSQ): -v + round(v) inside; Qn/Qp at the clamp rails.
+    dgamma_elem = jnp.where(
+        inside,
+        jnp.round(v) - v,
+        jnp.clip(v, qn, qp),
+    )
+    # LSQ gradient scale: 1/sqrt(numel * Qp) stabilizes training.
+    scale = 1.0 / jnp.sqrt(float(x.size) * float(max(qp, 1)))
+    ggamma = jnp.sum(g * dgamma_elem) * scale
+    return gx, ggamma
+
+
+lsq_quantize.defvjp(_lsq_fwd, _lsq_bwd)
+
+
+def quantize_int(x, gamma, bits: int, signed: bool):
+    """Integer codes (no STE; inference/export path)."""
+    qn, qp = qbounds(bits, signed)
+    return jnp.round(jnp.clip(x / gamma, qn, qp))
+
+
+def slice_signed_int(w_int, wq: int, k: int):
+    """Decompose integer-valued signed codes into ``ceil(wq/k)`` k-bit
+    digits, least-significant first; the top digit is signed. Mirrors
+    ``rust/src/quant/slicing.rs`` exactly.
+
+    Works on float arrays carrying integers (export path) and on integer
+    arrays (test path). Returns an array stacked on a new leading axis:
+    ``[S, ...w_int.shape]`` with ``sum_s digits[s] * 2^(k s) == w_int``.
+    """
+    assert wq >= 1 and k >= 1
+    n = -(-wq // k)  # ceil
+    # Two's complement image in [0, 2^wq).
+    u = jnp.where(w_int < 0, w_int + float(2**wq), w_int)
+    digits = []
+    for s in range(n):
+        remaining = wq - s * k
+        dbits = min(k, remaining)
+        d = jnp.mod(jnp.floor(u / float(2 ** (s * k))), float(2**dbits))
+        if s == n - 1:
+            half = float(2 ** (dbits - 1))
+            d = jnp.where(d >= half, d - float(2**dbits), d)
+        digits.append(d)
+    return jnp.stack(digits, axis=0)
+
+
+def reconstruct_slices(digits, k: int):
+    """Inverse of :func:`slice_signed_int`."""
+    s = digits.shape[0]
+    weights = jnp.array([2.0 ** (k * i) for i in range(s)], dtype=digits.dtype)
+    return jnp.tensordot(weights, digits, axes=1)

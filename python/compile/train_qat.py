@@ -1,0 +1,134 @@
+"""Quantization-aware training on the synthetic shapes dataset.
+
+Substitutes the paper's 30-epoch ImageNet LSQ QAT (DESIGN.md §4): same
+quantization code path (Eq 5, STE, per-layer w_Q, 8-bit first/last layer),
+scaled to a workload that trains in ~a minute on CPU. The accuracy
+*ordering* across word-lengths (FP ≈ 4 > 2 >> 1) is the reproduction
+target, recorded in EXPERIMENTS.md.
+
+Usage:
+  python -m compile.train_qat --wq 4 --steps 400 --out ../artifacts/params_w4.npz
+  (wq 0 = FP32 baseline)
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from .model import forward_train, init_params, save_params, update_bn
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(logp[jnp.arange(labels.shape[0]), labels])
+
+
+def make_train_step(wq_inner: int, lr: float, momentum: float = 0.9):
+    def loss_fn(params, x, y):
+        logits, stats = forward_train(params, x, wq_inner, train=True)
+        return cross_entropy(logits, y), stats
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    @jax.jit
+    def step(params, velocity, x, y, lr_now):
+        (loss, stats), grads = grad_fn(params, x, y)
+        new_velocity = jax.tree_util.tree_map(
+            lambda v, g: momentum * v - lr_now * g, velocity, grads
+        )
+        new_params = jax.tree_util.tree_map(
+            lambda p, v: p + v, params, new_velocity
+        )
+        return new_params, new_velocity, loss, stats
+
+    _ = lr
+    return step
+
+
+def evaluate(params, wq_inner: int, images, labels, batch: int = 200):
+    """Top-1 accuracy with BN running stats (eval mode)."""
+    correct = 0
+    eval_fn = jax.jit(
+        lambda p, x: forward_train(p, x, wq_inner, train=False)[0]
+    )
+    for i in range(0, len(images), batch):
+        logits = eval_fn(params, images[i : i + batch])
+        pred = jnp.argmax(logits, axis=-1)
+        correct += int(jnp.sum(pred == labels[i : i + batch]))
+    return correct / len(images)
+
+
+def train(
+    wq_inner: int,
+    steps: int = 400,
+    batch: int = 64,
+    lr: float = 0.05,
+    seed: int = 0,
+    n_train_per_class: int = 300,
+    n_test_per_class: int = 50,
+    log_every: int = 50,
+):
+    """Run QAT; returns (params, test_accuracy, loss_log)."""
+    (train_x, train_y), (test_x, test_y) = data.train_test_split(
+        n_train_per_class, n_test_per_class, seed=seed
+    )
+    key = jax.random.PRNGKey(seed)
+    params = init_params(key, wq_inner)
+    velocity = jax.tree_util.tree_map(jnp.zeros_like, params)
+    step_fn = make_train_step(wq_inner, lr)
+    rng = np.random.default_rng(seed + 1)
+    loss_log = []
+    t0 = time.time()
+    for i in range(steps):
+        idx = rng.integers(0, len(train_x), size=batch)
+        x = jnp.asarray(train_x[idx])
+        y = jnp.asarray(train_y[idx].astype(np.int32))
+        # cosine-ish two-phase schedule
+        lr_now = lr if i < int(steps * 0.7) else lr * 0.1
+        params, velocity, loss, stats = step_fn(params, velocity, x, y, lr_now)
+        params = update_bn(params, stats)
+        loss_log.append(float(loss))
+        if log_every and (i + 1) % log_every == 0:
+            print(
+                f"  step {i + 1:4d}/{steps}  loss {float(loss):.4f}  "
+                f"({time.time() - t0:.1f}s)",
+                flush=True,
+            )
+    acc = evaluate(params, wq_inner, jnp.asarray(test_x), jnp.asarray(test_y))
+    return params, acc, loss_log
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--wq", type=int, default=4, help="inner weight bits (0 = FP32)")
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", type=str, default=None, help="save params npz here")
+    ap.add_argument("--loss-log", type=str, default=None, help="save loss curve (csv)")
+    args = ap.parse_args()
+
+    tag = "FP" if args.wq == 0 else f"w{args.wq}"
+    print(f"QAT {tag}: {args.steps} steps, batch {args.batch}")
+    params, acc, loss_log = train(
+        args.wq, steps=args.steps, batch=args.batch, lr=args.lr, seed=args.seed
+    )
+    print(f"QAT {tag}: test top-1 accuracy = {acc * 100:.2f}%")
+    if args.out:
+        save_params(args.out, params)
+        print(f"saved params to {args.out}")
+    if args.loss_log:
+        with open(args.loss_log, "w") as f:
+            f.write("step,loss\n")
+            for i, l in enumerate(loss_log):
+                f.write(f"{i},{l}\n")
+        print(f"saved loss curve to {args.loss_log}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""AOT export tests: HLO text emission, manifest schema, and numeric parity
+between the exported computation and forward_infer (via jax round-trip)."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, data
+from compile.model import forward_infer, init_params
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jax.random.PRNGKey(7), 4)
+
+
+def test_export_writes_parseable_hlo(tmp_path, params):
+    out = tmp_path / "m.hlo.txt"
+    nbytes = aot.export_model(params, 4, 1, str(out))
+    text = out.read_text()
+    assert nbytes == len(text)
+    assert "HloModule" in text
+    # The exported graph must be pure HLO (interpret-mode pallas lowers to
+    # standard ops) — a Mosaic custom-call would break the CPU PJRT client.
+    assert "custom-call" not in text or "mosaic" not in text.lower()
+    # Large constants (the baked weights!) must not be elided — the rust
+    # parser accepts `constant({...})` and silently zeroes the model.
+    assert "{...}" not in text
+
+
+def test_exported_hlo_has_right_signature(tmp_path, params):
+    out = tmp_path / "m.hlo.txt"
+    aot.export_model(params, 2, 8, str(out))
+    text = out.read_text()
+    assert "f32[8,32,32,3]" in text, "batch-8 input parameter"
+    assert "f32[8,10]" in text, "batch-8 logits"
+
+
+def test_manifest_end_to_end(tmp_path, params, monkeypatch):
+    """Run aot.main with random params and validate the manifest bundle."""
+    import sys
+
+    monkeypatch.setattr(
+        sys,
+        "argv",
+        [
+            "aot",
+            "--out-dir",
+            str(tmp_path),
+            "--wq",
+            "4",
+            "--batches",
+            "1",
+            "--random-params",
+            "--n-test-per-class",
+            "2",
+        ],
+    )
+    aot.main()
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert len(manifest["models"]) == 1
+    entry = manifest["models"][0]
+    assert entry["input"] == [1, 32, 32, 3]
+    assert entry["classes"] == 10
+    assert (tmp_path / entry["path"]).exists()
+    assert (tmp_path / manifest["testset"]).exists()
+
+
+def test_lowered_computation_matches_eager(params):
+    """jit(fn) must equal eager forward_infer (the AOT contract, checked
+    on the jax side; the rust integration test re-checks through PJRT)."""
+    x = jnp.asarray(data.make_dataset(1, seed=5)[0][:2])
+
+    def fn(xx):
+        return forward_infer(params, xx, 4, aot.EXPORT_K)
+
+    eager = fn(x)
+    jitted = jax.jit(fn)(x)
+    np.testing.assert_allclose(np.asarray(jitted), np.asarray(eager), rtol=1e-5)
+
+
+def test_missing_params_errors(tmp_path, monkeypatch):
+    import sys
+
+    monkeypatch.setattr(
+        sys, "argv", ["aot", "--out-dir", str(tmp_path), "--wq", "2", "--batches", "1"]
+    )
+    with pytest.raises(SystemExit):
+        aot.main()

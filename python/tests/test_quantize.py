@@ -1,0 +1,110 @@
+"""LSQ quantizer + bit-slicing properties (mirror of rust/src/quant tests)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.quantize import (
+    lsq_init_gamma,
+    lsq_quantize,
+    qbounds,
+    quantize_int,
+    reconstruct_slices,
+    slice_signed_int,
+)
+
+
+def test_qbounds_match_paper():
+    assert qbounds(8, False) == (0, 255)
+    assert qbounds(8, True) == (-128, 127)
+    assert qbounds(1, True) == (-1, 0)
+    assert qbounds(2, True) == (-2, 1)
+
+
+def test_quantize_grid_identity():
+    gamma = 0.25
+    for code in range(-8, 8):
+        v = code * gamma
+        q = lsq_quantize(jnp.asarray(v), jnp.asarray(gamma), 4, True)
+        assert abs(float(q) - v) < 1e-7
+
+
+def test_quantize_clamps():
+    q = lsq_quantize(jnp.asarray(100.0), jnp.asarray(1.0), 2, True)
+    assert float(q) == 1.0
+    q = lsq_quantize(jnp.asarray(-100.0), jnp.asarray(1.0), 2, True)
+    assert float(q) == -2.0
+    q = lsq_quantize(jnp.asarray(-5.0), jnp.asarray(0.5), 8, False)
+    assert float(q) == 0.0
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    bits=st.sampled_from([2, 4, 8]),
+    gamma=st.floats(0.01, 2.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_prop_error_bounded_by_half_step(bits, gamma, seed):
+    rng = np.random.default_rng(seed)
+    qn, qp = qbounds(bits, True)
+    v = rng.uniform(qn * gamma, qp * gamma, size=32).astype(np.float32)
+    q = lsq_quantize(jnp.asarray(v), jnp.asarray(gamma, jnp.float32), bits, True)
+    err = np.max(np.abs(np.asarray(q) - v))
+    assert err <= gamma / 2 + 1e-5
+
+
+def test_ste_gradient_passes_inside_clamp():
+    def f(x):
+        return jnp.sum(lsq_quantize(x, jnp.asarray(0.5), 8, True))
+
+    g = jax.grad(f)(jnp.asarray([0.3, -0.7, 100.0]))
+    assert float(g[0]) == 1.0
+    assert float(g[1]) == 1.0
+    assert float(g[2]) == 0.0  # clamped -> no gradient to x
+
+
+def test_gamma_gradient_finite_and_nonzero():
+    def f(gamma):
+        x = jnp.linspace(-1.0, 1.0, 64)
+        return jnp.sum(lsq_quantize(x, gamma, 4, True) ** 2)
+
+    g = jax.grad(f)(jnp.asarray(0.3))
+    assert np.isfinite(float(g))
+
+
+def test_init_gamma_one_bit_finite():
+    w = jnp.asarray(np.random.default_rng(0).normal(size=100), jnp.float32)
+    g = lsq_init_gamma(w, 1, True)
+    assert np.isfinite(float(g)) and float(g) > 0
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    wq=st.sampled_from([1, 2, 3, 4, 8]),
+    k=st.sampled_from([1, 2, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_prop_slice_roundtrip_exact(wq, k, seed):
+    rng = np.random.default_rng(seed)
+    qn, qp = qbounds(wq, True)
+    w = rng.integers(qn, qp + 1, size=(5, 7)).astype(np.float32)
+    digits = slice_signed_int(jnp.asarray(w), wq, k)
+    rec = reconstruct_slices(digits, k)
+    np.testing.assert_array_equal(np.asarray(rec), w)
+    # digit count and ranges
+    assert digits.shape[0] == -(-wq // k)
+    d = np.asarray(digits)
+    for s in range(d.shape[0] - 1):
+        assert d[s].min() >= 0 and d[s].max() < 2 ** min(k, wq - s * k)
+
+
+def test_quantize_int_codes_in_range():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=200).astype(np.float32))
+    for bits, signed in [(1, True), (2, True), (8, False)]:
+        qn, qp = qbounds(bits, signed)
+        codes = np.asarray(quantize_int(x, jnp.asarray(0.1), bits, signed))
+        assert codes.min() >= qn and codes.max() <= qp
+        assert np.all(codes == np.round(codes))

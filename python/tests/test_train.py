@@ -1,0 +1,25 @@
+"""QAT training smoke tests (short runs; the full runs happen in
+`make artifacts` and are recorded in EXPERIMENTS.md)."""
+
+import numpy as np
+import pytest
+
+from compile.train_qat import train
+
+
+@pytest.mark.slow
+def test_short_training_reduces_loss_and_beats_chance():
+    params, acc, loss_log = train(
+        4, steps=40, batch=32, n_train_per_class=60, n_test_per_class=10, log_every=0
+    )
+    assert np.mean(loss_log[:5]) > np.mean(loss_log[-5:]), "loss must decrease"
+    assert acc > 0.3, f"accuracy {acc} should beat 10% chance handily"
+
+
+@pytest.mark.slow
+def test_one_bit_trains_without_nan():
+    _, acc, loss_log = train(
+        1, steps=25, batch=32, n_train_per_class=40, n_test_per_class=10, log_every=0
+    )
+    assert np.all(np.isfinite(loss_log))
+    assert 0.0 <= acc <= 1.0

@@ -1,0 +1,91 @@
+//! Bench ABL: ablations over the design choices DESIGN.md calls out —
+//! (a) symmetric vs DSE-chosen asymmetric arrays (§IV-B's "surprisingly
+//!     not symmetrical" finding),
+//! (b) ST vs SA consolidation at the system level,
+//! (c) 1D vs 2D (BitFusion-style) scaling,
+//! (d) DSP-only vs LUT-fabric arrays.
+
+use mpcnn::array::Dims;
+use mpcnn::baselines;
+use mpcnn::cnn::resnet;
+use mpcnn::config::RunConfig;
+use mpcnn::dse;
+use mpcnn::pe::{Consolidation, InputMode, PeDesign, Scaling};
+use mpcnn::sim::{simulate, AcceleratorDesign};
+use mpcnn::util::bench::Bencher;
+use mpcnn::util::table::{fnum, Table};
+
+fn main() {
+    let cfg = RunConfig::default();
+    let cnn = resnet::resnet18().with_uniform_wq(2);
+    let mut t = Table::new("DSE ablations — ResNet-18 (w_Q = 2)").headers(&[
+        "variant", "dims", "N_PE", "kLUT", "fps", "GOps/s", "mJ/frame",
+    ]);
+
+    // (baseline) the holistic DSE choice
+    let chosen = dse::explore_k(&cnn, &cfg, 2);
+    let mut row = |label: &str, r: &mpcnn::sim::SimResult, dims: String, n_pe: u64| {
+        t.row(vec![
+            label.to_string(),
+            dims,
+            n_pe.to_string(),
+            fnum(r.kluts, 1),
+            fnum(r.fps, 1),
+            fnum(r.gops, 1),
+            fnum(r.e_total_mj(), 2),
+        ]);
+    };
+    row(
+        "DSE choice (BP-ST-1D k=2, asym)",
+        &chosen.sim,
+        chosen.array.dims.to_string(),
+        chosen.array.n_pe,
+    );
+
+    // (a) best symmetric cube with similar PE count
+    let side = (chosen.array.n_pe as f64).cbrt().round() as u32;
+    let sym_dims = Dims::new(side, side, side);
+    let sym = AcceleratorDesign::new(PeDesign::bp_st_1d(2), sym_dims, &cnn, &cfg);
+    let sym_r = simulate(&cnn, &sym);
+    row("symmetric cube (Eq 4 optimum)", &sym_r, sym_dims.to_string(), sym_dims.n_pe());
+
+    // (b) SA consolidation, same dims
+    let sa_pe = PeDesign::new(
+        InputMode::BitParallel,
+        Consolidation::SumApart,
+        Scaling::OneD,
+        2,
+    );
+    let sa = AcceleratorDesign::new(sa_pe, chosen.array.dims, &cnn, &cfg);
+    let sa_r = simulate(&cnn, &sa);
+    row("Sum-Apart PEs (same dims)", &sa_r, chosen.array.dims.to_string(), chosen.array.n_pe);
+
+    // (c) BitFusion-style 2D
+    let bf = baselines::bitfusion_style_design(&cnn, &cfg);
+    let bf_r = simulate(&cnn, &bf);
+    row("BP-ST-2D k=2 (BitFusion-style)", &bf_r, bf.dims.to_string(), bf.n_pe());
+
+    // (d) DSP-only
+    let dsp = baselines::dsp_only_design(&cnn, &cfg);
+    let dsp_r = simulate(&cnn, &dsp);
+    row("DSP-only (256 hardmacros)", &dsp_r, dsp.dims.to_string(), dsp.n_pe());
+
+    print!("{}", t.render());
+
+    // Shape assertions for the ablation story.
+    let ok_sym = chosen.sim.fps >= sym_r.fps * 0.98;
+    let ok_2d = chosen.sim.fps > bf_r.fps;
+    let ok_dsp = chosen.sim.gops > 2.0 * dsp_r.gops;
+    println!("\n  [{}] asymmetric DSE choice >= symmetric cube on fps", if ok_sym { "PASS" } else { "FAIL" });
+    println!("  [{}] 1D beats 2D at fixed 8-bit activations", if ok_2d { "PASS" } else { "FAIL" });
+    println!("  [{}] LUT fabric >2x DSP-only throughput", if ok_dsp { "PASS" } else { "FAIL" });
+
+    let mut b = Bencher::new();
+    b.run("ablation::full-dse-resnet18-k2", || {
+        dse::explore_k(&cnn, &cfg, 2).sim.fps
+    });
+    b.finish("ablation_dse");
+    if !(ok_sym && ok_2d && ok_dsp) {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,71 @@
+//! Bench E2E: end-to-end serving throughput/latency through the real
+//! PJRT-backed stack (needs `make artifacts`; falls back to the mock
+//! backend otherwise so `cargo bench` always completes).
+
+use mpcnn::coordinator::{
+    BatcherConfig, Coordinator, EngineBackend, InferenceBackend, MockBackend,
+};
+use mpcnn::runtime::{artifacts_dir, Engine, TestSet};
+use mpcnn::util::bench::Bencher;
+use mpcnn::util::rng::Rng;
+use std::time::Duration;
+
+fn main() {
+    let have_artifacts = artifacts_dir().join("manifest.json").exists();
+    let mut b = Bencher::new();
+
+    if have_artifacts {
+        let dir = artifacts_dir();
+        let probe = Engine::load_all(&dir).unwrap();
+        let ts = TestSet::load(dir.join(probe.manifest.testset.clone().unwrap())).unwrap();
+        drop(probe);
+        for (wq, max_batch) in [(4u32, 1usize), (4, 8), (1, 8)] {
+            let dir2 = dir.clone();
+            let c = Coordinator::start(
+                move || {
+                    let engine = Engine::load_all(&dir2)?;
+                    Ok(Box::new(EngineBackend::new(engine, wq)?) as Box<dyn InferenceBackend>)
+                },
+                BatcherConfig {
+                    max_batch,
+                    max_wait: Duration::from_millis(1),
+                    queue_capacity: 128,
+                    fpga_fps_sim: 0.0,
+                },
+            )
+            .unwrap();
+            let client = c.client();
+            let mut rng = Rng::new(1);
+            b.run(&format!("serve/wq{wq}-batch{max_batch}-32req"), || {
+                let mut pending = Vec::new();
+                for _ in 0..32 {
+                    let idx = rng.range(0, ts.n);
+                    pending.push(client.submit(ts.image(idx).to_vec()).unwrap());
+                }
+                let mut ok = 0;
+                for p in pending {
+                    ok += p.wait().is_ok() as u32;
+                }
+                ok
+            });
+            let m = c.shutdown();
+            println!("  -> {}", m.summary());
+        }
+    } else {
+        eprintln!("NOTE: artifacts missing — benching with the mock backend");
+        let c = Coordinator::start(
+            || Ok(Box::new(MockBackend::new(3072, 10, vec![1, 8], 500)) as Box<dyn InferenceBackend>),
+            BatcherConfig::default(),
+        )
+        .unwrap();
+        let client = c.client();
+        b.run("serve/mock-batch8-32req", || {
+            let mut pending = Vec::new();
+            for _ in 0..32 {
+                pending.push(client.submit(vec![0.5; 3072]).unwrap());
+            }
+            pending.into_iter().filter(|_| true).map(|p| p.wait().is_ok() as u32).sum::<u32>()
+        });
+    }
+    b.finish("e2e_serving");
+}

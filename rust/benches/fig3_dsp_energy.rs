@@ -1,0 +1,4 @@
+//! Bench F3: regenerate Fig 3 (DSP multiply energy vs weight word-length).
+fn main() {
+    mpcnn::report::run_table_bench("fig3_dsp_energy", mpcnn::report::tables::fig3);
+}

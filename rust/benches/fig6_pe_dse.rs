@@ -1,0 +1,5 @@
+//! Bench F6: regenerate Fig 6 (PE design-space ranking, bits/s/LUT).
+fn main() {
+    let cfg = mpcnn::config::RunConfig::default();
+    mpcnn::report::run_table_bench("fig6_pe_dse", || mpcnn::report::tables::fig6(&cfg));
+}

@@ -1,0 +1,5 @@
+//! Bench F7: regenerate Fig 7 (energy efficiency normalized to 8x8).
+fn main() {
+    let cfg = mpcnn::config::RunConfig::default();
+    mpcnn::report::run_table_bench("fig7_energy_eff", || mpcnn::report::tables::fig7(&cfg));
+}

@@ -1,0 +1,4 @@
+//! Bench F8: regenerate Fig 8 (BRAM_NPA vs array dimensions, Eq 2/4).
+fn main() {
+    mpcnn::report::run_table_bench("fig8_bram_array", mpcnn::report::tables::fig8);
+}

@@ -1,0 +1,7 @@
+//! Bench F9: regenerate Fig 9 (accuracy vs throughput frontier, k = w_Q).
+fn main() {
+    let cfg = mpcnn::config::RunConfig::default();
+    mpcnn::report::run_table_bench("fig9_accuracy_throughput", || {
+        mpcnn::report::tables::fig9(&cfg)
+    });
+}

@@ -1,0 +1,83 @@
+//! PERF: microbenchmarks of the L3 hot paths — the quantities tracked in
+//! EXPERIMENTS.md §Perf. Run with `cargo bench --bench hotpath`.
+
+use mpcnn::array::search::{search_dims, SearchParams};
+use mpcnn::array::Dims;
+use mpcnn::cnn::resnet;
+use mpcnn::config::RunConfig;
+use mpcnn::coordinator::{BatcherConfig, Coordinator, InferenceBackend, MockBackend};
+use mpcnn::dataflow::cycles_only;
+use mpcnn::pe::PeDesign;
+use mpcnn::quant::slicing::{reconstruct_slices, slice_signed};
+use mpcnn::sim::{simulate, AcceleratorDesign};
+use mpcnn::util::bench::{black_box, Bencher};
+use std::time::Duration;
+
+fn main() {
+    let mut b = Bencher::new();
+    let cfg = RunConfig::default();
+
+    // --- dataflow inner loop (the array-DSE bottleneck) ---
+    let cnn18 = resnet::resnet18().with_uniform_wq(2);
+    let convs: Vec<_> = cnn18.conv_layers().collect();
+    let dims = Dims::new(7, 5, 37);
+    b.run("cycles_only/resnet18-all-layers", || {
+        let mut acc = 0u64;
+        for l in &convs {
+            acc += cycles_only(l, dims, 2, 8).0;
+        }
+        acc
+    });
+
+    // --- full per-layer schedule + energy (simulator) ---
+    let design = AcceleratorDesign::new(PeDesign::bp_st_1d(2), dims, &cnn18, &cfg);
+    b.run("simulate/resnet18", || black_box(simulate(&cnn18, &design).fps));
+
+    let cnn152 = resnet::resnet152().with_uniform_wq(2);
+    let design152 = AcceleratorDesign::new(PeDesign::bp_st_1d(2), dims, &cnn152, &cfg);
+    b.run("simulate/resnet152", || {
+        black_box(simulate(&cnn152, &design152).fps)
+    });
+
+    // --- the exhaustive array search (one full DSE phase) ---
+    let params = SearchParams::from_config(&cfg);
+    let pe = PeDesign::bp_st_1d(2);
+    b.run("search_dims/resnet18-k2", || {
+        black_box(search_dims(&cnn18, &pe, &params).n_pe)
+    });
+    b.run("search_dims/resnet152-k2", || {
+        black_box(search_dims(&cnn152, &pe, &params).n_pe)
+    });
+
+    // --- bit slicing (request-path operand prep) ---
+    b.run("slice_signed/10k-weights-w8k2", || {
+        let mut acc = 0i64;
+        for w in -128i64..128 {
+            for _ in 0..39 {
+                let digits = slice_signed(w, 8, 2);
+                acc += reconstruct_slices(&digits, 2);
+            }
+        }
+        acc
+    });
+
+    // --- coordinator round-trip overhead (mock backend, zero latency) ---
+    let c = Coordinator::start(
+        || Ok(Box::new(MockBackend::new(64, 10, vec![1, 8], 0)) as Box<dyn InferenceBackend>),
+        BatcherConfig {
+            max_batch: 1,
+            max_wait: Duration::from_micros(0),
+            queue_capacity: 64,
+            fpga_fps_sim: 0.0,
+        },
+    )
+    .unwrap();
+    let client = c.client();
+    let img = vec![1.0f32; 64];
+    b.run("coordinator/roundtrip-batch1", || {
+        black_box(client.classify(img.clone()).unwrap().class)
+    });
+    drop(c);
+
+    b.finish("hotpath");
+}

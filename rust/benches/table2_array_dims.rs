@@ -1,0 +1,6 @@
+//! Bench T2: regenerate Table II (chosen PE array dimensions) via the full
+//! exhaustive array DSE for ResNet-18 and ResNet-50 at k = 1, 2, 4.
+fn main() {
+    let cfg = mpcnn::config::RunConfig::default();
+    mpcnn::report::run_table_bench("table2_array_dims", || mpcnn::report::tables::table2(&cfg));
+}

@@ -1,0 +1,4 @@
+//! Bench T3: regenerate Table III (accuracy vs memory footprint).
+fn main() {
+    mpcnn::report::run_table_bench("table3_footprint", mpcnn::report::tables::table3);
+}

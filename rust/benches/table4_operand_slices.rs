@@ -1,0 +1,8 @@
+//! Bench T4: regenerate Table IV (impact of operand slices, ResNet-18 on
+//! the paper's Table II arrays; energy/frame breakdown + fps + GOps/s).
+fn main() {
+    let cfg = mpcnn::config::RunConfig::default();
+    mpcnn::report::run_table_bench("table4_operand_slices", || {
+        mpcnn::report::tables::table4(&cfg)
+    });
+}

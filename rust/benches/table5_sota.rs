@@ -1,0 +1,6 @@
+//! Bench T5: regenerate Table V (state-of-the-art comparison; our ResNet-50
+//! /-152 designs vs the published reference rows).
+fn main() {
+    let cfg = mpcnn::config::RunConfig::default();
+    mpcnn::report::run_table_bench("table5_sota", || mpcnn::report::tables::table5(&cfg));
+}

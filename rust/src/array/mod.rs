@@ -1,0 +1,188 @@
+//! PE-array level of the DSE (Fig 2 red box): array dimensions, BRAM port
+//! counts (Eq 1, Eq 2, Eq 4), and the exhaustive dimension search that
+//! produced Table II.
+
+pub mod search;
+
+pub use search::{search_dims, ArrayChoice, SearchParams};
+
+/// PE array dimensions: height H, width W, depth D (Table I semantics:
+/// H unrolls the feature-map height and reuses weights; W unrolls input
+/// channels and reuses partial sums; D unrolls output channels and reuses
+/// activations).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Dims {
+    pub h: u32,
+    pub w: u32,
+    pub d: u32,
+}
+
+impl Dims {
+    pub fn new(h: u32, w: u32, d: u32) -> Dims {
+        assert!(h >= 1 && w >= 1 && d >= 1);
+        Dims { h, w, d }
+    }
+
+    /// Eq 1: N_PE = H × W × D.
+    pub fn n_pe(&self) -> u64 {
+        self.h as u64 * self.w as u64 * self.d as u64
+    }
+
+    pub fn is_symmetric(&self) -> bool {
+        self.h == self.w && self.w == self.d
+    }
+}
+
+impl std::fmt::Display for Dims {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}x{}", self.h, self.w, self.d)
+    }
+}
+
+/// Eq 2: number of parallel BRAM accesses feeding an H×W×D array with
+/// activation word-length `n` and weight word-length `wq` (`wq >= k`):
+///
+/// `BRAM_NPA = H·D (psums) + H·W·(N/w_Q) (activations) + W·D (weights)`.
+pub fn bram_npa(dims: Dims, n: u32, wq: u32) -> u64 {
+    let f = (n / wq.max(1)).max(1) as u64;
+    dims.h as u64 * dims.d as u64
+        + dims.h as u64 * dims.w as u64 * f
+        + dims.w as u64 * dims.d as u64
+}
+
+/// The three Eq-2 components separately (psums, activations, weights) —
+/// used by the BRAM-traffic/energy model.
+pub fn bram_ports(dims: Dims, n: u32, wq: u32) -> (u64, u64, u64) {
+    let f = (n / wq.max(1)).max(1) as u64;
+    (
+        dims.h as u64 * dims.d as u64,
+        dims.h as u64 * dims.w as u64 * f,
+        dims.w as u64 * dims.d as u64,
+    )
+}
+
+/// Eq 4: the minimum of Eq 2 over all dimension splits of a fixed N_PE, at
+/// N = w_Q, is reached by the symmetric cube: `min BRAM_NPA = 3·∛(N_PE²)`.
+pub fn min_bram_npa_symmetric(n_pe: u64) -> f64 {
+    3.0 * (n_pe as f64).powf(2.0 / 3.0)
+}
+
+/// Provisioned BRAM block count for a design: every Eq-2 port needs its own
+/// M20K (double-buffered so compute and reload overlap), plus capacity
+/// blocks when a buffer's working set exceeds the port blocks' capacity.
+///
+/// `min_wq` is the smallest weight word-length the image must support (the
+/// activation banking provisions `N/min_wq` parallel words).
+pub fn bram_blocks(
+    dims: Dims,
+    n: u32,
+    min_wq: u32,
+    bram_bits: u64,
+    act_buffer_bits: u64,
+    weight_buffer_bits: u64,
+) -> u64 {
+    let (psum, act, wt) = bram_ports(dims, n, min_wq);
+    let ports = 2 * (psum + act + wt); // double-buffering
+    let capacity_blocks = act_buffer_bits.div_ceil(bram_bits)
+        + weight_buffer_bits.div_ceil(bram_bits);
+    ports.max(capacity_blocks) + capacity_blocks.min(ports) / 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, forall};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn eq1_pe_count() {
+        assert_eq!(Dims::new(7, 3, 32).n_pe(), 672); // Table II, ResNet-18 k=1
+        assert_eq!(Dims::new(7, 5, 37).n_pe(), 1295); // k=2
+        assert_eq!(Dims::new(7, 4, 66).n_pe(), 1848); // k=4
+    }
+
+    #[test]
+    fn eq2_component_sum() {
+        let d = Dims::new(7, 3, 32);
+        let (p, a, w) = bram_ports(d, 8, 8);
+        assert_eq!(p, 224);
+        assert_eq!(a, 21);
+        assert_eq!(w, 96);
+        assert_eq!(bram_npa(d, 8, 8), 341);
+        // wq=1: activation ports x8
+        assert_eq!(bram_npa(d, 8, 1), 224 + 168 + 96);
+    }
+
+    #[test]
+    fn eq4_symmetric_matches_eq2() {
+        // For H=W=D and N=wq, Eq 2 equals Eq 4 exactly.
+        for s in [2u32, 4, 8, 16] {
+            let d = Dims::new(s, s, s);
+            let via_eq2 = bram_npa(d, 8, 8) as f64;
+            let via_eq4 = min_bram_npa_symmetric(d.n_pe());
+            assert!(
+                (via_eq2 - via_eq4).abs() < 1e-6,
+                "s={s}: {via_eq2} vs {via_eq4}"
+            );
+        }
+    }
+
+    #[test]
+    fn prop_symmetric_minimizes_bram() {
+        // Fig 8's claim: among all dimension splits of the same N_PE (at
+        // N = wq), none beats the symmetric cube.
+        forall(500, |rng: &mut Rng| {
+            let s = rng.range(2, 12) as u32;
+            let n_pe = (s * s * s) as u64;
+            let h = rng.range(1, 32) as u32;
+            let w = rng.range(1, 32) as u32;
+            // choose d to keep n_pe fixed when possible
+            if n_pe % (h as u64 * w as u64) != 0 {
+                return Ok(());
+            }
+            let d = (n_pe / (h as u64 * w as u64)) as u32;
+            if d == 0 {
+                return Ok(());
+            }
+            let asym = bram_npa(Dims::new(h, w, d), 8, 8) as f64;
+            let sym = min_bram_npa_symmetric(n_pe);
+            check(
+                asym + 1e-6 >= sym,
+                &format!("{h}x{w}x{d}: asym {asym} < sym bound {sym}"),
+            )
+        });
+    }
+
+    #[test]
+    fn prop_bram_npa_monotone_in_dims() {
+        forall(500, |rng: &mut Rng| {
+            let d0 = Dims::new(
+                rng.range(1, 16) as u32,
+                rng.range(1, 16) as u32,
+                rng.range(1, 64) as u32,
+            );
+            let d1 = Dims::new(d0.h + 1, d0.w, d0.d);
+            check(
+                bram_npa(d1, 8, 4) > bram_npa(d0, 8, 4),
+                "BRAM_NPA must grow with H",
+            )
+        });
+    }
+
+    #[test]
+    fn smaller_wq_needs_more_activation_ports() {
+        let d = Dims::new(7, 5, 37);
+        assert!(bram_npa(d, 8, 1) > bram_npa(d, 8, 2));
+        assert!(bram_npa(d, 8, 2) > bram_npa(d, 8, 4));
+        assert!(bram_npa(d, 8, 4) > bram_npa(d, 8, 8));
+    }
+
+    #[test]
+    fn block_count_covers_ports_and_capacity() {
+        let d = Dims::new(7, 4, 66);
+        let blocks = bram_blocks(d, 8, 4, 20 * 1024, 6_400_000, 2_400_000);
+        let ports = 2 * bram_npa(d, 8, 4);
+        assert!(blocks >= ports);
+        assert!(blocks >= (6_400_000u64 + 2_400_000).div_ceil(20 * 1024));
+    }
+}

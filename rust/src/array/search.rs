@@ -1,0 +1,323 @@
+//! Exhaustive PE-array dimension search (Fig 2 red box; produces Table II).
+//!
+//! "The greedy optimization approach for the PE array dimensions explores
+//! all possible solutions for a certain mixed-precision CNN, PE design, and
+//! hardware constraints" (§III-B). We enumerate (H, W, D) under the LUT and
+//! BRAM budgets, evaluate the full per-layer dataflow (Eq 3) for each
+//! candidate, and keep the frames/s maximizer, tie-breaking toward fewer
+//! parallel BRAM accesses (the paper's preference, Fig 8).
+
+use super::{bram_blocks, bram_npa, Dims};
+use crate::cnn::Cnn;
+
+use crate::pe::cost::{fmax_mhz, lut_cost};
+use crate::pe::PeDesign;
+
+/// Search-space bounds and budgets.
+#[derive(Clone, Debug)]
+pub struct SearchParams {
+    pub lut_budget: u64,
+    pub bram_budget: u64,
+    pub bram_bits: u64,
+    pub ddr_bw_bytes_per_s: f64,
+    /// Activation word-length N (8).
+    pub n: u32,
+    pub max_h: u32,
+    pub max_w: u32,
+    pub max_d: u32,
+}
+
+impl SearchParams {
+    pub fn from_config(cfg: &crate::config::RunConfig) -> SearchParams {
+        SearchParams {
+            lut_budget: cfg.lut_budget(),
+            bram_budget: cfg.bram_budget(),
+            bram_bits: cfg.fpga.bram_bits,
+            ddr_bw_bytes_per_s: cfg.fpga.ddr_bw_bytes_per_s,
+            n: cfg.act_bits,
+            max_h: 56,
+            max_w: 16,
+            max_d: 160,
+        }
+    }
+}
+
+/// The chosen array for one (CNN, PE design) pair.
+#[derive(Clone, Debug)]
+pub struct ArrayChoice {
+    pub pe: PeDesign,
+    pub dims: Dims,
+    pub n_pe: u64,
+    pub fmax_mhz: f64,
+    /// Projected frames/s over the CONV layers of the target CNN.
+    pub fps: f64,
+    /// MAC-weighted average utilization over layers.
+    pub avg_utilization: f64,
+    pub luts_used: u64,
+    pub brams_used: u64,
+    pub bram_npa: u64,
+    pub total_cycles: u64,
+    /// False when no candidate fit the budgets and the minimal 1x1x1 array
+    /// was returned as a placeholder.
+    pub feasible: bool,
+}
+
+/// LUT overhead beyond the PE array itself: BRAM interfacing + broadcast
+/// network, proportional to the parallel port count.
+pub fn array_overhead_luts(npa: u64) -> u64 {
+    2_000 + 8 * npa
+}
+
+/// Total LUTs of a candidate design.
+pub fn design_luts(pe: &PeDesign, dims: Dims, n: u32, min_wq: u32) -> u64 {
+    let pe_luts = (dims.n_pe() as f64 * lut_cost(pe)).round() as u64;
+    pe_luts + array_overhead_luts(bram_npa(dims, n, min_wq.max(pe.k)))
+}
+
+/// Total BRAM blocks of a candidate design for a given CNN.
+pub fn design_brams(pe: &PeDesign, dims: Dims, n: u32, cnn: &Cnn, bram_bits: u64) -> u64 {
+    let min_wq = cnn
+        .conv_layers()
+        .map(|l| l.wq)
+        .min()
+        .unwrap_or(8)
+        .max(pe.k);
+    let act_buffer_bits = cnn.peak_activation_bits();
+    let weight_buffer_bits = cnn
+        .conv_layers()
+        .map(|l| l.weight_bits_total())
+        .max()
+        .unwrap_or(0);
+    bram_blocks(
+        dims,
+        n,
+        min_wq,
+        bram_bits,
+        act_buffer_bits,
+        weight_buffer_bits,
+    )
+}
+
+/// Evaluate one candidate: frames/s of the CNN's CONV stack.
+///
+/// Allocation-free: uses [`crate::dataflow::cycles_only`] plus an inline
+/// roofline adjustment (identical math to [`schedule_layer`]; the agreement
+/// is property-tested in `tests::fast_path_matches_schedule_layer`).
+fn eval_dims(
+    convs: &[&crate::cnn::Layer],
+    pe: &PeDesign,
+    dims: Dims,
+    p: &SearchParams,
+    fmax: f64,
+) -> (f64, f64, u64) {
+    let bw_bits_per_cycle = p.ddr_bw_bytes_per_s * 8.0 / (fmax * 1e6);
+    let mut cycles = 0u64;
+    let mut util_num = 0.0;
+    let mut util_den = 0.0;
+    for l in convs {
+        let (compute, ideal) = crate::dataflow::cycles_only(l, dims, pe.k, p.n);
+        let min_for_weights =
+            (l.weight_bits_total() as f64 / bw_bits_per_cycle).ceil() as u64;
+        cycles += compute.max(min_for_weights);
+        util_num += (ideal / compute as f64).min(1.0) * l.macs() as f64;
+        util_den += l.macs() as f64;
+    }
+    let fps = fmax * 1e6 / cycles.max(1) as f64;
+    (fps, util_num / util_den.max(1.0), cycles)
+}
+
+/// Exhaustive search over (H, W, D).
+///
+/// H candidates are restricted to sizes that tile the CNN's feature-map
+/// heights without obvious waste (divisors of the most common I_H values
+/// plus a dense range) — this matches the paper's observation that H=7 wins
+/// for ResNets (all stages are multiples of 7).
+pub fn search_dims(cnn: &Cnn, pe: &PeDesign, p: &SearchParams) -> ArrayChoice {
+    let min_wq = cnn
+        .conv_layers()
+        .map(|l| l.wq)
+        .min()
+        .unwrap_or(8)
+        .max(pe.k);
+    let convs: Vec<&crate::cnn::Layer> = cnn.conv_layers().collect();
+    let fmax = fmax_mhz(pe);
+    // Hoist the per-CNN buffer sizes out of the (H, W, D) loop.
+    let act_buffer_bits = cnn.peak_activation_bits();
+    let weight_buffer_bits = cnn
+        .conv_layers()
+        .map(|l| l.weight_bits_total())
+        .max()
+        .unwrap_or(0);
+
+    let mut best: Option<(ArrayChoice, (f64, i64))> = None;
+    for h in 1..=p.max_h {
+        for w in 1..=p.max_w {
+            // Upper-bound D from the LUT budget to prune the scan.
+            let lut_pe = lut_cost(pe);
+            let d_cap = ((p.lut_budget as f64 / lut_pe) / (h as f64 * w as f64))
+                .floor()
+                .min(p.max_d as f64) as u32;
+            for d in 1..=d_cap.max(1) {
+                let dims = Dims::new(h, w, d);
+                let luts = design_luts(pe, dims, p.n, min_wq);
+                if luts > p.lut_budget {
+                    break; // d only grows
+                }
+                let brams = crate::array::bram_blocks(
+                    dims,
+                    p.n,
+                    min_wq,
+                    p.bram_bits,
+                    act_buffer_bits,
+                    weight_buffer_bits,
+                );
+                if brams > p.bram_budget {
+                    break;
+                }
+                let (fps, util, cycles) = eval_dims(&convs, pe, dims, p, fmax);
+                let npa = bram_npa(dims, p.n, min_wq);
+                let key = (fps, -(npa as i64));
+                let better = match &best {
+                    None => true,
+                    Some((_, bk)) => key > *bk,
+                };
+                if better {
+                    best = Some((
+                        ArrayChoice {
+                            pe: *pe,
+                            dims,
+                            n_pe: dims.n_pe(),
+                            fmax_mhz: fmax_mhz(pe),
+                            fps,
+                            avg_utilization: util,
+                            luts_used: luts,
+                            brams_used: brams,
+                            bram_npa: npa,
+                            total_cycles: cycles,
+                            feasible: true,
+                        },
+                        key,
+                    ));
+                }
+            }
+        }
+    }
+    match best {
+        Some((choice, _)) => choice,
+        None => {
+            // Nothing fit (e.g. the BRAM budget is below even the buffer
+            // capacity floor). Return the minimal array, flagged infeasible,
+            // so callers can report instead of panicking.
+            let dims = Dims::new(1, 1, 1);
+            let (fps, util, cycles) = eval_dims(&convs, pe, dims, p, fmax);
+            ArrayChoice {
+                pe: *pe,
+                dims,
+                n_pe: 1,
+                fmax_mhz: fmax,
+                fps,
+                avg_utilization: util,
+                luts_used: design_luts(pe, dims, p.n, min_wq),
+                brams_used: crate::array::bram_blocks(
+                    dims,
+                    p.n,
+                    min_wq,
+                    p.bram_bits,
+                    act_buffer_bits,
+                    weight_buffer_bits,
+                ),
+                bram_npa: bram_npa(dims, p.n, min_wq),
+                total_cycles: cycles,
+                feasible: false,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::resnet;
+    use crate::config::RunConfig;
+
+    fn params() -> SearchParams {
+        SearchParams::from_config(&RunConfig::default())
+    }
+
+    #[test]
+    fn resnet18_k1_lands_near_paper() {
+        // Table II: ResNet-18, k=1 -> (7, 3, 32), 672 PEs. Our search should
+        // choose H=7 (tiles 56/28/14/7 exactly) and a PE count in the same
+        // regime (LUT budget / 584 ≈ 680).
+        let cnn = resnet::resnet18().with_uniform_wq(8);
+        let pe = PeDesign::bp_st_1d(1);
+        let c = search_dims(&cnn, &pe, &params());
+        assert_eq!(c.dims.h % 7, 0, "H should tile ResNet stages: {}", c.dims);
+        assert!(
+            (500..=760).contains(&c.n_pe),
+            "N_PE {} vs paper 672",
+            c.n_pe
+        );
+        assert!(c.luts_used <= params().lut_budget);
+        assert!(c.brams_used <= params().bram_budget);
+    }
+
+    #[test]
+    fn pe_count_grows_with_k() {
+        // Table II shape: cheaper PEs at larger k -> more of them.
+        let cnn = resnet::resnet18().with_uniform_wq(8);
+        let n: Vec<u64> = [1u32, 2, 4]
+            .iter()
+            .map(|&k| search_dims(&cnn, &PeDesign::bp_st_1d(k), &params()).n_pe)
+            .collect();
+        assert!(n[0] < n[1] && n[1] < n[2], "{n:?} (paper: 672/1295/1848)");
+    }
+
+    #[test]
+    fn utilization_reasonable() {
+        let cnn = resnet::resnet18().with_uniform_wq(8);
+        let c = search_dims(&cnn, &PeDesign::bp_st_1d(1), &params());
+        assert!(
+            c.avg_utilization > 0.7,
+            "paper-regime utilization, got {}",
+            c.avg_utilization
+        );
+    }
+
+    #[test]
+    fn budgets_respected_under_tight_constraints() {
+        let cnn = resnet::resnet18().with_uniform_wq(2);
+        let mut p = params();
+        p.lut_budget = 60_000;
+        p.bram_budget = 900; // above the buffer-capacity floor (~620 blocks)
+        let c = search_dims(&cnn, &PeDesign::bp_st_1d(2), &p);
+        assert!(c.feasible);
+        assert!(c.luts_used <= p.lut_budget);
+        assert!(c.brams_used <= p.bram_budget);
+        assert!(c.n_pe > 0);
+    }
+
+    #[test]
+    fn infeasible_budget_flagged_not_panicking() {
+        let cnn = resnet::resnet18().with_uniform_wq(2);
+        let mut p = params();
+        p.bram_budget = 10; // below any buffer capacity
+        let c = search_dims(&cnn, &PeDesign::bp_st_1d(2), &p);
+        assert!(!c.feasible);
+        assert_eq!(c.n_pe, 1);
+    }
+
+    #[test]
+    fn lower_wq_raises_fps() {
+        // The headline property: word-length reduction translates into
+        // throughput on the chosen design.
+        let p = params();
+        let pe = PeDesign::bp_st_1d(1);
+        let fps8 = search_dims(&resnet::resnet18().with_uniform_wq(8), &pe, &p).fps;
+        let fps1 = search_dims(&resnet::resnet18().with_uniform_wq(1), &pe, &p).fps;
+        assert!(
+            fps1 > 3.0 * fps8,
+            "wq=1 {fps1:.1} fps should be several x of wq=8 {fps8:.1} fps"
+        );
+    }
+}

@@ -1,0 +1,169 @@
+//! Channel-wise mixed precision (paper Table V: "supports channel-wise
+//! mixed-precision CNNs"; [8][34]).
+//!
+//! On the BP-ST-1D array, output channels with different weight
+//! word-lengths are processed as separate channel groups along the D
+//! dimension: the PE's on-the-fly word-length switch (pe::golden) makes
+//! this free of reconfiguration; the *schedule* sees each group as a
+//! sub-layer with its own `N/w_Q` unrolling factor. This module performs
+//! that layer splitting so the whole DSE/simulator stack handles
+//! channel-wise CNNs unchanged.
+
+use super::layer::{Cnn, Layer, LayerKind};
+
+/// A channel-group specification: fraction of output channels at a given
+/// weight word-length. Fractions must sum to ~1.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChannelGroup {
+    pub wq: u32,
+    pub fraction: f64,
+}
+
+/// Split one CONV layer's output channels into word-length groups.
+/// Channel counts are rounded, with the last group absorbing the
+/// remainder so `sum(od_i) == od` exactly.
+pub fn split_layer(layer: &Layer, groups: &[ChannelGroup]) -> Vec<Layer> {
+    assert!(!groups.is_empty());
+    let total: f64 = groups.iter().map(|g| g.fraction).sum();
+    assert!(
+        (total - 1.0).abs() < 1e-6,
+        "channel fractions must sum to 1 (got {total})"
+    );
+    let mut out = Vec::with_capacity(groups.len());
+    let mut assigned = 0u32;
+    for (i, g) in groups.iter().enumerate() {
+        let od = if i + 1 == groups.len() {
+            layer.od - assigned
+        } else {
+            ((layer.od as f64 * g.fraction).round() as u32).min(layer.od - assigned)
+        };
+        if od == 0 {
+            continue;
+        }
+        assigned += od;
+        let mut l = layer.clone();
+        l.od = od;
+        l.wq = g.wq;
+        l.name = format!("{}[w{}]", layer.name, g.wq);
+        out.push(l);
+    }
+    out
+}
+
+/// Apply a channel-wise scheme to every inner CONV layer of a CNN
+/// (first/last layers stay at 8 bit, as in the paper).
+pub fn apply_channelwise(cnn: &Cnn, groups: &[ChannelGroup]) -> Cnn {
+    let n = cnn.layers.len();
+    let mut layers = Vec::new();
+    for (i, l) in cnn.layers.iter().enumerate() {
+        let is_edge = i == 0 || i == n - 1 || l.kind == LayerKind::Fc;
+        if is_edge {
+            let mut e = l.clone();
+            e.wq = 8;
+            layers.push(e);
+        } else {
+            layers.extend(split_layer(l, groups));
+        }
+    }
+    Cnn {
+        name: format!("{} (channel-wise)", cnn.name),
+        layers,
+        ..cnn.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::resnet;
+    use crate::config::RunConfig;
+    use crate::util::prop::{check, check_eq, forall};
+    use crate::util::rng::Rng;
+
+    fn groups_80_20() -> Vec<ChannelGroup> {
+        vec![
+            ChannelGroup { wq: 1, fraction: 0.8 },
+            ChannelGroup { wq: 8, fraction: 0.2 },
+        ]
+    }
+
+    #[test]
+    fn split_preserves_channels_and_macs() {
+        let l = Layer::conv("c", 28, 128, 256, 3, 1);
+        let parts = split_layer(&l, &groups_80_20());
+        assert_eq!(parts.iter().map(|p| p.od).sum::<u32>(), 256);
+        assert_eq!(parts.iter().map(|p| p.macs()).sum::<u64>(), l.macs());
+        assert_eq!(parts[0].wq, 1);
+        assert_eq!(parts[1].wq, 8);
+    }
+
+    #[test]
+    fn prop_split_conserves_work() {
+        forall(500, |rng: &mut Rng| {
+            let l = Layer::conv(
+                "p",
+                [14u32, 28, 56][rng.range(0, 3)],
+                1 << rng.range(3, 9),
+                1 << rng.range(3, 10),
+                3,
+                1,
+            );
+            let f = rng.uniform(0.05, 0.95);
+            let groups = vec![
+                ChannelGroup { wq: *rng.choose(&[1u32, 2]), fraction: f },
+                ChannelGroup { wq: 8, fraction: 1.0 - f },
+            ];
+            let parts = split_layer(&l, &groups);
+            check_eq(
+                parts.iter().map(|p| p.od).sum::<u32>(),
+                l.od,
+                "channels conserved",
+            )?;
+            check_eq(
+                parts.iter().map(|p| p.params()).sum::<u64>(),
+                l.params(),
+                "params conserved",
+            )
+        });
+    }
+
+    #[test]
+    fn nguyen_style_scheme_beats_uniform_8bit() {
+        // The [27]-style scheme (most weights binarized, a few at 8 bit)
+        // must land between all-1-bit and all-8-bit in both throughput and
+        // footprint — the motivation for channel-wise support.
+        let cfg = RunConfig::default();
+        let base = resnet::resnet18();
+        let cw = apply_channelwise(&base, &groups_80_20());
+        let u1 = base.clone().with_uniform_wq(1);
+        let u8b = base.clone().with_uniform_wq(8);
+        let fps = |cnn: &crate::cnn::Cnn| crate::dse::explore_k(cnn, &cfg, 1).sim.fps;
+        let (f_cw, f_1, f_8) = (fps(&cw), fps(&u1), fps(&u8b));
+        assert!(
+            f_1 >= f_cw && f_cw > f_8,
+            "fps ordering: w1 {f_1} >= cw {f_cw} > w8 {f_8}"
+        );
+        let wb = |cnn: &crate::cnn::Cnn| {
+            cnn.layers.iter().map(|l| l.weight_bits_total()).sum::<u64>()
+        };
+        assert!(wb(&u1) <= wb(&cw) && wb(&cw) < wb(&u8b));
+    }
+
+    #[test]
+    fn edge_layers_stay_8bit() {
+        let cw = apply_channelwise(&resnet::resnet18(), &groups_80_20());
+        assert_eq!(cw.layers.first().unwrap().wq, 8);
+        assert_eq!(cw.layers.last().unwrap().wq, 8);
+        // inner layers got split into two groups each
+        assert!(cw.layers.len() > resnet::resnet18().layers.len() + 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "sum to 1")]
+    fn rejects_bad_fractions() {
+        split_layer(
+            &Layer::conv("x", 14, 8, 8, 3, 1),
+            &[ChannelGroup { wq: 2, fraction: 0.5 }],
+        );
+    }
+}

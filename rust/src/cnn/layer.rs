@@ -1,0 +1,247 @@
+//! CNN layer intermediate representation.
+//!
+//! Notation follows the paper (§III-B): a convolutional layer is described by
+//! the input feature-map height `I_H` (spatial, square maps), the input
+//! channel count `I_W`, the output channel count `O_D`, filter kernel `K` and
+//! stride `S`. MAC count per layer is `I_H² · I_W · O_D · (K/S)²`
+//! (numerator of Eq 3).
+
+/// Layer type. The accelerator processes CONV layers (paper: "we focus ... on
+/// the processing of CONV layers"); FC layers are carried for footprint and
+/// host-side accounting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    Fc,
+}
+
+/// One layer of a CNN, annotated with its assigned weight word-length.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Input feature-map height/width in pixels (square), `I_H`. 1 for FC.
+    pub ih: u32,
+    /// Input channels, `I_W`.
+    pub iw: u32,
+    /// Output channels, `O_D`.
+    pub od: u32,
+    /// Kernel size `K` (square). 1 for FC.
+    pub k: u32,
+    /// Stride `S`.
+    pub s: u32,
+    /// Assigned weight word-length in bits (`w_Q`).
+    pub wq: u32,
+    /// Activation word-length in bits (paper fixes 8).
+    pub act_bits: u32,
+}
+
+impl Layer {
+    pub fn conv(name: &str, ih: u32, iw: u32, od: u32, k: u32, s: u32) -> Layer {
+        Layer {
+            name: name.to_string(),
+            kind: LayerKind::Conv,
+            ih,
+            iw,
+            od,
+            k,
+            s,
+            wq: 8,
+            act_bits: 8,
+        }
+    }
+
+    pub fn fc(name: &str, iw: u32, od: u32) -> Layer {
+        Layer {
+            name: name.to_string(),
+            kind: LayerKind::Fc,
+            ih: 1,
+            iw,
+            od,
+            k: 1,
+            s: 1,
+            wq: 8,
+            act_bits: 8,
+        }
+    }
+
+    /// Output spatial size (`ceil(I_H / S)` — SAME padding, as in ResNet).
+    pub fn oh(&self) -> u32 {
+        self.ih.div_ceil(self.s)
+    }
+
+    /// Multiply-accumulate operations for one input frame.
+    pub fn macs(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv => {
+                (self.oh() as u64).pow(2)
+                    * (self.k as u64).pow(2)
+                    * self.iw as u64
+                    * self.od as u64
+            }
+            LayerKind::Fc => self.iw as u64 * self.od as u64,
+        }
+    }
+
+    /// Ops for one frame under the paper's convention (1 MAC = 2 Ops).
+    pub fn ops(&self) -> u64 {
+        2 * self.macs()
+    }
+
+    /// Weight parameter count (biases folded into BN, counted separately).
+    pub fn params(&self) -> u64 {
+        (self.k as u64).pow(2) * self.iw as u64 * self.od as u64
+    }
+
+    /// Weight storage in bits at the assigned word-length.
+    pub fn weight_bits_total(&self) -> u64 {
+        self.params() * self.wq as u64
+    }
+
+    /// Input activation count for one frame.
+    pub fn input_elems(&self) -> u64 {
+        (self.ih as u64).pow(2) * self.iw as u64
+    }
+
+    /// Output activation count for one frame.
+    pub fn output_elems(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv => (self.oh() as u64).pow(2) * self.od as u64,
+            LayerKind::Fc => self.od as u64,
+        }
+    }
+}
+
+/// A CNN: named sequence of layers plus input geometry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Cnn {
+    pub name: String,
+    pub input_hw: u32,
+    pub input_channels: u32,
+    pub classes: u32,
+    pub layers: Vec<Layer>,
+}
+
+impl Cnn {
+    /// All CONV layers (the accelerated set).
+    pub fn conv_layers(&self) -> impl Iterator<Item = &Layer> {
+        self.layers.iter().filter(|l| l.kind == LayerKind::Conv)
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// CONV-only MACs — what the accelerator executes (paper Table V
+    /// footnote: "CONV only: yes").
+    pub fn conv_macs(&self) -> u64 {
+        self.conv_layers().map(|l| l.macs()).sum()
+    }
+
+    pub fn conv_ops(&self) -> u64 {
+        2 * self.conv_macs()
+    }
+
+    pub fn total_params(&self) -> u64 {
+        self.layers.iter().map(|l| l.params()).sum()
+    }
+
+    /// Assign the paper's quantization scheme: inner layers at `inner_bits`,
+    /// first and last layer fixed to 8 bit ("we fix activations as well as
+    /// first and last layer weights to 8 bit", §IV-C).
+    pub fn with_uniform_wq(mut self, inner_bits: u32) -> Cnn {
+        let n = self.layers.len();
+        for (i, l) in self.layers.iter_mut().enumerate() {
+            l.wq = if i == 0 || i == n - 1 { 8 } else { inner_bits };
+        }
+        self
+    }
+
+    /// Assign explicit per-layer word-lengths (layer-wise mixed precision).
+    /// `bits.len()` must equal the layer count.
+    pub fn with_layerwise_wq(mut self, bits: &[u32]) -> Cnn {
+        assert_eq!(
+            bits.len(),
+            self.layers.len(),
+            "one word-length per layer required"
+        );
+        for (l, b) in self.layers.iter_mut().zip(bits) {
+            l.wq = *b;
+        }
+        self
+    }
+
+    /// Largest single-layer activation working set in bits (input + output of
+    /// the worst layer) — drives the on-chip activation buffer size.
+    pub fn peak_activation_bits(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| (l.input_elems() + l.output_elems()) * l.act_bits as u64)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Total activation traffic (all layer outputs, written once + read once)
+    /// in bits — used by the DDR-spill model when activations exceed on-chip
+    /// capacity.
+    pub fn total_activation_bits(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| l.output_elems() * l.act_bits as u64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv1_resnet_macs() {
+        // ResNet conv1: 224x224x3 -> 7x7/2 -> 64 channels = 118.0 MMACs.
+        let l = Layer::conv("conv1", 224, 3, 64, 7, 2);
+        assert_eq!(l.oh(), 112);
+        assert_eq!(l.macs(), 112u64 * 112 * 49 * 3 * 64);
+        assert!((l.macs() as f64 - 118.0e6).abs() / 118.0e6 < 0.01);
+    }
+
+    #[test]
+    fn fc_macs_and_params() {
+        let l = Layer::fc("fc", 512, 1000);
+        assert_eq!(l.macs(), 512_000);
+        assert_eq!(l.params(), 512_000);
+        assert_eq!(l.ops(), 1_024_000);
+    }
+
+    #[test]
+    fn uniform_wq_pins_first_last() {
+        let cnn = Cnn {
+            name: "t".into(),
+            input_hw: 32,
+            input_channels: 3,
+            classes: 10,
+            layers: vec![
+                Layer::conv("a", 32, 3, 16, 3, 1),
+                Layer::conv("b", 32, 16, 16, 3, 1),
+                Layer::fc("fc", 16, 10),
+            ],
+        }
+        .with_uniform_wq(2);
+        assert_eq!(cnn.layers[0].wq, 8);
+        assert_eq!(cnn.layers[1].wq, 2);
+        assert_eq!(cnn.layers[2].wq, 8);
+    }
+
+    #[test]
+    fn stride_two_quarters_macs() {
+        let a = Layer::conv("s1", 56, 64, 128, 3, 1);
+        let b = Layer::conv("s2", 56, 64, 128, 3, 2);
+        assert_eq!(a.macs(), 4 * b.macs());
+    }
+
+    #[test]
+    fn odd_spatial_ceil() {
+        let l = Layer::conv("odd", 7, 8, 8, 3, 2);
+        assert_eq!(l.oh(), 4);
+    }
+}

@@ -1,0 +1,14 @@
+//! CNN model descriptions: layer IR, ResNet builders, and workload statistics.
+//!
+//! These are the *shapes* the DSE and simulator operate on. The runnable
+//! (PJRT-executed) models live in `python/compile/` and are exported as HLO;
+//! `resnet::resnet_small` mirrors the exported topology exactly so the
+//! simulator can be cross-checked against real execution.
+
+pub mod channelwise;
+pub mod layer;
+pub mod resnet;
+pub mod workload;
+
+pub use channelwise::{apply_channelwise, ChannelGroup};
+pub use layer::{Cnn, Layer, LayerKind};

@@ -1,0 +1,339 @@
+//! ResNet model builders (He et al. [14]).
+//!
+//! The paper evaluates ResNet-18 (basic blocks), ResNet-50 and ResNet-152
+//! (bottleneck blocks) on ImageNet (224×224×3, 1000 classes). We reconstruct
+//! the exact layer tables (including identity-shortcut downsample convs) so
+//! the DSE and simulator operate on the true shapes, and provide small
+//! 32×32 variants matching `python/compile/model.py` for the runnable
+//! serving path.
+
+use super::layer::{Cnn, Layer};
+
+/// Basic residual block: two 3×3 convs (+ 1×1 downsample when the shape
+/// changes). `ih` is the block's input spatial size.
+fn basic_block(layers: &mut Vec<Layer>, tag: &str, ih: u32, in_ch: u32, out_ch: u32, stride: u32) {
+    layers.push(Layer::conv(
+        &format!("{tag}.conv1"),
+        ih,
+        in_ch,
+        out_ch,
+        3,
+        stride,
+    ));
+    let oh = ih.div_ceil(stride);
+    layers.push(Layer::conv(&format!("{tag}.conv2"), oh, out_ch, out_ch, 3, 1));
+    if stride != 1 || in_ch != out_ch {
+        layers.push(Layer::conv(
+            &format!("{tag}.downsample"),
+            ih,
+            in_ch,
+            out_ch,
+            1,
+            stride,
+        ));
+    }
+}
+
+/// Bottleneck residual block: 1×1 reduce, 3×3, 1×1 expand (expansion 4).
+fn bottleneck_block(
+    layers: &mut Vec<Layer>,
+    tag: &str,
+    ih: u32,
+    in_ch: u32,
+    mid_ch: u32,
+    stride: u32,
+) {
+    let out_ch = mid_ch * 4;
+    layers.push(Layer::conv(&format!("{tag}.conv1"), ih, in_ch, mid_ch, 1, 1));
+    layers.push(Layer::conv(
+        &format!("{tag}.conv2"),
+        ih,
+        mid_ch,
+        mid_ch,
+        3,
+        stride,
+    ));
+    let oh = ih.div_ceil(stride);
+    layers.push(Layer::conv(
+        &format!("{tag}.conv3"),
+        oh,
+        mid_ch,
+        out_ch,
+        1,
+        1,
+    ));
+    if stride != 1 || in_ch != out_ch {
+        layers.push(Layer::conv(
+            &format!("{tag}.downsample"),
+            ih,
+            in_ch,
+            out_ch,
+            1,
+            stride,
+        ));
+    }
+}
+
+/// Build an ImageNet ResNet with basic blocks (18/34-style).
+fn resnet_basic(name: &str, blocks_per_stage: [u32; 4]) -> Cnn {
+    let mut layers = vec![Layer::conv("conv1", 224, 3, 64, 7, 2)];
+    // maxpool 3x3/2: 112 -> 56 (no MACs; shapes only)
+    let mut ih = 56;
+    let mut in_ch = 64;
+    for (stage, &nblocks) in blocks_per_stage.iter().enumerate() {
+        let out_ch = 64 << stage;
+        for b in 0..nblocks {
+            let stride = if stage > 0 && b == 0 { 2 } else { 1 };
+            basic_block(
+                &mut layers,
+                &format!("layer{}.{}", stage + 1, b),
+                ih,
+                in_ch,
+                out_ch,
+                stride,
+            );
+            ih = ih.div_ceil(stride);
+            in_ch = out_ch;
+        }
+    }
+    layers.push(Layer::fc("fc", in_ch, 1000));
+    Cnn {
+        name: name.to_string(),
+        input_hw: 224,
+        input_channels: 3,
+        classes: 1000,
+        layers,
+    }
+}
+
+/// Build an ImageNet ResNet with bottleneck blocks (50/101/152-style).
+fn resnet_bottleneck(name: &str, blocks_per_stage: [u32; 4]) -> Cnn {
+    let mut layers = vec![Layer::conv("conv1", 224, 3, 64, 7, 2)];
+    let mut ih = 56;
+    let mut in_ch = 64;
+    for (stage, &nblocks) in blocks_per_stage.iter().enumerate() {
+        let mid_ch = 64 << stage;
+        for b in 0..nblocks {
+            let stride = if stage > 0 && b == 0 { 2 } else { 1 };
+            bottleneck_block(
+                &mut layers,
+                &format!("layer{}.{}", stage + 1, b),
+                ih,
+                in_ch,
+                mid_ch,
+                stride,
+            );
+            ih = ih.div_ceil(stride);
+            in_ch = mid_ch * 4;
+        }
+    }
+    layers.push(Layer::fc("fc", in_ch, 1000));
+    Cnn {
+        name: name.to_string(),
+        input_hw: 224,
+        input_channels: 3,
+        classes: 1000,
+        layers,
+    }
+}
+
+/// ResNet-18 for ImageNet: 1.81 GMACs, 11.7 M parameters.
+pub fn resnet18() -> Cnn {
+    resnet_basic("ResNet-18", [2, 2, 2, 2])
+}
+
+/// ResNet-34 for ImageNet (extension beyond the paper's set).
+pub fn resnet34() -> Cnn {
+    resnet_basic("ResNet-34", [3, 4, 6, 3])
+}
+
+/// ResNet-50 for ImageNet: 4.09 GMACs, 25.5 M parameters.
+pub fn resnet50() -> Cnn {
+    resnet_bottleneck("ResNet-50", [3, 4, 6, 3])
+}
+
+/// ResNet-101 for ImageNet (extension beyond the paper's set).
+pub fn resnet101() -> Cnn {
+    resnet_bottleneck("ResNet-101", [3, 4, 23, 3])
+}
+
+/// ResNet-152 for ImageNet: 11.5 GMACs, 60.2 M parameters.
+pub fn resnet152() -> Cnn {
+    resnet_bottleneck("ResNet-152", [3, 8, 36, 3])
+}
+
+/// Small 32×32 ResNet (CIFAR-style, He et al. §4.2): conv3×3(16) then three
+/// stages of `n` basic blocks at 16/32/64 channels, then FC. `resnet_small(1)`
+/// = ResNet-8 — this exact net is what `python/compile/model.py` builds, QAT
+/// trains, and `aot.py` exports for the rust serving path.
+pub fn resnet_small(n_per_stage: u32, classes: u32) -> Cnn {
+    let mut layers = vec![Layer::conv("conv1", 32, 3, 16, 3, 1)];
+    let mut ih = 32;
+    let mut in_ch = 16;
+    for (stage, mult) in [1u32, 2, 4].iter().enumerate() {
+        let out_ch = 16 * mult;
+        for b in 0..n_per_stage {
+            let stride = if stage > 0 && b == 0 { 2 } else { 1 };
+            basic_block(
+                &mut layers,
+                &format!("layer{}.{}", stage + 1, b),
+                ih,
+                in_ch,
+                out_ch,
+                stride,
+            );
+            ih = ih.div_ceil(stride);
+            in_ch = out_ch;
+        }
+    }
+    layers.push(Layer::fc("fc", in_ch, classes));
+    Cnn {
+        name: format!("ResNet-{}", 6 * n_per_stage + 2),
+        input_hw: 32,
+        input_channels: 3,
+        classes,
+        layers,
+    }
+}
+
+/// Look up a CNN by name (CLI entry point).
+pub fn by_name(name: &str) -> Option<Cnn> {
+    match name
+        .to_ascii_lowercase()
+        .replace(['-', '_', ' '], "")
+        .as_str()
+    {
+        "resnet18" => Some(resnet18()),
+        "resnet34" => Some(resnet34()),
+        "resnet50" => Some(resnet50()),
+        "resnet101" => Some(resnet101()),
+        "resnet152" => Some(resnet152()),
+        "resnet8" => Some(resnet_small(1, 10)),
+        "resnet14" => Some(resnet_small(2, 10)),
+        "resnet20" => Some(resnet_small(3, 10)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rel_err(got: f64, want: f64) -> f64 {
+        (got - want).abs() / want
+    }
+
+    #[test]
+    fn resnet18_totals_match_literature() {
+        let net = resnet18();
+        // 1.81-1.82 GMACs, 11.68 M params (torchvision: 11,689,512 incl. BN).
+        assert!(
+            rel_err(net.total_macs() as f64, 1.82e9) < 0.02,
+            "macs={}",
+            net.total_macs()
+        );
+        assert!(
+            rel_err(net.total_params() as f64, 11.68e6) < 0.03,
+            "params={}",
+            net.total_params()
+        );
+        // 20 convs + 1 fc: conv1 + 16 block convs + 3 downsamples.
+        assert_eq!(net.layers.len(), 21);
+    }
+
+    #[test]
+    fn resnet50_totals_match_literature() {
+        let net = resnet50();
+        assert!(
+            rel_err(net.total_macs() as f64, 4.09e9) < 0.03,
+            "macs={}",
+            net.total_macs()
+        );
+        assert!(
+            rel_err(net.total_params() as f64, 25.5e6) < 0.03,
+            "params={}",
+            net.total_params()
+        );
+        // conv1 + 48 block convs + 4 downsamples + fc = 54 layers.
+        assert_eq!(net.layers.len(), 54);
+    }
+
+    #[test]
+    fn resnet152_totals_match_literature() {
+        let net = resnet152();
+        assert!(
+            rel_err(net.total_macs() as f64, 11.5e9) < 0.03,
+            "macs={}",
+            net.total_macs()
+        );
+        assert!(
+            rel_err(net.total_params() as f64, 60.19e6) < 0.03,
+            "params={}",
+            net.total_params()
+        );
+    }
+
+    #[test]
+    fn paper_gops_per_frame_consistency() {
+        // Table V: ResNet-152 at 1131.38 GOps/s and 51.19 frames/s implies
+        // ~22.1 GOps/frame of CONV work; our conv_ops must be within 5 %.
+        let net = resnet152();
+        let gops_per_frame = net.conv_ops() as f64 / 1e9;
+        assert!(
+            rel_err(gops_per_frame, 1131.38 / 51.19) < 0.05,
+            "gops/frame={gops_per_frame}"
+        );
+    }
+
+    #[test]
+    fn small_resnets() {
+        let r8 = resnet_small(1, 10);
+        assert_eq!(r8.name, "ResNet-8");
+        assert_eq!(r8.input_hw, 32);
+        // conv1 + 3 stages x (2 convs + maybe ds) + fc:
+        // stage1: 2, stage2: 3, stage3: 3 -> 1+8+1 = 10 layers.
+        assert_eq!(r8.layers.len(), 10);
+        let r20 = resnet_small(3, 10);
+        assert_eq!(r20.name, "ResNet-20");
+        assert!(r20.total_macs() > r8.total_macs());
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert_eq!(by_name("ResNet-18").unwrap().name, "ResNet-18");
+        assert_eq!(by_name("resnet_152").unwrap().name, "ResNet-152");
+        assert!(by_name("vgg16").is_none());
+    }
+
+    #[test]
+    fn spatial_sizes_telescope() {
+        // Every layer's input spatial size must match the previous layer's
+        // output (within the residual-block structure: downsample layers
+        // re-read the block input).
+        let net = resnet18();
+        for l in net.conv_layers() {
+            assert!(l.ih >= 7, "layer {} too small: {}", l.name, l.ih);
+            assert_eq!(l.ih % l.s, 0, "stride must divide spatial: {}", l.name);
+        }
+        // Final stage runs at 7x7.
+        let last_conv = net
+            .layers
+            .iter()
+            .rev()
+            .find(|l| l.kind == super::super::layer::LayerKind::Conv)
+            .unwrap();
+        assert_eq!(last_conv.oh(), 7);
+    }
+
+    #[test]
+    fn downsample_layers_present() {
+        let net = resnet18();
+        let ds: Vec<&Layer> = net
+            .layers
+            .iter()
+            .filter(|l| l.name.contains("downsample"))
+            .collect();
+        assert_eq!(ds.len(), 3, "stages 2-4 each have one downsample conv");
+        assert!(ds.iter().all(|l| l.k == 1 && l.s == 2));
+    }
+}

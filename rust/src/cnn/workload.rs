@@ -1,0 +1,146 @@
+//! Workload statistics: memory footprint, compression factor, op counts
+//! (backs Table III and feeds the DDR-traffic model of Table IV).
+//!
+//! Footprint accounting (first-principles; see DESIGN.md §8 for why we do not
+//! copy the paper's absolute MB column): weights at their per-layer
+//! word-length + BN scale/shift and biases at 32 bit + the peak activation
+//! working set at the activation word-length.
+
+use super::layer::{Cnn, LayerKind};
+
+/// Memory footprint breakdown for one quantized CNN.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Footprint {
+    pub weight_bits: u64,
+    /// BN gamma/beta + biases kept at 32-bit as in the paper's FP baseline.
+    pub bn_bias_bits: u64,
+    pub peak_activation_bits: u64,
+}
+
+impl Footprint {
+    pub fn total_bits(&self) -> u64 {
+        self.weight_bits + self.bn_bias_bits + self.peak_activation_bits
+    }
+
+    pub fn total_mb(&self) -> f64 {
+        self.total_bits() as f64 / 8.0 / 1e6
+    }
+
+    pub fn weight_mb(&self) -> f64 {
+        self.weight_bits as f64 / 8.0 / 1e6
+    }
+}
+
+/// Compute the footprint of `cnn` with its current per-layer `wq`.
+pub fn footprint(cnn: &Cnn) -> Footprint {
+    let weight_bits = cnn.layers.iter().map(|l| l.weight_bits_total()).sum();
+    // Each conv layer is followed by BN (2 params per output channel); the FC
+    // layer has a bias per class. All at 32 bit.
+    let bn_bias_bits = cnn
+        .layers
+        .iter()
+        .map(|l| match l.kind {
+            LayerKind::Conv => 2 * l.od as u64 * 32,
+            LayerKind::Fc => l.od as u64 * 32,
+        })
+        .sum();
+    Footprint {
+        weight_bits,
+        bn_bias_bits,
+        peak_activation_bits: cnn.peak_activation_bits(),
+    }
+}
+
+/// Footprint of the 32-bit floating-point baseline of the same topology.
+pub fn footprint_fp32(cnn: &Cnn) -> Footprint {
+    let mut fp = cnn.clone();
+    for l in fp.layers.iter_mut() {
+        l.wq = 32;
+        l.act_bits = 32;
+    }
+    footprint(&fp)
+}
+
+/// Compression factor vs the FP32 baseline (paper Table III column).
+pub fn compression_factor(cnn: &Cnn) -> f64 {
+    footprint_fp32(cnn).total_bits() as f64 / footprint(cnn).total_bits() as f64
+}
+
+/// Weight-only compression (the abstract's 4.9x / 9.4x numbers are
+/// parameter-memory reductions).
+pub fn weight_compression_factor(cnn: &Cnn) -> f64 {
+    let fp_bits: u64 = cnn.layers.iter().map(|l| l.params() * 32).sum();
+    let q_bits: u64 = cnn.layers.iter().map(|l| l.weight_bits_total()).sum();
+    fp_bits as f64 / q_bits as f64
+}
+
+/// Average weight word-length over CONV layers, weighted by MAC count — the
+/// quantity the paper says drives the optimal operand slice k ("the final
+/// choice of the operand slice k depends on the average word-length used in
+/// the adopted CNN").
+pub fn mac_weighted_avg_wq(cnn: &Cnn) -> f64 {
+    let (num, den) = cnn.conv_layers().fold((0.0, 0.0), |(n, d), l| {
+        (n + (l.macs() as f64) * l.wq as f64, d + l.macs() as f64)
+    });
+    if den == 0.0 {
+        0.0
+    } else {
+        num / den
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::resnet;
+
+    #[test]
+    fn fp32_footprint_matches_param_count() {
+        let net = resnet::resnet18();
+        let fp = footprint_fp32(&net);
+        // 11.68M params * 4 bytes ≈ 46.7 MB of weights.
+        assert!((fp.weight_mb() - 46.7).abs() < 1.5, "{}", fp.weight_mb());
+    }
+
+    #[test]
+    fn compression_at_wq2_substantial_and_depth_helps_over_50() {
+        // Paper Table III reports 4.9x/5.6x/9.4x at w_Q=2 under its own
+        // (unstated) accounting; our first-principles parameter accounting
+        // gives larger factors (~13-15x) because we count only real weight
+        // bits. The robust *shape*: ResNet-152 compresses better than
+        // ResNet-50 (its 8-bit FC layer amortizes away), and every factor is
+        // far above the w_Q=4 ones.
+        let c18 = weight_compression_factor(&resnet::resnet18().with_uniform_wq(2));
+        let c50 = weight_compression_factor(&resnet::resnet50().with_uniform_wq(2));
+        let c152 = weight_compression_factor(&resnet::resnet152().with_uniform_wq(2));
+        assert!(c152 > c50, "c50={c50} c152={c152}");
+        for c in [c18, c50, c152] {
+            assert!((10.0..17.0).contains(&c), "c={c}");
+        }
+    }
+
+    #[test]
+    fn compression_monotone_in_wq() {
+        let c4 = weight_compression_factor(&resnet::resnet18().with_uniform_wq(4));
+        let c2 = weight_compression_factor(&resnet::resnet18().with_uniform_wq(2));
+        let c1 = weight_compression_factor(&resnet::resnet18().with_uniform_wq(1));
+        assert!(c1 > c2 && c2 > c4);
+    }
+
+    #[test]
+    fn avg_wq_between_bounds() {
+        let net = resnet::resnet18().with_uniform_wq(2);
+        let avg = mac_weighted_avg_wq(&net);
+        assert!(avg > 2.0 && avg < 8.0, "avg={avg}");
+        // conv1 is a small fraction of MACs, so avg is near 2.
+        assert!(avg < 2.6, "avg={avg}");
+    }
+
+    #[test]
+    fn footprint_total_includes_activations() {
+        let net = resnet::resnet18().with_uniform_wq(4);
+        let f = footprint(&net);
+        assert!(f.peak_activation_bits > 0);
+        assert!(f.total_bits() > f.weight_bits);
+    }
+}

@@ -1,0 +1,98 @@
+//! `key = value` config-file parser (TOML-subset; no `toml`/`serde` offline).
+//!
+//! Supported: comments (`#`), blank lines, `key = value` pairs, optional
+//! `[section]` headers which prefix keys as `section.key`. Values are kept as
+//! raw strings; typed access happens at the consumer.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct KvError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for KvError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error on line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for KvError {}
+
+/// Parse `text` into a flat `key -> value` map.
+pub fn parse_kv(text: &str) -> Result<BTreeMap<String, String>, KvError> {
+    let mut map = BTreeMap::new();
+    let mut section = String::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some(sec) = line.strip_prefix('[') {
+            let sec = sec.strip_suffix(']').ok_or(KvError {
+                line: i + 1,
+                message: "unterminated section header".to_string(),
+            })?;
+            section = sec.trim().to_string();
+            continue;
+        }
+        let (k, v) = line.split_once('=').ok_or(KvError {
+            line: i + 1,
+            message: format!("expected 'key = value', got '{line}'"),
+        })?;
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{}.{}", section, k.trim())
+        };
+        // Strip optional quotes and trailing comments.
+        let mut val = v.trim();
+        if let Some(hash) = val.find(" #") {
+            val = val[..hash].trim();
+        }
+        let val = val.trim_matches('"').to_string();
+        if key.is_empty() {
+            return Err(KvError {
+                line: i + 1,
+                message: "empty key".to_string(),
+            });
+        }
+        map.insert(key, val);
+    }
+    Ok(map)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_pairs() {
+        let m = parse_kv("a = 1\nb = hello\n").unwrap();
+        assert_eq!(m["a"], "1");
+        assert_eq!(m["b"], "hello");
+    }
+
+    #[test]
+    fn sections_prefix() {
+        let m = parse_kv("[fpga]\nname = gxa7\n[dse]\nk = 2").unwrap();
+        assert_eq!(m["fpga.name"], "gxa7");
+        assert_eq!(m["dse.k"], "2");
+    }
+
+    #[test]
+    fn comments_and_quotes() {
+        let m = parse_kv("# top\nname = \"quoted\"  # trailing\n").unwrap();
+        assert_eq!(m["name"], "quoted");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse_kv("ok = 1\nnot a pair\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse_kv("[oops\n").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+}

@@ -1,0 +1,188 @@
+//! Inference backends for the coordinator: the production PJRT engine and a
+//! deterministic mock for tests/benches.
+
+use crate::runtime::Engine;
+use anyhow::{anyhow, Result};
+
+/// Anything that can run a batch of images to logits.
+///
+/// Not `Send`: the PJRT client types are thread-affine, so the coordinator
+/// constructs the backend *inside* the batcher thread via a factory closure
+/// (see [`crate::coordinator::Coordinator::start`]).
+pub trait InferenceBackend {
+    /// Batch sizes the backend has compiled executables for (sorted not
+    /// required).
+    fn batch_sizes(&self) -> Vec<usize>;
+    /// Flattened image length (h*w*c).
+    fn image_len(&self) -> usize;
+    fn classes(&self) -> usize;
+    /// Run `batch` images (flattened, padded by the caller) and return
+    /// `batch * classes` logits.
+    fn infer_batch(&self, images: &[f32], batch: usize) -> Result<Vec<f32>>;
+}
+
+/// PJRT-backed production backend for one word-length variant.
+pub struct EngineBackend {
+    engine: Engine,
+    wq: u32,
+    batch_sizes: Vec<usize>,
+    image_len: usize,
+    classes: usize,
+}
+
+impl EngineBackend {
+    /// Wrap an engine, serving the `wq` variant.
+    pub fn new(engine: Engine, wq: u32) -> Result<EngineBackend> {
+        let entries: Vec<_> = engine
+            .manifest
+            .models
+            .iter()
+            .filter(|m| m.wq == wq)
+            .cloned()
+            .collect();
+        if entries.is_empty() {
+            return Err(anyhow!("no exported models for wq={wq}"));
+        }
+        let image_len = entries[0].input_len() / entries[0].batch;
+        let classes = entries[0].classes;
+        let batch_sizes = entries.iter().map(|e| e.batch).collect();
+        Ok(EngineBackend {
+            engine,
+            wq,
+            batch_sizes,
+            image_len,
+            classes,
+        })
+    }
+}
+
+impl InferenceBackend for EngineBackend {
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.batch_sizes.clone()
+    }
+
+    fn image_len(&self) -> usize {
+        self.image_len
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn infer_batch(&self, images: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let model = self
+            .engine
+            .model_for(self.wq, batch)
+            .ok_or_else(|| anyhow!("no compiled model for wq={} batch={batch}", self.wq))?;
+        model.infer(images)
+    }
+}
+
+/// Deterministic mock backend: logits are a fixed function of the input so
+/// tests can assert classification results; optional artificial latency and
+/// failure injection.
+pub struct MockBackend {
+    image_len: usize,
+    classes: usize,
+    batch_sizes: Vec<usize>,
+    latency_us: u64,
+    /// Fail every call after the Nth (failure injection).
+    pub fail_after: Option<u64>,
+    calls: std::sync::atomic::AtomicU64,
+}
+
+impl MockBackend {
+    pub fn new(image_len: usize, classes: usize, batch_sizes: Vec<usize>, latency_us: u64) -> Self {
+        MockBackend {
+            image_len,
+            classes,
+            batch_sizes,
+            latency_us,
+            fail_after: None,
+            calls: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// The mock's ground-truth rule: class = floor(mean(image)) mod classes.
+    pub fn expected_class(&self, image: &[f32]) -> usize {
+        let mean = image.iter().sum::<f32>() / image.len() as f32;
+        (mean.max(0.0) as usize) % self.classes
+    }
+}
+
+impl InferenceBackend for MockBackend {
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.batch_sizes.clone()
+    }
+
+    fn image_len(&self) -> usize {
+        self.image_len
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn infer_batch(&self, images: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let n = self
+            .calls
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        if let Some(limit) = self.fail_after {
+            if n >= limit {
+                return Err(anyhow!("injected failure on call {n}"));
+            }
+        }
+        if self.latency_us > 0 {
+            std::thread::sleep(std::time::Duration::from_micros(self.latency_us));
+        }
+        if images.len() != batch * self.image_len {
+            return Err(anyhow!(
+                "mock: bad input length {} for batch {batch}",
+                images.len()
+            ));
+        }
+        let mut logits = vec![0.0f32; batch * self.classes];
+        for b in 0..batch {
+            let img = &images[b * self.image_len..(b + 1) * self.image_len];
+            let class = self.expected_class(img);
+            logits[b * self.classes + class] = 1.0;
+        }
+        Ok(logits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_is_deterministic() {
+        let m = MockBackend::new(4, 3, vec![1], 0);
+        let img = vec![2.0, 2.0, 2.0, 2.0]; // mean 2 -> class 2
+        let logits = m.infer_batch(&img, 1).unwrap();
+        assert_eq!(logits, vec![0.0, 0.0, 1.0]);
+        assert_eq!(m.expected_class(&img), 2);
+    }
+
+    #[test]
+    fn mock_batch_layout() {
+        let m = MockBackend::new(2, 2, vec![2], 0);
+        let imgs = vec![0.0, 0.0, 1.0, 1.0]; // classes 0 and 1
+        let logits = m.infer_batch(&imgs, 2).unwrap();
+        assert_eq!(logits, vec![1.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn mock_failure_injection() {
+        let mut m = MockBackend::new(2, 2, vec![1], 0);
+        m.fail_after = Some(1);
+        assert!(m.infer_batch(&[0.0, 0.0], 1).is_ok());
+        assert!(m.infer_batch(&[0.0, 0.0], 1).is_err());
+    }
+
+    #[test]
+    fn mock_validates_length() {
+        let m = MockBackend::new(3, 2, vec![1], 0);
+        assert!(m.infer_batch(&[0.0; 2], 1).is_err());
+    }
+}

@@ -1,0 +1,95 @@
+//! Serving metrics: latency histogram, throughput counters, batch-size
+//! distribution, and the virtual-FPGA clock that reports what the same
+//! stream would cost on the simulated accelerator design.
+
+use crate::util::stats::LatencyHistogram;
+
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub latency: LatencyHistogram,
+    /// Time requests spent queued before batch assembly.
+    pub queue_wait: LatencyHistogram,
+    pub requests: u64,
+    pub responses: u64,
+    pub errors: u64,
+    pub batches: u64,
+    /// Sum of batch sizes (for mean batch size).
+    pub batched_items: u64,
+    /// Items that were padding (submitted batch < compiled batch).
+    pub padded_items: u64,
+    /// Simulated FPGA busy time for the same stream, in microseconds.
+    pub fpga_virtual_us: f64,
+    /// Wall-clock span of the measurement window, in microseconds.
+    pub wall_us: f64,
+}
+
+impl Metrics {
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_items as f64 / self.batches as f64
+        }
+    }
+
+    /// Achieved throughput in requests/s over the wall-clock window.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall_us <= 0.0 {
+            0.0
+        } else {
+            self.responses as f64 / (self.wall_us * 1e-6)
+        }
+    }
+
+    /// Frames/s the simulated FPGA design would have achieved on this
+    /// stream (virtual clock).
+    pub fn fpga_fps(&self) -> f64 {
+        if self.fpga_virtual_us <= 0.0 {
+            0.0
+        } else {
+            self.responses as f64 / (self.fpga_virtual_us * 1e-6)
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} responses={} errors={} batches={} mean_batch={:.2} \
+             p50={:.0}us p99={:.0}us max={:.0}us throughput={:.1} rps fpga_sim={:.1} fps",
+            self.requests,
+            self.responses,
+            self.errors,
+            self.batches,
+            self.mean_batch(),
+            self.latency.percentile_us(50.0),
+            self.latency.percentile_us(99.0),
+            self.latency.max_us(),
+            self.throughput_rps(),
+            self.fpga_fps(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_batch_and_throughput() {
+        let mut m = Metrics::default();
+        m.batches = 4;
+        m.batched_items = 14;
+        m.responses = 14;
+        m.wall_us = 2_000_000.0;
+        assert!((m.mean_batch() - 3.5).abs() < 1e-12);
+        assert!((m.throughput_rps() - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_safe() {
+        let m = Metrics::default();
+        assert_eq!(m.mean_batch(), 0.0);
+        assert_eq!(m.throughput_rps(), 0.0);
+        assert_eq!(m.fpga_fps(), 0.0);
+        assert!(m.summary().contains("requests=0"));
+    }
+}

@@ -1,0 +1,513 @@
+//! L3 serving coordinator: bounded admission queue with backpressure, a
+//! dynamic batcher, a worker executing batches on an [`InferenceBackend`]
+//! (the PJRT engine in production, mocks in tests), and serving metrics
+//! including a virtual-FPGA clock tied to the simulated accelerator design.
+//!
+//! No tokio offline — plain threads + `std::sync::mpsc`, which is entirely
+//! adequate for a single-device inference queue: one batcher thread owns
+//! the backend, clients block on per-request channels.
+
+pub mod backend;
+pub mod metrics;
+
+pub use backend::{EngineBackend, InferenceBackend, MockBackend};
+pub use metrics::Metrics;
+
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Assemble at most this many requests per batch (must be a supported
+    /// backend batch size or smaller).
+    pub max_batch: usize,
+    /// Wait at most this long for the batch to fill.
+    pub max_wait: Duration,
+    /// Admission queue depth; beyond this, `try_submit` sheds load.
+    pub queue_capacity: usize,
+    /// Frames/s of the simulated FPGA design (drives the virtual clock);
+    /// 0 disables the virtual clock.
+    pub fpga_fps_sim: f64,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            queue_capacity: 128,
+            fpga_fps_sim: 0.0,
+        }
+    }
+}
+
+/// One inference request.
+struct Request {
+    image: Vec<f32>,
+    enqueued: Instant,
+    reply: SyncSender<Result<Response, String>>,
+}
+
+/// One inference response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    /// Logits for this request's image.
+    pub logits: Vec<f32>,
+    /// Predicted class (argmax).
+    pub class: usize,
+    /// End-to-end latency.
+    pub latency: Duration,
+    /// Size of the batch this request rode in.
+    pub batch_size: usize,
+}
+
+/// Submission error.
+#[derive(Debug, thiserror::Error)]
+pub enum SubmitError {
+    #[error("queue full (backpressure)")]
+    Backpressure,
+    #[error("coordinator is shut down")]
+    Closed,
+    #[error("bad input: expected {expected} elements, got {got}")]
+    BadInput { expected: usize, got: usize },
+}
+
+/// Handle for submitting requests; cheap to clone across client threads.
+#[derive(Clone)]
+pub struct Client {
+    tx: SyncSender<Request>,
+    image_len: usize,
+}
+
+impl Client {
+    /// Non-blocking submit; sheds load when the queue is full.
+    pub fn try_submit(&self, image: Vec<f32>) -> Result<PendingResponse, SubmitError> {
+        if image.len() != self.image_len {
+            return Err(SubmitError::BadInput {
+                expected: self.image_len,
+                got: image.len(),
+            });
+        }
+        let (reply_tx, reply_rx) = sync_channel(1);
+        let req = Request {
+            image,
+            enqueued: Instant::now(),
+            reply: reply_tx,
+        };
+        match self.tx.try_send(req) {
+            Ok(()) => Ok(PendingResponse { rx: reply_rx }),
+            Err(TrySendError::Full(_)) => Err(SubmitError::Backpressure),
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+        }
+    }
+
+    /// Blocking submit (applies backpressure to the caller).
+    pub fn submit(&self, image: Vec<f32>) -> Result<PendingResponse, SubmitError> {
+        if image.len() != self.image_len {
+            return Err(SubmitError::BadInput {
+                expected: self.image_len,
+                got: image.len(),
+            });
+        }
+        let (reply_tx, reply_rx) = sync_channel(1);
+        let req = Request {
+            image,
+            enqueued: Instant::now(),
+            reply: reply_tx,
+        };
+        self.tx
+            .send(req)
+            .map_err(|_| SubmitError::Closed)?;
+        Ok(PendingResponse { rx: reply_rx })
+    }
+
+    /// Convenience: submit and wait.
+    pub fn classify(&self, image: Vec<f32>) -> Result<Response, String> {
+        self.submit(image)
+            .map_err(|e| e.to_string())?
+            .wait()
+    }
+}
+
+/// Future-like handle for an in-flight request.
+#[derive(Debug)]
+pub struct PendingResponse {
+    rx: Receiver<Result<Response, String>>,
+}
+
+impl PendingResponse {
+    pub fn wait(self) -> Result<Response, String> {
+        self.rx
+            .recv()
+            .map_err(|_| "coordinator dropped request".to_string())?
+    }
+
+    pub fn wait_timeout(self, d: Duration) -> Result<Response, String> {
+        match self.rx.recv_timeout(d) {
+            Ok(r) => r,
+            Err(_) => Err("timeout".to_string()),
+        }
+    }
+}
+
+/// The running coordinator.
+pub struct Coordinator {
+    client: Client,
+    metrics: Arc<Mutex<Metrics>>,
+    worker: Option<JoinHandle<()>>,
+    started: Instant,
+    /// Set on shutdown/drop; the worker polls it while idle so stray
+    /// `Client` clones cannot keep the thread alive.
+    stop: Arc<AtomicBool>,
+}
+
+impl Coordinator {
+    /// Start the batcher thread. `factory` runs *inside* the worker thread
+    /// and builds the backend there — required because the PJRT client types
+    /// are not `Send`. Fails if the factory fails.
+    pub fn start<F>(factory: F, cfg: BatcherConfig) -> Result<Coordinator>
+    where
+        F: FnOnce() -> Result<Box<dyn InferenceBackend>> + Send + 'static,
+    {
+        assert!(cfg.max_batch >= 1);
+        let (tx, rx) = sync_channel::<Request>(cfg.queue_capacity);
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let m2 = metrics.clone();
+        // The worker reports readiness (and the image length) or the
+        // factory's error back over a rendezvous channel.
+        let (ready_tx, ready_rx) = sync_channel::<Result<usize, String>>(1);
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let worker = std::thread::Builder::new()
+            .name("mpcnn-batcher".to_string())
+            .spawn(move || {
+                let backend = match factory() {
+                    Ok(b) => {
+                        let _ = ready_tx.send(Ok(b.image_len()));
+                        b
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(format!("{e:#}")));
+                        return;
+                    }
+                };
+                batcher_loop(backend, rx, cfg, m2, stop2)
+            })
+            .expect("spawn batcher");
+        let image_len = ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("batcher thread died during startup"))?
+            .map_err(|e| anyhow::anyhow!("backend factory failed: {e}"))?;
+        Ok(Coordinator {
+            client: Client { tx, image_len },
+            metrics,
+            worker: Some(worker),
+            started: Instant::now(),
+            stop,
+        })
+    }
+
+    pub fn client(&self) -> Client {
+        self.client.clone()
+    }
+
+    /// Snapshot of the metrics (wall window = since start).
+    pub fn metrics(&self) -> Metrics {
+        let mut m = self.metrics.lock().unwrap().clone();
+        m.wall_us = self.started.elapsed().as_micros() as f64;
+        m
+    }
+
+    /// Graceful shutdown: signals the worker, joins it, returns the final
+    /// metrics. In-flight requests complete; queued-but-unbatched requests
+    /// are still drained before exit (the stop flag is only honoured while
+    /// idle).
+    pub fn shutdown(mut self) -> Metrics {
+        let final_metrics = self.metrics();
+        self.stop_and_join();
+        final_metrics
+    }
+
+    fn stop_and_join(&mut self) {
+        if let Some(h) = self.worker.take() {
+            self.stop.store(true, Ordering::SeqCst);
+            // Also drop our own sender so an idle worker wakes immediately
+            // when no other Client clones exist.
+            let dummy = Client {
+                tx: sync_channel(1).0,
+                image_len: 0,
+            };
+            let old = std::mem::replace(&mut self.client, dummy);
+            drop(old);
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// The batcher loop: collect up to `max_batch` requests within `max_wait`
+/// of the first, pad to a supported backend batch size, execute, fan out.
+fn batcher_loop(
+    backend: Box<dyn InferenceBackend>,
+    rx: Receiver<Request>,
+    cfg: BatcherConfig,
+    metrics: Arc<Mutex<Metrics>>,
+    stop: Arc<AtomicBool>,
+) {
+    let supported = {
+        let mut s = backend.batch_sizes();
+        s.sort_unstable();
+        s
+    };
+    let image_len = backend.image_len();
+    let classes = backend.classes();
+    loop {
+        // Block for the first request of the batch, polling the stop flag
+        // so shutdown works even while stray Client clones are alive.
+        let first = loop {
+            if stop.load(Ordering::SeqCst) {
+                // Drain whatever is already queued, then exit.
+                match rx.try_recv() {
+                    Ok(r) => break r,
+                    Err(_) => return,
+                }
+            }
+            match rx.recv_timeout(Duration::from_millis(25)) {
+                Ok(r) => break r,
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => return, // all clients dropped
+            }
+        };
+        let deadline = Instant::now() + cfg.max_wait;
+        let mut batch = vec![first];
+        while batch.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        // Pick the smallest supported batch size >= len (pad), else the
+        // largest supported (split would be needed; max_batch should be a
+        // supported size so this doesn't happen).
+        let n = batch.len();
+        let exec_size = supported
+            .iter()
+            .copied()
+            .find(|&s| s >= n)
+            .unwrap_or_else(|| *supported.last().unwrap());
+        let mut flat = Vec::with_capacity(exec_size * image_len);
+        for r in &batch {
+            flat.extend_from_slice(&r.image);
+        }
+        flat.resize(exec_size * image_len, 0.0); // zero padding
+
+        {
+            let mut m = metrics.lock().unwrap();
+            m.requests += n as u64;
+            m.batches += 1;
+            m.batched_items += n as u64;
+            m.padded_items += (exec_size - n) as u64;
+            for r in &batch {
+                m.queue_wait
+                    .record_us(r.enqueued.elapsed().as_micros() as f64);
+            }
+        }
+
+        let result = backend.infer_batch(&flat, exec_size);
+        let mut m = metrics.lock().unwrap();
+        if cfg.fpga_fps_sim > 0.0 {
+            m.fpga_virtual_us += n as f64 / cfg.fpga_fps_sim * 1e6;
+        }
+        match result {
+            Ok(logits) => {
+                for (i, r) in batch.into_iter().enumerate() {
+                    let row = logits[i * classes..(i + 1) * classes].to_vec();
+                    let class = crate::runtime::argmax_rows(&row, classes)[0];
+                    let latency = r.enqueued.elapsed();
+                    m.latency.record_us(latency.as_micros() as f64);
+                    m.responses += 1;
+                    let _ = r.reply.send(Ok(Response {
+                        logits: row,
+                        class,
+                        latency,
+                        batch_size: n,
+                    }));
+                }
+            }
+            Err(e) => {
+                let msg = format!("backend error: {e}");
+                for r in batch {
+                    m.errors += 1;
+                    let _ = r.reply.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mock(latency_us: u64) -> impl FnOnce() -> anyhow::Result<Box<dyn InferenceBackend>> + Send + 'static {
+        move || Ok(Box::new(MockBackend::new(12, 4, vec![1, 4, 8], latency_us)) as Box<dyn InferenceBackend>)
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let c = Coordinator::start(mock(0), BatcherConfig::default()).unwrap();
+        let resp = c.client().classify(vec![0.5; 12]).unwrap();
+        assert_eq!(resp.logits.len(), 4);
+        assert_eq!(resp.batch_size, 1);
+        let m = c.metrics();
+        assert_eq!(m.responses, 1);
+        assert_eq!(m.errors, 0);
+    }
+
+    #[test]
+    fn batching_assembles_multiple() {
+        let cfg = BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(50),
+            ..Default::default()
+        };
+        let c = Coordinator::start(mock(1000), cfg).unwrap();
+        let client = c.client();
+        let pending: Vec<_> = (0..6)
+            .map(|i| client.submit(vec![i as f32; 12]).unwrap())
+            .collect();
+        let responses: Vec<_> = pending.into_iter().map(|p| p.wait().unwrap()).collect();
+        assert_eq!(responses.len(), 6);
+        // At least one response should have ridden in a batch > 1.
+        assert!(responses.iter().any(|r| r.batch_size > 1));
+        let m = c.metrics();
+        assert!(m.batches < 6, "batching must coalesce: {} batches", m.batches);
+        assert!(m.padded_items > 0, "6 requests pad to 8");
+    }
+
+    #[test]
+    fn bad_input_rejected_up_front() {
+        let c = Coordinator::start(mock(0), BatcherConfig::default()).unwrap();
+        match c.client().try_submit(vec![1.0; 5]) {
+            Err(SubmitError::BadInput { expected, got }) => {
+                assert_eq!(expected, 12);
+                assert_eq!(got, 5);
+            }
+            other => panic!("expected BadInput, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn backpressure_sheds_load() {
+        // Slow backend + tiny queue: try_submit must eventually refuse.
+        let cfg = BatcherConfig {
+            max_batch: 1,
+            max_wait: Duration::from_millis(0),
+            queue_capacity: 2,
+            fpga_fps_sim: 0.0,
+        };
+        let c = Coordinator::start(mock(50_000), cfg).unwrap();
+        let client = c.client();
+        let mut pending = Vec::new();
+        let mut shed = 0;
+        for _ in 0..20 {
+            match client.try_submit(vec![0.0; 12]) {
+                Ok(p) => pending.push(p),
+                Err(SubmitError::Backpressure) => shed += 1,
+                Err(e) => panic!("unexpected {e}"),
+            }
+        }
+        assert!(shed > 0, "queue of 2 cannot absorb 20 instant submissions");
+        for p in pending {
+            p.wait().unwrap();
+        }
+    }
+
+    #[test]
+    fn backend_failure_propagates() {
+        let c = Coordinator::start(
+            || {
+                let mut b = MockBackend::new(12, 4, vec![1, 8], 0);
+                b.fail_after = Some(2);
+                Ok(Box::new(b) as Box<dyn InferenceBackend>)
+            },
+            BatcherConfig {
+                max_batch: 1,
+                max_wait: Duration::from_millis(0),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let client = c.client();
+        let mut errors = 0;
+        for _ in 0..5 {
+            if client.classify(vec![0.0; 12]).is_err() {
+                errors += 1;
+            }
+        }
+        assert!(errors >= 3, "failures after the 2nd call must surface");
+        assert!(c.metrics().errors >= 3);
+    }
+
+    #[test]
+    fn virtual_fpga_clock_advances() {
+        let cfg = BatcherConfig {
+            fpga_fps_sim: 100.0,
+            ..Default::default()
+        };
+        let c = Coordinator::start(mock(0), cfg).unwrap();
+        for _ in 0..10 {
+            c.client().classify(vec![0.0; 12]).unwrap();
+        }
+        let m = c.metrics();
+        // 10 frames at 100 fps = 0.1 s of virtual time.
+        assert!((m.fpga_virtual_us - 100_000.0).abs() < 1.0);
+        assert!((m.fpga_fps() - 100.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly() {
+        let c = Coordinator::start(mock(0), BatcherConfig::default()).unwrap();
+        c.client().classify(vec![0.0; 12]).unwrap();
+        let m = c.shutdown();
+        assert_eq!(m.responses, 1);
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let c = Coordinator::start(mock(100), BatcherConfig::default()).unwrap();
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let client = c.client();
+            handles.push(std::thread::spawn(move || {
+                let mut ok = 0;
+                for i in 0..25 {
+                    let img = vec![(t * 100 + i) as f32; 12];
+                    if client.classify(img).is_ok() {
+                        ok += 1;
+                    }
+                }
+                ok
+            }));
+        }
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, 100);
+        assert_eq!(c.metrics().responses, 100);
+    }
+}

@@ -1,0 +1,324 @@
+//! Dataflow level of the DSE (Fig 2 green box): per-layer tiling/schedule,
+//! utilization (Eq 3), spatial-reuse accounting (Table I), and the roofline
+//! bandwidth feedback.
+
+use crate::array::{bram_ports, Dims};
+use crate::cnn::Layer;
+
+/// How many activation words stream per array column at weight word-length
+/// `wq` on slice `k`: the Eq-2/Eq-3 factor `N/w_Q` (with the `w_Q >= k`
+/// provision: a narrower weight still occupies a full k-bit slice).
+pub fn parallel_words(n: u32, wq: u32, k: u32) -> u32 {
+    (n / wq.max(k).min(n)).max(1)
+}
+
+/// Schedule of one CONV layer on an H×W×D array.
+#[derive(Clone, Debug)]
+pub struct LayerSchedule {
+    pub name: String,
+    /// Actual temporal reuse P_actual (Eq 3 denominator) = compute cycles.
+    pub compute_cycles: u64,
+    /// Cycles after the roofline/bandwidth feedback (>= compute_cycles).
+    pub cycles: u64,
+    /// Ideal temporal reuse P_ideal (Eq 3 numerator).
+    pub ideal_cycles: f64,
+    /// U(l) = P_ideal / P_actual ∈ (0, 1].
+    pub utilization: f64,
+    /// Tile counts along (H, W·N/wq, D).
+    pub tiles: (u64, u64, u64),
+    /// Bits of BRAM port traffic per active cycle (psums r+w, acts, weights).
+    pub bram_bits_per_cycle: u64,
+    /// DDR traffic attributable to this layer per frame (weights + spills).
+    pub ddr_bits: u64,
+    /// Whether the DDR bandwidth, not compute, bounds this layer.
+    pub bandwidth_limited: bool,
+    pub macs: u64,
+    pub wq: u32,
+}
+
+/// Parameters needed beyond the layer itself.
+#[derive(Clone, Copy, Debug)]
+pub struct ScheduleCtx {
+    pub dims: Dims,
+    /// Operand slice of the PE design.
+    pub k: u32,
+    /// Activation word-length N.
+    pub n: u32,
+    pub fmax_mhz: f64,
+    /// Off-chip bandwidth in bytes/s.
+    pub ddr_bw_bytes_per_s: f64,
+    /// On-chip activation buffer capacity in bits (spill threshold).
+    pub act_buffer_bits: u64,
+}
+
+/// Eq 3: schedule one layer.
+///
+/// `P_actual(l) = ceil(I_H/H) · ceil(I_W/(W·N/w_Q)) · ceil(O_D/D) · I_H · (K/S)²`
+/// — the H dimension tiles the feature-map height, W×(N/w_Q) tiles the input
+/// channels, D tiles the output channels; the feature-map *width* (I_H
+/// columns) and the K² kernel positions are processed serially.
+pub fn schedule_layer(layer: &Layer, ctx: &ScheduleCtx) -> LayerSchedule {
+    let Dims { h, w, d } = ctx.dims;
+    let f = parallel_words(ctx.n, layer.wq, ctx.k) as u64;
+    let th = (layer.ih as u64).div_ceil(h as u64);
+    let tw = (layer.iw as u64).div_ceil(w as u64 * f);
+    let td = (layer.od as u64).div_ceil(d as u64);
+    let kernel_steps = (layer.k as f64 / layer.s as f64).powi(2);
+    let compute_cycles =
+        ((th * tw * td * layer.ih as u64) as f64 * kernel_steps).ceil() as u64;
+    let compute_cycles = compute_cycles.max(1);
+
+    // Eq 3 numerator, literally: I_H² · I_W · O_D · (K/S)² / (H·W·(N/w_Q)·D).
+    // (Uses the paper's continuous (K/S)² convention on both sides so that
+    // U(l) = P_ideal/P_actual <= 1 holds for every stride.)
+    let n_pe_eff = (h as u64 * w as u64 * d as u64) as f64 * f as f64;
+    let ideal_cycles = (layer.ih as f64).powi(2) * layer.iw as f64 * layer.od as f64
+        * kernel_steps
+        / n_pe_eff;
+    let utilization = (ideal_cycles / compute_cycles as f64).min(1.0);
+
+    // Roofline feedback: this layer's weights must stream from DDR while it
+    // computes; if the link is too slow, the layer becomes bandwidth-bound
+    // and stretches ("the temporal reuse P_actual defines the required
+    // bandwidth, which is fed back to the roofline model").
+    let weight_bits = layer.weight_bits_total();
+    let bw_bits_per_cycle = ctx.ddr_bw_bytes_per_s * 8.0 / (ctx.fmax_mhz * 1e6);
+    let min_cycles_for_weights = (weight_bits as f64 / bw_bits_per_cycle).ceil() as u64;
+    let cycles = compute_cycles.max(min_cycles_for_weights);
+    let bandwidth_limited = min_cycles_for_weights > compute_cycles;
+
+    // Activation spill: if the layer's in+out working set exceeds the
+    // on-chip buffer, outputs round-trip through DDR.
+    let working_set =
+        (layer.input_elems() + layer.output_elems()) * layer.act_bits as u64;
+    let spill_bits = if working_set > ctx.act_buffer_bits {
+        2 * layer.output_elems() * layer.act_bits as u64
+    } else {
+        0
+    };
+
+    // Spatial-reuse port traffic per cycle (Table I): psum ports read+write
+    // a 30-bit word; activation ports deliver N-bit words; weight ports
+    // deliver w_Q-bit words.
+    let (psum_p, act_p, wt_p) = bram_ports(ctx.dims, ctx.n, layer.wq.max(ctx.k));
+    let bram_bits_per_cycle = psum_p * 2 * crate::pe::cost::PSUM_BITS as u64
+        + act_p * ctx.n as u64
+        + wt_p * layer.wq as u64;
+
+    LayerSchedule {
+        name: layer.name.clone(),
+        compute_cycles,
+        cycles,
+        ideal_cycles,
+        utilization,
+        tiles: (th, tw, td),
+        bram_bits_per_cycle,
+        ddr_bits: weight_bits + spill_bits,
+        bandwidth_limited,
+        macs: layer.macs(),
+        wq: layer.wq,
+    }
+}
+
+/// Allocation-free fast path for the array-DSE inner loop: just the Eq-3
+/// cycle count and ideal cycles of one layer. Must agree exactly with
+/// [`schedule_layer`] (property-tested below).
+#[inline]
+pub fn cycles_only(layer: &Layer, dims: Dims, k: u32, n: u32) -> (u64, f64) {
+    let f = parallel_words(n, layer.wq, k) as u64;
+    let th = (layer.ih as u64).div_ceil(dims.h as u64);
+    let tw = (layer.iw as u64).div_ceil(dims.w as u64 * f);
+    let td = (layer.od as u64).div_ceil(dims.d as u64);
+    let kernel_steps = (layer.k as f64 / layer.s as f64).powi(2);
+    let compute_cycles =
+        (((th * tw * td * layer.ih as u64) as f64) * kernel_steps).ceil() as u64;
+    let n_pe_eff = dims.n_pe() as f64 * f as f64;
+    let ideal = (layer.ih as f64).powi(2) * layer.iw as f64 * layer.od as f64 * kernel_steps
+        / n_pe_eff;
+    (compute_cycles.max(1), ideal)
+}
+
+/// Computational intensity of a layer in Ops per DDR byte — the roofline
+/// x-axis.
+pub fn computational_intensity(layer: &Layer) -> f64 {
+    let bytes = layer.weight_bits_total() as f64 / 8.0;
+    if bytes == 0.0 {
+        return f64::INFINITY;
+    }
+    layer.ops() as f64 / bytes
+}
+
+/// Attainable GOps/s under the roofline model: `min(peak, BW · intensity)`.
+pub fn roofline_gops(peak_gops: f64, bw_bytes_per_s: f64, intensity: f64) -> f64 {
+    peak_gops.min(bw_bytes_per_s * intensity / 1e9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::Layer;
+    use crate::util::prop::{check, forall};
+    use crate::util::rng::Rng;
+
+    fn ctx(dims: Dims, k: u32) -> ScheduleCtx {
+        ScheduleCtx {
+            dims,
+            k,
+            n: 8,
+            fmax_mhz: 124.0,
+            ddr_bw_bytes_per_s: 12.8e9,
+            act_buffer_bits: 64_000_000,
+        }
+    }
+
+    #[test]
+    fn perfect_fit_reaches_full_utilization() {
+        // Layer whose dims divide the array exactly (and width=I_H serial).
+        let l = Layer::conv("fit", 14, 32, 64, 1, 1);
+        let c = ctx(Dims::new(14, 4, 64), 8); // f = 1 at wq=8
+        let mut layer = l;
+        layer.wq = 8;
+        let s = schedule_layer(&layer, &c);
+        assert!(
+            (s.utilization - 1.0).abs() < 1e-9,
+            "utilization={}",
+            s.utilization
+        );
+        assert_eq!(s.tiles, (1, 8, 1));
+    }
+
+    #[test]
+    fn eq3_matches_hand_computation() {
+        // ResNet-18 layer1 conv: IH=56, IW=64, OD=64, K=3, S=1 on the
+        // paper's k=1 array (7,3,32) at wq=8 (f=1):
+        // P_actual = ceil(56/7)*ceil(64/3)*ceil(64/32)*56*9 = 8*22*2*504.
+        let mut l = Layer::conv("l1", 56, 64, 64, 3, 1);
+        l.wq = 8;
+        let s = schedule_layer(&l, &ctx(Dims::new(7, 3, 32), 1));
+        assert_eq!(s.compute_cycles, 8 * 22 * 2 * 56 * 9);
+        // ideal = IH²·IW·OD·(K/S)² / (672 · 1)
+        let want_ideal = 56f64.powi(2) * 64.0 * 64.0 * 9.0 / 672.0;
+        assert!((s.ideal_cycles - want_ideal).abs() < 1e-6);
+    }
+
+    #[test]
+    fn wordlength_reduction_cuts_cycles() {
+        // Proportionate throughput: at wq=1 on k=1, the IW tiling shrinks 8x.
+        let mut l = Layer::conv("x", 56, 256, 128, 3, 1);
+        let c = ctx(Dims::new(7, 4, 32), 1);
+        l.wq = 8;
+        let s8 = schedule_layer(&l, &c);
+        l.wq = 1;
+        let s1 = schedule_layer(&l, &c);
+        assert!(
+            s8.compute_cycles >= 7 * s1.compute_cycles,
+            "8b {} vs 1b {}",
+            s8.compute_cycles,
+            s1.compute_cycles
+        );
+    }
+
+    #[test]
+    fn wq_below_k_gets_no_speedup() {
+        let mut l = Layer::conv("x", 28, 128, 128, 3, 1);
+        let c = ctx(Dims::new(7, 4, 32), 4);
+        l.wq = 4;
+        let s4 = schedule_layer(&l, &c);
+        l.wq = 1;
+        let s1 = schedule_layer(&l, &c);
+        assert_eq!(s4.compute_cycles, s1.compute_cycles);
+    }
+
+    #[test]
+    fn prop_utilization_in_unit_interval() {
+        forall(800, |rng: &mut Rng| {
+            let l = Layer::conv(
+                "r",
+                [7u32, 14, 28, 56, 112][rng.range(0, 5)],
+                1 << rng.range(0, 9),
+                1 << rng.range(0, 9),
+                *rng.choose(&[1u32, 3, 5, 7]),
+                *rng.choose(&[1u32, 2]),
+            );
+            let mut l = l;
+            l.wq = *rng.choose(&[1u32, 2, 4, 8]);
+            let dims = Dims::new(
+                rng.range(1, 16) as u32,
+                rng.range(1, 16) as u32,
+                rng.range(1, 96) as u32,
+            );
+            let s = schedule_layer(&l, &ctx(dims, *rng.choose(&[1u32, 2, 4])));
+            check(
+                s.utilization > 0.0 && s.utilization <= 1.0 + 1e-9,
+                &format!("U={} for {dims}", s.utilization),
+            )?;
+            check(s.cycles >= s.compute_cycles, "roofline can only stretch")?;
+            check(
+                s.ideal_cycles <= s.compute_cycles as f64 + 1e-9,
+                "ideal <= actual",
+            )
+        });
+    }
+
+    #[test]
+    fn prop_tiles_cover_layer() {
+        // Tiling must cover all (height, channel, output) work: tiles ≥
+        // dimension / array-span (conservation of work).
+        forall(500, |rng: &mut Rng| {
+            let mut l = Layer::conv(
+                "c",
+                [14u32, 28, 56][rng.range(0, 3)],
+                1 << rng.range(2, 9),
+                1 << rng.range(2, 9),
+                3,
+                1,
+            );
+            l.wq = *rng.choose(&[1u32, 2, 4, 8]);
+            let dims = Dims::new(
+                rng.range(1, 10) as u32,
+                rng.range(1, 10) as u32,
+                rng.range(1, 80) as u32,
+            );
+            let c = ctx(dims, 1);
+            let s = schedule_layer(&l, &c);
+            let f = parallel_words(8, l.wq, 1) as u64;
+            check(
+                s.tiles.0 * dims.h as u64 >= l.ih as u64
+                    && s.tiles.1 * dims.w as u64 * f >= l.iw as u64
+                    && s.tiles.2 * dims.d as u64 >= l.od as u64,
+                "tiles must cover the layer",
+            )
+        });
+    }
+
+    #[test]
+    fn bandwidth_limit_engages_on_fat_layers() {
+        // An FC-like 1x1 conv with enormous weights on a tiny array at high
+        // clock must be bandwidth-bound.
+        let mut l = Layer::conv("fat", 7, 2048, 2048, 1, 1);
+        l.wq = 8;
+        let mut c = ctx(Dims::new(7, 8, 64), 1);
+        c.ddr_bw_bytes_per_s = 0.5e9; // slow link
+        let s = schedule_layer(&l, &c);
+        assert!(s.bandwidth_limited);
+        assert!(s.cycles > s.compute_cycles);
+    }
+
+    #[test]
+    fn spill_detection() {
+        let mut l = Layer::conv("big", 112, 64, 64, 3, 1);
+        l.wq = 8;
+        let mut c = ctx(Dims::new(7, 4, 32), 1);
+        c.act_buffer_bits = 1_000; // absurdly small buffer
+        let s = schedule_layer(&l, &c);
+        assert!(s.ddr_bits > l.weight_bits_total());
+    }
+
+    #[test]
+    fn roofline_helpers() {
+        assert_eq!(roofline_gops(100.0, 10e9, 1000.0), 100.0);
+        assert!((roofline_gops(100.0, 10e9, 1.0) - 10.0).abs() < 1e-9);
+        let l = Layer::conv("i", 56, 64, 64, 3, 1);
+        assert!(computational_intensity(&l) > 1.0);
+    }
+}

@@ -1,0 +1,152 @@
+//! The holistic DSE driver — the paper's Fig 2 flowchart end to end.
+//!
+//! Phases:
+//! 1. **PE DSE** (blue box): rank the PE design space at the CNN's
+//!    MAC-weighted average word-length; keep the best family per slice `k`
+//!    and derive the max-feasible-PE threshold from the LUT budget.
+//! 2. **PE-array DSE** (red box): exhaustive (H, W, D) search per `k` under
+//!    the hardware constraints, maximizing frames/s (Ops/resources with the
+//!    Eq-3 utilization in the loop).
+//! 3. **Dataflow / system evaluation** (green box): full simulation with
+//!    roofline bandwidth feedback; pick the best `k` for the CNN.
+//!
+//! "To reach highest throughput for each uniquely quantized CNN, the DSE …
+//! has to be repeated … As a result, a new FPGA accelerator design is
+//! created" — [`explore`] is exactly that per-CNN repetition.
+
+use crate::array::search::{search_dims, ArrayChoice, SearchParams};
+use crate::cnn::{workload, Cnn};
+use crate::config::RunConfig;
+use crate::pe::dse::{best_for, evaluate, PeEval};
+use crate::pe::PeDesign;
+use crate::sim::{simulate, AcceleratorDesign, SimResult};
+
+/// Result of the holistic DSE for one (CNN, k) pair.
+#[derive(Clone, Debug)]
+pub struct DseOutcome {
+    pub k: u32,
+    pub pe_eval: PeEval,
+    /// Max feasible PE count from the LUT budget alone (the §IV-B
+    /// "threshold of PEs bound for the design space").
+    pub max_pe_threshold: u64,
+    pub array: ArrayChoice,
+    pub sim: SimResult,
+}
+
+/// Result of the DSE across all candidate slices.
+#[derive(Clone, Debug)]
+pub struct DseReport {
+    pub cnn_name: String,
+    pub avg_wq: f64,
+    pub per_k: Vec<DseOutcome>,
+    /// Index into `per_k` of the frames/s winner.
+    pub best: usize,
+}
+
+impl DseReport {
+    pub fn best_outcome(&self) -> &DseOutcome {
+        &self.per_k[self.best]
+    }
+}
+
+/// Run the full DSE for one quantized CNN at a fixed operand slice `k`.
+pub fn explore_k(cnn: &Cnn, cfg: &RunConfig, k: u32) -> DseOutcome {
+    let pe = PeDesign::bp_st_1d(k);
+    let pe_eval = evaluate(&pe, workload::mac_weighted_avg_wq(cnn).round() as u32);
+    let max_pe_threshold =
+        (cfg.lut_budget() as f64 / crate::pe::cost::lut_cost(&pe)).floor() as u64;
+    let params = SearchParams::from_config(cfg);
+    let array = search_dims(cnn, &pe, &params);
+    let design = AcceleratorDesign::new(pe, array.dims, cnn, cfg);
+    let sim = simulate(cnn, &design);
+    DseOutcome {
+        k,
+        pe_eval,
+        max_pe_threshold,
+        array,
+        sim,
+    }
+}
+
+/// Run the full DSE over every candidate slice and pick the fps winner.
+pub fn explore(cnn: &Cnn, cfg: &RunConfig) -> DseReport {
+    assert!(!cfg.slices.is_empty());
+    let per_k: Vec<DseOutcome> = cfg.slices.iter().map(|&k| explore_k(cnn, cfg, k)).collect();
+    let best = per_k
+        .iter()
+        .enumerate()
+        .max_by(|(_, a), (_, b)| a.sim.fps.partial_cmp(&b.sim.fps).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    DseReport {
+        cnn_name: cnn.name.clone(),
+        avg_wq: workload::mac_weighted_avg_wq(cnn),
+        per_k,
+        best,
+    }
+}
+
+/// Sanity gate used by `main` and tests: does the PE-level DSE still pick
+/// BP-ST-1D for this CNN's average word-length? (It must, per Fig 6.)
+pub fn pe_winner_for(cnn: &Cnn, cfg: &RunConfig) -> PeEval {
+    let avg = workload::mac_weighted_avg_wq(cnn).round().max(1.0) as u32;
+    best_for(&cfg.slices, avg.min(8))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::resnet;
+    use crate::pe::{Consolidation, InputMode, Scaling};
+
+    #[test]
+    fn full_dse_resnet18_wq2() {
+        let cnn = resnet::resnet18().with_uniform_wq(2);
+        let cfg = RunConfig::default();
+        let report = explore(&cnn, &cfg);
+        assert_eq!(report.per_k.len(), 3);
+        let best = report.best_outcome();
+        // Paper Fig 9 / Table IV: for a w_Q=2 CNN the k=1 or k=2 design wins
+        // throughput (k=4 wastes slices).
+        assert!(best.k <= 2, "best k={} for a 2-bit CNN", best.k);
+        assert!(best.sim.fps > 100.0, "fps={}", best.sim.fps);
+    }
+
+    #[test]
+    fn pe_winner_is_bp_st_1d() {
+        let cnn = resnet::resnet18().with_uniform_wq(2);
+        let w = pe_winner_for(&cnn, &RunConfig::default());
+        assert_eq!(w.design.mode, InputMode::BitParallel);
+        assert_eq!(w.design.consolidation, Consolidation::SumTogether);
+        assert_eq!(w.design.scaling, Scaling::OneD);
+    }
+
+    #[test]
+    fn threshold_bounds_array() {
+        let cnn = resnet::resnet18().with_uniform_wq(8);
+        let cfg = RunConfig::default();
+        for out in explore(&cnn, &cfg).per_k {
+            assert!(
+                out.array.n_pe <= out.max_pe_threshold,
+                "k={}: array {} exceeds threshold {}",
+                out.k,
+                out.array.n_pe,
+                out.max_pe_threshold
+            );
+        }
+    }
+
+    #[test]
+    fn deeper_cnn_same_methodology() {
+        // The DSE must run unchanged on ResNet-50 (bottleneck blocks).
+        let cnn = resnet::resnet50().with_uniform_wq(2);
+        let cfg = RunConfig {
+            slices: vec![2],
+            ..RunConfig::default()
+        };
+        let report = explore(&cnn, &cfg);
+        let best = report.best_outcome();
+        assert!(best.sim.fps > 10.0);
+        assert!(best.sim.gops > 100.0);
+    }
+}

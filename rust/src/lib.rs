@@ -1,0 +1,33 @@
+//! `mpcnn` — Mixed-Precision CNN Accelerator DSE, Simulator & Serving Stack.
+//!
+//! Reproduction of Latotzke, Ciesielski & Gemmeke, *"Design of
+//! High-Throughput Mixed-Precision CNN Accelerators on FPGA"*, FPL 2022.
+//!
+//! # Architecture (three layers)
+//!
+//! - **L1** (`python/compile/kernels/`): the bit-sliced BP-ST-1D MAC datapath
+//!   as a Pallas kernel, AOT-lowered to HLO.
+//! - **L2** (`python/compile/model.py`): quantized ResNets in JAX, trained
+//!   with LSQ QAT, exported to `artifacts/*.hlo.txt`.
+//! - **L3** (this crate): the paper's design-space exploration
+//!   ([`pe`], [`array`], [`dataflow`], [`dse`]), the FPGA accelerator
+//!   simulator ([`sim`], [`energy`]), and a batched inference server
+//!   ([`coordinator`]) executing the AOT artifacts via PJRT ([`runtime`]).
+//!
+//! Start at [`dse`] for the headline methodology, or [`sim`] for the
+//! system-level model behind Table IV / Fig 9.
+
+pub mod array;
+pub mod baselines;
+pub mod cnn;
+pub mod config;
+pub mod coordinator;
+pub mod dataflow;
+pub mod dse;
+pub mod energy;
+pub mod pe;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;

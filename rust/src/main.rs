@@ -1,0 +1,369 @@
+//! `mpcnn` CLI — leader entrypoint for the DSE, the simulator, the table
+//! reproduction harness, and the PJRT serving path.
+
+use anyhow::{anyhow, bail, Result};
+use mpcnn::cnn::resnet;
+use mpcnn::config::RunConfig;
+use mpcnn::coordinator::{BatcherConfig, Coordinator, EngineBackend};
+use mpcnn::report::{render_checks, tables};
+use mpcnn::runtime::{artifacts_dir, Engine, TestSet};
+use mpcnn::util::cli::Args;
+use mpcnn::util::rng::Rng;
+use mpcnn::{baselines, dse, sim};
+use std::time::Duration;
+
+const USAGE: &str = "\
+mpcnn — mixed-precision CNN accelerator DSE + simulator + PJRT serving (FPL'22 reproduction)
+
+USAGE: mpcnn <subcommand> [options]
+
+SUBCOMMANDS
+  dse        --cnn resnet18 [--wq 2 | --channelwise 1:0.8,8:0.2]
+             [--k 1,2,4] [--config file]
+             run the holistic DSE and print the chosen design per slice
+  simulate   --cnn resnet18 --wq 2 --k 2 [--dims 7x5x37] [--layers]
+             simulate one accelerator design (Table IV style column)
+  tables     [--which fig3|fig6|fig7|fig8|fig9|table2|table3|table4|table5|all]
+             regenerate the paper's tables/figures with shape checks
+  baseline   --which dsp|fixed8|bitfusion --cnn resnet18 --wq 2
+             simulate a comparison design
+  pe         [--wq 1,2,4,8] rank the PE design space (Fig 6 data)
+  serve      [--wq 4] [--batch 8] [--requests 256] [--artifacts DIR]
+             run the batched PJRT serving demo over the exported testset
+  classify   [--wq 4] [--index 0] classify one testset image via PJRT
+  info       print workload statistics for the built-in CNNs
+";
+
+fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn load_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)?;
+            RunConfig::from_kv(&text).map_err(|e| anyhow!("{e}"))?
+        }
+        None => RunConfig::default(),
+    };
+    if args.get("k").is_some() {
+        cfg.slices = args.get_list_u32("k", &[1, 2, 4]);
+    }
+    Ok(cfg)
+}
+
+fn cnn_for(args: &Args, cfg: &RunConfig) -> Result<mpcnn::cnn::Cnn> {
+    let name = args.get_or("cnn", "resnet18");
+    let base = resnet::by_name(&name).ok_or_else(|| anyhow!("unknown CNN '{name}'"))?;
+    // `--channelwise 1:0.8,8:0.2` — per-channel word-length groups
+    if let Some(spec) = args.get("channelwise") {
+        let mut groups = Vec::new();
+        for part in spec.split(',') {
+            let (w, f) = part
+                .split_once(':')
+                .ok_or_else(|| anyhow!("--channelwise expects wq:frac,... (got '{part}')"))?;
+            groups.push(mpcnn::cnn::ChannelGroup {
+                wq: w.trim().parse()?,
+                fraction: f.trim().parse()?,
+            });
+        }
+        return Ok(mpcnn::cnn::apply_channelwise(&base, &groups));
+    }
+    let wq = args.get_u64("wq", 8) as u32;
+    if !cfg.weight_bits.contains(&wq) && wq != 8 {
+        bail!("wq={wq} not in configured weight_bits {:?}", cfg.weight_bits);
+    }
+    Ok(base.with_uniform_wq(wq))
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_str() {
+        "dse" => cmd_dse(args),
+        "simulate" => cmd_simulate(args),
+        "tables" => cmd_tables(args),
+        "baseline" => cmd_baseline(args),
+        "pe" => cmd_pe(args),
+        "serve" => cmd_serve(args),
+        "classify" => cmd_classify(args),
+        "info" => cmd_info(),
+        "" | "help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}'\n{USAGE}"),
+    }
+}
+
+fn cmd_dse(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let cnn = cnn_for(args, &cfg)?;
+    println!(
+        "holistic DSE for {} (avg w_Q = {:.2}) on {}\n",
+        cnn.name,
+        mpcnn::cnn::workload::mac_weighted_avg_wq(&cnn),
+        cfg.fpga.name
+    );
+    let report = dse::explore(&cnn, &cfg);
+    let mut t = mpcnn::util::table::Table::new("DSE outcomes per operand slice").headers(&[
+        "k", "array HxWxD", "N_PE", "max-PE thr", "kLUT", "BRAM", "U avg", "fps", "GOps/s",
+        "mJ/frame", "GOps/s/W",
+    ]);
+    for o in &report.per_k {
+        t.row(vec![
+            o.k.to_string(),
+            o.array.dims.to_string(),
+            o.array.n_pe.to_string(),
+            o.max_pe_threshold.to_string(),
+            format!("{:.1}", o.sim.kluts),
+            o.sim.brams.to_string(),
+            format!("{:.3}", o.array.avg_utilization),
+            format!("{:.1}", o.sim.fps),
+            format!("{:.1}", o.sim.gops),
+            format!("{:.2}", o.sim.e_total_mj()),
+            format!("{:.1}", o.sim.gops_per_w()),
+        ]);
+    }
+    print!("{}", t.render());
+    let best = report.best_outcome();
+    println!(
+        "\nchosen design: BP-ST-1D k={} @ {} ({} PEs), {:.1} frames/s",
+        best.k, best.array.dims, best.array.n_pe, best.sim.fps
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let cnn = cnn_for(args, &cfg)?;
+    let k = args.get_u64("k", 2) as u32;
+    let design = match args.get("dims") {
+        Some(d) => {
+            let parts: Vec<u32> = d.split('x').filter_map(|p| p.parse().ok()).collect();
+            if parts.len() != 3 {
+                bail!("--dims must be HxWxD");
+            }
+            sim::AcceleratorDesign::new(
+                mpcnn::pe::PeDesign::bp_st_1d(k),
+                mpcnn::array::Dims::new(parts[0], parts[1], parts[2]),
+                &cnn,
+                &cfg,
+            )
+        }
+        None => {
+            let out = dse::explore_k(&cnn, &cfg, k);
+            sim::AcceleratorDesign::new(
+                mpcnn::pe::PeDesign::bp_st_1d(k),
+                out.array.dims,
+                &cnn,
+                &cfg,
+            )
+        }
+    };
+    let r = sim::simulate(&cnn, &design);
+    if args.has_flag("layers") {
+        print!("{}", sim::trace::layer_table(&r).render());
+    }
+    println!("{}", sim::trace::summary_json(&r).to_string_pretty());
+    Ok(())
+}
+
+fn cmd_tables(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let which = args.get_or("which", "all");
+    let mut all_checks = Vec::new();
+    let mut emit = |name: &str, result: (mpcnn::util::table::Table, Vec<mpcnn::report::ShapeCheck>)| {
+        let (t, checks) = result;
+        println!("{}", t.render());
+        print!("{}", render_checks(&checks));
+        println!();
+        all_checks.extend(checks);
+        let _ = name;
+    };
+    let want = |n: &str| which == "all" || which == n;
+    if want("fig3") {
+        emit("fig3", tables::fig3());
+    }
+    if want("fig6") {
+        emit("fig6", tables::fig6(&cfg));
+    }
+    if want("fig7") {
+        emit("fig7", tables::fig7(&cfg));
+    }
+    if want("fig8") {
+        emit("fig8", tables::fig8());
+    }
+    if want("table2") {
+        emit("table2", tables::table2(&cfg));
+    }
+    if want("table3") {
+        emit("table3", tables::table3());
+    }
+    if want("table4") {
+        emit("table4", tables::table4(&cfg));
+    }
+    if want("table5") {
+        emit("table5", tables::table5(&cfg));
+    }
+    if want("fig9") {
+        emit("fig9", tables::fig9(&cfg));
+    }
+    let failed = all_checks.iter().filter(|c| !c.pass).count();
+    println!(
+        "== overall: {}/{} shape checks passed ==",
+        all_checks.len() - failed,
+        all_checks.len()
+    );
+    if failed > 0 {
+        bail!("{failed} shape checks failed");
+    }
+    Ok(())
+}
+
+fn cmd_baseline(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let cnn = cnn_for(args, &cfg)?;
+    let which = args.get_or("which", "dsp");
+    let (tag, r) = baselines::run_baseline(&which, &cnn, &cfg)
+        .ok_or_else(|| anyhow!("unknown baseline '{which}' (dsp|fixed8|bitfusion)"))?;
+    println!("baseline '{which}' = {tag}");
+    println!("{}", sim::trace::summary_json(&r).to_string_pretty());
+    Ok(())
+}
+
+fn cmd_pe(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let (t, checks) = tables::fig6(&cfg);
+    println!("{}", t.render());
+    print!("{}", render_checks(&checks));
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(artifacts_dir);
+    let wq = args.get_u64("wq", 4) as u32;
+    let n_requests = args.get_usize("requests", 256);
+    let manifest = mpcnn::runtime::Manifest::load(&dir)?;
+    let ts_path = manifest
+        .testset
+        .clone()
+        .ok_or_else(|| anyhow!("manifest has no testset"))?;
+    let testset = TestSet::load(dir.join(ts_path))?;
+
+    // Attach the simulated-FPGA clock: what would this stream cost on the
+    // DSE-chosen ResNet-8-class design?
+    let cfg = RunConfig::default();
+    let small = resnet::resnet_small(1, 10).with_uniform_wq(wq);
+    let fpga_fps = dse::explore_k(&small, &cfg, wq.clamp(1, 4)).sim.fps;
+
+    let dir2 = dir.clone();
+    let coordinator = Coordinator::start(
+        move || {
+            let engine = Engine::load_all(&dir2)?;
+            println!(
+                "engine up on {} with models: {:?}",
+                engine.platform(),
+                engine.loaded_names()
+            );
+            Ok(Box::new(EngineBackend::new(engine, wq)?) as Box<dyn mpcnn::coordinator::InferenceBackend>)
+        },
+        BatcherConfig {
+            max_batch: args.get_usize("batch", 8),
+            max_wait: Duration::from_millis(2),
+            queue_capacity: 256,
+            fpga_fps_sim: fpga_fps,
+        },
+    )?;
+    let client = coordinator.client();
+    let mut rng = Rng::new(42);
+    let mut correct = 0usize;
+    let mut done = 0usize;
+    let mut pending = Vec::new();
+    let mut truth = Vec::new();
+    for i in 0..n_requests {
+        let idx = rng.range(0, testset.n);
+        let img = testset.image(idx).to_vec();
+        truth.push(testset.labels[idx] as usize);
+        pending.push(client.submit(img).map_err(|e| anyhow!("{e}"))?);
+        // drain in waves of 32 to keep the queue busy but bounded
+        if pending.len() >= 32 || i + 1 == n_requests {
+            for (p, t) in pending.drain(..).zip(truth.drain(..)) {
+                let r = p.wait().map_err(|e| anyhow!("{e}"))?;
+                if r.class == t {
+                    correct += 1;
+                }
+                done += 1;
+            }
+        }
+    }
+    let m = coordinator.metrics();
+    println!("{}", m.summary());
+    println!(
+        "accuracy: {}/{} = {:.2}% (wq={wq})",
+        correct,
+        done,
+        100.0 * correct as f64 / done as f64
+    );
+    println!(
+        "simulated FPGA design for this model: {:.1} fps (virtual clock above)",
+        fpga_fps
+    );
+    Ok(())
+}
+
+fn cmd_classify(args: &Args) -> Result<()> {
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(artifacts_dir);
+    let wq = args.get_u64("wq", 4) as u32;
+    let index = args.get_usize("index", 0);
+    let engine = Engine::load_all(&dir)?;
+    let ts_path = engine
+        .manifest
+        .testset
+        .clone()
+        .ok_or_else(|| anyhow!("manifest has no testset"))?;
+    let testset = TestSet::load(dir.join(ts_path))?;
+    if index >= testset.n {
+        bail!("index {index} out of range (testset has {} images)", testset.n);
+    }
+    let model = engine
+        .model_for(wq, 1)
+        .ok_or_else(|| anyhow!("no batch-1 model for wq={wq}"))?;
+    let classes = model.classify(testset.image(index))?;
+    println!(
+        "image {index}: predicted class {} (label {})",
+        classes[0], testset.labels[index]
+    );
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let mut t = mpcnn::util::table::Table::new("built-in CNNs").headers(&[
+        "name", "input", "layers", "GMACs (conv)", "params (M)", "peak act Mb",
+    ]);
+    for name in ["resnet8", "resnet20", "resnet18", "resnet34", "resnet50", "resnet101", "resnet152"] {
+        let c = resnet::by_name(name).unwrap();
+        t.row(vec![
+            c.name.clone(),
+            format!("{0}x{0}x{1}", c.input_hw, c.input_channels),
+            c.layers.len().to_string(),
+            format!("{:.2}", c.conv_macs() as f64 / 1e9),
+            format!("{:.2}", c.total_params() as f64 / 1e6),
+            format!("{:.2}", c.peak_activation_bits() as f64 / 1e6),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,258 @@
+//! Precision-scalable processing-element (PE) design space (§III-A).
+//!
+//! A PE is a MAC unit built from Partial Product Generators (PPGs) plus
+//! consolidation logic. The four design dimensions of the paper:
+//!
+//! 1. **Input processing**: Bit-Serial (BS, k bits/cycle in time) vs
+//!    Bit-Parallel (BP, the N-bit bus split into N/k parallel slices).
+//! 2. **Operand slice** `k` ∈ {1, 2, 4} bit (8 = conventional fixed PE).
+//! 3. **Scaling**: 1D (only weights sliced, PPG is N×k) vs 2D (both operands
+//!    sliced, PPG is k×k — BitFusion/BitBlade style [28][29]).
+//! 4. **Consolidation**: Sum-Together (ST, adder tree inside the PE) vs
+//!    Sum-Apart (SA, per-PPG accumulators, combined outside).
+//!
+//! The paper's result (Fig 6): **BP-ST-1D** maximizes bits/s/LUT for
+//! asymmetric word-lengths; `pe::dse` reproduces that conclusion from the
+//! cost models in `pe::cost`, and `pe::golden` proves functional
+//! equivalence of the sliced datapath with a plain MAC.
+
+pub mod cost;
+pub mod dse;
+pub mod golden;
+
+use std::fmt;
+
+/// Input processing style.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum InputMode {
+    BitSerial,
+    BitParallel,
+}
+
+/// Partial-sum consolidation style.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Consolidation {
+    SumApart,
+    SumTogether,
+}
+
+/// Operand scaling: slice one operand (1D) or both (2D).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Scaling {
+    OneD,
+    TwoD,
+}
+
+/// A point in the PE design space.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PeDesign {
+    pub mode: InputMode,
+    pub consolidation: Consolidation,
+    pub scaling: Scaling,
+    /// Operand slice in bits (BS: bits/cycle).
+    pub k: u32,
+    /// Activation word-length N (the paper fixes 8).
+    pub n: u32,
+}
+
+impl PeDesign {
+    pub fn new(mode: InputMode, consolidation: Consolidation, scaling: Scaling, k: u32) -> Self {
+        assert!(k >= 1 && k <= 8);
+        PeDesign {
+            mode,
+            consolidation,
+            scaling,
+            k,
+            n: 8,
+        }
+    }
+
+    /// The paper's chosen design: Bit-Parallel, Sum-Together, 1D-scaled.
+    pub fn bp_st_1d(k: u32) -> Self {
+        PeDesign::new(
+            InputMode::BitParallel,
+            Consolidation::SumTogether,
+            Scaling::OneD,
+            k,
+        )
+    }
+
+    /// Conventional fixed-word-length PE (Fig 1a): one N×N multiplier.
+    pub fn conventional() -> Self {
+        PeDesign::new(
+            InputMode::BitParallel,
+            Consolidation::SumTogether,
+            Scaling::OneD,
+            8,
+        )
+    }
+
+    /// Number of PPGs inside the PE.
+    pub fn n_ppgs(&self) -> u32 {
+        match self.mode {
+            // BS processes slices in time: one PPG.
+            InputMode::BitSerial => 1,
+            InputMode::BitParallel => match self.scaling {
+                Scaling::OneD => self.n / self.k,
+                Scaling::TwoD => (self.n / self.k) * (self.n / self.k),
+            },
+        }
+    }
+
+    /// PPG operand widths (activation side, weight side).
+    pub fn ppg_shape(&self) -> (u32, u32) {
+        match self.scaling {
+            Scaling::OneD => (self.n, self.k),
+            Scaling::TwoD => (self.k, self.k),
+        }
+    }
+
+    /// Weight slices consumed per MAC at weight word-length `wq`.
+    pub fn weight_slices(&self, wq: u32) -> u32 {
+        wq.div_ceil(self.k).max(1)
+    }
+
+    /// MAC throughput of one PE in MACs/cycle at weight word-length `wq`
+    /// (activations at the full N bits).
+    ///
+    /// BP-1D: `N/k` PPGs, each MAC occupies `ceil(wq/k)` of them →
+    /// `(N/k)/ceil(wq/k)`; at `wq < k` the PPG is padded (one weight per
+    /// PPG). BP-2D additionally needs `N/k` slices for the (unsliced-need)
+    /// activation. BS designs take the slice count in cycles instead.
+    pub fn macs_per_cycle(&self, wq: u32) -> f64 {
+        let w_slices = self.weight_slices(wq) as f64;
+        let a_slices = match self.scaling {
+            Scaling::OneD => 1.0,
+            Scaling::TwoD => (self.n / self.k) as f64,
+        };
+        match self.mode {
+            InputMode::BitParallel => self.n_ppgs() as f64 / (w_slices * a_slices),
+            InputMode::BitSerial => 1.0 / (w_slices * a_slices),
+        }
+    }
+
+    /// Short identifier, e.g. "BP-ST-1D k=2".
+    pub fn tag(&self) -> String {
+        format!("{self}")
+    }
+}
+
+impl fmt::Display for PeDesign {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let m = match self.mode {
+            InputMode::BitSerial => "BS",
+            InputMode::BitParallel => "BP",
+        };
+        let c = match self.consolidation {
+            Consolidation::SumApart => "SA",
+            Consolidation::SumTogether => "ST",
+        };
+        let s = match self.scaling {
+            Scaling::OneD => "1D",
+            Scaling::TwoD => "2D",
+        };
+        write!(f, "{m}-{c}-{s} k={}", self.k)
+    }
+}
+
+/// Enumerate the full design space over the given slices (§III-A: powers of
+/// two, 1..4; 2D designs require k to divide N).
+pub fn enumerate_designs(slices: &[u32]) -> Vec<PeDesign> {
+    let mut out = Vec::new();
+    for &k in slices {
+        for mode in [InputMode::BitParallel, InputMode::BitSerial] {
+            for cons in [Consolidation::SumTogether, Consolidation::SumApart] {
+                for scal in [Scaling::OneD, Scaling::TwoD] {
+                    if 8 % k != 0 {
+                        continue;
+                    }
+                    out.push(PeDesign::new(mode, cons, scal, k));
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ppg_counts() {
+        assert_eq!(PeDesign::bp_st_1d(1).n_ppgs(), 8);
+        assert_eq!(PeDesign::bp_st_1d(2).n_ppgs(), 4);
+        assert_eq!(PeDesign::bp_st_1d(4).n_ppgs(), 2);
+        let bf = PeDesign::new(
+            InputMode::BitParallel,
+            Consolidation::SumTogether,
+            Scaling::TwoD,
+            2,
+        );
+        assert_eq!(bf.n_ppgs(), 16, "BitFusion-style 2x2 PPG array");
+    }
+
+    #[test]
+    fn throughput_proportionate_to_wordlength() {
+        // The paper's first contribution: proportionate throughput increase
+        // with word-length reduction (for wq >= k).
+        let pe = PeDesign::bp_st_1d(1);
+        assert_eq!(pe.macs_per_cycle(8), 1.0);
+        assert_eq!(pe.macs_per_cycle(4), 2.0);
+        assert_eq!(pe.macs_per_cycle(2), 4.0);
+        assert_eq!(pe.macs_per_cycle(1), 8.0);
+    }
+
+    #[test]
+    fn underutilization_below_k() {
+        // wq < k: PPG idles, no further speedup.
+        let pe = PeDesign::bp_st_1d(4);
+        assert_eq!(pe.macs_per_cycle(4), 2.0);
+        assert_eq!(pe.macs_per_cycle(2), 2.0);
+        assert_eq!(pe.macs_per_cycle(1), 2.0);
+    }
+
+    #[test]
+    fn bs_takes_cycles() {
+        let bs = PeDesign::new(
+            InputMode::BitSerial,
+            Consolidation::SumApart,
+            Scaling::OneD,
+            1,
+        );
+        assert_eq!(bs.macs_per_cycle(8), 1.0 / 8.0);
+        assert_eq!(bs.macs_per_cycle(1), 1.0);
+    }
+
+    #[test]
+    fn bp_2d_matches_1d_throughput_at_fixed_acts() {
+        // With activations pinned to 8 bit, 2D scaling buys no throughput —
+        // the reason 1D wins Fig 6.
+        let d1 = PeDesign::new(
+            InputMode::BitParallel,
+            Consolidation::SumTogether,
+            Scaling::OneD,
+            2,
+        );
+        let d2 = PeDesign::new(
+            InputMode::BitParallel,
+            Consolidation::SumTogether,
+            Scaling::TwoD,
+            2,
+        );
+        for wq in [1u32, 2, 4, 8] {
+            assert_eq!(d1.macs_per_cycle(wq), d2.macs_per_cycle(wq));
+        }
+    }
+
+    #[test]
+    fn enumeration_size() {
+        // 3 slices x 2 modes x 2 consolidations x 2 scalings = 24.
+        assert_eq!(enumerate_designs(&[1, 2, 4]).len(), 24);
+    }
+
+    #[test]
+    fn display_tags() {
+        assert_eq!(PeDesign::bp_st_1d(2).tag(), "BP-ST-1D k=2");
+    }
+}

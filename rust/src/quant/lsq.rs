@@ -1,0 +1,234 @@
+//! LSQ quantizer (paper Eq 5; Esser et al. [10]).
+//!
+//! `v_int = round(clamp(v_FP / γ, Q_n, Q_p))`, `v_quant = v_int · γ`.
+//! Round-to-nearest with ties away from zero matches `jnp.round`'s behaviour
+//! closely enough for our integer ranges (ties occur only at .5 boundaries,
+//! which QAT never lands on exactly after division by a learned γ; the python
+//! test suite cross-checks on a shared vector set avoiding exact ties).
+
+/// Static description of a quantizer: bit-width and signedness.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QuantParams {
+    pub bits: u32,
+    pub signed: bool,
+}
+
+impl QuantParams {
+    pub fn weights(bits: u32) -> QuantParams {
+        QuantParams { bits, signed: true }
+    }
+
+    pub fn activations(bits: u32) -> QuantParams {
+        QuantParams {
+            bits,
+            signed: false,
+        }
+    }
+
+    /// Lower clamp bound `Q_n`.
+    pub fn qn(&self) -> i64 {
+        if self.signed {
+            -(1i64 << (self.bits - 1))
+        } else {
+            0
+        }
+    }
+
+    /// Upper clamp bound `Q_p`.
+    pub fn qp(&self) -> i64 {
+        if self.signed {
+            (1i64 << (self.bits - 1)) - 1
+        } else {
+            (1i64 << self.bits) - 1
+        }
+    }
+
+    /// Number of representable levels.
+    pub fn levels(&self) -> u64 {
+        (self.qp() - self.qn() + 1) as u64
+    }
+}
+
+/// A quantizer with a concrete step size γ.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Quantizer {
+    pub params: QuantParams,
+    pub gamma: f64,
+}
+
+impl Quantizer {
+    pub fn new(params: QuantParams, gamma: f64) -> Quantizer {
+        assert!(gamma > 0.0, "step size must be positive");
+        Quantizer { params, gamma }
+    }
+
+    /// LSQ initialization: γ = 2·E[|v|] / sqrt(Q_p) (Esser et al. §3).
+    pub fn init_from_data(params: QuantParams, data: &[f64]) -> Quantizer {
+        let mean_abs = if data.is_empty() {
+            1.0
+        } else {
+            data.iter().map(|v| v.abs()).sum::<f64>() / data.len() as f64
+        };
+        let gamma = (2.0 * mean_abs / (params.qp() as f64).sqrt()).max(1e-9);
+        Quantizer::new(params, gamma)
+    }
+
+    /// Integer code for `v` (Eq 5 inner part).
+    pub fn to_int(&self, v: f64) -> i64 {
+        let scaled = v / self.gamma;
+        let clamped = scaled.clamp(self.params.qn() as f64, self.params.qp() as f64);
+        // round half away from zero
+        let r = if clamped >= 0.0 {
+            (clamped + 0.5).floor()
+        } else {
+            (clamped - 0.5).ceil()
+        };
+        r as i64
+    }
+
+    /// Quantized (dequantized-back) value `v_quant = v_int · γ`.
+    pub fn quantize(&self, v: f64) -> f64 {
+        self.to_int(v) as f64 * self.gamma
+    }
+
+    /// Dequantize an integer code.
+    pub fn from_int(&self, code: i64) -> f64 {
+        code as f64 * self.gamma
+    }
+
+    /// Quantize a slice to integer codes.
+    pub fn to_ints(&self, vs: &[f64]) -> Vec<i64> {
+        vs.iter().map(|v| self.to_int(*v)).collect()
+    }
+
+    /// Mean-squared quantization error over `vs`.
+    pub fn mse(&self, vs: &[f64]) -> f64 {
+        if vs.is_empty() {
+            return 0.0;
+        }
+        vs.iter()
+            .map(|v| (v - self.quantize(*v)).powi(2))
+            .sum::<f64>()
+            / vs.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, check_close, check_eq, forall};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bounds_match_paper() {
+        // Activations: Qn = 0, Qp = 2^b - 1; weights: Qn = -2^{b-1}, Qp = 2^{b-1}-1.
+        let a8 = QuantParams::activations(8);
+        assert_eq!((a8.qn(), a8.qp()), (0, 255));
+        let w8 = QuantParams::weights(8);
+        assert_eq!((w8.qn(), w8.qp()), (-128, 127));
+        let w1 = QuantParams::weights(1);
+        assert_eq!((w1.qn(), w1.qp()), (-1, 0));
+        let w2 = QuantParams::weights(2);
+        assert_eq!((w2.qn(), w2.qp()), (-2, 1));
+    }
+
+    #[test]
+    fn quantize_identity_on_grid() {
+        let q = Quantizer::new(QuantParams::weights(4), 0.25);
+        for code in q.params.qn()..=q.params.qp() {
+            let v = code as f64 * 0.25;
+            assert_eq!(q.to_int(v), code);
+            assert_eq!(q.quantize(v), v);
+        }
+    }
+
+    #[test]
+    fn clamps_to_range() {
+        let q = Quantizer::new(QuantParams::weights(2), 1.0);
+        assert_eq!(q.to_int(100.0), 1);
+        assert_eq!(q.to_int(-100.0), -2);
+        let a = Quantizer::new(QuantParams::activations(8), 0.5);
+        assert_eq!(a.to_int(-3.0), 0);
+        assert_eq!(a.to_int(1000.0), 255);
+    }
+
+    #[test]
+    fn init_scales_with_data() {
+        let small: Vec<f64> = vec![0.01; 100];
+        let large: Vec<f64> = vec![10.0; 100];
+        let qs = Quantizer::init_from_data(QuantParams::weights(4), &small);
+        let ql = Quantizer::init_from_data(QuantParams::weights(4), &large);
+        assert!(ql.gamma > qs.gamma);
+    }
+
+    #[test]
+    fn prop_quantization_error_bounded_by_half_step() {
+        forall(2000, |rng: &mut Rng| {
+            let bits = *rng.choose(&[2u32, 4, 8]);
+            let gamma = rng.uniform(0.01, 2.0);
+            let q = Quantizer::new(QuantParams::weights(bits), gamma);
+            // value inside the representable range
+            let v = rng.uniform(
+                q.params.qn() as f64 * gamma,
+                q.params.qp() as f64 * gamma,
+            );
+            let err = (v - q.quantize(v)).abs();
+            check(
+                err <= gamma / 2.0 + 1e-12,
+                &format!("err {err} > gamma/2 {}", gamma / 2.0),
+            )
+        });
+    }
+
+    #[test]
+    fn prop_idempotent() {
+        forall(1000, |rng: &mut Rng| {
+            let bits = *rng.choose(&[1u32, 2, 4, 8]);
+            let q = Quantizer::new(QuantParams::weights(bits), rng.uniform(0.01, 1.0));
+            let v = rng.normal();
+            let once = q.quantize(v);
+            check_close(q.quantize(once), once, 1e-12, "quantize idempotent")
+        });
+    }
+
+    #[test]
+    fn prop_codes_in_range() {
+        forall(1000, |rng: &mut Rng| {
+            let signed = rng.chance(0.5);
+            let bits = *rng.choose(&[1u32, 2, 4, 8]);
+            let p = QuantParams {
+                bits,
+                signed,
+            };
+            let q = Quantizer::new(p, rng.uniform(0.001, 10.0));
+            let v = rng.normal() * 100.0;
+            let code = q.to_int(v);
+            check(
+                code >= p.qn() && code <= p.qp(),
+                &format!("code {code} outside [{}, {}]", p.qn(), p.qp()),
+            )
+        });
+    }
+
+    #[test]
+    fn prop_monotone() {
+        forall(1000, |rng: &mut Rng| {
+            let q = Quantizer::new(QuantParams::weights(4), rng.uniform(0.05, 1.0));
+            let a = rng.normal();
+            let b = a + rng.uniform(0.0, 2.0);
+            check(
+                q.to_int(a) <= q.to_int(b),
+                "quantization must be monotone",
+            )
+        });
+    }
+
+    #[test]
+    fn levels_count() {
+        forall(100, |rng: &mut Rng| {
+            let bits = *rng.choose(&[1u32, 2, 4, 8]);
+            let p = QuantParams::weights(bits);
+            check_eq(p.levels(), 1u64 << bits, "levels = 2^bits")
+        });
+    }
+}

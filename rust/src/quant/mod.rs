@@ -1,0 +1,13 @@
+//! Quantization: the paper's LSQ-style quantizer (Eq 5) and the
+//! two's-complement bit-slicing that feeds the PPG datapath.
+//!
+//! Activations are quantized unsigned (`Q_n = 0, Q_p = 2^b - 1`), weights
+//! signed (`Q_n = -2^{b-1}, Q_p = 2^{b-1} - 1`), both with a trained step
+//! size γ (Eq 5). The same math lives in `python/compile/quantize.py`; the
+//! python tests cross-check the two implementations through exported vectors.
+
+pub mod lsq;
+pub mod slicing;
+
+pub use lsq::{QuantParams, Quantizer};
+pub use slicing::{reconstruct_slices, slice_signed, slice_unsigned};

@@ -1,0 +1,202 @@
+//! Two's-complement bit-slicing of integer operands into `k`-bit digits —
+//! the operand preparation for the PPG datapath (Fig 1b).
+//!
+//! A `w`-bit signed integer is decomposed into `ceil(w/k)` digits of `k` bits
+//! each: the low digits are unsigned in `[0, 2^k)`, the top digit is signed
+//! (two's-complement weight `-2^{k-1}..2^{k-1}-1` scaled by its position) so
+//! that
+//!
+//! `value = Σ_{s<S-1} d_s · 2^{k·s}  +  d_{S-1} · 2^{k·(S-1)}`  (d_{S-1} signed)
+//!
+//! holds *exactly*. The Pallas kernel (`python/compile/kernels/bitslice.py`)
+//! performs the same decomposition; the identity is property-tested on both
+//! sides and is the correctness anchor of the whole mixed-precision datapath.
+
+/// Number of `k`-bit slices needed for a `w`-bit operand.
+pub fn n_slices(w: u32, k: u32) -> u32 {
+    w.div_ceil(k)
+}
+
+/// Slice a **signed** `w`-bit integer (`-2^{w-1} <= v < 2^{w-1}`) into
+/// `ceil(w/k)` digits, least-significant first. The last digit is signed;
+/// all earlier digits are in `[0, 2^k)`.
+pub fn slice_signed(v: i64, w: u32, k: u32) -> Vec<i64> {
+    assert!(w >= 1 && k >= 1);
+    let lo = -(1i64 << (w - 1));
+    let hi = (1i64 << (w - 1)) - 1;
+    assert!(
+        (lo..=hi).contains(&v),
+        "value {v} out of signed {w}-bit range"
+    );
+    let s = n_slices(w, k);
+    let mut out = Vec::with_capacity(s as usize);
+    // Work on the unsigned two's-complement image confined to w bits
+    // (`w` <= 32 in practice; the branch avoids shift overflow at w = 64).
+    let mut u = (v as u64) & if w >= 64 { u64::MAX } else { (1u64 << w) - 1 };
+    for i in 0..s {
+        let remaining = w - i * k;
+        let digit_bits = remaining.min(k);
+        let digit = (u & ((1u64 << digit_bits) - 1)) as i64;
+        if i == s - 1 {
+            // Top digit: reinterpret as signed over `digit_bits`, i.e. the
+            // two's-complement weight of the MSB is negative.
+            let sign_bit = 1i64 << (digit_bits - 1);
+            let signed_digit = if digit & sign_bit != 0 {
+                digit - (1i64 << digit_bits)
+            } else {
+                digit
+            };
+            out.push(signed_digit);
+        } else {
+            out.push(digit);
+        }
+        u >>= digit_bits;
+    }
+    out
+}
+
+/// Slice an **unsigned** `w`-bit integer into `ceil(w/k)` unsigned digits,
+/// least-significant first (used for activations in 2D-scaled designs).
+pub fn slice_unsigned(v: u64, w: u32, k: u32) -> Vec<i64> {
+    assert!(w >= 1 && k >= 1);
+    assert!(
+        w >= 64 || v < (1u64 << w),
+        "value {v} out of unsigned {w}-bit range"
+    );
+    let s = n_slices(w, k);
+    let mut out = Vec::with_capacity(s as usize);
+    let mut u = v;
+    for i in 0..s {
+        let remaining = w - i * k;
+        let digit_bits = remaining.min(k);
+        out.push((u & ((1u64 << digit_bits) - 1)) as i64);
+        u >>= digit_bits;
+    }
+    out
+}
+
+/// Reconstruct the integer from its digits: `Σ d_s · 2^{k·s}`.
+pub fn reconstruct_slices(digits: &[i64], k: u32) -> i64 {
+    digits
+        .iter()
+        .enumerate()
+        .map(|(i, d)| d << (k as usize * i))
+        .sum()
+}
+
+/// Shift weight (power of two) each slice contributes — what the BP-ST
+/// adder tree applies before summation.
+pub fn slice_weight(slice_idx: u32, k: u32) -> i64 {
+    1i64 << (k * slice_idx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check_eq, forall};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn known_decompositions() {
+        // -1 in 8-bit, k=2: 0b11111111 -> digits [3, 3, 3, -1]
+        assert_eq!(slice_signed(-1, 8, 2), vec![3, 3, 3, -1]);
+        // 0b0110_1010 = 106, k=4 -> [0xA, 0x6]
+        assert_eq!(slice_signed(106, 8, 4), vec![0xA, 0x6]);
+        // -128, k=4 -> [0, -8]
+        assert_eq!(slice_signed(-128, 8, 4), vec![0, -8]);
+        // w=1 (binary weights): values -1, 0
+        assert_eq!(slice_signed(-1, 1, 1), vec![-1]);
+        assert_eq!(slice_signed(0, 1, 1), vec![0]);
+    }
+
+    #[test]
+    fn n_slices_rounding() {
+        assert_eq!(n_slices(8, 2), 4);
+        assert_eq!(n_slices(8, 3), 3);
+        assert_eq!(n_slices(1, 2), 1);
+        assert_eq!(n_slices(4, 4), 1);
+    }
+
+    #[test]
+    fn single_slice_is_identity() {
+        for v in -8i64..=7 {
+            assert_eq!(slice_signed(v, 4, 4), vec![v]);
+            assert_eq!(reconstruct_slices(&[v], 4), v);
+        }
+    }
+
+    #[test]
+    fn prop_signed_roundtrip_exact() {
+        // The correctness anchor: slicing then reconstructing is the identity
+        // for every (w, k) pair used anywhere in the stack.
+        forall(5000, |rng: &mut Rng| {
+            let w = *rng.choose(&[1u32, 2, 3, 4, 5, 8, 16]);
+            let k = *rng.choose(&[1u32, 2, 3, 4, 8]);
+            let lo = -(1i64 << (w - 1));
+            let hi = (1i64 << (w - 1)) - 1;
+            let v = rng.range_i64(lo, hi);
+            let digits = slice_signed(v, w, k);
+            check_eq(reconstruct_slices(&digits, k), v, "signed roundtrip")?;
+            check_eq(digits.len() as u32, n_slices(w, k), "digit count")
+        });
+    }
+
+    #[test]
+    fn prop_unsigned_roundtrip_exact() {
+        forall(5000, |rng: &mut Rng| {
+            let w = *rng.choose(&[1u32, 2, 4, 8, 16]);
+            let k = *rng.choose(&[1u32, 2, 4]);
+            let v = rng.below(1u64 << w);
+            let digits = slice_unsigned(v, w, k);
+            check_eq(reconstruct_slices(&digits, k), v as i64, "unsigned roundtrip")
+        });
+    }
+
+    #[test]
+    fn prop_low_digits_unsigned_range() {
+        forall(2000, |rng: &mut Rng| {
+            let w = *rng.choose(&[4u32, 8]);
+            let k = *rng.choose(&[1u32, 2]);
+            let v = rng.range_i64(-(1 << (w - 1)), (1 << (w - 1)) - 1);
+            let digits = slice_signed(v, w, k);
+            for (i, d) in digits.iter().enumerate() {
+                if i + 1 < digits.len() {
+                    if !(0..(1i64 << k)).contains(d) {
+                        return Err(format!("low digit {d} outside [0, 2^{k})"));
+                    }
+                } else {
+                    let half = 1i64 << (k - 1);
+                    if !(-half..half).contains(d) {
+                        return Err(format!("top digit {d} outside signed {k}-bit"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_mac_linearity_over_slices() {
+        // a * w == Σ_s a * d_s * 2^{ks}: the PPG + shifted adder-tree identity
+        // for a full MAC (this is exactly what BP-ST computes).
+        forall(3000, |rng: &mut Rng| {
+            let wbits = *rng.choose(&[1u32, 2, 4, 8]);
+            let k = *rng.choose(&[1u32, 2, 4]);
+            let a = rng.range_i64(0, 255); // 8-bit unsigned activation
+            let w = rng.range_i64(-(1 << (wbits - 1)), (1 << (wbits - 1)) - 1);
+            let digits = slice_signed(w, wbits, k);
+            let via_ppgs: i64 = digits
+                .iter()
+                .enumerate()
+                .map(|(s, d)| a * d * slice_weight(s as u32, k))
+                .sum();
+            check_eq(via_ppgs, a * w, "PPG decomposition of MAC")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "out of signed")]
+    fn rejects_out_of_range() {
+        slice_signed(200, 8, 2);
+    }
+}

@@ -1,0 +1,61 @@
+//! Reproduction reporting: paper reference constants ([`paper`]) and
+//! table/figure renderers ([`tables`]) that print paper-vs-ours side by side
+//! with automated shape checks.
+
+pub mod paper;
+pub mod tables;
+
+/// One qualitative reproduction check ("who wins / by roughly what factor /
+/// where the crossover falls").
+#[derive(Clone, Debug)]
+pub struct ShapeCheck {
+    pub name: String,
+    pub pass: bool,
+    pub detail: String,
+}
+
+impl ShapeCheck {
+    pub fn new(name: impl Into<String>, pass: bool, detail: impl Into<String>) -> Self {
+        ShapeCheck {
+            name: name.into(),
+            pass,
+            detail: detail.into(),
+        }
+    }
+}
+
+/// Shared driver for the paper-table benches (`rust/benches/*`, all
+/// `harness = false`): render the table once, print the shape checks, then
+/// time the generator with the mini-bench harness.
+pub fn run_table_bench<F>(name: &str, mut f: F)
+where
+    F: FnMut() -> (crate::util::table::Table, Vec<ShapeCheck>),
+{
+    let (table, checks) = f();
+    println!("{}", table.render());
+    print!("{}", render_checks(&checks));
+    let mut b = crate::util::bench::Bencher::new();
+    b.run(&format!("{name}::generate"), || f());
+    b.finish(name);
+    let failed = checks.iter().filter(|c| !c.pass).count();
+    if failed > 0 {
+        eprintln!("WARNING: {failed} shape checks failed in {name}");
+        std::process::exit(1);
+    }
+}
+
+/// Render shape checks as a compact pass/fail block.
+pub fn render_checks(checks: &[ShapeCheck]) -> String {
+    let mut out = String::new();
+    for c in checks {
+        out.push_str(&format!(
+            "  [{}] {} — {}\n",
+            if c.pass { "PASS" } else { "FAIL" },
+            c.name,
+            c.detail
+        ));
+    }
+    let passed = checks.iter().filter(|c| c.pass).count();
+    out.push_str(&format!("  {}/{} shape checks passed\n", passed, checks.len()));
+    out
+}

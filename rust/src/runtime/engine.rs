@@ -1,0 +1,162 @@
+//! PJRT execution engine: one CPU client, one compiled executable per model
+//! variant. Python never runs here — the HLO text under `artifacts/` is the
+//! entire contract with L1/L2.
+
+use super::manifest::{Manifest, ModelEntry};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// A compiled model ready to execute.
+pub struct LoadedModel {
+    pub entry: ModelEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedModel {
+    /// Run one batch. `input` must have exactly `entry.input_len()` elements
+    /// (shape `[batch, h, w, c]`, NHWC, f32). Returns flattened logits
+    /// `[batch, classes]`.
+    pub fn infer(&self, input: &[f32]) -> Result<Vec<f32>> {
+        if input.len() != self.entry.input_len() {
+            bail!(
+                "model {}: input has {} elements, expected {} ({:?})",
+                self.entry.name,
+                input.len(),
+                self.entry.input_len(),
+                self.entry.input_shape
+            );
+        }
+        let dims: Vec<i64> = self.entry.input_shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input)
+            .reshape(&dims)
+            .context("reshaping input literal")?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .context("PJRT execute")?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // aot.py lowers with return_tuple=True -> unwrap the 1-tuple.
+        let out = out.to_tuple1().context("unwrapping result tuple")?;
+        let logits = out.to_vec::<f32>().context("reading logits")?;
+        let expect = self.entry.batch * self.entry.classes;
+        if logits.len() != expect {
+            bail!(
+                "model {}: got {} logits, expected {}",
+                self.entry.name,
+                logits.len(),
+                expect
+            );
+        }
+        Ok(logits)
+    }
+
+    /// Argmax class per batch element.
+    pub fn classify(&self, input: &[f32]) -> Result<Vec<usize>> {
+        let logits = self.infer(input)?;
+        Ok(argmax_rows(&logits, self.entry.classes))
+    }
+}
+
+/// Argmax over each row of a flattened `[rows, cols]` matrix.
+pub fn argmax_rows(flat: &[f32], cols: usize) -> Vec<usize> {
+    flat.chunks(cols)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0)
+        })
+        .collect()
+}
+
+/// The engine: a PJRT CPU client plus the set of loaded model variants.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    models: BTreeMap<String, LoadedModel>,
+}
+
+impl Engine {
+    /// Create a client and load every model in the manifest directory.
+    pub fn load_all(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let mut engine = Engine {
+            client,
+            manifest: manifest.clone(),
+            models: BTreeMap::new(),
+        };
+        for entry in &manifest.models {
+            engine.load(entry.clone())?;
+        }
+        Ok(engine)
+    }
+
+    /// Create a client without loading any models (lazy use).
+    pub fn with_manifest(manifest: Manifest) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Engine {
+            client,
+            manifest,
+            models: BTreeMap::new(),
+        })
+    }
+
+    /// Compile one model variant from its HLO text.
+    pub fn load(&mut self, entry: ModelEntry) -> Result<&LoadedModel> {
+        let path = self.manifest.resolve(&entry.path);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", entry.name))?;
+        let name = entry.name.clone();
+        self.models.insert(name.clone(), LoadedModel { entry, exe });
+        Ok(&self.models[&name])
+    }
+
+    pub fn get(&self, name: &str) -> Option<&LoadedModel> {
+        self.models.get(name)
+    }
+
+    /// Model for (wq, batch), if exported.
+    pub fn model_for(&self, wq: u32, batch: usize) -> Option<&LoadedModel> {
+        self.manifest
+            .find(wq, batch)
+            .and_then(|e| self.models.get(&e.name))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn loaded_names(&self) -> Vec<String> {
+        self.models.keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_rows_basic() {
+        let flat = vec![0.1, 0.9, 0.0, 0.5, 0.2, 0.3];
+        assert_eq!(argmax_rows(&flat, 3), vec![1, 0]);
+    }
+
+    #[test]
+    fn argmax_single_row() {
+        assert_eq!(argmax_rows(&[1.0, 2.0, 3.0, 2.5], 4), vec![2]);
+    }
+
+    // Engine tests that require a PJRT client + artifacts live in
+    // rust/tests/integration_runtime.rs (they need `make artifacts`).
+}

@@ -1,0 +1,162 @@
+//! Artifact manifest: `artifacts/manifest.json`, written by
+//! `python/compile/aot.py`, read here. Lists every exported HLO module with
+//! its geometry so the engine can validate inputs before touching PJRT.
+
+use crate::util::json::{parse, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One exported model variant.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelEntry {
+    pub name: String,
+    /// Path to the HLO text, relative to the manifest's directory.
+    pub path: String,
+    /// Inner-layer weight word-length this variant was trained/exported at.
+    pub wq: u32,
+    pub batch: usize,
+    /// Input shape [batch, h, w, c].
+    pub input_shape: Vec<usize>,
+    pub classes: usize,
+}
+
+impl ModelEntry {
+    pub fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub models: Vec<ModelEntry>,
+    pub testset: Option<String>,
+    /// Directory the manifest was loaded from (for resolving paths).
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load from `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut m = Self::from_json_str(&text)?;
+        m.dir = dir;
+        Ok(m)
+    }
+
+    pub fn from_json_str(text: &str) -> Result<Manifest> {
+        let j = parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let models_j = j
+            .get("models")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest: missing 'models' array"))?;
+        let mut models = Vec::new();
+        for mj in models_j {
+            let get_str = |k: &str| -> Result<String> {
+                mj.get(k)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow!("manifest model: missing '{k}'"))
+            };
+            let get_num = |k: &str| -> Result<u64> {
+                mj.get(k)
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| anyhow!("manifest model: missing '{k}'"))
+            };
+            let input_shape: Vec<usize> = mj
+                .get("input")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("manifest model: missing 'input'"))?
+                .iter()
+                .filter_map(|v| v.as_u64().map(|n| n as usize))
+                .collect();
+            if input_shape.len() != 4 {
+                bail!("manifest model: 'input' must be [b,h,w,c]");
+            }
+            models.push(ModelEntry {
+                name: get_str("name")?,
+                path: get_str("path")?,
+                wq: get_num("wq")? as u32,
+                batch: get_num("batch")? as usize,
+                input_shape,
+                classes: get_num("classes")? as usize,
+            });
+        }
+        let testset = j
+            .get("testset")
+            .and_then(Json::as_str)
+            .map(str::to_string);
+        Ok(Manifest {
+            models,
+            testset,
+            dir: PathBuf::new(),
+        })
+    }
+
+    /// Find a model by inner word-length and batch size.
+    pub fn find(&self, wq: u32, batch: usize) -> Option<&ModelEntry> {
+        self.models.iter().find(|m| m.wq == wq && m.batch == batch)
+    }
+
+    /// All word-lengths available.
+    pub fn wqs(&self) -> Vec<u32> {
+        let mut v: Vec<u32> = self.models.iter().map(|m| m.wq).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    pub fn resolve(&self, rel: &str) -> PathBuf {
+        self.dir.join(rel)
+    }
+}
+
+/// Default artifacts directory: `$MPCNN_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("MPCNN_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "models": [
+        {"name": "resnet8_w4_b1", "path": "resnet8_w4_b1.hlo.txt", "wq": 4,
+         "batch": 1, "input": [1, 32, 32, 3], "classes": 10},
+        {"name": "resnet8_w4_b8", "path": "resnet8_w4_b8.hlo.txt", "wq": 4,
+         "batch": 8, "input": [8, 32, 32, 3], "classes": 10}
+      ],
+      "testset": "testset.bin"
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::from_json_str(SAMPLE).unwrap();
+        assert_eq!(m.models.len(), 2);
+        assert_eq!(m.models[0].input_len(), 32 * 32 * 3);
+        assert_eq!(m.testset.as_deref(), Some("testset.bin"));
+        assert_eq!(m.find(4, 8).unwrap().name, "resnet8_w4_b8");
+        assert!(m.find(2, 1).is_none());
+        assert_eq!(m.wqs(), vec![4]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::from_json_str("{}").is_err());
+        assert!(Manifest::from_json_str(r#"{"models": [{"name": "x"}]}"#).is_err());
+        let bad_shape = r#"{"models": [{"name":"x","path":"p","wq":4,"batch":1,
+            "input":[32,32,3],"classes":10}]}"#;
+        assert!(Manifest::from_json_str(bad_shape).is_err());
+    }
+
+    #[test]
+    fn load_missing_dir_errors() {
+        assert!(Manifest::load("/nonexistent-dir-xyz").is_err());
+    }
+}

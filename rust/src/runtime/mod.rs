@@ -1,0 +1,15 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them on
+//! the CPU PJRT client from the rust hot path.
+//!
+//! Interchange is HLO **text** (not serialized `HloModuleProto`): jax ≥ 0.5
+//! emits protos with 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids and round-trips cleanly (see
+//! /opt/xla-example/README.md and DESIGN.md §8).
+
+pub mod engine;
+pub mod manifest;
+pub mod testset;
+
+pub use engine::{argmax_rows, Engine, LoadedModel};
+pub use manifest::{artifacts_dir, Manifest, ModelEntry};
+pub use testset::TestSet;

@@ -1,0 +1,130 @@
+//! Held-out evaluation set exported by `python/compile/aot.py` as a flat
+//! binary (`testset.bin`) so the rust serving path can measure real
+//! classification accuracy without any python at runtime.
+//!
+//! Layout (little-endian):
+//! `magic "MPTS"` · `u32 n` · `u32 h` · `u32 w` · `u32 c` ·
+//! `n·h·w·c × f32` images · `n × u8` labels.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct TestSet {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    /// All images, row-major `[n, h, w, c]`.
+    pub images: Vec<f32>,
+    pub labels: Vec<u8>,
+}
+
+pub const MAGIC: &[u8; 4] = b"MPTS";
+
+impl TestSet {
+    pub fn load(path: impl AsRef<Path>) -> Result<TestSet> {
+        let bytes = std::fs::read(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::from_bytes(&bytes)
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<TestSet> {
+        if bytes.len() < 20 || &bytes[0..4] != MAGIC {
+            bail!("testset: bad magic");
+        }
+        let rd_u32 = |off: usize| -> u32 {
+            u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap())
+        };
+        let n = rd_u32(4) as usize;
+        let h = rd_u32(8) as usize;
+        let w = rd_u32(12) as usize;
+        let c = rd_u32(16) as usize;
+        let img_len = n * h * w * c;
+        let expect = 20 + img_len * 4 + n;
+        if bytes.len() != expect {
+            bail!(
+                "testset: size mismatch (got {} bytes, want {expect} for n={n} {h}x{w}x{c})",
+                bytes.len()
+            );
+        }
+        let mut images = Vec::with_capacity(img_len);
+        let mut off = 20;
+        for _ in 0..img_len {
+            images.push(f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()));
+            off += 4;
+        }
+        let labels = bytes[off..off + n].to_vec();
+        Ok(TestSet {
+            n,
+            h,
+            w,
+            c,
+            images,
+            labels,
+        })
+    }
+
+    /// Serialize (used by tests and by rust-side dataset generation).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(20 + self.images.len() * 4 + self.n);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(self.n as u32).to_le_bytes());
+        out.extend_from_slice(&(self.h as u32).to_le_bytes());
+        out.extend_from_slice(&(self.w as u32).to_le_bytes());
+        out.extend_from_slice(&(self.c as u32).to_le_bytes());
+        for v in &self.images {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.extend_from_slice(&self.labels);
+        out
+    }
+
+    /// Image `i` as a slice.
+    pub fn image(&self, i: usize) -> &[f32] {
+        let len = self.h * self.w * self.c;
+        &self.images[i * len..(i + 1) * len]
+    }
+
+    pub fn image_len(&self) -> usize {
+        self.h * self.w * self.c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TestSet {
+        TestSet {
+            n: 3,
+            h: 2,
+            w: 2,
+            c: 1,
+            images: (0..12).map(|i| i as f32 * 0.5).collect(),
+            labels: vec![0, 1, 2],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let t = sample();
+        let bytes = t.to_bytes();
+        let u = TestSet::from_bytes(&bytes).unwrap();
+        assert_eq!(u.n, 3);
+        assert_eq!(u.images, t.images);
+        assert_eq!(u.labels, t.labels);
+        assert_eq!(u.image(1), &[2.0, 2.5, 3.0, 3.5]);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let t = sample();
+        let mut bytes = t.to_bytes();
+        bytes[0] = b'X';
+        assert!(TestSet::from_bytes(&bytes).is_err());
+        let mut truncated = t.to_bytes();
+        truncated.pop();
+        assert!(TestSet::from_bytes(&truncated).is_err());
+    }
+}

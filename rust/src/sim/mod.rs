@@ -1,0 +1,309 @@
+//! System-level accelerator simulator (produces Table IV, Fig 9, and the
+//! "ours" columns of Table V).
+//!
+//! Replaces the authors' Stratix V board + Quartus power flow: per-layer
+//! cycle counts come from the Eq-3 dataflow schedule, energy from the three
+//! calibrated models in [`crate::energy`] (computation / BRAM / DDR3), and
+//! throughput from the PE-array design under test.
+
+pub mod trace;
+
+use crate::array::{search::design_brams, search::design_luts, Dims};
+use crate::cnn::Cnn;
+use crate::dataflow::{schedule_layer, LayerSchedule, ScheduleCtx};
+use crate::energy::{bram_energy_mj, ddr_energy_mj, e_lut_mac_pj};
+use crate::pe::cost::fmax_mhz;
+use crate::pe::PeDesign;
+
+/// A fully specified accelerator instance.
+#[derive(Clone, Debug)]
+pub struct AcceleratorDesign {
+    pub pe: PeDesign,
+    pub dims: Dims,
+    pub fmax_mhz: f64,
+    pub luts: u64,
+    pub brams: u64,
+    pub ddr_bw_bytes_per_s: f64,
+    /// Activation word-length N.
+    pub n: u32,
+}
+
+impl AcceleratorDesign {
+    /// Build a design from a PE + dims for a given CNN (costs derived).
+    pub fn new(pe: PeDesign, dims: Dims, cnn: &Cnn, cfg: &crate::config::RunConfig) -> Self {
+        let min_wq = cnn.conv_layers().map(|l| l.wq).min().unwrap_or(8);
+        AcceleratorDesign {
+            pe,
+            dims,
+            fmax_mhz: fmax_mhz(&pe),
+            luts: design_luts(&pe, dims, cfg.act_bits, min_wq),
+            brams: design_brams(&pe, dims, cfg.act_bits, cnn, cfg.fpga.bram_bits),
+            ddr_bw_bytes_per_s: cfg.fpga.ddr_bw_bytes_per_s,
+            n: cfg.act_bits,
+        }
+    }
+
+    pub fn n_pe(&self) -> u64 {
+        self.dims.n_pe()
+    }
+
+    /// Peak GOps/s at the smallest supported word-length.
+    pub fn peak_gops(&self, wq: u32) -> f64 {
+        self.n_pe() as f64 * self.pe.macs_per_cycle(wq) * self.fmax_mhz * 1e6 * 2.0
+            / 1e9
+    }
+}
+
+/// Per-layer simulation record.
+#[derive(Clone, Debug)]
+pub struct LayerSim {
+    pub schedule: LayerSchedule,
+    pub e_comp_mj: f64,
+    pub e_bram_mj: f64,
+    pub e_ddr_mj: f64,
+}
+
+/// Full-frame simulation result (one column of Table IV).
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub cnn_name: String,
+    pub design_tag: String,
+    pub layers: Vec<LayerSim>,
+    pub total_cycles: u64,
+    pub fps: f64,
+    pub gops: f64,
+    /// Energy per frame, split as in Table IV.
+    pub e_comp_mj: f64,
+    pub e_bram_mj: f64,
+    pub e_ddr_mj: f64,
+    pub kluts: f64,
+    pub brams: u64,
+    pub fmhz: f64,
+    pub avg_utilization: f64,
+}
+
+impl SimResult {
+    pub fn e_total_mj(&self) -> f64 {
+        self.e_comp_mj + self.e_bram_mj + self.e_ddr_mj
+    }
+
+    /// Average power in W implied by energy/frame × frame rate.
+    pub fn power_w(&self) -> f64 {
+        self.e_total_mj() * 1e-3 * self.fps
+    }
+
+    /// GOps/s/W = (Ops per frame) / (energy per frame) — the consistent
+    /// definition (matches the paper's Table V; Table IV's column is
+    /// internally inconsistent, see EXPERIMENTS.md).
+    pub fn gops_per_w(&self) -> f64 {
+        self.gops / self.power_w().max(1e-12)
+    }
+}
+
+/// Simulate one frame of `cnn` on `design` (batch size 1, as in Table IV).
+pub fn simulate(cnn: &Cnn, design: &AcceleratorDesign) -> SimResult {
+    let ctx = ScheduleCtx {
+        dims: design.dims,
+        k: design.pe.k,
+        n: design.n,
+        fmax_mhz: design.fmax_mhz,
+        ddr_bw_bytes_per_s: design.ddr_bw_bytes_per_s,
+        act_buffer_bits: cnn.peak_activation_bits(),
+    };
+    let mut layers = Vec::new();
+    let mut total_cycles = 0u64;
+    let (mut e_comp, mut e_bram, mut e_ddr) = (0.0, 0.0, 0.0);
+    let (mut util_num, mut util_den) = (0.0, 0.0);
+    for l in cnn.conv_layers() {
+        let s = schedule_layer(l, &ctx);
+        let comp =
+            l.macs() as f64 * e_lut_mac_pj(design.pe.k, l.wq.max(design.pe.k)) * 1e-9;
+        let bram = bram_energy_mj(s.cycles * s.bram_bits_per_cycle);
+        let ddr = ddr_energy_mj(s.ddr_bits);
+        total_cycles += s.cycles;
+        e_comp += comp;
+        e_bram += bram;
+        e_ddr += ddr;
+        util_num += s.utilization * l.macs() as f64;
+        util_den += l.macs() as f64;
+        layers.push(LayerSim {
+            schedule: s,
+            e_comp_mj: comp,
+            e_bram_mj: bram,
+            e_ddr_mj: ddr,
+        });
+    }
+    // Input image enters once per frame over DDR.
+    e_ddr += ddr_energy_mj(
+        (cnn.input_hw as u64).pow(2) * cnn.input_channels as u64 * 8,
+    );
+    let fps = design.fmax_mhz * 1e6 / total_cycles.max(1) as f64;
+    let gops = cnn.conv_ops() as f64 * fps / 1e9;
+    SimResult {
+        cnn_name: cnn.name.clone(),
+        design_tag: format!("{} @ {}", design.pe, design.dims),
+        layers,
+        total_cycles,
+        fps,
+        gops,
+        e_comp_mj: e_comp,
+        e_bram_mj: e_bram,
+        e_ddr_mj: e_ddr,
+        kluts: design.luts as f64 / 1e3,
+        brams: design.brams,
+        fmhz: design.fmax_mhz,
+        avg_utilization: util_num / util_den.max(1.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::resnet;
+    use crate::config::RunConfig;
+
+    /// The paper's Table II designs, reconstructed literally.
+    fn paper_design(k: u32, dims: (u32, u32, u32), cnn: &Cnn) -> AcceleratorDesign {
+        AcceleratorDesign::new(
+            PeDesign::bp_st_1d(k),
+            Dims::new(dims.0, dims.1, dims.2),
+            cnn,
+            &RunConfig::default(),
+        )
+    }
+
+    #[test]
+    fn table4_fps_shape_wq8() {
+        // Table IV, w_Q = 8 columns: 46.86 / 83.81 / 97.25 fps for k=1/2/4
+        // on the paper's own arrays. We must land within 25 % and preserve
+        // the ordering.
+        let cnn = resnet::resnet18().with_uniform_wq(8);
+        let cases = [
+            (1u32, (7u32, 3u32, 32u32), 46.86),
+            (2, (7, 5, 37), 83.81),
+            (4, (7, 4, 66), 97.25),
+        ];
+        let mut got = Vec::new();
+        for (k, dims, paper_fps) in cases {
+            let d = paper_design(k, dims, &cnn);
+            let r = simulate(&cnn, &d);
+            let rel = (r.fps - paper_fps).abs() / paper_fps;
+            assert!(
+                rel < 0.25,
+                "k={k}: fps={:.1} vs paper {paper_fps} (rel {rel:.2})",
+                r.fps
+            );
+            got.push(r.fps);
+        }
+        assert!(got[0] < got[1] && got[1] < got[2], "{got:?}");
+    }
+
+    #[test]
+    fn table4_fps_shape_wq_eq_k() {
+        // w_Q = k columns: 271.68 / 245.23 / 165.63 fps — note the
+        // *decreasing* order (k=1 with binary weights is fastest).
+        let cases = [
+            (1u32, (7u32, 3u32, 32u32), 271.68),
+            (2, (7, 5, 37), 245.23),
+            (4, (7, 4, 66), 165.63),
+        ];
+        let mut got = Vec::new();
+        for (k, dims, paper_fps) in cases {
+            let cnn = resnet::resnet18().with_uniform_wq(k);
+            let d = paper_design(k, dims, &cnn);
+            let r = simulate(&cnn, &d);
+            let rel = (r.fps - paper_fps).abs() / paper_fps;
+            assert!(
+                rel < 0.30,
+                "k={k}: fps={:.1} vs paper {paper_fps} (rel {rel:.2})",
+                r.fps
+            );
+            got.push(r.fps);
+        }
+        assert!(got[0] > got[2], "binary-weight design is fastest: {got:?}");
+    }
+
+    #[test]
+    fn table4_computation_energy() {
+        // Computation energy at w_Q=8: 100.90 / 47.06 / 23.40 mJ (k=1/2/4).
+        let cnn = resnet::resnet18().with_uniform_wq(8);
+        for (k, dims, paper_mj) in [
+            (1u32, (7u32, 3u32, 32u32), 100.90),
+            (2, (7, 5, 37), 47.06),
+            (4, (7, 4, 66), 23.40),
+        ] {
+            let r = simulate(&cnn, &paper_design(k, dims, &cnn));
+            let rel = (r.e_comp_mj - paper_mj).abs() / paper_mj;
+            assert!(rel < 0.06, "k={k}: {:.2} vs {paper_mj}", r.e_comp_mj);
+        }
+    }
+
+    #[test]
+    fn table4_bram_energy_regime() {
+        // BRAM energy at w_Q=8: 7.59 / 5.42 / 5.85 mJ. Calibrated at k=1;
+        // the others must land within 35 % (structure, not fit).
+        let cnn = resnet::resnet18().with_uniform_wq(8);
+        for (k, dims, paper_mj) in [
+            (1u32, (7u32, 3u32, 32u32), 7.59),
+            (2, (7, 5, 37), 5.42),
+            (4, (7, 4, 66), 5.85),
+        ] {
+            let r = simulate(&cnn, &paper_design(k, dims, &cnn));
+            let rel = (r.e_bram_mj - paper_mj).abs() / paper_mj;
+            assert!(rel < 0.35, "k={k}: {:.2} vs {paper_mj}", r.e_bram_mj);
+        }
+    }
+
+    #[test]
+    fn ddr_energy_weights_dominated() {
+        // w_Q=8: paper 6.24 mJ ≈ one pass over 93.5 Mbit of weights at
+        // 70 pJ/bit (6.55 mJ). Ours must sit in that regime.
+        let cnn = resnet::resnet18().with_uniform_wq(8);
+        let r = simulate(&cnn, &paper_design(1, (7, 3, 32), &cnn));
+        assert!(
+            (5.0..8.0).contains(&r.e_ddr_mj),
+            "DDR energy {:.2} mJ",
+            r.e_ddr_mj
+        );
+    }
+
+    #[test]
+    fn energy_headline_6_36x() {
+        // §V: "a reduction in energy up to 6.36× is reached when comparing a
+        // mixed-precision CNN against a CNN with fixed word-length of 8 bit"
+        // (k=1 column: 114.73 -> 18.05 mJ). Check the ratio shape on ours.
+        let cnn8 = resnet::resnet18().with_uniform_wq(8);
+        let cnn1 = resnet::resnet18().with_uniform_wq(1);
+        let d8 = paper_design(1, (7, 3, 32), &cnn8);
+        let r8 = simulate(&cnn8, &d8);
+        let d1 = paper_design(1, (7, 3, 32), &cnn1);
+        let r1 = simulate(&cnn1, &d1);
+        let ratio = r8.e_total_mj() / r1.e_total_mj();
+        assert!(
+            (4.5..9.0).contains(&ratio),
+            "energy reduction {ratio:.2}x vs paper 6.36x"
+        );
+    }
+
+    #[test]
+    fn gops_consistency() {
+        let cnn = resnet::resnet18().with_uniform_wq(8);
+        let r = simulate(&cnn, &paper_design(2, (7, 5, 37), &cnn));
+        // GOps/s = conv_ops * fps.
+        let expect = cnn.conv_ops() as f64 * r.fps / 1e9;
+        assert!((r.gops - expect).abs() < 1e-9);
+        // And must not exceed the array's peak.
+        let d = paper_design(2, (7, 5, 37), &cnn);
+        assert!(r.gops <= d.peak_gops(8) * 1.0001);
+    }
+
+    #[test]
+    fn power_and_efficiency_consistent() {
+        let cnn = resnet::resnet18().with_uniform_wq(2);
+        let r = simulate(&cnn, &paper_design(2, (7, 5, 37), &cnn));
+        let gpw = r.gops_per_w();
+        let manual = r.gops / (r.e_total_mj() * 1e-3 * r.fps);
+        assert!((gpw - manual).abs() / manual < 1e-9);
+        assert!(r.power_w() > 0.5 && r.power_w() < 50.0, "{}", r.power_w());
+    }
+}

@@ -1,0 +1,93 @@
+//! Execution trace / event log for the simulator — per-layer records that
+//! the examples print and the ablation benches diff.
+
+use super::SimResult;
+use crate::util::json::Json;
+use crate::util::table::{fnum, Table};
+
+/// Render a per-layer breakdown table for a simulation result.
+pub fn layer_table(r: &SimResult) -> Table {
+    let mut t = Table::new(format!(
+        "{} on {} — per-layer schedule",
+        r.cnn_name, r.design_tag
+    ))
+    .headers(&[
+        "layer", "wq", "cycles", "U(l)", "tiles", "E_comp mJ", "E_bram mJ", "E_ddr mJ", "bw-lim",
+    ]);
+    for l in &r.layers {
+        let s = &l.schedule;
+        t.row(vec![
+            s.name.clone(),
+            s.wq.to_string(),
+            crate::util::table::count(s.cycles),
+            fnum(s.utilization, 3),
+            format!("{}x{}x{}", s.tiles.0, s.tiles.1, s.tiles.2),
+            fnum(l.e_comp_mj, 2),
+            fnum(l.e_bram_mj, 2),
+            fnum(l.e_ddr_mj, 2),
+            if s.bandwidth_limited { "yes" } else { "" }.to_string(),
+        ]);
+    }
+    t.row(vec![
+        "TOTAL".into(),
+        "".into(),
+        crate::util::table::count(r.total_cycles),
+        fnum(r.avg_utilization, 3),
+        "".into(),
+        fnum(r.e_comp_mj, 2),
+        fnum(r.e_bram_mj, 2),
+        fnum(r.e_ddr_mj, 2),
+        "".into(),
+    ]);
+    t
+}
+
+/// Machine-readable summary (for EXPERIMENTS.md tooling and tests).
+pub fn summary_json(r: &SimResult) -> Json {
+    Json::obj(vec![
+        ("cnn", Json::str(r.cnn_name.clone())),
+        ("design", Json::str(r.design_tag.clone())),
+        ("cycles", Json::num(r.total_cycles as f64)),
+        ("fps", Json::num(r.fps)),
+        ("gops", Json::num(r.gops)),
+        ("e_comp_mj", Json::num(r.e_comp_mj)),
+        ("e_bram_mj", Json::num(r.e_bram_mj)),
+        ("e_ddr_mj", Json::num(r.e_ddr_mj)),
+        ("e_total_mj", Json::num(r.e_total_mj())),
+        ("gops_per_w", Json::num(r.gops_per_w())),
+        ("kluts", Json::num(r.kluts)),
+        ("brams", Json::num(r.brams as f64)),
+        ("f_mhz", Json::num(r.fmhz)),
+        ("avg_utilization", Json::num(r.avg_utilization)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::Dims;
+    use crate::cnn::resnet;
+    use crate::config::RunConfig;
+    use crate::pe::PeDesign;
+    use crate::sim::{simulate, AcceleratorDesign};
+
+    #[test]
+    fn table_and_json_render() {
+        let cnn = resnet::resnet_small(1, 10).with_uniform_wq(2);
+        let d = AcceleratorDesign::new(
+            PeDesign::bp_st_1d(2),
+            Dims::new(4, 4, 16),
+            &cnn,
+            &RunConfig::default(),
+        );
+        let r = simulate(&cnn, &d);
+        let rendered = layer_table(&r).render();
+        assert!(rendered.contains("conv1"));
+        assert!(rendered.contains("TOTAL"));
+        let j = summary_json(&r);
+        assert!(j.get("fps").unwrap().as_f64().unwrap() > 0.0);
+        // JSON round-trip
+        let parsed = crate::util::json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("cnn").unwrap().as_str(), Some("ResNet-8"));
+    }
+}

@@ -1,0 +1,158 @@
+//! Mini benchmark harness (no `criterion` offline).
+//!
+//! Benches under `rust/benches/` are `harness = false` binaries that call
+//! [`Bencher::run`] per measurement and then print a summary plus the paper
+//! table they regenerate. Methodology: warm-up iterations, then timed batches
+//! until both a minimum iteration count and a minimum wall time are reached;
+//! reports mean ± sample-σ and min of per-iteration times.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  (σ {:>10}, min {:>10}, n={})",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.std_ns),
+            fmt_ns(self.min_ns),
+            self.iters
+        )
+    }
+}
+
+/// Format nanoseconds human-readably.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Collects results for one bench binary.
+pub struct Bencher {
+    pub results: Vec<BenchResult>,
+    min_time: Duration,
+    min_iters: u64,
+    warmup: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        // Honour `MPCNN_BENCH_FAST=1` for quick smoke runs (CI / make test).
+        let fast = std::env::var("MPCNN_BENCH_FAST").ok().as_deref() == Some("1");
+        Bencher {
+            results: Vec::new(),
+            min_time: if fast {
+                Duration::from_millis(50)
+            } else {
+                Duration::from_millis(500)
+            },
+            min_iters: if fast { 3 } else { 10 },
+            warmup: if fast {
+                Duration::from_millis(10)
+            } else {
+                Duration::from_millis(100)
+            },
+        }
+    }
+
+    /// Time `f`, which must perform one full unit of work per call.
+    /// The closure's return value is black-boxed to prevent dead-code elision.
+    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warm-up.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            black_box(f());
+        }
+        // Timed.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let timed_start = Instant::now();
+        while samples_ns.len() < self.min_iters as usize
+            || timed_start.elapsed() < self.min_time
+        {
+            let t0 = Instant::now();
+            black_box(f());
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+            if samples_ns.len() > 100_000 {
+                break; // extremely fast function; enough samples
+            }
+        }
+        let mean = crate::util::stats::mean(&samples_ns);
+        let std = crate::util::stats::stddev(&samples_ns);
+        let min = crate::util::stats::min(&samples_ns);
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            iters: samples_ns.len() as u64,
+            mean_ns: mean,
+            std_ns: std,
+            min_ns: min,
+        });
+        println!("bench: {}", self.results.last().unwrap().summary());
+        self.results.last().unwrap()
+    }
+
+    /// Print the final summary block expected at the end of a bench binary.
+    pub fn finish(&self, bench_name: &str) {
+        println!("\n== bench summary: {bench_name} ==");
+        for r in &self.results {
+            println!("  {}", r.summary());
+        }
+    }
+}
+
+/// Prevent the optimizer from eliding a value. `std::hint::black_box` is
+/// stable since 1.66; wrap it so call sites read uniformly.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("MPCNN_BENCH_FAST", "1");
+        let mut b = Bencher::new();
+        let r = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("us"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(12_000_000_000.0).ends_with(" s"));
+    }
+}

@@ -1,0 +1,143 @@
+//! Tiny command-line argument parser (no `clap` offline).
+//!
+//! Grammar: `mpcnn <subcommand> [positional...] [--key value | --flag]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: a subcommand, positionals, and `--key value` options.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next().unwrap();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                // `--key=value` or `--key value` or bare flag
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(key.to_string(), v);
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Comma-separated list option: `--wq 1,2,4`.
+    pub fn get_list_u32(&self, key: &str, default: &[u32]) -> Vec<u32> {
+        match self.get(key) {
+            Some(v) => v
+                .split(',')
+                .filter_map(|p| p.trim().parse().ok())
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["dse", "--cnn", "resnet18", "--k", "2", "--verbose"]);
+        assert_eq!(a.subcommand, "dse");
+        assert_eq!(a.get("cnn"), Some("resnet18"));
+        assert_eq!(a.get_u64("k", 0), 2);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse(&["tables", "--which=table4"]);
+        assert_eq!(a.get("which"), Some("table4"));
+    }
+
+    #[test]
+    fn positionals() {
+        let a = parse(&["simulate", "resnet50", "--wq", "4"]);
+        assert_eq!(a.positional, vec!["resnet50"]);
+        assert_eq!(a.get_f64("wq", 0.0), 4.0);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["serve", "--json"]);
+        assert!(a.has_flag("json"));
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse(&["sweep", "--wq", "1,2,4"]);
+        assert_eq!(a.get_list_u32("wq", &[8]), vec![1, 2, 4]);
+        assert_eq!(a.get_list_u32("k", &[8]), vec![8]);
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse(&["--help"]);
+        assert_eq!(a.subcommand, "");
+        assert!(a.has_flag("help"));
+    }
+}

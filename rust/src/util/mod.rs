@@ -1,0 +1,22 @@
+//! Standard-library-only infrastructure.
+//!
+//! The offline build environment vendors only the `xla` crate's dependency
+//! closure, so the usual ecosystem crates (serde, clap, criterion, proptest,
+//! rand, tokio) are unavailable. This module provides the small subset we
+//! need, tested and deterministic:
+//!
+//! - [`rng`] — SplitMix64 / Xoshiro256** PRNG
+//! - [`json`] — JSON parse + emit (manifest, machine-readable reports)
+//! - [`table`] — ASCII tables for paper-table reproduction
+//! - [`stats`] — mean/σ/percentiles + latency histogram
+//! - [`cli`] — argument parsing
+//! - [`bench`] — mini-criterion used by `rust/benches/*`
+//! - [`prop`] — mini property-based testing harness
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

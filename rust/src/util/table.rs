@@ -1,0 +1,214 @@
+//! ASCII table rendering for paper-table reproduction output.
+//!
+//! Every bench and the `mpcnn tables` subcommand print the paper's rows next
+//! to ours through this formatter, so output is uniform and diffable.
+
+/// Column alignment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple text table: header row + data rows, auto-sized columns.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+    notes: Vec<String>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>) -> Self {
+        Table {
+            title: title.into(),
+            ..Default::default()
+        }
+    }
+
+    /// Set headers; defaults all columns to right alignment except the first.
+    pub fn headers(mut self, hs: &[&str]) -> Self {
+        self.headers = hs.iter().map(|s| s.to_string()).collect();
+        self.aligns = (0..hs.len())
+            .map(|i| if i == 0 { Align::Left } else { Align::Right })
+            .collect();
+        self
+    }
+
+    pub fn align(mut self, col: usize, a: Align) -> Self {
+        if col < self.aligns.len() {
+            self.aligns[col] = a;
+        }
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
+        self.rows.push(cells.iter().map(|s| s.to_string()).collect());
+        self
+    }
+
+    /// Insert a horizontal separator row.
+    pub fn sep(&mut self) -> &mut Self {
+        self.rows.push(vec!["--".to_string()]);
+        self
+    }
+
+    pub fn note(&mut self, n: impl Into<String>) -> &mut Self {
+        self.notes.push(n.into());
+        self
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.iter().filter(|r| r.len() > 1 || r.first().map(|c| c != "--").unwrap_or(true)).count()
+    }
+
+    /// Render to a string (with trailing newline).
+    pub fn render(&self) -> String {
+        let ncols = self
+            .headers
+            .len()
+            .max(self.rows.iter().map(|r| r.len()).max().unwrap_or(0));
+        let mut widths = vec![0usize; ncols];
+        for (i, h) in self.headers.iter().enumerate() {
+            widths[i] = widths[i].max(h.chars().count());
+        }
+        for row in &self.rows {
+            if row.len() == 1 && row[0] == "--" {
+                continue;
+            }
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        let rule: String = {
+            let mut r = String::from("+");
+            for w in &widths {
+                r.push_str(&"-".repeat(w + 2));
+                r.push('+');
+            }
+            r
+        };
+        out.push_str(&rule);
+        out.push('\n');
+        if !self.headers.is_empty() {
+            out.push_str(&render_row(&self.headers, &widths, &self.aligns));
+            out.push_str(&rule);
+            out.push('\n');
+        }
+        for row in &self.rows {
+            if row.len() == 1 && row[0] == "--" {
+                out.push_str(&rule);
+                out.push('\n');
+            } else {
+                out.push_str(&render_row(row, &widths, &self.aligns));
+            }
+        }
+        out.push_str(&rule);
+        out.push('\n');
+        for n in &self.notes {
+            out.push_str(&format!("  note: {n}\n"));
+        }
+        out
+    }
+}
+
+fn render_row(cells: &[String], widths: &[usize], aligns: &[Align]) -> String {
+    let mut line = String::from("|");
+    for (i, w) in widths.iter().enumerate() {
+        let cell = cells.get(i).map(|s| s.as_str()).unwrap_or("");
+        let a = aligns.get(i).copied().unwrap_or(Align::Right);
+        let pad = w.saturating_sub(cell.chars().count());
+        match a {
+            Align::Left => line.push_str(&format!(" {}{} |", cell, " ".repeat(pad))),
+            Align::Right => line.push_str(&format!(" {}{} |", " ".repeat(pad), cell)),
+        }
+    }
+    line.push('\n');
+    line
+}
+
+/// Format a float with `d` decimals, trimming to a compact string.
+pub fn fnum(x: f64, d: usize) -> String {
+    format!("{x:.d$}")
+}
+
+/// Format a large count with thousands separators (e.g. 1_234_567 -> "1,234,567").
+pub fn count(x: u64) -> String {
+    let s = x.to_string();
+    let mut out = String::new();
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+/// Human-readable ratio: "4.9x".
+pub fn ratio(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo").headers(&["name", "value"]);
+        t.row_strs(&["a", "1"]);
+        t.row_strs(&["longer", "22"]);
+        let r = t.render();
+        assert!(r.contains("== demo =="));
+        assert!(r.contains("| name   |"));
+        assert!(r.contains("|     1 |"), "{r}");
+        // All lines same width
+        let widths: Vec<usize> = r.lines().map(|l| l.chars().count()).collect();
+        let body: Vec<usize> = widths[1..].to_vec();
+        assert!(body.iter().all(|w| *w == body[0]), "{r}");
+    }
+
+    #[test]
+    fn separator_rows() {
+        let mut t = Table::new("s").headers(&["a", "b"]);
+        t.row_strs(&["1", "2"]);
+        t.sep();
+        t.row_strs(&["3", "4"]);
+        let r = t.render();
+        assert_eq!(r.matches("+--").count() >= 4, true, "{r}");
+    }
+
+    #[test]
+    fn count_formatting() {
+        assert_eq!(count(1), "1");
+        assert_eq!(count(999), "999");
+        assert_eq!(count(1000), "1,000");
+        assert_eq!(count(1234567), "1,234,567");
+    }
+
+    #[test]
+    fn fnum_and_ratio() {
+        assert_eq!(fnum(3.14159, 2), "3.14");
+        assert_eq!(ratio(4.899), "4.90x");
+    }
+
+    #[test]
+    fn unicode_width_by_chars() {
+        let mut t = Table::new("u").headers(&["é", "x"]);
+        t.row_strs(&["ü", "1"]);
+        let r = t.render();
+        assert!(r.contains("| é |") || r.contains("| é  |"), "{r}");
+    }
+}

@@ -1,0 +1,111 @@
+//! Integration tests for the serving coordinator: mock-backed pipeline
+//! behaviour (always runs) and PJRT-backed serving (needs artifacts).
+
+use mpcnn::coordinator::{
+    BatcherConfig, Coordinator, EngineBackend, InferenceBackend, MockBackend,
+};
+use mpcnn::runtime::{artifacts_dir, Engine, TestSet};
+use mpcnn::util::rng::Rng;
+use std::time::Duration;
+
+#[test]
+fn sustained_load_through_mock_pipeline() {
+    let c = Coordinator::start(
+        || Ok(Box::new(MockBackend::new(48, 10, vec![1, 4, 8], 200)) as Box<dyn InferenceBackend>),
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+            queue_capacity: 64,
+            fpga_fps_sim: 245.0, // the paper's headline fps as virtual clock
+        },
+    )
+    .unwrap();
+    let client = c.client();
+    let mut rng = Rng::new(7);
+    let mut pending = Vec::new();
+    let total = 500;
+    for _ in 0..total {
+        let v: Vec<f32> = (0..48).map(|_| rng.uniform(0.0, 9.0) as f32).collect();
+        pending.push(client.submit(v).unwrap());
+        if pending.len() >= 50 {
+            for p in pending.drain(..) {
+                p.wait().unwrap();
+            }
+        }
+    }
+    for p in pending {
+        p.wait().unwrap();
+    }
+    let m = c.shutdown();
+    assert_eq!(m.responses, total);
+    assert_eq!(m.errors, 0);
+    assert!(m.mean_batch() > 1.2, "batching must engage: {}", m.mean_batch());
+    assert!(m.latency.percentile_us(99.0) >= m.latency.percentile_us(50.0));
+    // virtual clock: 500 frames at 245 fps = 2.04 s
+    assert!((m.fpga_virtual_us - 500.0 / 245.0 * 1e6).abs() < 1e3);
+}
+
+#[test]
+fn mock_classification_is_correct_through_batching() {
+    // The mock's ground truth must survive queueing, batching and padding.
+    let c = Coordinator::start(
+        || Ok(Box::new(MockBackend::new(16, 5, vec![1, 4, 8], 50)) as Box<dyn InferenceBackend>),
+        BatcherConfig::default(),
+    )
+    .unwrap();
+    let client = c.client();
+    let reference = MockBackend::new(16, 5, vec![1], 0);
+    let mut rng = Rng::new(3);
+    for _ in 0..100 {
+        let v: Vec<f32> = {
+            let base = rng.range(0, 5) as f32;
+            (0..16).map(|_| base).collect()
+        };
+        let want = reference.expected_class(&v);
+        let got = client.classify(v).unwrap();
+        assert_eq!(got.class, want);
+    }
+}
+
+#[test]
+fn pjrt_backed_serving_end_to_end() {
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("NOTE: artifacts missing; skipping PJRT serving test");
+        return;
+    }
+    let dir = artifacts_dir();
+    let dir2 = dir.clone();
+    let c = Coordinator::start(
+        move || {
+            let engine = Engine::load_all(&dir2)?;
+            Ok(Box::new(EngineBackend::new(engine, 4)?) as Box<dyn InferenceBackend>)
+        },
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            queue_capacity: 64,
+            fpga_fps_sim: 0.0,
+        },
+    )
+    .unwrap();
+    let engine_probe = Engine::load_all(&dir).unwrap();
+    let ts = TestSet::load(dir.join(engine_probe.manifest.testset.clone().unwrap())).unwrap();
+    drop(engine_probe);
+
+    let client = c.client();
+    let mut correct = 0;
+    let mut pending = Vec::new();
+    let n = 64.min(ts.n);
+    for i in 0..n {
+        pending.push((client.submit(ts.image(i).to_vec()).unwrap(), ts.labels[i]));
+    }
+    for (p, label) in pending {
+        let r = p.wait().unwrap();
+        correct += (r.class == label as usize) as usize;
+    }
+    let m = c.shutdown();
+    assert_eq!(m.responses as usize, n);
+    let acc = correct as f64 / n as f64;
+    assert!(acc > 0.5, "served accuracy {acc} must be >> chance");
+    assert!(m.mean_batch() > 1.5, "batch-8 model should coalesce");
+}

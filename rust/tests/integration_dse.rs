@@ -1,0 +1,169 @@
+//! Cross-module integration: full DSE → simulator consistency, the fast
+//! search path vs the full scheduler, and simulator-vs-real-execution
+//! coherence for the small model family.
+
+use mpcnn::array::Dims;
+use mpcnn::cnn::resnet;
+use mpcnn::config::RunConfig;
+use mpcnn::dataflow::{cycles_only, schedule_layer, ScheduleCtx};
+use mpcnn::dse;
+use mpcnn::pe::PeDesign;
+use mpcnn::sim::{simulate, AcceleratorDesign};
+use mpcnn::util::prop::{check, check_close, forall};
+use mpcnn::util::rng::Rng;
+
+#[test]
+fn fast_path_matches_schedule_layer() {
+    // The allocation-free search inner loop must agree with the full
+    // scheduler for arbitrary layers and arrays.
+    forall(2000, |rng: &mut Rng| {
+        let mut l = mpcnn::cnn::Layer::conv(
+            "p",
+            [7u32, 14, 28, 56, 112, 224][rng.range(0, 6)],
+            1 << rng.range(0, 10),
+            1 << rng.range(0, 10),
+            *rng.choose(&[1u32, 3, 5, 7]),
+            *rng.choose(&[1u32, 2]),
+        );
+        l.wq = *rng.choose(&[1u32, 2, 4, 8]);
+        let dims = Dims::new(
+            rng.range(1, 20) as u32,
+            rng.range(1, 20) as u32,
+            rng.range(1, 130) as u32,
+        );
+        let k = *rng.choose(&[1u32, 2, 4]);
+        let ctx = ScheduleCtx {
+            dims,
+            k,
+            n: 8,
+            fmax_mhz: 124.0,
+            ddr_bw_bytes_per_s: 12.8e9,
+            act_buffer_bits: u64::MAX,
+        };
+        let full = schedule_layer(&l, &ctx);
+        let (fast_cycles, fast_ideal) = cycles_only(&l, dims, k, 8);
+        check(
+            full.compute_cycles == fast_cycles,
+            &format!("cycles {} vs {}", full.compute_cycles, fast_cycles),
+        )?;
+        check_close(full.ideal_cycles, fast_ideal, 1e-12, "ideal cycles")
+    });
+}
+
+#[test]
+fn dse_sim_fps_matches_array_choice_fps() {
+    // The array search's internal fps estimate and the simulator's fps must
+    // agree (they share the cycle model; the sim adds only energy).
+    let cfg = RunConfig::default();
+    for wq in [2u32, 8] {
+        let cnn = resnet::resnet18().with_uniform_wq(wq);
+        let out = dse::explore_k(&cnn, &cfg, 2);
+        let rel = (out.array.fps - out.sim.fps).abs() / out.array.fps;
+        assert!(
+            rel < 1e-9,
+            "wq={wq}: search fps {} vs sim fps {}",
+            out.array.fps,
+            out.sim.fps
+        );
+    }
+}
+
+#[test]
+fn simulator_scales_sanely_with_model_size() {
+    let cfg = RunConfig::default();
+    let pe = PeDesign::bp_st_1d(2);
+    let dims = Dims::new(7, 5, 37);
+    let mut fps = Vec::new();
+    for build in [
+        resnet::resnet18 as fn() -> mpcnn::cnn::Cnn,
+        resnet::resnet50,
+        resnet::resnet152,
+    ] {
+        let cnn = build().with_uniform_wq(2);
+        let d = AcceleratorDesign::new(pe, dims, &cnn, &cfg);
+        fps.push(simulate(&cnn, &d).fps);
+    }
+    assert!(fps[0] > fps[1] && fps[1] > fps[2], "{fps:?}");
+    // ResNet-152 has ~6.3x the MACs of ResNet-18; fps ratio must be in the
+    // same ballpark (utilization differences allow slack).
+    let ratio = fps[0] / fps[2];
+    assert!((4.0..10.0).contains(&ratio), "fps ratio {ratio}");
+}
+
+#[test]
+fn small_model_sim_consistent_with_big_model_sim() {
+    // The ResNet-8 (the actually-executed model) flows through the same
+    // simulator as the paper's CNNs — its numbers must be self-consistent.
+    let cfg = RunConfig::default();
+    let cnn = resnet::resnet_small(1, 10).with_uniform_wq(4);
+    let out = dse::explore_k(&cnn, &cfg, 4);
+    assert!(out.sim.fps > 1000.0, "tiny model should be very fast: {}", out.sim.fps);
+    let macs = cnn.conv_macs() as f64;
+    let implied_gops = 2.0 * macs * out.sim.fps / 1e9;
+    assert!((implied_gops - out.sim.gops).abs() / out.sim.gops < 1e-9);
+}
+
+#[test]
+fn channel_wise_mixed_precision_via_layer_split() {
+    // Channel-wise quantization = splitting a layer's output channels into
+    // groups with different w_Q. The schedule must process both groups and
+    // land between the all-low and all-high cycle counts.
+    let cfg = RunConfig::default();
+    let pe = PeDesign::bp_st_1d(1);
+    let dims = Dims::new(7, 3, 32);
+    let base = resnet::resnet18();
+
+    let make = |wq_a: u32, wq_b: u32| {
+        let mut cnn = base.clone();
+        let mut extra = Vec::new();
+        for l in cnn.layers.iter_mut() {
+            if l.name.contains("layer3") && l.k == 3 {
+                // split output channels 50/50 into two word-length groups
+                let mut half = l.clone();
+                half.od /= 2;
+                half.wq = wq_b;
+                half.name = format!("{}.hi", l.name);
+                l.od -= half.od;
+                l.wq = wq_a;
+                extra.push(half);
+            } else {
+                l.wq = 8;
+            }
+        }
+        cnn.layers.extend(extra);
+        cnn
+    };
+
+    let lo = make(1, 1);
+    let hi = make(8, 8);
+    let mixed = make(1, 8);
+    let f = |cnn: &mpcnn::cnn::Cnn| {
+        let d = AcceleratorDesign::new(pe, dims, cnn, &cfg);
+        simulate(cnn, &d).total_cycles
+    };
+    let (c_lo, c_hi, c_mixed) = (f(&lo), f(&hi), f(&mixed));
+    assert!(c_lo < c_mixed && c_mixed < c_hi, "{c_lo} < {c_mixed} < {c_hi}");
+}
+
+#[test]
+fn ablation_flat_vs_bandwidth_starved_memory() {
+    // The paper's flat memory hierarchy assumes DDR keeps up; starving the
+    // link must surface as bandwidth-limited layers and lower fps.
+    let mut cfg = RunConfig::default();
+    let cnn = resnet::resnet18().with_uniform_wq(8);
+    let out_fast = dse::explore_k(&cnn, &cfg, 2);
+    cfg.fpga.ddr_bw_bytes_per_s = 0.2e9;
+    let out_slow = dse::explore_k(&cnn, &cfg, 2);
+    assert!(
+        out_slow.sim.fps < out_fast.sim.fps,
+        "starved {} vs fast {}",
+        out_slow.sim.fps,
+        out_fast.sim.fps
+    );
+    let any_bw_limited = out_slow
+        .sim
+        .layers
+        .iter()
+        .any(|l| l.schedule.bandwidth_limited);
+    assert!(any_bw_limited);
+}
