@@ -3,8 +3,9 @@
 //!
 //! Prereq: `make artifacts`. Run: `cargo run --release --example quickstart`
 
-use anyhow::{anyhow, Result};
+use mpcnn::anyhow;
 use mpcnn::runtime::{artifacts_dir, Engine, TestSet};
+use mpcnn::util::error::Result;
 
 fn main() -> Result<()> {
     let dir = artifacts_dir();

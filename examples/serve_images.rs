@@ -13,8 +13,9 @@
 //! Prereq: `make artifacts`.
 //! Run: `cargo run --release --example serve_images -- [n_requests] [wq,wq,...]`
 
-use anyhow::{anyhow, Result};
+use mpcnn::anyhow;
 use mpcnn::cnn::resnet;
+use mpcnn::util::error::Result;
 use mpcnn::config::RunConfig;
 use mpcnn::coordinator::{BatcherConfig, Coordinator, EngineBackend, InferenceBackend};
 use mpcnn::dse;
@@ -53,8 +54,9 @@ fn main() -> Result<()> {
             continue;
         }
         // What would the DSE-chosen FPGA design do on this model family?
+        // (Memoized: repeated serve runs hit the DseCache, not the search.)
         let small = resnet::resnet_small(1, 10).with_uniform_wq(wq);
-        let out = dse::explore_k(&small, &cfg, wq.clamp(1, 4));
+        let out = dse::explore_k_cached(&small, &cfg, wq.clamp(1, 4), dse::DseCache::global());
         let fpga_fps = out.sim.fps;
         let fpga_mj = out.sim.e_total_mj();
 

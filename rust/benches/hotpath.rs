@@ -1,7 +1,7 @@
 //! PERF: microbenchmarks of the L3 hot paths — the quantities tracked in
 //! EXPERIMENTS.md §Perf. Run with `cargo bench --bench hotpath`.
 
-use mpcnn::array::search::{search_dims, SearchParams};
+use mpcnn::array::search::{search_dims, search_dims_reference, SearchParams};
 use mpcnn::array::Dims;
 use mpcnn::cnn::resnet;
 use mpcnn::config::RunConfig;
@@ -39,14 +39,26 @@ fn main() {
         black_box(simulate(&cnn152, &design152).fps)
     });
 
-    // --- the exhaustive array search (one full DSE phase) ---
+    // --- the array search (one full DSE phase): factorized/pruned/parallel
+    //     fast path vs the seed's literal triple loop ---
     let params = SearchParams::from_config(&cfg);
     let pe = PeDesign::bp_st_1d(2);
+    // Sanity outside the timing loops: the fast path must pick the identical
+    // design (the full property test lives in array::search::tests).
+    {
+        let fast = search_dims(&cnn18, &pe, &params);
+        let refr = search_dims_reference(&cnn18, &pe, &params);
+        assert_eq!(fast.dims, refr.dims, "fast search diverged from reference");
+        assert_eq!(fast.fps.to_bits(), refr.fps.to_bits());
+    }
     b.run("search_dims/resnet18-k2", || {
         black_box(search_dims(&cnn18, &pe, &params).n_pe)
     });
     b.run("search_dims/resnet152-k2", || {
         black_box(search_dims(&cnn152, &pe, &params).n_pe)
+    });
+    b.run("search_dims_reference/resnet18-k2", || {
+        black_box(search_dims_reference(&cnn18, &pe, &params).n_pe)
     });
 
     // --- bit slicing (request-path operand prep) ---

@@ -1,14 +1,34 @@
-//! Exhaustive PE-array dimension search (Fig 2 red box; produces Table II).
+//! PE-array dimension search (Fig 2 red box; produces Table II).
 //!
 //! "The greedy optimization approach for the PE array dimensions explores
 //! all possible solutions for a certain mixed-precision CNN, PE design, and
-//! hardware constraints" (§III-B). We enumerate (H, W, D) under the LUT and
-//! BRAM budgets, evaluate the full per-layer dataflow (Eq 3) for each
-//! candidate, and keep the frames/s maximizer, tie-breaking toward fewer
-//! parallel BRAM accesses (the paper's preference, Fig 8).
+//! hardware constraints" (§III-B). The seed implementation walked the full
+//! (H, W, D) grid (up to 56×16×160 ≈ 143k candidates) and re-ran the Eq-3
+//! dataflow over every CONV layer for each one. [`search_dims`] now explores
+//! the *same* solution set through a factorized, pruned, parallel engine —
+//! with results proven identical to the literal scan
+//! ([`search_dims_reference`]) by property tests:
+//!
+//! 1. **Factorization** — Eq 3 splits per axis, so a
+//!    [`FactoredWorkload`] precomputes the per-axis tile tables once and each
+//!    candidate collapses to L fused multiply-max ops over flat arrays.
+//! 2. **Monotone pruning** — at fixed (H, W): cycles are non-increasing in D
+//!    while LUT/BRAM costs are non-decreasing, so the largest feasible D is
+//!    binary-searched and only the ceil-plateau starts of the tile tables
+//!    are evaluated (between plateaus, fps is constant and BRAM_NPA grows,
+//!    so those candidates can never win the fps-then-min-NPA tie-break).
+//!    Infeasibility of (H, W, 1) prunes the rest of the W row (costs are
+//!    monotone in W too).
+//! 3. **Parallelism** — the outer H loop fans out over
+//!    `std::thread::scope`; per-H winners merge in ascending H order so
+//!    first-encountered-wins tie-breaking matches the sequential scan.
+//!
+//! The candidate maximizes frames/s, tie-breaking toward fewer parallel
+//! BRAM accesses (the paper's preference, Fig 8).
 
 use super::{bram_blocks, bram_npa, Dims};
 use crate::cnn::Cnn;
+use crate::dataflow::{bw_bits_per_cycle, FactoredWorkload};
 
 use crate::pe::cost::{fmax_mhz, lut_cost};
 use crate::pe::PeDesign;
@@ -101,8 +121,11 @@ pub fn design_brams(pe: &PeDesign, dims: Dims, n: u32, cnn: &Cnn, bram_bits: u64
 /// Evaluate one candidate: frames/s of the CNN's CONV stack.
 ///
 /// Allocation-free: uses [`crate::dataflow::cycles_only`] plus an inline
-/// roofline adjustment (identical math to [`schedule_layer`]; the agreement
-/// is property-tested in `tests::fast_path_matches_schedule_layer`).
+/// roofline adjustment (identical math to
+/// [`crate::dataflow::schedule_layer`]; the agreement is property-tested in
+/// `tests::fast_path_matches_schedule_layer`). This is the reference
+/// evaluator; the hot loop uses [`FactoredWorkload`], which is
+/// property-tested equal to this.
 fn eval_dims(
     convs: &[&crate::cnn::Layer],
     pe: &PeDesign,
@@ -110,7 +133,7 @@ fn eval_dims(
     p: &SearchParams,
     fmax: f64,
 ) -> (f64, f64, u64) {
-    let bw_bits_per_cycle = p.ddr_bw_bytes_per_s * 8.0 / (fmax * 1e6);
+    let bw_bits_per_cycle = bw_bits_per_cycle(p.ddr_bw_bytes_per_s, fmax);
     let mut cycles = 0u64;
     let mut util_num = 0.0;
     let mut util_den = 0.0;
@@ -126,56 +149,223 @@ fn eval_dims(
     (fps, util_num / util_den.max(1.0), cycles)
 }
 
-/// Exhaustive search over (H, W, D).
+/// Per-CNN quantities hoisted out of the scan.
+struct SearchCtx {
+    min_wq: u32,
+    act_buffer_bits: u64,
+    weight_buffer_bits: u64,
+    fmax: f64,
+    lut_pe: f64,
+}
+
+impl SearchCtx {
+    fn new(cnn: &Cnn, pe: &PeDesign) -> SearchCtx {
+        SearchCtx {
+            min_wq: cnn
+                .conv_layers()
+                .map(|l| l.wq)
+                .min()
+                .unwrap_or(8)
+                .max(pe.k),
+            act_buffer_bits: cnn.peak_activation_bits(),
+            weight_buffer_bits: cnn
+                .conv_layers()
+                .map(|l| l.weight_bits_total())
+                .max()
+                .unwrap_or(0),
+            fmax: fmax_mhz(pe),
+            lut_pe: lut_cost(pe),
+        }
+    }
+
+    fn luts(&self, pe: &PeDesign, dims: Dims, p: &SearchParams) -> u64 {
+        design_luts(pe, dims, p.n, self.min_wq)
+    }
+
+    fn brams(&self, dims: Dims, p: &SearchParams) -> u64 {
+        bram_blocks(
+            dims,
+            p.n,
+            self.min_wq,
+            p.bram_bits,
+            self.act_buffer_bits,
+            self.weight_buffer_bits,
+        )
+    }
+
+    /// Within both budgets? LUTs and BRAMs are non-decreasing in every axis,
+    /// which is what licenses the binary search and the W/H early-outs.
+    fn feasible(&self, pe: &PeDesign, dims: Dims, p: &SearchParams) -> bool {
+        self.luts(pe, dims, p) <= p.lut_budget && self.brams(dims, p) <= p.bram_budget
+    }
+
+    /// LUT-derived upper bound on D at fixed (h, w) — the same cap the
+    /// reference scan uses, kept so both paths bound the grid identically.
+    fn d_cap(&self, h: u32, w: u32, p: &SearchParams) -> u32 {
+        ((p.lut_budget as f64 / self.lut_pe) / (h as f64 * w as f64))
+            .floor()
+            .min(p.max_d as f64) as u32
+    }
+}
+
+/// Ranking key: frames/s, then fewer parallel BRAM accesses. Strict `>`
+/// comparisons keep first-encountered-wins semantics on exact ties.
+type Key = (f64, i64);
+
+/// Number of `search_dims` calls currently fanning out threads, so
+/// concurrent searches (e.g. [`crate::dse::explore`]'s per-k threads) split
+/// the machine instead of each grabbing `available_parallelism()` and
+/// oversubscribing the CPU by the caller count.
+static ACTIVE_SEARCHES: std::sync::atomic::AtomicUsize =
+    std::sync::atomic::AtomicUsize::new(0);
+
+struct SearchSlot;
+
+impl SearchSlot {
+    fn acquire() -> (SearchSlot, usize) {
+        use std::sync::atomic::Ordering;
+        let active = ACTIVE_SEARCHES.fetch_add(1, Ordering::Relaxed) + 1;
+        let avail = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        (SearchSlot, (avail / active).max(1))
+    }
+}
+
+impl Drop for SearchSlot {
+    fn drop(&mut self) {
+        ACTIVE_SEARCHES.fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
+    }
+}
+
+/// Fast search over (H, W, D): factorized evaluation + monotone-D pruning +
+/// parallel H scan. Selects the identical [`ArrayChoice`] (dims, fps, NPA
+/// tie-break, resource accounting — bit-for-bit) as
+/// [`search_dims_reference`]; the equivalence is property-tested over
+/// randomized CNNs and budgets, including infeasible ones.
 ///
 /// H candidates are restricted to sizes that tile the CNN's feature-map
-/// heights without obvious waste (divisors of the most common I_H values
-/// plus a dense range) — this matches the paper's observation that H=7 wins
-/// for ResNets (all stages are multiples of 7).
+/// heights without obvious waste — this matches the paper's observation that
+/// H=7 wins for ResNets (all stages are multiples of 7).
 pub fn search_dims(cnn: &Cnn, pe: &PeDesign, p: &SearchParams) -> ArrayChoice {
-    let min_wq = cnn
-        .conv_layers()
-        .map(|l| l.wq)
-        .min()
-        .unwrap_or(8)
-        .max(pe.k);
     let convs: Vec<&crate::cnn::Layer> = cnn.conv_layers().collect();
-    let fmax = fmax_mhz(pe);
-    // Hoist the per-CNN buffer sizes out of the (H, W, D) loop.
-    let act_buffer_bits = cnn.peak_activation_bits();
-    let weight_buffer_bits = cnn
-        .conv_layers()
-        .map(|l| l.weight_bits_total())
-        .max()
-        .unwrap_or(0);
+    let sc = SearchCtx::new(cnn, pe);
+    let bw = bw_bits_per_cycle(p.ddr_bw_bytes_per_s, sc.fmax);
+    let fw = FactoredWorkload::new(
+        &convs,
+        pe.k,
+        p.n,
+        Dims::new(p.max_h.max(1), p.max_w.max(1), p.max_d.max(1)),
+        bw,
+    );
 
-    let mut best: Option<(ArrayChoice, (f64, i64))> = None;
+    // Best candidate for one H row: ascending W, breakpoint-D only.
+    let scan_h = |h: u32| -> Option<(Dims, Key)> {
+        let mut best: Option<(Dims, Key)> = None;
+        for w in 1..=p.max_w {
+            if !sc.feasible(pe, Dims::new(h, w, 1), p) {
+                // Costs are monotone in W: the rest of this row cannot fit
+                // either. (The reference scan merely evaluates and rejects
+                // these, so skipping them cannot change the winner.)
+                break;
+            }
+            // Largest feasible D in [1, d_cap] by binary search (cost
+            // monotone in D; D=1 known feasible).
+            let (mut lo, mut hi) = (1u32, sc.d_cap(h, w, p).max(1));
+            while lo < hi {
+                let mid = lo + (hi - lo + 1) / 2;
+                if sc.feasible(pe, Dims::new(h, w, mid), p) {
+                    lo = mid;
+                } else {
+                    hi = mid - 1;
+                }
+            }
+            let d_max = lo;
+            for &d in fw.d_breakpoints() {
+                if d > d_max {
+                    break;
+                }
+                let dims = Dims::new(h, w, d);
+                let cycles = fw.cycles(dims);
+                let fps = sc.fmax * 1e6 / cycles.max(1) as f64;
+                let key: Key = (fps, -(bram_npa(dims, p.n, sc.min_wq) as i64));
+                if best.map_or(true, |(_, bk)| key > bk) {
+                    best = Some((dims, key));
+                }
+            }
+        }
+        best
+    };
+
+    // Parallel H fan-out into per-H slots; merge preserves ascending-H
+    // first-encountered-wins order, matching the sequential triple loop.
+    let mut per_h: Vec<Option<(Dims, Key)>> = vec![None; p.max_h as usize];
+    let (_slot, budget) = SearchSlot::acquire();
+    let n_threads = budget.min(per_h.len().max(1));
+    let chunk = per_h.len().div_ceil(n_threads.max(1)).max(1);
+    std::thread::scope(|s| {
+        for (ci, slots) in per_h.chunks_mut(chunk).enumerate() {
+            let scan_h = &scan_h;
+            s.spawn(move || {
+                for (j, slot) in slots.iter_mut().enumerate() {
+                    *slot = scan_h((ci * chunk + j + 1) as u32);
+                }
+            });
+        }
+    });
+    let mut best: Option<(Dims, Key)> = None;
+    for cand in per_h.into_iter().flatten() {
+        if best.map_or(true, |(_, bk)| cand.1 > bk) {
+            best = Some(cand);
+        }
+    }
+
+    match best {
+        Some((dims, _)) => {
+            let (cycles, util) = fw.cycles_and_utilization(dims);
+            ArrayChoice {
+                pe: *pe,
+                dims,
+                n_pe: dims.n_pe(),
+                fmax_mhz: sc.fmax,
+                fps: sc.fmax * 1e6 / cycles.max(1) as f64,
+                avg_utilization: util,
+                luts_used: sc.luts(pe, dims, p),
+                brams_used: sc.brams(dims, p),
+                bram_npa: bram_npa(dims, p.n, sc.min_wq),
+                total_cycles: cycles,
+                feasible: true,
+            }
+        }
+        None => infeasible_fallback(&convs, pe, p, &sc),
+    }
+}
+
+/// The literal §III-B exhaustive scan the paper describes (and the seed
+/// shipped). Kept as the ground truth for equivalence property tests and
+/// for before/after benchmarking in `benches/hotpath.rs`; production callers
+/// use [`search_dims`].
+pub fn search_dims_reference(cnn: &Cnn, pe: &PeDesign, p: &SearchParams) -> ArrayChoice {
+    let convs: Vec<&crate::cnn::Layer> = cnn.conv_layers().collect();
+    let sc = SearchCtx::new(cnn, pe);
+
+    let mut best: Option<(ArrayChoice, Key)> = None;
     for h in 1..=p.max_h {
         for w in 1..=p.max_w {
             // Upper-bound D from the LUT budget to prune the scan.
-            let lut_pe = lut_cost(pe);
-            let d_cap = ((p.lut_budget as f64 / lut_pe) / (h as f64 * w as f64))
-                .floor()
-                .min(p.max_d as f64) as u32;
+            let d_cap = sc.d_cap(h, w, p);
             for d in 1..=d_cap.max(1) {
                 let dims = Dims::new(h, w, d);
-                let luts = design_luts(pe, dims, p.n, min_wq);
+                let luts = sc.luts(pe, dims, p);
                 if luts > p.lut_budget {
                     break; // d only grows
                 }
-                let brams = crate::array::bram_blocks(
-                    dims,
-                    p.n,
-                    min_wq,
-                    p.bram_bits,
-                    act_buffer_bits,
-                    weight_buffer_bits,
-                );
+                let brams = sc.brams(dims, p);
                 if brams > p.bram_budget {
                     break;
                 }
-                let (fps, util, cycles) = eval_dims(&convs, pe, dims, p, fmax);
-                let npa = bram_npa(dims, p.n, min_wq);
+                let (fps, util, cycles) = eval_dims(&convs, pe, dims, p, sc.fmax);
+                let npa = bram_npa(dims, p.n, sc.min_wq);
                 let key = (fps, -(npa as i64));
                 let better = match &best {
                     None => true,
@@ -187,7 +377,7 @@ pub fn search_dims(cnn: &Cnn, pe: &PeDesign, p: &SearchParams) -> ArrayChoice {
                             pe: *pe,
                             dims,
                             n_pe: dims.n_pe(),
-                            fmax_mhz: fmax_mhz(pe),
+                            fmax_mhz: sc.fmax,
                             fps,
                             avg_utilization: util,
                             luts_used: luts,
@@ -204,44 +394,196 @@ pub fn search_dims(cnn: &Cnn, pe: &PeDesign, p: &SearchParams) -> ArrayChoice {
     }
     match best {
         Some((choice, _)) => choice,
-        None => {
-            // Nothing fit (e.g. the BRAM budget is below even the buffer
-            // capacity floor). Return the minimal array, flagged infeasible,
-            // so callers can report instead of panicking.
-            let dims = Dims::new(1, 1, 1);
-            let (fps, util, cycles) = eval_dims(&convs, pe, dims, p, fmax);
-            ArrayChoice {
-                pe: *pe,
-                dims,
-                n_pe: 1,
-                fmax_mhz: fmax,
-                fps,
-                avg_utilization: util,
-                luts_used: design_luts(pe, dims, p.n, min_wq),
-                brams_used: crate::array::bram_blocks(
-                    dims,
-                    p.n,
-                    min_wq,
-                    p.bram_bits,
-                    act_buffer_bits,
-                    weight_buffer_bits,
-                ),
-                bram_npa: bram_npa(dims, p.n, min_wq),
-                total_cycles: cycles,
-                feasible: false,
-            }
-        }
+        None => infeasible_fallback(&convs, pe, p, &sc),
+    }
+}
+
+/// Nothing fit (e.g. the BRAM budget is below even the buffer capacity
+/// floor). Return the minimal array, flagged infeasible, so callers can
+/// report instead of panicking.
+fn infeasible_fallback(
+    convs: &[&crate::cnn::Layer],
+    pe: &PeDesign,
+    p: &SearchParams,
+    sc: &SearchCtx,
+) -> ArrayChoice {
+    let dims = Dims::new(1, 1, 1);
+    let (fps, util, cycles) = eval_dims(convs, pe, dims, p, sc.fmax);
+    ArrayChoice {
+        pe: *pe,
+        dims,
+        n_pe: 1,
+        fmax_mhz: sc.fmax,
+        fps,
+        avg_utilization: util,
+        luts_used: sc.luts(pe, dims, p),
+        brams_used: sc.brams(dims, p),
+        bram_npa: bram_npa(dims, p.n, sc.min_wq),
+        total_cycles: cycles,
+        feasible: false,
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cnn::resnet;
+    use crate::cnn::{resnet, Layer};
     use crate::config::RunConfig;
+    use crate::dataflow::{schedule_layer, ScheduleCtx};
+    use crate::util::prop::{check, check_close, check_eq, forall};
+    use crate::util::rng::Rng;
 
     fn params() -> SearchParams {
         SearchParams::from_config(&RunConfig::default())
+    }
+
+    fn random_layers(rng: &mut Rng) -> Vec<Layer> {
+        let n = rng.range(1, 8);
+        (0..n)
+            .map(|i| {
+                let mut l = Layer::conv(
+                    &format!("l{i}"),
+                    [7u32, 14, 28, 56, 112][rng.range(0, 5)],
+                    1 << rng.range(0, 9),
+                    1 + rng.range(0, 512) as u32,
+                    *rng.choose(&[1u32, 3, 5, 7]),
+                    *rng.choose(&[1u32, 2]),
+                );
+                l.wq = *rng.choose(&[1u32, 2, 4, 8]);
+                l
+            })
+            .collect()
+    }
+
+    fn random_cnn(rng: &mut Rng) -> crate::cnn::Cnn {
+        crate::cnn::Cnn {
+            name: "prop".into(),
+            input_hw: 32,
+            input_channels: 3,
+            classes: 10,
+            layers: random_layers(rng),
+        }
+    }
+
+    /// The property promised at `eval_dims`' doc: the allocation-free
+    /// evaluator (cycles_only + inline roofline) and the factored evaluator
+    /// both agree with the full [`schedule_layer`] — exactly.
+    #[test]
+    fn fast_path_matches_schedule_layer() {
+        forall(500, |rng: &mut Rng| {
+            let layers = random_layers(rng);
+            let convs: Vec<&Layer> = layers.iter().collect();
+            let k = *rng.choose(&[1u32, 2, 4]);
+            let pe = PeDesign::bp_st_1d(k);
+            let mut p = params();
+            p.max_h = 14;
+            p.max_w = 8;
+            p.max_d = 48;
+            let fmax = fmax_mhz(&pe);
+            let dims = Dims::new(
+                rng.range(1, 15) as u32,
+                rng.range(1, 9) as u32,
+                rng.range(1, 49) as u32,
+            );
+
+            // Ground truth: the full per-layer scheduler.
+            let ctx = ScheduleCtx {
+                dims,
+                k,
+                n: p.n,
+                fmax_mhz: fmax,
+                ddr_bw_bytes_per_s: p.ddr_bw_bytes_per_s,
+                act_buffer_bits: u64::MAX,
+            };
+            let mut cycles = 0u64;
+            let (mut un, mut ud) = (0.0f64, 0.0f64);
+            for l in &convs {
+                let s = schedule_layer(l, &ctx);
+                cycles += s.cycles;
+                un += s.utilization * l.macs() as f64;
+                ud += l.macs() as f64;
+            }
+            let want_fps = fmax * 1e6 / cycles.max(1) as f64;
+            let want_util = un / ud.max(1.0);
+
+            let (fps_e, util_e, cycles_e) = eval_dims(&convs, &pe, dims, &p, fmax);
+            check_eq(cycles_e, cycles, "eval_dims cycles")?;
+            check(fps_e.to_bits() == want_fps.to_bits(), "eval_dims fps")?;
+            check_close(util_e, want_util, 1e-12, "eval_dims utilization")?;
+
+            let bw = crate::dataflow::bw_bits_per_cycle(p.ddr_bw_bytes_per_s, fmax);
+            let fw = FactoredWorkload::new(
+                &convs,
+                k,
+                p.n,
+                Dims::new(p.max_h, p.max_w, p.max_d),
+                bw,
+            );
+            check_eq(fw.cycles(dims), cycles, "factored cycles")?;
+            let (cyc_f, util_f) = fw.cycles_and_utilization(dims);
+            check_eq(cyc_f, cycles, "factored cycles (+util)")?;
+            check(
+                util_f.to_bits() == util_e.to_bits(),
+                "factored utilization must be bit-identical to eval_dims",
+            )
+        });
+    }
+
+    /// The fast search must return the *identical* ArrayChoice as the
+    /// brute-force reference on randomized CNNs and budgets — including
+    /// infeasible-budget cases — down to tie-breaks and f64 bits.
+    #[test]
+    fn prop_fast_search_equals_reference() {
+        forall(60, |rng: &mut Rng| {
+            let cnn = random_cnn(rng);
+            let pe = PeDesign::bp_st_1d(*rng.choose(&[1u32, 2, 4]));
+            let p = SearchParams {
+                lut_budget: *rng.choose(&[8_000u64, 30_000, 120_000, 399_024]),
+                bram_budget: *rng.choose(&[10u64, 300, 900, 2_483]),
+                bram_bits: 20 * 1024,
+                ddr_bw_bytes_per_s: *rng.choose(&[0.5e9, 12.8e9]),
+                n: 8,
+                max_h: *rng.choose(&[8u32, 14]),
+                max_w: *rng.choose(&[4u32, 6]),
+                max_d: *rng.choose(&[16u32, 48]),
+            };
+            let fast = search_dims(&cnn, &pe, &p);
+            let refr = search_dims_reference(&cnn, &pe, &p);
+            check_eq(fast.feasible, refr.feasible, "feasible flag")?;
+            check_eq(fast.dims, refr.dims, "dims")?;
+            check_eq(fast.n_pe, refr.n_pe, "n_pe")?;
+            check_eq(fast.total_cycles, refr.total_cycles, "total_cycles")?;
+            check_eq(fast.luts_used, refr.luts_used, "luts_used")?;
+            check_eq(fast.brams_used, refr.brams_used, "brams_used")?;
+            check_eq(fast.bram_npa, refr.bram_npa, "bram_npa")?;
+            check(
+                fast.fps.to_bits() == refr.fps.to_bits(),
+                &format!("fps bits: {} vs {}", fast.fps, refr.fps),
+            )?;
+            check(
+                fast.avg_utilization.to_bits() == refr.avg_utilization.to_bits(),
+                &format!(
+                    "utilization bits: {} vs {}",
+                    fast.avg_utilization, refr.avg_utilization
+                ),
+            )
+        });
+    }
+
+    #[test]
+    fn fast_search_equals_reference_on_resnet18_default_params() {
+        // The headline case with the production search space (56×16×160).
+        let cnn = resnet::resnet18().with_uniform_wq(2);
+        let p = params();
+        for k in [1u32, 2, 4] {
+            let pe = PeDesign::bp_st_1d(k);
+            let fast = search_dims(&cnn, &pe, &p);
+            let refr = search_dims_reference(&cnn, &pe, &p);
+            assert_eq!(fast.dims, refr.dims, "k={k}");
+            assert_eq!(fast.total_cycles, refr.total_cycles, "k={k}");
+            assert_eq!(fast.fps.to_bits(), refr.fps.to_bits(), "k={k}");
+            assert_eq!(fast.bram_npa, refr.bram_npa, "k={k}");
+        }
     }
 
     #[test]
@@ -305,6 +647,10 @@ mod tests {
         let c = search_dims(&cnn, &PeDesign::bp_st_1d(2), &p);
         assert!(!c.feasible);
         assert_eq!(c.n_pe, 1);
+        // And identically so through the reference scan.
+        let r = search_dims_reference(&cnn, &PeDesign::bp_st_1d(2), &p);
+        assert!(!r.feasible);
+        assert_eq!(c.fps.to_bits(), r.fps.to_bits());
     }
 
     #[test]

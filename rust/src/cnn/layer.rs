@@ -190,6 +190,29 @@ impl Cnn {
             .map(|l| l.output_elems() * l.act_bits as u64)
             .sum()
     }
+
+    /// Order-sensitive structural hash (FNV-1a, process-stable) over
+    /// everything the DSE and simulator read from this CNN — names, input
+    /// geometry, and every layer field. Used as the
+    /// [`crate::dse::DseCache`] key component.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::util::fnv::Fnv1a::new();
+        h.write_delimited(self.name.as_bytes());
+        h.write_u32(self.input_hw);
+        h.write_u32(self.input_channels);
+        h.write_u32(self.classes);
+        for l in &self.layers {
+            h.write_delimited(l.name.as_bytes());
+            let kind = match l.kind {
+                LayerKind::Conv => 0u32,
+                LayerKind::Fc => 1,
+            };
+            for v in [kind, l.ih, l.iw, l.od, l.k, l.s, l.wq, l.act_bits] {
+                h.write_u32(v);
+            }
+        }
+        h.finish()
+    }
 }
 
 #[cfg(test)]
@@ -243,5 +266,31 @@ mod tests {
     fn odd_spatial_ceil() {
         let l = Layer::conv("odd", 7, 8, 8, 3, 2);
         assert_eq!(l.oh(), 4);
+    }
+
+    #[test]
+    fn fingerprint_sensitive_to_structure() {
+        let base = Cnn {
+            name: "t".into(),
+            input_hw: 32,
+            input_channels: 3,
+            classes: 10,
+            layers: vec![
+                Layer::conv("a", 32, 3, 16, 3, 1),
+                Layer::conv("b", 32, 16, 16, 3, 1),
+            ],
+        };
+        let same = base.clone();
+        assert_eq!(base.fingerprint(), same.fingerprint());
+        // Any DSE-relevant change must move the fingerprint.
+        let mut requantized = base.clone();
+        requantized.layers[1].wq = 2;
+        assert_ne!(base.fingerprint(), requantized.fingerprint());
+        let mut widened = base.clone();
+        widened.layers[1].od = 32;
+        assert_ne!(base.fingerprint(), widened.fingerprint());
+        let mut renamed = base.clone();
+        renamed.name = "u".into();
+        assert_ne!(base.fingerprint(), renamed.fingerprint());
     }
 }

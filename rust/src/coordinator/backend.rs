@@ -1,8 +1,9 @@
 //! Inference backends for the coordinator: the production PJRT engine and a
 //! deterministic mock for tests/benches.
 
+use crate::anyhow;
 use crate::runtime::Engine;
-use anyhow::{anyhow, Result};
+use crate::util::error::Result;
 
 /// Anything that can run a batch of images to logits.
 ///

@@ -13,7 +13,8 @@ pub mod metrics;
 pub use backend::{EngineBackend, InferenceBackend, MockBackend};
 pub use metrics::Metrics;
 
-use anyhow::Result;
+use crate::util::error::Result;
+use std::fmt;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
@@ -67,15 +68,26 @@ pub struct Response {
 }
 
 /// Submission error.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum SubmitError {
-    #[error("queue full (backpressure)")]
     Backpressure,
-    #[error("coordinator is shut down")]
     Closed,
-    #[error("bad input: expected {expected} elements, got {got}")]
     BadInput { expected: usize, got: usize },
 }
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::Backpressure => write!(f, "queue full (backpressure)"),
+            SubmitError::Closed => write!(f, "coordinator is shut down"),
+            SubmitError::BadInput { expected, got } => {
+                write!(f, "bad input: expected {expected} elements, got {got}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// Handle for submitting requests; cheap to clone across client threads.
 #[derive(Clone)]
@@ -201,8 +213,8 @@ impl Coordinator {
             .expect("spawn batcher");
         let image_len = ready_rx
             .recv()
-            .map_err(|_| anyhow::anyhow!("batcher thread died during startup"))?
-            .map_err(|e| anyhow::anyhow!("backend factory failed: {e}"))?;
+            .map_err(|_| crate::anyhow!("batcher thread died during startup"))?
+            .map_err(|e| crate::anyhow!("backend factory failed: {e}"))?;
         Ok(Coordinator {
             client: Client { tx, image_len },
             metrics,
@@ -365,7 +377,7 @@ fn batcher_loop(
 mod tests {
     use super::*;
 
-    fn mock(latency_us: u64) -> impl FnOnce() -> anyhow::Result<Box<dyn InferenceBackend>> + Send + 'static {
+    fn mock(latency_us: u64) -> impl FnOnce() -> Result<Box<dyn InferenceBackend>> + Send + 'static {
         move || Ok(Box::new(MockBackend::new(12, 4, vec![1, 4, 8], latency_us)) as Box<dyn InferenceBackend>)
     }
 

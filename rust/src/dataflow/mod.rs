@@ -51,6 +51,13 @@ pub struct ScheduleCtx {
     pub act_buffer_bits: u64,
 }
 
+/// DDR bits deliverable per clock cycle — the roofline conversion shared by
+/// [`schedule_layer`], the array search, and the simulator.
+#[inline]
+pub fn bw_bits_per_cycle(ddr_bw_bytes_per_s: f64, fmax_mhz: f64) -> f64 {
+    ddr_bw_bytes_per_s * 8.0 / (fmax_mhz * 1e6)
+}
+
 /// Eq 3: schedule one layer.
 ///
 /// `P_actual(l) = ceil(I_H/H) · ceil(I_W/(W·N/w_Q)) · ceil(O_D/D) · I_H · (K/S)²`
@@ -82,7 +89,7 @@ pub fn schedule_layer(layer: &Layer, ctx: &ScheduleCtx) -> LayerSchedule {
     // and stretches ("the temporal reuse P_actual defines the required
     // bandwidth, which is fed back to the roofline model").
     let weight_bits = layer.weight_bits_total();
-    let bw_bits_per_cycle = ctx.ddr_bw_bytes_per_s * 8.0 / (ctx.fmax_mhz * 1e6);
+    let bw_bits_per_cycle = bw_bits_per_cycle(ctx.ddr_bw_bytes_per_s, ctx.fmax_mhz);
     let min_cycles_for_weights = (weight_bits as f64 / bw_bits_per_cycle).ceil() as u64;
     let cycles = compute_cycles.max(min_cycles_for_weights);
     let bandwidth_limited = min_cycles_for_weights > compute_cycles;
@@ -138,6 +145,189 @@ pub fn cycles_only(layer: &Layer, dims: Dims, k: u32, n: u32) -> (u64, f64) {
     (compute_cycles.max(1), ideal)
 }
 
+/// Struct-of-arrays factorization of Eq 3 over a CNN's CONV stack.
+///
+/// Eq 3 factors per axis: `compute(l; H, W, D) = th_l(H) · tw_l(W) · td_l(D)
+/// · I_H(l) · (K/S)²` where `th = ceil(I_H/H)` depends only on H, `tw =
+/// ceil(I_W/(W·N/w_Q))` only on W, and `td = ceil(O_D/D)` only on D. This
+/// precomputes the three per-axis tile tables once per (CNN, PE) in
+/// `O(L·(maxH+maxW+maxD))`, so each (H, W, D) candidate in the array DSE
+/// collapses to L fused multiply-max operations over flat arrays instead of
+/// per-layer `div_ceil` chains through [`Layer`] structs.
+///
+/// **Exactness contract:** [`FactoredWorkload::cycles`] and
+/// [`FactoredWorkload::cycles_and_utilization`] reproduce the arithmetic of
+/// [`schedule_layer`]/[`cycles_only`] operation-for-operation (same integer
+/// products, same f64 multiply/divide order), so results are bit-identical
+/// to the unfactored path — property-tested in this module and in
+/// `tests/integration_dse.rs`.
+#[derive(Clone, Debug)]
+pub struct FactoredWorkload {
+    n_layers: usize,
+    max_dims: Dims,
+    /// `th[(h-1)·L + l] = ceil(I_H(l) / h)`, h-major for contiguous layer scans.
+    th: Vec<u64>,
+    /// `tw[(w-1)·L + l] = ceil(I_W(l) / (w · N/w_Q(l)))`, w-major.
+    tw: Vec<u64>,
+    /// `td[(d-1)·L + l] = ceil(O_D(l) / d)`, d-major.
+    td: Vec<u64>,
+    /// Per-layer serial factor I_H (feature-map columns processed serially).
+    ih: Vec<u64>,
+    /// Per-layer kernel factor (K/S)².
+    kernel_steps: Vec<f64>,
+    /// Eq-3 numerator per layer: I_H² · I_W · O_D · (K/S)².
+    ideal_num: Vec<f64>,
+    /// Per-layer parallel-word factor N/w_Q.
+    f: Vec<u64>,
+    /// Per-layer MACs as f64 (utilization weights).
+    macs: Vec<f64>,
+    /// Roofline floor per layer: cycles to stream its weights from DDR.
+    weight_floor: Vec<u64>,
+    /// Ascending D values where any layer's `td` differs from `td(d-1)`
+    /// (always starts at 1). Between consecutive breakpoints every layer's
+    /// `td` is constant, so compute cycles are constant too — candidates
+    /// there are dominated by the plateau start (same fps, higher BRAM_NPA).
+    d_breaks: Vec<u32>,
+}
+
+impl FactoredWorkload {
+    /// Precompute the tables for `layers` on a PE with slice `k`, activation
+    /// word-length `n`, search bounds `max_dims`, and a DDR link delivering
+    /// `bw_bits_per_cycle` (see [`bw_bits_per_cycle`]).
+    pub fn new(
+        layers: &[&Layer],
+        k: u32,
+        n: u32,
+        max_dims: Dims,
+        bw_bits_per_cycle: f64,
+    ) -> FactoredWorkload {
+        let l_n = layers.len();
+        let mut th = Vec::with_capacity(max_dims.h as usize * l_n);
+        for h in 1..=max_dims.h {
+            for l in layers {
+                th.push((l.ih as u64).div_ceil(h as u64));
+            }
+        }
+        let f: Vec<u64> = layers
+            .iter()
+            .map(|l| parallel_words(n, l.wq, k) as u64)
+            .collect();
+        let mut tw = Vec::with_capacity(max_dims.w as usize * l_n);
+        for w in 1..=max_dims.w {
+            for (i, l) in layers.iter().enumerate() {
+                tw.push((l.iw as u64).div_ceil(w as u64 * f[i]));
+            }
+        }
+        let mut td = Vec::with_capacity(max_dims.d as usize * l_n);
+        for d in 1..=max_dims.d {
+            for l in layers {
+                td.push((l.od as u64).div_ceil(d as u64));
+            }
+        }
+        let mut d_breaks = vec![1u32];
+        for d in 2..=max_dims.d {
+            let cur = &td[(d as usize - 1) * l_n..d as usize * l_n];
+            let prev = &td[(d as usize - 2) * l_n..(d as usize - 1) * l_n];
+            if cur != prev {
+                d_breaks.push(d);
+            }
+        }
+        let kernel_steps: Vec<f64> = layers
+            .iter()
+            .map(|l| (l.k as f64 / l.s as f64).powi(2))
+            .collect();
+        let ideal_num: Vec<f64> = layers
+            .iter()
+            .zip(&kernel_steps)
+            .map(|(l, &ks)| (l.ih as f64).powi(2) * l.iw as f64 * l.od as f64 * ks)
+            .collect();
+        FactoredWorkload {
+            n_layers: l_n,
+            max_dims,
+            th,
+            tw,
+            td,
+            ih: layers.iter().map(|l| l.ih as u64).collect(),
+            kernel_steps,
+            ideal_num,
+            f,
+            macs: layers.iter().map(|l| l.macs() as f64).collect(),
+            weight_floor: layers
+                .iter()
+                .map(|l| (l.weight_bits_total() as f64 / bw_bits_per_cycle).ceil() as u64)
+                .collect(),
+            d_breaks,
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    pub fn max_dims(&self) -> Dims {
+        self.max_dims
+    }
+
+    /// The D values worth evaluating at any fixed (H, W): cycles are
+    /// constant on `[break_i, break_{i+1})` while BRAM_NPA strictly grows,
+    /// so only plateau starts can win the fps-then-min-NPA tie-break.
+    pub fn d_breakpoints(&self) -> &[u32] {
+        &self.d_breaks
+    }
+
+    #[inline]
+    fn axis_rows(&self, dims: Dims) -> (&[u64], &[u64], &[u64]) {
+        debug_assert!(
+            dims.h <= self.max_dims.h && dims.w <= self.max_dims.w && dims.d <= self.max_dims.d,
+            "candidate {dims} outside precomputed bounds {}",
+            self.max_dims
+        );
+        let l_n = self.n_layers;
+        (
+            &self.th[(dims.h as usize - 1) * l_n..dims.h as usize * l_n],
+            &self.tw[(dims.w as usize - 1) * l_n..dims.w as usize * l_n],
+            &self.td[(dims.d as usize - 1) * l_n..dims.d as usize * l_n],
+        )
+    }
+
+    /// Total roofline-floored cycles for one candidate — the array-DSE inner
+    /// loop. Bit-identical to summing `schedule_layer(l, ctx).cycles`.
+    #[inline]
+    pub fn cycles(&self, dims: Dims) -> u64 {
+        let (th, tw, td) = self.axis_rows(dims);
+        let mut total = 0u64;
+        for i in 0..self.n_layers {
+            let compute = ((th[i] * tw[i] * td[i] * self.ih[i]) as f64
+                * self.kernel_steps[i])
+                .ceil() as u64;
+            total += compute.max(1).max(self.weight_floor[i]);
+        }
+        total
+    }
+
+    /// Cycles plus MAC-weighted average utilization — evaluated once for the
+    /// search winner (utilization does not participate in candidate
+    /// ranking). Bit-identical to the unfactored aggregation over
+    /// [`schedule_layer`].
+    pub fn cycles_and_utilization(&self, dims: Dims) -> (u64, f64) {
+        let (th, tw, td) = self.axis_rows(dims);
+        let mut total = 0u64;
+        let (mut util_num, mut util_den) = (0.0f64, 0.0f64);
+        for i in 0..self.n_layers {
+            let compute = ((th[i] * tw[i] * td[i] * self.ih[i]) as f64
+                * self.kernel_steps[i])
+                .ceil() as u64;
+            let compute = compute.max(1);
+            total += compute.max(self.weight_floor[i]);
+            let n_pe_eff = dims.n_pe() as f64 * self.f[i] as f64;
+            let ideal = self.ideal_num[i] / n_pe_eff;
+            util_num += (ideal / compute as f64).min(1.0) * self.macs[i];
+            util_den += self.macs[i];
+        }
+        (total, util_num / util_den.max(1.0))
+    }
+}
+
 /// Computational intensity of a layer in Ops per DDR byte — the roofline
 /// x-axis.
 pub fn computational_intensity(layer: &Layer) -> f64 {
@@ -157,7 +347,7 @@ pub fn roofline_gops(peak_gops: f64, bw_bytes_per_s: f64, intensity: f64) -> f64
 mod tests {
     use super::*;
     use crate::cnn::Layer;
-    use crate::util::prop::{check, forall};
+    use crate::util::prop::{check, check_close, check_eq, forall};
     use crate::util::rng::Rng;
 
     fn ctx(dims: Dims, k: u32) -> ScheduleCtx {
@@ -320,5 +510,89 @@ mod tests {
         assert!((roofline_gops(100.0, 10e9, 1.0) - 10.0).abs() < 1e-9);
         let l = Layer::conv("i", 56, 64, 64, 3, 1);
         assert!(computational_intensity(&l) > 1.0);
+    }
+
+    #[test]
+    fn prop_factored_workload_matches_schedule_layer() {
+        // The struct-of-arrays fast path must agree *bit for bit* with the
+        // per-layer scheduler on cycles, and to f64 round-off on utilization
+        // aggregation, for arbitrary layer stacks and candidate dims.
+        forall(400, |rng: &mut Rng| {
+            let n_layers = rng.range(1, 6);
+            let mut layers = Vec::new();
+            for i in 0..n_layers {
+                let mut l = Layer::conv(
+                    &format!("r{i}"),
+                    [7u32, 14, 28, 56, 112][rng.range(0, 5)],
+                    1 << rng.range(0, 9),
+                    1 << rng.range(0, 9),
+                    *rng.choose(&[1u32, 3, 5, 7]),
+                    *rng.choose(&[1u32, 2]),
+                );
+                l.wq = *rng.choose(&[1u32, 2, 4, 8]);
+                layers.push(l);
+            }
+            let refs: Vec<&Layer> = layers.iter().collect();
+            let k = *rng.choose(&[1u32, 2, 4]);
+            let max_dims = Dims::new(12, 8, 48);
+            let c = ctx(Dims::new(1, 1, 1), k);
+            let bw = bw_bits_per_cycle(c.ddr_bw_bytes_per_s, c.fmax_mhz);
+            let fw = FactoredWorkload::new(&refs, k, c.n, max_dims, bw);
+
+            let dims = Dims::new(
+                rng.range(1, 13) as u32,
+                rng.range(1, 9) as u32,
+                rng.range(1, 49) as u32,
+            );
+            let ctx = ScheduleCtx { dims, ..c };
+            let mut want_cycles = 0u64;
+            let (mut un, mut ud) = (0.0f64, 0.0f64);
+            for l in &refs {
+                let s = schedule_layer(l, &ctx);
+                want_cycles += s.cycles;
+                un += s.utilization * l.macs() as f64;
+                ud += l.macs() as f64;
+            }
+            let want_util = un / ud.max(1.0);
+            check_eq(fw.cycles(dims), want_cycles, "factored cycles")?;
+            let (cyc2, util) = fw.cycles_and_utilization(dims);
+            check_eq(cyc2, want_cycles, "factored cycles (+util path)")?;
+            check_close(util, want_util, 1e-12, "factored utilization")
+        });
+    }
+
+    #[test]
+    fn d_breakpoints_start_at_one_and_capture_all_td_changes() {
+        let layers = [Layer::conv("a", 56, 64, 96, 3, 1), {
+            let mut l = Layer::conv("b", 28, 128, 130, 1, 1);
+            l.wq = 2;
+            l
+        }];
+        let refs: Vec<&Layer> = layers.iter().collect();
+        let fw = FactoredWorkload::new(&refs, 1, 8, Dims::new(4, 4, 64), 1e9);
+        let breaks = fw.d_breakpoints();
+        assert_eq!(breaks[0], 1);
+        // Every d where any ceil(od/d) changes must be listed.
+        for d in 2..=64u32 {
+            let changes = layers.iter().any(|l| {
+                (l.od as u64).div_ceil(d as u64) != (l.od as u64).div_ceil(d as u64 - 1)
+            });
+            assert_eq!(
+                breaks.contains(&d),
+                changes,
+                "breakpoint set wrong at d={d}"
+            );
+        }
+        // And between breakpoints, cycles are constant in d (the pruning
+        // invariant the search relies on).
+        for d in 2..=64u32 {
+            if !breaks.contains(&d) {
+                assert_eq!(
+                    fw.cycles(Dims::new(3, 2, d)),
+                    fw.cycles(Dims::new(3, 2, d - 1)),
+                    "cycles changed off-breakpoint at d={d}"
+                );
+            }
+        }
     }
 }

@@ -20,6 +20,9 @@ use crate::config::RunConfig;
 use crate::pe::dse::{best_for, evaluate, PeEval};
 use crate::pe::PeDesign;
 use crate::sim::{simulate, AcceleratorDesign, SimResult};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
 
 /// Result of the holistic DSE for one (CNN, k) pair.
 #[derive(Clone, Debug)]
@@ -68,10 +71,25 @@ pub fn explore_k(cnn: &Cnn, cfg: &RunConfig, k: u32) -> DseOutcome {
     }
 }
 
-/// Run the full DSE over every candidate slice and pick the fps winner.
-pub fn explore(cnn: &Cnn, cfg: &RunConfig) -> DseReport {
+/// Shared driver for [`explore`]/[`explore_cached`]: fan the per-slice DSE
+/// out over scoped threads (each slice's array search additionally
+/// parallelizes its own H scan, splitting the machine via the active-search
+/// budget) and pick the fps winner. Slice order in `per_k`, and therefore
+/// tie-breaking, is identical to a sequential scan.
+fn explore_with(
+    cnn: &Cnn,
+    cfg: &RunConfig,
+    per_slice: impl Fn(u32) -> DseOutcome + Sync,
+) -> DseReport {
     assert!(!cfg.slices.is_empty());
-    let per_k: Vec<DseOutcome> = cfg.slices.iter().map(|&k| explore_k(cnn, cfg, k)).collect();
+    let mut slots: Vec<Option<DseOutcome>> = (0..cfg.slices.len()).map(|_| None).collect();
+    let per_slice = &per_slice;
+    std::thread::scope(|s| {
+        for (slot, &k) in slots.iter_mut().zip(cfg.slices.iter()) {
+            s.spawn(move || *slot = Some(per_slice(k)));
+        }
+    });
+    let per_k: Vec<DseOutcome> = slots.into_iter().map(|o| o.unwrap()).collect();
     let best = per_k
         .iter()
         .enumerate()
@@ -84,6 +102,102 @@ pub fn explore(cnn: &Cnn, cfg: &RunConfig) -> DseReport {
         per_k,
         best,
     }
+}
+
+/// Run the full DSE over every candidate slice concurrently and pick the
+/// fps winner.
+pub fn explore(cnn: &Cnn, cfg: &RunConfig) -> DseReport {
+    explore_with(cnn, cfg, |k| explore_k(cnn, cfg, k))
+}
+
+/// Memoizes [`explore_k`] results so the serving path and the report
+/// generators stop recomputing identical searches. Keyed by the CNN's
+/// structural [`Cnn::fingerprint`], the operand slice, and every
+/// [`RunConfig`] field the outcome depends on (budgets, BRAM geometry, DDR
+/// bandwidth, activation word-length). Bounded: the map is cleared when it
+/// exceeds [`DseCache::CAPACITY`] entries, which is far beyond any one
+/// process's distinct-workload count.
+/// Structural cache key: (CNN fingerprint, k, LUT budget, BRAM budget,
+/// BRAM bits, DDR bandwidth bits, activation bits). A tuple with `Eq`
+/// rather than a pre-collapsed hash, so only a full `Cnn::fingerprint`
+/// collision — not a key-hash collision — could ever alias two entries.
+type CacheKey = (u64, u32, u64, u64, u64, u64, u32);
+
+pub struct DseCache {
+    map: Mutex<HashMap<CacheKey, DseOutcome>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for DseCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DseCache {
+    pub const CAPACITY: usize = 64;
+
+    pub fn new() -> DseCache {
+        DseCache {
+            map: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Process-wide shared cache (the serving path, CLI, and report
+    /// generators all funnel through this one).
+    pub fn global() -> &'static DseCache {
+        static GLOBAL: OnceLock<DseCache> = OnceLock::new();
+        GLOBAL.get_or_init(DseCache::new)
+    }
+
+    /// (hits, misses) so far.
+    pub fn stats(&self) -> (u64, u64) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Every input the DSE outcome depends on, as a structurally comparable
+    /// key (the CNN contributes via its FNV-1a [`Cnn::fingerprint`]).
+    fn key(cnn: &Cnn, cfg: &RunConfig, k: u32) -> CacheKey {
+        (
+            cnn.fingerprint(),
+            k,
+            cfg.lut_budget(),
+            cfg.bram_budget(),
+            cfg.fpga.bram_bits,
+            cfg.fpga.ddr_bw_bytes_per_s.to_bits(),
+            cfg.act_bits,
+        )
+    }
+}
+
+/// [`explore_k`], memoized through `cache`. The first call per distinct
+/// (CNN, config, k) runs the real search; subsequent calls are a hash-map
+/// lookup plus a clone of the outcome.
+pub fn explore_k_cached(cnn: &Cnn, cfg: &RunConfig, k: u32, cache: &DseCache) -> DseOutcome {
+    let key = DseCache::key(cnn, cfg, k);
+    if let Some(hit) = cache.map.lock().unwrap().get(&key) {
+        cache.hits.fetch_add(1, Ordering::Relaxed);
+        return hit.clone();
+    }
+    cache.misses.fetch_add(1, Ordering::Relaxed);
+    let out = explore_k(cnn, cfg, k);
+    let mut map = cache.map.lock().unwrap();
+    if map.len() >= DseCache::CAPACITY {
+        map.clear();
+    }
+    map.insert(key, out.clone());
+    out
+}
+
+/// [`explore`], memoized per slice through `cache`.
+pub fn explore_cached(cnn: &Cnn, cfg: &RunConfig, cache: &DseCache) -> DseReport {
+    explore_with(cnn, cfg, |k| explore_k_cached(cnn, cfg, k, cache))
 }
 
 /// Sanity gate used by `main` and tests: does the PE-level DSE still pick
@@ -133,6 +247,55 @@ mod tests {
                 out.array.n_pe,
                 out.max_pe_threshold
             );
+        }
+    }
+
+    #[test]
+    fn cache_hits_and_returns_identical_outcome() {
+        let cnn = resnet::resnet18().with_uniform_wq(2);
+        let cfg = RunConfig::default();
+        let cache = DseCache::new();
+        let a = explore_k_cached(&cnn, &cfg, 2, &cache);
+        let b = explore_k_cached(&cnn, &cfg, 2, &cache);
+        assert_eq!(cache.stats(), (1, 1), "second call must hit");
+        assert_eq!(a.array.dims, b.array.dims);
+        assert_eq!(a.sim.fps.to_bits(), b.sim.fps.to_bits());
+        // Uncached path agrees with what the cache stored.
+        let c = explore_k(&cnn, &cfg, 2);
+        assert_eq!(a.array.dims, c.array.dims);
+        assert_eq!(a.sim.fps.to_bits(), c.sim.fps.to_bits());
+    }
+
+    #[test]
+    fn cache_key_separates_configs_and_cnns() {
+        let cfg = RunConfig::default();
+        let cache = DseCache::new();
+        let cnn2 = resnet::resnet18().with_uniform_wq(2);
+        let cnn8 = resnet::resnet18().with_uniform_wq(8);
+        let r2 = explore_k_cached(&cnn2, &cfg, 2, &cache);
+        let r8 = explore_k_cached(&cnn8, &cfg, 2, &cache);
+        assert_eq!(cache.stats(), (0, 2), "different wq must miss");
+        assert!(r2.sim.fps > r8.sim.fps);
+
+        let mut starved = cfg.clone();
+        starved.fpga.ddr_bw_bytes_per_s = 0.2e9;
+        let rs = explore_k_cached(&cnn8, &starved, 2, &cache);
+        assert_eq!(cache.stats(), (0, 3), "different DDR bandwidth must miss");
+        assert!(rs.sim.fps < r8.sim.fps);
+    }
+
+    #[test]
+    fn explore_cached_matches_explore() {
+        let cnn = resnet::resnet18().with_uniform_wq(4);
+        let cfg = RunConfig::default();
+        let cache = DseCache::new();
+        let plain = explore(&cnn, &cfg);
+        let cached = explore_cached(&cnn, &cfg, &cache);
+        assert_eq!(plain.best, cached.best);
+        for (a, b) in plain.per_k.iter().zip(&cached.per_k) {
+            assert_eq!(a.k, b.k);
+            assert_eq!(a.array.dims, b.array.dims);
+            assert_eq!(a.sim.fps.to_bits(), b.sim.fps.to_bits());
         }
     }
 

@@ -1,8 +1,9 @@
 //! `mpcnn` CLI — leader entrypoint for the DSE, the simulator, the table
 //! reproduction harness, and the PJRT serving path.
 
-use anyhow::{anyhow, bail, Result};
 use mpcnn::cnn::resnet;
+use mpcnn::util::error::Result;
+use mpcnn::{anyhow, bail};
 use mpcnn::config::RunConfig;
 use mpcnn::coordinator::{BatcherConfig, Coordinator, EngineBackend};
 use mpcnn::report::{render_checks, tables};
@@ -261,10 +262,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let testset = TestSet::load(dir.join(ts_path))?;
 
     // Attach the simulated-FPGA clock: what would this stream cost on the
-    // DSE-chosen ResNet-8-class design?
+    // DSE-chosen ResNet-8-class design? Memoized in-process, so repeated
+    // searches in this run (e.g. serving several word-lengths, or the
+    // report tables) reuse the outcome instead of re-searching.
     let cfg = RunConfig::default();
     let small = resnet::resnet_small(1, 10).with_uniform_wq(wq);
-    let fpga_fps = dse::explore_k(&small, &cfg, wq.clamp(1, 4)).sim.fps;
+    let fpga_fps = dse::explore_k_cached(&small, &cfg, wq.clamp(1, 4), dse::DseCache::global())
+        .sim
+        .fps;
 
     let dir2 = dir.clone();
     let coordinator = Coordinator::start(
@@ -284,6 +289,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             fpga_fps_sim: fpga_fps,
         },
     )?;
+
     let client = coordinator.client();
     let mut rng = Rng::new(42);
     let mut correct = 0usize;

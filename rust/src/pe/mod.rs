@@ -156,17 +156,20 @@ impl fmt::Display for PeDesign {
 }
 
 /// Enumerate the full design space over the given slices (§III-A: powers of
-/// two, 1..4; 2D designs require k to divide N).
+/// two, 1..4; only **2D** designs require k to divide N — the k×k PPG grid
+/// must tile both operands. 1D designs slice the weight word alone, so any
+/// k ≤ N is admissible there.
 pub fn enumerate_designs(slices: &[u32]) -> Vec<PeDesign> {
     let mut out = Vec::new();
     for &k in slices {
         for mode in [InputMode::BitParallel, InputMode::BitSerial] {
             for cons in [Consolidation::SumTogether, Consolidation::SumApart] {
                 for scal in [Scaling::OneD, Scaling::TwoD] {
-                    if 8 % k != 0 {
+                    let d = PeDesign::new(mode, cons, scal, k);
+                    if d.scaling == Scaling::TwoD && d.n % d.k != 0 {
                         continue;
                     }
-                    out.push(PeDesign::new(mode, cons, scal, k));
+                    out.push(d);
                 }
             }
         }
@@ -249,6 +252,17 @@ mod tests {
     fn enumeration_size() {
         // 3 slices x 2 modes x 2 consolidations x 2 scalings = 24.
         assert_eq!(enumerate_designs(&[1, 2, 4]).len(), 24);
+    }
+
+    #[test]
+    fn enumeration_keeps_1d_for_non_dividing_k() {
+        // Per the module doc only 2D designs require k | N. A k=3 slice
+        // admits all four 1D variants; the seed skipped the whole slice.
+        let designs = enumerate_designs(&[3]);
+        assert_eq!(designs.len(), 4, "{designs:?}");
+        assert!(designs.iter().all(|d| d.scaling == Scaling::OneD));
+        // k=8 divides N=8, so both scalings survive (8 designs).
+        assert_eq!(enumerate_designs(&[8]).len(), 8);
     }
 
     #[test]

@@ -159,7 +159,7 @@ pub fn table2(cfg: &RunConfig) -> (Table, Vec<ShapeCheck>) {
     ] {
         for &k in &cfg.slices {
             let cnn = build().with_uniform_wq(8);
-            let out = dse::explore_k(&cnn, cfg, k);
+            let out = dse::explore_k_cached(&cnn, cfg, k, dse::DseCache::global());
             let p = paper::TABLE2
                 .iter()
                 .find(|r| r.cnn == cnn_name && r.k == k)
@@ -384,7 +384,7 @@ pub fn table5(cfg: &RunConfig) -> (Table, Vec<ShapeCheck>) {
         ("ResNet-152", resnet::resnet152, 8),
     ] {
         let cnn = build().with_uniform_wq(wq);
-        let out = dse::explore_k(&cnn, cfg, 2);
+        let out = dse::explore_k_cached(&cnn, cfg, 2, dse::DseCache::global());
         t.row(vec![
             format!("ours ({name} w{wq})"),
             name.to_string(),
@@ -436,7 +436,7 @@ pub fn fig9(cfg: &RunConfig) -> (Table, Vec<ShapeCheck>) {
                 continue;
             }
             let cnn = build().with_uniform_wq(wq);
-            let out = dse::explore_k(&cnn, cfg, wq);
+            let out = dse::explore_k_cached(&cnn, cfg, wq, dse::DseCache::global());
             let top5 = paper::top5_accuracy(name, wq).unwrap();
             t.row(vec![
                 name.to_string(),

@@ -1,63 +1,16 @@
 //! PJRT execution engine: one CPU client, one compiled executable per model
 //! variant. Python never runs here — the HLO text under `artifacts/` is the
 //! entire contract with L1/L2.
+//!
+//! The real engine needs the `xla` crate, which only exists in vendored
+//! build environments; it is gated behind the `pjrt` cargo feature so the
+//! default build stays dependency-free. Without the feature the same API is
+//! exported but every constructor returns a descriptive error, and the
+//! serving stack falls back to [`crate::coordinator::MockBackend`].
 
 use super::manifest::{Manifest, ModelEntry};
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::Result;
 use std::collections::BTreeMap;
-
-/// A compiled model ready to execute.
-pub struct LoadedModel {
-    pub entry: ModelEntry,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-impl LoadedModel {
-    /// Run one batch. `input` must have exactly `entry.input_len()` elements
-    /// (shape `[batch, h, w, c]`, NHWC, f32). Returns flattened logits
-    /// `[batch, classes]`.
-    pub fn infer(&self, input: &[f32]) -> Result<Vec<f32>> {
-        if input.len() != self.entry.input_len() {
-            bail!(
-                "model {}: input has {} elements, expected {} ({:?})",
-                self.entry.name,
-                input.len(),
-                self.entry.input_len(),
-                self.entry.input_shape
-            );
-        }
-        let dims: Vec<i64> = self.entry.input_shape.iter().map(|&d| d as i64).collect();
-        let lit = xla::Literal::vec1(input)
-            .reshape(&dims)
-            .context("reshaping input literal")?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&[lit])
-            .context("PJRT execute")?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        // aot.py lowers with return_tuple=True -> unwrap the 1-tuple.
-        let out = out.to_tuple1().context("unwrapping result tuple")?;
-        let logits = out.to_vec::<f32>().context("reading logits")?;
-        let expect = self.entry.batch * self.entry.classes;
-        if logits.len() != expect {
-            bail!(
-                "model {}: got {} logits, expected {}",
-                self.entry.name,
-                logits.len(),
-                expect
-            );
-        }
-        Ok(logits)
-    }
-
-    /// Argmax class per batch element.
-    pub fn classify(&self, input: &[f32]) -> Result<Vec<usize>> {
-        let logits = self.infer(input)?;
-        Ok(argmax_rows(&logits, self.entry.classes))
-    }
-}
 
 /// Argmax over each row of a flattened `[rows, cols]` matrix.
 pub fn argmax_rows(flat: &[f32], cols: usize) -> Vec<usize> {
@@ -72,75 +25,204 @@ pub fn argmax_rows(flat: &[f32], cols: usize) -> Vec<usize> {
         .collect()
 }
 
-/// The engine: a PJRT CPU client plus the set of loaded model variants.
-pub struct Engine {
-    client: xla::PjRtClient,
-    pub manifest: Manifest,
-    models: BTreeMap<String, LoadedModel>,
-}
+#[cfg(feature = "pjrt")]
+mod imp {
+    use super::{argmax_rows, BTreeMap, Manifest, ModelEntry, Result};
+    use crate::util::error::Context;
+    use crate::{anyhow, bail};
 
-impl Engine {
-    /// Create a client and load every model in the manifest directory.
-    pub fn load_all(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Engine> {
-        let manifest = Manifest::load(&artifacts_dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        let mut engine = Engine {
-            client,
-            manifest: manifest.clone(),
-            models: BTreeMap::new(),
-        };
-        for entry in &manifest.models {
-            engine.load(entry.clone())?;
+    /// A compiled model ready to execute.
+    pub struct LoadedModel {
+        pub entry: ModelEntry,
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    impl LoadedModel {
+        /// Run one batch. `input` must have exactly `entry.input_len()`
+        /// elements (shape `[batch, h, w, c]`, NHWC, f32). Returns flattened
+        /// logits `[batch, classes]`.
+        pub fn infer(&self, input: &[f32]) -> Result<Vec<f32>> {
+            if input.len() != self.entry.input_len() {
+                bail!(
+                    "model {}: input has {} elements, expected {} ({:?})",
+                    self.entry.name,
+                    input.len(),
+                    self.entry.input_len(),
+                    self.entry.input_shape
+                );
+            }
+            let dims: Vec<i64> = self.entry.input_shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(input)
+                .reshape(&dims)
+                .context("reshaping input literal")?;
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&[lit])
+                .context("PJRT execute")?;
+            let out = result[0][0]
+                .to_literal_sync()
+                .context("fetching result literal")?;
+            // aot.py lowers with return_tuple=True -> unwrap the 1-tuple.
+            let out = out.to_tuple1().context("unwrapping result tuple")?;
+            let logits = out.to_vec::<f32>().context("reading logits")?;
+            let expect = self.entry.batch * self.entry.classes;
+            if logits.len() != expect {
+                bail!(
+                    "model {}: got {} logits, expected {}",
+                    self.entry.name,
+                    logits.len(),
+                    expect
+                );
+            }
+            Ok(logits)
         }
-        Ok(engine)
+
+        /// Argmax class per batch element.
+        pub fn classify(&self, input: &[f32]) -> Result<Vec<usize>> {
+            let logits = self.infer(input)?;
+            Ok(argmax_rows(&logits, self.entry.classes))
+        }
     }
 
-    /// Create a client without loading any models (lazy use).
-    pub fn with_manifest(manifest: Manifest) -> Result<Engine> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Engine {
-            client,
-            manifest,
-            models: BTreeMap::new(),
-        })
+    /// The engine: a PJRT CPU client plus the set of loaded model variants.
+    pub struct Engine {
+        client: xla::PjRtClient,
+        pub manifest: Manifest,
+        models: BTreeMap<String, LoadedModel>,
     }
 
-    /// Compile one model variant from its HLO text.
-    pub fn load(&mut self, entry: ModelEntry) -> Result<&LoadedModel> {
-        let path = self.manifest.resolve(&entry.path);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {}: {e:?}", entry.name))?;
-        let name = entry.name.clone();
-        self.models.insert(name.clone(), LoadedModel { entry, exe });
-        Ok(&self.models[&name])
-    }
+    impl Engine {
+        /// Create a client and load every model in the manifest directory.
+        pub fn load_all(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+            let manifest = Manifest::load(&artifacts_dir)?;
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+            let mut engine = Engine {
+                client,
+                manifest: manifest.clone(),
+                models: BTreeMap::new(),
+            };
+            for entry in &manifest.models {
+                engine.load(entry.clone())?;
+            }
+            Ok(engine)
+        }
 
-    pub fn get(&self, name: &str) -> Option<&LoadedModel> {
-        self.models.get(name)
-    }
+        /// Create a client without loading any models (lazy use).
+        pub fn with_manifest(manifest: Manifest) -> Result<Engine> {
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+            Ok(Engine {
+                client,
+                manifest,
+                models: BTreeMap::new(),
+            })
+        }
 
-    /// Model for (wq, batch), if exported.
-    pub fn model_for(&self, wq: u32, batch: usize) -> Option<&LoadedModel> {
-        self.manifest
-            .find(wq, batch)
-            .and_then(|e| self.models.get(&e.name))
-    }
+        /// Compile one model variant from its HLO text.
+        pub fn load(&mut self, entry: ModelEntry) -> Result<&LoadedModel> {
+            let path = self.manifest.resolve(&entry.path);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", entry.name))?;
+            let name = entry.name.clone();
+            self.models.insert(name.clone(), LoadedModel { entry, exe });
+            Ok(&self.models[&name])
+        }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
+        pub fn get(&self, name: &str) -> Option<&LoadedModel> {
+            self.models.get(name)
+        }
 
-    pub fn loaded_names(&self) -> Vec<String> {
-        self.models.keys().cloned().collect()
+        /// Model for (wq, batch), if exported.
+        pub fn model_for(&self, wq: u32, batch: usize) -> Option<&LoadedModel> {
+            self.manifest
+                .find(wq, batch)
+                .and_then(|e| self.models.get(&e.name))
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        pub fn loaded_names(&self) -> Vec<String> {
+            self.models.keys().cloned().collect()
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use super::{argmax_rows, BTreeMap, Manifest, ModelEntry, Result};
+    use crate::bail;
+
+    const NO_PJRT: &str = "mpcnn was built without the `pjrt` feature (the `xla` crate \
+         is only available in vendored build environments); the PJRT engine \
+         is unavailable — use MockBackend, or rebuild with --features pjrt";
+
+    /// Stub of the compiled model; the API matches the `pjrt` build.
+    pub struct LoadedModel {
+        pub entry: ModelEntry,
+    }
+
+    impl LoadedModel {
+        pub fn infer(&self, _input: &[f32]) -> Result<Vec<f32>> {
+            bail!("{NO_PJRT}");
+        }
+
+        pub fn classify(&self, input: &[f32]) -> Result<Vec<usize>> {
+            let logits = self.infer(input)?;
+            Ok(argmax_rows(&logits, self.entry.classes))
+        }
+    }
+
+    /// Stub engine: constructors fail with a descriptive error so callers
+    /// (CLI `serve`/`classify`, benches) degrade gracefully.
+    pub struct Engine {
+        pub manifest: Manifest,
+        models: BTreeMap<String, LoadedModel>,
+    }
+
+    impl Engine {
+        pub fn load_all(_artifacts_dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+            bail!("{NO_PJRT}");
+        }
+
+        pub fn with_manifest(_manifest: Manifest) -> Result<Engine> {
+            bail!("{NO_PJRT}");
+        }
+
+        pub fn load(&mut self, _entry: ModelEntry) -> Result<&LoadedModel> {
+            bail!("{NO_PJRT}");
+        }
+
+        pub fn get(&self, name: &str) -> Option<&LoadedModel> {
+            self.models.get(name)
+        }
+
+        pub fn model_for(&self, wq: u32, batch: usize) -> Option<&LoadedModel> {
+            self.manifest
+                .find(wq, batch)
+                .and_then(|e| self.models.get(&e.name))
+        }
+
+        pub fn platform(&self) -> String {
+            "none (pjrt feature disabled)".to_string()
+        }
+
+        pub fn loaded_names(&self) -> Vec<String> {
+            self.models.keys().cloned().collect()
+        }
+    }
+}
+
+pub use imp::{Engine, LoadedModel};
 
 #[cfg(test)]
 mod tests {
@@ -155,6 +237,13 @@ mod tests {
     #[test]
     fn argmax_single_row() {
         assert_eq!(argmax_rows(&[1.0, 2.0, 3.0, 2.5], 4), vec![2]);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_engine_reports_missing_feature() {
+        let err = Engine::load_all("/nonexistent").unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
     }
 
     // Engine tests that require a PJRT client + artifacts live in

@@ -3,7 +3,8 @@
 //! its geometry so the engine can validate inputs before touching PJRT.
 
 use crate::util::json::{parse, Json};
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{Context, Result};
+use crate::{anyhow, bail};
 use std::path::{Path, PathBuf};
 
 /// One exported model variant.

@@ -6,7 +6,8 @@
 //! `magic "MPTS"` · `u32 n` · `u32 h` · `u32 w` · `u32 c` ·
 //! `n·h·w·c × f32` images · `n × u8` labels.
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 use std::path::Path;
 
 #[derive(Clone, Debug)]

@@ -52,6 +52,20 @@ impl AcceleratorDesign {
         self.n_pe() as f64 * self.pe.macs_per_cycle(wq) * self.fmax_mhz * 1e6 * 2.0
             / 1e9
     }
+
+    /// The Eq-3 schedule context for running this design against `cnn` —
+    /// the one construction shared by the simulator, the DSE, and external
+    /// callers, so the search and the simulation can never drift apart.
+    pub fn schedule_ctx(&self, cnn: &Cnn) -> ScheduleCtx {
+        ScheduleCtx {
+            dims: self.dims,
+            k: self.pe.k,
+            n: self.n,
+            fmax_mhz: self.fmax_mhz,
+            ddr_bw_bytes_per_s: self.ddr_bw_bytes_per_s,
+            act_buffer_bits: cnn.peak_activation_bits(),
+        }
+    }
 }
 
 /// Per-layer simulation record.
@@ -102,14 +116,7 @@ impl SimResult {
 
 /// Simulate one frame of `cnn` on `design` (batch size 1, as in Table IV).
 pub fn simulate(cnn: &Cnn, design: &AcceleratorDesign) -> SimResult {
-    let ctx = ScheduleCtx {
-        dims: design.dims,
-        k: design.pe.k,
-        n: design.n,
-        fmax_mhz: design.fmax_mhz,
-        ddr_bw_bytes_per_s: design.ddr_bw_bytes_per_s,
-        act_buffer_bits: cnn.peak_activation_bits(),
-    };
+    let ctx = design.schedule_ctx(cnn);
     let mut layers = Vec::new();
     let mut total_cycles = 0u64;
     let (mut e_comp, mut e_bram, mut e_ddr) = (0.0, 0.0, 0.0);

@@ -113,12 +113,48 @@ impl Bencher {
         self.results.last().unwrap()
     }
 
-    /// Print the final summary block expected at the end of a bench binary.
+    /// Print the final summary block expected at the end of a bench binary,
+    /// and emit a machine-readable `BENCH_<name>.json` at the repo root so
+    /// the perf trajectory is tracked across PRs (see EXPERIMENTS.md §Perf).
+    /// Set `MPCNN_BENCH_JSON=0` to suppress the file.
     pub fn finish(&self, bench_name: &str) {
         println!("\n== bench summary: {bench_name} ==");
         for r in &self.results {
             println!("  {}", r.summary());
         }
+        if std::env::var("MPCNN_BENCH_JSON").ok().as_deref() == Some("0") {
+            return;
+        }
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join(format!("BENCH_{bench_name}.json"));
+        match std::fs::write(&path, self.to_json().to_string_pretty()) {
+            Ok(()) => println!("  (wrote {})", path.display()),
+            Err(e) => eprintln!("  (could not write {}: {e})", path.display()),
+        }
+    }
+
+    /// The results as a JSON document (what [`Bencher::finish`] writes).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            (
+                "results",
+                Json::Arr(
+                    self.results
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("name", Json::str(r.name.clone())),
+                                ("iters", Json::num(r.iters as f64)),
+                                ("mean_ns", Json::num(r.mean_ns)),
+                                ("std_ns", Json::num(r.std_ns)),
+                                ("min_ns", Json::num(r.min_ns)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
     }
 }
 
@@ -154,5 +190,18 @@ mod tests {
         assert!(fmt_ns(12_000.0).ends_with("us"));
         assert!(fmt_ns(12_000_000.0).ends_with("ms"));
         assert!(fmt_ns(12_000_000_000.0).ends_with(" s"));
+    }
+
+    #[test]
+    fn json_export_round_trips() {
+        std::env::set_var("MPCNN_BENCH_FAST", "1");
+        let mut b = Bencher::new();
+        b.run("noop", || 1u64);
+        let j = b.to_json();
+        let parsed = crate::util::json::parse(&j.to_string_pretty()).unwrap();
+        let rs = parsed.get("results").and_then(|r| r.as_arr()).unwrap();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].get("name").and_then(|n| n.as_str()), Some("noop"));
+        assert!(rs[0].get("mean_ns").and_then(|m| m.as_f64()).unwrap() > 0.0);
     }
 }

@@ -1,0 +1,130 @@
+//! Minimal error plumbing (std-only; no `anyhow`/`thiserror` offline).
+//!
+//! The API mirrors the `anyhow` subset the crate used so call sites stay
+//! unchanged: a string-backed [`Error`], a defaulted [`Result`], the
+//! [`anyhow!`](crate::anyhow)/[`bail!`](crate::bail) macros, and a
+//! [`Context`] extension trait for `Result`/`Option`. Any concrete
+//! `std::error::Error` converts into [`Error`] via `?`.
+
+use std::fmt;
+
+/// A flat, human-readable error. Deliberately does **not** implement
+/// `std::error::Error` so the blanket `From<E: std::error::Error>` below
+/// stays coherent (the same trick `anyhow::Error` uses).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg(m: impl Into<String>) -> Error {
+        Error { msg: m.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `Result` defaulted to [`Error`], like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to an error, like `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{c}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Format an [`Error`] in place, like `anyhow::anyhow!`.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return an [`Error`], like `anyhow::bail!`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_debug_are_flat() {
+        let e = Error::msg("boom");
+        assert_eq!(format!("{e}"), "boom");
+        assert_eq!(format!("{e:?}"), "boom");
+        assert_eq!(format!("{e:#}"), "boom"); // alternate flag tolerated
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<u32> {
+            let v: u32 = "not-a-number".parse()?;
+            Ok(v)
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), String> = Err("inner".to_string());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+
+        let o: Option<u32> = None;
+        assert_eq!(o.context("missing").unwrap_err().to_string(), "missing");
+        let o2: Option<u32> = Some(7);
+        assert_eq!(o2.with_context(|| "unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("x = {}", 42);
+        assert_eq!(e.to_string(), "x = 42");
+        fn f() -> Result<()> {
+            bail!("no {}", "good")
+        }
+        assert_eq!(f().unwrap_err().to_string(), "no good");
+    }
+}

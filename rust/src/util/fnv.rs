@@ -1,0 +1,85 @@
+//! FNV-1a 64-bit hashing (std-only, process-stable across runs — unlike
+//! `std::collections::hash_map::DefaultHasher`, which is randomly seeded).
+//! Used for structural fingerprints and cache keys, not for hash tables.
+
+/// Incremental FNV-1a 64-bit hasher.
+#[derive(Clone, Debug)]
+pub struct Fnv1a(u64);
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv1a {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+    pub fn new() -> Fnv1a {
+        Fnv1a(Self::OFFSET)
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(Self::PRIME);
+        }
+    }
+
+    /// Write bytes followed by a terminator so adjacent variable-length
+    /// fields can't collide by shifting bytes across the boundary
+    /// (`("ab","c")` vs `("a","bc")`).
+    pub fn write_delimited(&mut self, bytes: &[u8]) {
+        self.write(bytes);
+        self.0 ^= 0xff;
+        self.0 = self.0.wrapping_mul(Self::PRIME);
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub fn write_u32(&mut self, v: u32) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vector() {
+        // FNV-1a 64 of "a" is 0xaf63dc4c8601ec8c.
+        let mut h = Fnv1a::new();
+        h.write(b"a");
+        assert_eq!(h.finish(), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn delimiter_prevents_boundary_shifts() {
+        let mut a = Fnv1a::new();
+        a.write_delimited(b"ab");
+        a.write_delimited(b"c");
+        let mut b = Fnv1a::new();
+        b.write_delimited(b"a");
+        b.write_delimited(b"bc");
+        assert_ne!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn order_sensitive() {
+        let mut a = Fnv1a::new();
+        a.write_u64(1);
+        a.write_u64(2);
+        let mut b = Fnv1a::new();
+        b.write_u64(2);
+        b.write_u64(1);
+        assert_ne!(a.finish(), b.finish());
+    }
+}

@@ -1,9 +1,10 @@
 //! Standard-library-only infrastructure.
 //!
-//! The offline build environment vendors only the `xla` crate's dependency
-//! closure, so the usual ecosystem crates (serde, clap, criterion, proptest,
-//! rand, tokio) are unavailable. This module provides the small subset we
-//! need, tested and deterministic:
+//! The default build has no external dependencies at all (the `xla` crate
+//! for the PJRT engine is opt-in via the `pjrt` feature), so the usual
+//! ecosystem crates (serde, clap, criterion, proptest, rand, tokio, anyhow)
+//! are unavailable. This module provides the small subset we need, tested
+//! and deterministic:
 //!
 //! - [`rng`] — SplitMix64 / Xoshiro256** PRNG
 //! - [`json`] — JSON parse + emit (manifest, machine-readable reports)
@@ -12,9 +13,13 @@
 //! - [`cli`] — argument parsing
 //! - [`bench`] — mini-criterion used by `rust/benches/*`
 //! - [`prop`] — mini property-based testing harness
+//! - [`error`] — mini-`anyhow` error/result plumbing
+//! - [`fnv`] — process-stable FNV-1a hashing for fingerprints/cache keys
 
 pub mod bench;
 pub mod cli;
+pub mod error;
+pub mod fnv;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -1,11 +1,15 @@
 //! Cross-module integration: full DSE → simulator consistency, the fast
-//! search path vs the full scheduler, and simulator-vs-real-execution
-//! coherence for the small model family.
+//! search paths (allocation-free and factored) vs the full scheduler, the
+//! pruned/parallel array search vs the brute-force reference, and
+//! simulator-vs-real-execution coherence for the small model family.
 
+use mpcnn::array::search::{search_dims, search_dims_reference, SearchParams};
 use mpcnn::array::Dims;
 use mpcnn::cnn::resnet;
 use mpcnn::config::RunConfig;
-use mpcnn::dataflow::{cycles_only, schedule_layer, ScheduleCtx};
+use mpcnn::dataflow::{
+    bw_bits_per_cycle, cycles_only, schedule_layer, FactoredWorkload, ScheduleCtx,
+};
 use mpcnn::dse;
 use mpcnn::pe::PeDesign;
 use mpcnn::sim::{simulate, AcceleratorDesign};
@@ -14,8 +18,9 @@ use mpcnn::util::rng::Rng;
 
 #[test]
 fn fast_path_matches_schedule_layer() {
-    // The allocation-free search inner loop must agree with the full
-    // scheduler for arbitrary layers and arrays.
+    // Both search inner loops — the allocation-free `cycles_only` and the
+    // factored table engine — must agree with the full scheduler for
+    // arbitrary layers and arrays.
     forall(2000, |rng: &mut Rng| {
         let mut l = mpcnn::cnn::Layer::conv(
             "p",
@@ -46,8 +51,69 @@ fn fast_path_matches_schedule_layer() {
             full.compute_cycles == fast_cycles,
             &format!("cycles {} vs {}", full.compute_cycles, fast_cycles),
         )?;
-        check_close(full.ideal_cycles, fast_ideal, 1e-12, "ideal cycles")
+        check_close(full.ideal_cycles, fast_ideal, 1e-12, "ideal cycles")?;
+
+        // Factored path: roofline-floored cycles of the 1-layer stack must
+        // equal schedule_layer's `cycles` exactly.
+        let convs = [&l];
+        let bw = bw_bits_per_cycle(ctx.ddr_bw_bytes_per_s, ctx.fmax_mhz);
+        let fw = FactoredWorkload::new(&convs, k, 8, Dims::new(20, 20, 130), bw);
+        check(
+            fw.cycles(dims) == full.cycles,
+            &format!("factored cycles {} vs {}", fw.cycles(dims), full.cycles),
+        )?;
+        let (cyc, util) = fw.cycles_and_utilization(dims);
+        check(cyc == full.cycles, "factored cycles via util path")?;
+        check_close(util, full.utilization, 1e-12, "factored utilization")
     });
+}
+
+#[test]
+fn pruned_search_equals_brute_force_on_real_cnns() {
+    // The production search space (56x16x160) on real workloads: the
+    // factorized/pruned/parallel search must return the byte-identical
+    // ArrayChoice as the seed's literal triple loop.
+    let p = SearchParams::from_config(&RunConfig::default());
+    for (cnn, k) in [
+        (resnet::resnet18().with_uniform_wq(2), 2u32),
+        (resnet::resnet18().with_uniform_wq(8), 1),
+        (resnet::resnet50().with_uniform_wq(4), 4),
+    ] {
+        let pe = PeDesign::bp_st_1d(k);
+        let fast = search_dims(&cnn, &pe, &p);
+        let refr = search_dims_reference(&cnn, &pe, &p);
+        assert_eq!(fast.dims, refr.dims, "{} k={k}", cnn.name);
+        assert_eq!(fast.n_pe, refr.n_pe);
+        assert_eq!(fast.total_cycles, refr.total_cycles);
+        assert_eq!(fast.luts_used, refr.luts_used);
+        assert_eq!(fast.brams_used, refr.brams_used);
+        assert_eq!(fast.bram_npa, refr.bram_npa);
+        assert_eq!(fast.feasible, refr.feasible);
+        assert_eq!(fast.fps.to_bits(), refr.fps.to_bits());
+        assert_eq!(
+            fast.avg_utilization.to_bits(),
+            refr.avg_utilization.to_bits()
+        );
+    }
+}
+
+#[test]
+fn cached_dse_serves_identical_outcomes() {
+    // The serving-path contract: a DseCache hit must be indistinguishable
+    // from re-running the DSE.
+    let cfg = RunConfig::default();
+    let cache = dse::DseCache::new();
+    let cnn = resnet::resnet18().with_uniform_wq(2);
+    let cold = dse::explore_k_cached(&cnn, &cfg, 2, &cache);
+    let warm = dse::explore_k_cached(&cnn, &cfg, 2, &cache);
+    let direct = dse::explore_k(&cnn, &cfg, 2);
+    assert_eq!(cache.stats(), (1, 1));
+    for out in [&warm, &direct] {
+        assert_eq!(cold.array.dims, out.array.dims);
+        assert_eq!(cold.array.total_cycles, out.array.total_cycles);
+        assert_eq!(cold.sim.fps.to_bits(), out.sim.fps.to_bits());
+        assert_eq!(cold.sim.total_cycles, out.sim.total_cycles);
+    }
 }
 
 #[test]
