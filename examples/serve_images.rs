@@ -1,28 +1,52 @@
-//! END-TO-END DRIVER: the full three-layer stack on a real workload.
+//! END-TO-END DRIVER: the full three-layer stack on a real workload,
+//! through the multi-variant serving gateway.
 //!
 //! - L1/L2: the AOT-exported bit-sliced quantized ResNet-8 (Pallas kernels
 //!   lowered into the HLO), QAT-trained on the synthetic shapes dataset.
-//! - L3: the rust coordinator — bounded queue, dynamic batcher, PJRT
-//!   execution — serving a stream of classification requests from the
-//!   held-out testset, while the accelerator simulator's virtual clock
-//!   reports what the DSE-chosen FPGA design would have delivered.
+//! - L3: ONE `serving::Server` process hosting *every* exported precision
+//!   variant — per-variant bounded queue, dynamic batcher, and PJRT
+//!   execution — with a router placing each request on the accuracy–
+//!   throughput curve, while the accelerator simulator's virtual clock
+//!   reports what each DSE-chosen FPGA design would have delivered.
 //!
-//! Reports: real accuracy per word-length, host latency percentiles and
-//! throughput, batching behaviour, and the simulated-FPGA fps.
+//! Reports: per-variant real accuracy over its routed slice of the stream,
+//! host latency percentiles and throughput, batching behaviour, the
+//! simulated-FPGA fps, and client-side achieved throughput.
 //!
 //! Prereq: `make artifacts`.
-//! Run: `cargo run --release --example serve_images -- [n_requests] [wq,wq,...]`
+//! Run: `cargo run --release --example serve_images -- [n_requests] [wq,wq,...] [route]`
+//!
+//! `route` picks the selector applied to every request: `mixed` (default,
+//! round-robins exact/default/min-accuracy selectors), `default`,
+//! `exact:WQ`, `name:NAME`, `min-accuracy:0.85`, or `max-latency:20ms`.
 
 use mpcnn::anyhow;
 use mpcnn::cnn::resnet;
-use mpcnn::util::error::Result;
 use mpcnn::config::RunConfig;
-use mpcnn::coordinator::{BatcherConfig, Coordinator, EngineBackend, InferenceBackend};
-use mpcnn::dse;
-use mpcnn::runtime::{artifacts_dir, Engine, Manifest, TestSet};
+use mpcnn::runtime::{artifacts_dir, Manifest, TestSet};
+use mpcnn::serving::{
+    BatcherConfig, EngineBackend, InferRequest, InferenceBackend, PendingResponse, Server,
+    VariantProfile, VariantSelector, VariantSpec,
+};
+use mpcnn::util::error::Result;
 use mpcnn::util::rng::Rng;
 use mpcnn::util::table::{fnum, Table};
+use std::collections::{BTreeMap, VecDeque};
 use std::time::Duration;
+
+fn settle(
+    pending: (PendingResponse, usize),
+    ledger: &mut BTreeMap<String, (usize, usize)>,
+    done: &mut usize,
+) -> Result<()> {
+    let (p, truth) = pending;
+    let r = p.wait().map_err(|e| anyhow!("{e}"))?;
+    let e = ledger.entry(r.variant).or_insert((0, 0));
+    e.1 += 1;
+    e.0 += (r.class == truth) as usize;
+    *done += 1;
+    Ok(())
+}
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -31,88 +55,126 @@ fn main() -> Result<()> {
         .get(1)
         .map(|s| s.split(',').filter_map(|p| p.parse().ok()).collect())
         .unwrap_or_else(|| vec![1, 2, 4, 8]);
+    let route = args.get(2).cloned().unwrap_or_else(|| "mixed".to_string());
 
     let dir = artifacts_dir();
     let manifest = Manifest::load(&dir)?;
     let ts = TestSet::load(
         dir.join(manifest.testset.clone().ok_or_else(|| anyhow!("no testset"))?),
     )?;
-    println!(
-        "serving {} requests per word-length from {} held-out images\n",
-        n_requests, ts.n
-    );
+    let hosted: Vec<u32> = wqs
+        .into_iter()
+        .filter(|&wq| {
+            let ok = manifest.find(wq, 1).is_some();
+            if !ok {
+                eprintln!("(skipping wq={wq}: not exported)");
+            }
+            ok
+        })
+        .collect();
+    if hosted.is_empty() {
+        return Err(anyhow!("no requested word-length is exported"));
+    }
 
+    // One gateway process hosts the whole precision family (the old
+    // pre-gateway driver started a fresh coordinator per word-length).
+    // Each variant's routing profile — paper accuracy, DSE-simulated fps —
+    // comes from the memoized holistic DSE and doubles as its virtual clock.
     let cfg = RunConfig::default();
-    let mut table = Table::new("end-to-end serving (PJRT real + FPGA-sim virtual)").headers(&[
-        "wq", "accuracy %", "host rps", "p50 ms", "p99 ms", "mean batch", "fpga-sim fps",
-        "fpga mJ/frame",
-    ]);
-
-    for &wq in &wqs {
-        if manifest.find(wq, 1).is_none() {
-            eprintln!("(skipping wq={wq}: not exported)");
-            continue;
-        }
-        // What would the DSE-chosen FPGA design do on this model family?
-        // (Memoized: repeated serve runs hit the DseCache, not the search.)
-        let small = resnet::resnet_small(1, 10).with_uniform_wq(wq);
-        let out = dse::explore_k_cached(&small, &cfg, wq.clamp(1, 4), dse::DseCache::global());
-        let fpga_fps = out.sim.fps;
-        let fpga_mj = out.sim.e_total_mj();
-
+    let base = resnet::resnet_small(1, 10);
+    let mut profiles: BTreeMap<String, VariantProfile> = BTreeMap::new();
+    let mut builder = Server::builder();
+    for &wq in &hosted {
+        let spec = VariantSpec::uniform(wq);
+        let profile = VariantProfile::from_dse(&spec, &base, &cfg, "ResNet-18");
+        profiles.insert(spec.name.clone(), profile);
         let dir2 = dir.clone();
-        let coordinator = Coordinator::start(
-            move || {
-                let engine = Engine::load_all(&dir2)?;
-                Ok(Box::new(EngineBackend::new(engine, wq)?) as Box<dyn InferenceBackend>)
-            },
+        builder = builder.variant_with_profile(
+            spec,
+            profile,
             BatcherConfig {
                 max_batch: 8,
                 max_wait: Duration::from_millis(2),
                 queue_capacity: 256,
-                fpga_fps_sim: fpga_fps,
+                fpga_fps_sim: 0.0, // builder attaches the profile's DSE fps
             },
-        )?;
-        let client = coordinator.client();
+            move || Ok(Box::new(EngineBackend::load(&dir2, wq)?) as Box<dyn InferenceBackend>),
+        );
+    }
+    let server = builder.build()?;
+    println!(
+        "serving {} requests (route={route}) across variants {:?} from {} held-out images\n",
+        n_requests,
+        server.variant_names(),
+        ts.n
+    );
 
-        let mut rng = Rng::new(42);
-        let mut correct = 0usize;
-        let mut done = 0usize;
-        let mut pending = Vec::new();
-        let mut truth = Vec::new();
-        for i in 0..n_requests {
-            let idx = rng.range(0, ts.n);
-            truth.push(ts.labels[idx] as usize);
-            pending.push(
-                client
-                    .submit(ts.image(idx).to_vec())
-                    .map_err(|e| anyhow!("{e}"))?,
-            );
-            if pending.len() >= 64 || i + 1 == n_requests {
-                for (p, t) in pending.drain(..).zip(truth.drain(..)) {
-                    let r = p.wait().map_err(|e| anyhow!("{e}"))?;
-                    correct += (r.class == t) as usize;
-                    done += 1;
-                }
-            }
+    let schedule: Vec<VariantSelector> = if route == "mixed" {
+        let mut s: Vec<VariantSelector> =
+            hosted.iter().map(|&w| VariantSelector::Exact(w)).collect();
+        s.push(VariantSelector::Default);
+        s.push(VariantSelector::MinAccuracy(87.0));
+        s
+    } else {
+        vec![VariantSelector::parse(&route).map_err(|e| anyhow!("{e}"))?]
+    };
+
+    // Sliding submission window: block only on the oldest pending response
+    // and only when the window is full, so the queues never sit idle.
+    let mut rng = Rng::new(42);
+    let mut ledger: BTreeMap<String, (usize, usize)> = BTreeMap::new();
+    let mut inflight: VecDeque<(PendingResponse, usize)> = VecDeque::new();
+    let mut done = 0usize;
+    let mut unroutable = 0usize;
+    let started = std::time::Instant::now();
+    for i in 0..n_requests {
+        while inflight.len() >= 64 {
+            let next = inflight.pop_front().unwrap();
+            settle(next, &mut ledger, &mut done)?;
         }
-        let m = coordinator.shutdown();
+        let idx = rng.range(0, ts.n);
+        let sel = schedule[i % schedule.len()].clone();
+        match server.submit(InferRequest::new(ts.image(idx).to_vec()).with_variant(sel)) {
+            Ok(p) => inflight.push_back((p, ts.labels[idx] as usize)),
+            Err(_) => unroutable += 1,
+        }
+    }
+    while let Some(next) = inflight.pop_front() {
+        settle(next, &mut ledger, &mut done)?;
+    }
+    let wall = started.elapsed();
+
+    let mut table = Table::new("end-to-end serving (one gateway, whole precision family)")
+        .headers(&[
+            "variant", "routed", "accuracy %", "host rps", "p50 ms", "p99 ms", "mean batch",
+            "fpga-sim fps", "fpga mJ/frame",
+        ]);
+    for (name, m) in server.metrics_all() {
+        let (c, n) = ledger.get(&name).copied().unwrap_or((0, 0));
+        let p = profiles.get(&name).copied().unwrap_or_default();
         table.row(vec![
-            wq.to_string(),
-            fnum(100.0 * correct as f64 / done as f64, 2),
+            name.clone(),
+            n.to_string(),
+            fnum(100.0 * c as f64 / n.max(1) as f64, 2),
             fnum(m.throughput_rps(), 1),
             fnum(m.latency.percentile_us(50.0) / 1000.0, 2),
             fnum(m.latency.percentile_us(99.0) / 1000.0, 2),
             fnum(m.mean_batch(), 2),
-            fnum(fpga_fps, 1),
-            fnum(fpga_mj, 3),
+            fnum(p.fpga_fps, 1),
+            fnum(p.fpga_mj_per_frame, 3),
         ]);
-        println!("wq={wq}: {}", m.summary());
+        println!("{name}: {}", m.summary());
     }
 
     println!();
     print!("{}", table.render());
-    println!("\n(accuracy ordering FP≈4 > 2 >> 1 is the Table III reproduction check;");
+    println!(
+        "\nclient-side achieved throughput: {:.1} req/s over {:.2}s wall ({} unroutable)",
+        done as f64 / wall.as_secs_f64().max(1e-9),
+        wall.as_secs_f64(),
+        unroutable
+    );
+    println!("(accuracy ordering FP≈4 > 2 >> 1 is the Table III reproduction check;");
     println!(" fpga-sim columns are the Table IV analog for this model family)");
     Ok(())
 }

@@ -1,84 +1,132 @@
-//! Bench E2E: end-to-end serving throughput/latency through the real
-//! PJRT-backed stack (needs `make artifacts`; falls back to the mock
-//! backend otherwise so `cargo bench` always completes).
+//! Bench E2E: end-to-end serving throughput/latency through the
+//! multi-variant gateway — one `Server` hosting the whole precision family,
+//! measured per routing mode. Uses the real PJRT-backed stack when
+//! artifacts are available (`make artifacts`); falls back to a mock
+//! three-variant family otherwise so `cargo bench` always completes.
+//! `Bencher::finish` writes `BENCH_e2e_serving.json` at the repo root so
+//! the serving trajectory is tracked like the hotpath.
 
-use mpcnn::coordinator::{
-    BatcherConfig, Coordinator, EngineBackend, InferenceBackend, MockBackend,
-};
 use mpcnn::runtime::{artifacts_dir, Engine, TestSet};
+use mpcnn::serving::{
+    BatcherConfig, EngineBackend, InferRequest, InferenceBackend, MockBackend, Server,
+    VariantProfile, VariantSelector, VariantSpec,
+};
 use mpcnn::util::bench::Bencher;
 use mpcnn::util::rng::Rng;
 use std::time::Duration;
+
+/// Submit 32 routed requests through the gateway and wait for them all;
+/// returns the number of successful responses (the benched unit of work).
+fn wave(server: &Server, sel: &VariantSelector, images: &[Vec<f32>], rng: &mut Rng) -> u32 {
+    let mut pending = Vec::new();
+    for _ in 0..32 {
+        let img = images[rng.range(0, images.len())].clone();
+        if let Ok(p) = server.submit(InferRequest::new(img).with_variant(sel.clone())) {
+            pending.push(p);
+        }
+    }
+    pending.into_iter().map(|p| p.wait().is_ok() as u32).sum()
+}
+
+fn batcher(max_batch: usize) -> BatcherConfig {
+    BatcherConfig {
+        max_batch,
+        max_wait: Duration::from_millis(1),
+        queue_capacity: 128,
+        fpga_fps_sim: 0.0,
+    }
+}
 
 fn main() {
     let mut b = Bencher::new();
 
     // The real path needs artifacts on disk *and* an engine that can load
     // them (a default no-`pjrt` build has a stub engine that errors here);
-    // anything short of that falls back to the mock backend.
+    // anything short of that falls back to the mock family.
     let probe = if artifacts_dir().join("manifest.json").exists() {
         match Engine::load_all(artifacts_dir()) {
             Ok(p) => Some(p),
             Err(e) => {
-                eprintln!("NOTE: engine unavailable ({e}) — benching with the mock backend");
+                eprintln!("NOTE: engine unavailable ({e}) — benching with the mock family");
                 None
             }
         }
     } else {
-        eprintln!("NOTE: artifacts missing — benching with the mock backend");
+        eprintln!("NOTE: artifacts missing — benching with the mock family");
         None
     };
 
     if let Some(probe) = probe {
         let dir = artifacts_dir();
         let ts = TestSet::load(dir.join(probe.manifest.testset.clone().unwrap())).unwrap();
+        let hosted = probe.manifest.wqs();
         drop(probe);
-        for (wq, max_batch) in [(4u32, 1usize), (4, 8), (1, 8)] {
+        let mut builder = Server::builder();
+        for &wq in &hosted {
             let dir2 = dir.clone();
-            let c = Coordinator::start(
-                move || {
-                    let engine = Engine::load_all(&dir2)?;
-                    Ok(Box::new(EngineBackend::new(engine, wq)?) as Box<dyn InferenceBackend>)
-                },
-                BatcherConfig {
-                    max_batch,
-                    max_wait: Duration::from_millis(1),
-                    queue_capacity: 128,
-                    fpga_fps_sim: 0.0,
-                },
-            )
-            .unwrap();
-            let client = c.client();
-            let mut rng = Rng::new(1);
-            b.run(&format!("serve/wq{wq}-batch{max_batch}-32req"), || {
-                let mut pending = Vec::new();
-                for _ in 0..32 {
-                    let idx = rng.range(0, ts.n);
-                    pending.push(client.submit(ts.image(idx).to_vec()).unwrap());
-                }
-                let mut ok = 0;
-                for p in pending {
-                    ok += p.wait().is_ok() as u32;
-                }
-                ok
+            builder = builder.variant(
+                VariantSpec::uniform(wq),
+                batcher(8),
+                move || Ok(Box::new(EngineBackend::load(&dir2, wq)?) as Box<dyn InferenceBackend>),
+            );
+        }
+        let server = builder.build().unwrap();
+        let images: Vec<Vec<f32>> = (0..64.min(ts.n)).map(|i| ts.image(i).to_vec()).collect();
+        let mut rng = Rng::new(1);
+        for &wq in &hosted {
+            let sel = VariantSelector::Exact(wq);
+            b.run(&format!("serve/exact-w{wq}-32req"), || {
+                wave(&server, &sel, &images, &mut rng)
             });
-            let m = c.shutdown();
-            println!("  -> {}", m.summary());
+        }
+        if hosted.iter().any(|&wq| wq >= 2) {
+            let sel = VariantSelector::MinAccuracy(87.0);
+            b.run("serve/min-accuracy-87-32req", || {
+                wave(&server, &sel, &images, &mut rng)
+            });
+        }
+        for (name, m) in server.shutdown() {
+            println!("  -> {name}: {}", m.summary());
         }
     } else {
-        let c = Coordinator::start(
-            || Ok(Box::new(MockBackend::new(3072, 10, vec![1, 8], 500)) as Box<dyn InferenceBackend>),
-            BatcherConfig::default(),
-        )
-        .unwrap();
-        let client = c.client();
-        b.run("serve/mock-batch8-32req", || {
-            let mut pending = Vec::new();
-            for _ in 0..32 {
-                pending.push(client.submit(vec![0.5; 3072]).unwrap());
-            }
-            pending.into_iter().filter(|_| true).map(|p| p.wait().is_ok() as u32).sum::<u32>()
-        });
+        // Mock family mirroring the paper's ResNet-18 points: service time
+        // grows with precision, accuracy with it.
+        let mut builder = Server::builder();
+        for (wq, acc, fps, latency_us) in [
+            (2u32, 87.48, 245.0, 300u64),
+            (4, 89.10, 165.0, 600),
+            (8, 89.62, 47.0, 1200),
+        ] {
+            builder = builder.variant_with_profile(
+                VariantSpec::uniform(wq),
+                VariantProfile {
+                    top5_accuracy: Some(acc),
+                    fpga_fps: fps,
+                    fpga_mj_per_frame: 1.0,
+                },
+                batcher(8),
+                move || {
+                    Ok(Box::new(MockBackend::new(3072, 10, vec![1, 8], latency_us))
+                        as Box<dyn InferenceBackend>)
+                },
+            );
+        }
+        let server = builder.build().unwrap();
+        let images: Vec<Vec<f32>> = (0..10).map(|c| vec![c as f32; 3072]).collect();
+        let mut rng = Rng::new(1);
+        for sel in [
+            VariantSelector::Exact(2),
+            VariantSelector::Default,
+            VariantSelector::MinAccuracy(87.0),
+            VariantSelector::MaxLatency(Duration::from_millis(50)),
+        ] {
+            b.run(&format!("serve/mock-{sel}-32req"), || {
+                wave(&server, &sel, &images, &mut rng)
+            });
+        }
+        for (name, m) in server.shutdown() {
+            println!("  -> {name}: {}", m.summary());
+        }
     }
     b.finish("e2e_serving");
 }

@@ -5,7 +5,9 @@ use mpcnn::array::search::{search_dims, search_dims_reference, SearchParams};
 use mpcnn::array::Dims;
 use mpcnn::cnn::resnet;
 use mpcnn::config::RunConfig;
-use mpcnn::coordinator::{BatcherConfig, Coordinator, InferenceBackend, MockBackend};
+use mpcnn::serving::{
+    BatcherConfig, InferRequest, InferenceBackend, MockBackend, Server, VariantSpec,
+};
 use mpcnn::dataflow::cycles_only;
 use mpcnn::pe::PeDesign;
 use mpcnn::quant::slicing::{reconstruct_slices, slice_signed};
@@ -73,23 +75,36 @@ fn main() {
         acc
     });
 
-    // --- coordinator round-trip overhead (mock backend, zero latency) ---
-    let c = Coordinator::start(
-        || Ok(Box::new(MockBackend::new(64, 10, vec![1, 8], 0)) as Box<dyn InferenceBackend>),
-        BatcherConfig {
-            max_batch: 1,
-            max_wait: Duration::from_micros(0),
-            queue_capacity: 64,
-            fpga_fps_sim: 0.0,
-        },
-    )
-    .unwrap();
-    let client = c.client();
+    // --- serving round-trip overhead (mock backend, zero latency):
+    //     the direct per-variant client (the old coordinator path, same
+    //     bench name for trajectory continuity) vs the routed gateway ---
+    let server = Server::builder()
+        .variant(
+            VariantSpec::uniform(8),
+            BatcherConfig {
+                max_batch: 1,
+                max_wait: Duration::from_micros(0),
+                queue_capacity: 64,
+                fpga_fps_sim: 0.0,
+            },
+            || Ok(Box::new(MockBackend::new(64, 10, vec![1, 8], 0)) as Box<dyn InferenceBackend>),
+        )
+        .build()
+        .unwrap();
+    let client = server.client("w8").unwrap();
     let img = vec![1.0f32; 64];
     b.run("coordinator/roundtrip-batch1", || {
         black_box(client.classify(img.clone()).unwrap().class)
     });
-    drop(c);
+    b.run("serving/routed-roundtrip-batch1", || {
+        black_box(
+            server
+                .infer(InferRequest::new(img.clone()))
+                .unwrap()
+                .class,
+        )
+    });
+    drop(server);
 
     b.finish("hotpath");
 }

@@ -1,384 +1,90 @@
-//! L3 serving coordinator: bounded admission queue with backpressure, a
-//! dynamic batcher, a worker executing batches on an [`InferenceBackend`]
-//! (the PJRT engine in production, mocks in tests), and serving metrics
-//! including a virtual-FPGA clock tied to the simulated accelerator design.
+//! Single-variant serving shim, kept for source compatibility.
 //!
-//! No tokio offline — plain threads + `std::sync::mpsc`, which is entirely
-//! adequate for a single-device inference queue: one batcher thread owns
-//! the backend, clients block on per-request channels.
+//! The serving stack moved to [`crate::serving`]: a multi-variant
+//! [`Server`](crate::serving::Server) with routed
+//! [`InferRequest`](crate::serving::InferRequest)s. [`Coordinator`] wraps a
+//! one-variant server behind the old factory-closure API so existing
+//! callers keep compiling; everything else here is a re-export.
 
-pub mod backend;
-pub mod metrics;
+pub use crate::serving::backend;
+pub use crate::serving::metrics;
 
-pub use backend::{EngineBackend, InferenceBackend, MockBackend};
-pub use metrics::Metrics;
+pub use crate::serving::{
+    BackendHealth, BatcherConfig, Client, EngineBackend, InferenceBackend, Metrics, MockBackend,
+    PendingResponse, Response, SubmitError,
+};
 
+use crate::serving::{Server, VariantProfile, VariantSpec};
 use crate::util::error::Result;
-use std::fmt;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
 
-/// Batching policy.
-#[derive(Clone, Copy, Debug)]
-pub struct BatcherConfig {
-    /// Assemble at most this many requests per batch (must be a supported
-    /// backend batch size or smaller).
-    pub max_batch: usize,
-    /// Wait at most this long for the batch to fill.
-    pub max_wait: Duration,
-    /// Admission queue depth; beyond this, `try_submit` sheds load.
-    pub queue_capacity: usize,
-    /// Frames/s of the simulated FPGA design (drives the virtual clock);
-    /// 0 disables the virtual clock.
-    pub fpga_fps_sim: f64,
-}
+/// Name the shim registers its single variant under.
+const SHIM_VARIANT: &str = "default";
 
-impl Default for BatcherConfig {
-    fn default() -> Self {
-        BatcherConfig {
-            max_batch: 8,
-            max_wait: Duration::from_millis(5),
-            queue_capacity: 128,
-            fpga_fps_sim: 0.0,
-        }
-    }
-}
-
-/// One inference request.
-struct Request {
-    image: Vec<f32>,
-    enqueued: Instant,
-    reply: SyncSender<Result<Response, String>>,
-}
-
-/// One inference response.
-#[derive(Clone, Debug)]
-pub struct Response {
-    /// Logits for this request's image.
-    pub logits: Vec<f32>,
-    /// Predicted class (argmax).
-    pub class: usize,
-    /// End-to-end latency.
-    pub latency: Duration,
-    /// Size of the batch this request rode in.
-    pub batch_size: usize,
-}
-
-/// Submission error.
-#[derive(Debug)]
-pub enum SubmitError {
-    Backpressure,
-    Closed,
-    BadInput { expected: usize, got: usize },
-}
-
-impl fmt::Display for SubmitError {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        match self {
-            SubmitError::Backpressure => write!(f, "queue full (backpressure)"),
-            SubmitError::Closed => write!(f, "coordinator is shut down"),
-            SubmitError::BadInput { expected, got } => {
-                write!(f, "bad input: expected {expected} elements, got {got}")
-            }
-        }
-    }
-}
-
-impl std::error::Error for SubmitError {}
-
-/// Handle for submitting requests; cheap to clone across client threads.
-#[derive(Clone)]
-pub struct Client {
-    tx: SyncSender<Request>,
-    image_len: usize,
-}
-
-impl Client {
-    /// Non-blocking submit; sheds load when the queue is full.
-    pub fn try_submit(&self, image: Vec<f32>) -> Result<PendingResponse, SubmitError> {
-        if image.len() != self.image_len {
-            return Err(SubmitError::BadInput {
-                expected: self.image_len,
-                got: image.len(),
-            });
-        }
-        let (reply_tx, reply_rx) = sync_channel(1);
-        let req = Request {
-            image,
-            enqueued: Instant::now(),
-            reply: reply_tx,
-        };
-        match self.tx.try_send(req) {
-            Ok(()) => Ok(PendingResponse { rx: reply_rx }),
-            Err(TrySendError::Full(_)) => Err(SubmitError::Backpressure),
-            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
-        }
-    }
-
-    /// Blocking submit (applies backpressure to the caller).
-    pub fn submit(&self, image: Vec<f32>) -> Result<PendingResponse, SubmitError> {
-        if image.len() != self.image_len {
-            return Err(SubmitError::BadInput {
-                expected: self.image_len,
-                got: image.len(),
-            });
-        }
-        let (reply_tx, reply_rx) = sync_channel(1);
-        let req = Request {
-            image,
-            enqueued: Instant::now(),
-            reply: reply_tx,
-        };
-        self.tx
-            .send(req)
-            .map_err(|_| SubmitError::Closed)?;
-        Ok(PendingResponse { rx: reply_rx })
-    }
-
-    /// Convenience: submit and wait.
-    pub fn classify(&self, image: Vec<f32>) -> Result<Response, String> {
-        self.submit(image)
-            .map_err(|e| e.to_string())?
-            .wait()
-    }
-}
-
-/// Future-like handle for an in-flight request.
-#[derive(Debug)]
-pub struct PendingResponse {
-    rx: Receiver<Result<Response, String>>,
-}
-
-impl PendingResponse {
-    pub fn wait(self) -> Result<Response, String> {
-        self.rx
-            .recv()
-            .map_err(|_| "coordinator dropped request".to_string())?
-    }
-
-    pub fn wait_timeout(self, d: Duration) -> Result<Response, String> {
-        match self.rx.recv_timeout(d) {
-            Ok(r) => r,
-            Err(_) => Err("timeout".to_string()),
-        }
-    }
-}
-
-/// The running coordinator.
+/// The old single-variant coordinator: one queue, one batcher worker, one
+/// backend. New code should register variants on a
+/// [`ServerBuilder`](crate::serving::ServerBuilder) instead.
 pub struct Coordinator {
-    client: Client,
-    metrics: Arc<Mutex<Metrics>>,
-    worker: Option<JoinHandle<()>>,
-    started: Instant,
-    /// Set on shutdown/drop; the worker polls it while idle so stray
-    /// `Client` clones cannot keep the thread alive.
-    stop: Arc<AtomicBool>,
+    server: Server,
 }
 
 impl Coordinator {
     /// Start the batcher thread. `factory` runs *inside* the worker thread
     /// and builds the backend there — required because the PJRT client types
     /// are not `Send`. Fails if the factory fails.
+    #[deprecated(
+        since = "0.3.0",
+        note = "use serving::Server::builder() and register variants explicitly"
+    )]
     pub fn start<F>(factory: F, cfg: BatcherConfig) -> Result<Coordinator>
     where
         F: FnOnce() -> Result<Box<dyn InferenceBackend>> + Send + 'static,
     {
-        assert!(cfg.max_batch >= 1);
-        let (tx, rx) = sync_channel::<Request>(cfg.queue_capacity);
-        let metrics = Arc::new(Mutex::new(Metrics::default()));
-        let m2 = metrics.clone();
-        // The worker reports readiness (and the image length) or the
-        // factory's error back over a rendezvous channel.
-        let (ready_tx, ready_rx) = sync_channel::<Result<usize, String>>(1);
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = stop.clone();
-        let worker = std::thread::Builder::new()
-            .name("mpcnn-batcher".to_string())
-            .spawn(move || {
-                let backend = match factory() {
-                    Ok(b) => {
-                        let _ = ready_tx.send(Ok(b.image_len()));
-                        b
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(format!("{e:#}")));
-                        return;
-                    }
-                };
-                batcher_loop(backend, rx, cfg, m2, stop2)
-            })
-            .expect("spawn batcher");
-        let image_len = ready_rx
-            .recv()
-            .map_err(|_| crate::anyhow!("batcher thread died during startup"))?
-            .map_err(|e| crate::anyhow!("backend factory failed: {e}"))?;
-        Ok(Coordinator {
-            client: Client { tx, image_len },
-            metrics,
-            worker: Some(worker),
-            started: Instant::now(),
-            stop,
-        })
+        let spec = VariantSpec {
+            name: SHIM_VARIANT.to_string(),
+            wq: None,
+            channelwise: Vec::new(),
+        };
+        let server = Server::builder()
+            .variant_with_profile(spec, VariantProfile::default(), cfg, factory)
+            .build()?;
+        Ok(Coordinator { server })
     }
 
     pub fn client(&self) -> Client {
-        self.client.clone()
+        self.server
+            .client(SHIM_VARIANT)
+            .expect("shim server has exactly one variant")
     }
 
     /// Snapshot of the metrics (wall window = since start).
     pub fn metrics(&self) -> Metrics {
-        let mut m = self.metrics.lock().unwrap().clone();
-        m.wall_us = self.started.elapsed().as_micros() as f64;
-        m
+        self.server
+            .metrics(SHIM_VARIANT)
+            .expect("shim server has exactly one variant")
     }
 
     /// Graceful shutdown: signals the worker, joins it, returns the final
     /// metrics. In-flight requests complete; queued-but-unbatched requests
-    /// are still drained before exit (the stop flag is only honoured while
-    /// idle).
-    pub fn shutdown(mut self) -> Metrics {
-        let final_metrics = self.metrics();
-        self.stop_and_join();
-        final_metrics
-    }
-
-    fn stop_and_join(&mut self) {
-        if let Some(h) = self.worker.take() {
-            self.stop.store(true, Ordering::SeqCst);
-            // Also drop our own sender so an idle worker wakes immediately
-            // when no other Client clones exist.
-            let dummy = Client {
-                tx: sync_channel(1).0,
-                image_len: 0,
-            };
-            let old = std::mem::replace(&mut self.client, dummy);
-            drop(old);
-            let _ = h.join();
-        }
-    }
-}
-
-impl Drop for Coordinator {
-    fn drop(&mut self) {
-        self.stop_and_join();
-    }
-}
-
-/// The batcher loop: collect up to `max_batch` requests within `max_wait`
-/// of the first, pad to a supported backend batch size, execute, fan out.
-fn batcher_loop(
-    backend: Box<dyn InferenceBackend>,
-    rx: Receiver<Request>,
-    cfg: BatcherConfig,
-    metrics: Arc<Mutex<Metrics>>,
-    stop: Arc<AtomicBool>,
-) {
-    let supported = {
-        let mut s = backend.batch_sizes();
-        s.sort_unstable();
-        s
-    };
-    let image_len = backend.image_len();
-    let classes = backend.classes();
-    loop {
-        // Block for the first request of the batch, polling the stop flag
-        // so shutdown works even while stray Client clones are alive.
-        let first = loop {
-            if stop.load(Ordering::SeqCst) {
-                // Drain whatever is already queued, then exit.
-                match rx.try_recv() {
-                    Ok(r) => break r,
-                    Err(_) => return,
-                }
-            }
-            match rx.recv_timeout(Duration::from_millis(25)) {
-                Ok(r) => break r,
-                Err(RecvTimeoutError::Timeout) => continue,
-                Err(RecvTimeoutError::Disconnected) => return, // all clients dropped
-            }
-        };
-        let deadline = Instant::now() + cfg.max_wait;
-        let mut batch = vec![first];
-        while batch.len() < cfg.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(r) => batch.push(r),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
-            }
-        }
-
-        // Pick the smallest supported batch size >= len (pad), else the
-        // largest supported (split would be needed; max_batch should be a
-        // supported size so this doesn't happen).
-        let n = batch.len();
-        let exec_size = supported
-            .iter()
-            .copied()
-            .find(|&s| s >= n)
-            .unwrap_or_else(|| *supported.last().unwrap());
-        let mut flat = Vec::with_capacity(exec_size * image_len);
-        for r in &batch {
-            flat.extend_from_slice(&r.image);
-        }
-        flat.resize(exec_size * image_len, 0.0); // zero padding
-
-        {
-            let mut m = metrics.lock().unwrap();
-            m.requests += n as u64;
-            m.batches += 1;
-            m.batched_items += n as u64;
-            m.padded_items += (exec_size - n) as u64;
-            for r in &batch {
-                m.queue_wait
-                    .record_us(r.enqueued.elapsed().as_micros() as f64);
-            }
-        }
-
-        let result = backend.infer_batch(&flat, exec_size);
-        let mut m = metrics.lock().unwrap();
-        if cfg.fpga_fps_sim > 0.0 {
-            m.fpga_virtual_us += n as f64 / cfg.fpga_fps_sim * 1e6;
-        }
-        match result {
-            Ok(logits) => {
-                for (i, r) in batch.into_iter().enumerate() {
-                    let row = logits[i * classes..(i + 1) * classes].to_vec();
-                    let class = crate::runtime::argmax_rows(&row, classes)[0];
-                    let latency = r.enqueued.elapsed();
-                    m.latency.record_us(latency.as_micros() as f64);
-                    m.responses += 1;
-                    let _ = r.reply.send(Ok(Response {
-                        logits: row,
-                        class,
-                        latency,
-                        batch_size: n,
-                    }));
-                }
-            }
-            Err(e) => {
-                let msg = format!("backend error: {e}");
-                for r in batch {
-                    m.errors += 1;
-                    let _ = r.reply.send(Err(msg.clone()));
-                }
-            }
-        }
+    /// are still drained before exit.
+    pub fn shutdown(self) -> Metrics {
+        let mut all = self.server.shutdown();
+        all.remove(0).1
     }
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)]
     use super::*;
+    use std::time::Duration;
 
-    fn mock(latency_us: u64) -> impl FnOnce() -> Result<Box<dyn InferenceBackend>> + Send + 'static {
-        move || Ok(Box::new(MockBackend::new(12, 4, vec![1, 4, 8], latency_us)) as Box<dyn InferenceBackend>)
+    fn mock(
+        latency_us: u64,
+    ) -> impl FnOnce() -> Result<Box<dyn InferenceBackend>> + Send + 'static {
+        move || {
+            Ok(Box::new(MockBackend::new(12, 4, vec![1, 4, 8], latency_us))
+                as Box<dyn InferenceBackend>)
+        }
     }
 
     #[test]

@@ -11,11 +11,15 @@
 //!   with LSQ QAT, exported to `artifacts/*.hlo.txt`.
 //! - **L3** (this crate): the paper's design-space exploration
 //!   ([`pe`], [`array`], [`dataflow`], [`dse`]), the FPGA accelerator
-//!   simulator ([`sim`], [`energy`]), and a batched inference server
-//!   ([`coordinator`]) executing the AOT artifacts via PJRT ([`runtime`]).
+//!   simulator ([`sim`], [`energy`]), and a multi-variant serving gateway
+//!   ([`serving`]) that batches requests and routes them across
+//!   mixed-precision model variants, executing the AOT artifacts via PJRT
+//!   ([`runtime`]). The old single-variant [`coordinator`] survives as a
+//!   shim over [`serving`].
 //!
-//! Start at [`dse`] for the headline methodology, or [`sim`] for the
-//! system-level model behind Table IV / Fig 9.
+//! Start at [`dse`] for the headline methodology, [`sim`] for the
+//! system-level model behind Table IV / Fig 9, or [`serving`] for the
+//! trade-off curve deployed as a request router.
 
 pub mod array;
 pub mod baselines;
@@ -29,5 +33,6 @@ pub mod pe;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+pub mod serving;
 pub mod sim;
 pub mod util;

@@ -5,12 +5,16 @@ use mpcnn::cnn::resnet;
 use mpcnn::util::error::Result;
 use mpcnn::{anyhow, bail};
 use mpcnn::config::RunConfig;
-use mpcnn::coordinator::{BatcherConfig, Coordinator, EngineBackend};
 use mpcnn::report::{render_checks, tables};
 use mpcnn::runtime::{artifacts_dir, Engine, TestSet};
+use mpcnn::serving::{
+    BatcherConfig, EngineBackend, InferRequest, InferenceBackend, MockBackend, PendingResponse,
+    Server, VariantProfile, VariantSelector, VariantSpec,
+};
 use mpcnn::util::cli::Args;
 use mpcnn::util::rng::Rng;
 use mpcnn::{baselines, dse, sim};
+use std::collections::{BTreeMap, VecDeque};
 use std::time::Duration;
 
 const USAGE: &str = "\
@@ -29,9 +33,15 @@ SUBCOMMANDS
   baseline   --which dsp|fixed8|bitfusion --cnn resnet18 --wq 2
              simulate a comparison design
   pe         [--wq 1,2,4,8] rank the PE design space (Fig 6 data)
-  serve      [--wq 4] [--batch 8] [--requests 256] [--artifacts DIR]
-             run the batched PJRT serving demo over the exported testset
-  classify   [--wq 4] [--index 0] classify one testset image via PJRT
+  serve      [--variants 2,4,8] [--route mixed|default|exact:WQ|name:NAME|
+             min-accuracy:0.85|max-latency:20ms] [--batch 8] [--requests 256]
+             [--window 64] [--artifacts DIR]
+             host every listed precision variant in ONE gateway process and
+             route a request stream across them (PJRT when artifacts are
+             available, deterministic mock backends otherwise); reports
+             per-variant metrics and client-side achieved throughput
+  classify   [--wq 4] [--index 0] [--route exact:4] [--variants 4]
+             classify one testset image through the gateway
   info       print workload statistics for the built-in CNNs
 ";
 
@@ -247,82 +257,205 @@ fn cmd_pe(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// What `serve`/`classify` built: the multi-variant gateway plus how to
+/// drive it.
+struct Gateway {
+    server: Server,
+    testset: Option<TestSet>,
+    /// Real PJRT backends (false = deterministic mock fallback).
+    real: bool,
+    image_len: usize,
+    classes: usize,
+}
+
+/// Build a [`Server`] hosting one variant per requested word-length. Each
+/// variant's routing profile (paper accuracy, simulated fps) comes from the
+/// cached holistic DSE on the exported ResNet-8-class topology, and that fps
+/// also drives the variant's virtual-FPGA clock. Falls back to mock
+/// backends — with service times scaled to each design's simulated frame
+/// time — when artifacts or the PJRT engine are unavailable, so the gateway
+/// demo runs everywhere.
+fn build_gateway(dir: &std::path::Path, wqs: &[u32], max_batch: usize) -> Result<Gateway> {
+    if wqs.is_empty() {
+        bail!("--variants must name at least one word-length");
+    }
+    let manifest = mpcnn::runtime::Manifest::load(dir).ok();
+    let testset = manifest.as_ref().and_then(|m| {
+        let p = m.testset.clone()?;
+        TestSet::load(dir.join(p)).ok()
+    });
+    let real = manifest
+        .as_ref()
+        .map(|m| Engine::with_manifest(m.clone()).is_ok())
+        .unwrap_or(false);
+    let (image_len, classes) = match (&manifest, &testset) {
+        (Some(m), _) if !m.models.is_empty() => {
+            let e = &m.models[0];
+            (e.input_len() / e.batch, e.classes)
+        }
+        (_, Some(ts)) => (ts.h * ts.w * ts.c, 10),
+        _ => (3072, 10),
+    };
+    if real {
+        for &wq in wqs {
+            if manifest.as_ref().unwrap().entries_for_wq(wq).is_empty() {
+                bail!("wq={wq} is not exported in {}", dir.display());
+            }
+        }
+    }
+    let cfg = RunConfig::default();
+    let base = resnet::resnet_small(1, 10);
+    let mut builder = Server::builder();
+    for &wq in wqs {
+        let spec = VariantSpec::uniform(wq);
+        let profile = VariantProfile::from_dse(&spec, &base, &cfg, "ResNet-18");
+        let bc = BatcherConfig {
+            max_batch,
+            max_wait: Duration::from_millis(2),
+            queue_capacity: 256,
+            fpga_fps_sim: profile.fpga_fps,
+        };
+        if real {
+            let dir2 = dir.to_path_buf();
+            builder = builder.variant_with_profile(spec, profile, bc, move || {
+                Ok(Box::new(EngineBackend::load(&dir2, wq)?) as Box<dyn InferenceBackend>)
+            });
+        } else {
+            let latency_us = (1e6 / profile.fpga_fps.max(1.0)).clamp(100.0, 20_000.0) as u64;
+            builder = builder.variant_with_profile(spec, profile, bc, move || {
+                Ok(Box::new(MockBackend::new(
+                    image_len,
+                    classes,
+                    vec![1, max_batch.max(1)],
+                    latency_us,
+                )) as Box<dyn InferenceBackend>)
+            });
+        }
+    }
+    Ok(Gateway {
+        server: builder.build()?,
+        testset,
+        real,
+        image_len,
+        classes,
+    })
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let dir = args
         .get("artifacts")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(artifacts_dir);
-    let wq = args.get_u64("wq", 4) as u32;
     let n_requests = args.get_usize("requests", 256);
-    let manifest = mpcnn::runtime::Manifest::load(&dir)?;
-    let ts_path = manifest
-        .testset
-        .clone()
-        .ok_or_else(|| anyhow!("manifest has no testset"))?;
-    let testset = TestSet::load(dir.join(ts_path))?;
+    let max_batch = args.get_usize("batch", 8);
+    let window = args.get_usize("window", 64).max(1);
+    let default_wqs = match args.get("wq") {
+        Some(_) => vec![args.get_u64("wq", 4) as u32],
+        None => vec![2, 4, 8],
+    };
+    let wqs = args.get_list_u32("variants", &default_wqs);
+    let route_spec = args.get_or("route", "mixed");
 
-    // Attach the simulated-FPGA clock: what would this stream cost on the
-    // DSE-chosen ResNet-8-class design? Memoized in-process, so repeated
-    // searches in this run (e.g. serving several word-lengths, or the
-    // report tables) reuse the outcome instead of re-searching.
-    let cfg = RunConfig::default();
-    let small = resnet::resnet_small(1, 10).with_uniform_wq(wq);
-    let fpga_fps = dse::explore_k_cached(&small, &cfg, wq.clamp(1, 4), dse::DseCache::global())
-        .sim
-        .fps;
+    let gw = build_gateway(&dir, &wqs, max_batch)?;
+    println!(
+        "gateway up: {} variants {:?} on {} backends\n",
+        gw.server.n_variants(),
+        gw.server.variant_names(),
+        if gw.real { "PJRT" } else { "mock" },
+    );
 
-    let dir2 = dir.clone();
-    let coordinator = Coordinator::start(
-        move || {
-            let engine = Engine::load_all(&dir2)?;
-            println!(
-                "engine up on {} with models: {:?}",
-                engine.platform(),
-                engine.loaded_names()
-            );
-            Ok(Box::new(EngineBackend::new(engine, wq)?) as Box<dyn mpcnn::coordinator::InferenceBackend>)
-        },
-        BatcherConfig {
-            max_batch: args.get_usize("batch", 8),
-            max_wait: Duration::from_millis(2),
-            queue_capacity: 256,
-            fpga_fps_sim: fpga_fps,
-        },
-    )?;
+    // Selector schedule, one per request in round-robin. `mixed` exercises
+    // the whole routing surface; any explicit --route applies to every
+    // request.
+    let schedule: Vec<VariantSelector> = if route_spec == "mixed" {
+        let mut s = vec![VariantSelector::Default];
+        s.extend(wqs.iter().map(|&w| VariantSelector::Exact(w)));
+        s.push(VariantSelector::MinAccuracy(87.0));
+        s.push(VariantSelector::MaxLatency(Duration::from_millis(100)));
+        s
+    } else {
+        vec![VariantSelector::parse(&route_spec).map_err(|e| anyhow!("{e}"))?]
+    };
 
-    let client = coordinator.client();
-    let mut rng = Rng::new(42);
-    let mut correct = 0usize;
-    let mut done = 0usize;
-    let mut pending = Vec::new();
-    let mut truth = Vec::new();
-    for i in 0..n_requests {
-        let idx = rng.range(0, testset.n);
-        let img = testset.image(idx).to_vec();
-        truth.push(testset.labels[idx] as usize);
-        pending.push(client.submit(img).map_err(|e| anyhow!("{e}"))?);
-        // drain in waves of 32 to keep the queue busy but bounded
-        if pending.len() >= 32 || i + 1 == n_requests {
-            for (p, t) in pending.drain(..).zip(truth.drain(..)) {
-                let r = p.wait().map_err(|e| anyhow!("{e}"))?;
-                if r.class == t {
-                    correct += 1;
+    // One request per variant correctness ledger: variant -> (correct, total).
+    fn drain(
+        inflight: &mut VecDeque<(PendingResponse, usize)>,
+        per_variant: &mut BTreeMap<String, (usize, usize)>,
+        correct: &mut usize,
+        done: &mut usize,
+        failed: &mut usize,
+    ) {
+        if let Some((p, truth)) = inflight.pop_front() {
+            match p.wait() {
+                Ok(r) => {
+                    let e = per_variant.entry(r.variant).or_insert((0, 0));
+                    e.1 += 1;
+                    if r.class == truth {
+                        e.0 += 1;
+                        *correct += 1;
+                    }
+                    *done += 1;
                 }
-                done += 1;
+                Err(_) => *failed += 1,
             }
         }
     }
-    let m = coordinator.metrics();
-    println!("{}", m.summary());
+
+    let mut rng = Rng::new(42);
+    let mut per_variant: BTreeMap<String, (usize, usize)> = BTreeMap::new();
+    let (mut correct, mut done, mut failed, mut route_errors) = (0usize, 0usize, 0usize, 0usize);
+    let mut inflight: VecDeque<(PendingResponse, usize)> = VecDeque::new();
+    let started = std::time::Instant::now();
+    for i in 0..n_requests {
+        // Overlap submission with completion: only ever block on the oldest
+        // pending response, and only when the window is full — no rigid
+        // head-of-line drain waves.
+        while inflight.len() >= window {
+            drain(&mut inflight, &mut per_variant, &mut correct, &mut done, &mut failed);
+        }
+        let (img, truth) = match &gw.testset {
+            Some(ts) => {
+                let idx = rng.range(0, ts.n);
+                (ts.image(idx).to_vec(), ts.labels[idx] as usize)
+            }
+            None => {
+                let base = rng.range(0, gw.classes);
+                (vec![base as f32; gw.image_len], base)
+            }
+        };
+        let sel = schedule[i % schedule.len()].clone();
+        match gw.server.submit(InferRequest::new(img).with_variant(sel)) {
+            Ok(p) => inflight.push_back((p, truth)),
+            Err(e) => {
+                route_errors += 1;
+                if route_errors <= 3 {
+                    eprintln!("(submit failed: {e})");
+                }
+            }
+        }
+    }
+    while !inflight.is_empty() {
+        drain(&mut inflight, &mut per_variant, &mut correct, &mut done, &mut failed);
+    }
+    let wall = started.elapsed();
+
+    print!("{}", gw.server.summary_table().render());
+    println!();
+    for (name, (c, n)) in &per_variant {
+        println!(
+            "  {name}: {c}/{n} = {:.2}% of its routed stream correct",
+            100.0 * *c as f64 / (*n).max(1) as f64
+        );
+    }
     println!(
-        "accuracy: {}/{} = {:.2}% (wq={wq})",
-        correct,
-        done,
-        100.0 * correct as f64 / done as f64
+        "\ntotal: {done}/{n_requests} answered ({route_errors} unroutable, {failed} failed), \
+         accuracy {:.2}%",
+        100.0 * correct as f64 / done.max(1) as f64
     );
     println!(
-        "simulated FPGA design for this model: {:.1} fps (virtual clock above)",
-        fpga_fps
+        "client-side achieved throughput: {:.1} req/s over {:.2}s wall (route={route_spec})",
+        done as f64 / wall.as_secs_f64().max(1e-9),
+        wall.as_secs_f64()
     );
     Ok(())
 }
@@ -334,23 +467,36 @@ fn cmd_classify(args: &Args) -> Result<()> {
         .unwrap_or_else(artifacts_dir);
     let wq = args.get_u64("wq", 4) as u32;
     let index = args.get_usize("index", 0);
-    let engine = Engine::load_all(&dir)?;
-    let ts_path = engine
-        .manifest
-        .testset
-        .clone()
-        .ok_or_else(|| anyhow!("manifest has no testset"))?;
-    let testset = TestSet::load(dir.join(ts_path))?;
-    if index >= testset.n {
-        bail!("index {index} out of range (testset has {} images)", testset.n);
-    }
-    let model = engine
-        .model_for(wq, 1)
-        .ok_or_else(|| anyhow!("no batch-1 model for wq={wq}"))?;
-    let classes = model.classify(testset.image(index))?;
+    let wqs = args.get_list_u32("variants", &[wq]);
+    let sel = match args.get("route") {
+        Some(r) => VariantSelector::parse(r).map_err(|e| anyhow!("{e}"))?,
+        // Pin to --wq only when it was given; `classify --variants 2,8`
+        // without --wq must route to the hosted default, not Exact(4).
+        None if args.get("wq").is_some() => VariantSelector::Exact(wq),
+        None => VariantSelector::Default,
+    };
+    let gw = build_gateway(&dir, &wqs, 1)?;
+    let (img, label) = match &gw.testset {
+        Some(ts) => {
+            if index >= ts.n {
+                bail!("index {index} out of range (testset has {} images)", ts.n);
+            }
+            (ts.image(index).to_vec(), ts.labels[index] as usize)
+        }
+        None => {
+            let class = index % gw.classes;
+            (vec![class as f32; gw.image_len], class)
+        }
+    };
+    let resp = gw
+        .server
+        .infer(InferRequest::new(img).with_variant(sel.clone()))
+        .map_err(|e| anyhow!("{e}"))?;
     println!(
-        "image {index}: predicted class {} (label {})",
-        classes[0], testset.labels[index]
+        "image {index}: predicted class {} via variant '{}' (route {sel}, label {label}){}",
+        resp.class,
+        resp.variant,
+        if gw.real { "" } else { " [mock backend]" },
     );
     Ok(())
 }

@@ -112,10 +112,15 @@ pub const HEADLINE_ENERGY_REDUCTION: f64 = 6.36;
 /// accuracies; our small-scale QAT provides the ordering check, see
 /// EXPERIMENTS.md).
 pub fn top5_accuracy(cnn: &str, wq: u32) -> Option<f64> {
-    TABLE3
-        .iter()
-        .find(|r| r.cnn == cnn && r.wq == wq)
-        .map(|r| r.top5)
+    if let Some(r) = TABLE3.iter().find(|r| r.cnn == cnn && r.wq == wq) {
+        return Some(r.top5);
+    }
+    // Table III stops at wq=4; Table IV (ResNet-18 only) adds the wq=8
+    // point, which the serving layer's routing profiles need.
+    if cnn == "ResNet-18" {
+        return TABLE4.iter().find(|c| c.wq == wq).map(|c| c.top5);
+    }
+    None
 }
 
 #[cfg(test)]
@@ -163,6 +168,9 @@ mod tests {
         assert_eq!(top5_accuracy("ResNet-18", 2), Some(87.48));
         assert_eq!(top5_accuracy("ResNet-18", 0), Some(89.07));
         assert_eq!(top5_accuracy("VGG", 2), None);
+        // The Table IV extension point (serving profiles for wq=8).
+        assert_eq!(top5_accuracy("ResNet-18", 8), Some(89.62));
+        assert_eq!(top5_accuracy("ResNet-50", 8), None);
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! build environments; it is gated behind the `pjrt` cargo feature so the
 //! default build stays dependency-free. Without the feature the same API is
 //! exported but every constructor returns a descriptive error, and the
-//! serving stack falls back to [`crate::coordinator::MockBackend`].
+//! serving stack falls back to [`crate::serving::MockBackend`].
 
 use super::manifest::{Manifest, ModelEntry};
 use crate::util::error::Result;
@@ -119,6 +119,23 @@ mod imp {
             })
         }
 
+        /// Create a client and load only one word-length's model variants —
+        /// what a per-variant serving worker needs, without compiling the
+        /// whole family into every worker thread.
+        pub fn load_wq(artifacts_dir: impl AsRef<std::path::Path>, wq: u32) -> Result<Engine> {
+            let manifest = Manifest::load(&artifacts_dir)?;
+            let entries: Vec<ModelEntry> =
+                manifest.entries_for_wq(wq).into_iter().cloned().collect();
+            if entries.is_empty() {
+                bail!("no exported models for wq={wq}");
+            }
+            let mut engine = Engine::with_manifest(manifest)?;
+            for entry in entries {
+                engine.load(entry)?;
+            }
+            Ok(engine)
+        }
+
         /// Compile one model variant from its HLO text.
         pub fn load(&mut self, entry: ModelEntry) -> Result<&LoadedModel> {
             let path = self.manifest.resolve(&entry.path);
@@ -195,6 +212,10 @@ mod imp {
         }
 
         pub fn with_manifest(_manifest: Manifest) -> Result<Engine> {
+            bail!("{NO_PJRT}");
+        }
+
+        pub fn load_wq(_artifacts_dir: impl AsRef<std::path::Path>, _wq: u32) -> Result<Engine> {
             bail!("{NO_PJRT}");
         }
 

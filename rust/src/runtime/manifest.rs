@@ -102,6 +102,12 @@ impl Manifest {
         self.models.iter().find(|m| m.wq == wq && m.batch == batch)
     }
 
+    /// Every exported model for one word-length (all batch sizes), in
+    /// manifest order.
+    pub fn entries_for_wq(&self, wq: u32) -> Vec<&ModelEntry> {
+        self.models.iter().filter(|m| m.wq == wq).collect()
+    }
+
     /// All word-lengths available.
     pub fn wqs(&self) -> Vec<u32> {
         let mut v: Vec<u32> = self.models.iter().map(|m| m.wq).collect();
@@ -145,6 +151,8 @@ mod tests {
         assert_eq!(m.find(4, 8).unwrap().name, "resnet8_w4_b8");
         assert!(m.find(2, 1).is_none());
         assert_eq!(m.wqs(), vec![4]);
+        assert_eq!(m.entries_for_wq(4).len(), 2);
+        assert!(m.entries_for_wq(2).is_empty());
     }
 
     #[test]

@@ -1,0 +1,305 @@
+//! Inference backends for the serving gateway: the production PJRT engine
+//! and a deterministic mock for tests/benches.
+
+use crate::anyhow;
+use crate::runtime::Engine;
+use crate::util::error::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Coarse backend health, refreshed by the variant worker after every batch
+/// and exported to the router through
+/// [`crate::serving::router::VariantStatus`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendHealth {
+    /// Serving normally.
+    Healthy,
+    /// Serving, but impaired (e.g. recent errors); policy routing
+    /// deprioritizes but does not exclude it.
+    Degraded,
+    /// Not serving; policy routing excludes it ([`Exact`] routing does not
+    /// fall back and will still reach it).
+    ///
+    /// [`Exact`]: crate::serving::VariantSelector::Exact
+    Unavailable,
+}
+
+impl BackendHealth {
+    pub(crate) fn as_u8(self) -> u8 {
+        match self {
+            BackendHealth::Healthy => 0,
+            BackendHealth::Degraded => 1,
+            BackendHealth::Unavailable => 2,
+        }
+    }
+
+    pub(crate) fn from_u8(v: u8) -> BackendHealth {
+        match v {
+            0 => BackendHealth::Healthy,
+            1 => BackendHealth::Degraded,
+            _ => BackendHealth::Unavailable,
+        }
+    }
+}
+
+/// Anything that can run a batch of images to logits.
+///
+/// Not `Send`: the PJRT client types are thread-affine, so the gateway
+/// constructs the backend *inside* the variant's worker thread via a factory
+/// closure (see [`crate::serving::ServerBuilder::variant`]).
+pub trait InferenceBackend {
+    /// Batch sizes the backend has compiled executables for (sorted not
+    /// required).
+    fn batch_sizes(&self) -> Vec<usize>;
+    /// Flattened image length (h*w*c).
+    fn image_len(&self) -> usize;
+    fn classes(&self) -> usize;
+    /// Run `batch` images (flattened, padded by the caller) and return
+    /// `batch * classes` logits.
+    fn infer_batch(&self, images: &[f32], batch: usize) -> Result<Vec<f32>>;
+
+    /// Can the backend execute a batch of exactly `n` images? The gateway
+    /// uses this to decide between padding up to a supported size and
+    /// splitting an oversized batch — introspection instead of guessing.
+    fn supports_batch(&self, n: usize) -> bool {
+        self.batch_sizes().contains(&n)
+    }
+
+    /// One-time warm-up before the variant is announced ready (e.g. first
+    /// PJRT execution to trigger lazy initialization). Failure aborts the
+    /// variant's startup.
+    fn warmup(&self) -> Result<()> {
+        Ok(())
+    }
+
+    /// Current health, polled by the worker between batches.
+    fn health(&self) -> BackendHealth {
+        BackendHealth::Healthy
+    }
+}
+
+/// PJRT-backed production backend for one word-length variant.
+pub struct EngineBackend {
+    engine: Engine,
+    wq: u32,
+    batch_sizes: Vec<usize>,
+    image_len: usize,
+    classes: usize,
+}
+
+impl EngineBackend {
+    /// Wrap an engine, serving the `wq` variant.
+    pub fn new(engine: Engine, wq: u32) -> Result<EngineBackend> {
+        let entries = engine.manifest.entries_for_wq(wq);
+        if entries.is_empty() {
+            return Err(anyhow!("no exported models for wq={wq}"));
+        }
+        let image_len = entries[0].input_len() / entries[0].batch;
+        let classes = entries[0].classes;
+        let batch_sizes = entries.iter().map(|e| e.batch).collect();
+        Ok(EngineBackend {
+            engine,
+            wq,
+            batch_sizes,
+            image_len,
+            classes,
+        })
+    }
+
+    /// Load a per-wq engine from `dir` and wrap it — the one-call constructor
+    /// variant workers use (only this word-length's models are compiled).
+    pub fn load(dir: impl AsRef<std::path::Path>, wq: u32) -> Result<EngineBackend> {
+        EngineBackend::new(Engine::load_wq(dir, wq)?, wq)
+    }
+}
+
+impl InferenceBackend for EngineBackend {
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.batch_sizes.clone()
+    }
+
+    fn image_len(&self) -> usize {
+        self.image_len
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn infer_batch(&self, images: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let model = self
+            .engine
+            .model_for(self.wq, batch)
+            .ok_or_else(|| anyhow!("no compiled model for wq={} batch={batch}", self.wq))?;
+        model.infer(images)
+    }
+
+    fn warmup(&self) -> Result<()> {
+        // First PJRT execution initializes thread-local runtime state; do it
+        // on a zero batch so the first real request doesn't pay for it.
+        let batch = *self.batch_sizes.iter().min().unwrap_or(&1);
+        let zeros = vec![0.0f32; batch * self.image_len];
+        self.infer_batch(&zeros, batch).map(|_| ())
+    }
+}
+
+/// Deterministic mock backend: logits are a fixed function of the input so
+/// tests can assert classification results; optional artificial latency and
+/// failure injection.
+pub struct MockBackend {
+    image_len: usize,
+    classes: usize,
+    batch_sizes: Vec<usize>,
+    /// Artificial per-call latency in microseconds; shared so tests can
+    /// degrade a live backend and watch the router shift traffic.
+    latency_us: Arc<AtomicU64>,
+    /// Fail every call after the Nth (failure injection).
+    pub fail_after: Option<u64>,
+    calls: AtomicU64,
+}
+
+impl MockBackend {
+    pub fn new(image_len: usize, classes: usize, batch_sizes: Vec<usize>, latency_us: u64) -> Self {
+        MockBackend {
+            image_len,
+            classes,
+            batch_sizes,
+            latency_us: Arc::new(AtomicU64::new(latency_us)),
+            fail_after: None,
+            calls: AtomicU64::new(0),
+        }
+    }
+
+    /// Replace the latency source with a shared handle; callers keep a clone
+    /// and can change the backend's latency while it serves.
+    pub fn with_latency_source(mut self, source: Arc<AtomicU64>) -> Self {
+        self.latency_us = source;
+        self
+    }
+
+    /// Handle to the live latency knob.
+    pub fn latency_handle(&self) -> Arc<AtomicU64> {
+        self.latency_us.clone()
+    }
+
+    /// The mock's ground-truth rule: class = floor(mean(image)) mod classes.
+    pub fn expected_class(&self, image: &[f32]) -> usize {
+        let mean = image.iter().sum::<f32>() / image.len() as f32;
+        (mean.max(0.0) as usize) % self.classes
+    }
+}
+
+impl InferenceBackend for MockBackend {
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.batch_sizes.clone()
+    }
+
+    fn image_len(&self) -> usize {
+        self.image_len
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn infer_batch(&self, images: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let n = self.calls.fetch_add(1, Ordering::Relaxed);
+        if let Some(limit) = self.fail_after {
+            if n >= limit {
+                return Err(anyhow!("injected failure on call {n}"));
+            }
+        }
+        let latency = self.latency_us.load(Ordering::Relaxed);
+        if latency > 0 {
+            std::thread::sleep(std::time::Duration::from_micros(latency));
+        }
+        if images.len() != batch * self.image_len {
+            return Err(anyhow!(
+                "mock: bad input length {} for batch {batch}",
+                images.len()
+            ));
+        }
+        let mut logits = vec![0.0f32; batch * self.classes];
+        for b in 0..batch {
+            let img = &images[b * self.image_len..(b + 1) * self.image_len];
+            let class = self.expected_class(img);
+            logits[b * self.classes + class] = 1.0;
+        }
+        Ok(logits)
+    }
+
+    fn health(&self) -> BackendHealth {
+        match self.fail_after {
+            Some(limit) if self.calls.load(Ordering::Relaxed) >= limit => {
+                BackendHealth::Unavailable
+            }
+            _ => BackendHealth::Healthy,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_is_deterministic() {
+        let m = MockBackend::new(4, 3, vec![1], 0);
+        let img = vec![2.0, 2.0, 2.0, 2.0]; // mean 2 -> class 2
+        let logits = m.infer_batch(&img, 1).unwrap();
+        assert_eq!(logits, vec![0.0, 0.0, 1.0]);
+        assert_eq!(m.expected_class(&img), 2);
+    }
+
+    #[test]
+    fn mock_batch_layout() {
+        let m = MockBackend::new(2, 2, vec![2], 0);
+        let imgs = vec![0.0, 0.0, 1.0, 1.0]; // classes 0 and 1
+        let logits = m.infer_batch(&imgs, 2).unwrap();
+        assert_eq!(logits, vec![1.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn mock_failure_injection() {
+        let mut m = MockBackend::new(2, 2, vec![1], 0);
+        m.fail_after = Some(1);
+        assert_eq!(m.health(), BackendHealth::Healthy);
+        assert!(m.infer_batch(&[0.0, 0.0], 1).is_ok());
+        assert!(m.infer_batch(&[0.0, 0.0], 1).is_err());
+        assert_eq!(m.health(), BackendHealth::Unavailable);
+    }
+
+    #[test]
+    fn mock_validates_length() {
+        let m = MockBackend::new(3, 2, vec![1], 0);
+        assert!(m.infer_batch(&[0.0; 2], 1).is_err());
+    }
+
+    #[test]
+    fn default_capabilities() {
+        let m = MockBackend::new(2, 2, vec![1, 4, 8], 0);
+        assert!(m.supports_batch(4));
+        assert!(!m.supports_batch(3));
+        assert!(m.warmup().is_ok());
+        assert_eq!(m.health(), BackendHealth::Healthy);
+    }
+
+    #[test]
+    fn shared_latency_source_is_live() {
+        let knob = Arc::new(AtomicU64::new(0));
+        let m = MockBackend::new(2, 2, vec![1], 0).with_latency_source(knob.clone());
+        knob.store(1, Ordering::Relaxed);
+        assert_eq!(m.latency_handle().load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn health_round_trips_through_u8() {
+        for h in [
+            BackendHealth::Healthy,
+            BackendHealth::Degraded,
+            BackendHealth::Unavailable,
+        ] {
+            assert_eq!(BackendHealth::from_u8(h.as_u8()), h);
+        }
+    }
+}

@@ -1,8 +1,14 @@
 //! Serving metrics: latency histogram, throughput counters, batch-size
-//! distribution, and the virtual-FPGA clock that reports what the same
-//! stream would cost on the simulated accelerator design.
+//! distribution, the virtual-FPGA clock that reports what the same stream
+//! would cost on the simulated accelerator design, and the EWMA latency the
+//! router reads to shift traffic between variants.
 
 use crate::util::stats::LatencyHistogram;
+
+/// EWMA smoothing factor for the router-facing latency estimate: heavy
+/// enough that one slow batch moves the estimate, light enough that a
+/// single outlier doesn't own it.
+pub const EWMA_ALPHA: f64 = 0.2;
 
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
@@ -17,6 +23,11 @@ pub struct Metrics {
     pub batched_items: u64,
     /// Items that were padding (submitted batch < compiled batch).
     pub padded_items: u64,
+    /// Exponentially-weighted moving average of end-to-end latency in
+    /// microseconds (0 until the first response); what policy routing sees.
+    /// Decays while the variant sits idle so a degraded-then-starved
+    /// variant eventually re-qualifies and gets probed.
+    pub ewma_latency_us: f64,
     /// Simulated FPGA busy time for the same stream, in microseconds.
     pub fpga_virtual_us: f64,
     /// Wall-clock span of the measurement window, in microseconds.
@@ -51,10 +62,21 @@ impl Metrics {
         }
     }
 
+    /// Fold one observed end-to-end latency into the EWMA estimate.
+    pub fn observe_latency_us(&mut self, us: f64) {
+        self.latency.record_us(us);
+        self.ewma_latency_us = if self.ewma_latency_us <= 0.0 {
+            us
+        } else {
+            EWMA_ALPHA * us + (1.0 - EWMA_ALPHA) * self.ewma_latency_us
+        };
+    }
+
     pub fn summary(&self) -> String {
         format!(
             "requests={} responses={} errors={} batches={} mean_batch={:.2} \
-             p50={:.0}us p99={:.0}us max={:.0}us throughput={:.1} rps fpga_sim={:.1} fps",
+             p50={:.0}us p99={:.0}us max={:.0}us ewma={:.0}us throughput={:.1} rps \
+             fpga_sim={:.1} fps",
             self.requests,
             self.responses,
             self.errors,
@@ -63,6 +85,7 @@ impl Metrics {
             self.latency.percentile_us(50.0),
             self.latency.percentile_us(99.0),
             self.latency.max_us(),
+            self.ewma_latency_us,
             self.throughput_rps(),
             self.fpga_fps(),
         )
@@ -91,5 +114,21 @@ mod tests {
         assert_eq!(m.throughput_rps(), 0.0);
         assert_eq!(m.fpga_fps(), 0.0);
         assert!(m.summary().contains("requests=0"));
+    }
+
+    #[test]
+    fn ewma_tracks_latency_shifts() {
+        let mut m = Metrics::default();
+        m.observe_latency_us(100.0);
+        assert!((m.ewma_latency_us - 100.0).abs() < 1e-9, "first sample seeds");
+        for _ in 0..50 {
+            m.observe_latency_us(1000.0);
+        }
+        assert!(
+            m.ewma_latency_us > 900.0,
+            "ewma must converge to the new level: {}",
+            m.ewma_latency_us
+        );
+        assert_eq!(m.latency.count(), 51);
     }
 }

@@ -1,0 +1,663 @@
+//! L3 serving gateway: one [`Server`] process hosts a *family* of
+//! mixed-precision model variants (the paper's accuracy–throughput
+//! trade-off curve, deployed) and routes typed [`InferRequest`]s across
+//! them.
+//!
+//! Each registered variant gets its own bounded admission queue, dynamic
+//! batcher, and worker thread owning an [`InferenceBackend`] (the PJRT
+//! engine in production, mocks in tests) — see [`worker`]. A pluggable
+//! [`Router`] resolves each request's [`VariantSelector`] against static
+//! profiles (paper Top-5, DSE-simulated fps) and live signals (EWMA
+//! latency, queue depth, backend health):
+//!
+//! ```no_run
+//! use mpcnn::serving::{BatcherConfig, InferenceBackend, InferRequest, MockBackend,
+//!                      Server, VariantSelector, VariantSpec};
+//! # fn main() -> mpcnn::util::error::Result<()> {
+//! let server = Server::builder()
+//!     .variant(VariantSpec::uniform(2), BatcherConfig::default(), || {
+//!         Ok(Box::new(MockBackend::new(48, 10, vec![1, 8], 0)) as Box<dyn InferenceBackend>)
+//!     })
+//!     .variant(VariantSpec::uniform(8), BatcherConfig::default(), || {
+//!         Ok(Box::new(MockBackend::new(48, 10, vec![1, 8], 0)) as Box<dyn InferenceBackend>)
+//!     })
+//!     .build()?;
+//! let resp = server
+//!     .infer(InferRequest::new(vec![0.5; 48]).with_variant(VariantSelector::MinAccuracy(87.0)))
+//!     .map_err(|e| mpcnn::anyhow!("{e}"))?;
+//! println!("class {} served by {}", resp.class, resp.variant);
+//! # Ok(()) }
+//! ```
+//!
+//! The old single-variant [`crate::coordinator::Coordinator`] survives as a
+//! thin shim over this module.
+
+pub mod backend;
+pub mod metrics;
+pub mod router;
+pub mod variant;
+mod worker;
+
+pub use backend::{BackendHealth, EngineBackend, InferenceBackend, MockBackend};
+pub use metrics::Metrics;
+pub use router::{PolicyRouter, RouteError, Router, VariantStatus};
+pub use variant::{VariantProfile, VariantSpec};
+pub use worker::{BatcherConfig, Client, PendingResponse, Response, SubmitError};
+
+use crate::util::error::Result;
+use crate::util::table::{fnum, Table};
+use std::fmt;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use worker::{spawn_variant, VariantWorker};
+
+/// How a request picks its model variant.
+#[derive(Clone, Debug, PartialEq)]
+pub enum VariantSelector {
+    /// The server's default variant.
+    Default,
+    /// Exactly the uniform-`wq` variant; never falls back.
+    Exact(u32),
+    /// Exactly the named variant; never falls back.
+    Named(String),
+    /// Cheapest variant whose estimated Top-5 accuracy (percent) is at
+    /// least this.
+    MinAccuracy(f64),
+    /// Most accurate variant whose current latency estimate fits.
+    MaxLatency(Duration),
+}
+
+impl VariantSelector {
+    /// Parse a CLI route spec: `default`, `exact:4`, `name:w4`,
+    /// `min-accuracy:0.85` (fraction or percent), `max-latency:20ms`.
+    pub fn parse(s: &str) -> Result<VariantSelector, String> {
+        let s = s.trim();
+        if s.eq_ignore_ascii_case("default") {
+            return Ok(VariantSelector::Default);
+        }
+        let (kind, val) = s
+            .split_once(':')
+            .ok_or_else(|| format!("bad route '{s}' (want KIND:VALUE or 'default')"))?;
+        match kind {
+            "exact" => val
+                .parse::<u32>()
+                .map(VariantSelector::Exact)
+                .map_err(|_| format!("bad wq in '{s}'")),
+            "name" | "named" => Ok(VariantSelector::Named(val.to_string())),
+            "min-accuracy" => {
+                let a: f64 = val.parse().map_err(|_| format!("bad accuracy in '{s}'"))?;
+                // Accept both 0.85 (fraction) and 85 (percent).
+                Ok(VariantSelector::MinAccuracy(if a <= 1.0 { a * 100.0 } else { a }))
+            }
+            "max-latency" => {
+                let ms: f64 = val
+                    .trim_end_matches("ms")
+                    .parse()
+                    .map_err(|_| format!("bad latency in '{s}' (want e.g. 20ms)"))?;
+                // from_secs_f64 panics on negative/NaN; reject instead.
+                if !ms.is_finite() || ms < 0.0 {
+                    return Err(format!("bad latency in '{s}' (want non-negative ms)"));
+                }
+                Ok(VariantSelector::MaxLatency(Duration::from_secs_f64(
+                    ms / 1e3,
+                )))
+            }
+            _ => Err(format!(
+                "unknown route kind '{kind}' \
+                 (default | exact:WQ | name:NAME | min-accuracy:PCT | max-latency:MS)"
+            )),
+        }
+    }
+}
+
+impl fmt::Display for VariantSelector {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            VariantSelector::Default => write!(f, "default"),
+            VariantSelector::Exact(wq) => write!(f, "exact:{wq}"),
+            VariantSelector::Named(n) => write!(f, "name:{n}"),
+            VariantSelector::MinAccuracy(a) => write!(f, "min-accuracy:{a:.2}"),
+            VariantSelector::MaxLatency(d) => {
+                write!(f, "max-latency:{:.1}ms", d.as_secs_f64() * 1e3)
+            }
+        }
+    }
+}
+
+/// One typed inference request.
+#[derive(Clone, Debug)]
+pub struct InferRequest {
+    /// Flattened image (must match the routed variant's `image_len`).
+    pub image: Vec<f32>,
+    pub variant: VariantSelector,
+    /// Client-side wait budget for [`Server::infer`]; `None` waits
+    /// indefinitely.
+    pub deadline: Option<Duration>,
+}
+
+impl InferRequest {
+    pub fn new(image: Vec<f32>) -> InferRequest {
+        InferRequest {
+            image,
+            variant: VariantSelector::Default,
+            deadline: None,
+        }
+    }
+
+    pub fn with_variant(mut self, v: VariantSelector) -> InferRequest {
+        self.variant = v;
+        self
+    }
+
+    pub fn with_deadline(mut self, d: Duration) -> InferRequest {
+        self.deadline = Some(d);
+        self
+    }
+}
+
+type BackendFactory = Box<dyn FnOnce() -> Result<Box<dyn InferenceBackend>> + Send>;
+
+struct VariantDef {
+    spec: VariantSpec,
+    profile: VariantProfile,
+    cfg: BatcherConfig,
+    factory: BackendFactory,
+}
+
+/// Builder for [`Server`]: register named variants, pick a router and a
+/// default, then `build()` to spawn one batcher worker per variant.
+pub struct ServerBuilder {
+    defs: Vec<VariantDef>,
+    router: Box<dyn Router>,
+    default_name: Option<String>,
+}
+
+impl Default for ServerBuilder {
+    fn default() -> Self {
+        ServerBuilder::new()
+    }
+}
+
+impl ServerBuilder {
+    pub fn new() -> ServerBuilder {
+        ServerBuilder {
+            defs: Vec::new(),
+            router: Box::new(PolicyRouter),
+            default_name: None,
+        }
+    }
+
+    /// Register a variant. `factory` runs *inside* the variant's worker
+    /// thread (PJRT backends are not `Send`). The routing profile is
+    /// derived from the spec alone (paper ResNet-18 accuracy, no fps
+    /// prior); use [`variant_with_profile`](Self::variant_with_profile) to
+    /// attach a DSE-derived one.
+    pub fn variant<F>(self, spec: VariantSpec, cfg: BatcherConfig, factory: F) -> ServerBuilder
+    where
+        F: FnOnce() -> Result<Box<dyn InferenceBackend>> + Send + 'static,
+    {
+        let profile = VariantProfile {
+            top5_accuracy: spec.estimated_top5("ResNet-18"),
+            ..VariantProfile::default()
+        };
+        self.variant_with_profile(spec, profile, cfg, factory)
+    }
+
+    /// Register a variant with an explicit routing profile (see
+    /// [`VariantProfile::from_dse`]). If `cfg.fpga_fps_sim` is 0 the
+    /// profile's DSE fps is attached as the variant's virtual clock.
+    pub fn variant_with_profile<F>(
+        mut self,
+        spec: VariantSpec,
+        profile: VariantProfile,
+        mut cfg: BatcherConfig,
+        factory: F,
+    ) -> ServerBuilder
+    where
+        F: FnOnce() -> Result<Box<dyn InferenceBackend>> + Send + 'static,
+    {
+        if cfg.fpga_fps_sim <= 0.0 && profile.fpga_fps > 0.0 {
+            cfg.fpga_fps_sim = profile.fpga_fps;
+        }
+        self.defs.push(VariantDef {
+            spec,
+            profile,
+            cfg,
+            factory: Box::new(factory),
+        });
+        self
+    }
+
+    /// Replace the default [`PolicyRouter`].
+    pub fn router<R: Router>(mut self, r: R) -> ServerBuilder {
+        self.router = Box::new(r);
+        self
+    }
+
+    /// Name the variant `VariantSelector::Default` resolves to (first
+    /// registered wins otherwise).
+    pub fn default_variant(mut self, name: impl Into<String>) -> ServerBuilder {
+        self.default_name = Some(name.into());
+        self
+    }
+
+    /// Spawn every variant's worker (factories run in their threads, then
+    /// warm up) and return the running server. Any factory/warm-up failure
+    /// fails the build; already-spawned workers are joined.
+    pub fn build(self) -> Result<Server> {
+        if self.defs.is_empty() {
+            return Err(crate::anyhow!("server needs at least one variant"));
+        }
+        for (i, d) in self.defs.iter().enumerate() {
+            if self.defs[..i].iter().any(|p| p.spec.name == d.spec.name) {
+                return Err(crate::anyhow!("duplicate variant name '{}'", d.spec.name));
+            }
+        }
+        let default_idx = match &self.default_name {
+            None => 0,
+            Some(n) => self
+                .defs
+                .iter()
+                .position(|d| &d.spec.name == n)
+                .ok_or_else(|| crate::anyhow!("default variant '{n}' is not registered"))?,
+        };
+        let mut variants = Vec::with_capacity(self.defs.len());
+        for def in self.defs {
+            let worker = spawn_variant(&def.spec.name, def.factory, def.cfg)?;
+            variants.push(Variant {
+                name: Arc::from(def.spec.name.as_str()),
+                spec: def.spec,
+                profile: def.profile,
+                worker,
+            });
+        }
+        Ok(Server {
+            variants,
+            router: self.router,
+            default_idx,
+            started: Instant::now(),
+        })
+    }
+}
+
+struct Variant {
+    spec: VariantSpec,
+    profile: VariantProfile,
+    worker: VariantWorker,
+    /// `spec.name` as a shared str: per-request routing snapshots clone a
+    /// pointer instead of a `String`.
+    name: Arc<str>,
+}
+
+/// The running multi-variant serving gateway. Dropping it joins every
+/// variant worker.
+pub struct Server {
+    variants: Vec<Variant>,
+    router: Box<dyn Router>,
+    default_idx: usize,
+    started: Instant,
+}
+
+impl Server {
+    pub fn builder() -> ServerBuilder {
+        ServerBuilder::new()
+    }
+
+    pub fn n_variants(&self) -> usize {
+        self.variants.len()
+    }
+
+    pub fn variant_names(&self) -> Vec<String> {
+        self.variants.iter().map(|v| v.spec.name.clone()).collect()
+    }
+
+    /// Routing snapshot of every variant (static profile + live signals).
+    pub fn statuses(&self) -> Vec<VariantStatus> {
+        self.variants
+            .iter()
+            .enumerate()
+            .map(|(i, v)| VariantStatus {
+                name: v.name.clone(),
+                wq: v.spec.wq,
+                top5_accuracy: v.profile.top5_accuracy,
+                fpga_fps: v.profile.fpga_fps,
+                ewma_latency_us: v.worker.shared.ewma_us(),
+                inflight: v.worker.shared.inflight(),
+                health: v.worker.shared.health(),
+                default: i == self.default_idx,
+            })
+            .collect()
+    }
+
+    /// Resolve a selector to the variant name it would route to right now
+    /// (introspection; the actual submit re-routes).
+    pub fn route(&self, sel: &VariantSelector) -> Result<String, RouteError> {
+        let idx = self.router.route(sel, &self.statuses())?;
+        Ok(self.variants[idx].spec.name.clone())
+    }
+
+    /// Direct per-variant client (bypasses routing), e.g. for the
+    /// single-variant coordinator shim.
+    pub fn client(&self, name: &str) -> Option<Client> {
+        self.variants
+            .iter()
+            .find(|v| v.spec.name == name)
+            .map(|v| v.worker.client.clone())
+    }
+
+    fn resolve(&self, sel: &VariantSelector) -> Result<usize, SubmitError> {
+        self.router
+            .route(sel, &self.statuses())
+            .map_err(SubmitError::Route)
+    }
+
+    /// Route and submit without blocking; sheds load when the routed
+    /// variant's queue is full.
+    pub fn try_submit(&self, req: InferRequest) -> Result<PendingResponse, SubmitError> {
+        let idx = self.resolve(&req.variant)?;
+        self.variants[idx].worker.client.try_submit(req.image)
+    }
+
+    /// Route and submit, blocking on the routed variant's queue.
+    pub fn submit(&self, req: InferRequest) -> Result<PendingResponse, SubmitError> {
+        let idx = self.resolve(&req.variant)?;
+        self.variants[idx].worker.client.submit(req.image)
+    }
+
+    /// Submit and wait, honouring the request's deadline if set.
+    pub fn infer(&self, req: InferRequest) -> Result<Response, String> {
+        let deadline = req.deadline;
+        let pending = self.submit(req).map_err(|e| e.to_string())?;
+        match deadline {
+            Some(d) => pending.wait_timeout(d),
+            None => pending.wait(),
+        }
+    }
+
+    /// Snapshot of one variant's metrics (wall window = since server
+    /// start).
+    pub fn metrics(&self, name: &str) -> Option<Metrics> {
+        let v = self.variants.iter().find(|v| v.spec.name == name)?;
+        let mut m = v.worker.metrics.lock().unwrap().clone();
+        m.wall_us = self.started.elapsed().as_micros() as f64;
+        Some(m)
+    }
+
+    /// Snapshots of every variant's metrics, in registration order.
+    pub fn metrics_all(&self) -> Vec<(String, Metrics)> {
+        self.variants
+            .iter()
+            .map(|v| {
+                let mut m = v.worker.metrics.lock().unwrap().clone();
+                m.wall_us = self.started.elapsed().as_micros() as f64;
+                (v.spec.name.clone(), m)
+            })
+            .collect()
+    }
+
+    /// Per-variant metrics table for end-of-run summaries.
+    pub fn summary_table(&self) -> Table {
+        let mut t = Table::new("per-variant serving metrics").headers(&[
+            "variant", "wq", "top5 %*", "reqs", "resps", "errs", "mean batch", "p50 ms",
+            "p99 ms", "ewma ms", "rps", "fpga-sim fps",
+        ]);
+        for (name, m) in self.metrics_all() {
+            let v = self
+                .variants
+                .iter()
+                .find(|v| v.spec.name == name)
+                .expect("metrics_all names are registered");
+            t.row(vec![
+                name.clone(),
+                v.spec
+                    .wq
+                    .map(|w| w.to_string())
+                    .unwrap_or_else(|| "mix".into()),
+                v.profile
+                    .top5_accuracy
+                    .map(|a| fnum(a, 2))
+                    .unwrap_or_else(|| "-".into()),
+                m.requests.to_string(),
+                m.responses.to_string(),
+                m.errors.to_string(),
+                fnum(m.mean_batch(), 2),
+                fnum(m.latency.percentile_us(50.0) / 1e3, 2),
+                fnum(m.latency.percentile_us(99.0) / 1e3, 2),
+                fnum(m.ewma_latency_us / 1e3, 2),
+                fnum(m.throughput_rps(), 1),
+                fnum(m.fpga_fps(), 1),
+            ]);
+        }
+        t.note("* estimated (paper Table III/IV lineage); virtual-clock fps from the cached DSE");
+        t
+    }
+
+    /// Graceful shutdown: join every worker, return final per-variant
+    /// metrics. In-flight requests complete; queued-but-unbatched requests
+    /// are drained before exit.
+    pub fn shutdown(mut self) -> Vec<(String, Metrics)> {
+        let wall_us = self.started.elapsed().as_micros() as f64;
+        for v in &mut self.variants {
+            v.worker.stop_and_join();
+        }
+        self.variants
+            .iter()
+            .map(|v| {
+                let mut m = v.worker.metrics.lock().unwrap().clone();
+                m.wall_us = wall_us;
+                (v.spec.name.clone(), m)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mock_variant(
+        wq: u32,
+        latency_us: u64,
+        acc: f64,
+        fps: f64,
+    ) -> (VariantSpec, VariantProfile, BatcherConfig, BackendFactory) {
+        (
+            VariantSpec::uniform(wq),
+            VariantProfile {
+                top5_accuracy: Some(acc),
+                fpga_fps: fps,
+                fpga_mj_per_frame: 1.0,
+            },
+            BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                queue_capacity: 64,
+                fpga_fps_sim: 0.0,
+            },
+            Box::new(move || {
+                Ok(Box::new(MockBackend::new(12, 4, vec![1, 4], latency_us))
+                    as Box<dyn InferenceBackend>)
+            }),
+        )
+    }
+
+    fn three_variant_server() -> Server {
+        let (s2, p2, c2, f2) = mock_variant(2, 100, 87.48, 245.0);
+        let (s4, p4, c4, f4) = mock_variant(4, 200, 89.10, 165.0);
+        let (s8, p8, c8, f8) = mock_variant(8, 400, 89.62, 47.0);
+        Server::builder()
+            .variant_with_profile(s2, p2, c2, f2)
+            .variant_with_profile(s4, p4, c4, f4)
+            .variant_with_profile(s8, p8, c8, f8)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn builder_requires_variants() {
+        assert!(Server::builder().build().is_err());
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let (s, p, c, f) = mock_variant(2, 0, 87.0, 1.0);
+        let (_, p2, c2, f2) = mock_variant(4, 0, 89.0, 1.0);
+        let err = Server::builder()
+            .variant_with_profile(s.clone(), p, c, f)
+            .variant_with_profile(s, p2, c2, f2)
+            .build();
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn unknown_default_rejected() {
+        let (s, p, c, f) = mock_variant(2, 0, 87.0, 1.0);
+        assert!(Server::builder()
+            .variant_with_profile(s, p, c, f)
+            .default_variant("w999")
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn factory_failure_fails_build() {
+        let r = Server::builder()
+            .variant(
+                VariantSpec::uniform(2),
+                BatcherConfig::default(),
+                || Err(crate::anyhow!("no backend here")),
+            )
+            .build();
+        assert!(r.is_err());
+        assert!(r.err().unwrap().to_string().contains("no backend here"));
+    }
+
+    #[test]
+    fn one_process_hosts_three_precisions_and_routes_exactly() {
+        let server = three_variant_server();
+        assert_eq!(server.n_variants(), 3);
+        for (wq, expect_name) in [(2u32, "w2"), (4, "w4"), (8, "w8")] {
+            let resp = server
+                .infer(
+                    InferRequest::new(vec![1.0; 12]).with_variant(VariantSelector::Exact(wq)),
+                )
+                .unwrap();
+            assert_eq!(resp.variant, expect_name);
+        }
+        // Exact never falls back: wq=16 is not hosted.
+        match server.submit(
+            InferRequest::new(vec![1.0; 12]).with_variant(VariantSelector::Exact(16)),
+        ) {
+            Err(SubmitError::Route(RouteError::NoSuchVariant(_))) => {}
+            other => panic!("expected NoSuchVariant, got {other:?}"),
+        }
+        // Per-variant metrics saw exactly one request each.
+        for (name, m) in server.shutdown() {
+            assert_eq!(m.responses, 1, "variant {name}");
+            assert_eq!(m.errors, 0, "variant {name}");
+        }
+    }
+
+    #[test]
+    fn default_variant_is_configurable() {
+        let (s2, p2, c2, f2) = mock_variant(2, 0, 87.48, 245.0);
+        let (s8, p8, c8, f8) = mock_variant(8, 0, 89.62, 47.0);
+        let server = Server::builder()
+            .variant_with_profile(s2, p2, c2, f2)
+            .variant_with_profile(s8, p8, c8, f8)
+            .default_variant("w8")
+            .build()
+            .unwrap();
+        let resp = server.infer(InferRequest::new(vec![0.0; 12])).unwrap();
+        assert_eq!(resp.variant, "w8");
+        assert_eq!(server.route(&VariantSelector::Default).unwrap(), "w8");
+    }
+
+    #[test]
+    fn min_accuracy_routes_to_fastest_qualifying() {
+        let server = three_variant_server();
+        // 87% excludes nothing here except... all qualify; w2 has the best
+        // fps prior and lowest mock latency, so it should take the traffic.
+        let resp = server
+            .infer(
+                InferRequest::new(vec![2.0; 12])
+                    .with_variant(VariantSelector::MinAccuracy(87.0)),
+            )
+            .unwrap();
+        assert_eq!(resp.variant, "w2");
+        // 89.5% only w8 qualifies.
+        let resp = server
+            .infer(
+                InferRequest::new(vec![2.0; 12])
+                    .with_variant(VariantSelector::MinAccuracy(89.5)),
+            )
+            .unwrap();
+        assert_eq!(resp.variant, "w8");
+    }
+
+    #[test]
+    fn deadline_surfaces_as_timeout() {
+        let (s, p, c, f) = mock_variant(2, 200_000, 87.0, 1.0);
+        let server = Server::builder().variant_with_profile(s, p, c, f).build().unwrap();
+        let r = server.infer(
+            InferRequest::new(vec![0.0; 12])
+                .with_deadline(Duration::from_millis(1)),
+        );
+        assert_eq!(r.unwrap_err(), "timeout");
+    }
+
+    #[test]
+    fn selector_parse_round_trip() {
+        assert_eq!(VariantSelector::parse("default").unwrap(), VariantSelector::Default);
+        assert_eq!(VariantSelector::parse("exact:4").unwrap(), VariantSelector::Exact(4));
+        assert_eq!(
+            VariantSelector::parse("name:w2").unwrap(),
+            VariantSelector::Named("w2".into())
+        );
+        match VariantSelector::parse("min-accuracy:0.85").unwrap() {
+            VariantSelector::MinAccuracy(a) => assert!((a - 85.0).abs() < 1e-9),
+            other => panic!("{other:?}"),
+        }
+        match VariantSelector::parse("min-accuracy:87.5").unwrap() {
+            VariantSelector::MinAccuracy(a) => assert!((a - 87.5).abs() < 1e-9),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(
+            VariantSelector::parse("max-latency:20ms").unwrap(),
+            VariantSelector::MaxLatency(Duration::from_millis(20))
+        );
+        assert!(VariantSelector::parse("nonsense").is_err());
+        assert!(VariantSelector::parse("exact:notanumber").is_err());
+        // from_secs_f64 would panic on these; parse must reject them.
+        assert!(VariantSelector::parse("max-latency:-1ms").is_err());
+        assert!(VariantSelector::parse("max-latency:nanms").is_err());
+        assert!(VariantSelector::parse("max-latency:infms").is_err());
+    }
+
+    #[test]
+    fn virtual_clock_attaches_from_profile() {
+        let (s, p, c, f) = mock_variant(2, 0, 87.48, 100.0);
+        // fpga_fps_sim left at 0 in cfg: builder attaches the profile fps.
+        let server = Server::builder().variant_with_profile(s, p, c, f).build().unwrap();
+        for _ in 0..10 {
+            server
+                .infer(InferRequest::new(vec![0.0; 12]))
+                .unwrap();
+        }
+        let m = server.metrics("w2").unwrap();
+        // 10 frames at 100 fps = 0.1 s of virtual time.
+        assert!((m.fpga_virtual_us - 100_000.0).abs() < 1.0, "{}", m.fpga_virtual_us);
+    }
+
+    #[test]
+    fn summary_table_renders_all_variants() {
+        let server = three_variant_server();
+        server
+            .infer(InferRequest::new(vec![0.0; 12]))
+            .unwrap();
+        let rendered = server.summary_table().render();
+        for name in ["w2", "w4", "w8"] {
+            assert!(rendered.contains(name), "missing {name} in:\n{rendered}");
+        }
+    }
+}

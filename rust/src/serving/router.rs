@@ -1,0 +1,337 @@
+//! Variant routing: resolve a [`VariantSelector`] to one of the server's
+//! registered model variants using their static profiles (paper accuracy,
+//! DSE-simulated fps) and live signals (EWMA latency, in-flight depth,
+//! backend health).
+//!
+//! This operationalizes the paper's accuracy–throughput trade-off curve
+//! (Fig 9 / Table IV): a request that asks for "at least 87% Top-5" or
+//! "under 5 ms" is placed on the cheapest precision variant that satisfies
+//! the constraint, and placement shifts as observed latencies move.
+
+use super::backend::BackendHealth;
+use super::VariantSelector;
+use std::fmt;
+use std::sync::Arc;
+
+/// Routing failure. Deliberately *not* silently recovered: `Exact`/`Named`
+/// misses and unsatisfiable policies surface to the caller.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RouteError {
+    /// The server has no variants at all (builder misuse).
+    NoVariants,
+    /// `Exact(wq)` / `Named(name)` matched nothing. Never falls back.
+    NoSuchVariant(String),
+    /// A policy selector matched no healthy variant.
+    Unsatisfiable(String),
+}
+
+impl fmt::Display for RouteError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RouteError::NoVariants => write!(f, "server has no variants"),
+            RouteError::NoSuchVariant(what) => write!(f, "no such variant: {what}"),
+            RouteError::Unsatisfiable(why) => write!(f, "no variant satisfies policy: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
+
+/// Snapshot of one variant as seen by the router: static profile plus the
+/// live signals the worker publishes lock-free.
+#[derive(Clone, Debug)]
+pub struct VariantStatus {
+    /// Shared with the server so per-request snapshots clone a pointer,
+    /// not a `String`.
+    pub name: Arc<str>,
+    /// Uniform weight word-length, if the variant is uniform.
+    pub wq: Option<u32>,
+    /// Estimated Top-5 accuracy in percent (paper Table III lineage), if
+    /// known.
+    pub top5_accuracy: Option<f64>,
+    /// Frames/s of the DSE-chosen simulated design (the throughput side of
+    /// the trade-off curve); 0 if unknown.
+    pub fpga_fps: f64,
+    /// Live EWMA of end-to-end latency in microseconds; 0 until the first
+    /// response.
+    pub ewma_latency_us: f64,
+    /// Requests currently queued or executing.
+    pub inflight: u64,
+    pub health: BackendHealth,
+    /// Is this the server's default variant?
+    pub default: bool,
+}
+
+impl VariantStatus {
+    /// The router's latency estimate in microseconds: live EWMA once
+    /// traffic has flowed, else the DSE fps estimate as a prior, else a
+    /// pessimistic 1 s. Queue depth inflates the estimate so a backed-up
+    /// variant looks slow before its EWMA catches up.
+    pub fn latency_estimate_us(&self) -> f64 {
+        let base = if self.ewma_latency_us > 0.0 {
+            self.ewma_latency_us
+        } else if self.fpga_fps > 0.0 {
+            1e6 / self.fpga_fps
+        } else {
+            1e6
+        };
+        base * (1.0 + self.inflight as f64 / 8.0)
+    }
+}
+
+/// Pluggable routing policy. Implementations must be pure functions of the
+/// statuses (no interior blocking): the server calls this on every submit.
+pub trait Router: Send + Sync + 'static {
+    /// Resolve `sel` to an index into `variants`, or explain why not.
+    fn route(&self, sel: &VariantSelector, variants: &[VariantStatus])
+        -> Result<usize, RouteError>;
+}
+
+/// The default policy router.
+///
+/// - `Default` → the registered default variant.
+/// - `Exact(wq)` / `Named(name)` → that variant or `NoSuchVariant`; never a
+///   fallback, regardless of health (errors should surface, not be masked
+///   by silently serving a different precision).
+/// - `MinAccuracy(pct)` → among variants with `top5_accuracy >= pct` (and
+///   not `Unavailable`), the lowest current latency estimate.
+/// - `MaxLatency(d)` → among variants with latency estimate `<= d` (and
+///   not `Unavailable`), the highest accuracy; latency breaks ties.
+///
+/// Exclusion is never permanent: a starved variant's EWMA decays on the
+/// worker's idle ticks (see the worker's `IDLE_EWMA_DECAY`), so a variant
+/// knocked out by a transient degradation re-qualifies and gets probed.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PolicyRouter;
+
+impl PolicyRouter {
+    fn usable(v: &VariantStatus) -> bool {
+        v.health != BackendHealth::Unavailable
+    }
+}
+
+impl Router for PolicyRouter {
+    fn route(
+        &self,
+        sel: &VariantSelector,
+        variants: &[VariantStatus],
+    ) -> Result<usize, RouteError> {
+        if variants.is_empty() {
+            return Err(RouteError::NoVariants);
+        }
+        match sel {
+            VariantSelector::Default => Ok(variants
+                .iter()
+                .position(|v| v.default)
+                .unwrap_or(0)),
+            VariantSelector::Exact(wq) => variants
+                .iter()
+                .position(|v| v.wq == Some(*wq))
+                .ok_or_else(|| RouteError::NoSuchVariant(format!("wq={wq}"))),
+            VariantSelector::Named(name) => variants
+                .iter()
+                .position(|v| v.name.as_ref() == name.as_str())
+                .ok_or_else(|| RouteError::NoSuchVariant(format!("name='{name}'"))),
+            VariantSelector::MinAccuracy(pct) => {
+                let best = variants
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, v)| Self::usable(v))
+                    .filter(|(_, v)| v.top5_accuracy.map(|a| a >= *pct).unwrap_or(false))
+                    .min_by(|(_, a), (_, b)| {
+                        a.latency_estimate_us()
+                            .partial_cmp(&b.latency_estimate_us())
+                            .unwrap()
+                    });
+                best.map(|(i, _)| i).ok_or_else(|| {
+                    RouteError::Unsatisfiable(format!("min-accuracy {pct:.2}%"))
+                })
+            }
+            VariantSelector::MaxLatency(limit) => {
+                let limit_us = limit.as_secs_f64() * 1e6;
+                let best = variants
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, v)| Self::usable(v))
+                    .filter(|(_, v)| v.latency_estimate_us() <= limit_us)
+                    .max_by(|(_, a), (_, b)| {
+                        let acc_a = a.top5_accuracy.unwrap_or(-1.0);
+                        let acc_b = b.top5_accuracy.unwrap_or(-1.0);
+                        acc_a.partial_cmp(&acc_b).unwrap().then(
+                            // tie on accuracy: prefer the *faster* one, i.e.
+                            // the max of the reversed latency ordering
+                            b.latency_estimate_us()
+                                .partial_cmp(&a.latency_estimate_us())
+                                .unwrap(),
+                        )
+                    });
+                best.map(|(i, _)| i).ok_or_else(|| {
+                    RouteError::Unsatisfiable(format!(
+                        "max-latency {:.1}ms",
+                        limit.as_secs_f64() * 1e3
+                    ))
+                })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check_eq, forall};
+    use std::time::Duration;
+
+    fn status(name: &str, wq: u32, acc: f64, fps: f64) -> VariantStatus {
+        VariantStatus {
+            name: Arc::from(name),
+            wq: Some(wq),
+            top5_accuracy: Some(acc),
+            fpga_fps: fps,
+            ewma_latency_us: 0.0,
+            inflight: 0,
+            health: BackendHealth::Healthy,
+            default: false,
+        }
+    }
+
+    #[test]
+    fn default_prefers_marked_variant() {
+        let mut vs = vec![status("w2", 2, 87.48, 245.0), status("w8", 8, 89.62, 47.0)];
+        vs[1].default = true;
+        assert_eq!(PolicyRouter.route(&VariantSelector::Default, &vs), Ok(1));
+    }
+
+    #[test]
+    fn exact_hits_or_errors() {
+        let vs = vec![status("w2", 2, 87.48, 245.0), status("w8", 8, 89.62, 47.0)];
+        assert_eq!(PolicyRouter.route(&VariantSelector::Exact(8), &vs), Ok(1));
+        assert!(matches!(
+            PolicyRouter.route(&VariantSelector::Exact(4), &vs),
+            Err(RouteError::NoSuchVariant(_))
+        ));
+        assert_eq!(
+            PolicyRouter.route(&VariantSelector::Named("w2".into()), &vs),
+            Ok(0)
+        );
+    }
+
+    #[test]
+    fn min_accuracy_picks_fastest_qualifying() {
+        // w2 and w4 both qualify at 87%; w2's DSE fps prior is higher, so
+        // with no live data it wins. w1 is excluded on accuracy.
+        let vs = vec![
+            status("w1", 1, 65.29, 271.0),
+            status("w2", 2, 87.48, 245.0),
+            status("w4", 4, 89.10, 165.0),
+        ];
+        assert_eq!(
+            PolicyRouter.route(&VariantSelector::MinAccuracy(87.0), &vs),
+            Ok(1)
+        );
+        // Live latency overrides the prior: w2 degraded, w4 takes over.
+        let mut vs2 = vs.clone();
+        vs2[1].ewma_latency_us = 50_000.0;
+        vs2[2].ewma_latency_us = 4_000.0;
+        assert_eq!(
+            PolicyRouter.route(&VariantSelector::MinAccuracy(87.0), &vs2),
+            Ok(2)
+        );
+        // Nothing reaches 95%.
+        assert!(matches!(
+            PolicyRouter.route(&VariantSelector::MinAccuracy(95.0), &vs),
+            Err(RouteError::Unsatisfiable(_))
+        ));
+    }
+
+    #[test]
+    fn max_latency_prefers_accuracy_within_budget() {
+        let mut vs = vec![status("w2", 2, 87.48, 245.0), status("w8", 8, 89.62, 47.0)];
+        vs[0].ewma_latency_us = 1_000.0;
+        vs[1].ewma_latency_us = 3_000.0;
+        // Both fit in 10ms: the more accurate w8 wins.
+        assert_eq!(
+            PolicyRouter.route(&VariantSelector::MaxLatency(Duration::from_millis(10)), &vs),
+            Ok(1)
+        );
+        // w8 degrades past the budget: traffic shifts to w2.
+        vs[1].ewma_latency_us = 50_000.0;
+        assert_eq!(
+            PolicyRouter.route(&VariantSelector::MaxLatency(Duration::from_millis(10)), &vs),
+            Ok(0)
+        );
+        // Nothing fits 0.1ms.
+        vs[0].ewma_latency_us = 1_000.0;
+        assert!(matches!(
+            PolicyRouter.route(
+                &VariantSelector::MaxLatency(Duration::from_micros(100)),
+                &vs
+            ),
+            Err(RouteError::Unsatisfiable(_))
+        ));
+    }
+
+    #[test]
+    fn unavailable_variants_are_skipped_by_policies() {
+        let mut vs = vec![status("w2", 2, 87.48, 245.0), status("w4", 4, 89.10, 165.0)];
+        vs[0].health = BackendHealth::Unavailable;
+        assert_eq!(
+            PolicyRouter.route(&VariantSelector::MinAccuracy(87.0), &vs),
+            Ok(1)
+        );
+        // Exact still reaches the unavailable variant (errors must surface,
+        // not be masked by a silent precision change).
+        assert_eq!(PolicyRouter.route(&VariantSelector::Exact(2), &vs), Ok(0));
+    }
+
+    #[test]
+    fn queue_pressure_inflates_latency_estimate() {
+        let mut v = status("w2", 2, 87.48, 245.0);
+        v.ewma_latency_us = 1_000.0;
+        let idle = v.latency_estimate_us();
+        v.inflight = 16;
+        assert!(v.latency_estimate_us() > 2.0 * idle);
+    }
+
+    /// Property: `Exact(wq)` NEVER falls back — it returns the index of a
+    /// variant with exactly that wq, or an error; health, latency, and
+    /// accuracy must not influence it.
+    #[test]
+    fn exact_never_falls_back() {
+        forall(2000, |rng| {
+            let n = rng.range(1, 6);
+            let variants: Vec<VariantStatus> = (0..n)
+                .map(|i| {
+                    let mut v = status(
+                        &format!("v{i}"),
+                        *rng.choose(&[1u32, 2, 4, 8]),
+                        rng.uniform(50.0, 99.0),
+                        rng.uniform(1.0, 300.0),
+                    );
+                    v.ewma_latency_us = rng.uniform(0.0, 1e5);
+                    v.inflight = rng.below(32);
+                    v.health = *rng.choose(&[
+                        BackendHealth::Healthy,
+                        BackendHealth::Degraded,
+                        BackendHealth::Unavailable,
+                    ]);
+                    v.default = rng.chance(0.3);
+                    v
+                })
+                .collect();
+            let want_wq = *rng.choose(&[1u32, 2, 4, 8, 16]);
+            match PolicyRouter.route(&VariantSelector::Exact(want_wq), &variants) {
+                Ok(i) => check_eq(variants[i].wq, Some(want_wq), "Exact must match wq")?,
+                Err(RouteError::NoSuchVariant(_)) => {
+                    if variants.iter().any(|v| v.wq == Some(want_wq)) {
+                        return Err(format!(
+                            "router reported NoSuchVariant but wq={want_wq} exists"
+                        ));
+                    }
+                }
+                Err(e) => return Err(format!("unexpected error kind: {e}")),
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,158 @@
+//! Model variants: the quantization spec a served backend was exported at
+//! (uniform `wq` or channel-wise groups) and its routing profile — the
+//! point it occupies on the paper's accuracy–throughput curve, with the
+//! throughput side pulled from the cached holistic DSE.
+
+use crate::cnn::{apply_channelwise, ChannelGroup, Cnn};
+use crate::config::RunConfig;
+use crate::dse;
+
+/// Which quantization a variant serves.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VariantSpec {
+    /// Registry name, unique per server (e.g. `w4`).
+    pub name: String,
+    /// Uniform inner-layer weight word-length, if uniform.
+    pub wq: Option<u32>,
+    /// Channel-wise word-length groups (empty for uniform variants).
+    pub channelwise: Vec<ChannelGroup>,
+}
+
+impl VariantSpec {
+    /// Uniform word-length variant, named `w<wq>`.
+    pub fn uniform(wq: u32) -> VariantSpec {
+        VariantSpec {
+            name: format!("w{wq}"),
+            wq: Some(wq),
+            channelwise: Vec::new(),
+        }
+    }
+
+    /// Channel-wise mixed-precision variant.
+    pub fn channelwise(name: impl Into<String>, groups: Vec<ChannelGroup>) -> VariantSpec {
+        VariantSpec {
+            name: name.into(),
+            wq: None,
+            channelwise: groups,
+        }
+    }
+
+    /// Rename (builder-style).
+    pub fn named(mut self, name: impl Into<String>) -> VariantSpec {
+        self.name = name.into();
+        self
+    }
+
+    /// Quantize `base` according to this spec (the CNN the DSE and the
+    /// virtual-clock simulation run on).
+    pub fn apply(&self, base: &Cnn) -> Cnn {
+        if self.channelwise.is_empty() {
+            base.clone().with_uniform_wq(self.wq.unwrap_or(8))
+        } else {
+            apply_channelwise(base, &self.channelwise)
+        }
+    }
+
+    /// Estimated Top-5 accuracy in percent from the paper's tables for
+    /// `family` (e.g. `"ResNet-18"`); channel-wise specs interpolate by
+    /// channel fraction. `None` when the paper has no number for a group.
+    pub fn estimated_top5(&self, family: &str) -> Option<f64> {
+        if self.channelwise.is_empty() {
+            return paper_top5(family, self.wq?);
+        }
+        let mut acc = 0.0;
+        for g in &self.channelwise {
+            acc += g.fraction * paper_top5(family, g.wq)?;
+        }
+        Some(acc)
+    }
+}
+
+/// Paper Top-5 lookup (Tables III + IV — the single source of truth lives
+/// in [`crate::report::paper`]).
+pub fn paper_top5(family: &str, wq: u32) -> Option<f64> {
+    crate::report::paper::top5_accuracy(family, wq)
+}
+
+/// A variant's routing profile: where it sits on the accuracy–throughput
+/// trade-off curve.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct VariantProfile {
+    /// Estimated Top-5 accuracy in percent (paper lineage), if known.
+    pub top5_accuracy: Option<f64>,
+    /// Frames/s of the DSE-chosen simulated accelerator design; also used
+    /// as the variant's virtual-clock rate when the batcher config doesn't
+    /// override it.
+    pub fpga_fps: f64,
+    /// Energy per frame of that design, mJ.
+    pub fpga_mj_per_frame: f64,
+}
+
+impl VariantProfile {
+    /// Derive the profile by running (or re-using, via the process-global
+    /// [`dse::DseCache`]) the holistic DSE for this spec's quantization of
+    /// `base`, and looking the accuracy up in the paper's `family` tables.
+    pub fn from_dse(spec: &VariantSpec, base: &Cnn, cfg: &RunConfig, family: &str)
+        -> VariantProfile {
+        let cnn = spec.apply(base);
+        let k = spec.wq.unwrap_or(2).clamp(1, 4);
+        let out = dse::explore_k_cached(&cnn, cfg, k, dse::DseCache::global());
+        VariantProfile {
+            top5_accuracy: spec.estimated_top5(family),
+            fpga_fps: out.sim.fps,
+            fpga_mj_per_frame: out.sim.e_total_mj(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::resnet;
+
+    #[test]
+    fn uniform_spec_naming_and_accuracy() {
+        let s = VariantSpec::uniform(2);
+        assert_eq!(s.name, "w2");
+        assert_eq!(s.wq, Some(2));
+        assert_eq!(s.estimated_top5("ResNet-18"), Some(87.48));
+        assert_eq!(VariantSpec::uniform(8).estimated_top5("ResNet-18"), Some(89.62));
+        assert_eq!(VariantSpec::uniform(3).estimated_top5("ResNet-18"), None);
+    }
+
+    #[test]
+    fn channelwise_accuracy_interpolates() {
+        let s = VariantSpec::channelwise(
+            "mix24",
+            vec![
+                ChannelGroup { wq: 2, fraction: 0.5 },
+                ChannelGroup { wq: 4, fraction: 0.5 },
+            ],
+        );
+        let acc = s.estimated_top5("ResNet-18").unwrap();
+        assert!((acc - (87.48 + 89.10) / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn apply_quantizes_base() {
+        let base = resnet::resnet_small(1, 10);
+        let s = VariantSpec::uniform(2);
+        let cnn = s.apply(&base);
+        // Quantization changes the structural fingerprint.
+        assert_ne!(cnn.fingerprint(), base.clone().with_uniform_wq(8).fingerprint());
+    }
+
+    #[test]
+    fn profile_from_dse_pulls_cached_outcome() {
+        let base = resnet::resnet_small(1, 10);
+        let cfg = RunConfig::default();
+        let spec = VariantSpec::uniform(2);
+        let p1 = VariantProfile::from_dse(&spec, &base, &cfg, "ResNet-18");
+        assert!(p1.fpga_fps > 0.0);
+        assert!(p1.fpga_mj_per_frame > 0.0);
+        assert_eq!(p1.top5_accuracy, Some(87.48));
+        // Second derivation must be a cache hit (identical outcome).
+        let p2 = VariantProfile::from_dse(&spec, &base, &cfg, "ResNet-18");
+        assert_eq!(p1.fpga_fps.to_bits(), p2.fpga_fps.to_bits());
+    }
+}

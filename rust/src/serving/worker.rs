@@ -1,0 +1,708 @@
+//! Per-variant serving pipeline: bounded admission queue with backpressure,
+//! a dynamic batcher, and a worker thread that owns one [`InferenceBackend`]
+//! (the PJRT engine in production, mocks in tests).
+//!
+//! No tokio offline — plain threads + `std::sync::mpsc`, which is entirely
+//! adequate for a single-device inference queue: one batcher thread owns
+//! the backend, clients block on per-request channels. The multi-variant
+//! [`Server`](crate::serving::Server) runs one of these pipelines per
+//! registered variant and routes requests between them.
+
+use super::backend::{BackendHealth, InferenceBackend};
+use super::metrics::Metrics;
+use super::router::RouteError;
+use crate::util::error::Result;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Batching policy for one variant's pipeline.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Assemble at most this many requests per batch. May exceed the
+    /// largest backend batch size: the worker splits the assembled batch
+    /// into supported executions (see [`plan_executions`]).
+    pub max_batch: usize,
+    /// Wait at most this long for the batch to fill.
+    pub max_wait: Duration,
+    /// Admission queue depth; beyond this, `try_submit` sheds load.
+    pub queue_capacity: usize,
+    /// Frames/s of the simulated FPGA design (drives the virtual clock);
+    /// 0 disables the virtual clock.
+    pub fpga_fps_sim: f64,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            queue_capacity: 128,
+            fpga_fps_sim: 0.0,
+        }
+    }
+}
+
+/// One queued inference request.
+struct Request {
+    image: Vec<f32>,
+    enqueued: Instant,
+    reply: SyncSender<Result<Response, String>>,
+}
+
+/// One inference response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    /// Logits for this request's image.
+    pub logits: Vec<f32>,
+    /// Predicted class (argmax).
+    pub class: usize,
+    /// End-to-end latency.
+    pub latency: Duration,
+    /// Size of the executed batch this request rode in (before padding).
+    pub batch_size: usize,
+    /// Name of the variant that served the request.
+    pub variant: String,
+}
+
+/// Submission error.
+#[derive(Debug)]
+pub enum SubmitError {
+    Backpressure,
+    Closed,
+    BadInput { expected: usize, got: usize },
+    /// The request's [`VariantSelector`](crate::serving::VariantSelector)
+    /// could not be resolved to a variant.
+    Route(RouteError),
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::Backpressure => write!(f, "queue full (backpressure)"),
+            SubmitError::Closed => write!(f, "server is shut down"),
+            SubmitError::BadInput { expected, got } => {
+                write!(f, "bad input: expected {expected} elements, got {got}")
+            }
+            SubmitError::Route(e) => write!(f, "routing failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Live per-variant state shared between the worker thread, the clients,
+/// and the router: an EWMA latency estimate, a health snapshot, and the
+/// number of in-flight requests. All lock-free so routing never contends
+/// with the serving hot path.
+#[derive(Debug)]
+pub(crate) struct VariantShared {
+    ewma_us_bits: AtomicU64,
+    health: AtomicU8,
+    inflight: AtomicU64,
+}
+
+impl VariantShared {
+    pub(crate) fn new() -> VariantShared {
+        VariantShared {
+            ewma_us_bits: AtomicU64::new(0f64.to_bits()),
+            health: AtomicU8::new(BackendHealth::Healthy.as_u8()),
+            inflight: AtomicU64::new(0),
+        }
+    }
+
+    pub(crate) fn ewma_us(&self) -> f64 {
+        f64::from_bits(self.ewma_us_bits.load(Ordering::Relaxed))
+    }
+
+    pub(crate) fn set_ewma_us(&self, us: f64) {
+        self.ewma_us_bits.store(us.to_bits(), Ordering::Relaxed);
+    }
+
+    pub(crate) fn health(&self) -> BackendHealth {
+        BackendHealth::from_u8(self.health.load(Ordering::Relaxed))
+    }
+
+    pub(crate) fn set_health(&self, h: BackendHealth) {
+        self.health.store(h.as_u8(), Ordering::Relaxed);
+    }
+
+    pub(crate) fn inflight(&self) -> u64 {
+        self.inflight.load(Ordering::Relaxed)
+    }
+}
+
+/// Handle for submitting requests to one variant's pipeline; cheap to clone
+/// across client threads.
+#[derive(Clone)]
+pub struct Client {
+    tx: SyncSender<Request>,
+    image_len: usize,
+    shared: Arc<VariantShared>,
+}
+
+impl Client {
+    fn make_request(&self, image: Vec<f32>) -> (Request, PendingResponse) {
+        let (reply_tx, reply_rx) = sync_channel(1);
+        (
+            Request {
+                image,
+                enqueued: Instant::now(),
+                reply: reply_tx,
+            },
+            PendingResponse { rx: reply_rx },
+        )
+    }
+
+    fn check_len(&self, image: &[f32]) -> Result<(), SubmitError> {
+        if image.len() != self.image_len {
+            return Err(SubmitError::BadInput {
+                expected: self.image_len,
+                got: image.len(),
+            });
+        }
+        Ok(())
+    }
+
+    /// Non-blocking submit; sheds load when the queue is full.
+    pub fn try_submit(&self, image: Vec<f32>) -> Result<PendingResponse, SubmitError> {
+        self.check_len(&image)?;
+        let (req, pending) = self.make_request(image);
+        // Count in-flight BEFORE the send: a zero-latency worker can serve
+        // and decrement in the window after `try_send` returns, and a late
+        // increment would wrap the counter below zero.
+        self.shared.inflight.fetch_add(1, Ordering::Relaxed);
+        match self.tx.try_send(req) {
+            Ok(()) => Ok(pending),
+            Err(TrySendError::Full(_)) => {
+                self.shared.inflight.fetch_sub(1, Ordering::Relaxed);
+                Err(SubmitError::Backpressure)
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                self.shared.inflight.fetch_sub(1, Ordering::Relaxed);
+                Err(SubmitError::Closed)
+            }
+        }
+    }
+
+    /// Blocking submit (applies backpressure to the caller).
+    pub fn submit(&self, image: Vec<f32>) -> Result<PendingResponse, SubmitError> {
+        self.check_len(&image)?;
+        let (req, pending) = self.make_request(image);
+        self.shared.inflight.fetch_add(1, Ordering::Relaxed);
+        if self.tx.send(req).is_err() {
+            self.shared.inflight.fetch_sub(1, Ordering::Relaxed);
+            return Err(SubmitError::Closed);
+        }
+        Ok(pending)
+    }
+
+    /// Convenience: submit and wait.
+    pub fn classify(&self, image: Vec<f32>) -> Result<Response, String> {
+        self.submit(image).map_err(|e| e.to_string())?.wait()
+    }
+}
+
+/// Future-like handle for an in-flight request.
+#[derive(Debug)]
+pub struct PendingResponse {
+    rx: Receiver<Result<Response, String>>,
+}
+
+impl PendingResponse {
+    pub fn wait(self) -> Result<Response, String> {
+        self.rx
+            .recv()
+            .map_err(|_| "server dropped request".to_string())?
+    }
+
+    pub fn wait_timeout(self, d: Duration) -> Result<Response, String> {
+        match self.rx.recv_timeout(d) {
+            Ok(r) => r,
+            Err(_) => Err("timeout".to_string()),
+        }
+    }
+}
+
+/// One variant's running pipeline: the client side of the queue plus the
+/// worker thread that owns the backend.
+pub(crate) struct VariantWorker {
+    pub(crate) client: Client,
+    pub(crate) metrics: Arc<Mutex<Metrics>>,
+    pub(crate) shared: Arc<VariantShared>,
+    handle: Option<JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+}
+
+impl VariantWorker {
+    pub(crate) fn stop_and_join(&mut self) {
+        if let Some(h) = self.handle.take() {
+            self.stop.store(true, Ordering::SeqCst);
+            // Also drop our own sender so an idle worker wakes immediately
+            // when no other Client clones exist.
+            let dummy = Client {
+                tx: sync_channel(1).0,
+                image_len: 0,
+                shared: Arc::new(VariantShared::new()),
+            };
+            let old = std::mem::replace(&mut self.client, dummy);
+            drop(old);
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for VariantWorker {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// Spawn one variant's worker thread. `factory` runs *inside* the worker
+/// thread and builds the backend there — required because the PJRT client
+/// types are not `Send`. The backend is [`warmup`]-ed before the variant is
+/// announced ready; factory or warm-up failure fails the spawn.
+///
+/// [`warmup`]: InferenceBackend::warmup
+pub(crate) fn spawn_variant<F>(name: &str, factory: F, cfg: BatcherConfig) -> Result<VariantWorker>
+where
+    F: FnOnce() -> Result<Box<dyn InferenceBackend>> + Send + 'static,
+{
+    assert!(cfg.max_batch >= 1);
+    let (tx, rx) = sync_channel::<Request>(cfg.queue_capacity);
+    let metrics = Arc::new(Mutex::new(Metrics::default()));
+    let shared = Arc::new(VariantShared::new());
+    let m2 = metrics.clone();
+    let s2 = shared.clone();
+    // The worker reports readiness (and the image length) or the factory's
+    // error back over a rendezvous channel.
+    let (ready_tx, ready_rx) = sync_channel::<Result<usize, String>>(1);
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let label = name.to_string();
+    let worker = std::thread::Builder::new()
+        .name(format!("mpcnn-batcher-{name}"))
+        .spawn(move || {
+            let backend = match factory().and_then(|b| b.warmup().map(|()| b)) {
+                Ok(b) => {
+                    let _ = ready_tx.send(Ok(b.image_len()));
+                    b
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(format!("{e:#}")));
+                    return;
+                }
+            };
+            batcher_loop(backend, rx, cfg, label, m2, s2, stop2)
+        })
+        .expect("spawn batcher");
+    let image_len = ready_rx
+        .recv()
+        .map_err(|_| crate::anyhow!("batcher thread for '{name}' died during startup"))?
+        .map_err(|e| crate::anyhow!("backend factory for '{name}' failed: {e}"))?;
+    Ok(VariantWorker {
+        client: Client {
+            tx,
+            image_len,
+            shared: shared.clone(),
+        },
+        metrics,
+        shared,
+        handle: Some(worker),
+        stop,
+    })
+}
+
+/// Split an assembled batch of `n` requests into backend executions.
+/// Returns `(take, exec_size)` pairs: execute `exec_size` (a supported
+/// size), of which `take` are real requests and the rest padding. `n` may
+/// exceed the largest supported size — the previous implementation padded
+/// *down* in that case, truncating trailing images and fanning logits out
+/// past the backend's output; now the batch is split instead.
+pub(crate) fn plan_executions(n: usize, supported_sorted: &[usize]) -> Vec<(usize, usize)> {
+    assert!(!supported_sorted.is_empty());
+    let largest = *supported_sorted.last().unwrap();
+    let mut plan = Vec::new();
+    let mut remaining = n;
+    while remaining > 0 {
+        let exec = supported_sorted
+            .iter()
+            .copied()
+            .find(|&s| s >= remaining)
+            .unwrap_or(largest);
+        let take = remaining.min(exec);
+        plan.push((take, exec));
+        remaining -= take;
+    }
+    plan
+}
+
+/// Idle decay applied to the EWMA latency estimate once per 25 ms idle
+/// tick (halves in ~0.9 s). Without it a variant that was degraded, then
+/// starved of traffic by the router, would keep its stale high estimate
+/// forever and never be probed again after recovering.
+const IDLE_EWMA_DECAY: f64 = 0.98;
+
+/// After this many consecutive backend errors the worker reports the
+/// variant [`BackendHealth::Unavailable`] (policy routing then avoids it)
+/// even if the backend itself still claims to be healthy.
+const ERRORS_TO_UNAVAILABLE: u32 = 3;
+
+fn worse(a: BackendHealth, b: BackendHealth) -> BackendHealth {
+    if a.as_u8() >= b.as_u8() {
+        a
+    } else {
+        b
+    }
+}
+
+/// The batcher loop: collect up to `max_batch` requests within `max_wait`
+/// of the first, split into supported backend executions (padding the last
+/// one), execute, fan out.
+fn batcher_loop(
+    backend: Box<dyn InferenceBackend>,
+    rx: Receiver<Request>,
+    cfg: BatcherConfig,
+    label: String,
+    metrics: Arc<Mutex<Metrics>>,
+    shared: Arc<VariantShared>,
+    stop: Arc<AtomicBool>,
+) {
+    let supported = {
+        let mut s: Vec<usize> = backend
+            .batch_sizes()
+            .into_iter()
+            .filter(|&s| backend.supports_batch(s))
+            .collect();
+        s.sort_unstable();
+        s.dedup();
+        if s.is_empty() {
+            s.push(1);
+        }
+        s
+    };
+    let image_len = backend.image_len();
+    let classes = backend.classes();
+    let mut consecutive_errors = 0u32;
+    loop {
+        // Block for the first request of the batch, polling the stop flag
+        // so shutdown works even while stray Client clones are alive.
+        let first = loop {
+            if stop.load(Ordering::SeqCst) {
+                // Drain whatever is already queued, then exit.
+                match rx.try_recv() {
+                    Ok(r) => break r,
+                    Err(_) => return,
+                }
+            }
+            match rx.recv_timeout(Duration::from_millis(25)) {
+                Ok(r) => break r,
+                Err(RecvTimeoutError::Timeout) => {
+                    // Idle tick: decay the latency estimate so excluded
+                    // variants eventually re-qualify and get probed.
+                    let mut m = metrics.lock().unwrap();
+                    m.ewma_latency_us *= IDLE_EWMA_DECAY;
+                    shared.set_ewma_us(m.ewma_latency_us);
+                    continue;
+                }
+                Err(RecvTimeoutError::Disconnected) => return, // all clients dropped
+            }
+        };
+        let deadline = Instant::now() + cfg.max_wait;
+        let mut batch = vec![first];
+        while batch.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        let n = batch.len();
+        {
+            let mut m = metrics.lock().unwrap();
+            m.requests += n as u64;
+            for r in &batch {
+                m.queue_wait
+                    .record_us(r.enqueued.elapsed().as_micros() as f64);
+            }
+        }
+
+        // Execute in supported-size chunks; each chunk pads up to its
+        // execution size, never truncates. Capability introspection first:
+        // a backend that supports the assembled size exactly (beyond its
+        // compiled list) runs it unpadded and unsplit.
+        let plan = if backend.supports_batch(n) {
+            vec![(n, n)]
+        } else {
+            plan_executions(n, &supported)
+        };
+        let mut queue: std::collections::VecDeque<Request> = batch.into();
+        for (take, exec_size) in plan {
+            let chunk: Vec<Request> = queue.drain(..take).collect();
+            let mut flat = Vec::with_capacity(exec_size * image_len);
+            for r in &chunk {
+                flat.extend_from_slice(&r.image);
+            }
+            flat.resize(exec_size * image_len, 0.0); // zero padding
+
+            {
+                let mut m = metrics.lock().unwrap();
+                m.batches += 1;
+                m.batched_items += take as u64;
+                m.padded_items += (exec_size - take) as u64;
+            }
+
+            let result = backend.infer_batch(&flat, exec_size);
+            consecutive_errors = if result.is_ok() {
+                0
+            } else {
+                consecutive_errors.saturating_add(1)
+            };
+            let observed = if consecutive_errors >= ERRORS_TO_UNAVAILABLE {
+                BackendHealth::Unavailable
+            } else if consecutive_errors > 0 {
+                BackendHealth::Degraded
+            } else {
+                BackendHealth::Healthy
+            };
+            // The worse of the backend's self-report and what the worker
+            // observes: a backend that errors every call must stop
+            // attracting policy-routed traffic even if it claims health.
+            shared.set_health(worse(backend.health(), observed));
+            let mut m = metrics.lock().unwrap();
+            if cfg.fpga_fps_sim > 0.0 {
+                m.fpga_virtual_us += take as f64 / cfg.fpga_fps_sim * 1e6;
+            }
+            match result {
+                Ok(logits) => {
+                    for (i, r) in chunk.into_iter().enumerate() {
+                        let row = logits[i * classes..(i + 1) * classes].to_vec();
+                        let class = crate::runtime::argmax_rows(&row, classes)[0];
+                        let latency = r.enqueued.elapsed();
+                        m.observe_latency_us(latency.as_micros() as f64);
+                        m.responses += 1;
+                        shared.set_ewma_us(m.ewma_latency_us);
+                        shared.inflight.fetch_sub(1, Ordering::Relaxed);
+                        let _ = r.reply.send(Ok(Response {
+                            logits: row,
+                            class,
+                            latency,
+                            batch_size: take,
+                            variant: label.clone(),
+                        }));
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("backend error: {e}");
+                    for r in chunk {
+                        m.errors += 1;
+                        shared.inflight.fetch_sub(1, Ordering::Relaxed);
+                        let _ = r.reply.send(Err(msg.clone()));
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::backend::MockBackend;
+
+    fn mock_worker(
+        batch_sizes: Vec<usize>,
+        latency_us: u64,
+        cfg: BatcherConfig,
+    ) -> VariantWorker {
+        spawn_variant(
+            "test",
+            move || {
+                Ok(Box::new(MockBackend::new(12, 4, batch_sizes, latency_us))
+                    as Box<dyn InferenceBackend>)
+            },
+            cfg,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn plan_pads_within_supported_sizes() {
+        // 6 requests, supported up to 8: one padded execution (the old
+        // behaviour, preserved).
+        assert_eq!(plan_executions(6, &[1, 4, 8]), vec![(6, 8)]);
+        assert_eq!(plan_executions(1, &[1, 4, 8]), vec![(1, 1)]);
+        assert_eq!(plan_executions(8, &[1, 4, 8]), vec![(8, 8)]);
+    }
+
+    #[test]
+    fn plan_splits_oversized_batches() {
+        // 11 requests but the largest supported execution is 4: split into
+        // 4+4+3, padding only the last chunk.
+        assert_eq!(plan_executions(11, &[1, 4]), vec![(4, 4), (4, 4), (3, 4)]);
+        // 9 with [1, 4, 8]: one full 8 plus a batch-1 execution.
+        assert_eq!(plan_executions(9, &[1, 4, 8]), vec![(8, 8), (1, 1)]);
+        // Degenerate: only batch-1 compiled.
+        assert_eq!(plan_executions(3, &[1]), vec![(1, 1), (1, 1), (1, 1)]);
+    }
+
+    #[test]
+    fn plan_covers_all_requests() {
+        crate::util::prop::forall(500, |rng| {
+            let mut supported: Vec<usize> =
+                (0..rng.range(1, 4)).map(|_| rng.range(1, 16)).collect();
+            supported.sort_unstable();
+            supported.dedup();
+            let n = rng.range(1, 64);
+            let plan = plan_executions(n, &supported);
+            let total: usize = plan.iter().map(|(take, _)| take).sum();
+            crate::util::prop::check_eq(total, n, "plan must cover every request")?;
+            for &(take, exec) in &plan {
+                if take > exec || !supported.contains(&exec) {
+                    return Err(format!(
+                        "bad chunk ({take}, {exec}) for supported {supported:?}"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn oversized_batch_is_split_not_truncated() {
+        // Regression: 11 requests assemble into one batch (max_batch 16,
+        // generous max_wait) but the backend only supports up to batch 4.
+        // The old code padded *down* to 4 — truncating 7 images and
+        // indexing past the logits — so correctness here proves the split.
+        let cfg = BatcherConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(500),
+            queue_capacity: 32,
+            fpga_fps_sim: 0.0,
+        };
+        let w = mock_worker(vec![1, 4], 1_000, cfg);
+        let client = w.client.clone();
+        let reference = MockBackend::new(12, 4, vec![1], 0);
+        let mut pending = Vec::new();
+        for i in 0..11 {
+            let img = vec![i as f32; 12];
+            let want = reference.expected_class(&img);
+            pending.push((client.submit(img).unwrap(), want));
+        }
+        for (p, want) in pending {
+            let r = p.wait().unwrap();
+            assert_eq!(r.class, want, "split batch must preserve every image");
+            assert!(r.batch_size <= 4, "chunks can't exceed the backend max");
+        }
+        let m = w.metrics.lock().unwrap().clone();
+        assert_eq!(m.responses, 11);
+        assert_eq!(m.errors, 0);
+        assert_eq!(m.requests, 11);
+        // 11 = 4 + 4 + 3(+1 pad) once assembled into a single wave; the
+        // first request may also ride alone if the worker grabs it before
+        // the rest arrive, so only bound the shape loosely.
+        assert!(m.batches >= 3, "must split: {} batches", m.batches);
+        assert_eq!(m.batched_items, 11);
+    }
+
+    #[test]
+    fn inflight_tracks_queue_depth() {
+        let cfg = BatcherConfig {
+            max_batch: 1,
+            max_wait: Duration::from_millis(0),
+            queue_capacity: 64,
+            fpga_fps_sim: 0.0,
+        };
+        let w = mock_worker(vec![1], 20_000, cfg);
+        let client = w.client.clone();
+        let pending: Vec<_> = (0..5).map(|_| client.submit(vec![0.0; 12]).unwrap()).collect();
+        assert!(w.shared.inflight() >= 1, "submissions must register in-flight");
+        for p in pending {
+            p.wait().unwrap();
+        }
+        // Workers decrement before replying, so after the last reply the
+        // counter is drained.
+        assert_eq!(w.shared.inflight(), 0);
+    }
+
+    #[test]
+    fn ewma_visible_to_shared_state() {
+        let w = mock_worker(vec![1], 2_000, BatcherConfig::default());
+        let client = w.client.clone();
+        for _ in 0..5 {
+            client.classify(vec![0.0; 12]).unwrap();
+        }
+        assert!(
+            w.shared.ewma_us() >= 1_000.0,
+            "ewma must reflect the 2ms mock latency: {}",
+            w.shared.ewma_us()
+        );
+    }
+
+    #[test]
+    fn ewma_decays_while_idle() {
+        let w = mock_worker(vec![1], 5_000, BatcherConfig::default());
+        let client = w.client.clone();
+        for _ in 0..3 {
+            client.classify(vec![0.0; 12]).unwrap();
+        }
+        let busy = w.shared.ewma_us();
+        assert!(busy >= 4_000.0, "{busy}");
+        // ~16 idle ticks at 2% decay each: the estimate must shrink, so a
+        // variant the router starved can re-qualify and get probed.
+        std::thread::sleep(Duration::from_millis(400));
+        let idle = w.shared.ewma_us();
+        assert!(
+            idle < busy * 0.9,
+            "idle decay must shrink the estimate: {busy} -> {idle}"
+        );
+    }
+
+    /// Errors every call but self-reports Healthy — the worker's own error
+    /// observation must mark it Unavailable anyway.
+    struct LyingBackend;
+
+    impl InferenceBackend for LyingBackend {
+        fn batch_sizes(&self) -> Vec<usize> {
+            vec![1]
+        }
+        fn image_len(&self) -> usize {
+            12
+        }
+        fn classes(&self) -> usize {
+            4
+        }
+        fn infer_batch(&self, _images: &[f32], _batch: usize) -> Result<Vec<f32>> {
+            Err(crate::anyhow!("boom"))
+        }
+    }
+
+    #[test]
+    fn consecutive_errors_mark_variant_unavailable() {
+        let w = spawn_variant(
+            "lying",
+            || Ok(Box::new(LyingBackend) as Box<dyn InferenceBackend>),
+            BatcherConfig {
+                max_batch: 1,
+                max_wait: Duration::from_millis(0),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let client = w.client.clone();
+        for _ in 0..4 {
+            assert!(client.classify(vec![0.0; 12]).is_err());
+        }
+        assert_eq!(w.shared.health(), BackendHealth::Unavailable);
+        let m = w.metrics.lock().unwrap().clone();
+        assert!(m.errors >= 4);
+    }
+}

@@ -1,5 +1,8 @@
-//! Integration tests for the serving coordinator: mock-backed pipeline
-//! behaviour (always runs) and PJRT-backed serving (needs artifacts).
+//! Integration tests for the deprecated single-variant `Coordinator` shim:
+//! old callers must keep compiling and passing through the new
+//! multi-variant serving gateway underneath. Mock-backed pipeline
+//! behaviour always runs; PJRT-backed serving needs artifacts.
+#![allow(deprecated)]
 
 use mpcnn::coordinator::{
     BatcherConfig, Coordinator, EngineBackend, InferenceBackend, MockBackend,

@@ -1,0 +1,266 @@
+//! Integration tests for the multi-variant serving gateway: one `Server`
+//! process hosting several precision variants, policy routing against live
+//! latency signals, and the oversized-batch split through the full stack.
+
+use mpcnn::serving::{
+    BatcherConfig, InferRequest, InferenceBackend, MockBackend, Server, SubmitError,
+    VariantProfile, VariantSelector, VariantSpec,
+};
+use mpcnn::util::error::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+const IMG: usize = 48;
+const CLASSES: usize = 10;
+
+fn profile(acc: f64, fps: f64) -> VariantProfile {
+    VariantProfile {
+        top5_accuracy: Some(acc),
+        fpga_fps: fps,
+        fpga_mj_per_frame: 1.0,
+    }
+}
+
+fn cfg(max_batch: usize) -> BatcherConfig {
+    BatcherConfig {
+        max_batch,
+        max_wait: Duration::from_millis(1),
+        queue_capacity: 128,
+        fpga_fps_sim: 0.0,
+    }
+}
+
+fn mock_factory(
+    latency: Arc<AtomicU64>,
+) -> impl FnOnce() -> Result<Box<dyn InferenceBackend>> + Send + 'static {
+    move || {
+        Ok(Box::new(
+            MockBackend::new(IMG, CLASSES, vec![1, 4, 8], 0).with_latency_source(latency),
+        ) as Box<dyn InferenceBackend>)
+    }
+}
+
+/// Paper trade-off curve as a two-variant family: w2 fast/less accurate,
+/// w8 slow/more accurate. Returns the server plus both live latency knobs.
+fn two_variant_server() -> (Server, Arc<AtomicU64>, Arc<AtomicU64>) {
+    let fast = Arc::new(AtomicU64::new(300));
+    let slow = Arc::new(AtomicU64::new(800));
+    let server = Server::builder()
+        .variant_with_profile(
+            VariantSpec::uniform(2),
+            profile(87.48, 245.0),
+            cfg(1),
+            mock_factory(fast.clone()),
+        )
+        .variant_with_profile(
+            VariantSpec::uniform(8),
+            profile(89.62, 47.0),
+            cfg(1),
+            mock_factory(slow.clone()),
+        )
+        .build()
+        .unwrap();
+    (server, fast, slow)
+}
+
+fn responses_of(server: &Server, name: &str) -> u64 {
+    server.metrics(name).map(|m| m.responses).unwrap_or(0)
+}
+
+#[test]
+fn single_process_hosts_three_variants_with_per_variant_metrics() {
+    let server = Server::builder()
+        .variant_with_profile(
+            VariantSpec::uniform(2),
+            profile(87.48, 245.0),
+            cfg(8),
+            mock_factory(Arc::new(AtomicU64::new(100))),
+        )
+        .variant_with_profile(
+            VariantSpec::uniform(4),
+            profile(89.10, 165.0),
+            cfg(8),
+            mock_factory(Arc::new(AtomicU64::new(150))),
+        )
+        .variant_with_profile(
+            VariantSpec::uniform(8),
+            profile(89.62, 47.0),
+            cfg(8),
+            mock_factory(Arc::new(AtomicU64::new(200))),
+        )
+        .build()
+        .unwrap();
+    assert_eq!(server.n_variants(), 3);
+
+    // A mixed stream: exact per-wq slices plus policy-routed requests.
+    let reference = MockBackend::new(IMG, CLASSES, vec![1], 0);
+    let mut selectors = Vec::new();
+    for &wq in &[2u32, 4, 8] {
+        selectors.push(VariantSelector::Exact(wq));
+    }
+    selectors.push(VariantSelector::Default);
+    selectors.push(VariantSelector::MinAccuracy(88.0));
+    let total = 100;
+    let mut pending = Vec::new();
+    for i in 0..total {
+        let img = vec![(i % CLASSES) as f32; IMG];
+        let want = reference.expected_class(&img);
+        let sel = selectors[i % selectors.len()].clone();
+        pending.push((server.submit(InferRequest::new(img).with_variant(sel)).unwrap(), want));
+    }
+    for (p, want) in pending {
+        let r = p.wait().unwrap();
+        assert_eq!(r.class, want, "classification must survive routing+batching");
+    }
+
+    let all = server.metrics_all();
+    let grand: u64 = all.iter().map(|(_, m)| m.responses).sum();
+    assert_eq!(grand, total as u64);
+    // Every exact slice reached its own variant: each saw at least its 20.
+    for (name, m) in &all {
+        assert!(
+            m.responses >= 20,
+            "variant {name} must serve its exact slice: {} responses",
+            m.responses
+        );
+        assert_eq!(m.errors, 0, "variant {name}");
+    }
+}
+
+#[test]
+fn max_latency_routing_shifts_traffic_when_latency_degrades() {
+    let (server, _fast, slow) = two_variant_server();
+    // 30ms sits above both variants' pre-traffic priors (w8's DSE prior is
+    // 1e6/47 ≈ 21.3ms), so both start qualified.
+    let budget = VariantSelector::MaxLatency(Duration::from_millis(30));
+
+    // Phase 1: both variants fit the budget; the more accurate w8 takes
+    // the traffic.
+    for _ in 0..20 {
+        server
+            .infer(InferRequest::new(vec![1.0; IMG]).with_variant(budget.clone()))
+            .unwrap();
+    }
+    let w8_phase1 = responses_of(&server, "w8");
+    assert!(
+        w8_phase1 >= 18,
+        "with both under budget the accurate variant must win: w8={w8_phase1}"
+    );
+
+    // Phase 2: degrade w8 far past the budget. Its EWMA crosses the limit
+    // within a couple of observations and the router must shift to w2.
+    slow.store(60_000, Ordering::Relaxed);
+    for _ in 0..30 {
+        server
+            .infer(InferRequest::new(vec![1.0; IMG]).with_variant(budget.clone()))
+            .unwrap();
+    }
+    let w2_total = responses_of(&server, "w2");
+    let w8_total = responses_of(&server, "w8");
+    let w8_phase2 = w8_total - w8_phase1;
+    assert!(
+        w8_phase2 <= 5,
+        "after degradation at most a few probes may still hit w8: {w8_phase2}"
+    );
+    assert!(
+        w2_total >= 25,
+        "traffic must shift to the fast variant: w2={w2_total}"
+    );
+}
+
+#[test]
+fn min_accuracy_follows_live_latency() {
+    // Both variants qualify at 87%; initially the fps prior favours w2.
+    let (server, fast, _slow) = two_variant_server();
+    let sel = VariantSelector::MinAccuracy(87.0);
+    for _ in 0..10 {
+        server
+            .infer(InferRequest::new(vec![1.0; IMG]).with_variant(sel.clone()))
+            .unwrap();
+    }
+    assert!(responses_of(&server, "w2") >= 9, "fps prior + low latency favour w2");
+
+    // w2 degrades hard; once its EWMA exceeds w8's estimate the router
+    // moves the qualifying traffic over.
+    fast.store(80_000, Ordering::Relaxed);
+    for _ in 0..25 {
+        server
+            .infer(InferRequest::new(vec![1.0; IMG]).with_variant(sel.clone()))
+            .unwrap();
+    }
+    assert!(
+        responses_of(&server, "w8") >= 15,
+        "min-accuracy traffic must shift off the degraded variant: w8={}",
+        responses_of(&server, "w8")
+    );
+}
+
+#[test]
+fn exact_selector_never_falls_back_under_load() {
+    // Server-level companion to the router property test: every response
+    // to an Exact request names exactly that variant, and an Exact request
+    // for an unhosted wq errors instead of being served elsewhere.
+    let (server, fast, _slow) = two_variant_server();
+    fast.store(10_000, Ordering::Relaxed); // degraded but hosted
+    let mut pending = Vec::new();
+    for i in 0..40 {
+        let wq = if i % 2 == 0 { 2 } else { 8 };
+        pending.push((
+            server
+                .submit(InferRequest::new(vec![0.0; IMG]).with_variant(VariantSelector::Exact(wq)))
+                .unwrap(),
+            wq,
+        ));
+    }
+    for (p, wq) in pending {
+        let r = p.wait().unwrap();
+        assert_eq!(r.variant, format!("w{wq}"), "Exact({wq}) must not fall back");
+    }
+    match server.submit(InferRequest::new(vec![0.0; IMG]).with_variant(VariantSelector::Exact(4))) {
+        Err(SubmitError::Route(_)) => {}
+        other => panic!("Exact(4) on a 2/8 server must fail to route, got {other:?}"),
+    }
+}
+
+#[test]
+fn oversized_batches_split_through_the_full_stack() {
+    // max_batch 12 with backend executions capped at 4: every assembled
+    // wave must split without truncation (the old coordinator bug).
+    let server = Server::builder()
+        .variant_with_profile(
+            VariantSpec::uniform(2),
+            profile(87.48, 245.0),
+            BatcherConfig {
+                max_batch: 12,
+                max_wait: Duration::from_millis(20),
+                queue_capacity: 128,
+                fpga_fps_sim: 0.0,
+            },
+            || {
+                Ok(Box::new(MockBackend::new(IMG, CLASSES, vec![1, 4], 2_000))
+                    as Box<dyn InferenceBackend>)
+            },
+        )
+        .build()
+        .unwrap();
+    let reference = MockBackend::new(IMG, CLASSES, vec![1], 0);
+    let mut pending = Vec::new();
+    for i in 0..60 {
+        let img = vec![(i % CLASSES) as f32; IMG];
+        let want = reference.expected_class(&img);
+        pending.push((
+            server.submit(InferRequest::new(img)).unwrap(),
+            want,
+        ));
+    }
+    for (p, want) in pending {
+        let r = p.wait().unwrap();
+        assert_eq!(r.class, want);
+        assert!(r.batch_size <= 4);
+    }
+    let m = server.metrics("w2").unwrap();
+    assert_eq!(m.responses, 60);
+    assert_eq!(m.errors, 0);
+    assert_eq!(m.batched_items, 60);
+}
