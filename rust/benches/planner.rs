@@ -1,0 +1,45 @@
+//! Bench: the precision planner's hot stages on ResNet-18 — sensitivity
+//! calibration, candidate enumeration (greedy walk + beam DP), and the full
+//! plan() pipeline at a small DSE-eval budget. `Bencher::finish` writes
+//! `BENCH_planner.json` at the repo root so the planner's cost is tracked
+//! across PRs like the hotpath and serving benches (EXPERIMENTS.md §Perf).
+
+use mpcnn::cnn::resnet;
+use mpcnn::config::RunConfig;
+use mpcnn::planner::{self, frontier, PlannerConfig, SensitivityModel};
+use mpcnn::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::new();
+    let base = resnet::resnet18();
+    let cfg = RunConfig::default();
+    let pcfg = PlannerConfig::default();
+
+    b.run("planner/sensitivity-build", || {
+        SensitivityModel::build(&base, "ResNet-18", pcfg.alpha, &pcfg.wq_choices).unwrap()
+    });
+
+    let model =
+        SensitivityModel::build(&base, "ResNet-18", pcfg.alpha, &pcfg.wq_choices).unwrap();
+    b.run("planner/enumerate-resnet18", || {
+        frontier::enumerate_assignments(&base, &model, &pcfg)
+    });
+
+    // Full pipeline at a smoke budget: the DSE evaluations dominate, which
+    // is exactly the cost worth tracking (it rides on the PR-1 fast path).
+    let small = PlannerConfig { beam_width: 16, max_evals: 4, ..PlannerConfig::default() };
+    b.run("planner/plan-resnet18-evals4", || {
+        planner::plan(&base, &cfg, &small).unwrap()
+    });
+
+    // Frontier quality snapshot (not timed): printed so CI logs show the
+    // planned family next to the timings.
+    let report = planner::plan(&base, &cfg, &PlannerConfig::default()).unwrap();
+    print!("{}", report.table(&base).render());
+    println!(
+        "dominating mixed plans: {}",
+        report.dominating_points().len()
+    );
+
+    b.finish("planner");
+}

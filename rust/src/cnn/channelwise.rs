@@ -24,6 +24,18 @@ pub struct ChannelGroup {
 /// remainder so `sum(od_i) == od` exactly.
 pub fn split_layer(layer: &Layer, groups: &[ChannelGroup]) -> Vec<Layer> {
     assert!(!groups.is_empty());
+    // Each fraction must be a positive, finite share on its own: the sum
+    // check alone accepted e.g. [1.5, -0.5] (sums to 1) and silently
+    // assigned *all* channels to the 1.5 group — found by
+    // `prop_split_rounding_invariants` below.
+    for g in groups {
+        assert!(
+            g.fraction.is_finite() && g.fraction > 0.0,
+            "channel fractions must be positive and finite (got {} for w{})",
+            g.fraction,
+            g.wq
+        );
+    }
     let total: f64 = groups.iter().map(|g| g.fraction).sum();
     assert!(
         (total - 1.0).abs() < 1e-6,
@@ -48,6 +60,51 @@ pub fn split_layer(layer: &Layer, groups: &[ChannelGroup]) -> Vec<Layer> {
         out.push(l);
     }
     out
+}
+
+/// Apply an explicit per-layer precision plan: one group list per layer of
+/// `cnn` (same order). A single-group entry assigns that word-length to the
+/// whole layer; multi-group entries split the layer's output channels as in
+/// [`split_layer`]. This is the lowering used by `planner::emit` /
+/// `serving::VariantSpec` for planned (layer- and channel-wise) variants —
+/// the resulting [`Cnn`] flows through the DSE/simulator stack unchanged.
+pub fn apply_plan(cnn: &Cnn, per_layer: &[Vec<ChannelGroup>]) -> Cnn {
+    assert_eq!(
+        per_layer.len(),
+        cnn.layers.len(),
+        "one group list per layer required"
+    );
+    let mut layers = Vec::with_capacity(cnn.layers.len());
+    for (l, groups) in cnn.layers.iter().zip(per_layer) {
+        assert!(!groups.is_empty(), "layer '{}' has no groups", l.name);
+        if groups.len() == 1 {
+            // Uniform layer: the single group must cover all channels —
+            // accepting e.g. fraction 0.25 here would silently quantize a
+            // different network than the caller specified.
+            assert!(
+                (groups[0].fraction - 1.0).abs() < 1e-6,
+                "single-group fraction for layer '{}' must be 1 (got {})",
+                l.name,
+                groups[0].fraction
+            );
+            let mut u = l.clone();
+            u.wq = groups[0].wq;
+            layers.push(u);
+        } else {
+            // FC layers are host-side and never split: refuse rather than
+            // silently collapsing the extra groups.
+            assert!(
+                l.kind != LayerKind::Fc,
+                "FC layer '{}' cannot be channel-split",
+                l.name
+            );
+            layers.extend(split_layer(l, groups));
+        }
+    }
+    Cnn {
+        layers,
+        ..cnn.clone()
+    }
 }
 
 /// Apply a channel-wise scheme to every inner CONV layer of a CNN
@@ -156,6 +213,141 @@ mod tests {
         assert_eq!(cw.layers.last().unwrap().wq, 8);
         // inner layers got split into two groups each
         assert!(cw.layers.len() > resnet::resnet18().layers.len() + 10);
+    }
+
+    #[test]
+    fn prop_split_rounding_invariants() {
+        // Satellite invariants: group `od`s sum exactly to `layer.od`, no
+        // zero-channel sub-layer survives, and fractions arbitrarily close
+        // to 0 or 1 neither panic nor leave channels behind.
+        forall(1000, |rng: &mut Rng| {
+            let l = Layer::conv(
+                "inv",
+                [7u32, 14, 28][rng.range(0, 3)],
+                1 << rng.range(0, 8),
+                1 + rng.range(0, 700) as u32,
+                *rng.choose(&[1u32, 3]),
+                1,
+            );
+            let n_groups = rng.range(2, 5);
+            // Raw positive shares, occasionally extreme, normalized to 1.
+            let mut shares: Vec<f64> = (0..n_groups)
+                .map(|_| {
+                    if rng.chance(0.3) {
+                        rng.uniform(1e-9, 1e-3)
+                    } else {
+                        rng.uniform(0.05, 1.0)
+                    }
+                })
+                .collect();
+            let total: f64 = shares.iter().sum();
+            for s in &mut shares {
+                *s /= total;
+            }
+            let wqs = [1u32, 2, 3, 4, 8];
+            let groups: Vec<ChannelGroup> = shares
+                .iter()
+                .enumerate()
+                .map(|(i, &fraction)| ChannelGroup {
+                    wq: wqs[i % wqs.len()],
+                    fraction,
+                })
+                .collect();
+            let parts = split_layer(&l, &groups);
+            check(!parts.is_empty(), "at least one group must survive")?;
+            check_eq(
+                parts.iter().map(|p| p.od).sum::<u32>(),
+                l.od,
+                "group ods must sum exactly to layer.od",
+            )?;
+            check(
+                parts.iter().all(|p| p.od > 0),
+                "no zero-channel sub-layer may survive",
+            )?;
+            check_eq(
+                parts.iter().map(|p| p.params()).sum::<u64>(),
+                l.params(),
+                "params conserved",
+            )
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "must be positive")]
+    fn rejects_negative_fraction_even_when_sum_is_one() {
+        // The violation the property hunt surfaced: [1.5, -0.5] sums to 1
+        // and previously passed validation, assigning every channel to the
+        // 1.5 group.
+        split_layer(
+            &Layer::conv("neg", 14, 8, 8, 3, 1),
+            &[
+                ChannelGroup { wq: 2, fraction: 1.5 },
+                ChannelGroup { wq: 8, fraction: -0.5 },
+            ],
+        );
+    }
+
+    #[test]
+    fn apply_plan_mixes_uniform_and_split_layers() {
+        let base = resnet::resnet_small(1, 10);
+        let n = base.layers.len();
+        let per_layer: Vec<Vec<ChannelGroup>> = (0..n)
+            .map(|i| {
+                if i == 0 || i == n - 1 {
+                    vec![ChannelGroup { wq: 8, fraction: 1.0 }]
+                } else if i == 1 {
+                    vec![
+                        ChannelGroup { wq: 2, fraction: 0.5 },
+                        ChannelGroup { wq: 8, fraction: 0.5 },
+                    ]
+                } else {
+                    vec![ChannelGroup { wq: 4, fraction: 1.0 }]
+                }
+            })
+            .collect();
+        let planned = apply_plan(&base, &per_layer);
+        // One extra layer from the single split; totals conserved.
+        assert_eq!(planned.layers.len(), n + 1);
+        assert_eq!(
+            planned.layers.iter().map(|l| l.macs()).sum::<u64>(),
+            base.layers.iter().map(|l| l.macs()).sum::<u64>()
+        );
+        assert_eq!(planned.layers[0].wq, 8);
+        assert_eq!(planned.layers.last().unwrap().wq, 8);
+        assert_eq!(planned.layers[1].wq, 2);
+        assert_eq!(planned.layers[2].wq, 8);
+        // Uniform entries keep their layer name (stable fingerprints).
+        assert_eq!(planned.layers[3].name, base.layers[2].name);
+        assert_eq!(planned.layers[3].wq, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot be channel-split")]
+    fn apply_plan_refuses_to_split_fc_layers() {
+        let base = resnet::resnet_small(1, 10);
+        let mut per_layer: Vec<Vec<ChannelGroup>> = base
+            .layers
+            .iter()
+            .map(|_| vec![ChannelGroup { wq: 8, fraction: 1.0 }])
+            .collect();
+        *per_layer.last_mut().unwrap() = vec![
+            ChannelGroup { wq: 2, fraction: 0.5 },
+            ChannelGroup { wq: 8, fraction: 0.5 },
+        ];
+        apply_plan(&base, &per_layer);
+    }
+
+    #[test]
+    #[should_panic(expected = "must be 1")]
+    fn apply_plan_rejects_partial_single_group() {
+        let base = resnet::resnet_small(1, 10);
+        let mut per_layer: Vec<Vec<ChannelGroup>> = base
+            .layers
+            .iter()
+            .map(|_| vec![ChannelGroup { wq: 8, fraction: 1.0 }])
+            .collect();
+        per_layer[1] = vec![ChannelGroup { wq: 2, fraction: 0.25 }];
+        apply_plan(&base, &per_layer);
     }
 
     #[test]

@@ -1,10 +1,14 @@
-//! Single-variant serving shim, kept for source compatibility.
+//! DEPRECATED single-variant shim — the serving stack lives in
+//! [`crate::serving`]; start there.
 //!
-//! The serving stack moved to [`crate::serving`]: a multi-variant
-//! [`Server`](crate::serving::Server) with routed
-//! [`InferRequest`](crate::serving::InferRequest)s. [`Coordinator`] wraps a
-//! one-variant server behind the old factory-closure API so existing
-//! callers keep compiling; everything else here is a re-export.
+//! Everything in this module is either a re-export of `serving` types or the
+//! thin [`Coordinator`] wrapper around a one-variant
+//! [`Server`](crate::serving::Server), kept only so pre-gateway callers keep
+//! compiling. All remaining pass-through APIs are marked `#[deprecated]`;
+//! new code should register variants on a
+//! [`ServerBuilder`](crate::serving::ServerBuilder) (see the module docs of
+//! [`crate::serving`] for the full routing/batching documentation, which is
+//! deliberately not duplicated here).
 
 pub use crate::serving::backend;
 pub use crate::serving::metrics;
@@ -43,6 +47,7 @@ impl Coordinator {
             name: SHIM_VARIANT.to_string(),
             wq: None,
             channelwise: Vec::new(),
+            layerwise: Vec::new(),
         };
         let server = Server::builder()
             .variant_with_profile(spec, VariantProfile::default(), cfg, factory)
@@ -50,6 +55,10 @@ impl Coordinator {
         Ok(Coordinator { server })
     }
 
+    #[deprecated(
+        since = "0.3.0",
+        note = "use serving::Server::client(name) on a multi-variant server"
+    )]
     pub fn client(&self) -> Client {
         self.server
             .client(SHIM_VARIANT)
@@ -57,6 +66,7 @@ impl Coordinator {
     }
 
     /// Snapshot of the metrics (wall window = since start).
+    #[deprecated(since = "0.3.0", note = "use serving::Server::metrics(name)")]
     pub fn metrics(&self) -> Metrics {
         self.server
             .metrics(SHIM_VARIANT)
@@ -66,6 +76,7 @@ impl Coordinator {
     /// Graceful shutdown: signals the worker, joins it, returns the final
     /// metrics. In-flight requests complete; queued-but-unbatched requests
     /// are still drained before exit.
+    #[deprecated(since = "0.3.0", note = "use serving::Server::shutdown")]
     pub fn shutdown(self) -> Metrics {
         let mut all = self.server.shutdown();
         all.remove(0).1

@@ -11,15 +11,18 @@
 //!   with LSQ QAT, exported to `artifacts/*.hlo.txt`.
 //! - **L3** (this crate): the paper's design-space exploration
 //!   ([`pe`], [`array`], [`dataflow`], [`dse`]), the FPGA accelerator
-//!   simulator ([`sim`], [`energy`]), and a multi-variant serving gateway
+//!   simulator ([`sim`], [`energy`]), the precision [`planner`] that
+//!   searches layer/channel-wise word-length assignments and emits the
+//!   Pareto variant family, and a multi-variant serving gateway
 //!   ([`serving`]) that batches requests and routes them across
 //!   mixed-precision model variants, executing the AOT artifacts via PJRT
 //!   ([`runtime`]). The old single-variant [`coordinator`] survives as a
 //!   shim over [`serving`].
 //!
 //! Start at [`dse`] for the headline methodology, [`sim`] for the
-//! system-level model behind Table IV / Fig 9, or [`serving`] for the
-//! trade-off curve deployed as a request router.
+//! system-level model behind Table IV / Fig 9, [`planner`] for the
+//! automated precision assignment, or [`serving`] for the trade-off curve
+//! deployed as a request router.
 
 pub mod array;
 pub mod baselines;
@@ -30,6 +33,7 @@ pub mod dataflow;
 pub mod dse;
 pub mod energy;
 pub mod pe;
+pub mod planner;
 pub mod quant;
 pub mod report;
 pub mod runtime;

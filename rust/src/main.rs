@@ -26,6 +26,13 @@ SUBCOMMANDS
   dse        --cnn resnet18 [--wq 2 | --channelwise 1:0.8,8:0.2]
              [--k 1,2,4] [--config file]
              run the holistic DSE and print the chosen design per slice
+  plan       --cnn resnet18 [--family ResNet-18] [--bits 1,2,4,8]
+             [--beam 48] [--max-evals 16] [--alpha 1.0] [--splits 0.5]
+             [--min-top5 PCT] [--budget-mb MB] [--no-serve-check]
+             search layer/channel-wise word-length plans under the FPGA
+             budgets, print the (proxy-accuracy, fps, footprint) Pareto
+             frontier vs the uniform variants, and boot the emitted family
+             in the serving gateway (mock backends)
   simulate   --cnn resnet18 --wq 2 --k 2 [--dims 7x5x37] [--layers]
              simulate one accelerator design (Table IV style column)
   tables     [--which fig3|fig6|fig7|fig8|fig9|table2|table3|table4|table5|all]
@@ -98,6 +105,7 @@ fn cnn_for(args: &Args, cfg: &RunConfig) -> Result<mpcnn::cnn::Cnn> {
 fn run(args: &Args) -> Result<()> {
     match args.subcommand.as_str() {
         "dse" => cmd_dse(args),
+        "plan" => cmd_plan(args),
         "simulate" => cmd_simulate(args),
         "tables" => cmd_tables(args),
         "baseline" => cmd_baseline(args),
@@ -148,6 +156,91 @@ fn cmd_dse(args: &Args) -> Result<()> {
         "\nchosen design: BP-ST-1D k={} @ {} ({} PEs), {:.1} frames/s",
         best.k, best.array.dims, best.array.n_pe, best.sim.fps
     );
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let name = args.get_or("cnn", "resnet18");
+    let base = resnet::by_name(&name).ok_or_else(|| anyhow!("unknown CNN '{name}'"))?;
+    // The accuracy family defaults to the paper table matching the CNN
+    // (small 32x32 variants calibrate against ResNet-18, see EXPERIMENTS.md).
+    let default_family = match base.name.as_str() {
+        "ResNet-50" | "ResNet-101" => "ResNet-50",
+        "ResNet-152" => "ResNet-152",
+        _ => "ResNet-18",
+    };
+    let mut pcfg = mpcnn::planner::PlannerConfig::for_config(&cfg);
+    pcfg.family = args.get_or("family", default_family);
+    pcfg.wq_choices = args.get_list_u32("bits", &pcfg.wq_choices);
+    pcfg.beam_width = args.get_usize("beam", pcfg.beam_width);
+    pcfg.max_evals = args.get_usize("max-evals", pcfg.max_evals);
+    pcfg.alpha = args.get_f64("alpha", pcfg.alpha);
+    if let Some(s) = args.get("splits") {
+        pcfg.split_fractions = s.split(',').filter_map(|p| p.trim().parse().ok()).collect();
+    }
+    // Constraints must parse or error — silently dropping a mistyped
+    // accuracy floor / footprint ceiling would plan an unconstrained family.
+    if let Some(v) = args.get("min-top5") {
+        pcfg.min_top5 =
+            Some(v.parse().map_err(|_| anyhow!("bad --min-top5 '{v}' (want e.g. 87.5)"))?);
+    }
+    if let Some(v) = args.get("budget-mb") {
+        pcfg.max_footprint_mb =
+            Some(v.parse().map_err(|_| anyhow!("bad --budget-mb '{v}' (want e.g. 6.0)"))?);
+    }
+
+    println!(
+        "precision planner: {} on {} ({} anchors, bits {:?}, beam {}, <= {} DSE evals)\n",
+        base.name, cfg.fpga.name, pcfg.family, pcfg.wq_choices, pcfg.beam_width, pcfg.max_evals
+    );
+    let started = std::time::Instant::now();
+    let report = mpcnn::planner::plan(&base, &cfg, &pcfg)?;
+    print!("{}", report.table(&base).render());
+    println!(
+        "\n{} candidates enumerated, {} evaluated through the DSE in {:.2}s",
+        report.enumerated,
+        report.evaluated,
+        started.elapsed().as_secs_f64()
+    );
+    let dominating = report.dominating_points();
+    if dominating.is_empty() {
+        println!("no mixed plan dominates a uniform variant under this budget");
+    } else {
+        for p in &dominating {
+            let doms: Vec<String> =
+                p.dominates.iter().map(|w| format!("w{w}")).collect();
+            println!(
+                "{} [{}] Pareto-dominates {} on (Top-5*, fps, footprint)",
+                p.name,
+                p.assignment.describe(&base),
+                doms.join(", ")
+            );
+        }
+    }
+
+    if !args.has_flag("no-serve-check") {
+        // Boot the emitted family end to end on mock backends and route one
+        // request to the most accurate planned variant.
+        let server = mpcnn::planner::mock_family_server(&report, 3072, 10)?;
+        let names = server.variant_names();
+        let target = report
+            .frontier
+            .iter()
+            .find(|p| p.uniform_wq.is_none())
+            .map(|p| p.name.clone())
+            .unwrap_or_else(|| names[0].clone());
+        let resp = server
+            .infer(
+                InferRequest::new(vec![0.5; 3072]).with_variant(VariantSelector::Named(target)),
+            )
+            .map_err(|e| anyhow!("{e}"))?;
+        println!(
+            "\nserve check: emitted family {:?} boots in the gateway; '{}' answered class {}",
+            names, resp.variant, resp.class
+        );
+        server.shutdown();
+    }
     Ok(())
 }
 

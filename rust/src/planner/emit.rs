@@ -1,0 +1,128 @@
+//! Lower frontier points into the serving gateway's vocabulary.
+//!
+//! Each [`PlannedPoint`](super::PlannedPoint) becomes a
+//! [`VariantSpec`] (plain `w<q>` for uniform baselines; a layerwise
+//! [`VariantSpec::planned`] carrying the per-layer [`ChannelGroup`] lists
+//! otherwise) plus a [`VariantProfile`] routing prior — proxy Top-5 from
+//! the calibrated sensitivity model, fps and energy from the DSE-chosen
+//! design — and a [`BatcherConfig`] whose virtual-FPGA clock runs at that
+//! design's simulated frame rate. [`mock_family_server`] registers the
+//! whole family on a [`ServerBuilder`] with deterministic mock backends so
+//! the planned family can be booted (and routed against) without PJRT
+//! artifacts; production callers register the same specs/profiles with
+//! `EngineBackend` factories instead.
+
+use super::PlanReport;
+use crate::serving::{
+    BatcherConfig, InferenceBackend, MockBackend, Server, ServerBuilder, VariantProfile,
+    VariantSpec,
+};
+use crate::util::error::Result;
+
+/// One servable variant emitted from the frontier.
+#[derive(Clone, Debug)]
+pub struct PlannedVariant {
+    pub spec: VariantSpec,
+    pub profile: VariantProfile,
+    pub batcher: BatcherConfig,
+}
+
+/// Convert every frontier point of `report` into a servable variant, in
+/// frontier order (descending proxy Top-5).
+pub fn emit_variants(report: &PlanReport) -> Vec<PlannedVariant> {
+    report
+        .frontier
+        .iter()
+        .map(|p| {
+            let spec = match p.uniform_wq {
+                Some(wq) => VariantSpec::uniform(wq),
+                None => VariantSpec::planned(p.name.clone(), p.assignment.groups.clone()),
+            };
+            let profile = VariantProfile {
+                top5_accuracy: Some(p.proxy_top5),
+                fpga_fps: p.fps,
+                fpga_mj_per_frame: p.mj_per_frame,
+            };
+            let batcher = BatcherConfig { fpga_fps_sim: p.fps, ..BatcherConfig::default() };
+            PlannedVariant { spec, profile, batcher }
+        })
+        .collect()
+}
+
+/// Register `variants` on `builder` with deterministic [`MockBackend`]s
+/// whose service time tracks each design's simulated frame time.
+pub fn register_mock_family(
+    mut builder: ServerBuilder,
+    variants: Vec<PlannedVariant>,
+    image_len: usize,
+    classes: usize,
+) -> ServerBuilder {
+    for v in variants {
+        let latency_us = (1e6 / v.profile.fpga_fps.max(1.0)).clamp(100.0, 20_000.0) as u64;
+        let max_batch = v.batcher.max_batch.max(1);
+        builder = builder.variant_with_profile(v.spec, v.profile, v.batcher, move || {
+            Ok(Box::new(MockBackend::new(image_len, classes, vec![1, max_batch], latency_us))
+                as Box<dyn InferenceBackend>)
+        });
+    }
+    builder
+}
+
+/// Boot the emitted family end to end on mock backends: the round-trip the
+/// planner integration tests (and `mpcnn plan`) exercise.
+pub fn mock_family_server(report: &PlanReport, image_len: usize, classes: usize) -> Result<Server> {
+    let variants = emit_variants(report);
+    if variants.is_empty() {
+        return Err(crate::anyhow!("plan frontier is empty — nothing to serve"));
+    }
+    register_mock_family(Server::builder(), variants, image_len, classes).build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{plan, PlannerConfig};
+    use super::*;
+    use crate::cnn::resnet;
+    use crate::config::RunConfig;
+    use crate::serving::{InferRequest, VariantSelector};
+
+    fn small_report() -> super::super::PlanReport {
+        // Tiny budget on the exported ResNet-8 topology: fast and
+        // deterministic.
+        let base = resnet::resnet_small(1, 10);
+        let cfg = RunConfig { slices: vec![2], ..RunConfig::default() };
+        let pcfg = PlannerConfig {
+            wq_choices: vec![2, 8],
+            beam_width: 8,
+            max_evals: 4,
+            ..PlannerConfig::default()
+        };
+        plan(&base, &cfg, &pcfg).unwrap()
+    }
+
+    #[test]
+    fn emitted_family_boots_and_routes() {
+        let report = small_report();
+        let variants = emit_variants(&report);
+        assert_eq!(variants.len(), report.frontier.len());
+        assert!(!variants.is_empty());
+        for v in &variants {
+            assert!(v.profile.fpga_fps > 0.0);
+            assert!((v.batcher.fpga_fps_sim - v.profile.fpga_fps).abs() < 1e-9);
+            assert!(v.profile.top5_accuracy.is_some());
+        }
+        let server = mock_family_server(&report, 12, 10).unwrap();
+        assert_eq!(server.n_variants(), report.frontier.len());
+        // Every planned variant is routable by name.
+        for p in &report.frontier {
+            let resp = server
+                .infer(
+                    InferRequest::new(vec![0.5; 12])
+                        .with_variant(VariantSelector::Named(p.name.clone())),
+                )
+                .unwrap();
+            assert_eq!(resp.variant, p.name);
+        }
+        server.shutdown();
+    }
+}

@@ -1,0 +1,49 @@
+//! Footprint side of the planner triple — a thin aggregation over the
+//! existing Table III models in [`crate::cnn::workload`], evaluated on the
+//! *planned* (layer/channel-wise quantized) CNN.
+
+use crate::cnn::{workload, Cnn};
+
+/// Memory footprint summary of one planned CNN.
+#[derive(Clone, Copy, Debug)]
+pub struct PlanFootprint {
+    /// Weight storage at the assigned word-lengths, MB.
+    pub weight_mb: f64,
+    /// Weights + BN/bias + peak activation working set, MB.
+    pub total_mb: f64,
+    /// Weight compression vs the FP32 baseline (the abstract's 4.9x/9.4x
+    /// metric).
+    pub compression: f64,
+    /// Parameter-weighted average weight word-length in bits.
+    pub avg_bits: f64,
+}
+
+impl PlanFootprint {
+    pub fn of(cnn: &Cnn) -> PlanFootprint {
+        let f = workload::footprint(cnn);
+        let params: u64 = cnn.total_params();
+        PlanFootprint {
+            weight_mb: f.weight_mb(),
+            total_mb: f.total_mb(),
+            compression: workload::weight_compression_factor(cnn),
+            avg_bits: f.weight_bits as f64 / (params as f64).max(1.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::resnet;
+
+    #[test]
+    fn tracks_workload_models_and_orders_by_wq() {
+        let w2 = PlanFootprint::of(&resnet::resnet18().with_uniform_wq(2));
+        let w8 = PlanFootprint::of(&resnet::resnet18().with_uniform_wq(8));
+        assert!(w2.weight_mb < w8.weight_mb);
+        assert!(w2.compression > w8.compression);
+        assert!(w2.avg_bits > 2.0 && w2.avg_bits < 3.0, "{}", w2.avg_bits);
+        assert!((w8.avg_bits - 8.0).abs() < 1e-9);
+        assert!(w8.total_mb > w8.weight_mb);
+    }
+}

@@ -1,0 +1,374 @@
+//! Pareto machinery and the assignment search.
+//!
+//! Three candidate generators feed the evaluator, all pruned by the same
+//! monotone-dominance argument as `array::search` (every DP coordinate is a
+//! per-layer additive sum, so a prefix that is weakly dominated on all
+//! coordinates cannot complete into a non-dominated plan):
+//!
+//! 1. **Greedy efficiency walk** — from the all-max-bits assignment,
+//!    repeatedly apply the single per-layer demotion with the best
+//!    Δbits/Δnoise ratio. This walks the continuous-relaxation optimum of
+//!    the (noise, footprint) trade-off, so the low-noise end of the
+//!    frontier (where mixed plans Pareto-dominate the uniform variants) is
+//!    covered densely.
+//! 2. **Channel-split twists** — the first walk steps re-expressed as
+//!    [`ChannelGroup`] splits, so per-channel-group points reach the
+//!    evaluator too.
+//! 3. **Beam DP** — layer-by-layer product with the full menu (uniform
+//!    choices + splits), pruned to the 3-D Pareto set over
+//!    (noise, weight bits, pass cost) and thinned to a bits-spread beam.
+
+use super::sensitivity::SensitivityModel;
+use super::{pinned, Assignment, PlannerConfig};
+use crate::cnn::{ChannelGroup, Cnn};
+
+/// The (proxy-accuracy, throughput, footprint) coordinates dominance is
+/// judged on.
+#[derive(Clone, Copy, Debug)]
+pub struct Triple {
+    /// Proxy Top-5 percent (higher is better).
+    pub top5: f64,
+    /// Frames/s of the DSE-chosen design (higher is better).
+    pub fps: f64,
+    /// Weight footprint in MB (lower is better).
+    pub footprint_mb: f64,
+}
+
+/// Pareto dominance on the triple: no worse on every coordinate, strictly
+/// better on at least one.
+pub fn dominates(a: &Triple, b: &Triple) -> bool {
+    let ge = a.top5 >= b.top5 && a.fps >= b.fps && a.footprint_mb <= b.footprint_mb;
+    let strict = a.top5 > b.top5 || a.fps > b.fps || a.footprint_mb < b.footprint_mb;
+    ge && strict
+}
+
+/// Indices of the mutually non-dominated points (duplicates both survive).
+pub fn pareto_indices(pts: &[Triple]) -> Vec<usize> {
+    (0..pts.len())
+        .filter(|&i| !pts.iter().enumerate().any(|(j, q)| j != i && dominates(q, &pts[i])))
+        .collect()
+}
+
+/// One per-layer choice with its additive DP coordinates.
+#[derive(Clone, Debug)]
+struct MenuItem {
+    groups: Vec<ChannelGroup>,
+    /// Weighted noise contribution `s_l · Σ frac · n(wq)`.
+    noise: f64,
+    /// Weight bits `params_l · Σ frac · wq`.
+    bits: f64,
+    /// Serial-pass cost proxy `MACs_l · Σ frac · wq` (k=1 cycle count).
+    cost: f64,
+}
+
+fn menu_for_layer(
+    base: &Cnn,
+    model: &SensitivityModel,
+    li: usize,
+    pcfg: &PlannerConfig,
+) -> Vec<MenuItem> {
+    let l = &base.layers[li];
+    let (w, p, m) = (model.weight(li), l.params() as f64, l.macs() as f64);
+    let wqs = pcfg.bits_menu();
+    let item = |groups: Vec<ChannelGroup>| {
+        let avg_n: f64 = groups.iter().map(|g| g.fraction * model.noise_power(g.wq)).sum();
+        let avg_b: f64 = groups.iter().map(|g| g.fraction * g.wq as f64).sum();
+        MenuItem {
+            groups,
+            noise: w * avg_n,
+            bits: p * avg_b,
+            cost: m * avg_b,
+        }
+    };
+    let mut menu: Vec<MenuItem> =
+        wqs.iter().map(|&wq| item(vec![ChannelGroup { wq, fraction: 1.0 }])).collect();
+    for pair in wqs.windows(2) {
+        let (lo, hi) = (pair[0], pair[1]);
+        for &f in &pcfg.split_fractions {
+            if f > 0.0 && f < 1.0 {
+                menu.push(item(vec![
+                    ChannelGroup { wq: lo, fraction: f },
+                    ChannelGroup { wq: hi, fraction: 1.0 - f },
+                ]));
+            }
+        }
+    }
+    menu
+}
+
+/// Greedy efficiency walk: from all-max-bits, repeatedly demote the single
+/// layer whose next-lower uniform word-length saves the most weight bits
+/// per unit of added aggregate noise.
+fn chain_candidates(base: &Cnn, model: &SensitivityModel, pcfg: &PlannerConfig) -> Vec<Assignment> {
+    let wqs = pcfg.bits_menu();
+    if wqs.len() < 2 {
+        return Vec::new();
+    }
+    let hi = *wqs.last().unwrap();
+    let inner: Vec<usize> = (0..base.layers.len()).filter(|&i| !pinned(base, i)).collect();
+    // Current uniform word-length index per inner layer (start at max).
+    let mut level: Vec<usize> = vec![wqs.len() - 1; inner.len()];
+    let mut cur = Assignment::uniform(base, hi);
+    let mut out = Vec::new();
+    loop {
+        // Best next single-layer demotion by Δbits/Δnoise.
+        let mut best: Option<(usize, f64)> = None;
+        for (j, &li) in inner.iter().enumerate() {
+            if level[j] == 0 {
+                continue;
+            }
+            let l = &base.layers[li];
+            let (from, to) = (wqs[level[j]], wqs[level[j] - 1]);
+            let d_bits = l.params() as f64 * (from - to) as f64;
+            let d_noise =
+                model.weight(li) * (model.noise_power(to) - model.noise_power(from)).max(1e-300);
+            let eff = d_bits / d_noise;
+            if best.map_or(true, |(_, be)| eff > be) {
+                best = Some((j, eff));
+            }
+        }
+        let Some((j, _)) = best else { break };
+        level[j] -= 1;
+        cur.groups[inner[j]] = vec![ChannelGroup { wq: wqs[level[j]], fraction: 1.0 }];
+        out.push(cur.clone());
+    }
+    out
+}
+
+/// Channel-split twists of the first few walk steps: the layers the walk
+/// demotes first, split `lo@f / hi@(1-f)` instead of demoted outright.
+fn split_candidates(base: &Cnn, model: &SensitivityModel, pcfg: &PlannerConfig) -> Vec<Assignment> {
+    let wqs = pcfg.bits_menu();
+    if wqs.len() < 2 || pcfg.split_fractions.is_empty() {
+        return Vec::new();
+    }
+    let hi = *wqs.last().unwrap();
+    let lo = wqs[wqs.len() - 2];
+    let inner: Vec<usize> = (0..base.layers.len()).filter(|&i| !pinned(base, i)).collect();
+    // Efficiency order for the hi -> lo step.
+    let mut order: Vec<usize> = inner.clone();
+    order.sort_by(|&a, &b| {
+        let eff = |li: usize| {
+            base.layers[li].params() as f64 * (hi - lo) as f64
+                / (model.weight(li) * (model.noise_power(lo) - model.noise_power(hi))).max(1e-300)
+        };
+        eff(b).total_cmp(&eff(a))
+    });
+    let mut out = Vec::new();
+    for &li in order.iter().take(3) {
+        for &f in &pcfg.split_fractions {
+            if f <= 0.0 || f >= 1.0 {
+                continue;
+            }
+            let mut a = Assignment::uniform(base, hi);
+            a.groups[li] = vec![
+                ChannelGroup { wq: lo, fraction: f },
+                ChannelGroup { wq: hi, fraction: 1.0 - f },
+            ];
+            out.push(a);
+        }
+    }
+    out
+}
+
+#[derive(Clone, Debug)]
+struct BeamState {
+    noise: f64,
+    bits: f64,
+    cost: f64,
+    choices: Vec<u16>,
+}
+
+/// Keep only states no other state weakly dominates (≤ on all three
+/// coordinates; equal states collapse to the first).
+fn prune_weakly_dominated(mut states: Vec<BeamState>) -> Vec<BeamState> {
+    states.sort_by(|a, b| {
+        a.noise
+            .total_cmp(&b.noise)
+            .then(a.bits.total_cmp(&b.bits))
+            .then(a.cost.total_cmp(&b.cost))
+    });
+    let mut kept: Vec<BeamState> = Vec::new();
+    'outer: for s in states {
+        for k in &kept {
+            if k.noise <= s.noise && k.bits <= s.bits && k.cost <= s.cost {
+                continue 'outer;
+            }
+        }
+        kept.push(s);
+    }
+    kept
+}
+
+/// Beam DP over the inner layers.
+fn beam_candidates(base: &Cnn, model: &SensitivityModel, pcfg: &PlannerConfig) -> Vec<Assignment> {
+    let inner: Vec<usize> = (0..base.layers.len()).filter(|&i| !pinned(base, i)).collect();
+    let menus: Vec<Vec<MenuItem>> =
+        inner.iter().map(|&li| menu_for_layer(base, model, li, pcfg)).collect();
+    let beam = pcfg.beam_width.max(2);
+    let mut states = vec![BeamState { noise: 0.0, bits: 0.0, cost: 0.0, choices: Vec::new() }];
+    for menu in &menus {
+        let mut next = Vec::with_capacity(states.len() * menu.len());
+        for s in &states {
+            for (mi, m) in menu.iter().enumerate() {
+                let mut choices = s.choices.clone();
+                choices.push(mi as u16);
+                next.push(BeamState {
+                    noise: s.noise + m.noise,
+                    bits: s.bits + m.bits,
+                    cost: s.cost + m.cost,
+                    choices,
+                });
+            }
+        }
+        let mut pruned = prune_weakly_dominated(next);
+        if pruned.len() > beam {
+            // Thin to an evenly bits-spaced beam, keeping both extremes.
+            pruned.sort_by(|a, b| a.bits.total_cmp(&b.bits));
+            let last = pruned.len() - 1;
+            let mut take: Vec<usize> = (0..beam).map(|j| j * last / (beam - 1)).collect();
+            take.dedup();
+            pruned = take.into_iter().map(|i| pruned[i].clone()).collect();
+        }
+        states = pruned;
+    }
+    states
+        .into_iter()
+        .map(|s| {
+            let mut a = Assignment::uniform(base, 8);
+            for (j, &li) in inner.iter().enumerate() {
+                a.groups[li] = menus[j][s.choices[j] as usize].groups.clone();
+            }
+            a
+        })
+        .collect()
+}
+
+/// All candidate assignments worth evaluating, deduplicated.
+pub fn enumerate_assignments(
+    base: &Cnn,
+    model: &SensitivityModel,
+    pcfg: &PlannerConfig,
+) -> Vec<Assignment> {
+    let mut out = chain_candidates(base, model, pcfg);
+    out.extend(split_candidates(base, model, pcfg));
+    out.extend(beam_candidates(base, model, pcfg));
+    let mut seen: Vec<Assignment> = Vec::with_capacity(out.len());
+    for a in out {
+        if !seen.contains(&a) {
+            seen.push(a);
+        }
+    }
+    seen
+}
+
+/// Pick at most `max_evals` candidates, evenly spaced over the log of their
+/// aggregate noise (the accuracy proxy is log-sensitive near the quiet
+/// anchors, so linear spacing would starve the high-accuracy end where the
+/// dominating plans live).
+pub fn thin_candidates(
+    mut cands: Vec<Assignment>,
+    model: &SensitivityModel,
+    max_evals: usize,
+) -> Vec<Assignment> {
+    if cands.len() <= max_evals {
+        return cands;
+    }
+    cands.sort_by(|a, b| model.aggregate_noise(a).total_cmp(&model.aggregate_noise(b)));
+    let ln: Vec<f64> =
+        cands.iter().map(|a| (model.aggregate_noise(a) + 1e-12).ln()).collect();
+    let (lo, hi) = (ln[0], ln[ln.len() - 1]);
+    let mut picked: Vec<usize> = Vec::with_capacity(max_evals);
+    for t in 0..max_evals {
+        let target = lo + (hi - lo) * t as f64 / (max_evals - 1).max(1) as f64;
+        let i = ln
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| (*a - target).abs().total_cmp(&(*b - target).abs()))
+            .map(|(i, _)| i)
+            .unwrap();
+        if !picked.contains(&i) {
+            picked.push(i);
+        }
+    }
+    picked.sort_unstable();
+    picked.into_iter().map(|i| cands[i].clone()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::resnet;
+
+    fn t(top5: f64, fps: f64, mb: f64) -> Triple {
+        Triple { top5, fps, footprint_mb: mb }
+    }
+
+    #[test]
+    fn dominance_definition() {
+        assert!(dominates(&t(89.0, 100.0, 5.0), &t(89.0, 90.0, 5.0)));
+        assert!(dominates(&t(89.0, 100.0, 4.0), &t(89.0, 100.0, 5.0)));
+        // Equal points do not dominate each other.
+        assert!(!dominates(&t(89.0, 100.0, 5.0), &t(89.0, 100.0, 5.0)));
+        // A trade-off is incomparable.
+        assert!(!dominates(&t(89.5, 90.0, 5.0), &t(89.0, 100.0, 5.0)));
+        assert!(!dominates(&t(89.0, 90.0, 5.0), &t(89.5, 100.0, 4.0)));
+    }
+
+    #[test]
+    fn pareto_keeps_only_nondominated() {
+        let pts = vec![
+            t(89.6, 130.0, 11.7), // dominated by the next point
+            t(89.6, 140.0, 9.3),
+            t(87.5, 320.0, 3.3),
+            t(65.3, 320.0, 1.9),
+        ];
+        let keep = pareto_indices(&pts);
+        assert_eq!(keep, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn enumeration_covers_the_quiet_end_and_dedupes() {
+        let base = resnet::resnet18();
+        let pcfg = PlannerConfig::default();
+        let model = SensitivityModel::build(&base, "ResNet-18", pcfg.alpha, &pcfg.wq_choices)
+            .unwrap();
+        let cands = enumerate_assignments(&base, &model, &pcfg);
+        assert!(cands.len() > 20, "{}", cands.len());
+        for (i, a) in cands.iter().enumerate() {
+            assert!(!cands[..i].contains(a), "duplicate candidate at {i}");
+            assert_eq!(a.groups.len(), base.layers.len());
+        }
+        // The first greedy step (one fat layer one notch down, rest at max)
+        // must be among the candidates — it is the flagship low-noise plan.
+        let n8 = model.aggregate_noise(&Assignment::uniform(&base, 8));
+        let quiet = cands
+            .iter()
+            .filter(|a| a.uniform_wq(&base).is_none())
+            .map(|a| model.aggregate_noise(a))
+            .fold(f64::INFINITY, f64::min);
+        assert!(quiet > n8 && quiet < n8 + 1e-3, "quietest mixed plan {quiet} vs n8 {n8}");
+        // Some candidate carries a channel split.
+        assert!(cands
+            .iter()
+            .any(|a| a.groups.iter().any(|g| g.len() > 1)));
+    }
+
+    #[test]
+    fn thinning_respects_cap_and_keeps_extremes() {
+        let base = resnet::resnet18();
+        let pcfg = PlannerConfig::default();
+        let model = SensitivityModel::build(&base, "ResNet-18", pcfg.alpha, &pcfg.wq_choices)
+            .unwrap();
+        let cands = enumerate_assignments(&base, &model, &pcfg);
+        let noises: Vec<f64> = cands.iter().map(|a| model.aggregate_noise(a)).collect();
+        let (lo, hi) = noises.iter().fold((f64::INFINITY, 0.0f64), |(l, h), &n| {
+            (l.min(n), h.max(n))
+        });
+        let thin = thin_candidates(cands, &model, 8);
+        assert!(thin.len() <= 8 && thin.len() >= 2);
+        let tn: Vec<f64> = thin.iter().map(|a| model.aggregate_noise(a)).collect();
+        assert!(tn.iter().any(|&n| n == lo), "quiet extreme kept");
+        assert!(tn.iter().any(|&n| n == hi), "loud extreme kept");
+    }
+}

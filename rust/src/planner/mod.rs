@@ -1,0 +1,478 @@
+//! Precision planner: layer/channel-wise word-length search emitting the
+//! Pareto variant family.
+//!
+//! The paper *chooses* its mixed-precision assignments by hand (uniform
+//! inner `w_Q` per variant, Table III/IV); this subsystem automates the
+//! choice, in the spirit of DeepBurning-MixQ and Zhao et al. (PAPERS.md):
+//! it searches per-layer — and per-channel-group, via
+//! [`crate::cnn::channelwise`] — weight word-length assignments for a CNN
+//! under the FPGA budgets, and extracts the
+//! (proxy-accuracy, throughput, footprint) Pareto frontier.
+//!
+//! Pipeline (one [`plan`] call):
+//!
+//! 1. [`sensitivity`] — calibrate the MAC-weighted quantization-noise
+//!    accuracy proxy against the paper's Table III anchors (via
+//!    [`crate::quant::lsq`]).
+//! 2. [`frontier`] — enumerate candidate assignments (greedy efficiency
+//!    walk + channel-split twists + beam DP with monotone-dominance
+//!    pruning) and thin them to an evaluation budget.
+//! 3. Evaluate every candidate and every uniform baseline through the
+//!    PR-1 cached holistic DSE ([`crate::dse::explore_cached`]) and the
+//!    Table III footprint models ([`footprint`]).
+//! 4. Pareto-filter the union and record which uniform variants the mixed
+//!    plans dominate.
+//! 5. [`emit`] — lower frontier points to [`crate::serving::VariantSpec`]s
+//!    plus routing profiles, so a [`crate::serving::ServerBuilder`] can
+//!    host the *planned* family end to end.
+//!
+//! CLI: `mpcnn plan --cnn resnet18`; benchmark: `cargo bench --bench
+//! planner`; knobs and reproduction notes: EXPERIMENTS.md §Planner.
+
+pub mod emit;
+pub mod footprint;
+pub mod frontier;
+pub mod sensitivity;
+
+pub use emit::{emit_variants, mock_family_server, PlannedVariant};
+pub use footprint::PlanFootprint;
+pub use frontier::{dominates, pareto_indices, Triple};
+pub use sensitivity::SensitivityModel;
+
+use crate::array::Dims;
+use crate::cnn::{ChannelGroup, Cnn, LayerKind};
+use crate::config::RunConfig;
+use crate::dse::{self, DseCache};
+use crate::util::error::Result;
+use crate::util::table::{fnum, Table};
+
+/// Layers the paper pins to 8 bit (first, last, FC) — excluded from the
+/// search, exactly as in [`crate::cnn::channelwise::apply_channelwise`] and
+/// [`Cnn::with_uniform_wq`].
+pub(crate) fn pinned(base: &Cnn, i: usize) -> bool {
+    i == 0 || i + 1 == base.layers.len() || base.layers[i].kind == LayerKind::Fc
+}
+
+/// A per-layer precision assignment over a base CNN: one
+/// [`ChannelGroup`] list per layer (single entry = uniform layer; multiple
+/// entries = channel-wise split). Pinned layers always carry `[w8 @ 1.0]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Assignment {
+    pub groups: Vec<Vec<ChannelGroup>>,
+}
+
+impl Assignment {
+    /// Every inner layer at `wq`, pinned layers at 8 bit.
+    pub fn uniform(base: &Cnn, wq: u32) -> Assignment {
+        let groups = (0..base.layers.len())
+            .map(|i| {
+                let w = if pinned(base, i) { 8 } else { wq };
+                vec![ChannelGroup { wq: w, fraction: 1.0 }]
+            })
+            .collect();
+        Assignment { groups }
+    }
+
+    /// `Some(wq)` when every inner layer is a single group at the same
+    /// word-length (the assignment is expressible as a uniform variant).
+    pub fn uniform_wq(&self, base: &Cnn) -> Option<u32> {
+        let mut seen: Option<u32> = None;
+        for (i, g) in self.groups.iter().enumerate() {
+            if pinned(base, i) {
+                continue;
+            }
+            if g.len() != 1 {
+                return None;
+            }
+            match seen {
+                None => seen = Some(g[0].wq),
+                Some(w) if w == g[0].wq => {}
+                Some(_) => return None,
+            }
+        }
+        seen
+    }
+
+    /// Lower onto the base CNN (see
+    /// [`crate::cnn::channelwise::apply_plan`]).
+    pub fn apply(&self, base: &Cnn) -> Cnn {
+        crate::cnn::channelwise::apply_plan(base, &self.groups)
+    }
+
+    /// Weight footprint in MB straight from the assignment (fraction-exact;
+    /// the lowered CNN's channel rounding can differ by a few KB). Cheap
+    /// enough to gate candidates before any DSE evaluation.
+    pub fn weight_mb(&self, base: &Cnn) -> f64 {
+        let bits: f64 = base
+            .layers
+            .iter()
+            .zip(&self.groups)
+            .map(|(l, groups)| {
+                let avg_bits: f64 = groups.iter().map(|g| g.fraction * g.wq as f64).sum();
+                l.params() as f64 * avg_bits
+            })
+            .sum();
+        bits / 8.0 / 1e6
+    }
+
+    /// Human-readable summary: the majority word-length plus the
+    /// exceptions, e.g. `w8; layer4.0.conv2→w4 (+2 more)`.
+    pub fn describe(&self, base: &Cnn) -> String {
+        let key = |g: &[ChannelGroup]| -> String {
+            if g.len() == 1 {
+                format!("w{}", g[0].wq)
+            } else {
+                g.iter()
+                    .map(|c| format!("w{}:{:.2}", c.wq, c.fraction))
+                    .collect::<Vec<_>>()
+                    .join("+")
+            }
+        };
+        let inner: Vec<usize> =
+            (0..base.layers.len()).filter(|&i| !pinned(base, i)).collect();
+        // Majority key among inner layers.
+        let mut counts: Vec<(String, usize)> = Vec::new();
+        for &i in &inner {
+            let k = key(&self.groups[i]);
+            match counts.iter_mut().find(|(kk, _)| *kk == k) {
+                Some((_, c)) => *c += 1,
+                None => counts.push((k, 1)),
+            }
+        }
+        let majority = counts
+            .iter()
+            .max_by_key(|(_, c)| *c)
+            .map(|(k, _)| k.clone())
+            .unwrap_or_else(|| "w8".into());
+        let exceptions: Vec<String> = inner
+            .iter()
+            .filter(|&&i| key(&self.groups[i]) != majority)
+            .map(|&i| format!("{}→{}", base.layers[i].name, key(&self.groups[i])))
+            .collect();
+        match exceptions.len() {
+            0 => majority,
+            n if n <= 3 => format!("{majority}; {}", exceptions.join(", ")),
+            n => format!(
+                "{majority}; {} (+{} more)",
+                exceptions[..2].join(", "),
+                n - 2
+            ),
+        }
+    }
+}
+
+/// Search-budget knobs (EXPERIMENTS.md §Planner documents each).
+#[derive(Clone, Debug)]
+pub struct PlannerConfig {
+    /// Accuracy family for the paper anchors (`ResNet-18/50/152`).
+    pub family: String,
+    /// Word-lengths the search may assign per layer.
+    pub wq_choices: Vec<u32>,
+    /// Channel-split fractions for two-group menu entries (low-wq share).
+    pub split_fractions: Vec<f64>,
+    /// Redundancy exponent of the sensitivity model.
+    pub alpha: f64,
+    /// Beam width of the DP enumeration.
+    pub beam_width: usize,
+    /// Max candidate assignments evaluated through the full DSE.
+    pub max_evals: usize,
+    /// Drop candidates whose proxy Top-5 falls below this, if set.
+    pub min_top5: Option<f64>,
+    /// Drop candidates whose weight footprint exceeds this (MB), if set.
+    pub max_footprint_mb: Option<f64>,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        PlannerConfig {
+            family: "ResNet-18".to_string(),
+            wq_choices: vec![1, 2, 4, 8],
+            split_fractions: vec![0.5],
+            alpha: 1.0,
+            beam_width: 48,
+            max_evals: 16,
+            min_top5: None,
+            max_footprint_mb: None,
+        }
+    }
+}
+
+impl PlannerConfig {
+    /// Defaults with the word-length menu taken from `cfg.weight_bits`.
+    pub fn for_config(cfg: &RunConfig) -> PlannerConfig {
+        PlannerConfig {
+            wq_choices: cfg.weight_bits.clone(),
+            ..PlannerConfig::default()
+        }
+    }
+
+    /// The word-length menu, sorted ascending and deduplicated — the one
+    /// normalization every candidate generator shares.
+    pub fn bits_menu(&self) -> Vec<u32> {
+        let mut wqs = self.wq_choices.clone();
+        wqs.sort_unstable();
+        wqs.dedup();
+        wqs
+    }
+}
+
+/// One fully evaluated point (mixed plan or uniform baseline).
+#[derive(Clone, Debug)]
+pub struct PlannedPoint {
+    /// Registry name (`w<q>` for uniforms, `mp<i>` for mixed plans).
+    pub name: String,
+    pub assignment: Assignment,
+    /// `Some(wq)` for the uniform baselines.
+    pub uniform_wq: Option<u32>,
+    pub proxy_top1: f64,
+    pub proxy_top5: f64,
+    /// Frames/s of the fps-best slice's DSE-chosen design.
+    pub fps: f64,
+    pub k: u32,
+    pub dims: Dims,
+    pub mj_per_frame: f64,
+    pub footprint: PlanFootprint,
+    /// Uniform baselines this point Pareto-dominates (filled by [`plan`]).
+    pub dominates: Vec<u32>,
+}
+
+impl PlannedPoint {
+    pub fn triple(&self) -> Triple {
+        Triple {
+            top5: self.proxy_top5,
+            fps: self.fps,
+            footprint_mb: self.footprint.weight_mb,
+        }
+    }
+}
+
+/// Outcome of one [`plan`] run.
+#[derive(Clone, Debug)]
+pub struct PlanReport {
+    pub cnn_name: String,
+    pub family: String,
+    /// The Pareto frontier over mixed plans ∪ uniform baselines, sorted by
+    /// descending proxy Top-5 (ties: descending fps).
+    pub frontier: Vec<PlannedPoint>,
+    /// Every uniform baseline, whether on the frontier or not.
+    pub uniforms: Vec<PlannedPoint>,
+    /// Candidates enumerated / evaluated through the DSE.
+    pub enumerated: usize,
+    pub evaluated: usize,
+}
+
+impl PlanReport {
+    /// Mixed frontier points that Pareto-dominate at least one uniform
+    /// baseline.
+    pub fn dominating_points(&self) -> Vec<&PlannedPoint> {
+        self.frontier
+            .iter()
+            .filter(|p| p.uniform_wq.is_none() && !p.dominates.is_empty())
+            .collect()
+    }
+
+    /// Render the frontier (with the off-frontier uniform baselines
+    /// appended) as a table.
+    pub fn table(&self, base: &Cnn) -> Table {
+        let mut t = Table::new(format!(
+            "Precision plan frontier — {} ({} anchors)",
+            self.cnn_name, self.family
+        ))
+        .headers(&[
+            "name", "assignment", "Top-1*", "Top-5*", "fps", "k", "HxWxD", "wt MB", "comp",
+            "mJ/f", "dominates",
+        ]);
+        fn cells(p: &PlannedPoint, base: &Cnn, on_frontier: bool) -> Vec<String> {
+            let doms = if p.dominates.is_empty() {
+                if on_frontier { String::new() } else { "(off frontier)".into() }
+            } else {
+                p.dominates
+                    .iter()
+                    .map(|w| format!("≻w{w}"))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            };
+            vec![
+                p.name.clone(),
+                p.assignment.describe(base),
+                fnum(p.proxy_top1, 2),
+                fnum(p.proxy_top5, 2),
+                fnum(p.fps, 1),
+                p.k.to_string(),
+                p.dims.to_string(),
+                fnum(p.footprint.weight_mb, 2),
+                format!("{:.1}x", p.footprint.compression),
+                fnum(p.mj_per_frame, 2),
+                doms,
+            ]
+        }
+        for p in &self.frontier {
+            t.row(cells(p, base, true));
+        }
+        let off: Vec<&PlannedPoint> = self
+            .uniforms
+            .iter()
+            .filter(|u| !self.frontier.iter().any(|p| p.name == u.name))
+            .collect();
+        if !off.is_empty() {
+            t.sep();
+            for u in off {
+                t.row(cells(u, base, false));
+            }
+        }
+        t.note("* proxy accuracy: MAC-weighted LSQ-noise model calibrated on the paper's \
+                Table III/IV anchors, quoted at their 0.01% resolution");
+        t.note("≻wN = Pareto-dominates the uniform wN baseline on (Top-5*, fps, wt MB)");
+        t
+    }
+}
+
+fn evaluate(
+    name: String,
+    assignment: Assignment,
+    uniform_wq: Option<u32>,
+    base: &Cnn,
+    cfg: &RunConfig,
+    model: &SensitivityModel,
+    cache: &DseCache,
+) -> PlannedPoint {
+    let cnn = assignment.apply(base);
+    let report = dse::explore_cached(&cnn, cfg, cache);
+    let best = report.best_outcome();
+    PlannedPoint {
+        name,
+        proxy_top1: model.proxy_top1(&assignment),
+        proxy_top5: model.proxy_top5(&assignment),
+        fps: best.sim.fps,
+        k: best.k,
+        dims: best.array.dims,
+        mj_per_frame: best.sim.e_total_mj(),
+        footprint: PlanFootprint::of(&cnn),
+        assignment,
+        uniform_wq,
+        dominates: Vec::new(),
+    }
+}
+
+/// Run the full planner: search the assignment space, evaluate through the
+/// cached DSE, and return the Pareto frontier plus the uniform baselines.
+pub fn plan(base: &Cnn, cfg: &RunConfig, pcfg: &PlannerConfig) -> Result<PlanReport> {
+    let model = SensitivityModel::build(base, &pcfg.family, pcfg.alpha, &pcfg.wq_choices)?;
+    let mut candidates = frontier::enumerate_assignments(base, &model, pcfg);
+    let enumerated = candidates.len();
+    candidates.retain(|a| a.uniform_wq(base).is_none());
+    if let Some(min) = pcfg.min_top5 {
+        candidates.retain(|a| model.proxy_top5(a) >= min);
+    }
+    // Footprint is computable from the assignment alone, so gate here —
+    // before thinning — rather than waste DSE evaluations on over-budget
+    // candidates (a final exact retain below catches channel-rounding
+    // stragglers).
+    if let Some(limit) = pcfg.max_footprint_mb {
+        candidates.retain(|a| a.weight_mb(base) <= limit);
+    }
+    let candidates = frontier::thin_candidates(candidates, &model, pcfg.max_evals);
+
+    // Planner-local DSE cache: candidate CNNs are one-shot, so keep them
+    // from churning the process-global serving cache.
+    let cache = DseCache::new();
+    let mut mixed: Vec<PlannedPoint> = candidates
+        .into_iter()
+        .enumerate()
+        .map(|(i, a)| evaluate(format!("mp{i}"), a, None, base, cfg, &model, &cache))
+        .collect();
+    let evaluated = mixed.len();
+    if let Some(limit) = pcfg.max_footprint_mb {
+        mixed.retain(|p| p.footprint.weight_mb <= limit);
+    }
+
+    let uniforms: Vec<PlannedPoint> = pcfg
+        .bits_menu()
+        .into_iter()
+        .map(|wq| {
+            evaluate(
+                format!("w{wq}"),
+                Assignment::uniform(base, wq),
+                Some(wq),
+                base,
+                cfg,
+                &model,
+                &cache,
+            )
+        })
+        .collect();
+
+    // Dominance bookkeeping: which uniform baselines does each mixed plan
+    // Pareto-dominate?
+    for p in &mut mixed {
+        p.dominates = uniforms
+            .iter()
+            .filter(|u| dominates(&p.triple(), &u.triple()))
+            .filter_map(|u| u.uniform_wq)
+            .collect();
+    }
+
+    // Frontier over the union.
+    let mut all: Vec<PlannedPoint> = mixed;
+    all.extend(uniforms.iter().cloned());
+    let triples: Vec<Triple> = all.iter().map(|p| p.triple()).collect();
+    let keep = pareto_indices(&triples);
+    let mut frontier: Vec<PlannedPoint> = keep.into_iter().map(|i| all[i].clone()).collect();
+    frontier.sort_by(|a, b| {
+        b.proxy_top5
+            .total_cmp(&a.proxy_top5)
+            .then(b.fps.total_cmp(&a.fps))
+    });
+
+    Ok(PlanReport {
+        cnn_name: base.name.clone(),
+        family: pcfg.family.clone(),
+        frontier,
+        uniforms,
+        enumerated,
+        evaluated,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::resnet;
+
+    #[test]
+    fn assignment_uniform_and_describe() {
+        let base = resnet::resnet18();
+        let a = Assignment::uniform(&base, 2);
+        assert_eq!(a.uniform_wq(&base), Some(2));
+        assert_eq!(a.describe(&base), "w2");
+        assert_eq!(a.groups[0][0].wq, 8, "conv1 pinned");
+        assert_eq!(a.groups.last().unwrap()[0].wq, 8, "fc pinned");
+
+        let mut b = a.clone();
+        let fat = (0..base.layers.len())
+            .filter(|&i| !pinned(&base, i))
+            .max_by_key(|&i| base.layers[i].params())
+            .unwrap();
+        b.groups[fat] = vec![ChannelGroup { wq: 1, fraction: 1.0 }];
+        assert_eq!(b.uniform_wq(&base), None);
+        let d = b.describe(&base);
+        assert!(d.starts_with("w2; ") && d.contains("→w1"), "{d}");
+    }
+
+    #[test]
+    fn assignment_apply_matches_with_uniform_wq() {
+        let base = resnet::resnet_small(1, 10);
+        let a = Assignment::uniform(&base, 4);
+        assert_eq!(
+            a.apply(&base).fingerprint(),
+            base.clone().with_uniform_wq(4).fingerprint()
+        );
+    }
+
+    #[test]
+    fn planner_config_tracks_run_config_bits() {
+        let cfg = RunConfig { weight_bits: vec![2, 4], ..RunConfig::default() };
+        let p = PlannerConfig::for_config(&cfg);
+        assert_eq!(p.wq_choices, vec![2, 4]);
+    }
+}

@@ -1,0 +1,251 @@
+//! Quantization-sensitivity accuracy proxy.
+//!
+//! Per-layer model: quantizing layer `l` to word-length `w` injects noise
+//! with power `n(w)` per weight (LSQ MSE on a fixed reference distribution,
+//! [`crate::quant::lsq::reference_noise_power`]); the layer's impact weight
+//! is `s_l ∝ MACs_l · (p̄ / params_l)^α` — each weight's error is counted
+//! once per MAC it feeds, attenuated by over-parameterization (layers with
+//! many parameters average out more independent noise terms; `α` is the
+//! redundancy exponent, default 1.0 — see EXPERIMENTS.md §Planner). The
+//! aggregate noise of an assignment is the `s`-weighted mean of its
+//! per-layer (fraction-weighted, for channel groups) noise powers.
+//!
+//! Aggregate noise maps to Top-1/Top-5 percent by piecewise-linear
+//! interpolation through the paper's uniform-`w_Q` anchors
+//! ([`crate::report::paper::accuracy_anchors`], Table III + the Table IV/V
+//! 8-bit rows): a uniform assignment's aggregate noise is exactly `n(w_Q)`,
+//! so the proxy reproduces every anchor bit-for-bit by construction, and
+//! mixed assignments interpolate between them. Proxies are quoted at the
+//! anchors' own resolution (0.01%); differences below that are not
+//! meaningful under this calibration.
+
+use super::Assignment;
+use crate::cnn::Cnn;
+use crate::quant::lsq::reference_noise_power;
+use crate::report::paper;
+use crate::util::error::Result;
+
+/// The calibrated proxy for one (base CNN, accuracy family) pair.
+#[derive(Clone, Debug)]
+pub struct SensitivityModel {
+    /// Per-layer sensitivity weights over the base CNN, normalized to sum 1
+    /// (0 for the pinned first/last/FC layers).
+    weights: Vec<f64>,
+    /// `(bits, noise power)` menu, ascending bits.
+    noise: Vec<(u32, f64)>,
+    /// `(aggregate noise, top1, top5)` anchors, ascending noise.
+    anchors: Vec<(f64, f64, f64)>,
+}
+
+impl SensitivityModel {
+    /// Build and calibrate the model. `family` names the paper's accuracy
+    /// tables (e.g. `"ResNet-18"`); `wq_menu` lists every word-length the
+    /// search may assign. Fails when the paper has no anchors for `family`.
+    pub fn build(base: &Cnn, family: &str, alpha: f64, wq_menu: &[u32]) -> Result<SensitivityModel> {
+        assert!(alpha >= 0.0, "redundancy exponent must be non-negative");
+        let n_layers = base.layers.len();
+        let inner: Vec<usize> = (0..n_layers).filter(|&i| !super::pinned(base, i)).collect();
+        if inner.is_empty() {
+            return Err(crate::anyhow!("CNN '{}' has no inner layers to plan", base.name));
+        }
+        let p_bar = inner
+            .iter()
+            .map(|&i| base.layers[i].params() as f64)
+            .sum::<f64>()
+            / inner.len() as f64;
+        let mut weights = vec![0.0; n_layers];
+        for &i in &inner {
+            let l = &base.layers[i];
+            weights[i] = l.macs() as f64 * (p_bar / (l.params() as f64).max(1.0)).powf(alpha);
+        }
+        let total: f64 = weights.iter().sum();
+        for w in &mut weights {
+            *w /= total;
+        }
+
+        if let Some(bad) = wq_menu.iter().find(|b| !(1..=8).contains(*b)) {
+            return Err(crate::anyhow!(
+                "word-length menu entry {bad} is outside the supported 1..=8 bit range"
+            ));
+        }
+        let mut bits: Vec<u32> = wq_menu.to_vec();
+        bits.extend([1, 2, 4, 8]);
+        bits.sort_unstable();
+        bits.dedup();
+        let noise: Vec<(u32, f64)> = bits.iter().map(|&b| (b, reference_noise_power(b))).collect();
+        let np = |b: u32| noise.iter().find(|(bb, _)| *bb == b).unwrap().1;
+
+        // Anchors: a uniform-wq assignment aggregates to exactly n(wq).
+        let mut anchors: Vec<(f64, f64, f64)> = paper::accuracy_anchors(family)
+            .into_iter()
+            .filter(|(wq, _, _)| (1..=8).contains(wq))
+            .map(|(wq, t1, t5)| (np(wq), t1, t5))
+            .collect();
+        // Families without an 8-bit row (ResNet-50) get their low-noise
+        // anchor from the FP32 baseline at zero noise.
+        if !anchors.iter().any(|(x, _, _)| *x <= np(8)) {
+            if let (Some(t1), Some(t5)) =
+                (paper::top1_accuracy(family, 0), paper::top5_accuracy(family, 0))
+            {
+                anchors.push((0.0, t1, t5));
+            }
+        }
+        anchors.sort_by(|a, b| a.0.total_cmp(&b.0));
+        if anchors.len() < 2 {
+            return Err(crate::anyhow!(
+                "no paper accuracy anchors for family '{family}' (try ResNet-18/50/152)"
+            ));
+        }
+        Ok(SensitivityModel { weights, noise, anchors })
+    }
+
+    /// Noise power of one word-length from the model's menu (computes on
+    /// the fly for bits outside it).
+    pub fn noise_power(&self, bits: u32) -> f64 {
+        self.noise
+            .iter()
+            .find(|(b, _)| *b == bits)
+            .map(|(_, n)| *n)
+            .unwrap_or_else(|| reference_noise_power(bits))
+    }
+
+    /// Normalized sensitivity weight of layer `i` of the base CNN.
+    pub fn weight(&self, i: usize) -> f64 {
+        self.weights[i]
+    }
+
+    /// Sensitivity-weighted mean noise power of an assignment (channel
+    /// groups contribute fraction-weighted).
+    pub fn aggregate_noise(&self, a: &Assignment) -> f64 {
+        assert_eq!(a.groups.len(), self.weights.len(), "assignment/base mismatch");
+        let mut acc = 0.0;
+        for (groups, &w) in a.groups.iter().zip(&self.weights) {
+            if w == 0.0 {
+                continue;
+            }
+            let layer_noise: f64 = groups
+                .iter()
+                .map(|g| g.fraction * self.noise_power(g.wq))
+                .sum();
+            acc += w * layer_noise;
+        }
+        acc
+    }
+
+    /// Proxy Top-5 percent, at the anchors' 0.01 resolution.
+    pub fn proxy_top5(&self, a: &Assignment) -> f64 {
+        round2(self.interp(self.aggregate_noise(a), |(_, _, t5)| *t5))
+    }
+
+    /// Proxy Top-1 percent, at the anchors' 0.01 resolution.
+    pub fn proxy_top1(&self, a: &Assignment) -> f64 {
+        round2(self.interp(self.aggregate_noise(a), |(_, t1, _)| *t1))
+    }
+
+    fn interp(&self, x: f64, pick: fn(&(f64, f64, f64)) -> f64) -> f64 {
+        let first = &self.anchors[0];
+        let last = &self.anchors[self.anchors.len() - 1];
+        if x <= first.0 {
+            return pick(first);
+        }
+        if x >= last.0 {
+            return pick(last);
+        }
+        for pair in self.anchors.windows(2) {
+            let (x0, x1) = (pair[0].0, pair[1].0);
+            if x >= x0 && x <= x1 {
+                let t = if x1 > x0 { (x - x0) / (x1 - x0) } else { 0.0 };
+                return pick(&pair[0]) + t * (pick(&pair[1]) - pick(&pair[0]));
+            }
+        }
+        pick(last)
+    }
+}
+
+fn round2(x: f64) -> f64 {
+    (x * 100.0).round() / 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::resnet;
+
+    fn model() -> SensitivityModel {
+        SensitivityModel::build(&resnet::resnet18(), "ResNet-18", 1.0, &[1, 2, 4, 8]).unwrap()
+    }
+
+    #[test]
+    fn uniform_assignments_reproduce_the_paper_anchors() {
+        let base = resnet::resnet18();
+        let m = model();
+        for (wq, want) in [(1u32, 65.29), (2, 87.48), (4, 89.10), (8, 89.62)] {
+            let a = Assignment::uniform(&base, wq);
+            assert_eq!(m.proxy_top5(&a), want, "w{wq}");
+        }
+        let a4 = Assignment::uniform(&base, 4);
+        assert_eq!(m.proxy_top1(&a4), 69.75);
+    }
+
+    #[test]
+    fn aggregate_noise_monotone_in_assignment_bits() {
+        let base = resnet::resnet18();
+        let m = model();
+        let n8 = m.aggregate_noise(&Assignment::uniform(&base, 8));
+        let n4 = m.aggregate_noise(&Assignment::uniform(&base, 4));
+        let n1 = m.aggregate_noise(&Assignment::uniform(&base, 1));
+        assert!(n8 < n4 && n4 < n1, "{n8} {n4} {n1}");
+        // A mixed plan lands strictly between its bracketing uniforms.
+        let mut mixed = Assignment::uniform(&base, 4);
+        let fat = (0..base.layers.len())
+            .filter(|&i| !super::super::pinned(&base, i))
+            .max_by_key(|&i| base.layers[i].params())
+            .unwrap();
+        mixed.groups[fat] = vec![crate::cnn::ChannelGroup { wq: 2, fraction: 1.0 }];
+        let nm = m.aggregate_noise(&mixed);
+        let n2 = m.aggregate_noise(&Assignment::uniform(&base, 2));
+        assert!(nm > n4 && nm < n2, "{n4} {nm} {n2}");
+    }
+
+    #[test]
+    fn fat_layer_demotion_costs_less_than_thin_layer_demotion() {
+        // The redundancy discount: demoting the biggest-parameter inner
+        // layer adds less aggregate noise than demoting an early thin one
+        // with comparable MACs — the asymmetry the planner exploits.
+        let base = resnet::resnet18();
+        let m = model();
+        let inner: Vec<usize> =
+            (0..base.layers.len()).filter(|&i| !super::super::pinned(&base, i)).collect();
+        let fat = *inner.iter().max_by_key(|&&i| base.layers[i].params()).unwrap();
+        let thin = *inner.iter().min_by_key(|&&i| base.layers[i].params()).unwrap();
+        let demote = |i: usize| {
+            let mut a = Assignment::uniform(&base, 8);
+            a.groups[i] = vec![crate::cnn::ChannelGroup { wq: 4, fraction: 1.0 }];
+            m.aggregate_noise(&a)
+        };
+        assert!(demote(fat) < demote(thin));
+    }
+
+    #[test]
+    fn resnet50_calibrates_via_fp32_anchor() {
+        let base = resnet::resnet50();
+        let m = SensitivityModel::build(&base, "ResNet-50", 1.0, &[1, 2, 4, 8]).unwrap();
+        assert_eq!(m.proxy_top5(&Assignment::uniform(&base, 2)), 92.24);
+        // Quieter than the 4-bit anchor interpolates toward the FP32 row.
+        let t8 = m.proxy_top5(&Assignment::uniform(&base, 8));
+        assert!(t8 >= 92.93 && t8 <= 93.07, "{t8}");
+    }
+
+    #[test]
+    fn unknown_family_is_an_error() {
+        assert!(SensitivityModel::build(&resnet::resnet18(), "VGG-16", 1.0, &[2]).is_err());
+    }
+
+    #[test]
+    fn out_of_range_menu_is_an_error_not_a_panic() {
+        // `plan --bits 2,4,16` must surface as a clean error.
+        let r = SensitivityModel::build(&resnet::resnet18(), "ResNet-18", 1.0, &[2, 4, 16]);
+        assert!(r.unwrap_err().to_string().contains("1..=8"));
+        assert!(SensitivityModel::build(&resnet::resnet18(), "ResNet-18", 1.0, &[0]).is_err());
+    }
+}

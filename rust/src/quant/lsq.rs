@@ -113,6 +113,20 @@ impl Quantizer {
     }
 }
 
+/// Quantization-noise power of an LSQ-initialized `bits`-wide signed weight
+/// quantizer over a fixed standard-normal reference sample (deterministic:
+/// seeded through [`crate::util::rng`]). This is the per-weight noise term
+/// the planner's sensitivity model aggregates — the *relative* MSE across
+/// word-lengths is what matters; the absolute scale cancels against the
+/// Table III calibration anchors (see `planner::sensitivity`).
+pub fn reference_noise_power(bits: u32) -> f64 {
+    assert!((1..=8).contains(&bits), "weight word-lengths are 1..=8 bit");
+    let mut rng = crate::util::rng::Rng::new(0x5EED_11);
+    let sample: Vec<f64> = (0..4096).map(|_| rng.normal()).collect();
+    let q = Quantizer::init_from_data(QuantParams::weights(bits), &sample);
+    q.mse(&sample)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -221,6 +235,25 @@ mod tests {
                 "quantization must be monotone",
             )
         });
+    }
+
+    #[test]
+    fn reference_noise_power_monotone_and_deterministic() {
+        // More bits -> strictly less quantization noise, and the sample is
+        // fixed so repeated calls agree bit-for-bit (the planner's DP relies
+        // on both).
+        let powers: Vec<f64> = [1u32, 2, 3, 4, 8]
+            .iter()
+            .map(|&b| reference_noise_power(b))
+            .collect();
+        for w in powers.windows(2) {
+            assert!(w[0] > w[1], "noise must fall with bits: {powers:?}");
+        }
+        assert!(powers.iter().all(|p| *p > 0.0));
+        assert_eq!(
+            reference_noise_power(2).to_bits(),
+            reference_noise_power(2).to_bits()
+        );
     }
 
     #[test]

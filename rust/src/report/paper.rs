@@ -112,13 +112,80 @@ pub const HEADLINE_ENERGY_REDUCTION: f64 = 6.36;
 /// accuracies; our small-scale QAT provides the ordering check, see
 /// EXPERIMENTS.md).
 pub fn top5_accuracy(cnn: &str, wq: u32) -> Option<f64> {
+    accuracy(cnn, wq).map(|(_, top5)| top5)
+}
+
+/// Top-1 companion of [`top5_accuracy`] (same anchor lineage).
+pub fn top1_accuracy(cnn: &str, wq: u32) -> Option<f64> {
+    accuracy(cnn, wq).map(|(top1, _)| top1)
+}
+
+fn accuracy(cnn: &str, wq: u32) -> Option<(f64, f64)> {
     if let Some(r) = TABLE3.iter().find(|r| r.cnn == cnn && r.wq == wq) {
-        return Some(r.top5);
+        return Some((r.top1, r.top5));
     }
-    // Table III stops at wq=4; Table IV (ResNet-18 only) adds the wq=8
-    // point, which the serving layer's routing profiles need.
+    // Table III stops at wq=4; Table IV (ResNet-18 only) and Table V
+    // (ResNet-152 only) add the wq=8 points, which the serving layer's
+    // routing profiles and the planner's calibration need.
     if cnn == "ResNet-18" {
-        return TABLE4.iter().find(|c| c.wq == wq).map(|c| c.top5);
+        return TABLE4.iter().find(|c| c.wq == wq).map(|c| (c.top1, c.top5));
+    }
+    if cnn == "ResNet-152" && wq == 8 {
+        return TABLE5_OURS
+            .iter()
+            .find(|r| r.cnn == cnn && r.wq == wq)
+            .map(|r| (r.top1, r.top5));
+    }
+    None
+}
+
+/// The paper's quantized uniform-`wq` accuracy anchors for `cnn`, as
+/// `(wq, top1, top5)` sorted by ascending word-length. Single source for
+/// the interpolation helpers below and `planner::sensitivity`.
+pub fn accuracy_anchors(cnn: &str) -> Vec<(u32, f64, f64)> {
+    let mut out = Vec::new();
+    for wq in [1u32, 2, 4, 8] {
+        if let Some((t1, t5)) = accuracy(cnn, wq) {
+            out.push((wq, t1, t5));
+        }
+    }
+    out
+}
+
+/// Top-5 at a (possibly fractional) word-length, piecewise-linearly
+/// interpolated between the uniform anchors on a log2(w_Q) axis and clamped
+/// outside the anchored range. Exact at the anchors; `None` when the paper
+/// has no rows for `cnn`. This is what channel-wise routing profiles use
+/// instead of the exact-anchor lookup (a `w_Q = 3` channel group previously
+/// had no accuracy estimate at all).
+pub fn top5_interpolated(cnn: &str, wq: f64) -> Option<f64> {
+    interpolate(cnn, wq, |(_, _, t5)| t5)
+}
+
+/// Top-1 companion of [`top5_interpolated`].
+pub fn top1_interpolated(cnn: &str, wq: f64) -> Option<f64> {
+    interpolate(cnn, wq, |(_, t1, _)| t1)
+}
+
+fn interpolate(cnn: &str, wq: f64, pick: fn(&(u32, f64, f64)) -> f64) -> Option<f64> {
+    if !wq.is_finite() || wq <= 0.0 {
+        return None;
+    }
+    let anchors = accuracy_anchors(cnn);
+    let (first, last) = (anchors.first()?, anchors.last()?);
+    let x = wq.log2();
+    if x <= (first.0 as f64).log2() {
+        return Some(pick(first));
+    }
+    if x >= (last.0 as f64).log2() {
+        return Some(pick(last));
+    }
+    for pair in anchors.windows(2) {
+        let (x0, x1) = ((pair[0].0 as f64).log2(), (pair[1].0 as f64).log2());
+        if x >= x0 && x <= x1 {
+            let t = (x - x0) / (x1 - x0);
+            return Some(pick(&pair[0]) + t * (pick(&pair[1]) - pick(&pair[0])));
+        }
     }
     None
 }
@@ -171,6 +238,29 @@ mod tests {
         // The Table IV extension point (serving profiles for wq=8).
         assert_eq!(top5_accuracy("ResNet-18", 8), Some(89.62));
         assert_eq!(top5_accuracy("ResNet-50", 8), None);
+    }
+
+    #[test]
+    fn interpolation_exact_at_anchors_and_monotone_between() {
+        // Exact at every anchor word-length.
+        for (wq, t1, t5) in accuracy_anchors("ResNet-18") {
+            assert_eq!(top5_interpolated("ResNet-18", wq as f64), Some(t5));
+            assert_eq!(top1_interpolated("ResNet-18", wq as f64), Some(t1));
+        }
+        // A w_Q = 3 channel group now has an estimate, strictly between the
+        // 2- and 4-bit anchors.
+        let t3 = top5_interpolated("ResNet-18", 3.0).unwrap();
+        assert!(t3 > 87.48 && t3 < 89.10, "{t3}");
+        // Clamped outside the anchored range; rejects nonsense.
+        assert_eq!(top5_interpolated("ResNet-18", 16.0), Some(89.62));
+        assert_eq!(top5_interpolated("ResNet-18", 0.5), Some(65.29));
+        assert_eq!(top5_interpolated("ResNet-18", 0.0), None);
+        assert_eq!(top5_interpolated("VGG", 3.0), None);
+        // ResNet-152 gets its 8-bit anchor from Table V.
+        assert_eq!(top5_accuracy("ResNet-152", 8), Some(93.96));
+        assert_eq!(top1_accuracy("ResNet-152", 8), Some(78.17));
+        // ResNet-50 has no 8-bit row: interpolation clamps at wq=4.
+        assert_eq!(top5_interpolated("ResNet-50", 8.0), Some(93.07));
     }
 
     #[test]

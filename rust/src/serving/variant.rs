@@ -3,7 +3,7 @@
 //! point it occupies on the paper's accuracy–throughput curve, with the
 //! throughput side pulled from the cached holistic DSE.
 
-use crate::cnn::{apply_channelwise, ChannelGroup, Cnn};
+use crate::cnn::{apply_channelwise, channelwise::apply_plan, ChannelGroup, Cnn};
 use crate::config::RunConfig;
 use crate::dse;
 
@@ -14,8 +14,13 @@ pub struct VariantSpec {
     pub name: String,
     /// Uniform inner-layer weight word-length, if uniform.
     pub wq: Option<u32>,
-    /// Channel-wise word-length groups (empty for uniform variants).
+    /// Channel-wise word-length groups (empty for uniform variants),
+    /// applied to every inner layer.
     pub channelwise: Vec<ChannelGroup>,
+    /// Planner-emitted per-layer plan: one group list per layer of the base
+    /// CNN (empty unless the variant came from `planner::emit`). Takes
+    /// precedence over `wq`/`channelwise` when non-empty.
+    pub layerwise: Vec<Vec<ChannelGroup>>,
 }
 
 impl VariantSpec {
@@ -25,6 +30,7 @@ impl VariantSpec {
             name: format!("w{wq}"),
             wq: Some(wq),
             channelwise: Vec::new(),
+            layerwise: Vec::new(),
         }
     }
 
@@ -34,6 +40,19 @@ impl VariantSpec {
             name: name.into(),
             wq: None,
             channelwise: groups,
+            layerwise: Vec::new(),
+        }
+    }
+
+    /// Planner-emitted variant with an explicit per-layer plan (see
+    /// [`crate::planner`]); `per_layer` must have one entry per base-CNN
+    /// layer.
+    pub fn planned(name: impl Into<String>, per_layer: Vec<Vec<ChannelGroup>>) -> VariantSpec {
+        VariantSpec {
+            name: name.into(),
+            wq: None,
+            channelwise: Vec::new(),
+            layerwise: per_layer,
         }
     }
 
@@ -46,7 +65,9 @@ impl VariantSpec {
     /// Quantize `base` according to this spec (the CNN the DSE and the
     /// virtual-clock simulation run on).
     pub fn apply(&self, base: &Cnn) -> Cnn {
-        if self.channelwise.is_empty() {
+        if !self.layerwise.is_empty() {
+            apply_plan(base, &self.layerwise)
+        } else if self.channelwise.is_empty() {
             base.clone().with_uniform_wq(self.wq.unwrap_or(8))
         } else {
             apply_channelwise(base, &self.channelwise)
@@ -54,15 +75,22 @@ impl VariantSpec {
     }
 
     /// Estimated Top-5 accuracy in percent from the paper's tables for
-    /// `family` (e.g. `"ResNet-18"`); channel-wise specs interpolate by
-    /// channel fraction. `None` when the paper has no number for a group.
+    /// `family` (e.g. `"ResNet-18"`); channel-wise groups use the anchor
+    /// interpolation of [`crate::report::paper::top5_interpolated`]
+    /// (fraction-weighted), so non-anchor word-lengths like `w_Q = 3`
+    /// resolve too. `None` when the paper has no rows for the family, or
+    /// for planner-emitted layerwise specs (their profiles carry the
+    /// planner's calibrated proxy instead).
     pub fn estimated_top5(&self, family: &str) -> Option<f64> {
+        if !self.layerwise.is_empty() {
+            return None;
+        }
         if self.channelwise.is_empty() {
             return paper_top5(family, self.wq?);
         }
         let mut acc = 0.0;
         for g in &self.channelwise {
-            acc += g.fraction * paper_top5(family, g.wq)?;
+            acc += g.fraction * crate::report::paper::top5_interpolated(family, g.wq as f64)?;
         }
         Some(acc)
     }
@@ -131,6 +159,45 @@ mod tests {
         );
         let acc = s.estimated_top5("ResNet-18").unwrap();
         assert!((acc - (87.48 + 89.10) / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn channelwise_non_anchor_wq_interpolates() {
+        // A 3-bit group previously had no accuracy estimate (nearest-anchor
+        // lookup returned None); it now interpolates between w2 and w4.
+        let s = VariantSpec::channelwise(
+            "mix38",
+            vec![
+                ChannelGroup { wq: 3, fraction: 0.5 },
+                ChannelGroup { wq: 8, fraction: 0.5 },
+            ],
+        );
+        let acc = s.estimated_top5("ResNet-18").unwrap();
+        let t3 = crate::report::paper::top5_interpolated("ResNet-18", 3.0).unwrap();
+        assert!((acc - (t3 + 89.62) / 2.0).abs() < 1e-9, "{acc}");
+        assert!(acc > 87.48 && acc < 89.62);
+    }
+
+    #[test]
+    fn planned_spec_applies_per_layer() {
+        let base = resnet::resnet_small(1, 10);
+        let n = base.layers.len();
+        let per_layer: Vec<Vec<ChannelGroup>> = (0..n)
+            .map(|i| {
+                let wq = if i == 0 || i == n - 1 { 8 } else { 2 };
+                vec![ChannelGroup { wq, fraction: 1.0 }]
+            })
+            .collect();
+        let spec = VariantSpec::planned("mp0", per_layer);
+        assert_eq!(spec.name, "mp0");
+        let cnn = spec.apply(&base);
+        assert_eq!(
+            cnn.fingerprint(),
+            base.clone().with_uniform_wq(2).fingerprint(),
+            "an all-uniform plan must lower to the same CNN as with_uniform_wq"
+        );
+        // Layerwise specs carry no table-lineage estimate of their own.
+        assert_eq!(spec.estimated_top5("ResNet-18"), None);
     }
 
     #[test]

@@ -1,0 +1,145 @@
+//! Planner integration: the frontier is a real Pareto set, the uniform
+//! variants never sit above it, at least one mixed plan Pareto-dominates a
+//! uniform baseline (the acceptance criterion behind `mpcnn plan`), and the
+//! emitted family round-trips through `serving::ServerBuilder`.
+
+use mpcnn::cnn::resnet;
+use mpcnn::config::RunConfig;
+use mpcnn::planner::{dominates, emit_variants, mock_family_server, plan, PlannerConfig};
+use mpcnn::serving::{InferRequest, VariantSelector};
+
+/// Full-size ResNet-18 plan at the default budgets — shared by the
+/// frontier-shape and domination tests. Computed once per test binary via
+/// `OnceLock` (the DSE evaluations are the expensive part; #[test] fns
+/// share nothing otherwise).
+fn resnet18_report() -> &'static (mpcnn::cnn::Cnn, mpcnn::planner::PlanReport) {
+    static REPORT: std::sync::OnceLock<(mpcnn::cnn::Cnn, mpcnn::planner::PlanReport)> =
+        std::sync::OnceLock::new();
+    REPORT.get_or_init(|| {
+        let base = resnet::resnet18();
+        let cfg = RunConfig::default();
+        let pcfg = PlannerConfig { max_evals: 10, ..PlannerConfig::default() };
+        let report = plan(&base, &cfg, &pcfg).expect("planner must run on ResNet-18");
+        (base, report)
+    })
+}
+
+#[test]
+fn frontier_is_mutually_nondominated_and_uniforms_never_sit_above_it() {
+    let (_base, report) = resnet18_report();
+    assert!(report.frontier.len() >= 2, "frontier has {} points", report.frontier.len());
+
+    // Mutual non-domination.
+    for a in &report.frontier {
+        for b in &report.frontier {
+            if a.name != b.name {
+                assert!(
+                    !dominates(&a.triple(), &b.triple()),
+                    "frontier point {} dominates frontier point {}",
+                    a.name,
+                    b.name
+                );
+            }
+        }
+    }
+
+    // No uniform baseline may dominate any frontier point ("uniforms are
+    // never above the planned frontier").
+    for u in &report.uniforms {
+        for p in &report.frontier {
+            if u.name != p.name {
+                assert!(
+                    !dominates(&u.triple(), &p.triple()),
+                    "uniform {} dominates planned frontier point {}",
+                    u.name,
+                    p.name
+                );
+            }
+        }
+    }
+
+    // The proxy reproduces the paper anchors on the uniform baselines.
+    for (wq, want) in [(1u32, 65.29), (2, 87.48), (4, 89.10), (8, 89.62)] {
+        let u = report.uniforms.iter().find(|u| u.uniform_wq == Some(wq)).unwrap();
+        assert_eq!(u.proxy_top5, want, "w{wq} proxy drifted from its anchor");
+    }
+}
+
+#[test]
+fn a_mixed_plan_dominates_a_uniform_variant() {
+    // The acceptance criterion: at least one mixed-precision plan
+    // Pareto-dominates a uniform-wq variant on the
+    // (proxy-accuracy, fps, footprint) triple — with *strictly* better
+    // throughput and footprint (accuracy ties at the anchors' 0.01
+    // resolution are allowed; a monotone proxy cannot strictly beat the
+    // quietest uniform anchor by construction).
+    let (_base, report) = resnet18_report();
+    let strong = report.frontier.iter().find(|p| {
+        p.uniform_wq.is_none()
+            && report.uniforms.iter().any(|u| {
+                dominates(&p.triple(), &u.triple())
+                    && p.fps > u.fps
+                    && p.footprint.weight_mb < u.footprint.weight_mb
+            })
+    });
+    assert!(
+        strong.is_some(),
+        "no mixed plan dominates a uniform variant with strict fps+footprint wins; frontier: {:?}",
+        report
+            .frontier
+            .iter()
+            .map(|p| (p.name.clone(), p.proxy_top5, p.fps, p.footprint.weight_mb))
+            .collect::<Vec<_>>()
+    );
+    // And the bookkeeping the CLI prints agrees.
+    assert!(!report.dominating_points().is_empty());
+}
+
+#[test]
+fn emitted_family_registers_and_routes_through_the_gateway() {
+    // Small topology + tiny budget: the emit -> ServerBuilder round-trip.
+    let base = resnet::resnet_small(1, 10);
+    let cfg = RunConfig { slices: vec![1, 2], ..RunConfig::default() };
+    let pcfg = PlannerConfig {
+        wq_choices: vec![2, 4, 8],
+        beam_width: 12,
+        max_evals: 5,
+        ..PlannerConfig::default()
+    };
+    let report = plan(&base, &cfg, &pcfg).unwrap();
+    let variants = emit_variants(&report);
+    assert_eq!(variants.len(), report.frontier.len());
+
+    let image_len = 12;
+    let server = mock_family_server(&report, image_len, 10).unwrap();
+    assert_eq!(server.n_variants(), report.frontier.len());
+
+    // Named routing reaches every planned variant; Default resolves.
+    for p in &report.frontier {
+        let resp = server
+            .infer(
+                InferRequest::new(vec![0.25; image_len])
+                    .with_variant(VariantSelector::Named(p.name.clone())),
+            )
+            .unwrap();
+        assert_eq!(resp.variant, p.name);
+    }
+    let resp = server.infer(InferRequest::new(vec![0.25; image_len])).unwrap();
+    assert!(report.frontier.iter().any(|p| p.name == resp.variant));
+
+    // MinAccuracy routing resolves against the planner-attached profiles:
+    // ask for at least the worst frontier accuracy.
+    let min_acc = report
+        .frontier
+        .iter()
+        .map(|p| p.proxy_top5)
+        .fold(f64::INFINITY, f64::min);
+    let resp = server
+        .infer(
+            InferRequest::new(vec![0.25; image_len])
+                .with_variant(VariantSelector::MinAccuracy(min_acc)),
+        )
+        .unwrap();
+    assert!(report.frontier.iter().any(|p| p.name == resp.variant));
+    server.shutdown();
+}
