@@ -1,0 +1,108 @@
+//! PERF: the xmp sliced-digit kernels — fast path (digit-plane-major,
+//! i32 per-slice partials, scoped-thread row fan-out) vs the scalar
+//! reference kernel (on-the-fly digit extraction per MAC), on the
+//! ResNet-18 layer-1 workload. This is the fast-path-vs-reference
+//! baseline tracked in `BENCH_xmp.json` (EXPERIMENTS.md §Execution);
+//! the two kernels are asserted bit-identical before timing starts.
+//!
+//! Run with `cargo bench --bench xmp` (`MPCNN_BENCH_FAST=1` for smoke).
+
+use mpcnn::cnn::resnet;
+use mpcnn::serving::VariantSpec;
+use mpcnn::util::bench::{black_box, Bencher};
+use mpcnn::util::rng::Rng;
+use mpcnn::xmp::conv::im2col;
+use mpcnn::xmp::gemm::{gemm_codes_i64, gemm_sliced_fast, gemm_sliced_reference};
+use mpcnn::xmp::pack::pack_group;
+use mpcnn::xmp::{pack_model, Requant, XmpBackend, XmpConfig, XmpModel};
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Rng::new(0xBE9C);
+
+    // --- the resnet18 layer-1 workload: layer1.0.conv1, 56x56 map,
+    //     64 -> 64 channels, 3x3/1, w_Q = 4 sliced at k = 2 ---
+    let cnn = resnet::resnet18();
+    let layer = cnn
+        .layers
+        .iter()
+        .find(|l| l.name == "layer1.0.conv1")
+        .expect("resnet18 has layer1.0.conv1");
+    let (wq, k) = (4u32, 2u32);
+    let od = layer.od as usize;
+    let input: Vec<u8> = (0..(layer.ih * layer.ih * layer.iw) as usize)
+        .map(|_| rng.range_i64(0, 255) as u8)
+        .collect();
+    let (lo, hi) = (-(1i64 << (wq - 1)), (1i64 << (wq - 1)) - 1);
+    let kdim = (layer.k * layer.k * layer.iw) as usize;
+    let codes: Vec<i32> = (0..od * kdim)
+        .map(|_| rng.range_i64(lo, hi) as i32)
+        .collect();
+    let requant = vec![Requant::from_scale(0.001); od];
+
+    let (cols, m, kdim2) = im2col(&input, layer.ih, layer.iw, layer.k, layer.s);
+    assert_eq!(kdim, kdim2);
+    println!(
+        "workload {}: M={m} (im2col rows) x kdim={kdim} x od={od}, w{wq} @ k={k} \
+         ({} slices)\n",
+        layer.name,
+        wq.div_ceil(k)
+    );
+
+    let packed = pack_group(&codes, od, kdim, wq, k, requant, vec![1.0; od]);
+
+    // Correctness gate before any timing: the three kernels must agree
+    // bit-for-bit on the full workload.
+    {
+        let truth = gemm_codes_i64(&cols, m, kdim, &codes, od);
+        let refr = gemm_sliced_reference(&cols, m, kdim, &codes, od, wq, k);
+        let fast = gemm_sliced_fast(&cols, m, &packed);
+        assert_eq!(refr, truth, "scalar reference diverged from plain i64");
+        assert_eq!(fast, truth, "fast path diverged from plain i64");
+    }
+
+    b.run("pack/resnet18-layer1-w4k2", || {
+        black_box(pack_group(&codes, od, kdim, wq, k, vec![Requant::from_scale(0.001); od],
+            vec![1.0; od]).planes.len())
+    });
+    b.run("gemm-reference/resnet18-layer1-w4k2", || {
+        black_box(gemm_sliced_reference(&cols, m, kdim, &codes, od, wq, k)[0])
+    });
+    b.run("gemm-fast/resnet18-layer1-w4k2", || {
+        black_box(gemm_sliced_fast(&cols, m, &packed)[0])
+    });
+
+    // --- whole-model forward on the exported ResNet-8 topology (what the
+    //     serving gateway executes per request) ---
+    let base = resnet::resnet_small(1, 10);
+    let plan = VariantSpec::uniform(4).per_layer_plan(&base);
+    let model = XmpModel::synthetic(&base, &plan, XmpConfig::default()).unwrap();
+    let pm = pack_model(&model);
+    let img = vec![0.5f32; model.image_len()];
+    b.run("forward/resnet8-w4-fast", || {
+        black_box(model.forward(&pm, &img, true).unwrap()[0])
+    });
+
+    // --- gateway round trip on an xmp backend (batch 1, direct client) ---
+    let backend = XmpBackend::from_spec(&base, &VariantSpec::uniform(4), XmpConfig::default())
+        .unwrap();
+    let probe = vec![0.25f32; backend.model().image_len()];
+    b.run("backend/resnet8-w4-classify", || {
+        black_box(backend.classify_one(&probe).unwrap())
+    });
+
+    // The acceptance metric: fast-path speedup over the scalar reference
+    // on the layer-1 workload, derivable from BENCH_xmp.json.
+    let mean = |name: &str| {
+        b.results
+            .iter()
+            .find(|r| r.name == name)
+            .map(|r| r.mean_ns)
+            .unwrap_or(f64::NAN)
+    };
+    let speedup = mean("gemm-reference/resnet18-layer1-w4k2")
+        / mean("gemm-fast/resnet18-layer1-w4k2");
+    println!("\nfast-path speedup over scalar reference (resnet18 layer-1): {speedup:.2}x");
+
+    b.finish("xmp");
+}

@@ -19,10 +19,13 @@ pub struct ChannelGroup {
     pub fraction: f64,
 }
 
-/// Split one CONV layer's output channels into word-length groups.
-/// Channel counts are rounded, with the last group absorbing the
-/// remainder so `sum(od_i) == od` exactly.
-pub fn split_layer(layer: &Layer, groups: &[ChannelGroup]) -> Vec<Layer> {
+/// Channel count per group for an `od`-channel layer: rounded shares with
+/// the last group absorbing the remainder, so the counts sum to `od`
+/// exactly (individual entries may round to 0 for vanishing fractions).
+/// Shared by [`split_layer`] and the xmp weight packer
+/// ([`crate::xmp`]) so the schedule-side split and the executed split are
+/// derived by the same arithmetic.
+pub fn group_channel_counts(od: u32, groups: &[ChannelGroup]) -> Vec<u32> {
     assert!(!groups.is_empty());
     // Each fraction must be a positive, finite share on its own: the sum
     // check alone accepted e.g. [1.5, -0.5] (sums to 1) and silently
@@ -44,15 +47,27 @@ pub fn split_layer(layer: &Layer, groups: &[ChannelGroup]) -> Vec<Layer> {
     let mut out = Vec::with_capacity(groups.len());
     let mut assigned = 0u32;
     for (i, g) in groups.iter().enumerate() {
-        let od = if i + 1 == groups.len() {
-            layer.od - assigned
+        let n = if i + 1 == groups.len() {
+            od - assigned
         } else {
-            ((layer.od as f64 * g.fraction).round() as u32).min(layer.od - assigned)
+            ((od as f64 * g.fraction).round() as u32).min(od - assigned)
         };
+        assigned += n;
+        out.push(n);
+    }
+    out
+}
+
+/// Split one CONV layer's output channels into word-length groups.
+/// Channel counts are rounded, with the last group absorbing the
+/// remainder so `sum(od_i) == od` exactly.
+pub fn split_layer(layer: &Layer, groups: &[ChannelGroup]) -> Vec<Layer> {
+    let counts = group_channel_counts(layer.od, groups);
+    let mut out = Vec::with_capacity(groups.len());
+    for (g, &od) in groups.iter().zip(&counts) {
         if od == 0 {
             continue;
         }
-        assigned += od;
         let mut l = layer.clone();
         l.od = od;
         l.wq = g.wq;
@@ -270,6 +285,23 @@ mod tests {
                 "params conserved",
             )
         });
+    }
+
+    #[test]
+    fn counts_match_split_layer() {
+        // The packer-facing counts and the schedule-facing split must be the
+        // same arithmetic: non-zero counts line up with the split sub-layers.
+        let l = Layer::conv("c", 28, 16, 37, 3, 1);
+        let groups = vec![
+            ChannelGroup { wq: 2, fraction: 0.61 },
+            ChannelGroup { wq: 4, fraction: 0.38 },
+            ChannelGroup { wq: 8, fraction: 0.01 },
+        ];
+        let counts = group_channel_counts(l.od, &groups);
+        assert_eq!(counts.iter().sum::<u32>(), l.od);
+        let split_ods: Vec<u32> = split_layer(&l, &groups).iter().map(|p| p.od).collect();
+        let nonzero: Vec<u32> = counts.iter().copied().filter(|&c| c > 0).collect();
+        assert_eq!(split_ods, nonzero);
     }
 
     #[test]

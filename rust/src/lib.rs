@@ -13,22 +13,23 @@
 //!   ([`pe`], [`array`], [`dataflow`], [`dse`]), the FPGA accelerator
 //!   simulator ([`sim`], [`energy`]), the precision [`planner`] that
 //!   searches layer/channel-wise word-length assignments and emits the
-//!   Pareto variant family, and a multi-variant serving gateway
+//!   Pareto variant family, the [`xmp`] truly-mixed-precision execution
+//!   engine (a software PE array whose inner MAC is the sliced-digit
+//!   datapath of Fig 1b), and a multi-variant serving gateway
 //!   ([`serving`]) that batches requests and routes them across
-//!   mixed-precision model variants, executing the AOT artifacts via PJRT
-//!   ([`runtime`]). The old single-variant [`coordinator`] survives as a
-//!   shim over [`serving`].
+//!   mixed-precision model variants — executing AOT artifacts via PJRT
+//!   ([`runtime`]) when available, the xmp engine otherwise.
 //!
 //! Start at [`dse`] for the headline methodology, [`sim`] for the
 //! system-level model behind Table IV / Fig 9, [`planner`] for the
-//! automated precision assignment, or [`serving`] for the trade-off curve
-//! deployed as a request router.
+//! automated precision assignment, [`xmp`] for the executable sliced-digit
+//! kernels, or [`serving`] for the trade-off curve deployed as a request
+//! router.
 
 pub mod array;
 pub mod baselines;
 pub mod cnn;
 pub mod config;
-pub mod coordinator;
 pub mod dataflow;
 pub mod dse;
 pub mod energy;
@@ -40,3 +41,4 @@ pub mod runtime;
 pub mod serving;
 pub mod sim;
 pub mod util;
+pub mod xmp;

@@ -13,6 +13,7 @@ use mpcnn::serving::{
 };
 use mpcnn::util::cli::Args;
 use mpcnn::util::rng::Rng;
+use mpcnn::xmp::{XmpBackend, XmpConfig};
 use mpcnn::{baselines, dse, sim};
 use std::collections::{BTreeMap, VecDeque};
 use std::time::Duration;
@@ -42,13 +43,22 @@ SUBCOMMANDS
   pe         [--wq 1,2,4,8] rank the PE design space (Fig 6 data)
   serve      [--variants 2,4,8] [--route mixed|default|exact:WQ|name:NAME|
              min-accuracy:0.85|max-latency:20ms] [--batch 8] [--requests 256]
-             [--window 64] [--artifacts DIR]
+             [--window 64] [--artifacts DIR] [--backend auto|pjrt|xmp|mock]
+             [--planned]
              host every listed precision variant in ONE gateway process and
-             route a request stream across them (PJRT when artifacts are
-             available, deterministic mock backends otherwise); reports
-             per-variant metrics and client-side achieved throughput
+             route a request stream across them; backend fallback order is
+             PJRT (compiled artifacts) -> xmp (the native sliced-digit
+             mixed-precision engine, synthetic LSQ weights) -> mock (only
+             when asked for); reports per-variant metrics, client-side
+             achieved throughput, and — on xmp — per-variant agreement with
+             an independently built reference model; `--planned` hosts the
+             precision planner's emitted Pareto family (layerwise plans
+             included) on xmp backends instead of the uniform list
   classify   [--wq 4] [--index 0] [--route exact:4] [--variants 4]
-             classify one testset image through the gateway
+             [--backend auto|pjrt|xmp|mock]
+             classify one testset image through the gateway; with
+             `--backend xmp` the class is computed by the sliced-digit
+             kernels on synthetic weights (no artifacts needed)
   info       print workload statistics for the built-in CNNs
 ";
 
@@ -350,25 +360,101 @@ fn cmd_pe(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Which execution engine the gateway's variant workers run on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum BackendKind {
+    /// Resolve to PJRT when compiled artifacts are loadable, else xmp —
+    /// the fallback order is real compute first, mocks only on request.
+    Auto,
+    Pjrt,
+    /// The native truly-mixed-precision sliced-digit engine (synthetic
+    /// LSQ weights when no trained artifacts exist).
+    Xmp,
+    Mock,
+}
+
+impl BackendKind {
+    fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "auto" => Ok(BackendKind::Auto),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            "xmp" => Ok(BackendKind::Xmp),
+            "mock" => Ok(BackendKind::Mock),
+            other => bail!("unknown --backend '{other}' (auto|pjrt|xmp|mock)"),
+        }
+    }
+
+    fn label(self) -> &'static str {
+        match self {
+            BackendKind::Auto => "auto",
+            BackendKind::Pjrt => "PJRT",
+            BackendKind::Xmp => "xmp",
+            BackendKind::Mock => "mock",
+        }
+    }
+}
+
 /// What `serve`/`classify` built: the multi-variant gateway plus how to
 /// drive it.
 struct Gateway {
     server: Server,
     testset: Option<TestSet>,
-    /// Real PJRT backends (false = deterministic mock fallback).
-    real: bool,
+    /// Resolved engine (never `Auto`).
+    backend: BackendKind,
     image_len: usize,
     classes: usize,
+    /// On xmp: an independently built reference copy of every variant's
+    /// deterministic model, keyed by variant name — responses are checked
+    /// against `classify_one` of the copy that served them.
+    xmp_refs: BTreeMap<String, XmpBackend>,
 }
 
 /// Build a [`Server`] hosting one variant per requested word-length. Each
 /// variant's routing profile (paper accuracy, simulated fps) comes from the
 /// cached holistic DSE on the exported ResNet-8-class topology, and that fps
-/// also drives the variant's virtual-FPGA clock. Falls back to mock
-/// backends — with service times scaled to each design's simulated frame
-/// time — when artifacts or the PJRT engine are unavailable, so the gateway
-/// demo runs everywhere.
-fn build_gateway(dir: &std::path::Path, wqs: &[u32], max_batch: usize) -> Result<Gateway> {
+/// also drives the variant's virtual-FPGA clock. Engine fallback order:
+/// PJRT when compiled artifacts are loadable, otherwise the xmp
+/// sliced-digit engine on synthetic LSQ weights — real integer arithmetic
+/// either way. Mock backends (service times scaled to each design's
+/// simulated frame time) remain available via `--backend mock`.
+/// `--planned`: host the precision planner's emitted Pareto family (a
+/// quick small-budget `planner::plan` run on the ResNet-8 topology)
+/// instead of the uniform `--variants` list — every frontier point,
+/// layerwise/channelwise plans included, executes on its own xmp backend.
+fn build_planned_gateway() -> Result<Gateway> {
+    let base = resnet::resnet_small(1, 10);
+    let cfg = RunConfig {
+        slices: vec![2],
+        ..RunConfig::default()
+    };
+    let pcfg = mpcnn::planner::PlannerConfig {
+        wq_choices: vec![2, 8],
+        beam_width: 8,
+        max_evals: 4,
+        ..mpcnn::planner::PlannerConfig::default()
+    };
+    let report = mpcnn::planner::plan(&base, &cfg, &pcfg)?;
+    let xcfg = XmpConfig::default();
+    let mut xmp_refs = BTreeMap::new();
+    for v in mpcnn::planner::emit_variants(&report) {
+        xmp_refs.insert(v.spec.name.clone(), XmpBackend::from_spec(&base, &v.spec, xcfg)?);
+    }
+    Ok(Gateway {
+        server: mpcnn::planner::xmp_family_server(&report, &base, xcfg)?,
+        testset: None,
+        backend: BackendKind::Xmp,
+        image_len: (base.input_hw * base.input_hw * base.input_channels) as usize,
+        classes: base.classes as usize,
+        xmp_refs,
+    })
+}
+
+fn build_gateway(
+    dir: &std::path::Path,
+    wqs: &[u32],
+    max_batch: usize,
+    kind: BackendKind,
+) -> Result<Gateway> {
     if wqs.is_empty() {
         bail!("--variants must name at least one word-length");
     }
@@ -377,27 +463,53 @@ fn build_gateway(dir: &std::path::Path, wqs: &[u32], max_batch: usize) -> Result
         let p = m.testset.clone()?;
         TestSet::load(dir.join(p)).ok()
     });
-    let real = manifest
+    let pjrt_ok = manifest
         .as_ref()
         .map(|m| Engine::with_manifest(m.clone()).is_ok())
         .unwrap_or(false);
-    let (image_len, classes) = match (&manifest, &testset) {
-        (Some(m), _) if !m.models.is_empty() => {
-            let e = &m.models[0];
-            (e.input_len() / e.batch, e.classes)
+    let backend = match kind {
+        BackendKind::Auto => {
+            if pjrt_ok {
+                BackendKind::Pjrt
+            } else {
+                BackendKind::Xmp
+            }
         }
-        (_, Some(ts)) => (ts.h * ts.w * ts.c, 10),
-        _ => (3072, 10),
+        BackendKind::Pjrt if !pjrt_ok => {
+            bail!(
+                "--backend pjrt: no loadable artifacts in {} (missing manifest, or built \
+                 without --features pjrt)",
+                dir.display()
+            )
+        }
+        k => k,
     };
-    if real {
+    let cfg = RunConfig::default();
+    let base = resnet::resnet_small(1, 10);
+    let (image_len, classes) = match backend {
+        // The xmp engine executes the ResNet-8 topology itself; its input
+        // geometry is authoritative.
+        BackendKind::Xmp => ((base.input_hw * base.input_hw * base.input_channels) as usize, 10),
+        _ => match (&manifest, &testset) {
+            (Some(m), _) if !m.models.is_empty() => {
+                let e = &m.models[0];
+                (e.input_len() / e.batch, e.classes)
+            }
+            (_, Some(ts)) => (ts.h * ts.w * ts.c, 10),
+            _ => (3072, 10),
+        },
+    };
+    if backend == BackendKind::Pjrt {
         for &wq in wqs {
             if manifest.as_ref().unwrap().entries_for_wq(wq).is_empty() {
                 bail!("wq={wq} is not exported in {}", dir.display());
             }
         }
     }
-    let cfg = RunConfig::default();
-    let base = resnet::resnet_small(1, 10);
+    // Drop the testset when its geometry doesn't match what the engine
+    // executes (synthetic xmp weights have no use for mismatched images).
+    let testset = testset.filter(|ts| ts.h * ts.w * ts.c == image_len);
+    let mut xmp_refs = BTreeMap::new();
     let mut builder = Server::builder();
     for &wq in wqs {
         let spec = VariantSpec::uniform(wq);
@@ -408,29 +520,46 @@ fn build_gateway(dir: &std::path::Path, wqs: &[u32], max_batch: usize) -> Result
             queue_capacity: 256,
             fpga_fps_sim: profile.fpga_fps,
         };
-        if real {
-            let dir2 = dir.to_path_buf();
-            builder = builder.variant_with_profile(spec, profile, bc, move || {
-                Ok(Box::new(EngineBackend::load(&dir2, wq)?) as Box<dyn InferenceBackend>)
-            });
-        } else {
-            let latency_us = (1e6 / profile.fpga_fps.max(1.0)).clamp(100.0, 20_000.0) as u64;
-            builder = builder.variant_with_profile(spec, profile, bc, move || {
-                Ok(Box::new(MockBackend::new(
-                    image_len,
-                    classes,
-                    vec![1, max_batch.max(1)],
-                    latency_us,
-                )) as Box<dyn InferenceBackend>)
-            });
+        match backend {
+            BackendKind::Pjrt => {
+                let dir2 = dir.to_path_buf();
+                builder = builder.variant_with_profile(spec, profile, bc, move || {
+                    Ok(Box::new(EngineBackend::load(&dir2, wq)?) as Box<dyn InferenceBackend>)
+                });
+            }
+            BackendKind::Xmp => {
+                let xcfg = XmpConfig::default();
+                xmp_refs.insert(
+                    spec.name.clone(),
+                    XmpBackend::from_spec(&base, &spec, xcfg)?,
+                );
+                let base2 = base.clone();
+                let spec2 = spec.clone();
+                builder = builder.variant_with_profile(spec, profile, bc, move || {
+                    Ok(Box::new(XmpBackend::from_spec(&base2, &spec2, xcfg)?)
+                        as Box<dyn InferenceBackend>)
+                });
+            }
+            _ => {
+                let latency_us = (1e6 / profile.fpga_fps.max(1.0)).clamp(100.0, 20_000.0) as u64;
+                builder = builder.variant_with_profile(spec, profile, bc, move || {
+                    Ok(Box::new(MockBackend::new(
+                        image_len,
+                        classes,
+                        vec![1, max_batch.max(1)],
+                        latency_us,
+                    )) as Box<dyn InferenceBackend>)
+                });
+            }
         }
     }
     Ok(Gateway {
         server: builder.build()?,
         testset,
-        real,
+        backend,
         image_len,
         classes,
+        xmp_refs,
     })
 }
 
@@ -448,19 +577,54 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let wqs = args.get_list_u32("variants", &default_wqs);
     let route_spec = args.get_or("route", "mixed");
+    let kind = BackendKind::parse(&args.get_or("backend", "auto"))?;
+    let planned = args.has_flag("planned");
 
-    let gw = build_gateway(&dir, &wqs, max_batch)?;
+    let gw = if planned {
+        if !matches!(kind, BackendKind::Auto | BackendKind::Xmp) {
+            bail!("--planned hosts the planner family on xmp backends; use --backend xmp");
+        }
+        // The planner emits the family (and its batcher configs) itself.
+        if args.get("variants").is_some() || args.get("batch").is_some()
+            || args.get("artifacts").is_some()
+        {
+            eprintln!(
+                "(--planned hosts the planner-emitted family with its own batcher \
+                 configs; ignoring --variants/--batch/--artifacts)"
+            );
+        }
+        build_planned_gateway()?
+    } else {
+        build_gateway(&dir, &wqs, max_batch, kind)?
+    };
     println!(
         "gateway up: {} variants {:?} on {} backends\n",
         gw.server.n_variants(),
         gw.server.variant_names(),
-        if gw.real { "PJRT" } else { "mock" },
+        gw.backend.label(),
     );
+    if gw.backend == BackendKind::Xmp {
+        println!(
+            "xmp: every variant verified fast path == scalar reference on its warm-up \
+             probe; responses are checked against an independent model copy\n"
+        );
+    }
 
     // Selector schedule, one per request in round-robin. `mixed` exercises
     // the whole routing surface; any explicit --route applies to every
     // request.
-    let schedule: Vec<VariantSelector> = if route_spec == "mixed" {
+    let schedule: Vec<VariantSelector> = if route_spec == "mixed" && planned {
+        // Planned family: round-robin every emitted frontier variant by
+        // name (layerwise plans have no uniform wq to route Exact on).
+        let mut s = vec![VariantSelector::Default];
+        s.extend(
+            gw.server
+                .variant_names()
+                .into_iter()
+                .map(VariantSelector::Named),
+        );
+        s
+    } else if route_spec == "mixed" {
         let mut s = vec![VariantSelector::Default];
         s.extend(wqs.iter().map(|&w| VariantSelector::Exact(w)));
         s.push(VariantSelector::MinAccuracy(87.0));
@@ -470,43 +634,44 @@ fn cmd_serve(args: &Args) -> Result<()> {
         vec![VariantSelector::parse(&route_spec).map_err(|e| anyhow!("{e}"))?]
     };
 
-    // One request per variant correctness ledger: variant -> (correct, total).
-    fn drain(
-        inflight: &mut VecDeque<(PendingResponse, usize)>,
-        per_variant: &mut BTreeMap<String, (usize, usize)>,
-        correct: &mut usize,
-        done: &mut usize,
-        failed: &mut usize,
-    ) {
+    // Per-request ground truth. Labels (testset index or the mock's
+    // mean-class rule) are known at submit time; on xmp the expected class
+    // depends on which variant answers, so the image rides along and is
+    // re-classified by that variant's reference model copy at drain time.
+    enum Truth {
+        Label(usize),
+        Image(Vec<f32>),
+    }
+
+    // Drain only *waits* on the oldest response inside the timed window;
+    // correctness verification (which on xmp re-runs a full reference
+    // forward per response) happens after the clock stops, so the printed
+    // throughput measures the gateway, not the self-check.
+    let drain = |inflight: &mut VecDeque<(PendingResponse, Truth)>,
+                 completed: &mut Vec<(mpcnn::serving::Response, Truth)>,
+                 failed: &mut usize| {
         if let Some((p, truth)) = inflight.pop_front() {
             match p.wait() {
-                Ok(r) => {
-                    let e = per_variant.entry(r.variant).or_insert((0, 0));
-                    e.1 += 1;
-                    if r.class == truth {
-                        e.0 += 1;
-                        *correct += 1;
-                    }
-                    *done += 1;
-                }
+                Ok(r) => completed.push((r, truth)),
                 Err(_) => *failed += 1,
             }
         }
-    }
+    };
 
+    let xmp = gw.backend == BackendKind::Xmp;
     let mut rng = Rng::new(42);
-    let mut per_variant: BTreeMap<String, (usize, usize)> = BTreeMap::new();
-    let (mut correct, mut done, mut failed, mut route_errors) = (0usize, 0usize, 0usize, 0usize);
-    let mut inflight: VecDeque<(PendingResponse, usize)> = VecDeque::new();
+    let (mut failed, mut route_errors) = (0usize, 0usize);
+    let mut inflight: VecDeque<(PendingResponse, Truth)> = VecDeque::new();
+    let mut completed: Vec<(mpcnn::serving::Response, Truth)> = Vec::with_capacity(n_requests);
     let started = std::time::Instant::now();
     for i in 0..n_requests {
         // Overlap submission with completion: only ever block on the oldest
         // pending response, and only when the window is full — no rigid
         // head-of-line drain waves.
         while inflight.len() >= window {
-            drain(&mut inflight, &mut per_variant, &mut correct, &mut done, &mut failed);
+            drain(&mut inflight, &mut completed, &mut failed);
         }
-        let (img, truth) = match &gw.testset {
+        let (img, label) = match &gw.testset {
             Some(ts) => {
                 let idx = rng.range(0, ts.n);
                 (ts.image(idx).to_vec(), ts.labels[idx] as usize)
@@ -515,6 +680,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 let base = rng.range(0, gw.classes);
                 (vec![base as f32; gw.image_len], base)
             }
+        };
+        let truth = if xmp {
+            Truth::Image(img.clone())
+        } else {
+            Truth::Label(label)
         };
         let sel = schedule[i % schedule.len()].clone();
         match gw.server.submit(InferRequest::new(img).with_variant(sel)) {
@@ -528,21 +698,43 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     while !inflight.is_empty() {
-        drain(&mut inflight, &mut per_variant, &mut correct, &mut done, &mut failed);
+        drain(&mut inflight, &mut completed, &mut failed);
     }
     let wall = started.elapsed();
 
+    // Post-window ledger: variant -> (correct, total).
+    let mut per_variant: BTreeMap<String, (usize, usize)> = BTreeMap::new();
+    let mut correct = 0usize;
+    let done = completed.len();
+    for (r, truth) in &completed {
+        let want = match truth {
+            Truth::Label(l) => Some(*l),
+            Truth::Image(img) => gw
+                .xmp_refs
+                .get(&r.variant)
+                .and_then(|b| b.classify_one(img).ok()),
+        };
+        let e = per_variant.entry(r.variant.clone()).or_insert((0, 0));
+        e.1 += 1;
+        if want == Some(r.class) {
+            e.0 += 1;
+            correct += 1;
+        }
+    }
+
+    let metric = if xmp { "reference-agreeing" } else { "correct" };
     print!("{}", gw.server.summary_table().render());
     println!();
     for (name, (c, n)) in &per_variant {
         println!(
-            "  {name}: {c}/{n} = {:.2}% of its routed stream correct",
+            "  {name}: {c}/{n} = {:.2}% of its routed stream {metric}",
             100.0 * *c as f64 / (*n).max(1) as f64
         );
     }
     println!(
         "\ntotal: {done}/{n_requests} answered ({route_errors} unroutable, {failed} failed), \
-         accuracy {:.2}%",
+         {} {:.2}%",
+        if xmp { "reference agreement" } else { "accuracy" },
         100.0 * correct as f64 / done.max(1) as f64
     );
     println!(
@@ -568,7 +760,8 @@ fn cmd_classify(args: &Args) -> Result<()> {
         None if args.get("wq").is_some() => VariantSelector::Exact(wq),
         None => VariantSelector::Default,
     };
-    let gw = build_gateway(&dir, &wqs, 1)?;
+    let kind = BackendKind::parse(&args.get_or("backend", "auto"))?;
+    let gw = build_gateway(&dir, &wqs, 1, kind)?;
     let (img, label) = match &gw.testset {
         Some(ts) => {
             if index >= ts.n {
@@ -583,14 +776,24 @@ fn cmd_classify(args: &Args) -> Result<()> {
     };
     let resp = gw
         .server
-        .infer(InferRequest::new(img).with_variant(sel.clone()))
+        .infer(InferRequest::new(img.clone()).with_variant(sel.clone()))
         .map_err(|e| anyhow!("{e}"))?;
     println!(
-        "image {index}: predicted class {} via variant '{}' (route {sel}, label {label}){}",
+        "image {index}: predicted class {} via variant '{}' (route {sel}, label {label}) \
+         [{} backend]",
         resp.class,
         resp.variant,
-        if gw.real { "" } else { " [mock backend]" },
+        gw.backend.label(),
     );
+    if let Some(probe) = gw.xmp_refs.get(&resp.variant) {
+        // The served class must be the sliced-digit kernels' own answer:
+        // re-run the image through an independently built copy.
+        let want = probe.classify_one(&img)?;
+        if want != resp.class {
+            bail!("served class {} disagrees with the xmp reference ({want})", resp.class);
+        }
+        println!("xmp reference check: independent model copy agrees (class {want})");
+    }
     Ok(())
 }
 

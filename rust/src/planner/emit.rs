@@ -9,15 +9,20 @@
 //! design's simulated frame rate. [`mock_family_server`] registers the
 //! whole family on a [`ServerBuilder`] with deterministic mock backends so
 //! the planned family can be booted (and routed against) without PJRT
-//! artifacts; production callers register the same specs/profiles with
-//! `EngineBackend` factories instead.
+//! artifacts; [`xmp_family_server`] does the same with real sliced-digit
+//! execution ([`crate::xmp`], synthetic LSQ weights) so routed requests
+//! return classes the kernels actually computed; production callers
+//! register the same specs/profiles with `EngineBackend` factories
+//! instead.
 
 use super::PlanReport;
+use crate::cnn::Cnn;
 use crate::serving::{
     BatcherConfig, InferenceBackend, MockBackend, Server, ServerBuilder, VariantProfile,
     VariantSpec,
 };
 use crate::util::error::Result;
+use crate::xmp::{XmpBackend, XmpConfig};
 
 /// One servable variant emitted from the frontier.
 #[derive(Clone, Debug)]
@@ -78,6 +83,40 @@ pub fn mock_family_server(report: &PlanReport, image_len: usize, classes: usize)
     register_mock_family(Server::builder(), variants, image_len, classes).build()
 }
 
+/// Register `variants` on `builder` with REAL sliced-digit execution: one
+/// [`XmpBackend`] per variant, synthetic LSQ weights honoring each spec's
+/// per-layer plan on `base`. The executable counterpart of
+/// [`register_mock_family`] — same specs, profiles, and batcher configs,
+/// but routed requests come back with argmax classes the xmp kernels
+/// actually computed.
+pub fn register_xmp_family(
+    mut builder: ServerBuilder,
+    variants: Vec<PlannedVariant>,
+    base: &Cnn,
+    xcfg: XmpConfig,
+) -> ServerBuilder {
+    for v in variants {
+        let spec = v.spec.clone();
+        let base = base.clone();
+        builder = builder.variant_with_profile(v.spec, v.profile, v.batcher, move || {
+            Ok(Box::new(XmpBackend::from_spec(&base, &spec, xcfg)?)
+                as Box<dyn InferenceBackend>)
+        });
+    }
+    builder
+}
+
+/// Boot the emitted family on xmp backends: every planned variant —
+/// layerwise and channelwise plans included — executes real mixed-precision
+/// integer arithmetic end to end.
+pub fn xmp_family_server(report: &PlanReport, base: &Cnn, xcfg: XmpConfig) -> Result<Server> {
+    let variants = emit_variants(report);
+    if variants.is_empty() {
+        return Err(crate::anyhow!("plan frontier is empty — nothing to serve"));
+    }
+    register_xmp_family(Server::builder(), variants, base, xcfg).build()
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::{plan, PlannerConfig};
@@ -98,6 +137,33 @@ mod tests {
             ..PlannerConfig::default()
         };
         plan(&base, &cfg, &pcfg).unwrap()
+    }
+
+    #[test]
+    fn emitted_family_boots_on_xmp_backends() {
+        // The planned family on REAL sliced-digit backends: every variant
+        // (layerwise plans included) answers with a class its own xmp
+        // kernels computed — verified against an independently built copy
+        // of the same deterministic model.
+        let base = resnet::resnet_small(1, 10);
+        let report = small_report();
+        let xcfg = crate::xmp::XmpConfig::default();
+        let server = xmp_family_server(&report, &base, xcfg).unwrap();
+        assert_eq!(server.n_variants(), report.frontier.len());
+        let img = vec![0.8f32; 3072];
+        for v in emit_variants(&report) {
+            let probe = crate::xmp::XmpBackend::from_spec(&base, &v.spec, xcfg).unwrap();
+            let want = probe.classify_one(&img).unwrap();
+            let resp = server
+                .infer(
+                    InferRequest::new(img.clone())
+                        .with_variant(VariantSelector::Named(v.spec.name.clone())),
+                )
+                .unwrap();
+            assert_eq!(resp.variant, v.spec.name);
+            assert_eq!(resp.class, want, "variant {} diverged from probe", v.spec.name);
+        }
+        server.shutdown();
     }
 
     #[test]

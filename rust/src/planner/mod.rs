@@ -34,7 +34,9 @@ pub mod footprint;
 pub mod frontier;
 pub mod sensitivity;
 
-pub use emit::{emit_variants, mock_family_server, PlannedVariant};
+pub use emit::{
+    emit_variants, mock_family_server, register_xmp_family, xmp_family_server, PlannedVariant,
+};
 pub use footprint::PlanFootprint;
 pub use frontier::{dominates, pareto_indices, Triple};
 pub use sensitivity::SensitivityModel;

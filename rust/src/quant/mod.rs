@@ -10,4 +10,4 @@ pub mod lsq;
 pub mod slicing;
 
 pub use lsq::{QuantParams, Quantizer};
-pub use slicing::{reconstruct_slices, slice_signed, slice_unsigned};
+pub use slicing::{reconstruct_slices, slice_digit, slice_signed, slice_unsigned};

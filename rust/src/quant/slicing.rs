@@ -75,6 +75,29 @@ pub fn slice_unsigned(v: u64, w: u32, k: u32) -> Vec<i64> {
     out
 }
 
+/// Extract digit `idx` of the `ceil(w/k)`-digit decomposition of `v`
+/// without materializing the whole digit vector — the allocation-free form
+/// the xmp scalar reference kernel computes with inside its MAC loop.
+/// Property-tested identical to `slice_signed(v, w, k)[idx]`.
+#[inline]
+pub fn slice_digit(v: i64, w: u32, k: u32, idx: u32) -> i64 {
+    debug_assert!(w >= 1 && k >= 1);
+    let s = n_slices(w, k);
+    debug_assert!(idx < s, "slice {idx} out of range for {s} slices");
+    let u = (v as u64) & if w >= 64 { u64::MAX } else { (1u64 << w) - 1 };
+    let lo_bit = k * idx;
+    let digit_bits = (w - lo_bit).min(k);
+    let digit = ((u >> lo_bit) & ((1u64 << digit_bits) - 1)) as i64;
+    if idx == s - 1 {
+        // Top digit: two's-complement weight of its MSB is negative.
+        let sign_bit = 1i64 << (digit_bits - 1);
+        if digit & sign_bit != 0 {
+            return digit - (1i64 << digit_bits);
+        }
+    }
+    digit
+}
+
 /// Reconstruct the integer from its digits: `Σ d_s · 2^{k·s}`.
 pub fn reconstruct_slices(digits: &[i64], k: u32) -> i64 {
     digits
@@ -191,6 +214,23 @@ mod tests {
                 .map(|(s, d)| a * d * slice_weight(s as u32, k))
                 .sum();
             check_eq(via_ppgs, a * w, "PPG decomposition of MAC")
+        });
+    }
+
+    #[test]
+    fn prop_slice_digit_matches_slice_signed() {
+        // The allocation-free single-digit form must agree with the vector
+        // decomposition on every digit, for every (w, k) — including the
+        // partial-top-digit cases (w not a multiple of k).
+        forall(5000, |rng: &mut Rng| {
+            let w = *rng.choose(&[1u32, 2, 3, 4, 5, 6, 7, 8, 16]);
+            let k = *rng.choose(&[1u32, 2, 3, 4, 5, 8]);
+            let v = rng.range_i64(-(1i64 << (w - 1)), (1i64 << (w - 1)) - 1);
+            let digits = slice_signed(v, w, k);
+            for (i, d) in digits.iter().enumerate() {
+                check_eq(slice_digit(v, w, k, i as u32), *d, "digit extraction")?;
+            }
+            Ok(())
         });
     }
 

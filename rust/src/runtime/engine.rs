@@ -13,14 +13,22 @@ use crate::util::error::Result;
 use std::collections::BTreeMap;
 
 /// Argmax over each row of a flattened `[rows, cols]` matrix.
+///
+/// NaN-safe total-order fold: a NaN logit never wins (any non-NaN value
+/// displaces a NaN incumbent), ties keep the first index, and an all-NaN
+/// row yields 0. The previous `partial_cmp(..).unwrap()` panicked on the
+/// first NaN — inside the variant worker, that took the whole serving
+/// pipeline down with it.
 pub fn argmax_rows(flat: &[f32], cols: usize) -> Vec<usize> {
     flat.chunks(cols)
         .map(|row| {
-            row.iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(i, _)| i)
-                .unwrap_or(0)
+            let mut best = 0usize;
+            for (i, v) in row.iter().enumerate().skip(1) {
+                if *v > row[best] || (row[best].is_nan() && !v.is_nan()) {
+                    best = i;
+                }
+            }
+            best
         })
         .collect()
 }
@@ -181,7 +189,10 @@ mod imp {
 
     const NO_PJRT: &str = "mpcnn was built without the `pjrt` feature (the `xla` crate \
          is only available in vendored build environments); the PJRT engine \
-         is unavailable — use MockBackend, or rebuild with --features pjrt";
+         is unavailable — the serving stack falls back to the xmp sliced-digit \
+         engine (`--backend xmp`, real integer arithmetic on synthetic \
+         weights) or MockBackend (`--backend mock`), or rebuild with \
+         --features pjrt";
 
     /// Stub of the compiled model; the API matches the `pjrt` build.
     pub struct LoadedModel {
@@ -258,6 +269,30 @@ mod tests {
     #[test]
     fn argmax_single_row() {
         assert_eq!(argmax_rows(&[1.0, 2.0, 3.0, 2.5], 4), vec![2]);
+    }
+
+    #[test]
+    fn argmax_nan_never_panics_or_wins() {
+        // Regression: these rows panicked the old partial_cmp unwrap.
+        assert_eq!(argmax_rows(&[f32::NAN, 1.0, 2.0], 3), vec![2]);
+        assert_eq!(argmax_rows(&[1.0, f32::NAN, 0.5], 3), vec![0]);
+        // All-NaN row degrades to index 0 instead of crashing the worker.
+        assert_eq!(argmax_rows(&[f32::NAN, f32::NAN], 2), vec![0]);
+        // Mixed rows: each row independent.
+        assert_eq!(
+            argmax_rows(&[f32::NAN, 3.0, 0.0, 1.0, 9.0, f32::NAN], 3),
+            vec![1, 1]
+        );
+        // Infinities still order normally.
+        assert_eq!(
+            argmax_rows(&[f32::NEG_INFINITY, f32::INFINITY, 0.0], 3),
+            vec![1]
+        );
+    }
+
+    #[test]
+    fn argmax_ties_keep_first_index() {
+        assert_eq!(argmax_rows(&[2.0, 2.0, 1.0], 3), vec![0]);
     }
 
     #[cfg(not(feature = "pjrt"))]

@@ -29,8 +29,12 @@
 //! # Ok(()) }
 //! ```
 //!
-//! The old single-variant [`crate::coordinator::Coordinator`] survives as a
-//! thin shim over this module.
+//! Backends: [`EngineBackend`] (compiled PJRT artifacts),
+//! [`crate::xmp::XmpBackend`] (the native sliced-digit execution engine),
+//! and [`MockBackend`] (deterministic test stub). The pre-gateway
+//! single-variant `coordinator` shim is gone; its pass-through behaviour
+//! lives on as the single-variant tests in
+//! `rust/tests/integration_serving.rs`.
 
 pub mod backend;
 pub mod metrics;
@@ -336,8 +340,8 @@ impl Server {
         Ok(self.variants[idx].spec.name.clone())
     }
 
-    /// Direct per-variant client (bypasses routing), e.g. for the
-    /// single-variant coordinator shim.
+    /// Direct per-variant client (bypasses routing), e.g. for
+    /// single-variant benchmark drivers.
     pub fn client(&self, name: &str) -> Option<Client> {
         self.variants
             .iter()

@@ -3,7 +3,7 @@
 //! point it occupies on the paper's accuracy–throughput curve, with the
 //! throughput side pulled from the cached holistic DSE.
 
-use crate::cnn::{apply_channelwise, channelwise::apply_plan, ChannelGroup, Cnn};
+use crate::cnn::{apply_channelwise, channelwise::apply_plan, ChannelGroup, Cnn, LayerKind};
 use crate::config::RunConfig;
 use crate::dse;
 
@@ -72,6 +72,32 @@ impl VariantSpec {
         } else {
             apply_channelwise(base, &self.channelwise)
         }
+    }
+
+    /// The explicit per-base-layer plan this spec denotes: one
+    /// [`ChannelGroup`] list per layer of `base`, with edge layers (first,
+    /// last, FC) pinned to 8 bit exactly as [`apply`](Self::apply)'s
+    /// lowering pins them. This is the form the xmp execution engine
+    /// ([`crate::xmp`]) packs weights from — one layer with word-length
+    /// groups *inside* it, rather than the split sub-layer view the
+    /// DSE/simulator schedule uses; both derive their channel counts from
+    /// [`crate::cnn::channelwise::group_channel_counts`].
+    pub fn per_layer_plan(&self, base: &Cnn) -> Vec<Vec<ChannelGroup>> {
+        if !self.layerwise.is_empty() {
+            return self.layerwise.clone();
+        }
+        let n = base.layers.len();
+        (0..n)
+            .map(|i| {
+                let edge = i == 0 || i + 1 == n || base.layers[i].kind == LayerKind::Fc;
+                if edge || self.channelwise.is_empty() {
+                    let wq = if edge { 8 } else { self.wq.unwrap_or(8) };
+                    vec![ChannelGroup { wq, fraction: 1.0 }]
+                } else {
+                    self.channelwise.clone()
+                }
+            })
+            .collect()
     }
 
     /// Estimated Top-5 accuracy in percent from the paper's tables for
@@ -198,6 +224,39 @@ mod tests {
         );
         // Layerwise specs carry no table-lineage estimate of their own.
         assert_eq!(spec.estimated_top5("ResNet-18"), None);
+    }
+
+    #[test]
+    fn per_layer_plan_matches_apply_lowering() {
+        use crate::cnn::channelwise::apply_plan;
+        let base = resnet::resnet_small(1, 10);
+        // Uniform: lowering the plan must produce the same CNN as apply().
+        let u = VariantSpec::uniform(2);
+        assert_eq!(
+            apply_plan(&base, &u.per_layer_plan(&base)).fingerprint(),
+            u.apply(&base).fingerprint()
+        );
+        // Channel-wise: same sub-layer structure as apply_channelwise.
+        let cw = VariantSpec::channelwise(
+            "mix",
+            vec![
+                ChannelGroup { wq: 2, fraction: 0.5 },
+                ChannelGroup { wq: 8, fraction: 0.5 },
+            ],
+        );
+        let plan = cw.per_layer_plan(&base);
+        assert_eq!(plan.len(), base.layers.len());
+        assert_eq!(plan[0], vec![ChannelGroup { wq: 8, fraction: 1.0 }]);
+        assert_eq!(plan[1].len(), 2);
+        let lowered = apply_plan(&base, &plan);
+        assert_eq!(
+            lowered.layers.len(),
+            cw.apply(&base).layers.len(),
+            "same split structure as apply_channelwise"
+        );
+        // Planned specs return their layerwise plan verbatim.
+        let p = VariantSpec::planned("mp0", plan.clone());
+        assert_eq!(p.per_layer_plan(&base), plan);
     }
 
     #[test]

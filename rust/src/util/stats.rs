@@ -1,4 +1,4 @@
-//! Small statistics helpers shared by the bench harness and the coordinator
+//! Small statistics helpers shared by the bench harness and the serving
 //! metrics (latency percentiles, throughput summaries).
 
 /// Arithmetic mean; 0.0 for an empty slice.
@@ -57,7 +57,7 @@ pub fn geomean(xs: &[f64]) -> f64 {
 }
 
 /// A streaming histogram of latencies in microseconds with fixed log-spaced
-/// buckets; cheap to update from the coordinator hot path.
+/// buckets; cheap to update from the serving hot path.
 #[derive(Clone, Debug)]
 pub struct LatencyHistogram {
     /// bucket i covers [2^i, 2^(i+1)) microseconds, i in 0..=31

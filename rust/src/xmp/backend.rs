@@ -1,0 +1,233 @@
+//! [`XmpBackend`] — the xmp engine behind the serving gateway's
+//! [`InferenceBackend`] trait: real sliced-digit arithmetic where the
+//! gateway previously fell back to mock logits.
+//!
+//! The backend owns one [`XmpModel`] (typically synthetic LSQ weights via
+//! [`XmpBackend::from_spec`] when no trained artifacts exist); `warmup`
+//! pre-packs the digit planes and verifies the fast path against the
+//! scalar reference on a probe image before the variant is announced
+//! ready. Any batch size executes unpadded and unsplit
+//! (`supports_batch(n) == true` for all `n ≥ 1`) — the engine is
+//! size-flexible, unlike compiled PJRT executables.
+
+use super::pack::{pack_model, PackedModel};
+use super::{XmpConfig, XmpModel};
+use crate::cnn::Cnn;
+use crate::runtime::argmax_rows;
+use crate::serving::{BackendHealth, InferenceBackend, VariantSpec};
+use crate::util::error::Result;
+use std::cell::OnceCell;
+
+/// A truly-mixed-precision execution backend for one served variant.
+pub struct XmpBackend {
+    model: XmpModel,
+    packed: OnceCell<PackedModel>,
+    fast: bool,
+}
+
+impl XmpBackend {
+    /// Wrap an existing model (weights already quantized).
+    pub fn new(model: XmpModel) -> XmpBackend {
+        XmpBackend {
+            model,
+            packed: OnceCell::new(),
+            fast: true,
+        }
+    }
+
+    /// Build a synthetic-weight backend serving `spec`'s quantization of
+    /// `base` — what `--backend xmp` and the planner's family server use
+    /// when no trained artifacts exist. Deterministic in
+    /// `(base, spec, cfg)`: two independently built copies (e.g. a worker
+    /// backend and a local ground-truth probe) agree bit-for-bit.
+    pub fn from_spec(base: &Cnn, spec: &VariantSpec, cfg: XmpConfig) -> Result<XmpBackend> {
+        let plan = spec.per_layer_plan(base);
+        Ok(XmpBackend::new(XmpModel::synthetic(base, &plan, cfg)?))
+    }
+
+    /// Route every layer through the scalar sliced reference kernel
+    /// instead of the fast path (cross-checks, tests).
+    pub fn reference_kernels(mut self) -> XmpBackend {
+        self.fast = false;
+        self
+    }
+
+    pub fn model(&self) -> &XmpModel {
+        &self.model
+    }
+
+    fn packed(&self) -> &PackedModel {
+        self.packed.get_or_init(|| pack_model(&self.model))
+    }
+
+    /// Argmax class of one image — the local ground-truth probe
+    /// `mpcnn serve --backend xmp` checks routed responses against.
+    pub fn classify_one(&self, image: &[f32]) -> Result<usize> {
+        let logits = self.model.forward(self.packed(), image, self.fast)?;
+        let cols = logits.len().max(1);
+        Ok(argmax_rows(&logits, cols).first().copied().unwrap_or(0))
+    }
+}
+
+impl InferenceBackend for XmpBackend {
+    fn batch_sizes(&self) -> Vec<usize> {
+        vec![1]
+    }
+
+    /// The engine runs any batch unpadded: the batcher never splits or
+    /// zero-fills for this backend.
+    fn supports_batch(&self, n: usize) -> bool {
+        n >= 1
+    }
+
+    fn image_len(&self) -> usize {
+        self.model.image_len()
+    }
+
+    fn classes(&self) -> usize {
+        self.model.classes as usize
+    }
+
+    fn infer_batch(&self, images: &[f32], batch: usize) -> Result<Vec<f32>> {
+        if images.len() != batch * self.image_len() {
+            crate::bail!(
+                "xmp: bad input length {} for batch {batch} (image_len {})",
+                images.len(),
+                self.image_len()
+            );
+        }
+        let packed = self.packed();
+        let mut logits = Vec::with_capacity(batch * self.classes());
+        for img in images.chunks_exact(self.image_len()) {
+            let l = self.model.forward(packed, img, self.fast)?;
+            if l.len() != self.classes() {
+                crate::bail!(
+                    "xmp: model '{}' produced {} logits, expected {}",
+                    self.model.name,
+                    l.len(),
+                    self.classes()
+                );
+            }
+            logits.extend_from_slice(&l);
+        }
+        Ok(logits)
+    }
+
+    /// Pre-pack the digit planes, then run one probe image through BOTH
+    /// kernels: the fast path must match the scalar reference bit-for-bit
+    /// before the variant serves traffic.
+    fn warmup(&self) -> Result<()> {
+        let packed = self.packed();
+        let probe = vec![0.5f32; self.image_len()];
+        let fast = self.model.forward(packed, &probe, true)?;
+        let refr = self.model.forward(packed, &probe, false)?;
+        if fast
+            .iter()
+            .zip(&refr)
+            .any(|(a, b)| a.to_bits() != b.to_bits())
+        {
+            crate::bail!(
+                "xmp: fast path diverged from the scalar reference on the warm-up probe"
+            );
+        }
+        Ok(())
+    }
+
+    fn health(&self) -> BackendHealth {
+        BackendHealth::Healthy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::resnet;
+    use crate::cnn::ChannelGroup;
+
+    fn backend(wq: u32) -> XmpBackend {
+        let base = resnet::resnet_small(1, 10);
+        XmpBackend::from_spec(&base, &VariantSpec::uniform(wq), XmpConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn capabilities() {
+        let b = backend(2);
+        assert_eq!(b.image_len(), 3072);
+        assert_eq!(b.classes(), 10);
+        assert!(b.supports_batch(1) && b.supports_batch(17));
+        assert!(!b.supports_batch(0));
+        assert_eq!(b.health(), BackendHealth::Healthy);
+    }
+
+    #[test]
+    fn warmup_verifies_kernels() {
+        backend(4).warmup().unwrap();
+    }
+
+    #[test]
+    fn infer_batch_layout_and_determinism() {
+        let b = backend(2);
+        let img0 = vec![0.2f32; 3072];
+        let img1 = vec![5.0f32; 3072];
+        let mut batch = img0.clone();
+        batch.extend_from_slice(&img1);
+        let logits = b.infer_batch(&batch, 2).unwrap();
+        assert_eq!(logits.len(), 20);
+        // Batch rows are independent per-image forwards.
+        assert_eq!(&logits[..10], &b.infer_batch(&img0, 1).unwrap()[..]);
+        assert_eq!(&logits[10..], &b.infer_batch(&img1, 1).unwrap()[..]);
+        // classify_one agrees with argmax over infer_batch.
+        let want = argmax_rows(&logits[..10], 10)[0];
+        assert_eq!(b.classify_one(&img0).unwrap(), want);
+    }
+
+    #[test]
+    fn two_copies_agree_bitwise() {
+        // The worker's backend and a local probe copy must be the same
+        // function — this is what serve's reference agreement relies on.
+        let a = backend(4);
+        let b = backend(4);
+        let img = vec![1.5f32; 3072];
+        assert_eq!(
+            a.infer_batch(&img, 1).unwrap(),
+            b.infer_batch(&img, 1).unwrap()
+        );
+    }
+
+    #[test]
+    fn reference_kernels_match_fast() {
+        let base = resnet::resnet_small(1, 10);
+        let spec = VariantSpec::channelwise(
+            "mix18",
+            vec![
+                ChannelGroup { wq: 1, fraction: 0.75 },
+                ChannelGroup { wq: 8, fraction: 0.25 },
+            ],
+        );
+        let fast = XmpBackend::from_spec(&base, &spec, XmpConfig::default()).unwrap();
+        let refr = XmpBackend::from_spec(&base, &spec, XmpConfig::default())
+            .unwrap()
+            .reference_kernels();
+        let img = vec![0.7f32; 3072];
+        let lf = fast.infer_batch(&img, 1).unwrap();
+        let lr = refr.infer_batch(&img, 1).unwrap();
+        for (a, b) in lf.iter().zip(&lr) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn rejects_bad_lengths() {
+        let b = backend(8);
+        assert!(b.infer_batch(&[0.0; 10], 1).is_err());
+        let m = b.model().clone();
+        assert!(XmpBackend::new(m).classify_one(&[0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_plan() {
+        let base = resnet::resnet_small(1, 10);
+        let r = XmpModel::synthetic(&base, &[], XmpConfig::default());
+        assert!(r.is_err());
+    }
+}

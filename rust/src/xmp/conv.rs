@@ -1,0 +1,202 @@
+//! im2col + channel-grouped convolution forward.
+//!
+//! Layers execute as `im2col` (SAME padding, NHWC, one extraction shared
+//! by every channel group) followed by one sliced GEMM per group and a
+//! per-channel integer requantize into the next u8 activation map. The
+//! groups are where the mixed precision is *truly* mixed: each runs at
+//! its own word-length `wq` with its own `ceil(wq/k)` digit planes, and
+//! their outputs interleave back into one NHWC map at the layer's channel
+//! offsets — no per-group sub-layer dispatch, no reconfiguration, exactly
+//! the on-the-fly word-length switching the paper's PE performs.
+
+use super::gemm::{gemm_codes_i64, gemm_sliced_fast, gemm_sliced_reference};
+use super::pack::PackedLayer;
+use super::XmpLayer;
+
+/// SAME-padding geometry: `(output size, leading pad)` for a square
+/// `ih`-pixel map under a `k`-wide kernel at stride `s`. Matches
+/// [`crate::cnn::Layer::oh`] (`ceil(ih/s)`) and the TF/JAX "SAME" rule
+/// the exported models use (`pad_total = (oh-1)·s + k - ih`, split
+/// low-first).
+pub fn same_pad(ih: u32, k: u32, s: u32) -> (u32, u32) {
+    let oh = ih.div_ceil(s);
+    let pad_total = ((oh - 1) * s + k).saturating_sub(ih);
+    (oh, pad_total / 2)
+}
+
+/// im2col over an NHWC u8 activation map: returns the `(M = oh², kdim =
+/// k²·iw)` patch matrix in `i16` (widened once here so the GEMM inner
+/// loops multiply `i16` lanes directly), plus `(m, kdim)`. Out-of-map
+/// taps are zero (the pre-zeroed buffer is simply skipped over).
+pub fn im2col(input: &[u8], ih: u32, iw: u32, k: u32, s: u32) -> (Vec<i16>, usize, usize) {
+    assert_eq!(input.len(), (ih * ih * iw) as usize, "input must be ih²·iw");
+    let (oh, pad) = same_pad(ih, k, s);
+    let kdim = (k * k * iw) as usize;
+    let m = (oh * oh) as usize;
+    let mut cols = vec![0i16; m * kdim];
+    let ih_i = ih as i64;
+    let cs = iw as usize;
+    let mut pos = 0usize;
+    for oy in 0..oh {
+        for ox in 0..oh {
+            for ky in 0..k {
+                let iy = (oy * s + ky) as i64 - pad as i64;
+                for kx in 0..k {
+                    let ix = (ox * s + kx) as i64 - pad as i64;
+                    if (0..ih_i).contains(&iy) && (0..ih_i).contains(&ix) {
+                        let base = (iy as usize * ih as usize + ix as usize) * cs;
+                        for &v in &input[base..base + cs] {
+                            cols[pos] = v as i16;
+                            pos += 1;
+                        }
+                    } else {
+                        pos += cs; // zero padding
+                    }
+                }
+            }
+        }
+    }
+    debug_assert_eq!(pos, m * kdim);
+    (cols, m, kdim)
+}
+
+/// One conv layer forward: im2col once, then one sliced GEMM per channel
+/// group (`fast` picks the digit-plane fast path or the scalar reference
+/// kernel), per-channel requantization into the NHWC u8 output.
+pub fn conv_forward(input: &[u8], l: &XmpLayer, pl: &PackedLayer, fast: bool) -> Vec<u8> {
+    let (cols, m, kdim) = im2col(input, l.ih, l.iw, l.k, l.s);
+    debug_assert_eq!(kdim, l.kdim());
+    let od = l.od as usize;
+    let mut out = vec![0u8; m * od];
+    let mut base = 0usize;
+    for (g, pg) in l.groups.iter().zip(&pl.groups) {
+        let accs = if fast {
+            gemm_sliced_fast(&cols, m, pg)
+        } else {
+            gemm_sliced_reference(&cols, m, kdim, &g.codes, pg.od, pg.wq, pg.k)
+        };
+        for (row_out, row_acc) in out.chunks_mut(od).zip(accs.chunks_exact(pg.od)) {
+            let slots = row_out[base..base + pg.od].iter_mut();
+            for ((o, r), &acc) in slots.zip(&pg.requant).zip(row_acc) {
+                *o = r.apply(acc);
+            }
+        }
+        base += pg.od;
+    }
+    out
+}
+
+/// Ground-truth conv for the property tests: plain `i64` MACs straight
+/// from the integer codes (no slicing anywhere) plus the same per-channel
+/// requantize. The sliced kernels must reproduce this bit-for-bit.
+pub fn conv_forward_i64(input: &[u8], l: &XmpLayer) -> Vec<u8> {
+    let (cols, m, kdim) = im2col(input, l.ih, l.iw, l.k, l.s);
+    let od = l.od as usize;
+    let mut out = vec![0u8; m * od];
+    let mut base = 0usize;
+    for g in &l.groups {
+        let god = g.od as usize;
+        let accs = gemm_codes_i64(&cols, m, kdim, &g.codes, god);
+        for (row_out, row_acc) in out.chunks_mut(od).zip(accs.chunks_exact(god)) {
+            let slots = row_out[base..base + god].iter_mut();
+            for ((o, r), &acc) in slots.zip(&g.requant).zip(row_acc) {
+                *o = r.apply(acc);
+            }
+        }
+        base += god;
+    }
+    out
+}
+
+/// The FC head through the same sliced kernels (`M = 1`): pooled u8
+/// features in, `f32` logits out via the per-class dequant scale.
+pub fn fc_logits(pooled: &[u8], l: &XmpLayer, pl: &PackedLayer, fast: bool) -> Vec<f32> {
+    let cols: Vec<i16> = pooled.iter().map(|&v| v as i16).collect();
+    let kdim = pooled.len();
+    let mut logits = Vec::with_capacity(l.od as usize);
+    for (g, pg) in l.groups.iter().zip(&pl.groups) {
+        let accs = if fast {
+            gemm_sliced_fast(&cols, 1, pg)
+        } else {
+            gemm_sliced_reference(&cols, 1, kdim, &g.codes, pg.od, pg.wq, pg.k)
+        };
+        for (&acc, &scale) in accs.iter().zip(&pg.scales) {
+            logits.push(acc as f32 * scale);
+        }
+    }
+    logits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_pad_geometry() {
+        // 3x3/1 on 32: out 32, pad 1. 3x3/2 on 32: out 16, pad 0 (SAME
+        // puts the single pad pixel at the end). 1x1/1: no pad.
+        assert_eq!(same_pad(32, 3, 1), (32, 1));
+        assert_eq!(same_pad(32, 3, 2), (16, 0));
+        assert_eq!(same_pad(32, 1, 1), (32, 0));
+        assert_eq!(same_pad(7, 3, 2), (4, 1));
+        // 7x7/2 on 224 (ResNet conv1): out 112, pad_total 5, leading 2.
+        assert_eq!(same_pad(224, 7, 2), (112, 2));
+    }
+
+    #[test]
+    fn im2col_identity_kernel() {
+        // 1x1/1 im2col is the identity layout (pixels-major, channels
+        // inner — exactly the NHWC input).
+        let input: Vec<u8> = (0u8..12).collect(); // 2x2 map, 3 channels
+        let (cols, m, kdim) = im2col(&input, 2, 3, 1, 1);
+        assert_eq!((m, kdim), (4, 3));
+        assert_eq!(cols, input.iter().map(|&v| v as i16).collect::<Vec<i16>>());
+    }
+
+    #[test]
+    fn im2col_pads_with_zeros() {
+        // 3x3 kernel on a 1x1 single-channel map: only the center tap is
+        // real; the 8 surrounding taps are padding.
+        let (cols, m, kdim) = im2col(&[7u8], 1, 1, 3, 1);
+        assert_eq!((m, kdim), (1, 9));
+        assert_eq!(cols.iter().filter(|&&v| v != 0).count(), 1);
+        assert_eq!(cols[4], 7); // center of the 3x3 patch
+    }
+
+    #[test]
+    fn conv_identity_weights_pass_through() {
+        // 1x1 conv, single channel, weight code 1, requant scale 1 (mult
+        // 2^shift / 2^shift): output == input.
+        let l = XmpLayer {
+            name: "id".into(),
+            kind: crate::cnn::LayerKind::Conv,
+            ih: 3,
+            iw: 1,
+            od: 1,
+            k: 1,
+            s: 1,
+            groups: vec![crate::xmp::GroupWeights {
+                wq: 2,
+                od: 1,
+                codes: vec![1],
+                requant: vec![crate::xmp::Requant { mult: 256, shift: 8 }],
+                scales: vec![1.0],
+            }],
+        };
+        let pl = PackedLayer {
+            groups: vec![crate::xmp::pack::pack_group(
+                &[1],
+                1,
+                1,
+                2,
+                2,
+                vec![crate::xmp::Requant { mult: 256, shift: 8 }],
+                vec![1.0],
+            )],
+        };
+        let input: Vec<u8> = vec![0, 50, 100, 150, 200, 250, 3, 9, 27];
+        assert_eq!(conv_forward(&input, &l, &pl, true), input);
+        assert_eq!(conv_forward(&input, &l, &pl, false), input);
+        assert_eq!(conv_forward_i64(&input, &l), input);
+    }
+}

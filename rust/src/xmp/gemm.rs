@@ -1,0 +1,243 @@
+//! Integer GEMM kernels over sliced-digit operands — the engine's MAC
+//! datapath.
+//!
+//! Operands: an im2col patch matrix `cols` (`M × kdim`, u8 activations
+//! widened to `i16` once at extraction) and one channel group's weights.
+//! Output: exact `i64` accumulators, `M × od` row-major, which the caller
+//! requantizes per channel. Three kernels compute the same function:
+//!
+//! - [`gemm_codes_i64`] — ground truth: direct `Σ a·w`, no slicing.
+//! - [`gemm_sliced_reference`] — the scalar reference: digits extracted
+//!   on the fly with [`crate::quant::slicing::slice_digit`] and shift-add
+//!   recombined per MAC; transparently the Fig 1b PPG + shifted adder
+//!   tree, and the baseline `cargo bench --bench xmp` measures against.
+//! - [`gemm_sliced_fast`] — the serving hot path: digit-plane-major
+//!   packed weights, `i32` per-slice partial accumulators, scoped-thread
+//!   fan-out over im2col rows.
+//!
+//! All three are property-tested bit-identical across every
+//! `(wq, k)` pair including partial top digits; the fast path's `i32`
+//! partials are exact because [`crate::xmp::pack::MAX_KDIM`] bounds the
+//! reduction depth.
+
+use super::pack::PackedGroup;
+use crate::quant::slicing::{n_slices, slice_digit};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Plain `i64` ground truth: direct `Σ a·w` per output element.
+pub fn gemm_codes_i64(cols: &[i16], m: usize, kdim: usize, codes: &[i32], od: usize) -> Vec<i64> {
+    assert_eq!(cols.len(), m * kdim);
+    assert_eq!(codes.len(), od * kdim);
+    let mut out = vec![0i64; m * od];
+    for (row_out, a) in out.chunks_mut(od).zip(cols.chunks_exact(kdim)) {
+        for (o, w) in row_out.iter_mut().zip(codes.chunks_exact(kdim)) {
+            let mut acc = 0i64;
+            for (&x, &c) in a.iter().zip(w) {
+                acc += x as i64 * c as i64;
+            }
+            *o = acc;
+        }
+    }
+    out
+}
+
+/// Scalar sliced reference kernel: for every MAC, decompose the weight
+/// into `ceil(wq/k)` digits on the fly and accumulate each digit's
+/// partial product at its shift weight. Single-threaded, unpacked,
+/// allocation-free — slow, but the algebra is the module's correctness
+/// anchor stated in code.
+pub fn gemm_sliced_reference(
+    cols: &[i16],
+    m: usize,
+    kdim: usize,
+    codes: &[i32],
+    od: usize,
+    wq: u32,
+    k: u32,
+) -> Vec<i64> {
+    assert_eq!(cols.len(), m * kdim);
+    assert_eq!(codes.len(), od * kdim);
+    let s = n_slices(wq, k);
+    let mut out = vec![0i64; m * od];
+    for (row_out, a) in out.chunks_mut(od).zip(cols.chunks_exact(kdim)) {
+        for (o, w) in row_out.iter_mut().zip(codes.chunks_exact(kdim)) {
+            let mut acc = 0i64;
+            for (&x, &c) in a.iter().zip(w) {
+                for si in 0..s {
+                    acc += (x as i64 * slice_digit(c as i64, wq, k, si)) << (k * si);
+                }
+            }
+            *o = acc;
+        }
+    }
+    out
+}
+
+/// Number of xmp GEMMs currently fanning out threads: concurrent kernels
+/// (one serving worker per hosted variant may be inside a GEMM at once)
+/// split the machine instead of each grabbing `available_parallelism()` —
+/// the same discipline as `array::search`.
+static ACTIVE_GEMMS: AtomicUsize = AtomicUsize::new(0);
+
+struct GemmSlot;
+
+impl GemmSlot {
+    fn acquire() -> (GemmSlot, usize) {
+        let active = ACTIVE_GEMMS.fetch_add(1, Ordering::Relaxed) + 1;
+        let avail = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        (GemmSlot, (avail / active).max(1))
+    }
+}
+
+impl Drop for GemmSlot {
+    fn drop(&mut self) {
+        ACTIVE_GEMMS.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Inner loop of the fast path for one im2col row: per slice, a tight
+/// `i32` dot product over the digit plane's channel row, recombined by
+/// shift-add. Exact: the plane digits are `slice_signed`'s and the `i32`
+/// partials cannot overflow within [`crate::xmp::pack::MAX_KDIM`].
+#[inline]
+fn fast_row(a: &[i16], g: &PackedGroup, row_out: &mut [i64]) {
+    let kdim = g.kdim;
+    for (n, o) in row_out.iter_mut().enumerate() {
+        let mut acc = 0i64;
+        for (si, plane) in g.planes.iter().enumerate() {
+            let wrow = &plane[n * kdim..(n + 1) * kdim];
+            let mut p = 0i32;
+            for (&x, &d) in a.iter().zip(wrow) {
+                p += x as i32 * d as i32;
+            }
+            acc += (p as i64) << (g.k as usize * si);
+        }
+        *o = acc;
+    }
+}
+
+/// Fast path: digit-plane-major layout, `i32` per-slice partials,
+/// scoped-thread fan-out over im2col rows. Bit-identical to
+/// [`gemm_sliced_reference`] — same digits, same exact integer algebra;
+/// only the evaluation order and layout differ.
+pub fn gemm_sliced_fast(cols: &[i16], m: usize, g: &PackedGroup) -> Vec<i64> {
+    assert_eq!(cols.len(), m * g.kdim);
+    debug_assert!(g.kdim <= super::pack::MAX_KDIM);
+    let mut out = vec![0i64; m * g.od];
+    if m == 0 || g.od == 0 {
+        return out;
+    }
+    // Below this many digit-MACs, thread spawn/teardown rivals the kernel
+    // itself (serving runs one GEMM per channel group per layer per image;
+    // small-CNN groups are ~1M MACs and sub-millisecond) — stay inline.
+    const MIN_WORK_TO_FAN_OUT: usize = 4_000_000;
+    let work = m * g.kdim * g.od * g.planes.len();
+    let (_slot, budget) = GemmSlot::acquire();
+    let n_threads = budget.min(m).max(1);
+    if n_threads == 1 || work < MIN_WORK_TO_FAN_OUT {
+        for (row_out, a) in out.chunks_mut(g.od).zip(cols.chunks_exact(g.kdim)) {
+            fast_row(a, g, row_out);
+        }
+        return out;
+    }
+    let rows_per_chunk = m.div_ceil(n_threads);
+    std::thread::scope(|sc| {
+        for (ci, chunk) in out.chunks_mut(rows_per_chunk * g.od).enumerate() {
+            sc.spawn(move || {
+                let m0 = ci * rows_per_chunk;
+                for (j, row_out) in chunk.chunks_mut(g.od).enumerate() {
+                    let a = &cols[(m0 + j) * g.kdim..(m0 + j + 1) * g.kdim];
+                    fast_row(a, g, row_out);
+                }
+            });
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check_eq, forall};
+    use crate::util::rng::Rng;
+    use crate::xmp::pack::pack_group;
+    use crate::xmp::Requant;
+
+    fn random_case(rng: &mut Rng) -> (Vec<i16>, usize, usize, Vec<i32>, usize, u32, u32) {
+        let wq = *rng.choose(&[1u32, 2, 3, 4, 5, 6, 7, 8]);
+        let k = *rng.choose(&[1u32, 2, 3, 4, 5, 8]);
+        let (m, kdim, od) = (1 + rng.range(0, 6), 1 + rng.range(0, 14), 1 + rng.range(0, 6));
+        let cols: Vec<i16> = (0..m * kdim).map(|_| rng.range_i64(0, 255) as i16).collect();
+        let (lo, hi) = (-(1i64 << (wq - 1)), (1i64 << (wq - 1)) - 1);
+        let codes: Vec<i32> = (0..od * kdim).map(|_| rng.range_i64(lo, hi) as i32).collect();
+        (cols, m, kdim, codes, od, wq, k)
+    }
+
+    #[test]
+    fn prop_all_three_kernels_bit_identical() {
+        // The module's anchor: plain i64 == on-the-fly sliced reference ==
+        // packed fast path, across every (wq, k) incl. partial top digits.
+        forall(800, |rng| {
+            let (cols, m, kdim, codes, od, wq, k) = random_case(rng);
+            let plain = gemm_codes_i64(&cols, m, kdim, &codes, od);
+            let refr = gemm_sliced_reference(&cols, m, kdim, &codes, od, wq, k);
+            check_eq(refr.clone(), plain.clone(), "reference vs plain i64")?;
+            let g = pack_group(
+                &codes,
+                od,
+                kdim,
+                wq,
+                k,
+                vec![Requant::from_scale(0.5); od],
+                vec![1.0; od],
+            );
+            let fast = gemm_sliced_fast(&cols, m, &g);
+            check_eq(fast, plain, "fast vs plain i64")
+        });
+    }
+
+    #[test]
+    fn fast_path_threads_agree_with_single_thread() {
+        // Work above MIN_WORK_TO_FAN_OUT (512·128·32·3 ≈ 6.3M digit-MACs)
+        // so the scoped fan-out engages on multi-core machines;
+        // thread-count must not affect the bits.
+        let mut rng = Rng::new(99);
+        let (m, kdim, od, wq, k) = (512usize, 128usize, 32usize, 5u32, 2u32);
+        let cols: Vec<i16> = (0..m * kdim).map(|_| rng.range_i64(0, 255) as i16).collect();
+        let codes: Vec<i32> = (0..od * kdim).map(|_| rng.range_i64(-16, 15) as i32).collect();
+        let g = pack_group(
+            &codes,
+            od,
+            kdim,
+            wq,
+            k,
+            vec![Requant::from_scale(0.5); od],
+            vec![1.0; od],
+        );
+        let fast = gemm_sliced_fast(&cols, m, &g);
+        assert_eq!(fast, gemm_codes_i64(&cols, m, kdim, &codes, od));
+    }
+
+    #[test]
+    fn known_tiny_gemm() {
+        // 1x2 · 2x1: a = [3, 5], w = [-2, 1] -> -6 + 5 = -1, across slicings.
+        let cols = vec![3i16, 5];
+        let codes = vec![-2i32, 1];
+        assert_eq!(gemm_codes_i64(&cols, 1, 2, &codes, 1), vec![-1]);
+        for k in [1u32, 2, 3] {
+            assert_eq!(
+                gemm_sliced_reference(&cols, 1, 2, &codes, 1, 3, k),
+                vec![-1],
+                "k={k}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_dimensions_are_safe() {
+        let g = pack_group(&[], 0, 4, 2, 2, vec![], vec![]);
+        assert!(gemm_sliced_fast(&[], 0, &g).is_empty());
+    }
+}

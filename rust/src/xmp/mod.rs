@@ -1,0 +1,570 @@
+//! xmp — a native **truly mixed-precision** CNN execution engine.
+//!
+//! Everything below the serving gateway used to be a *model* of compute
+//! (DSE cost models, virtual clocks, mock logits). This module is the
+//! compute: a dependency-free, multithreaded integer inference engine
+//! whose inner MAC **is** the paper's sliced-digit datapath (Fig 1b).
+//! LSQ-quantized weights are decomposed into `k`-bit digit planes
+//! (exactly [`crate::quant::slicing::slice_signed`]: low digits unsigned,
+//! top digit signed, possibly partial), and every convolution accumulates
+//! per-slice partial products that are recombined by shift-add — so the
+//! two's-complement digit identity the property tests anchor is what the
+//! serving path actually executes.
+//!
+//! Pipeline, one layer at a time ([`conv`]):
+//! `u8 activations → im2col → per-channel-group sliced GEMM ([`gemm`]) →
+//! per-channel integer requantize ([`Requant`]) → u8 activations`,
+//! with the FC head running through the same kernels (M = 1) and
+//! dequantizing to `f32` logits. Channel groups at different word-lengths
+//! coexist *within* one layer — the "truly mixed" part — honoring
+//! layerwise and channelwise [`crate::serving::VariantSpec`] plans from
+//! the [`crate::planner`].
+//!
+//! Two kernels compute every layer:
+//! - the **scalar reference** ([`gemm::gemm_sliced_reference`]): digit
+//!   extraction on the fly via [`crate::quant::slicing::slice_digit`],
+//!   transparently the PPG + shifted-adder-tree algebra;
+//! - the **fast path** ([`gemm::gemm_sliced_fast`]): digit-plane-major
+//!   packed weights ([`pack`]), `i32` per-slice accumulators, scoped-thread
+//!   row fan-out (same concurrency discipline as [`crate::array::search`]).
+//!
+//! Both are property-tested bit-identical to a plain `i64` convolution,
+//! and [`backend::XmpBackend`] re-verifies fast == reference on a probe
+//! image at warm-up before a variant is announced ready. `cargo bench
+//! --bench xmp` tracks the fast-path-vs-reference baseline
+//! (`BENCH_xmp.json`); reproduction notes live in EXPERIMENTS.md
+//! §Execution.
+
+pub mod backend;
+pub mod conv;
+pub mod gemm;
+pub mod pack;
+
+pub use backend::XmpBackend;
+pub use pack::{pack_model, PackedModel};
+
+use crate::cnn::channelwise::group_channel_counts;
+use crate::cnn::{ChannelGroup, Cnn, LayerKind};
+use crate::quant::lsq::{QuantParams, Quantizer};
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+
+/// Engine-wide knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct XmpConfig {
+    /// Digit (operand-slice) width `k` in bits — the PPG operand width of
+    /// the simulated BP-ST design. Every group's weights decompose into
+    /// `ceil(w_Q / k)` digit planes.
+    pub k: u32,
+    /// Base seed for synthetic weight generation; the effective seed also
+    /// mixes in the planned CNN's fingerprint, so two independently built
+    /// copies of the same (base, plan) agree bit-for-bit.
+    pub seed: u64,
+}
+
+impl Default for XmpConfig {
+    fn default() -> Self {
+        XmpConfig { k: 2, seed: 0xA11CE }
+    }
+}
+
+/// Integer requantization of an accumulator back to an unsigned 8-bit
+/// activation: `clamp((acc·mult + 2^{shift-1}) >> shift, 0, 255)` —
+/// round-half-up fixed-point scaling, with the clamp at 0 doubling as the
+/// ReLU. Pure function of `acc`, so the scalar reference and the fast
+/// path requantize identically by construction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Requant {
+    pub mult: i64,
+    pub shift: u32,
+}
+
+impl Requant {
+    /// Fixed-point `(mult, shift)` approximating the real factor `r`
+    /// (`0 < r < 128`): `mult = round(r·2^shift)` with `shift` chosen so
+    /// `mult` lands in `[128, 255]` — 8-bit multiplier precision, ~0.4%
+    /// worst-case scale error.
+    pub fn from_scale(r: f64) -> Requant {
+        assert!(
+            r.is_finite() && r > 0.0 && r < 128.0,
+            "requantize scale must be in (0, 128), got {r}"
+        );
+        let mut shift = 0u32;
+        let mut m = r;
+        while m < 128.0 && shift < 62 {
+            m *= 2.0;
+            shift += 1;
+        }
+        Requant {
+            mult: (m.round() as i64).clamp(1, 255),
+            shift: shift.max(1),
+        }
+    }
+
+    /// Apply to an exact integer accumulator.
+    #[inline]
+    pub fn apply(&self, acc: i64) -> u8 {
+        let q = (acc * self.mult + (1i64 << (self.shift - 1))) >> self.shift;
+        q.clamp(0, 255) as u8
+    }
+}
+
+/// One channel group's weights within a layer: every channel in the group
+/// shares the word-length `wq`.
+#[derive(Clone, Debug)]
+pub struct GroupWeights {
+    /// Weight word-length of this group (bits).
+    pub wq: u32,
+    /// Output channels in this group.
+    pub od: u32,
+    /// Integer weight codes, `od * kdim` row-major per output channel,
+    /// each in `[-2^{wq-1}, 2^{wq-1} - 1]`.
+    pub codes: Vec<i32>,
+    /// Per-channel requantization back to u8 activations (len `od`).
+    pub requant: Vec<Requant>,
+    /// Per-channel dequantization scale (the LSQ step γ), used for the
+    /// `f32` logits of the FC head (len `od`).
+    pub scales: Vec<f32>,
+}
+
+/// One executable layer: geometry (the [`crate::cnn::Layer`] vocabulary)
+/// plus channel-group weights. `k` is the *spatial* kernel size; the digit
+/// width lives in [`XmpConfig::k`].
+#[derive(Clone, Debug)]
+pub struct XmpLayer {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Input feature-map height/width (square).
+    pub ih: u32,
+    /// Input channels.
+    pub iw: u32,
+    /// Output channels (sum of the group `od`s).
+    pub od: u32,
+    /// Spatial kernel size (square); 1 for FC.
+    pub k: u32,
+    /// Stride.
+    pub s: u32,
+    pub groups: Vec<GroupWeights>,
+}
+
+impl XmpLayer {
+    /// Reduction depth of one output element (`K²·I_W`).
+    pub fn kdim(&self) -> usize {
+        (self.k * self.k * self.iw) as usize
+    }
+
+    /// Output spatial size (SAME padding, `ceil(I_H / S)` as in
+    /// [`crate::cnn::Layer::oh`]).
+    pub fn oh(&self) -> u32 {
+        self.ih.div_ceil(self.s)
+    }
+}
+
+/// An executable mixed-precision CNN: geometry plus LSQ-quantized integer
+/// weights, in raw (unpacked) form. [`pack::pack_model`] lowers it to
+/// digit planes for the kernels.
+#[derive(Clone, Debug)]
+pub struct XmpModel {
+    pub name: String,
+    pub input_hw: u32,
+    pub input_channels: u32,
+    pub classes: u32,
+    pub cfg: XmpConfig,
+    /// Input quantization step: `a = round(clamp(v / in_scale, 0, 255))`.
+    pub in_scale: f32,
+    pub layers: Vec<XmpLayer>,
+}
+
+/// Estimated |activation| scale feeding the requantize heuristic: inputs
+/// are u8 with std ≈ 74 when uniform, and we map ~2.5σ of the accumulator
+/// distribution onto the 8-bit output range.
+const REQUANT_SIGMA_TIMES_ASTD: f64 = 185.0;
+
+impl XmpModel {
+    /// Generate a synthetic LSQ-quantized model for `base` under a
+    /// per-layer precision plan (one [`ChannelGroup`] list per base layer,
+    /// as produced by [`crate::serving::VariantSpec::per_layer_plan`] or a
+    /// planner [`crate::planner::Assignment`]). Per channel, weights are
+    /// drawn `N(0, 1/√kdim)` and quantized with an LSQ-initialized
+    /// quantizer at the group's word-length; requantization maps the
+    /// accumulator's L2-norm-estimated spread back onto u8. Deterministic
+    /// in `(base, plan, cfg.seed)`.
+    pub fn synthetic(base: &Cnn, plan: &[Vec<ChannelGroup>], cfg: XmpConfig) -> Result<XmpModel> {
+        if plan.len() != base.layers.len() {
+            crate::bail!(
+                "plan has {} layer entries for a {}-layer CNN",
+                plan.len(),
+                base.layers.len()
+            );
+        }
+        // `apply_plan` validates the plan (fractions, FC splits) and its
+        // fingerprint pins the synthetic weights to the planned topology.
+        let planned = crate::cnn::channelwise::apply_plan(base, plan);
+        let seed = cfg.seed ^ planned.fingerprint();
+        let mut layers = Vec::with_capacity(base.layers.len());
+        for (li, (l, groups)) in base.layers.iter().zip(plan).enumerate() {
+            let mut rng = Rng::new(seed ^ (li as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let counts = group_channel_counts(l.od, groups);
+            let kdim = (l.k * l.k * l.iw) as usize;
+            let wstd = 1.0 / (kdim.max(1) as f64).sqrt();
+            let mut gws = Vec::new();
+            for (g, &od) in groups.iter().zip(&counts) {
+                if od == 0 {
+                    continue;
+                }
+                let mut codes = Vec::with_capacity(od as usize * kdim);
+                let mut requant = Vec::with_capacity(od as usize);
+                let mut scales = Vec::with_capacity(od as usize);
+                for _ in 0..od {
+                    let vals: Vec<f64> = (0..kdim).map(|_| rng.normal() * wstd).collect();
+                    let q = Quantizer::init_from_data(QuantParams::weights(g.wq), &vals);
+                    let ints = q.to_ints(&vals);
+                    let l2 = ints
+                        .iter()
+                        .map(|&c| (c as f64) * (c as f64))
+                        .sum::<f64>()
+                        .sqrt();
+                    requant.push(Requant::from_scale(
+                        255.0 / (REQUANT_SIGMA_TIMES_ASTD * l2.max(1.0)),
+                    ));
+                    scales.push(q.gamma as f32);
+                    codes.extend(ints.iter().map(|&c| c as i32));
+                }
+                gws.push(GroupWeights {
+                    wq: g.wq,
+                    od,
+                    codes,
+                    requant,
+                    scales,
+                });
+            }
+            layers.push(XmpLayer {
+                name: l.name.clone(),
+                kind: l.kind,
+                ih: l.ih,
+                iw: l.iw,
+                od: l.od,
+                k: l.k,
+                s: l.s,
+                groups: gws,
+            });
+        }
+        Ok(XmpModel {
+            name: format!("{} [xmp synthetic]", planned.name),
+            input_hw: base.input_hw,
+            input_channels: base.input_channels,
+            classes: base.classes,
+            cfg,
+            in_scale: 0.04,
+            layers,
+        })
+    }
+
+    /// Flattened input image length (NHWC).
+    pub fn image_len(&self) -> usize {
+        (self.input_hw * self.input_hw * self.input_channels) as usize
+    }
+
+    /// Quantize a flat NHWC f32 image to u8 activation codes.
+    pub fn quantize_input(&self, image: &[f32]) -> Vec<u8> {
+        image
+            .iter()
+            .map(|&v| (v / self.in_scale).round().clamp(0.0, 255.0) as u8)
+            .collect()
+    }
+
+    /// Run one image to `f32` logits through the packed kernels.
+    /// `fast = false` routes every layer through the scalar sliced
+    /// reference kernel instead of the digit-plane fast path; the two are
+    /// bit-identical (property-tested, and probed at backend warm-up).
+    ///
+    /// The layer list is executed sequentially. Two ResNet-IR idioms the
+    /// shape chain doesn't encode are reconstructed structurally: an
+    /// elided stride-2 max-pool is inserted when the next layer expects a
+    /// halved map at unchanged depth, and a branch layer whose input
+    /// matches an *earlier* activation (the `downsample` projections) is
+    /// run from that saved activation and merged into the running one by
+    /// saturating add. Identity skips carry no IR at all and are not
+    /// modeled — the kernels, not the topology, are the contract here.
+    pub fn forward(&self, packed: &PackedModel, image: &[f32], fast: bool) -> Result<Vec<f32>> {
+        if image.len() != self.image_len() {
+            crate::bail!(
+                "image has {} elements, model expects {}",
+                image.len(),
+                self.image_len()
+            );
+        }
+        let mut cur = self.quantize_input(image);
+        let mut cur_shape = (self.input_hw, self.input_channels);
+        // Activation history for branch layers.
+        let mut history: Vec<((u32, u32), Vec<u8>)> = Vec::new();
+        let mut logits: Option<Vec<f32>> = None;
+        for (l, pl) in self.layers.iter().zip(&packed.layers) {
+            if logits.is_some() {
+                crate::bail!("layer '{}' follows the FC head; unsupported", l.name);
+            }
+            if l.kind == LayerKind::Fc {
+                // Global average pool, then the FC head runs through the
+                // same sliced kernels (M = 1) and dequantizes to logits.
+                let pooled = avg_pool(&cur, cur_shape.0, cur_shape.1);
+                if pooled.len() != l.iw as usize {
+                    crate::bail!(
+                        "FC '{}' expects {} features, pooled map has {}",
+                        l.name,
+                        l.iw,
+                        pooled.len()
+                    );
+                }
+                logits = Some(conv::fc_logits(&pooled, l, pl, fast));
+                continue;
+            }
+            let need = (l.ih, l.iw);
+            if need != cur_shape && cur_shape.1 == l.iw && cur_shape.0.div_ceil(2) == l.ih {
+                // The IR elides conv1's 2x stride max-pool (shapes only).
+                cur = max_pool2(&cur, cur_shape.0, cur_shape.1);
+                cur_shape = (cur_shape.0.div_ceil(2), cur_shape.1);
+            }
+            let (out, branch) = if need == cur_shape {
+                (conv::conv_forward(&cur, l, pl, fast), false)
+            } else {
+                let src = history
+                    .iter()
+                    .rev()
+                    .find(|(s, _)| *s == need)
+                    .ok_or_else(|| {
+                        crate::anyhow!(
+                            "layer '{}' wants a {}x{}-channel input; no live activation matches",
+                            l.name,
+                            l.ih,
+                            l.iw
+                        )
+                    })?;
+                (conv::conv_forward(&src.1, l, pl, fast), true)
+            };
+            let out_shape = (l.oh(), l.od);
+            if branch && out_shape == cur_shape {
+                // Projection shortcut: merge by saturating u8 add.
+                for (c, o) in cur.iter_mut().zip(&out) {
+                    *c = (*c).saturating_add(*o);
+                }
+            } else {
+                history.push((cur_shape, std::mem::take(&mut cur)));
+                cur = out;
+                cur_shape = out_shape;
+            }
+        }
+        match logits {
+            Some(l) => Ok(l),
+            // Conv-only nets: per-channel pooled activations as logits.
+            None => Ok(avg_pool(&cur, cur_shape.0, cur_shape.1)
+                .into_iter()
+                .map(|v| v as f32)
+                .collect()),
+        }
+    }
+}
+
+/// Global average pool over an NHWC u8 map: rounded per-channel mean.
+fn avg_pool(act: &[u8], h: u32, c: u32) -> Vec<u8> {
+    let cs = c as usize;
+    let mut sums = vec![0u64; cs];
+    for px in act.chunks_exact(cs) {
+        for (s, &v) in sums.iter_mut().zip(px) {
+            *s += v as u64;
+        }
+    }
+    let n = (h as u64) * (h as u64);
+    sums.into_iter().map(|s| ((s + n / 2) / n) as u8).collect()
+}
+
+/// 2x2 stride-2 max pool (SAME: edge windows clamp) over an NHWC u8 map.
+fn max_pool2(act: &[u8], h: u32, c: u32) -> Vec<u8> {
+    let oh = h.div_ceil(2);
+    let (hs, cs) = (h as usize, c as usize);
+    let mut out = vec![0u8; (oh * oh) as usize * cs];
+    for oy in 0..oh as usize {
+        for ox in 0..oh as usize {
+            let dst = (oy * oh as usize + ox) * cs;
+            for dy in 0..2usize {
+                for dx in 0..2usize {
+                    let (iy, ix) = (2 * oy + dy, 2 * ox + dx);
+                    if iy >= hs || ix >= hs {
+                        continue;
+                    }
+                    let src = (iy * hs + ix) * cs;
+                    for ch in 0..cs {
+                        out[dst + ch] = out[dst + ch].max(act[src + ch]);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cnn::{resnet, Layer};
+    use crate::util::prop::{check, check_eq, forall};
+
+    fn uniform_plan(base: &Cnn, wq: u32) -> Vec<Vec<ChannelGroup>> {
+        crate::serving::VariantSpec::uniform(wq).per_layer_plan(base)
+    }
+
+    #[test]
+    fn requant_rounds_clamps_and_is_monotone() {
+        let r = Requant::from_scale(0.01);
+        assert!(r.mult >= 128 && r.mult <= 255, "{r:?}");
+        assert_eq!(r.apply(-1_000_000), 0, "negative accs clamp to 0 (ReLU)");
+        assert_eq!(r.apply(1 << 40), 255);
+        forall(2000, |rng| {
+            let r = Requant::from_scale(rng.uniform(1e-4, 1.0));
+            let a = rng.range_i64(-(1 << 30), 1 << 30);
+            let d = rng.range_i64(0, 1 << 20);
+            check(r.apply(a + d) >= r.apply(a), "requantize must be monotone")
+        });
+    }
+
+    #[test]
+    fn requant_matches_real_scale() {
+        forall(500, |rng| {
+            let scale = rng.uniform(1e-4, 1.0);
+            let r = Requant::from_scale(scale);
+            let eff = r.mult as f64 / (1u64 << r.shift) as f64;
+            check(
+                (eff - scale).abs() / scale < 0.005,
+                &format!("{eff} vs {scale}"),
+            )
+        });
+    }
+
+    #[test]
+    fn synthetic_model_shapes_and_ranges() {
+        let base = resnet::resnet_small(1, 10);
+        let plan = uniform_plan(&base, 2);
+        let m = XmpModel::synthetic(&base, &plan, XmpConfig::default()).unwrap();
+        assert_eq!(m.layers.len(), base.layers.len());
+        assert_eq!(m.image_len(), 3072);
+        for (l, b) in m.layers.iter().zip(&base.layers) {
+            assert_eq!(l.od, b.od);
+            let mut total = 0u32;
+            for g in &l.groups {
+                total += g.od;
+                assert_eq!(g.codes.len(), g.od as usize * l.kdim());
+                let (lo, hi) = (-(1i64 << (g.wq - 1)), (1i64 << (g.wq - 1)) - 1);
+                assert!(g.codes.iter().all(|&c| (lo..=hi).contains(&(c as i64))));
+            }
+            assert_eq!(total, l.od);
+        }
+        // Inner layers at w2, edges pinned to 8.
+        assert_eq!(m.layers[0].groups[0].wq, 8);
+        assert_eq!(m.layers[1].groups[0].wq, 2);
+        assert_eq!(m.layers.last().unwrap().groups[0].wq, 8);
+    }
+
+    #[test]
+    fn synthetic_is_deterministic_across_builds() {
+        let base = resnet::resnet_small(1, 10);
+        let plan = uniform_plan(&base, 4);
+        let a = XmpModel::synthetic(&base, &plan, XmpConfig::default()).unwrap();
+        let b = XmpModel::synthetic(&base, &plan, XmpConfig::default()).unwrap();
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            for (ga, gb) in la.groups.iter().zip(&lb.groups) {
+                assert_eq!(ga.codes, gb.codes);
+                assert_eq!(ga.requant, gb.requant);
+            }
+        }
+        // A different seed moves the weights.
+        let c = XmpModel::synthetic(&base, &plan, XmpConfig { seed: 7, ..XmpConfig::default() })
+            .unwrap();
+        assert_ne!(a.layers[0].groups[0].codes, c.layers[0].groups[0].codes);
+    }
+
+    #[test]
+    fn forward_runs_resnet8_and_kernels_agree() {
+        let base = resnet::resnet_small(1, 10);
+        let plan = uniform_plan(&base, 2);
+        let m = XmpModel::synthetic(&base, &plan, XmpConfig::default()).unwrap();
+        let packed = pack::pack_model(&m);
+        let img = vec![0.5f32; m.image_len()];
+        let fast = m.forward(&packed, &img, true).unwrap();
+        let refr = m.forward(&packed, &img, false).unwrap();
+        assert_eq!(fast.len(), 10);
+        for (a, b) in fast.iter().zip(&refr) {
+            assert_eq!(a.to_bits(), b.to_bits(), "fast/reference logits diverged");
+        }
+        // Deterministic across calls.
+        let again = m.forward(&packed, &img, true).unwrap();
+        assert_eq!(fast, again);
+    }
+
+    #[test]
+    fn forward_inserts_elided_max_pool() {
+        // conv(8px) -> conv expecting 4px at unchanged depth: the IR elides
+        // the 2x pool; forward must insert it rather than error.
+        let base = Cnn {
+            name: "pooltest".into(),
+            input_hw: 8,
+            input_channels: 2,
+            classes: 3,
+            layers: vec![
+                Layer::conv("a", 8, 2, 4, 3, 1),
+                Layer::conv("b", 4, 4, 6, 3, 1),
+                Layer::fc("fc", 6, 3),
+            ],
+        };
+        let plan = uniform_plan(&base, 4);
+        let m = XmpModel::synthetic(&base, &plan, XmpConfig::default()).unwrap();
+        let packed = pack::pack_model(&m);
+        let img = vec![1.0; m.image_len()];
+        let logits = m.forward(&packed, &img, true).unwrap();
+        assert_eq!(logits.len(), 3);
+    }
+
+    #[test]
+    fn forward_rejects_bad_image_len() {
+        let base = resnet::resnet_small(1, 10);
+        let plan = uniform_plan(&base, 8);
+        let m = XmpModel::synthetic(&base, &plan, XmpConfig::default()).unwrap();
+        let packed = pack::pack_model(&m);
+        assert!(m.forward(&packed, &[0.0; 7], true).is_err());
+    }
+
+    #[test]
+    fn pools_behave() {
+        // avg: channel means rounded; max: stride-2 windows with edge clamp.
+        let act = vec![0u8, 10, 2, 10, 4, 10, 6, 10]; // 2x2 map, 2 channels
+        assert_eq!(avg_pool(&act, 2, 2), vec![3, 10]);
+        let m = max_pool2(&act, 2, 2);
+        assert_eq!(m, vec![6, 10]);
+        // 3x3 single-channel map: SAME pooling -> 2x2 output.
+        let act3: Vec<u8> = (1..=9).collect();
+        assert_eq!(max_pool2(&act3, 3, 1), vec![5, 6, 8, 9]);
+    }
+
+    #[test]
+    fn prop_avg_pool_bounds() {
+        forall(300, |rng| {
+            let h = 1 + rng.range(0, 6) as u32;
+            let c = 1 + rng.range(0, 4) as u32;
+            let act: Vec<u8> = (0..(h * h * c) as usize)
+                .map(|_| rng.range(0, 256) as u8)
+                .collect();
+            let p = avg_pool(&act, h, c);
+            check_eq(p.len(), c as usize, "one value per channel")?;
+            for (ch, &v) in p.iter().enumerate() {
+                let vals: Vec<u8> = act
+                    .chunks_exact(c as usize)
+                    .map(|px| px[ch])
+                    .collect();
+                let (lo, hi) = (
+                    *vals.iter().min().unwrap(),
+                    *vals.iter().max().unwrap(),
+                );
+                check(v >= lo && v <= hi, "mean within [min, max]")?;
+            }
+            Ok(())
+        });
+    }
+}

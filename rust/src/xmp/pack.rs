@@ -1,0 +1,234 @@
+//! Digit-plane packing: lower LSQ-quantized weight codes into the layout
+//! the sliced kernels execute from.
+//!
+//! A group of `od` channels at word-length `wq` becomes `S = ceil(wq/k)`
+//! **digit planes**: plane `s` holds digit `s` of every `(channel, k)`
+//! weight, row-major per output channel. The digits are exactly
+//! [`crate::quant::slicing::slice_signed`]'s — low planes unsigned in
+//! `[0, 2^k)`, the top plane signed over the (possibly partial) remaining
+//! bits — so `Σ_s plane_s[i] · 2^{k·s}` reconstructs every code, and the
+//! fast GEMM's shift-add recombination is the two's-complement identity
+//! itself. Digits are stored in `i16` lanes (digit-granular, not sub-byte:
+//! the MAC loop reads one lane per operand); [`PackedGroup::packed_bits`]
+//! reports the equivalent at-rest bit-packed footprint, which is what the
+//! Table III models count.
+
+use super::Requant;
+use crate::quant::slicing::{n_slices, slice_signed};
+
+/// Largest reduction depth (`K²·I_W`) the `i32` per-slice accumulators
+/// tolerate: `kdim · 255 · 255 < 2^31` with headroom. Every CNN in the
+/// repo is far below this (ResNet-152 peaks at 4608).
+pub const MAX_KDIM: usize = 33_000;
+
+/// One channel group's weights in digit-plane-major layout.
+#[derive(Clone, Debug)]
+pub struct PackedGroup {
+    /// Weight word-length (bits).
+    pub wq: u32,
+    /// Digit width (bits) — [`super::XmpConfig::k`].
+    pub k: u32,
+    /// Number of digit planes, `ceil(wq / k)`.
+    pub n_slices: u32,
+    /// Output channels in this group.
+    pub od: usize,
+    /// Reduction depth per output element.
+    pub kdim: usize,
+    /// `n_slices` planes of `od * kdim` digits, row-major per channel.
+    pub planes: Vec<Vec<i16>>,
+    /// Per-channel requantization (len `od`).
+    pub requant: Vec<Requant>,
+    /// Per-channel dequantization scale for logits (len `od`).
+    pub scales: Vec<f32>,
+}
+
+impl PackedGroup {
+    /// At-rest footprint if the planes were stored bit-packed: `k` bits
+    /// per low-plane digit, `wq - k·(S-1)` bits per top-plane digit —
+    /// i.e. exactly `wq` bits per weight, however it is sliced.
+    pub fn packed_bits(&self) -> u64 {
+        let weights = (self.od * self.kdim) as u64;
+        let mut bits = 0u64;
+        for s in 0..self.n_slices {
+            let digit_bits = if s + 1 == self.n_slices {
+                self.wq - self.k * (self.n_slices - 1)
+            } else {
+                self.k
+            };
+            bits += weights * digit_bits as u64;
+        }
+        bits
+    }
+}
+
+/// Pack one channel group's codes into digit planes. `codes` is
+/// `od * kdim`, row-major per output channel, every code within the
+/// signed `wq`-bit range (enforced by [`slice_signed`]).
+pub fn pack_group(
+    codes: &[i32],
+    od: usize,
+    kdim: usize,
+    wq: u32,
+    k: u32,
+    requant: Vec<Requant>,
+    scales: Vec<f32>,
+) -> PackedGroup {
+    assert_eq!(codes.len(), od * kdim, "codes must be od*kdim");
+    assert_eq!(requant.len(), od, "one requantizer per channel");
+    assert!(
+        kdim <= MAX_KDIM,
+        "reduction depth {kdim} exceeds the i32 accumulator bound {MAX_KDIM}"
+    );
+    // MAX_KDIM's overflow analysis assumes digits of at most 8 bits
+    // (kdim · 255 · 255 < 2^31); the widest digit is min(k, wq) bits.
+    assert!(
+        wq.min(k) <= 8,
+        "digit width {} bits exceeds the 8-bit bound the i32 partials assume",
+        wq.min(k)
+    );
+    let s = n_slices(wq, k);
+    let mut planes = vec![vec![0i16; od * kdim]; s as usize];
+    for (idx, &c) in codes.iter().enumerate() {
+        for (si, d) in slice_signed(c as i64, wq, k).into_iter().enumerate() {
+            planes[si][idx] = d as i16;
+        }
+    }
+    PackedGroup {
+        wq,
+        k,
+        n_slices: s,
+        od,
+        kdim,
+        planes,
+        requant,
+        scales,
+    }
+}
+
+/// One layer's packed groups, in the same order as
+/// [`super::XmpLayer::groups`].
+#[derive(Clone, Debug)]
+pub struct PackedLayer {
+    pub groups: Vec<PackedGroup>,
+}
+
+/// A whole model lowered to digit planes.
+#[derive(Clone, Debug)]
+pub struct PackedModel {
+    pub layers: Vec<PackedLayer>,
+}
+
+impl PackedModel {
+    /// Total at-rest weight footprint in bits (bit-packed equivalent).
+    pub fn packed_bits(&self) -> u64 {
+        self.layers
+            .iter()
+            .flat_map(|l| l.groups.iter().map(PackedGroup::packed_bits))
+            .sum()
+    }
+}
+
+/// Lower every layer of `m` to digit planes at the model's digit width.
+pub fn pack_model(m: &super::XmpModel) -> PackedModel {
+    let layers = m
+        .layers
+        .iter()
+        .map(|l| PackedLayer {
+            groups: l
+                .groups
+                .iter()
+                .map(|g| {
+                    pack_group(
+                        &g.codes,
+                        g.od as usize,
+                        l.kdim(),
+                        g.wq,
+                        m.cfg.k,
+                        g.requant.clone(),
+                        g.scales.clone(),
+                    )
+                })
+                .collect(),
+        })
+        .collect();
+    PackedModel { layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, check_eq, forall};
+
+    #[test]
+    fn prop_planes_reconstruct_codes() {
+        // Σ_s plane_s[i] << k·s == code[i] for every weight — the packed
+        // form carries the exact two's-complement decomposition.
+        forall(500, |rng| {
+            let wq = *rng.choose(&[1u32, 2, 3, 4, 5, 6, 7, 8]);
+            let k = *rng.choose(&[1u32, 2, 3, 4, 8]);
+            let (od, kdim) = (1 + rng.range(0, 4), 1 + rng.range(0, 9));
+            let (lo, hi) = (-(1i64 << (wq - 1)), (1i64 << (wq - 1)) - 1);
+            let codes: Vec<i32> = (0..od * kdim)
+                .map(|_| rng.range_i64(lo, hi) as i32)
+                .collect();
+            let requant = vec![Requant::from_scale(0.01); od];
+            let g = pack_group(&codes, od, kdim, wq, k, requant, vec![1.0; od]);
+            check_eq(g.planes.len() as u32, g.n_slices, "plane count")?;
+            for (idx, &c) in codes.iter().enumerate() {
+                let recon: i64 = g
+                    .planes
+                    .iter()
+                    .enumerate()
+                    .map(|(s, p)| (p[idx] as i64) << (k as usize * s))
+                    .sum();
+                check_eq(recon, c as i64, "plane reconstruction")?;
+            }
+            // Low planes unsigned < 2^k, top plane within its signed range.
+            for (s, p) in g.planes.iter().enumerate() {
+                for &d in p {
+                    if s + 1 < g.planes.len() {
+                        check(
+                            (0..(1i16 << k)).contains(&d),
+                            "low digits must be unsigned",
+                        )?;
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn packed_bits_counts_wq_bits_per_weight() {
+        // However a wq is sliced, the at-rest footprint is wq bits/weight.
+        for (wq, k) in [(8u32, 2u32), (3, 2), (5, 3), (1, 4), (8, 8)] {
+            let (od, kdim) = (3usize, 7usize);
+            let codes = vec![0i32; od * kdim];
+            let g = pack_group(
+                &codes,
+                od,
+                kdim,
+                wq,
+                k,
+                vec![Requant::from_scale(0.5); od],
+                vec![1.0; od],
+            );
+            assert_eq!(g.packed_bits(), (od * kdim) as u64 * wq as u64, "w{wq}/k{k}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "i32 accumulator bound")]
+    fn rejects_overflowing_reduction_depth() {
+        let codes = vec![0i32; MAX_KDIM + 1];
+        pack_group(
+            &codes,
+            1,
+            MAX_KDIM + 1,
+            8,
+            2,
+            vec![Requant::from_scale(0.5)],
+            vec![1.0],
+        );
+    }
+}

@@ -264,3 +264,266 @@ fn oversized_batches_split_through_the_full_stack() {
     assert_eq!(m.errors, 0);
     assert_eq!(m.batched_items, 60);
 }
+
+// ---------------------------------------------------------------------------
+// Single-variant pass-through behaviour, migrated from the deleted
+// `coordinator` shim: one queue, one batcher worker, one backend — now
+// expressed directly against the gateway (one registered variant, driven
+// through its `Client`).
+// ---------------------------------------------------------------------------
+
+/// One-variant server + its direct client (the old `Coordinator::start` /
+/// `client()` pair).
+fn single_variant(
+    latency_us: u64,
+    bc: BatcherConfig,
+    batch_sizes: Vec<usize>,
+) -> (Server, mpcnn::serving::Client) {
+    let server = Server::builder()
+        .variant_with_profile(VariantSpec::uniform(4), profile(89.1, 100.0), bc, move || {
+            Ok(Box::new(MockBackend::new(12, 4, batch_sizes, latency_us))
+                as Box<dyn InferenceBackend>)
+        })
+        .build()
+        .unwrap();
+    let client = server.client("w4").unwrap();
+    (server, client)
+}
+
+#[test]
+fn single_variant_roundtrip_and_shutdown() {
+    let (server, client) = single_variant(0, BatcherConfig::default(), vec![1, 4, 8]);
+    let resp = client.classify(vec![0.5; 12]).unwrap();
+    assert_eq!(resp.logits.len(), 4);
+    assert_eq!(resp.batch_size, 1);
+    let all = server.shutdown();
+    assert_eq!(all.len(), 1);
+    assert_eq!(all[0].1.responses, 1);
+    assert_eq!(all[0].1.errors, 0);
+}
+
+#[test]
+fn single_variant_batching_assembles_multiple() {
+    let bc = BatcherConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(50),
+        queue_capacity: 128,
+        fpga_fps_sim: 0.0,
+    };
+    let (server, client) = single_variant(1000, bc, vec![1, 4, 8]);
+    let pending: Vec<_> = (0..6)
+        .map(|i| client.submit(vec![i as f32; 12]).unwrap())
+        .collect();
+    let responses: Vec<_> = pending.into_iter().map(|p| p.wait().unwrap()).collect();
+    assert_eq!(responses.len(), 6);
+    assert!(responses.iter().any(|r| r.batch_size > 1));
+    let m = server.metrics("w4").unwrap();
+    assert!(m.batches < 6, "batching must coalesce: {} batches", m.batches);
+    assert!(m.padded_items > 0, "6 requests pad to 8");
+}
+
+#[test]
+fn single_variant_bad_input_rejected_up_front() {
+    let (_server, client) = single_variant(0, BatcherConfig::default(), vec![1, 8]);
+    match client.try_submit(vec![1.0; 5]) {
+        Err(SubmitError::BadInput { expected, got }) => {
+            assert_eq!(expected, 12);
+            assert_eq!(got, 5);
+        }
+        other => panic!("expected BadInput, got {other:?}"),
+    }
+}
+
+#[test]
+fn single_variant_backpressure_sheds_load() {
+    // Slow backend + tiny queue: try_submit must eventually refuse.
+    let bc = BatcherConfig {
+        max_batch: 1,
+        max_wait: Duration::from_millis(0),
+        queue_capacity: 2,
+        fpga_fps_sim: 0.0,
+    };
+    let (_server, client) = single_variant(50_000, bc, vec![1]);
+    let mut pending = Vec::new();
+    let mut shed = 0;
+    for _ in 0..20 {
+        match client.try_submit(vec![0.0; 12]) {
+            Ok(p) => pending.push(p),
+            Err(SubmitError::Backpressure) => shed += 1,
+            Err(e) => panic!("unexpected {e}"),
+        }
+    }
+    assert!(shed > 0, "queue of 2 cannot absorb 20 instant submissions");
+    for p in pending {
+        p.wait().unwrap();
+    }
+}
+
+#[test]
+fn single_variant_backend_failure_propagates() {
+    let server = Server::builder()
+        .variant_with_profile(
+            VariantSpec::uniform(4),
+            profile(89.1, 100.0),
+            BatcherConfig {
+                max_batch: 1,
+                max_wait: Duration::from_millis(0),
+                ..Default::default()
+            },
+            || {
+                let mut b = MockBackend::new(12, 4, vec![1, 8], 0);
+                b.fail_after = Some(2);
+                Ok(Box::new(b) as Box<dyn InferenceBackend>)
+            },
+        )
+        .build()
+        .unwrap();
+    let client = server.client("w4").unwrap();
+    let mut errors = 0;
+    for _ in 0..5 {
+        if client.classify(vec![0.0; 12]).is_err() {
+            errors += 1;
+        }
+    }
+    assert!(errors >= 3, "failures after the 2nd call must surface");
+    assert!(server.metrics("w4").unwrap().errors >= 3);
+}
+
+#[test]
+fn single_variant_concurrent_clients() {
+    let (server, client) = single_variant(100, BatcherConfig::default(), vec![1, 4, 8]);
+    let mut handles = Vec::new();
+    for t in 0..4 {
+        let client = client.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut ok = 0;
+            for i in 0..25 {
+                let img = vec![(t * 100 + i) as f32; 12];
+                if client.classify(img).is_ok() {
+                    ok += 1;
+                }
+            }
+            ok
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, 100);
+    assert_eq!(server.metrics("w4").unwrap().responses, 100);
+}
+
+#[test]
+fn single_variant_sustained_load() {
+    let bc = BatcherConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(1),
+        queue_capacity: 64,
+        fpga_fps_sim: 245.0, // the paper's headline fps as virtual clock
+    };
+    let server = Server::builder()
+        .variant_with_profile(VariantSpec::uniform(2), profile(87.48, 245.0), bc, || {
+            Ok(Box::new(MockBackend::new(48, 10, vec![1, 4, 8], 200))
+                as Box<dyn InferenceBackend>)
+        })
+        .build()
+        .unwrap();
+    let client = server.client("w2").unwrap();
+    let mut rng = mpcnn::util::rng::Rng::new(7);
+    let mut pending = Vec::new();
+    let total = 500;
+    for _ in 0..total {
+        let v: Vec<f32> = (0..48).map(|_| rng.uniform(0.0, 9.0) as f32).collect();
+        pending.push(client.submit(v).unwrap());
+        if pending.len() >= 50 {
+            for p in pending.drain(..) {
+                p.wait().unwrap();
+            }
+        }
+    }
+    for p in pending {
+        p.wait().unwrap();
+    }
+    let m = server.shutdown().remove(0).1;
+    assert_eq!(m.responses, total);
+    assert_eq!(m.errors, 0);
+    assert!(m.mean_batch() > 1.2, "batching must engage: {}", m.mean_batch());
+    assert!(m.latency.percentile_us(99.0) >= m.latency.percentile_us(50.0));
+    // virtual clock: 500 frames at 245 fps = 2.04 s
+    assert!((m.fpga_virtual_us - 500.0 / 245.0 * 1e6).abs() < 1e3);
+}
+
+#[test]
+fn single_variant_mock_classification_correct_through_batching() {
+    // The mock's ground truth must survive queueing, batching and padding.
+    let server = Server::builder()
+        .variant_with_profile(
+            VariantSpec::uniform(4),
+            profile(89.1, 100.0),
+            BatcherConfig::default(),
+            || {
+                Ok(Box::new(MockBackend::new(16, 5, vec![1, 4, 8], 50))
+                    as Box<dyn InferenceBackend>)
+            },
+        )
+        .build()
+        .unwrap();
+    let client = server.client("w4").unwrap();
+    let reference = MockBackend::new(16, 5, vec![1], 0);
+    let mut rng = mpcnn::util::rng::Rng::new(3);
+    for _ in 0..100 {
+        let v: Vec<f32> = {
+            let base = rng.range(0, 5) as f32;
+            (0..16).map(|_| base).collect()
+        };
+        let want = reference.expected_class(&v);
+        let got = client.classify(v).unwrap();
+        assert_eq!(got.class, want);
+    }
+}
+
+#[test]
+fn single_variant_pjrt_backed_serving_end_to_end() {
+    use mpcnn::runtime::{artifacts_dir, Engine, TestSet};
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("NOTE: artifacts missing; skipping PJRT serving test");
+        return;
+    }
+    let dir = artifacts_dir();
+    let dir2 = dir.clone();
+    let server = Server::builder()
+        .variant_with_profile(
+            VariantSpec::uniform(4),
+            profile(89.1, 100.0),
+            BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(2),
+                queue_capacity: 64,
+                fpga_fps_sim: 0.0,
+            },
+            move || {
+                Ok(Box::new(mpcnn::serving::EngineBackend::load(&dir2, 4)?)
+                    as Box<dyn InferenceBackend>)
+            },
+        )
+        .build()
+        .unwrap();
+    let engine_probe = Engine::load_all(&dir).unwrap();
+    let ts = TestSet::load(dir.join(engine_probe.manifest.testset.clone().unwrap())).unwrap();
+    drop(engine_probe);
+
+    let client = server.client("w4").unwrap();
+    let mut correct = 0;
+    let mut pending = Vec::new();
+    let n = 64.min(ts.n);
+    for i in 0..n {
+        pending.push((client.submit(ts.image(i).to_vec()).unwrap(), ts.labels[i]));
+    }
+    for (p, label) in pending {
+        let r = p.wait().unwrap();
+        correct += (r.class == label as usize) as usize;
+    }
+    let m = server.shutdown().remove(0).1;
+    assert_eq!(m.responses as usize, n);
+    let acc = correct as f64 / n as f64;
+    assert!(acc > 0.5, "served accuracy {acc} must be >> chance");
+    assert!(m.mean_batch() > 1.5, "batch-8 model should coalesce");
+}

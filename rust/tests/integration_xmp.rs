@@ -1,0 +1,248 @@
+//! Integration tests for the xmp truly-mixed-precision execution engine:
+//! the sliced-digit kernels against a plain i64 ground truth across random
+//! (w, k, channel-split) plans, and the engine serving real traffic behind
+//! the gateway.
+
+use mpcnn::cnn::{resnet, ChannelGroup, LayerKind};
+use mpcnn::serving::{
+    BatcherConfig, InferRequest, InferenceBackend, Server, VariantSelector, VariantSpec,
+};
+use mpcnn::util::prop::{check, check_eq, forall};
+use mpcnn::util::rng::Rng;
+use mpcnn::xmp::conv::{conv_forward, conv_forward_i64};
+use mpcnn::xmp::pack::{pack_group, PackedLayer};
+use mpcnn::xmp::{GroupWeights, Requant, XmpBackend, XmpConfig, XmpLayer, XmpModel};
+
+/// Build a random conv layer with 1..=3 channel groups at independent
+/// word-lengths (the truly-mixed case), random codes within each group's
+/// signed range, and random requantizers.
+fn random_layer(rng: &mut Rng) -> (XmpLayer, u32) {
+    let ih = *rng.choose(&[1u32, 3, 4, 5, 7, 8]);
+    let iw = 1 + rng.range(0, 5) as u32;
+    let k = *rng.choose(&[1u32, 3]);
+    let s = *rng.choose(&[1u32, 2]);
+    let slice_k = *rng.choose(&[1u32, 2, 3, 4, 5, 8]);
+    let kdim = (k * k * iw) as usize;
+    let n_groups = 1 + rng.range(0, 3);
+    let mut groups = Vec::new();
+    let mut od = 0u32;
+    for _ in 0..n_groups {
+        // w spans 1..=8 so every slicing shape appears, including partial
+        // top digits (e.g. w=3 at k=2, w=5 at k=3, w=7 at k=4).
+        let wq = 1 + rng.range(0, 8) as u32;
+        let god = 1 + rng.range(0, 4) as u32;
+        let (lo, hi) = (-(1i64 << (wq - 1)), (1i64 << (wq - 1)) - 1);
+        let codes: Vec<i32> = (0..god as usize * kdim)
+            .map(|_| rng.range_i64(lo, hi) as i32)
+            .collect();
+        let requant: Vec<Requant> = (0..god)
+            .map(|_| Requant::from_scale(rng.uniform(1e-4, 1.0)))
+            .collect();
+        od += god;
+        groups.push(GroupWeights {
+            wq,
+            od: god,
+            codes,
+            requant,
+            scales: vec![0.01; god as usize],
+        });
+    }
+    (
+        XmpLayer {
+            name: "rand".into(),
+            kind: LayerKind::Conv,
+            ih,
+            iw,
+            od,
+            k,
+            s,
+            groups,
+        },
+        slice_k,
+    )
+}
+
+#[test]
+fn prop_sliced_conv_bit_identical_to_plain_i64() {
+    // The PR's correctness anchor, end to end through im2col + grouped
+    // GEMM + requantize: for random layers mixing word-lengths 1..=8
+    // within one layer and random digit widths (partial top digits
+    // included), the fast path, the scalar reference kernel, and a plain
+    // i64 convolution produce the same u8 activations bit-for-bit.
+    forall(250, |rng| {
+        let (l, slice_k) = random_layer(rng);
+        let pl = PackedLayer {
+            groups: l
+                .groups
+                .iter()
+                .map(|g| {
+                    pack_group(
+                        &g.codes,
+                        g.od as usize,
+                        l.kdim(),
+                        g.wq,
+                        slice_k,
+                        g.requant.clone(),
+                        g.scales.clone(),
+                    )
+                })
+                .collect(),
+        };
+        let input: Vec<u8> = (0..(l.ih * l.ih * l.iw) as usize)
+            .map(|_| rng.range_i64(0, 255) as u8)
+            .collect();
+        let truth = conv_forward_i64(&input, &l);
+        check_eq(truth.len(), (l.oh() * l.oh() * l.od) as usize, "output shape")?;
+        let fast = conv_forward(&input, &l, &pl, true);
+        let refr = conv_forward(&input, &l, &pl, false);
+        check_eq(refr, truth.clone(), "scalar reference vs plain i64")?;
+        check_eq(fast, truth, "fast path vs plain i64")
+    });
+}
+
+#[test]
+fn prop_channel_split_plans_execute_like_their_groups() {
+    // Within a layer, each group's output channels must be exactly the
+    // conv of that group alone — interleaving groups into one output map
+    // is layout, not arithmetic.
+    forall(60, |rng| {
+        let (l, slice_k) = random_layer(rng);
+        let pl = PackedLayer {
+            groups: l
+                .groups
+                .iter()
+                .map(|g| {
+                    pack_group(
+                        &g.codes,
+                        g.od as usize,
+                        l.kdim(),
+                        g.wq,
+                        slice_k,
+                        g.requant.clone(),
+                        g.scales.clone(),
+                    )
+                })
+                .collect(),
+        };
+        let input: Vec<u8> = (0..(l.ih * l.ih * l.iw) as usize)
+            .map(|_| rng.range_i64(0, 255) as u8)
+            .collect();
+        let whole = conv_forward(&input, &l, &pl, true);
+        let od = l.od as usize;
+        let mut base = 0usize;
+        for g in &l.groups {
+            let solo = XmpLayer {
+                od: g.od,
+                groups: vec![g.clone()],
+                ..l.clone()
+            };
+            let solo_out = conv_forward_i64(&input, &solo);
+            let god = g.od as usize;
+            for (mi, row) in solo_out.chunks_exact(god).enumerate() {
+                let slice = &whole[mi * od + base..mi * od + base + god];
+                check(slice == row, "group channels must match the solo conv")?;
+            }
+            base += god;
+        }
+        Ok(())
+    });
+}
+
+fn xmp_factory(
+    wq: u32,
+) -> impl FnOnce() -> mpcnn::util::error::Result<Box<dyn InferenceBackend>> + Send + 'static {
+    move || {
+        let base = resnet::resnet_small(1, 10);
+        let b = XmpBackend::from_spec(&base, &VariantSpec::uniform(wq), XmpConfig::default())?;
+        Ok(Box::new(b) as Box<dyn InferenceBackend>)
+    }
+}
+
+#[test]
+fn gateway_serves_real_sliced_digit_classes() {
+    // Two uniform variants on xmp backends: routed responses must carry
+    // the class an independently built copy of the same deterministic
+    // model computes — the gateway serves compute, not mocks.
+    let base = resnet::resnet_small(1, 10);
+    let bc = BatcherConfig {
+        max_batch: 4,
+        max_wait: std::time::Duration::from_millis(1),
+        queue_capacity: 64,
+        fpga_fps_sim: 0.0,
+    };
+    let server = Server::builder()
+        .variant(VariantSpec::uniform(2), bc, xmp_factory(2))
+        .variant(VariantSpec::uniform(8), bc, xmp_factory(8))
+        .build()
+        .unwrap();
+    let probes = [
+        (2u32, XmpBackend::from_spec(&base, &VariantSpec::uniform(2), XmpConfig::default())
+            .unwrap()),
+        (8u32, XmpBackend::from_spec(&base, &VariantSpec::uniform(8), XmpConfig::default())
+            .unwrap()),
+    ];
+    let mut rng = Rng::new(11);
+    for round in 0..6 {
+        let img: Vec<f32> = (0..3072).map(|_| rng.uniform(0.0, 8.0) as f32).collect();
+        for (wq, probe) in &probes {
+            let want = probe.classify_one(&img).unwrap();
+            let resp = server
+                .infer(
+                    InferRequest::new(img.clone()).with_variant(VariantSelector::Exact(*wq)),
+                )
+                .unwrap();
+            assert_eq!(resp.variant, format!("w{wq}"));
+            assert_eq!(
+                resp.class, want,
+                "round {round}: served class must be the kernels' own answer"
+            );
+        }
+    }
+    // Different precisions are genuinely different functions: over many
+    // random images the two variants should disagree at least once.
+    let mut disagreements = 0;
+    for _ in 0..24 {
+        let img: Vec<f32> = (0..3072).map(|_| rng.uniform(0.0, 8.0) as f32).collect();
+        if probes[0].1.classify_one(&img).unwrap() != probes[1].1.classify_one(&img).unwrap() {
+            disagreements += 1;
+        }
+    }
+    assert!(
+        disagreements > 0,
+        "w2 and w8 synthetic models should not be identical functions"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn channelwise_spec_executes_mixed_groups_in_one_layer() {
+    // A channelwise plan puts two word-lengths INSIDE every inner layer;
+    // the model must build, serve, and stay bit-deterministic.
+    let base = resnet::resnet_small(1, 10);
+    let spec = VariantSpec::channelwise(
+        "mix28",
+        vec![
+            ChannelGroup { wq: 2, fraction: 0.5 },
+            ChannelGroup { wq: 8, fraction: 0.5 },
+        ],
+    );
+    let plan = spec.per_layer_plan(&base);
+    let m = XmpModel::synthetic(&base, &plan, XmpConfig::default()).unwrap();
+    // Inner layers carry two groups at (2, 8); edges stay single at 8.
+    assert_eq!(m.layers[0].groups.len(), 1);
+    assert_eq!(m.layers[0].groups[0].wq, 8);
+    let inner = &m.layers[1];
+    assert_eq!(inner.groups.len(), 2);
+    assert_eq!(
+        (inner.groups[0].wq, inner.groups[1].wq),
+        (2, 8),
+        "both word-lengths live inside one executed layer"
+    );
+    assert_eq!(inner.groups[0].od + inner.groups[1].od, inner.od);
+    let b = XmpBackend::new(m);
+    b.warmup().unwrap();
+    let img = vec![1.0f32; 3072];
+    let l1 = b.infer_batch(&img, 1).unwrap();
+    let l2 = b.infer_batch(&img, 1).unwrap();
+    assert_eq!(l1, l2);
+}
