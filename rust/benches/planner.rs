@@ -16,11 +16,13 @@ fn main() {
     let pcfg = PlannerConfig::default();
 
     b.run("planner/sensitivity-build", || {
-        SensitivityModel::build(&base, "ResNet-18", pcfg.alpha, &pcfg.wq_choices).unwrap()
+        SensitivityModel::build(&base, "ResNet-18", pcfg.alpha, &pcfg.wq_choices, &pcfg.aq_choices)
+            .unwrap()
     });
 
     let model =
-        SensitivityModel::build(&base, "ResNet-18", pcfg.alpha, &pcfg.wq_choices).unwrap();
+        SensitivityModel::build(&base, "ResNet-18", pcfg.alpha, &pcfg.wq_choices, &pcfg.aq_choices)
+            .unwrap();
     b.run("planner/enumerate-resnet18", || {
         frontier::enumerate_assignments(&base, &model, &pcfg)
     });

@@ -1,8 +1,114 @@
-//! Bench T4: regenerate Table IV (impact of operand slices, ResNet-18 on
-//! the paper's Table II arrays; energy/frame breakdown + fps + GOps/s).
+//! Bench T4: Table IV is the paper's operand-slice axis — this bench
+//! covers both of its incarnations:
+//!
+//! 1. regenerate the **model-side** Table IV (impact of operand slices,
+//!    ResNet-18 on the paper's Table II arrays; energy/frame breakdown +
+//!    fps + GOps/s) with its shape checks, and
+//! 2. time the **executed** operand-slice column: the xmp 2D-sliced
+//!    kernels (activations in `ceil(aq/k)` unsigned digit planes ×
+//!    weights in `ceil(wq/k)` signed planes) across a `(wq, aq)` grid on
+//!    the ResNet-18 layer-1 workload, fast path vs scalar reference,
+//!    asserting all three kernels bit-identical before any timing. The
+//!    per-shape fast-vs-reference speedups land in
+//!    `BENCH_table4_operand_slices.json` (CI job `diff-fuzz-smoke`
+//!    uploads it), tracking how the 2D slice cross-product scales with
+//!    `S_a × S_w`.
+
+use mpcnn::cnn::resnet;
+use mpcnn::util::bench::{black_box, Bencher};
+use mpcnn::util::rng::Rng;
+use mpcnn::xmp::conv::im2col;
+use mpcnn::xmp::gemm::{gemm_codes_i64, gemm_sliced_fast, gemm_sliced_reference};
+use mpcnn::xmp::pack::{pack_activations, pack_group};
+use mpcnn::xmp::Requant;
+
 fn main() {
+    // --- 1. the model-side Table IV, exactly as before ---
     let cfg = mpcnn::config::RunConfig::default();
-    mpcnn::report::run_table_bench("table4_operand_slices", || {
+    let (table, checks) = mpcnn::report::tables::table4(&cfg);
+    println!("{}", table.render());
+    print!("{}", mpcnn::report::render_checks(&checks));
+
+    // --- 2. the executed 2D operand-slice grid ---
+    let mut b = Bencher::new();
+    b.run("table4_operand_slices::generate", || {
         mpcnn::report::tables::table4(&cfg)
     });
+
+    let cnn = resnet::resnet18();
+    let layer = cnn
+        .layers
+        .iter()
+        .find(|l| l.name == "layer1.0.conv1")
+        .expect("resnet18 has layer1.0.conv1");
+    let mut rng = Rng::new(0x2D51);
+    let od = layer.od as usize;
+    let kdim = (layer.k * layer.k * layer.iw) as usize;
+    let input: Vec<u8> = (0..(layer.ih * layer.ih * layer.iw) as usize)
+        .map(|_| rng.range_i64(0, 255) as u8)
+        .collect();
+    let (cols8, m, kdim2) = im2col(&input, layer.ih, layer.iw, layer.k, layer.s);
+    assert_eq!(kdim, kdim2);
+
+    let k = 2u32;
+    // The operand-slice grid: weight-only (the old engine's point), joint
+    // reductions, and the partial-top-digit shapes on both operands.
+    let grid: [(u32, u32); 5] = [(8, 8), (4, 8), (4, 4), (3, 5), (2, 2)];
+    let mut speedups = Vec::new();
+    for (wq, aq) in grid {
+        let (lo, hi) = (-(1i64 << (wq - 1)), (1i64 << (wq - 1)) - 1);
+        let codes: Vec<i32> = (0..od * kdim)
+            .map(|_| rng.range_i64(lo, hi) as i32)
+            .collect();
+        // Mask the 8-bit im2col activations down to aq bits so the case
+        // is a genuine aq-bit workload.
+        let cols: Vec<i16> = cols8.iter().map(|&v| v & ((1i16 << aq) - 1)).collect();
+        let packed = pack_group(
+            &codes,
+            od,
+            kdim,
+            wq,
+            k,
+            vec![Requant::from_scale_aq(0.001, aq); od],
+            vec![1.0; od],
+        );
+        let acts = pack_activations(&cols, m, kdim, aq, k);
+
+        // Correctness gate before any timing: three kernels, one answer.
+        {
+            let truth = gemm_codes_i64(&cols, m, kdim, &codes, od);
+            let refr = gemm_sliced_reference(&cols, m, kdim, &codes, od, wq, aq, k);
+            let fast = gemm_sliced_fast(&acts, &packed);
+            assert_eq!(refr, truth, "w{wq}a{aq}: reference diverged from plain i64");
+            assert_eq!(fast, truth, "w{wq}a{aq}: fast path diverged from plain i64");
+        }
+
+        let tag = format!("w{wq}a{aq}k{k}");
+        b.run(&format!("pack-acts/{tag}"), || {
+            black_box(pack_activations(&cols, m, kdim, aq, k).planes.len())
+        });
+        let r_ref = b
+            .run(&format!("gemm-reference/{tag}"), || {
+                black_box(gemm_sliced_reference(&cols, m, kdim, &codes, od, wq, aq, k)[0])
+            })
+            .mean_ns;
+        let r_fast = b
+            .run(&format!("gemm-fast/{tag}"), || {
+                black_box(gemm_sliced_fast(&acts, &packed)[0])
+            })
+            .mean_ns;
+        speedups.push((tag, r_ref / r_fast));
+    }
+
+    println!("\n2D-slice fast-vs-reference speedups (resnet18 layer-1, k={k}):");
+    for (tag, s) in &speedups {
+        println!("  {tag}: {s:.2}x");
+    }
+
+    b.finish("table4_operand_slices");
+    let failed = checks.iter().filter(|c| !c.pass).count();
+    if failed > 0 {
+        eprintln!("WARNING: {failed} shape checks failed in table4_operand_slices");
+        std::process::exit(1);
+    }
 }

@@ -13,7 +13,7 @@ use mpcnn::util::bench::{black_box, Bencher};
 use mpcnn::util::rng::Rng;
 use mpcnn::xmp::conv::im2col;
 use mpcnn::xmp::gemm::{gemm_codes_i64, gemm_sliced_fast, gemm_sliced_reference};
-use mpcnn::xmp::pack::pack_group;
+use mpcnn::xmp::pack::{pack_activations, pack_group};
 use mpcnn::xmp::{pack_model, Requant, XmpBackend, XmpConfig, XmpModel};
 
 fn main() {
@@ -50,13 +50,16 @@ fn main() {
     );
 
     let packed = pack_group(&codes, od, kdim, wq, k, requant, vec![1.0; od]);
+    // Activations at the legacy 8-bit point, sliced into digit planes for
+    // the 2D fast path (aq = 8 reproduces the weight-only results).
+    let acts = pack_activations(&cols, m, kdim, 8, k);
 
     // Correctness gate before any timing: the three kernels must agree
     // bit-for-bit on the full workload.
     {
         let truth = gemm_codes_i64(&cols, m, kdim, &codes, od);
-        let refr = gemm_sliced_reference(&cols, m, kdim, &codes, od, wq, k);
-        let fast = gemm_sliced_fast(&cols, m, &packed);
+        let refr = gemm_sliced_reference(&cols, m, kdim, &codes, od, wq, 8, k);
+        let fast = gemm_sliced_fast(&acts, &packed);
         assert_eq!(refr, truth, "scalar reference diverged from plain i64");
         assert_eq!(fast, truth, "fast path diverged from plain i64");
     }
@@ -66,10 +69,10 @@ fn main() {
             vec![1.0; od]).planes.len())
     });
     b.run("gemm-reference/resnet18-layer1-w4k2", || {
-        black_box(gemm_sliced_reference(&cols, m, kdim, &codes, od, wq, k)[0])
+        black_box(gemm_sliced_reference(&cols, m, kdim, &codes, od, wq, 8, k)[0])
     });
     b.run("gemm-fast/resnet18-layer1-w4k2", || {
-        black_box(gemm_sliced_fast(&cols, m, &packed)[0])
+        black_box(gemm_sliced_fast(&acts, &packed)[0])
     });
 
     // --- whole-model forward on the exported ResNet-8 topology (what the

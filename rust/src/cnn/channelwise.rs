@@ -122,6 +122,57 @@ pub fn apply_plan(cnn: &Cnn, per_layer: &[Vec<ChannelGroup>]) -> Cnn {
     }
 }
 
+/// Apply a **joint** per-layer precision plan: the weight lowering of
+/// [`apply_plan`] plus one activation word-length per base layer, written
+/// into every produced (possibly split) layer's `act_bits`. This is how
+/// `(wq, aq)` plans reach the Table III footprint models and the DSE's
+/// activation-traffic accounting: `Cnn::peak_activation_bits` (which
+/// prices each layer's input at the *producer's* `act_bits`) /
+/// `total_activation_bits` read `act_bits`, and the structural
+/// fingerprint hashes it, so joint variants cache and cost distinctly.
+/// An all-8 `aq` produces exactly [`apply_plan`]'s CNN.
+///
+/// Caveat of the schedule (sub-layer) view: the later sub-layers of a
+/// channel-split layer see their *sibling* as predecessor, so their
+/// input is priced at the layer's own `a_Q` rather than the true
+/// producer's — the per-layer `dataflow` spill heuristic shares the same
+/// single-knob approximation. Exact execution-view buffer bytes come
+/// from `planner::Assignment::act_buffer_mb`, which is what the planner
+/// uses for Pareto dominance.
+pub fn apply_joint_plan(cnn: &Cnn, per_layer: &[Vec<ChannelGroup>], aq: &[u32]) -> Cnn {
+    assert_eq!(
+        aq.len(),
+        cnn.layers.len(),
+        "one activation word-length per layer required"
+    );
+    for a in aq {
+        assert!(
+            (1..=8).contains(a),
+            "activation word-length {a} outside the supported 1..=8 bit range"
+        );
+    }
+    let mut lowered = apply_plan(cnn, per_layer);
+    // Walk the split structure: base layer i produced 1 lowered layer when
+    // uniform, else one per non-zero channel group.
+    let mut pos = 0usize;
+    for ((l, groups), &a) in cnn.layers.iter().zip(per_layer).zip(aq) {
+        let produced = if groups.len() == 1 {
+            1
+        } else {
+            group_channel_counts(l.od, groups)
+                .iter()
+                .filter(|&&c| c > 0)
+                .count()
+        };
+        for out in &mut lowered.layers[pos..pos + produced] {
+            out.act_bits = a;
+        }
+        pos += produced;
+    }
+    debug_assert_eq!(pos, lowered.layers.len());
+    lowered
+}
+
 /// Apply a channel-wise scheme to every inner CONV layer of a CNN
 /// (first/last layers stay at 8 bit, as in the paper).
 pub fn apply_channelwise(cnn: &Cnn, groups: &[ChannelGroup]) -> Cnn {
@@ -351,6 +402,56 @@ mod tests {
         // Uniform entries keep their layer name (stable fingerprints).
         assert_eq!(planned.layers[3].name, base.layers[2].name);
         assert_eq!(planned.layers[3].wq, 4);
+    }
+
+    #[test]
+    fn apply_joint_plan_sets_act_bits_per_split_structure() {
+        let base = resnet::resnet_small(1, 10);
+        let n = base.layers.len();
+        let per_layer: Vec<Vec<ChannelGroup>> = (0..n)
+            .map(|i| {
+                if i == 1 {
+                    vec![
+                        ChannelGroup { wq: 2, fraction: 0.5 },
+                        ChannelGroup { wq: 8, fraction: 0.5 },
+                    ]
+                } else {
+                    vec![ChannelGroup { wq: 8, fraction: 1.0 }]
+                }
+            })
+            .collect();
+        let aq: Vec<u32> = (0..n).map(|i| if i == 1 { 4 } else { 8 }).collect();
+        let joint = apply_joint_plan(&base, &per_layer, &aq);
+        // Both split halves of base layer 1 carry its aq; neighbors keep 8.
+        assert_eq!(joint.layers[0].act_bits, 8);
+        assert_eq!(joint.layers[1].act_bits, 4);
+        assert_eq!(joint.layers[2].act_bits, 4);
+        assert_eq!(joint.layers[3].act_bits, 8);
+        // All-8 aq reproduces apply_plan exactly (same fingerprint).
+        let all8 = vec![8u32; n];
+        assert_eq!(
+            apply_joint_plan(&base, &per_layer, &all8).fingerprint(),
+            apply_plan(&base, &per_layer).fingerprint()
+        );
+        // A narrowed aq moves the fingerprint and shrinks the activation
+        // working set (Table III accounting sees the reduction).
+        let weights_only = apply_plan(&base, &per_layer);
+        assert_ne!(joint.fingerprint(), weights_only.fingerprint());
+        assert!(joint.total_activation_bits() < weights_only.total_activation_bits());
+    }
+
+    #[test]
+    #[should_panic(expected = "1..=8")]
+    fn apply_joint_plan_rejects_bad_aq() {
+        let base = resnet::resnet_small(1, 10);
+        let per_layer: Vec<Vec<ChannelGroup>> = base
+            .layers
+            .iter()
+            .map(|_| vec![ChannelGroup { wq: 8, fraction: 1.0 }])
+            .collect();
+        let mut aq = vec![8u32; base.layers.len()];
+        aq[1] = 0;
+        apply_joint_plan(&base, &per_layer, &aq);
     }
 
     #[test]

@@ -173,12 +173,59 @@ impl Cnn {
 
     /// Largest single-layer activation working set in bits (input + output of
     /// the worst layer) — drives the on-chip activation buffer size.
+    ///
+    /// The input side is priced at the *producer's* word-length: a layer
+    /// assigned `a_Q = 4` whose producer emits 8-bit activations still
+    /// buffers an 8-bit input map. The producer is resolved structurally
+    /// (see [`input_act_bits`](Self::input_act_bits)), so residual
+    /// projection layers price their input at the saved earlier
+    /// activation's width, not the list predecessor's. For
+    /// uniform-`act_bits` CNNs — every CNN outside joint `(w_Q, a_Q)`
+    /// lowering — this is exactly the old `(input + output) · act_bits`
+    /// accounting.
     pub fn peak_activation_bits(&self) -> u64 {
         self.layers
             .iter()
-            .map(|l| (l.input_elems() + l.output_elems()) * l.act_bits as u64)
+            .enumerate()
+            .map(|(i, l)| {
+                l.input_elems() * self.input_act_bits(i) as u64
+                    + l.output_elems() * l.act_bits as u64
+            })
             .max()
             .unwrap_or(0)
+    }
+
+    /// Word-length of the activations feeding layer `i`, mirroring the
+    /// structural rules of the xmp forward pass: the previous layer's
+    /// `act_bits` when shapes chain (including through an elided stride-2
+    /// pool, which preserves its input's width); otherwise the most
+    /// recent earlier layer whose output shape matches the wanted input
+    /// (the residual `downsample` projections); otherwise — layer 0's
+    /// image input, unmatched branches, split sub-layers whose producer
+    /// is itself split — the widest `act_bits` seen so far, a
+    /// conservative bound that is exact for uniform-`act_bits` CNNs.
+    pub fn input_act_bits(&self, i: usize) -> u32 {
+        let l = &self.layers[i];
+        let widest = self.layers[..=i]
+            .iter()
+            .map(|p| p.act_bits)
+            .max()
+            .unwrap_or(8);
+        if i == 0 {
+            return widest;
+        }
+        let prev = &self.layers[i - 1];
+        let chains = (prev.oh(), prev.od) == (l.ih, l.iw)
+            || (prev.od == l.iw && prev.oh().div_ceil(2) == l.ih);
+        if chains {
+            return self.layers[i - 1].act_bits;
+        }
+        for p in self.layers[..i.saturating_sub(1)].iter().rev() {
+            if (p.oh(), p.od) == (l.ih, l.iw) {
+                return p.act_bits;
+            }
+        }
+        widest
     }
 
     /// Total activation traffic (all layer outputs, written once + read once)
@@ -253,6 +300,38 @@ mod tests {
         assert_eq!(cnn.layers[0].wq, 8);
         assert_eq!(cnn.layers[1].wq, 2);
         assert_eq!(cnn.layers[2].wq, 8);
+    }
+
+    #[test]
+    fn peak_activation_prices_inputs_at_the_producers_word_length() {
+        let mut cnn = Cnn {
+            name: "t".into(),
+            input_hw: 32,
+            input_channels: 3,
+            classes: 10,
+            layers: vec![
+                Layer::conv("a", 32, 3, 16, 3, 1),
+                Layer::conv("b", 32, 16, 16, 3, 1),
+            ],
+        };
+        // Uniform act_bits: exactly the old (in + out) · act_bits rule.
+        let uniform: u64 = cnn
+            .layers
+            .iter()
+            .map(|l| (l.input_elems() + l.output_elems()) * 8)
+            .max()
+            .unwrap();
+        assert_eq!(cnn.peak_activation_bits(), uniform);
+        // Narrow layer b's OUTPUT to 4 bits: its input buffer still holds
+        // layer a's 8-bit map — the joint-plan case that used to be
+        // undercounted as (in + out) · 4.
+        cnn.layers[1].act_bits = 4;
+        let a = &cnn.layers[0];
+        let b = &cnn.layers[1];
+        let want = (a.input_elems() * 8 + a.output_elems() * 8)
+            .max(b.input_elems() * 8 + b.output_elems() * 4);
+        assert_eq!(cnn.peak_activation_bits(), want);
+        assert!(cnn.peak_activation_bits() > b.input_elems() * 4 + b.output_elems() * 4);
     }
 
     #[test]

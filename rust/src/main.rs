@@ -28,12 +28,15 @@ SUBCOMMANDS
              [--k 1,2,4] [--config file]
              run the holistic DSE and print the chosen design per slice
   plan       --cnn resnet18 [--family ResNet-18] [--bits 1,2,4,8]
-             [--beam 48] [--max-evals 16] [--alpha 1.0] [--splits 0.5]
-             [--min-top5 PCT] [--budget-mb MB] [--no-serve-check]
-             search layer/channel-wise word-length plans under the FPGA
-             budgets, print the (proxy-accuracy, fps, footprint) Pareto
-             frontier vs the uniform variants, and boot the emitted family
-             in the serving gateway (mock backends)
+             [--aq 4,6,8] [--beam 48] [--max-evals 16] [--alpha 1.0]
+             [--splits 0.5] [--min-top5 PCT] [--budget-mb MB]
+             [--no-serve-check]
+             search joint layer/channel-wise (weight, activation)
+             word-length plans under the FPGA budgets, print the
+             (proxy-accuracy, fps, footprint) Pareto frontier vs the
+             uniform variants, and boot the emitted family in the serving
+             gateway (mock backends); --aq opens the activation axis
+             (default 8 = the paper's fixed point)
   simulate   --cnn resnet18 --wq 2 --k 2 [--dims 7x5x37] [--layers]
              simulate one accelerator design (Table IV style column)
   tables     [--which fig3|fig6|fig7|fig8|fig9|table2|table3|table4|table5|all]
@@ -41,10 +44,10 @@ SUBCOMMANDS
   baseline   --which dsp|fixed8|bitfusion --cnn resnet18 --wq 2
              simulate a comparison design
   pe         [--wq 1,2,4,8] rank the PE design space (Fig 6 data)
-  serve      [--variants 2,4,8] [--route mixed|default|exact:WQ|name:NAME|
-             min-accuracy:0.85|max-latency:20ms] [--batch 8] [--requests 256]
-             [--window 64] [--artifacts DIR] [--backend auto|pjrt|xmp|mock]
-             [--planned]
+  serve      [--variants 2,4,8] [--aq 8] [--route mixed|default|exact:WQ|
+             name:NAME|min-accuracy:0.85|max-latency:20ms] [--batch 8]
+             [--requests 256] [--window 64] [--artifacts DIR]
+             [--backend auto|pjrt|xmp|mock] [--planned]
              host every listed precision variant in ONE gateway process and
              route a request stream across them; backend fallback order is
              PJRT (compiled artifacts) -> xmp (the native sliced-digit
@@ -53,12 +56,15 @@ SUBCOMMANDS
              achieved throughput, and — on xmp — per-variant agreement with
              an independently built reference model; `--planned` hosts the
              precision planner's emitted Pareto family (layerwise plans
-             included) on xmp backends instead of the uniform list
-  classify   [--wq 4] [--index 0] [--route exact:4] [--variants 4]
+             included) on xmp backends instead of the uniform list; --aq N
+             hosts every variant at activation word-length N (xmp engine
+             2D-slices both operands; requires --backend xmp/auto-xmp)
+  classify   [--wq 4] [--aq 8] [--index 0] [--route exact:4] [--variants 4]
              [--backend auto|pjrt|xmp|mock]
              classify one testset image through the gateway; with
-             `--backend xmp` the class is computed by the sliced-digit
-             kernels on synthetic weights (no artifacts needed)
+             `--backend xmp` the class is computed by the 2D-sliced
+             kernels on synthetic weights (no artifacts needed), at the
+             requested (wq, aq) precision pair
   info       print workload statistics for the built-in CNNs
 ";
 
@@ -183,6 +189,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
     let mut pcfg = mpcnn::planner::PlannerConfig::for_config(&cfg);
     pcfg.family = args.get_or("family", default_family);
     pcfg.wq_choices = args.get_list_u32("bits", &pcfg.wq_choices);
+    pcfg.aq_choices = args.get_list_u32("aq", &pcfg.aq_choices);
     pcfg.beam_width = args.get_usize("beam", pcfg.beam_width);
     pcfg.max_evals = args.get_usize("max-evals", pcfg.max_evals);
     pcfg.alpha = args.get_f64("alpha", pcfg.alpha);
@@ -201,8 +208,14 @@ fn cmd_plan(args: &Args) -> Result<()> {
     }
 
     println!(
-        "precision planner: {} on {} ({} anchors, bits {:?}, beam {}, <= {} DSE evals)\n",
-        base.name, cfg.fpga.name, pcfg.family, pcfg.wq_choices, pcfg.beam_width, pcfg.max_evals
+        "precision planner: {} on {} ({} anchors, bits {:?}, aq {:?}, beam {}, <= {} DSE evals)\n",
+        base.name,
+        cfg.fpga.name,
+        pcfg.family,
+        pcfg.wq_choices,
+        pcfg.aq_choices,
+        pcfg.beam_width,
+        pcfg.max_evals
     );
     let started = std::time::Instant::now();
     let report = mpcnn::planner::plan(&base, &cfg, &pcfg)?;
@@ -452,11 +465,15 @@ fn build_planned_gateway() -> Result<Gateway> {
 fn build_gateway(
     dir: &std::path::Path,
     wqs: &[u32],
+    aq: u32,
     max_batch: usize,
     kind: BackendKind,
 ) -> Result<Gateway> {
     if wqs.is_empty() {
         bail!("--variants must name at least one word-length");
+    }
+    if !(1..=8).contains(&aq) {
+        bail!("--aq must be in 1..=8, got {aq}");
     }
     let manifest = mpcnn::runtime::Manifest::load(dir).ok();
     let testset = manifest.as_ref().and_then(|m| {
@@ -469,7 +486,10 @@ fn build_gateway(
         .unwrap_or(false);
     let backend = match kind {
         BackendKind::Auto => {
-            if pjrt_ok {
+            // PJRT artifacts are compiled at 8-bit activations, so a
+            // reduced --aq auto-resolves past them to the xmp engine —
+            // the documented PJRT -> xmp fallback order, not an error.
+            if pjrt_ok && aq == 8 {
                 BackendKind::Pjrt
             } else {
                 BackendKind::Xmp
@@ -484,6 +504,13 @@ fn build_gateway(
         }
         k => k,
     };
+    if aq != 8 && backend == BackendKind::Pjrt {
+        // Only reachable with an explicit --backend pjrt.
+        bail!(
+            "--aq {aq}: compiled PJRT artifacts are exported at 8-bit activations; \
+             activation word-length reduction needs --backend xmp (or mock)"
+        );
+    }
     let cfg = RunConfig::default();
     let base = resnet::resnet_small(1, 10);
     let (image_len, classes) = match backend {
@@ -512,7 +539,7 @@ fn build_gateway(
     let mut xmp_refs = BTreeMap::new();
     let mut builder = Server::builder();
     for &wq in wqs {
-        let spec = VariantSpec::uniform(wq);
+        let spec = VariantSpec::uniform_joint(wq, aq);
         let profile = VariantProfile::from_dse(&spec, &base, &cfg, "ResNet-18");
         let bc = BatcherConfig {
             max_batch,
@@ -576,6 +603,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None => vec![2, 4, 8],
     };
     let wqs = args.get_list_u32("variants", &default_wqs);
+    let aq = args.get_u64("aq", 8) as u32;
     let route_spec = args.get_or("route", "mixed");
     let kind = BackendKind::parse(&args.get_or("backend", "auto"))?;
     let planned = args.has_flag("planned");
@@ -586,16 +614,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         // The planner emits the family (and its batcher configs) itself.
         if args.get("variants").is_some() || args.get("batch").is_some()
-            || args.get("artifacts").is_some()
+            || args.get("artifacts").is_some() || args.get("aq").is_some()
         {
             eprintln!(
                 "(--planned hosts the planner-emitted family with its own batcher \
-                 configs; ignoring --variants/--batch/--artifacts)"
+                 configs; ignoring --variants/--aq/--batch/--artifacts)"
             );
         }
         build_planned_gateway()?
     } else {
-        build_gateway(&dir, &wqs, max_batch, kind)?
+        build_gateway(&dir, &wqs, aq, max_batch, kind)?
     };
     println!(
         "gateway up: {} variants {:?} on {} backends\n",
@@ -761,7 +789,8 @@ fn cmd_classify(args: &Args) -> Result<()> {
         None => VariantSelector::Default,
     };
     let kind = BackendKind::parse(&args.get_or("backend", "auto"))?;
-    let gw = build_gateway(&dir, &wqs, 1, kind)?;
+    let aq = args.get_u64("aq", 8) as u32;
+    let gw = build_gateway(&dir, &wqs, aq, 1, kind)?;
     let (img, label) = match &gw.testset {
         Some(ts) => {
             if index >= ts.n {

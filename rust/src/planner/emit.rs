@@ -33,7 +33,10 @@ pub struct PlannedVariant {
 }
 
 /// Convert every frontier point of `report` into a servable variant, in
-/// frontier order (descending proxy Top-5).
+/// frontier order (descending proxy Top-5). Joint plans lower their
+/// per-layer activation word-lengths into the spec
+/// ([`VariantSpec::with_layerwise_aq`]), so the xmp backends slice
+/// activations exactly as planned.
 pub fn emit_variants(report: &PlanReport) -> Vec<PlannedVariant> {
     report
         .frontier
@@ -41,7 +44,14 @@ pub fn emit_variants(report: &PlanReport) -> Vec<PlannedVariant> {
         .map(|p| {
             let spec = match p.uniform_wq {
                 Some(wq) => VariantSpec::uniform(wq),
-                None => VariantSpec::planned(p.name.clone(), p.assignment.groups.clone()),
+                None => {
+                    let s = VariantSpec::planned(p.name.clone(), p.assignment.groups.clone());
+                    if p.assignment.aq.iter().any(|&a| a != 8) {
+                        s.with_layerwise_aq(p.assignment.aq.clone())
+                    } else {
+                        s
+                    }
+                }
             };
             let profile = VariantProfile {
                 top5_accuracy: Some(p.proxy_top5),
@@ -161,6 +171,49 @@ mod tests {
                 )
                 .unwrap();
             assert_eq!(resp.variant, v.spec.name);
+            assert_eq!(resp.class, want, "variant {} diverged from probe", v.spec.name);
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn joint_planned_family_boots_on_xmp_backends() {
+        // A joint (wq, aq) plan run end to end: the emitted layerwise
+        // specs carry per-layer activation word-lengths, and every
+        // variant still answers with its own kernels' class.
+        let base = resnet::resnet_small(1, 10);
+        let cfg = RunConfig { slices: vec![2], ..RunConfig::default() };
+        let pcfg = PlannerConfig {
+            wq_choices: vec![2, 8],
+            aq_choices: vec![4, 8],
+            beam_width: 8,
+            max_evals: 4,
+            ..PlannerConfig::default()
+        };
+        let report = plan(&base, &cfg, &pcfg).unwrap();
+        let variants = emit_variants(&report);
+        // At least one emitted mixed variant narrows an activation.
+        let narrowed: Vec<&PlannedVariant> = variants
+            .iter()
+            .filter(|v| v.spec.layerwise_aq.iter().any(|&a| a != 8))
+            .collect();
+        assert!(
+            !narrowed.is_empty(),
+            "a [2,8]x[4,8] joint search should emit a reduced-aq plan; frontier: {:?}",
+            report.frontier.iter().map(|p| p.assignment.describe(&base)).collect::<Vec<_>>()
+        );
+        let xcfg = crate::xmp::XmpConfig::default();
+        let server = xmp_family_server(&report, &base, xcfg).unwrap();
+        let img = vec![0.6f32; 3072];
+        for v in &variants {
+            let probe = crate::xmp::XmpBackend::from_spec(&base, &v.spec, xcfg).unwrap();
+            let want = probe.classify_one(&img).unwrap();
+            let resp = server
+                .infer(
+                    InferRequest::new(img.clone())
+                        .with_variant(VariantSelector::Named(v.spec.name.clone())),
+                )
+                .unwrap();
             assert_eq!(resp.class, want, "variant {} diverged from probe", v.spec.name);
         }
         server.shutdown();

@@ -9,6 +9,10 @@ use crate::cnn::{workload, Cnn};
 pub struct PlanFootprint {
     /// Weight storage at the assigned word-lengths, MB.
     pub weight_mb: f64,
+    /// Peak activation working set at the assigned activation
+    /// word-lengths (Table III's activation-buffer bytes; the planned
+    /// CNN's `act_bits` carry the per-layer `a_Q`), MB.
+    pub act_mb: f64,
     /// Weights + BN/bias + peak activation working set, MB.
     pub total_mb: f64,
     /// Weight compression vs the FP32 baseline (the abstract's 4.9x/9.4x
@@ -24,6 +28,7 @@ impl PlanFootprint {
         let params: u64 = cnn.total_params();
         PlanFootprint {
             weight_mb: f.weight_mb(),
+            act_mb: f.peak_activation_bits as f64 / 8.0 / 1e6,
             total_mb: f.total_mb(),
             compression: workload::weight_compression_factor(cnn),
             avg_bits: f.weight_bits as f64 / (params as f64).max(1.0),
@@ -45,5 +50,24 @@ mod tests {
         assert!(w2.avg_bits > 2.0 && w2.avg_bits < 3.0, "{}", w2.avg_bits);
         assert!((w8.avg_bits - 8.0).abs() < 1e-9);
         assert!(w8.total_mb > w8.weight_mb);
+        assert!(w8.act_mb > 0.0);
+    }
+
+    #[test]
+    fn act_mb_tracks_activation_word_lengths() {
+        use crate::cnn::channelwise::{apply_joint_plan, apply_plan};
+        use crate::cnn::ChannelGroup;
+        let base = resnet::resnet18();
+        let plan: Vec<Vec<ChannelGroup>> = base
+            .layers
+            .iter()
+            .map(|_| vec![ChannelGroup { wq: 8, fraction: 1.0 }])
+            .collect();
+        let a8 = PlanFootprint::of(&apply_plan(&base, &plan));
+        let aq: Vec<u32> = vec![4; base.layers.len()];
+        let a4 = PlanFootprint::of(&apply_joint_plan(&base, &plan, &aq));
+        assert!(a4.act_mb < a8.act_mb, "{} vs {}", a4.act_mb, a8.act_mb);
+        assert_eq!(a4.weight_mb, a8.weight_mb, "weights untouched by aq");
+        assert!((a4.act_mb - a8.act_mb / 2.0).abs() < 1e-9, "4 bit = half of 8");
     }
 }

@@ -1,4 +1,4 @@
-//! Pareto machinery and the assignment search.
+//! Pareto machinery and the joint `(w_Q, a_Q)` assignment search.
 //!
 //! Three candidate generators feed the evaluator, all pruned by the same
 //! monotone-dominance argument as `array::search` (every DP coordinate is a
@@ -6,17 +6,24 @@
 //! coordinates cannot complete into a non-dominated plan):
 //!
 //! 1. **Greedy efficiency walk** — from the all-max-bits assignment,
-//!    repeatedly apply the single per-layer demotion with the best
-//!    Δbits/Δnoise ratio. This walks the continuous-relaxation optimum of
-//!    the (noise, footprint) trade-off, so the low-noise end of the
-//!    frontier (where mixed plans Pareto-dominate the uniform variants) is
-//!    covered densely.
+//!    repeatedly apply the single best per-layer demotion by
+//!    Δbits/Δnoise ratio, where a step is either a *weight* demotion
+//!    (saving `params · Δw` weight bits) or an *activation* demotion
+//!    (saving `output_elems · Δa` Table-III activation-buffer bits).
+//!    This walks the continuous-relaxation optimum of the
+//!    (noise, footprint) trade-off, so the low-noise end of the frontier
+//!    (where mixed plans Pareto-dominate the uniform variants) is covered
+//!    densely.
 //! 2. **Channel-split twists** — the first walk steps re-expressed as
 //!    [`ChannelGroup`] splits, so per-channel-group points reach the
 //!    evaluator too.
-//! 3. **Beam DP** — layer-by-layer product with the full menu (uniform
-//!    choices + splits), pruned to the 3-D Pareto set over
-//!    (noise, weight bits, pass cost) and thinned to a bits-spread beam.
+//! 3. **Beam DP** — layer-by-layer product with the full joint menu
+//!    (uniform weight choices + splits, × the activation menu), pruned to
+//!    the 4-D Pareto set over (noise, weight bits, pass cost,
+//!    activation-buffer bits) and thinned to a bits-spread beam. With the
+//!    default single-entry activation menu `[8]` the fourth axis is
+//!    constant at every depth, so the search degenerates bit-for-bit to
+//!    the weight-only planner.
 
 use super::sensitivity::SensitivityModel;
 use super::{pinned, Assignment, PlannerConfig};
@@ -30,7 +37,13 @@ pub struct Triple {
     pub top5: f64,
     /// Frames/s of the DSE-chosen design (higher is better).
     pub fps: f64,
-    /// Weight footprint in MB (lower is better).
+    /// Planned memory footprint in MB (lower is better): weights at their
+    /// assigned word-lengths **plus** the Table-III peak activation
+    /// working set at the assigned activation word-lengths. For all-8-bit
+    /// activation plans the activation term is the same constant for
+    /// every point of a base CNN, so weight-only dominance decisions are
+    /// unchanged; reduced-`a_Q` plans buy their frontier seat with the
+    /// buffer bytes they save.
     pub footprint_mb: f64,
 }
 
@@ -49,16 +62,21 @@ pub fn pareto_indices(pts: &[Triple]) -> Vec<usize> {
         .collect()
 }
 
-/// One per-layer choice with its additive DP coordinates.
+/// One per-layer joint choice with its additive DP coordinates.
 #[derive(Clone, Debug)]
 struct MenuItem {
     groups: Vec<ChannelGroup>,
-    /// Weighted noise contribution `s_l · Σ frac · n(wq)`.
+    /// Activation word-length of this choice.
+    aq: u32,
+    /// Weighted noise contribution
+    /// `s_l · (Σ frac · n(wq) + (n_act(aq) − n_act(8)))`.
     noise: f64,
     /// Weight bits `params_l · Σ frac · wq`.
     bits: f64,
     /// Serial-pass cost proxy `MACs_l · Σ frac · wq` (k=1 cycle count).
     cost: f64,
+    /// Table-III activation-buffer bits `output_elems_l · aq`.
+    act: f64,
 }
 
 fn menu_for_layer(
@@ -69,67 +87,111 @@ fn menu_for_layer(
 ) -> Vec<MenuItem> {
     let l = &base.layers[li];
     let (w, p, m) = (model.weight(li), l.params() as f64, l.macs() as f64);
+    let out_elems = l.output_elems() as f64;
     let wqs = pcfg.bits_menu();
-    let item = |groups: Vec<ChannelGroup>| {
+    let aqs = pcfg.aq_menu();
+    let item = |groups: Vec<ChannelGroup>, aq: u32| {
         let avg_n: f64 = groups.iter().map(|g| g.fraction * model.noise_power(g.wq)).sum();
         let avg_b: f64 = groups.iter().map(|g| g.fraction * g.wq as f64).sum();
         MenuItem {
             groups,
-            noise: w * avg_n,
+            aq,
+            noise: w * (avg_n + model.activation_noise_delta(aq)),
             bits: p * avg_b,
             cost: m * avg_b,
+            act: out_elems * aq as f64,
         }
     };
-    let mut menu: Vec<MenuItem> =
-        wqs.iter().map(|&wq| item(vec![ChannelGroup { wq, fraction: 1.0 }])).collect();
+    // aq innermost so the single-entry default menu preserves the
+    // weight-only ordering exactly.
+    let mut menu: Vec<MenuItem> = Vec::new();
+    for &wq in &wqs {
+        for &aq in &aqs {
+            menu.push(item(vec![ChannelGroup { wq, fraction: 1.0 }], aq));
+        }
+    }
     for pair in wqs.windows(2) {
         let (lo, hi) = (pair[0], pair[1]);
         for &f in &pcfg.split_fractions {
             if f > 0.0 && f < 1.0 {
-                menu.push(item(vec![
-                    ChannelGroup { wq: lo, fraction: f },
-                    ChannelGroup { wq: hi, fraction: 1.0 - f },
-                ]));
+                for &aq in &aqs {
+                    menu.push(item(
+                        vec![
+                            ChannelGroup { wq: lo, fraction: f },
+                            ChannelGroup { wq: hi, fraction: 1.0 - f },
+                        ],
+                        aq,
+                    ));
+                }
             }
         }
     }
     menu
 }
 
-/// Greedy efficiency walk: from all-max-bits, repeatedly demote the single
-/// layer whose next-lower uniform word-length saves the most weight bits
-/// per unit of added aggregate noise.
+/// Greedy efficiency walk: from the all-max-bits joint assignment,
+/// repeatedly apply the single best demotion by Δbits/Δnoise — either a
+/// layer's next-lower *weight* word-length (saving `params · Δw` weight
+/// bits) or its next-lower *activation* word-length (saving
+/// `output_elems · Δa` activation-buffer bits). With the default
+/// single-entry activation menu no activation moves exist and the walk
+/// is the weight-only walk, step for step.
 fn chain_candidates(base: &Cnn, model: &SensitivityModel, pcfg: &PlannerConfig) -> Vec<Assignment> {
     let wqs = pcfg.bits_menu();
-    if wqs.len() < 2 {
+    let aqs = pcfg.aq_menu();
+    if wqs.len() < 2 && aqs.len() < 2 {
         return Vec::new();
     }
     let hi = *wqs.last().unwrap();
+    let hi_a = *aqs.last().unwrap();
     let inner: Vec<usize> = (0..base.layers.len()).filter(|&i| !pinned(base, i)).collect();
-    // Current uniform word-length index per inner layer (start at max).
-    let mut level: Vec<usize> = vec![wqs.len() - 1; inner.len()];
-    let mut cur = Assignment::uniform(base, hi);
+    // Current word-length indexes per inner layer (start at max).
+    let mut wlevel: Vec<usize> = vec![wqs.len() - 1; inner.len()];
+    let mut alevel: Vec<usize> = vec![aqs.len() - 1; inner.len()];
+    let mut cur = Assignment::uniform_joint(base, hi, hi_a);
     let mut out = Vec::new();
+    enum Move {
+        Weight(usize),
+        Act(usize),
+    }
     loop {
-        // Best next single-layer demotion by Δbits/Δnoise.
-        let mut best: Option<(usize, f64)> = None;
-        for (j, &li) in inner.iter().enumerate() {
-            if level[j] == 0 {
-                continue;
+        // Best next single demotion by Δbits/Δnoise.
+        let mut best: Option<(Move, f64)> = None;
+        let mut consider = |mv: Move, eff: f64, best: &mut Option<(Move, f64)>| {
+            if best.as_ref().map_or(true, |(_, be)| eff > *be) {
+                *best = Some((mv, eff));
             }
+        };
+        for (j, &li) in inner.iter().enumerate() {
             let l = &base.layers[li];
-            let (from, to) = (wqs[level[j]], wqs[level[j] - 1]);
-            let d_bits = l.params() as f64 * (from - to) as f64;
-            let d_noise =
-                model.weight(li) * (model.noise_power(to) - model.noise_power(from)).max(1e-300);
-            let eff = d_bits / d_noise;
-            if best.map_or(true, |(_, be)| eff > be) {
-                best = Some((j, eff));
+            if wlevel[j] > 0 {
+                let (from, to) = (wqs[wlevel[j]], wqs[wlevel[j] - 1]);
+                let d_bits = l.params() as f64 * (from - to) as f64;
+                let d_noise = model.weight(li)
+                    * (model.noise_power(to) - model.noise_power(from)).max(1e-300);
+                consider(Move::Weight(j), d_bits / d_noise, &mut best);
+            }
+            if alevel[j] > 0 {
+                let (from, to) = (aqs[alevel[j]], aqs[alevel[j] - 1]);
+                let d_bits = l.output_elems() as f64 * (from - to) as f64;
+                let d_noise = model.weight(li)
+                    * (model.activation_noise_power(to) - model.activation_noise_power(from))
+                        .max(1e-300);
+                consider(Move::Act(j), d_bits / d_noise, &mut best);
             }
         }
-        let Some((j, _)) = best else { break };
-        level[j] -= 1;
-        cur.groups[inner[j]] = vec![ChannelGroup { wq: wqs[level[j]], fraction: 1.0 }];
+        let Some((mv, _)) = best else { break };
+        match mv {
+            Move::Weight(j) => {
+                wlevel[j] -= 1;
+                cur.groups[inner[j]] =
+                    vec![ChannelGroup { wq: wqs[wlevel[j]], fraction: 1.0 }];
+            }
+            Move::Act(j) => {
+                alevel[j] -= 1;
+                cur.aq[inner[j]] = aqs[alevel[j]];
+            }
+        }
         out.push(cur.clone());
     }
     out
@@ -144,6 +206,7 @@ fn split_candidates(base: &Cnn, model: &SensitivityModel, pcfg: &PlannerConfig) 
     }
     let hi = *wqs.last().unwrap();
     let lo = wqs[wqs.len() - 2];
+    let hi_a = *pcfg.aq_menu().last().unwrap();
     let inner: Vec<usize> = (0..base.layers.len()).filter(|&i| !pinned(base, i)).collect();
     // Efficiency order for the hi -> lo step.
     let mut order: Vec<usize> = inner.clone();
@@ -160,7 +223,7 @@ fn split_candidates(base: &Cnn, model: &SensitivityModel, pcfg: &PlannerConfig) 
             if f <= 0.0 || f >= 1.0 {
                 continue;
             }
-            let mut a = Assignment::uniform(base, hi);
+            let mut a = Assignment::uniform_joint(base, hi, hi_a);
             a.groups[li] = vec![
                 ChannelGroup { wq: lo, fraction: f },
                 ChannelGroup { wq: hi, fraction: 1.0 - f },
@@ -176,22 +239,27 @@ struct BeamState {
     noise: f64,
     bits: f64,
     cost: f64,
+    /// Table-III activation-buffer bits — the axis the joint search adds.
+    act: f64,
     choices: Vec<u16>,
 }
 
-/// Keep only states no other state weakly dominates (≤ on all three
-/// coordinates; equal states collapse to the first).
+/// Keep only states no other state weakly dominates (≤ on all four
+/// coordinates; equal states collapse to the first). With a single-entry
+/// activation menu the `act` coordinate is identical across all states at
+/// a given depth, so the pruning degenerates to the 3-D weight-only one.
 fn prune_weakly_dominated(mut states: Vec<BeamState>) -> Vec<BeamState> {
     states.sort_by(|a, b| {
         a.noise
             .total_cmp(&b.noise)
             .then(a.bits.total_cmp(&b.bits))
             .then(a.cost.total_cmp(&b.cost))
+            .then(a.act.total_cmp(&b.act))
     });
     let mut kept: Vec<BeamState> = Vec::new();
     'outer: for s in states {
         for k in &kept {
-            if k.noise <= s.noise && k.bits <= s.bits && k.cost <= s.cost {
+            if k.noise <= s.noise && k.bits <= s.bits && k.cost <= s.cost && k.act <= s.act {
                 continue 'outer;
             }
         }
@@ -200,13 +268,19 @@ fn prune_weakly_dominated(mut states: Vec<BeamState>) -> Vec<BeamState> {
     kept
 }
 
-/// Beam DP over the inner layers.
+/// Beam DP over the inner layers' joint `(wq groups, aq)` menus.
 fn beam_candidates(base: &Cnn, model: &SensitivityModel, pcfg: &PlannerConfig) -> Vec<Assignment> {
     let inner: Vec<usize> = (0..base.layers.len()).filter(|&i| !pinned(base, i)).collect();
     let menus: Vec<Vec<MenuItem>> =
         inner.iter().map(|&li| menu_for_layer(base, model, li, pcfg)).collect();
     let beam = pcfg.beam_width.max(2);
-    let mut states = vec![BeamState { noise: 0.0, bits: 0.0, cost: 0.0, choices: Vec::new() }];
+    let mut states = vec![BeamState {
+        noise: 0.0,
+        bits: 0.0,
+        cost: 0.0,
+        act: 0.0,
+        choices: Vec::new(),
+    }];
     for menu in &menus {
         let mut next = Vec::with_capacity(states.len() * menu.len());
         for s in &states {
@@ -217,6 +291,7 @@ fn beam_candidates(base: &Cnn, model: &SensitivityModel, pcfg: &PlannerConfig) -
                     noise: s.noise + m.noise,
                     bits: s.bits + m.bits,
                     cost: s.cost + m.cost,
+                    act: s.act + m.act,
                     choices,
                 });
             }
@@ -237,7 +312,9 @@ fn beam_candidates(base: &Cnn, model: &SensitivityModel, pcfg: &PlannerConfig) -
         .map(|s| {
             let mut a = Assignment::uniform(base, 8);
             for (j, &li) in inner.iter().enumerate() {
-                a.groups[li] = menus[j][s.choices[j] as usize].groups.clone();
+                let item = &menus[j][s.choices[j] as usize];
+                a.groups[li] = item.groups.clone();
+                a.aq[li] = item.aq;
             }
             a
         })
@@ -331,8 +408,14 @@ mod tests {
     fn enumeration_covers_the_quiet_end_and_dedupes() {
         let base = resnet::resnet18();
         let pcfg = PlannerConfig::default();
-        let model = SensitivityModel::build(&base, "ResNet-18", pcfg.alpha, &pcfg.wq_choices)
-            .unwrap();
+        let model = SensitivityModel::build(
+            &base,
+            "ResNet-18",
+            pcfg.alpha,
+            &pcfg.wq_choices,
+            &pcfg.aq_choices,
+        )
+        .unwrap();
         let cands = enumerate_assignments(&base, &model, &pcfg);
         assert!(cands.len() > 20, "{}", cands.len());
         for (i, a) in cands.iter().enumerate() {
@@ -355,11 +438,64 @@ mod tests {
     }
 
     #[test]
+    fn joint_aq_menu_reaches_the_candidate_pool() {
+        // Opening the activation menu must produce candidates that narrow
+        // activations — via the beam's joint menu AND the greedy walk's
+        // activation moves — while an aq-8-only menu never does.
+        let base = resnet::resnet18();
+        let mut pcfg = PlannerConfig { aq_choices: vec![4, 8], ..PlannerConfig::default() };
+        let model = SensitivityModel::build(
+            &base,
+            "ResNet-18",
+            pcfg.alpha,
+            &pcfg.wq_choices,
+            &pcfg.aq_choices,
+        )
+        .unwrap();
+        let cands = enumerate_assignments(&base, &model, &pcfg);
+        assert!(
+            cands.iter().any(|a| a.aq.iter().any(|&q| q == 4)),
+            "joint menu must surface reduced-activation candidates"
+        );
+        // Pinned layers never narrow.
+        for a in &cands {
+            assert_eq!(a.aq[0], 8, "conv1 activations pinned");
+            assert_eq!(*a.aq.last().unwrap(), 8, "fc activations pinned");
+            assert_eq!(a.aq.len(), base.layers.len());
+            for &q in &a.aq {
+                assert!(q == 4 || q == 8, "aq {q} outside the menu");
+            }
+        }
+        // No reduced-aq candidate is classed as a uniform paper baseline.
+        for a in cands.iter().filter(|a| a.aq.iter().any(|&q| q != 8)) {
+            assert_eq!(a.uniform_wq(&base), None);
+        }
+        // The default single-entry menu stays all-8.
+        pcfg.aq_choices = vec![8];
+        let model8 = SensitivityModel::build(
+            &base,
+            "ResNet-18",
+            pcfg.alpha,
+            &pcfg.wq_choices,
+            &pcfg.aq_choices,
+        )
+        .unwrap();
+        let cands8 = enumerate_assignments(&base, &model8, &pcfg);
+        assert!(cands8.iter().all(|a| a.aq.iter().all(|&q| q == 8)));
+    }
+
+    #[test]
     fn thinning_respects_cap_and_keeps_extremes() {
         let base = resnet::resnet18();
         let pcfg = PlannerConfig::default();
-        let model = SensitivityModel::build(&base, "ResNet-18", pcfg.alpha, &pcfg.wq_choices)
-            .unwrap();
+        let model = SensitivityModel::build(
+            &base,
+            "ResNet-18",
+            pcfg.alpha,
+            &pcfg.wq_choices,
+            &pcfg.aq_choices,
+        )
+        .unwrap();
         let cands = enumerate_assignments(&base, &model, &pcfg);
         let noises: Vec<f64> = cands.iter().map(|a| model.aggregate_noise(a)).collect();
         let (lo, hi) = noises.iter().fold((f64::INFINITY, 0.0f64), |(l, h), &n| {

@@ -55,35 +55,52 @@ pub(crate) fn pinned(base: &Cnn, i: usize) -> bool {
     i == 0 || i + 1 == base.layers.len() || base.layers[i].kind == LayerKind::Fc
 }
 
-/// A per-layer precision assignment over a base CNN: one
-/// [`ChannelGroup`] list per layer (single entry = uniform layer; multiple
-/// entries = channel-wise split). Pinned layers always carry `[w8 @ 1.0]`.
+/// A per-layer **joint** precision assignment over a base CNN: one
+/// [`ChannelGroup`] list (weights; single entry = uniform layer, multiple
+/// entries = channel-wise split) and one activation word-length per
+/// layer. Pinned layers always carry `[w8 @ 1.0]` and `a8`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Assignment {
     pub groups: Vec<Vec<ChannelGroup>>,
+    /// Per-layer activation word-lengths (the paper fixes 8; the joint
+    /// search may narrow inner layers).
+    pub aq: Vec<u32>,
 }
 
 impl Assignment {
-    /// Every inner layer at `wq`, pinned layers at 8 bit.
+    /// Every inner layer at `wq`, pinned layers at 8 bit, every
+    /// activation at the paper's fixed 8 bit.
     pub fn uniform(base: &Cnn, wq: u32) -> Assignment {
-        let groups = (0..base.layers.len())
+        Assignment::uniform_joint(base, wq, 8)
+    }
+
+    /// Every inner layer at `(wq, aq)`, pinned layers at `(8, 8)`.
+    pub fn uniform_joint(base: &Cnn, wq: u32, aq: u32) -> Assignment {
+        let n = base.layers.len();
+        let groups = (0..n)
             .map(|i| {
                 let w = if pinned(base, i) { 8 } else { wq };
                 vec![ChannelGroup { wq: w, fraction: 1.0 }]
             })
             .collect();
-        Assignment { groups }
+        let aq = (0..n)
+            .map(|i| if pinned(base, i) { 8 } else { aq })
+            .collect();
+        Assignment { groups, aq }
     }
 
     /// `Some(wq)` when every inner layer is a single group at the same
-    /// word-length (the assignment is expressible as a uniform variant).
+    /// word-length **with activations at the paper's fixed 8 bit** (the
+    /// assignment is expressible as one of the uniform paper baselines —
+    /// a reduced-activation uniform plan is not, and must survive as a
+    /// mixed candidate).
     pub fn uniform_wq(&self, base: &Cnn) -> Option<u32> {
         let mut seen: Option<u32> = None;
-        for (i, g) in self.groups.iter().enumerate() {
+        for (i, (g, &a)) in self.groups.iter().zip(&self.aq).enumerate() {
             if pinned(base, i) {
                 continue;
             }
-            if g.len() != 1 {
+            if g.len() != 1 || a != 8 {
                 return None;
             }
             match seen {
@@ -96,9 +113,16 @@ impl Assignment {
     }
 
     /// Lower onto the base CNN (see
-    /// [`crate::cnn::channelwise::apply_plan`]).
+    /// [`crate::cnn::channelwise::apply_plan`] /
+    /// [`crate::cnn::channelwise::apply_joint_plan`]): the all-8-bit
+    /// activation case takes the weights-only path and is bit-identical
+    /// to the pre-activation-planning lowering.
     pub fn apply(&self, base: &Cnn) -> Cnn {
-        crate::cnn::channelwise::apply_plan(base, &self.groups)
+        if self.aq.iter().any(|&a| a != 8) {
+            crate::cnn::channelwise::apply_joint_plan(base, &self.groups, &self.aq)
+        } else {
+            crate::cnn::channelwise::apply_plan(base, &self.groups)
+        }
     }
 
     /// Weight footprint in MB straight from the assignment (fraction-exact;
@@ -117,17 +141,73 @@ impl Assignment {
         bits / 8.0 / 1e6
     }
 
+    /// Peak activation working set in MB at the assigned per-layer
+    /// activation word-lengths — the Table III activation-buffer bytes
+    /// the joint footprint adds. Computable from the assignment alone
+    /// (no lowering), like [`weight_mb`](Self::weight_mb). Inputs are
+    /// priced at the *structural* producer's `a_Q` (mirroring the xmp
+    /// forward's rules): the previous layer when shapes chain (incl.
+    /// through the elided stride-2 pool), the most recent shape-matching
+    /// earlier layer for residual `downsample` projections, and the
+    /// conservative 8-bit image width otherwise — so a narrow projection
+    /// layer fed by a wide stage boundary is priced at the wide width,
+    /// not its own.
+    pub fn act_buffer_mb(&self, base: &Cnn) -> f64 {
+        let peak_bits = base
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                l.input_elems() * self.producer_aq(base, i) as u64
+                    + l.output_elems() * self.aq[i] as u64
+            })
+            .max()
+            .unwrap_or(0);
+        peak_bits as f64 / 8.0 / 1e6
+    }
+
+    /// Word-length of the activations feeding base layer `i` under this
+    /// assignment (see [`act_buffer_mb`](Self::act_buffer_mb)). Falls
+    /// back to the 8-bit maximum when no structural producer matches
+    /// (the image, or a merge whose wider branch re-widened the buffer).
+    fn producer_aq(&self, base: &Cnn, i: usize) -> u32 {
+        if i == 0 {
+            return 8;
+        }
+        let l = &base.layers[i];
+        let prev = &base.layers[i - 1];
+        let chains = (prev.oh(), prev.od) == (l.ih, l.iw)
+            || (prev.od == l.iw && prev.oh().div_ceil(2) == l.ih);
+        if chains {
+            return self.aq[i - 1];
+        }
+        for j in (0..i.saturating_sub(1)).rev() {
+            let p = &base.layers[j];
+            if (p.oh(), p.od) == (l.ih, l.iw) {
+                return self.aq[j];
+            }
+        }
+        8
+    }
+
     /// Human-readable summary: the majority word-length plus the
-    /// exceptions, e.g. `w8; layer4.0.conv2→w4 (+2 more)`.
+    /// exceptions, e.g. `w8; layer4.0.conv2→w4a6 (+2 more)` (the `aN`
+    /// suffix appears only when a layer's activations are narrowed below
+    /// the paper's fixed 8 bit).
     pub fn describe(&self, base: &Cnn) -> String {
-        let key = |g: &[ChannelGroup]| -> String {
-            if g.len() == 1 {
+        let key = |g: &[ChannelGroup], aq: u32| -> String {
+            let w = if g.len() == 1 {
                 format!("w{}", g[0].wq)
             } else {
                 g.iter()
                     .map(|c| format!("w{}:{:.2}", c.wq, c.fraction))
                     .collect::<Vec<_>>()
                     .join("+")
+            };
+            if aq == 8 {
+                w
+            } else {
+                format!("{w}a{aq}")
             }
         };
         let inner: Vec<usize> =
@@ -135,7 +215,7 @@ impl Assignment {
         // Majority key among inner layers.
         let mut counts: Vec<(String, usize)> = Vec::new();
         for &i in &inner {
-            let k = key(&self.groups[i]);
+            let k = key(&self.groups[i], self.aq[i]);
             match counts.iter_mut().find(|(kk, _)| *kk == k) {
                 Some((_, c)) => *c += 1,
                 None => counts.push((k, 1)),
@@ -148,8 +228,8 @@ impl Assignment {
             .unwrap_or_else(|| "w8".into());
         let exceptions: Vec<String> = inner
             .iter()
-            .filter(|&&i| key(&self.groups[i]) != majority)
-            .map(|&i| format!("{}→{}", base.layers[i].name, key(&self.groups[i])))
+            .filter(|&&i| key(&self.groups[i], self.aq[i]) != majority)
+            .map(|&i| format!("{}→{}", base.layers[i].name, key(&self.groups[i], self.aq[i])))
             .collect();
         match exceptions.len() {
             0 => majority,
@@ -168,8 +248,13 @@ impl Assignment {
 pub struct PlannerConfig {
     /// Accuracy family for the paper anchors (`ResNet-18/50/152`).
     pub family: String,
-    /// Word-lengths the search may assign per layer.
+    /// Weight word-lengths the search may assign per layer.
     pub wq_choices: Vec<u32>,
+    /// Activation word-lengths the search may assign per layer. The
+    /// default `[8]` (the paper's fixed point) keeps the search — and
+    /// every result — identical to the weight-only planner; widening the
+    /// menu (CLI `--aq 4,6,8`) opens the joint `(w_Q, a_Q)` space.
+    pub aq_choices: Vec<u32>,
     /// Channel-split fractions for two-group menu entries (low-wq share).
     pub split_fractions: Vec<f64>,
     /// Redundancy exponent of the sensitivity model.
@@ -180,7 +265,10 @@ pub struct PlannerConfig {
     pub max_evals: usize,
     /// Drop candidates whose proxy Top-5 falls below this, if set.
     pub min_top5: Option<f64>,
-    /// Drop candidates whose weight footprint exceeds this (MB), if set.
+    /// Drop candidates whose planned footprint — weights at their
+    /// assigned word-lengths **plus** the Table-III peak activation
+    /// buffer at the assigned `a_Q` (the same wt+act MB the frontier
+    /// ranks on) — exceeds this (MB), if set.
     pub max_footprint_mb: Option<f64>,
 }
 
@@ -189,6 +277,7 @@ impl Default for PlannerConfig {
         PlannerConfig {
             family: "ResNet-18".to_string(),
             wq_choices: vec![1, 2, 4, 8],
+            aq_choices: vec![8],
             split_fractions: vec![0.5],
             alpha: 1.0,
             beam_width: 48,
@@ -208,13 +297,25 @@ impl PlannerConfig {
         }
     }
 
-    /// The word-length menu, sorted ascending and deduplicated — the one
-    /// normalization every candidate generator shares.
+    /// The weight word-length menu, sorted ascending and deduplicated —
+    /// the one normalization every candidate generator shares.
     pub fn bits_menu(&self) -> Vec<u32> {
         let mut wqs = self.wq_choices.clone();
         wqs.sort_unstable();
         wqs.dedup();
         wqs
+    }
+
+    /// The activation word-length menu, sorted ascending and
+    /// deduplicated; `[8]` when unset.
+    pub fn aq_menu(&self) -> Vec<u32> {
+        let mut aqs = self.aq_choices.clone();
+        if aqs.is_empty() {
+            aqs.push(8);
+        }
+        aqs.sort_unstable();
+        aqs.dedup();
+        aqs
     }
 }
 
@@ -243,7 +344,7 @@ impl PlannedPoint {
         Triple {
             top5: self.proxy_top5,
             fps: self.fps,
-            footprint_mb: self.footprint.weight_mb,
+            footprint_mb: self.footprint.weight_mb + self.footprint.act_mb,
         }
     }
 }
@@ -281,8 +382,8 @@ impl PlanReport {
             self.cnn_name, self.family
         ))
         .headers(&[
-            "name", "assignment", "Top-1*", "Top-5*", "fps", "k", "HxWxD", "wt MB", "comp",
-            "mJ/f", "dominates",
+            "name", "assignment", "Top-1*", "Top-5*", "fps", "k", "HxWxD", "wt MB", "act MB",
+            "comp", "mJ/f", "dominates",
         ]);
         fn cells(p: &PlannedPoint, base: &Cnn, on_frontier: bool) -> Vec<String> {
             let doms = if p.dominates.is_empty() {
@@ -303,6 +404,7 @@ impl PlanReport {
                 p.k.to_string(),
                 p.dims.to_string(),
                 fnum(p.footprint.weight_mb, 2),
+                fnum(p.footprint.act_mb, 2),
                 format!("{:.1}x", p.footprint.compression),
                 fnum(p.mj_per_frame, 2),
                 doms,
@@ -324,7 +426,9 @@ impl PlanReport {
         }
         t.note("* proxy accuracy: MAC-weighted LSQ-noise model calibrated on the paper's \
                 Table III/IV anchors, quoted at their 0.01% resolution");
-        t.note("≻wN = Pareto-dominates the uniform wN baseline on (Top-5*, fps, wt MB)");
+        t.note("≻wN = Pareto-dominates the uniform wN baseline on (Top-5*, fps, wt+act MB)");
+        t.note("act MB = Table III peak activation working set at the assigned a_Q \
+                (aN suffixes in the assignment column mark layers below the paper's fixed 8 bit)");
         t
     }
 }
@@ -341,6 +445,17 @@ fn evaluate(
     let cnn = assignment.apply(base);
     let report = dse::explore_cached(&cnn, cfg, cache);
     let best = report.best_outcome();
+    let mut footprint = PlanFootprint::of(&cnn);
+    // The lowered CNN's peak is the *schedule* view, where a channel split
+    // artificially halves a layer's output working set (sub-layers are
+    // scheduled separately, but at execution time all groups' outputs are
+    // live together to form the next input). Use the assignment-level
+    // base-layer peak — input at the structural producer's a_Q, output at
+    // the layer's own — which is also what the xmp engine actually
+    // buffers, and keep total_mb consistent with the substitution.
+    let schedule_act_mb = footprint.act_mb;
+    footprint.act_mb = assignment.act_buffer_mb(base);
+    footprint.total_mb += footprint.act_mb - schedule_act_mb;
     PlannedPoint {
         name,
         proxy_top1: model.proxy_top1(&assignment),
@@ -349,7 +464,7 @@ fn evaluate(
         k: best.k,
         dims: best.array.dims,
         mj_per_frame: best.sim.e_total_mj(),
-        footprint: PlanFootprint::of(&cnn),
+        footprint,
         assignment,
         uniform_wq,
         dominates: Vec::new(),
@@ -359,7 +474,13 @@ fn evaluate(
 /// Run the full planner: search the assignment space, evaluate through the
 /// cached DSE, and return the Pareto frontier plus the uniform baselines.
 pub fn plan(base: &Cnn, cfg: &RunConfig, pcfg: &PlannerConfig) -> Result<PlanReport> {
-    let model = SensitivityModel::build(base, &pcfg.family, pcfg.alpha, &pcfg.wq_choices)?;
+    let model = SensitivityModel::build(
+        base,
+        &pcfg.family,
+        pcfg.alpha,
+        &pcfg.wq_choices,
+        &pcfg.aq_choices,
+    )?;
     let mut candidates = frontier::enumerate_assignments(base, &model, pcfg);
     let enumerated = candidates.len();
     candidates.retain(|a| a.uniform_wq(base).is_none());
@@ -369,9 +490,10 @@ pub fn plan(base: &Cnn, cfg: &RunConfig, pcfg: &PlannerConfig) -> Result<PlanRep
     // Footprint is computable from the assignment alone, so gate here —
     // before thinning — rather than waste DSE evaluations on over-budget
     // candidates (a final exact retain below catches channel-rounding
-    // stragglers).
+    // stragglers). The budget bounds the same wt+act quantity the
+    // frontier ranks and prints.
     if let Some(limit) = pcfg.max_footprint_mb {
-        candidates.retain(|a| a.weight_mb(base) <= limit);
+        candidates.retain(|a| a.weight_mb(base) + a.act_buffer_mb(base) <= limit);
     }
     let candidates = frontier::thin_candidates(candidates, &model, pcfg.max_evals);
 
@@ -385,7 +507,7 @@ pub fn plan(base: &Cnn, cfg: &RunConfig, pcfg: &PlannerConfig) -> Result<PlanRep
         .collect();
     let evaluated = mixed.len();
     if let Some(limit) = pcfg.max_footprint_mb {
-        mixed.retain(|p| p.footprint.weight_mb <= limit);
+        mixed.retain(|p| p.footprint.weight_mb + p.footprint.act_mb <= limit);
     }
 
     let uniforms: Vec<PlannedPoint> = pcfg
@@ -459,6 +581,52 @@ mod tests {
         assert_eq!(b.uniform_wq(&base), None);
         let d = b.describe(&base);
         assert!(d.starts_with("w2; ") && d.contains("→w1"), "{d}");
+    }
+
+    #[test]
+    fn joint_assignment_uniform_wq_describe_and_footprint() {
+        let base = resnet::resnet18();
+        // A reduced-activation uniform plan is NOT a paper baseline.
+        let j = Assignment::uniform_joint(&base, 4, 6);
+        assert_eq!(j.uniform_wq(&base), None);
+        assert_eq!(j.describe(&base), "w4a6");
+        assert_eq!(j.groups, Assignment::uniform(&base, 4).groups);
+        // Pinned layers stay at a8.
+        assert_eq!(j.aq[0], 8);
+        assert_eq!(*j.aq.last().unwrap(), 8);
+        let w4 = Assignment::uniform(&base, 4);
+        // On ResNet-18 the peak activation working set is conv1's — a
+        // pinned layer — so narrowing inner activations cannot move the
+        // Table III buffer: the joint plan's act footprint is honest
+        // about that (equal, not smaller).
+        assert_eq!(j.act_buffer_mb(&base), w4.act_buffer_mb(&base));
+        assert_eq!(j.weight_mb(&base), w4.weight_mb(&base));
+        // On the small 32x32 topology the peak is an inner layer, and the
+        // buffer genuinely shrinks with aq.
+        let small = resnet::resnet_small(1, 10);
+        let js = Assignment::uniform_joint(&small, 4, 6);
+        let ws = Assignment::uniform(&small, 4);
+        assert!(
+            js.act_buffer_mb(&small) < ws.act_buffer_mb(&small),
+            "{} vs {}",
+            js.act_buffer_mb(&small),
+            ws.act_buffer_mb(&small)
+        );
+        // Lowering writes act_bits; the all-8 case is the weights-only CNN.
+        assert_eq!(
+            w4.apply(&base).fingerprint(),
+            base.clone().with_uniform_wq(4).fingerprint()
+        );
+        assert_ne!(j.apply(&base).fingerprint(), w4.apply(&base).fingerprint());
+        // A single narrowed layer shows up as an aN exception.
+        let mut one = Assignment::uniform(&base, 4);
+        let fat = (0..base.layers.len())
+            .filter(|&i| !pinned(&base, i))
+            .max_by_key(|&i| base.layers[i].params())
+            .unwrap();
+        one.aq[fat] = 5;
+        let d = one.describe(&base);
+        assert!(d.starts_with("w4; ") && d.contains("→w4a5"), "{d}");
     }
 
     #[test]

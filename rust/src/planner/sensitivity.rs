@@ -18,10 +18,22 @@
 //! mixed assignments interpolate between them. Proxies are quoted at the
 //! anchors' own resolution (0.01%); differences below that are not
 //! meaningful under this calibration.
+//!
+//! **Activation word-lengths.** Reducing a layer's `a_Q` injects its own
+//! quantization noise ([`crate::quant::lsq::reference_activation_noise_power`],
+//! an LSQ-initialized unsigned quantizer over a half-normal post-ReLU
+//! reference). The paper's anchors all sit at the fixed 8-bit activation
+//! point, so the activation term enters as a **delta against that
+//! reference**: layer `l` contributes `s_l · (n_act(a_l) − n_act(8))` on
+//! top of its weight term. At `a_Q = 8` the delta is exactly `0.0` (the
+//! same f64 subtracted from itself), so every weight-only anchor — and
+//! every pre-activation-planning proxy value — is reproduced bit-for-bit;
+//! narrower activations push the aggregate toward the noisy anchors the
+//! same way narrower weights do.
 
 use super::Assignment;
 use crate::cnn::Cnn;
-use crate::quant::lsq::reference_noise_power;
+use crate::quant::lsq::{reference_activation_noise_power, reference_noise_power};
 use crate::report::paper;
 use crate::util::error::Result;
 
@@ -31,17 +43,29 @@ pub struct SensitivityModel {
     /// Per-layer sensitivity weights over the base CNN, normalized to sum 1
     /// (0 for the pinned first/last/FC layers).
     weights: Vec<f64>,
-    /// `(bits, noise power)` menu, ascending bits.
+    /// `(bits, noise power)` menu for weights, ascending bits.
     noise: Vec<(u32, f64)>,
+    /// `(bits, activation noise power)` menu, ascending bits.
+    act_noise: Vec<(u32, f64)>,
+    /// The 8-bit activation reference `n_act(8)` the deltas are taken
+    /// against.
+    act_noise_ref: f64,
     /// `(aggregate noise, top1, top5)` anchors, ascending noise.
     anchors: Vec<(f64, f64, f64)>,
 }
 
 impl SensitivityModel {
     /// Build and calibrate the model. `family` names the paper's accuracy
-    /// tables (e.g. `"ResNet-18"`); `wq_menu` lists every word-length the
-    /// search may assign. Fails when the paper has no anchors for `family`.
-    pub fn build(base: &Cnn, family: &str, alpha: f64, wq_menu: &[u32]) -> Result<SensitivityModel> {
+    /// tables (e.g. `"ResNet-18"`); `wq_menu` / `aq_menu` list every
+    /// weight / activation word-length the search may assign. Fails when
+    /// the paper has no anchors for `family`.
+    pub fn build(
+        base: &Cnn,
+        family: &str,
+        alpha: f64,
+        wq_menu: &[u32],
+        aq_menu: &[u32],
+    ) -> Result<SensitivityModel> {
         assert!(alpha >= 0.0, "redundancy exponent must be non-negative");
         let n_layers = base.layers.len();
         let inner: Vec<usize> = (0..n_layers).filter(|&i| !super::pinned(base, i)).collect();
@@ -68,12 +92,26 @@ impl SensitivityModel {
                 "word-length menu entry {bad} is outside the supported 1..=8 bit range"
             ));
         }
+        if let Some(bad) = aq_menu.iter().find(|b| !(1..=8).contains(*b)) {
+            return Err(crate::anyhow!(
+                "activation word-length menu entry {bad} is outside the supported 1..=8 bit range"
+            ));
+        }
         let mut bits: Vec<u32> = wq_menu.to_vec();
         bits.extend([1, 2, 4, 8]);
         bits.sort_unstable();
         bits.dedup();
         let noise: Vec<(u32, f64)> = bits.iter().map(|&b| (b, reference_noise_power(b))).collect();
         let np = |b: u32| noise.iter().find(|(bb, _)| *bb == b).unwrap().1;
+        let mut abits: Vec<u32> = aq_menu.to_vec();
+        abits.push(8);
+        abits.sort_unstable();
+        abits.dedup();
+        let act_noise: Vec<(u32, f64)> = abits
+            .iter()
+            .map(|&b| (b, reference_activation_noise_power(b)))
+            .collect();
+        let act_noise_ref = reference_activation_noise_power(8);
 
         // Anchors: a uniform-wq assignment aggregates to exactly n(wq).
         let mut anchors: Vec<(f64, f64, f64)> = paper::accuracy_anchors(family)
@@ -96,11 +134,17 @@ impl SensitivityModel {
                 "no paper accuracy anchors for family '{family}' (try ResNet-18/50/152)"
             ));
         }
-        Ok(SensitivityModel { weights, noise, anchors })
+        Ok(SensitivityModel {
+            weights,
+            noise,
+            act_noise,
+            act_noise_ref,
+            anchors,
+        })
     }
 
-    /// Noise power of one word-length from the model's menu (computes on
-    /// the fly for bits outside it).
+    /// Noise power of one weight word-length from the model's menu
+    /// (computes on the fly for bits outside it).
     pub fn noise_power(&self, bits: u32) -> f64 {
         self.noise
             .iter()
@@ -109,17 +153,37 @@ impl SensitivityModel {
             .unwrap_or_else(|| reference_noise_power(bits))
     }
 
+    /// Noise power of one activation word-length from the model's menu
+    /// (computes on the fly for bits outside it).
+    pub fn activation_noise_power(&self, bits: u32) -> f64 {
+        self.act_noise
+            .iter()
+            .find(|(b, _)| *b == bits)
+            .map(|(_, n)| *n)
+            .unwrap_or_else(|| reference_activation_noise_power(bits))
+    }
+
+    /// The per-layer activation-noise **delta** against the paper's fixed
+    /// 8-bit activation point: `n_act(bits) − n_act(8)`. Exactly `0.0` at
+    /// 8 bit — the calibration that keeps the weight-only anchors
+    /// bit-for-bit.
+    pub fn activation_noise_delta(&self, bits: u32) -> f64 {
+        self.activation_noise_power(bits) - self.act_noise_ref
+    }
+
     /// Normalized sensitivity weight of layer `i` of the base CNN.
     pub fn weight(&self, i: usize) -> f64 {
         self.weights[i]
     }
 
-    /// Sensitivity-weighted mean noise power of an assignment (channel
-    /// groups contribute fraction-weighted).
+    /// Sensitivity-weighted mean noise power of an assignment: per layer,
+    /// the fraction-weighted weight-quantization noise of its channel
+    /// groups plus the activation-noise delta of its `a_Q`.
     pub fn aggregate_noise(&self, a: &Assignment) -> f64 {
         assert_eq!(a.groups.len(), self.weights.len(), "assignment/base mismatch");
+        assert_eq!(a.aq.len(), self.weights.len(), "activation plan/base mismatch");
         let mut acc = 0.0;
-        for (groups, &w) in a.groups.iter().zip(&self.weights) {
+        for ((groups, &aq), &w) in a.groups.iter().zip(&a.aq).zip(&self.weights) {
             if w == 0.0 {
                 continue;
             }
@@ -127,7 +191,7 @@ impl SensitivityModel {
                 .iter()
                 .map(|g| g.fraction * self.noise_power(g.wq))
                 .sum();
-            acc += w * layer_noise;
+            acc += w * (layer_noise + self.activation_noise_delta(aq));
         }
         acc
     }
@@ -172,7 +236,8 @@ mod tests {
     use crate::cnn::resnet;
 
     fn model() -> SensitivityModel {
-        SensitivityModel::build(&resnet::resnet18(), "ResNet-18", 1.0, &[1, 2, 4, 8]).unwrap()
+        SensitivityModel::build(&resnet::resnet18(), "ResNet-18", 1.0, &[1, 2, 4, 8], &[4, 8])
+            .unwrap()
     }
 
     #[test]
@@ -227,9 +292,39 @@ mod tests {
     }
 
     #[test]
+    fn activation_term_is_zero_at_8_bit_and_monotone_below() {
+        let base = resnet::resnet18();
+        let m = model();
+        // The calibration contract: at aq = 8 the delta is EXACTLY zero,
+        // so the aggregate (and hence every proxy value) is bit-for-bit
+        // the weight-only number.
+        assert_eq!(m.activation_noise_delta(8).to_bits(), 0.0f64.to_bits());
+        let w4 = Assignment::uniform(&base, 4);
+        let mut w4a8 = w4.clone();
+        w4a8.aq = vec![8; base.layers.len()];
+        assert_eq!(
+            m.aggregate_noise(&w4).to_bits(),
+            m.aggregate_noise(&w4a8).to_bits(),
+            "explicit aq=8 must not move the aggregate by a single bit"
+        );
+        // Narrower activations add noise, monotonically.
+        let mut prev = m.aggregate_noise(&w4);
+        for aq in [6u32, 4, 2, 1] {
+            let a = Assignment::uniform_joint(&base, 4, aq);
+            let n = m.aggregate_noise(&a);
+            assert!(n > prev, "aq={aq}: {n} should exceed {prev}");
+            prev = n;
+        }
+        // And the proxy accuracy falls accordingly.
+        let t_w4 = m.proxy_top5(&Assignment::uniform(&base, 4));
+        let t_w4a2 = m.proxy_top5(&Assignment::uniform_joint(&base, 4, 2));
+        assert!(t_w4a2 < t_w4, "{t_w4a2} vs {t_w4}");
+    }
+
+    #[test]
     fn resnet50_calibrates_via_fp32_anchor() {
         let base = resnet::resnet50();
-        let m = SensitivityModel::build(&base, "ResNet-50", 1.0, &[1, 2, 4, 8]).unwrap();
+        let m = SensitivityModel::build(&base, "ResNet-50", 1.0, &[1, 2, 4, 8], &[8]).unwrap();
         assert_eq!(m.proxy_top5(&Assignment::uniform(&base, 2)), 92.24);
         // Quieter than the 4-bit anchor interpolates toward the FP32 row.
         let t8 = m.proxy_top5(&Assignment::uniform(&base, 8));
@@ -238,14 +333,19 @@ mod tests {
 
     #[test]
     fn unknown_family_is_an_error() {
-        assert!(SensitivityModel::build(&resnet::resnet18(), "VGG-16", 1.0, &[2]).is_err());
+        assert!(SensitivityModel::build(&resnet::resnet18(), "VGG-16", 1.0, &[2], &[8]).is_err());
     }
 
     #[test]
     fn out_of_range_menu_is_an_error_not_a_panic() {
         // `plan --bits 2,4,16` must surface as a clean error.
-        let r = SensitivityModel::build(&resnet::resnet18(), "ResNet-18", 1.0, &[2, 4, 16]);
+        let r = SensitivityModel::build(&resnet::resnet18(), "ResNet-18", 1.0, &[2, 4, 16], &[8]);
         assert!(r.unwrap_err().to_string().contains("1..=8"));
-        assert!(SensitivityModel::build(&resnet::resnet18(), "ResNet-18", 1.0, &[0]).is_err());
+        let m = SensitivityModel::build(&resnet::resnet18(), "ResNet-18", 1.0, &[0], &[8]);
+        assert!(m.is_err());
+        let m = SensitivityModel::build(&resnet::resnet18(), "ResNet-18", 1.0, &[2], &[0]);
+        assert!(m.is_err());
+        let m = SensitivityModel::build(&resnet::resnet18(), "ResNet-18", 1.0, &[2], &[9]);
+        assert!(m.is_err());
     }
 }

@@ -127,6 +127,27 @@ pub fn reference_noise_power(bits: u32) -> f64 {
     q.mse(&sample)
 }
 
+/// The per-bit-width **activation** counterpart of
+/// [`reference_noise_power`]: quantization-noise power of an
+/// LSQ-initialized unsigned `bits`-wide activation quantizer
+/// ([`QuantParams::activations`], `Q_n = 0`) over a fixed half-normal
+/// reference sample — post-ReLU activations are non-negative, so `|N(0,1)|`
+/// is the natural reference distribution. Deterministic (seeded through
+/// [`crate::util::rng`]) and strictly decreasing in `bits`; the planner's
+/// sensitivity model aggregates it as the activation word-length's noise
+/// term (see `planner::sensitivity`), where — as with the weight term —
+/// only the *relative* value across word-lengths matters.
+pub fn reference_activation_noise_power(bits: u32) -> f64 {
+    assert!(
+        (1..=8).contains(&bits),
+        "activation word-lengths are 1..=8 bit"
+    );
+    let mut rng = crate::util::rng::Rng::new(0x5EED_AC);
+    let sample: Vec<f64> = (0..4096).map(|_| rng.normal().abs()).collect();
+    let q = Quantizer::init_from_data(QuantParams::activations(bits), &sample);
+    q.mse(&sample)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -253,6 +274,28 @@ mod tests {
         assert_eq!(
             reference_noise_power(2).to_bits(),
             reference_noise_power(2).to_bits()
+        );
+    }
+
+    #[test]
+    fn activation_noise_power_monotone_deterministic_and_unsigned() {
+        // The activation menu mirrors the weight menu's guarantees: strict
+        // monotone decrease with bits, determinism, positivity — and at 8
+        // bit the noise is tiny relative to the 1-bit end.
+        let powers: Vec<f64> = (1u32..=8).map(reference_activation_noise_power).collect();
+        for w in powers.windows(2) {
+            assert!(w[0] > w[1], "activation noise must fall with bits: {powers:?}");
+        }
+        assert!(powers.iter().all(|p| *p > 0.0));
+        assert!(powers[0] / powers[7] > 100.0, "{powers:?}");
+        assert_eq!(
+            reference_activation_noise_power(4).to_bits(),
+            reference_activation_noise_power(4).to_bits()
+        );
+        // Distinct from the signed weight menu (different Q-range + sample).
+        assert_ne!(
+            reference_activation_noise_power(4).to_bits(),
+            reference_noise_power(4).to_bits()
         );
     }
 

@@ -1,16 +1,22 @@
 //! Two's-complement bit-slicing of integer operands into `k`-bit digits —
-//! the operand preparation for the PPG datapath (Fig 1b).
+//! the operand preparation for the PPG datapath (Fig 1b), on **both** MAC
+//! operands of the 2D-scaled designs (Table IV's operand-slice axis).
 //!
-//! A `w`-bit signed integer is decomposed into `ceil(w/k)` digits of `k` bits
-//! each: the low digits are unsigned in `[0, 2^k)`, the top digit is signed
-//! (two's-complement weight `-2^{k-1}..2^{k-1}-1` scaled by its position) so
-//! that
+//! A `w`-bit **signed** integer (weights) is decomposed into `ceil(w/k)`
+//! digits of `k` bits each: the low digits are unsigned in `[0, 2^k)`, the
+//! top digit is signed (two's-complement weight `-2^{b-1}..2^{b-1}-1` over
+//! its `b = w - k·(S-1)` remaining bits, scaled by its position) so that
 //!
 //! `value = Σ_{s<S-1} d_s · 2^{k·s}  +  d_{S-1} · 2^{k·(S-1)}`  (d_{S-1} signed)
 //!
-//! holds *exactly*. The Pallas kernel (`python/compile/kernels/bitslice.py`)
-//! performs the same decomposition; the identity is property-tested on both
-//! sides and is the correctness anchor of the whole mixed-precision datapath.
+//! holds *exactly*. A `w`-bit **unsigned** integer (activations) decomposes
+//! the same way except that *every* digit — the possibly-partial top digit
+//! included — is unsigned: when `w` is an exact multiple of `k` (the
+//! `w == aq` top-digit case of an activation sliced at its own word-length)
+//! the top digit spans the full `[0, 2^k)`, never the signed reading.
+//! The Pallas kernel (`python/compile/kernels/bitslice.py`) performs the
+//! same decomposition; the identity is property-tested on both sides and is
+//! the correctness anchor of the whole mixed-precision datapath.
 
 /// Number of `k`-bit slices needed for a `w`-bit operand.
 pub fn n_slices(w: u32, k: u32) -> u32 {
@@ -56,9 +62,26 @@ pub fn slice_signed(v: i64, w: u32, k: u32) -> Vec<i64> {
 }
 
 /// Slice an **unsigned** `w`-bit integer into `ceil(w/k)` unsigned digits,
-/// least-significant first (used for activations in 2D-scaled designs).
+/// least-significant first — the activation side of the 2D-sliced MAC.
+///
+/// Every digit is unsigned: low digits in `[0, 2^k)`, the top digit in
+/// `[0, 2^b)` over its `b = w - k·(S-1)` remaining bits. In particular for
+/// the `w == aq` top-digit case (`w` an exact multiple of `k`) the top
+/// digit covers the full `[0, 2^k)` — it is **not** reinterpreted as
+/// signed the way [`slice_signed`]'s top digit is. (The doc used to leave
+/// this open while the module header described only the signed reading;
+/// the behavior — plain unsigned masking — was always the intended one
+/// for activations and is now the documented contract.)
+///
+/// Supports the full `u64` range it claims: any `w <= 64` with `k <= 63`
+/// (a digit wider than 63 bits would overflow both the mask and the `i64`
+/// digit type, so `k >= 64` — previously accepted and overflowing — is now
+/// rejected up front). Round-trips exactly through
+/// [`reconstruct_slices_unsigned`]; the `i64`-summing
+/// [`reconstruct_slices`] is exact only for values below `2^63`.
 pub fn slice_unsigned(v: u64, w: u32, k: u32) -> Vec<i64> {
-    assert!(w >= 1 && k >= 1);
+    assert!(w >= 1 && w <= 64, "need 1 <= w <= 64, got w={w}");
+    assert!(k >= 1 && k <= 63, "digit width k must be in 1..=63, got {k}");
     assert!(
         w >= 64 || v < (1u64 << w),
         "value {v} out of unsigned {w}-bit range"
@@ -73,6 +96,36 @@ pub fn slice_unsigned(v: u64, w: u32, k: u32) -> Vec<i64> {
         u >>= digit_bits;
     }
     out
+}
+
+/// Extract digit `idx` of the unsigned `ceil(w/k)`-digit decomposition of
+/// `v` without materializing the whole digit vector — the allocation-free
+/// form the xmp scalar reference kernel extracts activation digits with
+/// inside its MAC loop. Property-tested identical to
+/// `slice_unsigned(v, w, k)[idx]`.
+#[inline]
+pub fn slice_digit_unsigned(v: u64, w: u32, k: u32, idx: u32) -> i64 {
+    debug_assert!(w >= 1 && w <= 64 && k >= 1 && k <= 63);
+    let s = n_slices(w, k);
+    debug_assert!(idx < s, "slice {idx} out of range for {s} slices");
+    debug_assert!(w >= 64 || v < (1u64 << w), "value out of unsigned range");
+    let lo_bit = k * idx;
+    let digit_bits = (w - lo_bit).min(k);
+    ((v >> lo_bit) & ((1u64 << digit_bits) - 1)) as i64
+}
+
+/// Reconstruct an unsigned value from its unsigned digits in `u64`
+/// arithmetic: `Σ d_s · 2^{k·s}` — exact over the full `u64` range
+/// [`slice_unsigned`] supports (unlike the `i64`-summing
+/// [`reconstruct_slices`], which overflows above `2^63`).
+pub fn reconstruct_slices_unsigned(digits: &[i64], k: u32) -> u64 {
+    digits
+        .iter()
+        .enumerate()
+        .fold(0u64, |acc, (i, &d)| {
+            debug_assert!(d >= 0, "unsigned digits must be non-negative");
+            acc.wrapping_add((d as u64).wrapping_shl(k * i as u32))
+        })
 }
 
 /// Extract digit `idx` of the `ceil(w/k)`-digit decomposition of `v`
@@ -176,6 +229,86 @@ mod tests {
     }
 
     #[test]
+    fn prop_unsigned_roundtrip_full_u64_range() {
+        // The satellite contract: reconstruct ∘ slice is the identity over
+        // the FULL range slice_unsigned claims to support — w up to 64,
+        // values up to u64::MAX, partial and exact-multiple top digits.
+        forall(5000, |rng: &mut Rng| {
+            let w = *rng.choose(&[1u32, 7, 8, 31, 32, 33, 63, 64]);
+            let k = *rng.choose(&[1u32, 2, 3, 5, 8, 16, 63]);
+            let v = if w >= 64 {
+                rng.next_u64()
+            } else {
+                rng.below(1u64 << w)
+            };
+            let digits = slice_unsigned(v, w, k);
+            check_eq(digits.len() as u32, n_slices(w, k), "digit count")?;
+            check_eq(
+                reconstruct_slices_unsigned(&digits, k),
+                v,
+                "full-range unsigned roundtrip",
+            )
+        });
+        // Edge values explicitly: the extremes of the claimed range.
+        for v in [0u64, 1, u64::MAX - 1, u64::MAX] {
+            for k in [1u32, 8, 63] {
+                let digits = slice_unsigned(v, 64, k);
+                assert_eq!(reconstruct_slices_unsigned(&digits, k), v, "v={v} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn unsigned_top_digit_is_unsigned_at_exact_multiple() {
+        // The w == aq top-digit case the doc now pins down: when w is an
+        // exact multiple of k, the top digit spans the full [0, 2^k) —
+        // e.g. 255 at (w=8, k=4) is [15, 15], NOT [15, -1].
+        assert_eq!(slice_unsigned(255, 8, 4), vec![0xF, 0xF]);
+        assert_eq!(slice_unsigned(255, 8, 2), vec![3, 3, 3, 3]);
+        assert_eq!(slice_unsigned(7, 3, 3), vec![7]);
+        // Contrast with the signed reading of the same bit patterns.
+        assert_eq!(slice_signed(-1, 8, 4), vec![0xF, -1]);
+    }
+
+    #[test]
+    fn prop_slice_digit_unsigned_matches_slice_unsigned() {
+        // The allocation-free single-digit form must agree with the vector
+        // decomposition on every digit, for every (w, k) — including the
+        // partial-top-digit cases (w not a multiple of k) and w = aq.
+        forall(5000, |rng: &mut Rng| {
+            let w = *rng.choose(&[1u32, 2, 3, 4, 5, 6, 7, 8, 16, 64]);
+            let k = *rng.choose(&[1u32, 2, 3, 4, 5, 8, 63]);
+            let v = if w >= 64 {
+                rng.next_u64()
+            } else {
+                rng.below(1u64 << w)
+            };
+            let digits = slice_unsigned(v, w, k);
+            for (i, d) in digits.iter().enumerate() {
+                check_eq(
+                    slice_digit_unsigned(v, w, k, i as u32),
+                    *d,
+                    "unsigned digit extraction",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "1..=63")]
+    fn unsigned_rejects_overflowing_digit_width() {
+        // k = 64 used to shift-overflow the digit mask; now rejected.
+        slice_unsigned(5, 64, 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of unsigned")]
+    fn unsigned_rejects_out_of_range() {
+        slice_unsigned(256, 8, 2);
+    }
+
+    #[test]
     fn prop_low_digits_unsigned_range() {
         forall(2000, |rng: &mut Rng| {
             let w = *rng.choose(&[4u32, 8]);
@@ -214,6 +347,31 @@ mod tests {
                 .map(|(s, d)| a * d * slice_weight(s as u32, k))
                 .sum();
             check_eq(via_ppgs, a * w, "PPG decomposition of MAC")
+        });
+    }
+
+    #[test]
+    fn prop_mac_linearity_over_2d_slices() {
+        // The 2D-sliced MAC identity: a · w == Σ_{sa,sw} a_sa · w_sw ·
+        // 2^{k(sa+sw)} with the activation sliced unsigned at aq and the
+        // weight sliced signed at wq — what the xmp engine's slice
+        // cross-product accumulation computes, including partial top
+        // digits on BOTH operands.
+        forall(3000, |rng: &mut Rng| {
+            let wq = 1 + rng.range(0, 8) as u32;
+            let aq = 1 + rng.range(0, 8) as u32;
+            let k = *rng.choose(&[1u32, 2, 3, 4, 5, 8]);
+            let a = rng.below(1u64 << aq);
+            let w = rng.range_i64(-(1i64 << (wq - 1)), (1i64 << (wq - 1)) - 1);
+            let adigits = slice_unsigned(a, aq, k);
+            let wdigits = slice_signed(w, wq, k);
+            let mut acc = 0i64;
+            for (sa, &ad) in adigits.iter().enumerate() {
+                for (sw, &wd) in wdigits.iter().enumerate() {
+                    acc += (ad * wd) << (k as usize * (sa + sw));
+                }
+            }
+            check_eq(acc, a as i64 * w, "2D PPG decomposition of MAC")
         });
     }
 

@@ -3,17 +3,28 @@
 //! point it occupies on the paper's accuracy–throughput curve, with the
 //! throughput side pulled from the cached holistic DSE.
 
-use crate::cnn::{apply_channelwise, channelwise::apply_plan, ChannelGroup, Cnn, LayerKind};
+use crate::cnn::{
+    apply_channelwise,
+    channelwise::{apply_joint_plan, apply_plan},
+    ChannelGroup, Cnn, LayerKind,
+};
 use crate::config::RunConfig;
 use crate::dse;
 
-/// Which quantization a variant serves.
+/// Which quantization a variant serves: a joint `(wq, aq)` specification —
+/// weight word-lengths per layer/channel-group plus activation
+/// word-lengths per layer (the paper's "weight and/or activation
+/// word-length reduction").
 #[derive(Clone, Debug, PartialEq)]
 pub struct VariantSpec {
-    /// Registry name, unique per server (e.g. `w4`).
+    /// Registry name, unique per server (e.g. `w4`, `w4a5`).
     pub name: String,
     /// Uniform inner-layer weight word-length, if uniform.
     pub wq: Option<u32>,
+    /// Uniform inner-layer **activation** word-length; `None` means the
+    /// paper's fixed 8 bit. Edge layers (first, last, FC) stay at 8 bit,
+    /// exactly as their weights do.
+    pub aq: Option<u32>,
     /// Channel-wise word-length groups (empty for uniform variants),
     /// applied to every inner layer.
     pub channelwise: Vec<ChannelGroup>,
@@ -21,16 +32,40 @@ pub struct VariantSpec {
     /// CNN (empty unless the variant came from `planner::emit`). Takes
     /// precedence over `wq`/`channelwise` when non-empty.
     pub layerwise: Vec<Vec<ChannelGroup>>,
+    /// Planner-emitted per-layer activation word-lengths, parallel to
+    /// `layerwise` (empty = derive from `aq`). Takes precedence over `aq`
+    /// when non-empty.
+    pub layerwise_aq: Vec<u32>,
 }
 
 impl VariantSpec {
-    /// Uniform word-length variant, named `w<wq>`.
+    /// Uniform word-length variant, named `w<wq>` (activations at the
+    /// paper's fixed 8 bit).
     pub fn uniform(wq: u32) -> VariantSpec {
         VariantSpec {
             name: format!("w{wq}"),
             wq: Some(wq),
+            aq: None,
             channelwise: Vec::new(),
             layerwise: Vec::new(),
+            layerwise_aq: Vec::new(),
+        }
+    }
+
+    /// Uniform **joint** `(wq, aq)` variant, named `w<wq>a<aq>` (plain
+    /// `w<wq>` when `aq` is the paper's fixed 8 bit — identical to
+    /// [`uniform`](Self::uniform) then).
+    pub fn uniform_joint(wq: u32, aq: u32) -> VariantSpec {
+        if aq == 8 {
+            return VariantSpec::uniform(wq);
+        }
+        VariantSpec {
+            name: format!("w{wq}a{aq}"),
+            wq: Some(wq),
+            aq: Some(aq),
+            channelwise: Vec::new(),
+            layerwise: Vec::new(),
+            layerwise_aq: Vec::new(),
         }
     }
 
@@ -39,20 +74,25 @@ impl VariantSpec {
         VariantSpec {
             name: name.into(),
             wq: None,
+            aq: None,
             channelwise: groups,
             layerwise: Vec::new(),
+            layerwise_aq: Vec::new(),
         }
     }
 
     /// Planner-emitted variant with an explicit per-layer plan (see
     /// [`crate::planner`]); `per_layer` must have one entry per base-CNN
-    /// layer.
+    /// layer. Activations default to 8 bit; attach per-layer activation
+    /// word-lengths with [`with_layerwise_aq`](Self::with_layerwise_aq).
     pub fn planned(name: impl Into<String>, per_layer: Vec<Vec<ChannelGroup>>) -> VariantSpec {
         VariantSpec {
             name: name.into(),
             wq: None,
+            aq: None,
             channelwise: Vec::new(),
             layerwise: per_layer,
+            layerwise_aq: Vec::new(),
         }
     }
 
@@ -62,9 +102,28 @@ impl VariantSpec {
         self
     }
 
+    /// Set the uniform inner-layer activation word-length (builder-style).
+    pub fn with_aq(mut self, aq: u32) -> VariantSpec {
+        self.aq = Some(aq);
+        self
+    }
+
+    /// Attach planner-emitted per-layer activation word-lengths, one per
+    /// base-CNN layer (builder-style).
+    pub fn with_layerwise_aq(mut self, aq: Vec<u32>) -> VariantSpec {
+        self.layerwise_aq = aq;
+        self
+    }
+
     /// Quantize `base` according to this spec (the CNN the DSE and the
-    /// virtual-clock simulation run on).
+    /// virtual-clock simulation run on). Joint specs also lower their
+    /// activation word-lengths into the layers' `act_bits`, so footprint
+    /// and activation-traffic models cost them.
     pub fn apply(&self, base: &Cnn) -> Cnn {
+        let aqs = self.per_layer_aq(base);
+        if aqs.iter().any(|&a| a != 8) {
+            return apply_joint_plan(base, &self.per_layer_plan(base), &aqs);
+        }
         if !self.layerwise.is_empty() {
             apply_plan(base, &self.layerwise)
         } else if self.channelwise.is_empty() {
@@ -72,6 +131,33 @@ impl VariantSpec {
         } else {
             apply_channelwise(base, &self.channelwise)
         }
+    }
+
+    /// The explicit per-base-layer **activation** word-lengths this spec
+    /// denotes, parallel to [`per_layer_plan`](Self::per_layer_plan):
+    /// edge layers (first, last, FC) pinned to 8 bit, inner layers at the
+    /// planner's `layerwise_aq` or the uniform `aq` (default 8). This is
+    /// the form the xmp engine slices activations from.
+    pub fn per_layer_aq(&self, base: &Cnn) -> Vec<u32> {
+        if !self.layerwise_aq.is_empty() {
+            assert_eq!(
+                self.layerwise_aq.len(),
+                base.layers.len(),
+                "layerwise aq plan must have one entry per base layer"
+            );
+            return self.layerwise_aq.clone();
+        }
+        let n = base.layers.len();
+        (0..n)
+            .map(|i| {
+                let edge = i == 0 || i + 1 == n || base.layers[i].kind == LayerKind::Fc;
+                if edge {
+                    8
+                } else {
+                    self.aq.unwrap_or(8)
+                }
+            })
+            .collect()
     }
 
     /// The explicit per-base-layer plan this spec denotes: one
@@ -106,7 +192,11 @@ impl VariantSpec {
     /// (fraction-weighted), so non-anchor word-lengths like `w_Q = 3`
     /// resolve too. `None` when the paper has no rows for the family, or
     /// for planner-emitted layerwise specs (their profiles carry the
-    /// planner's calibrated proxy instead).
+    /// planner's calibrated proxy instead). The estimate is weight-lineage
+    /// only — the paper publishes no reduced-`a_Q` accuracy rows, so a
+    /// joint `w4a4` variant reports the `w4` table value; the planner's
+    /// calibrated proxy (which does model the activation term) is the
+    /// profile to prefer for joint plans.
     pub fn estimated_top5(&self, family: &str) -> Option<f64> {
         if !self.layerwise.is_empty() {
             return None;
@@ -146,17 +236,50 @@ impl VariantProfile {
     /// Derive the profile by running (or re-using, via the process-global
     /// [`dse::DseCache`]) the holistic DSE for this spec's quantization of
     /// `base`, and looking the accuracy up in the paper's `family` tables.
+    /// Joint specs with reduced activation word-lengths get the table
+    /// value *penalized* by the planner's calibrated activation-noise
+    /// proxy ([`joint_top5_estimate`]) — otherwise `MinAccuracy` routing
+    /// would treat e.g. `w4a2` as the full `w4` accuracy and place
+    /// traffic on a variant that cannot meet the requested floor.
     pub fn from_dse(spec: &VariantSpec, base: &Cnn, cfg: &RunConfig, family: &str)
         -> VariantProfile {
         let cnn = spec.apply(base);
         let k = spec.wq.unwrap_or(2).clamp(1, 4);
         let out = dse::explore_k_cached(&cnn, cfg, k, dse::DseCache::global());
+        let top5 = if spec.per_layer_aq(base).iter().any(|&a| a != 8) {
+            joint_top5_estimate(spec, base, family).or_else(|| spec.estimated_top5(family))
+        } else {
+            spec.estimated_top5(family)
+        };
         VariantProfile {
-            top5_accuracy: spec.estimated_top5(family),
+            top5_accuracy: top5,
             fpga_fps: out.sim.fps,
             fpga_mj_per_frame: out.sim.e_total_mj(),
         }
     }
+}
+
+/// Activation-noise-penalized Top-5 estimate for a uniform joint spec:
+/// the paper table's weight-lineage value minus the calibrated
+/// [`crate::planner::SensitivityModel`] proxy gap between the weight-only
+/// and joint assignments on `base` (exactly zero at `a_Q = 8` by the
+/// proxy's delta calibration). `None` when the spec has no uniform `wq`,
+/// no table row, or the family has no anchors — callers fall back to the
+/// weight-only estimate.
+pub fn joint_top5_estimate(spec: &VariantSpec, base: &Cnn, family: &str) -> Option<f64> {
+    let weight_only = spec.estimated_top5(family)?;
+    let wq = spec.wq?;
+    if !(1..=8).contains(&wq) {
+        return None;
+    }
+    let aqs = spec.per_layer_aq(base);
+    let model =
+        crate::planner::SensitivityModel::build(base, family, 1.0, &[wq], &aqs).ok()?;
+    let flat = crate::planner::Assignment::uniform(base, wq);
+    let mut joint = flat.clone();
+    joint.aq = aqs;
+    let penalty = model.proxy_top5(&flat) - model.proxy_top5(&joint);
+    Some((weight_only - penalty).max(0.0))
 }
 
 #[cfg(test)]
@@ -172,6 +295,49 @@ mod tests {
         assert_eq!(s.estimated_top5("ResNet-18"), Some(87.48));
         assert_eq!(VariantSpec::uniform(8).estimated_top5("ResNet-18"), Some(89.62));
         assert_eq!(VariantSpec::uniform(3).estimated_top5("ResNet-18"), None);
+    }
+
+    #[test]
+    fn uniform_joint_spec_names_plans_and_lowers() {
+        let base = resnet::resnet_small(1, 10);
+        let s = VariantSpec::uniform_joint(4, 5);
+        assert_eq!(s.name, "w4a5");
+        assert_eq!((s.wq, s.aq), (Some(4), Some(5)));
+        // aq = 8 collapses to the plain uniform spec — same name, same
+        // equality, so registries and Exact routing are unchanged.
+        assert_eq!(VariantSpec::uniform_joint(4, 8), VariantSpec::uniform(4));
+        // Per-layer aq pins edges to 8 and inner layers to aq.
+        let aqs = s.per_layer_aq(&base);
+        assert_eq!(aqs[0], 8);
+        assert_eq!(aqs[1], 5);
+        assert_eq!(*aqs.last().unwrap(), 8);
+        // apply() lowers act_bits so footprint/fingerprint see the plan.
+        let cnn = s.apply(&base);
+        assert_eq!(cnn.layers[0].act_bits, 8);
+        assert_eq!(cnn.layers[1].act_bits, 5);
+        assert_ne!(
+            cnn.fingerprint(),
+            VariantSpec::uniform(4).apply(&base).fingerprint(),
+            "joint quantization is a distinct DSE-cache entry"
+        );
+        assert!(
+            cnn.total_activation_bits()
+                < VariantSpec::uniform(4).apply(&base).total_activation_bits()
+        );
+        // The weight side is untouched by aq.
+        assert_eq!(s.per_layer_plan(&base), VariantSpec::uniform(4).per_layer_plan(&base));
+    }
+
+    #[test]
+    fn planned_spec_carries_layerwise_aq() {
+        let base = resnet::resnet_small(1, 10);
+        let n = base.layers.len();
+        let plan = VariantSpec::uniform(2).per_layer_plan(&base);
+        let aq: Vec<u32> = (0..n).map(|i| if i == 2 { 3 } else { 8 }).collect();
+        let spec = VariantSpec::planned("mp0", plan).with_layerwise_aq(aq.clone());
+        assert_eq!(spec.per_layer_aq(&base), aq);
+        let cnn = spec.apply(&base);
+        assert_eq!(cnn.layers[2].act_bits, 3);
     }
 
     #[test]
@@ -266,6 +432,28 @@ mod tests {
         let cnn = s.apply(&base);
         // Quantization changes the structural fingerprint.
         assert_ne!(cnn.fingerprint(), base.clone().with_uniform_wq(8).fingerprint());
+    }
+
+    #[test]
+    fn joint_profile_penalizes_reduced_activations() {
+        let base = resnet::resnet_small(1, 10);
+        let cfg = RunConfig::default();
+        let w4 = VariantProfile::from_dse(&VariantSpec::uniform(4), &base, &cfg, "ResNet-18");
+        assert_eq!(w4.top5_accuracy, Some(89.10));
+        // Reduced activations must NOT inherit the full weight-lineage
+        // accuracy — MinAccuracy routing reads this field.
+        let w4a2 =
+            VariantProfile::from_dse(&VariantSpec::uniform_joint(4, 2), &base, &cfg, "ResNet-18");
+        let t = w4a2.top5_accuracy.unwrap();
+        assert!(t < 89.10 && t > 0.0, "{t}");
+        // A mild reduction costs less than a harsh one.
+        let w4a6 =
+            VariantProfile::from_dse(&VariantSpec::uniform_joint(4, 6), &base, &cfg, "ResNet-18");
+        assert!(w4a6.top5_accuracy.unwrap() > t);
+        // aq = 8 is the identity: same estimate as the plain uniform.
+        let w4a8 =
+            VariantProfile::from_dse(&VariantSpec::uniform_joint(4, 8), &base, &cfg, "ResNet-18");
+        assert_eq!(w4a8.top5_accuracy, w4.top5_accuracy);
     }
 
     #[test]

@@ -10,24 +10,44 @@
 //! ```
 //! On failure, the failing seed and case index are printed so the case can be
 //! replayed deterministically (set `MPCNN_PROP_SEED`).
+//!
+//! [`differential`] is the cross-kernel form: N named implementations of
+//! the same function, run on each generated input and required to agree
+//! exactly. A panic inside any kernel counts as a divergence (caught, not
+//! propagated), and on failure the harness greedily minimizes the input
+//! through caller-provided shrink candidates before reporting the failing
+//! seed, the per-kernel outcomes, and the minimized counterexample — the
+//! reusable harness behind the xmp engine's fast == reference == plain-i64
+//! differential tests (`rust/tests/integration_xmp.rs`).
 
 use crate::util::rng::Rng;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 
 /// Outcome of a single property case.
 pub type CaseResult = Result<(), String>;
 
+/// The replay-seed contract shared by [`forall`] and [`differential`]:
+/// `MPCNN_PROP_SEED` (default `0xC0FFEE`) is the base seed.
+fn base_seed() -> u64 {
+    std::env::var("MPCNN_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Derive case `case`'s independent generator seed from the base, so a
+/// failure reproduces in isolation: seed = splitmix(base ^ case-mixed).
+fn case_seed(base: u64, case: u64) -> u64 {
+    let mut seed_state = base ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    crate::util::rng::splitmix64(&mut seed_state)
+}
+
 /// Run `cases` random cases of property `f`. Panics (test failure) with the
 /// seed + case index on the first counterexample.
 pub fn forall<F: FnMut(&mut Rng) -> CaseResult>(cases: u64, mut f: F) {
-    let base_seed = std::env::var("MPCNN_PROP_SEED")
-        .ok()
-        .and_then(|s| s.parse::<u64>().ok())
-        .unwrap_or(0xC0FFEE);
+    let base_seed = base_seed();
     for case in 0..cases {
-        // Derive an independent generator per case so a failure reproduces in
-        // isolation: seed = base ^ case-mixed.
-        let mut seed_state = base_seed ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15);
-        let seed = crate::util::rng::splitmix64(&mut seed_state);
+        let seed = case_seed(base_seed, case);
         let mut rng = Rng::new(seed);
         if let Err(msg) = f(&mut rng) {
             panic!(
@@ -68,6 +88,115 @@ pub fn check(cond: bool, what: &str) -> CaseResult {
     }
 }
 
+/// One kernel under differential test: a display name plus the function.
+pub type DiffKernel<'a, T, O> = (&'a str, &'a dyn Fn(&T) -> O);
+
+/// Outcome of one kernel on one input: its value, or the panic it died
+/// with (caught — a panicking kernel is a divergence, not a test abort).
+fn run_kernel<T, O>(k: &DiffKernel<T, O>, input: &T) -> Result<O, String> {
+    catch_unwind(AssertUnwindSafe(|| (k.1)(input))).map_err(|p| {
+        let msg = p
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| p.downcast_ref::<String>().cloned())
+            .unwrap_or_else(|| "non-string panic payload".into());
+        format!("panicked: {msg}")
+    })
+}
+
+/// `Err(report)` when the kernels disagree (or any panics) on `input`.
+fn diff_case<T, O: PartialEq + std::fmt::Debug>(
+    kernels: &[DiffKernel<T, O>],
+    input: &T,
+) -> Result<(), String> {
+    assert!(kernels.len() >= 2, "differential testing needs >= 2 kernels");
+    let outcomes: Vec<Result<O, String>> =
+        kernels.iter().map(|k| run_kernel(k, input)).collect();
+    let all_ok = outcomes.iter().all(|o| o.is_ok());
+    let agree = all_ok
+        && outcomes
+            .windows(2)
+            .all(|w| w[0].as_ref().unwrap() == w[1].as_ref().unwrap());
+    if agree {
+        return Ok(());
+    }
+    let mut report = String::new();
+    for ((name, _), out) in kernels.iter().zip(&outcomes) {
+        let line = match out {
+            Ok(v) => format!("{name}: {v:?}"),
+            Err(e) => format!("{name}: {e}"),
+        };
+        report.push_str(&truncate(&line, 300));
+        report.push('\n');
+    }
+    Err(report)
+}
+
+fn truncate(s: &str, max: usize) -> String {
+    if s.len() <= max {
+        s.to_string()
+    } else {
+        let cut = (0..=max).rev().find(|&i| s.is_char_boundary(i)).unwrap_or(0);
+        format!("{}… [{} bytes total]", &s[..cut], s.len())
+    }
+}
+
+/// Differential fuzzing: run `cases` random inputs from `generator` through
+/// every kernel in `kernels` and require exact agreement (panics count as
+/// divergence). On the first failure the input is greedily minimized —
+/// `shrink(&input)` proposes smaller candidates, any that still fails
+/// becomes the new input, until none does (bounded) — and the harness
+/// panics with the harness name, failing case index + seeds (replayable
+/// via `MPCNN_PROP_SEED`, like [`forall`]), per-kernel outcomes on the
+/// minimized input, and the minimized input itself.
+pub fn differential<T, O, G, S>(
+    name: &str,
+    cases: u64,
+    mut generator: G,
+    kernels: &[DiffKernel<T, O>],
+    shrink: S,
+) where
+    T: Clone + std::fmt::Debug,
+    O: PartialEq + std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    S: Fn(&T) -> Vec<T>,
+{
+    let base_seed = base_seed();
+    for case in 0..cases {
+        let seed = case_seed(base_seed, case);
+        let mut rng = Rng::new(seed);
+        let input = generator(&mut rng);
+        if diff_case(kernels, &input).is_ok() {
+            continue;
+        }
+        // Greedy minimization: keep any shrink candidate that still fails.
+        let mut minimized = input;
+        let mut budget = 500usize;
+        'minimize: while budget > 0 {
+            for cand in shrink(&minimized) {
+                budget = budget.saturating_sub(1);
+                if diff_case(kernels, &cand).is_err() {
+                    minimized = cand;
+                    continue 'minimize;
+                }
+                if budget == 0 {
+                    break;
+                }
+            }
+            break;
+        }
+        let report = diff_case(kernels, &minimized)
+            .expect_err("minimized input must still fail");
+        panic!(
+            "differential harness '{name}' failed at case {case} \
+             (base_seed={base_seed:#x}, case_seed={seed:#x})\n\
+             kernel outcomes on the minimized input:\n{report}\
+             minimized input: {}",
+            truncate(&format!("{minimized:?}"), 2000)
+        );
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -94,6 +223,65 @@ mod tests {
     fn check_close_tolerances() {
         assert!(check_close(1.0, 1.0000001, 1e-5, "x").is_ok());
         assert!(check_close(1.0, 1.2, 1e-5, "x").is_err());
+    }
+
+    #[test]
+    fn differential_agreeing_kernels_pass() {
+        let double = |x: &i64| x * 2;
+        let add_twice = |x: &i64| x + x;
+        differential(
+            "double",
+            300,
+            |rng| rng.range_i64(-1000, 1000),
+            &[("mul", &double), ("add", &add_twice)],
+            |_| Vec::new(),
+        );
+    }
+
+    #[test]
+    fn differential_mismatch_reports_name_seed_and_minimized_input() {
+        // Kernels diverge for inputs > 10; shrink by decrement: the
+        // minimized counterexample must be exactly 11.
+        let a = |x: &i64| *x;
+        let b = |x: &i64| if *x > 10 { x + 1 } else { *x };
+        let err = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            differential(
+                "mini",
+                200,
+                |rng| rng.range_i64(0, 1000),
+                &[("id", &a), ("off-by-one-above-10", &b)],
+                |x| if *x > 0 { vec![*x / 2, x - 1] } else { Vec::new() },
+            )
+        }))
+        .expect_err("divergent kernels must fail the harness");
+        let msg = err.downcast_ref::<String>().expect("string panic");
+        assert!(msg.contains("differential harness 'mini'"), "{msg}");
+        assert!(msg.contains("base_seed"), "{msg}");
+        assert!(msg.contains("minimized input: 11"), "{msg}");
+        assert!(msg.contains("off-by-one-above-10"), "{msg}");
+    }
+
+    #[test]
+    fn differential_treats_panics_as_divergence() {
+        let fine = |x: &i64| *x;
+        let bomb = |x: &i64| {
+            if *x > 500 {
+                panic!("kernel exploded at {x}");
+            }
+            *x
+        };
+        let err = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            differential(
+                "bomb",
+                200,
+                |rng| rng.range_i64(0, 1000),
+                &[("fine", &fine), ("bomb", &bomb)],
+                |_| Vec::new(),
+            )
+        }))
+        .expect_err("a panicking kernel must fail the harness");
+        let msg = err.downcast_ref::<String>().expect("string panic");
+        assert!(msg.contains("panicked: kernel exploded"), "{msg}");
     }
 
     #[test]

@@ -37,12 +37,15 @@ impl XmpBackend {
 
     /// Build a synthetic-weight backend serving `spec`'s quantization of
     /// `base` — what `--backend xmp` and the planner's family server use
-    /// when no trained artifacts exist. Deterministic in
-    /// `(base, spec, cfg)`: two independently built copies (e.g. a worker
-    /// backend and a local ground-truth probe) agree bit-for-bit.
+    /// when no trained artifacts exist. Honors the spec's joint `(wq, aq)`
+    /// plan: weights at the per-layer channel groups, activations at the
+    /// per-layer word-lengths. Deterministic in `(base, spec, cfg)`: two
+    /// independently built copies (e.g. a worker backend and a local
+    /// ground-truth probe) agree bit-for-bit.
     pub fn from_spec(base: &Cnn, spec: &VariantSpec, cfg: XmpConfig) -> Result<XmpBackend> {
         let plan = spec.per_layer_plan(base);
-        Ok(XmpBackend::new(XmpModel::synthetic(base, &plan, cfg)?))
+        let aq = spec.per_layer_aq(base);
+        Ok(XmpBackend::new(XmpModel::synthetic_joint(base, &plan, &aq, cfg)?))
     }
 
     /// Route every layer through the scalar sliced reference kernel
@@ -214,6 +217,27 @@ mod tests {
         for (a, b) in lf.iter().zip(&lr) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn joint_wq_aq_spec_serves_and_self_verifies() {
+        // A uniform (w4, a5) spec: warm-up's fast==reference probe must
+        // pass with activations sliced at 5 bits between the layers, and
+        // two copies must still be the same function.
+        let base = resnet::resnet_small(1, 10);
+        let spec = VariantSpec::uniform_joint(4, 5);
+        let a = XmpBackend::from_spec(&base, &spec, XmpConfig::default()).unwrap();
+        a.warmup().unwrap();
+        let b = XmpBackend::from_spec(&base, &spec, XmpConfig::default()).unwrap();
+        let img = vec![1.1f32; 3072];
+        assert_eq!(a.infer_batch(&img, 1).unwrap(), b.infer_batch(&img, 1).unwrap());
+        // Inner layers carry the narrowed activation word-length.
+        assert_eq!(a.model().layers[1].aq, 5);
+        assert_eq!(a.model().layers[0].aq, 8, "edge activations stay 8-bit");
+        // And it differs from the (w4, a8) function.
+        let w4a8 = XmpBackend::from_spec(&base, &VariantSpec::uniform(4), XmpConfig::default())
+            .unwrap();
+        assert_ne!(a.infer_batch(&img, 1).unwrap(), w4a8.infer_batch(&img, 1).unwrap());
     }
 
     #[test]

@@ -1,16 +1,20 @@
 //! im2col + channel-grouped convolution forward.
 //!
 //! Layers execute as `im2col` (SAME padding, NHWC, one extraction shared
-//! by every channel group) followed by one sliced GEMM per group and a
-//! per-channel integer requantize into the next u8 activation map. The
+//! by every channel group) followed by one 2D-sliced GEMM per group and a
+//! per-channel integer requantize into the next activation map. The
 //! groups are where the mixed precision is *truly* mixed: each runs at
-//! its own word-length `wq` with its own `ceil(wq/k)` digit planes, and
-//! their outputs interleave back into one NHWC map at the layer's channel
-//! offsets — no per-group sub-layer dispatch, no reconfiguration, exactly
-//! the on-the-fly word-length switching the paper's PE performs.
+//! its own weight word-length `wq` with its own `ceil(wq/k)` digit
+//! planes, while the layer's input activations — at the *producer's*
+//! activation word-length `a_in` — are sliced once into `ceil(a_in/k)`
+//! unsigned digit planes shared across all groups. Group outputs
+//! interleave back into one NHWC map at the layer's channel offsets — no
+//! per-group sub-layer dispatch, no reconfiguration, exactly the
+//! on-the-fly word-length switching the paper's PE performs, now on both
+//! MAC operands.
 
 use super::gemm::{gemm_codes_i64, gemm_sliced_fast, gemm_sliced_reference};
-use super::pack::PackedLayer;
+use super::pack::{pack_activations, PackedLayer, SlicedActs};
 use super::XmpLayer;
 
 /// SAME-padding geometry: `(output size, leading pad)` for a square
@@ -60,20 +64,57 @@ pub fn im2col(input: &[u8], ih: u32, iw: u32, k: u32, s: u32) -> (Vec<i16>, usiz
     (cols, m, kdim)
 }
 
-/// One conv layer forward: im2col once, then one sliced GEMM per channel
-/// group (`fast` picks the digit-plane fast path or the scalar reference
-/// kernel), per-channel requantization into the NHWC u8 output.
-pub fn conv_forward(input: &[u8], l: &XmpLayer, pl: &PackedLayer, fast: bool) -> Vec<u8> {
+/// Activation digit planes per digit width, built lazily so one im2col
+/// extraction feeds every channel group: groups share planes when they
+/// slice at the same `k` (the common case — `k` is an engine-wide knob).
+struct ActPlaneCache<'a> {
+    cols: &'a [i16],
+    m: usize,
+    kdim: usize,
+    a_in: u32,
+    built: Vec<SlicedActs>,
+}
+
+impl<'a> ActPlaneCache<'a> {
+    fn new(cols: &'a [i16], m: usize, kdim: usize, a_in: u32) -> ActPlaneCache<'a> {
+        ActPlaneCache { cols, m, kdim, a_in, built: Vec::new() }
+    }
+
+    fn for_k(&mut self, k: u32) -> &SlicedActs {
+        if let Some(i) = self.built.iter().position(|a| a.k == k) {
+            return &self.built[i];
+        }
+        self.built
+            .push(pack_activations(self.cols, self.m, self.kdim, self.a_in, k));
+        self.built.last().unwrap()
+    }
+}
+
+/// One conv layer forward: im2col once, slice the activations once per
+/// digit width, then one 2D-sliced GEMM per channel group (`fast` picks
+/// the digit-plane fast path or the scalar reference kernel), per-channel
+/// requantization into the NHWC u8 output. `a_in` is the word-length of
+/// the *input* activations (every value `< 2^a_in` — the producer layer's
+/// requantizer guarantees it); the output is clamped to the layer's own
+/// `2^aq − 1` by the requantizers.
+pub fn conv_forward(
+    input: &[u8],
+    a_in: u32,
+    l: &XmpLayer,
+    pl: &PackedLayer,
+    fast: bool,
+) -> Vec<u8> {
     let (cols, m, kdim) = im2col(input, l.ih, l.iw, l.k, l.s);
     debug_assert_eq!(kdim, l.kdim());
     let od = l.od as usize;
     let mut out = vec![0u8; m * od];
+    let mut acts = ActPlaneCache::new(&cols, m, kdim, a_in);
     let mut base = 0usize;
     for (g, pg) in l.groups.iter().zip(&pl.groups) {
         let accs = if fast {
-            gemm_sliced_fast(&cols, m, pg)
+            gemm_sliced_fast(acts.for_k(pg.k), pg)
         } else {
-            gemm_sliced_reference(&cols, m, kdim, &g.codes, pg.od, pg.wq, pg.k)
+            gemm_sliced_reference(&cols, m, kdim, &g.codes, pg.od, pg.wq, a_in, pg.k)
         };
         for (row_out, row_acc) in out.chunks_mut(od).zip(accs.chunks_exact(pg.od)) {
             let slots = row_out[base..base + pg.od].iter_mut();
@@ -87,8 +128,9 @@ pub fn conv_forward(input: &[u8], l: &XmpLayer, pl: &PackedLayer, fast: bool) ->
 }
 
 /// Ground-truth conv for the property tests: plain `i64` MACs straight
-/// from the integer codes (no slicing anywhere) plus the same per-channel
-/// requantize. The sliced kernels must reproduce this bit-for-bit.
+/// from the integer codes (no slicing on either operand) plus the same
+/// per-channel requantize. The 2D-sliced kernels must reproduce this
+/// bit-for-bit at every `(wq, aq, k)`.
 pub fn conv_forward_i64(input: &[u8], l: &XmpLayer) -> Vec<u8> {
     let (cols, m, kdim) = im2col(input, l.ih, l.iw, l.k, l.s);
     let od = l.od as usize;
@@ -108,19 +150,36 @@ pub fn conv_forward_i64(input: &[u8], l: &XmpLayer) -> Vec<u8> {
     out
 }
 
-/// The FC head through the same sliced kernels (`M = 1`): pooled u8
-/// features in, `f32` logits out via the per-class dequant scale.
-pub fn fc_logits(pooled: &[u8], l: &XmpLayer, pl: &PackedLayer, fast: bool) -> Vec<f32> {
+/// The FC head through the same 2D-sliced kernels (`M = 1`): pooled u8
+/// features (at word-length `a_in`) in, `f32` logits out via the
+/// per-class dequant scale.
+pub fn fc_logits(pooled: &[u8], a_in: u32, l: &XmpLayer, pl: &PackedLayer, fast: bool) -> Vec<f32> {
     let cols: Vec<i16> = pooled.iter().map(|&v| v as i16).collect();
     let kdim = pooled.len();
     let mut logits = Vec::with_capacity(l.od as usize);
+    let mut acts = ActPlaneCache::new(&cols, 1, kdim, a_in);
     for (g, pg) in l.groups.iter().zip(&pl.groups) {
         let accs = if fast {
-            gemm_sliced_fast(&cols, 1, pg)
+            gemm_sliced_fast(acts.for_k(pg.k), pg)
         } else {
-            gemm_sliced_reference(&cols, 1, kdim, &g.codes, pg.od, pg.wq, pg.k)
+            gemm_sliced_reference(&cols, 1, kdim, &g.codes, pg.od, pg.wq, a_in, pg.k)
         };
         for (&acc, &scale) in accs.iter().zip(&pg.scales) {
+            logits.push(acc as f32 * scale);
+        }
+    }
+    logits
+}
+
+/// Plain-i64 FC head (ground truth): direct MACs from the codes, same
+/// per-class dequantization.
+pub fn fc_logits_i64(pooled: &[u8], l: &XmpLayer) -> Vec<f32> {
+    let cols: Vec<i16> = pooled.iter().map(|&v| v as i16).collect();
+    let kdim = pooled.len();
+    let mut logits = Vec::with_capacity(l.od as usize);
+    for g in &l.groups {
+        let accs = gemm_codes_i64(&cols, 1, kdim, &g.codes, g.od as usize);
+        for (&acc, &scale) in accs.iter().zip(&g.scales) {
             logits.push(acc as f32 * scale);
         }
     }
@@ -166,7 +225,9 @@ mod tests {
     #[test]
     fn conv_identity_weights_pass_through() {
         // 1x1 conv, single channel, weight code 1, requant scale 1 (mult
-        // 2^shift / 2^shift): output == input.
+        // 2^shift / 2^shift): output == input, at every input precision
+        // wide enough for the values.
+        let requant = crate::xmp::Requant { mult: 256, shift: 8, qmax: 255 };
         let l = XmpLayer {
             name: "id".into(),
             kind: crate::cnn::LayerKind::Conv,
@@ -175,11 +236,12 @@ mod tests {
             od: 1,
             k: 1,
             s: 1,
+            aq: 8,
             groups: vec![crate::xmp::GroupWeights {
                 wq: 2,
                 od: 1,
                 codes: vec![1],
-                requant: vec![crate::xmp::Requant { mult: 256, shift: 8 }],
+                requant: vec![requant],
                 scales: vec![1.0],
             }],
         };
@@ -190,13 +252,56 @@ mod tests {
                 1,
                 2,
                 2,
-                vec![crate::xmp::Requant { mult: 256, shift: 8 }],
+                vec![requant],
                 vec![1.0],
             )],
         };
         let input: Vec<u8> = vec![0, 50, 100, 150, 200, 250, 3, 9, 27];
-        assert_eq!(conv_forward(&input, &l, &pl, true), input);
-        assert_eq!(conv_forward(&input, &l, &pl, false), input);
+        assert_eq!(conv_forward(&input, 8, &l, &pl, true), input);
+        assert_eq!(conv_forward(&input, 8, &l, &pl, false), input);
         assert_eq!(conv_forward_i64(&input, &l), input);
+        // A narrower input precision must still pass narrow values through.
+        let narrow: Vec<u8> = vec![0, 1, 2, 3, 4, 5, 6, 7, 8];
+        assert_eq!(conv_forward(&narrow, 4, &l, &pl, true), narrow);
+        assert_eq!(conv_forward(&narrow, 4, &l, &pl, false), narrow);
+    }
+
+    #[test]
+    fn requant_clamps_to_the_layer_aq() {
+        // aq = 4: outputs clamp to 2^4 - 1 = 15, not 255.
+        let requant = crate::xmp::Requant { mult: 256, shift: 8, qmax: 15 };
+        let l = XmpLayer {
+            name: "clamp".into(),
+            kind: crate::cnn::LayerKind::Conv,
+            ih: 2,
+            iw: 1,
+            od: 1,
+            k: 1,
+            s: 1,
+            aq: 4,
+            groups: vec![crate::xmp::GroupWeights {
+                wq: 2,
+                od: 1,
+                codes: vec![1],
+                requant: vec![requant],
+                scales: vec![1.0],
+            }],
+        };
+        let pl = PackedLayer {
+            groups: vec![crate::xmp::pack::pack_group(
+                &[1],
+                1,
+                1,
+                2,
+                2,
+                vec![requant],
+                vec![1.0],
+            )],
+        };
+        let input: Vec<u8> = vec![0, 9, 15, 200];
+        let want: Vec<u8> = vec![0, 9, 15, 15];
+        assert_eq!(conv_forward(&input, 8, &l, &pl, true), want);
+        assert_eq!(conv_forward(&input, 8, &l, &pl, false), want);
+        assert_eq!(conv_forward_i64(&input, &l), want);
     }
 }

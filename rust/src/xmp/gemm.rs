@@ -1,27 +1,34 @@
-//! Integer GEMM kernels over sliced-digit operands — the engine's MAC
+//! Integer GEMM kernels over 2D-sliced operands — the engine's MAC
 //! datapath.
 //!
-//! Operands: an im2col patch matrix `cols` (`M × kdim`, u8 activations
-//! widened to `i16` once at extraction) and one channel group's weights.
-//! Output: exact `i64` accumulators, `M × od` row-major, which the caller
-//! requantizes per channel. Three kernels compute the same function:
+//! Operands: an im2col patch matrix at activation word-length `aq` (u8
+//! activations widened to `i16` once at extraction, and — for the fast
+//! path — lowered to `ceil(aq/k)` unsigned digit planes by
+//! [`crate::xmp::pack::pack_activations`]) and one channel group's
+//! weights at word-length `wq`. Output: exact `i64` accumulators,
+//! `M × od` row-major, which the caller requantizes per channel. Three
+//! kernels compute the same function:
 //!
 //! - [`gemm_codes_i64`] — ground truth: direct `Σ a·w`, no slicing.
-//! - [`gemm_sliced_reference`] — the scalar reference: digits extracted
-//!   on the fly with [`crate::quant::slicing::slice_digit`] and shift-add
-//!   recombined per MAC; transparently the Fig 1b PPG + shifted adder
-//!   tree, and the baseline `cargo bench --bench xmp` measures against.
+//! - [`gemm_sliced_reference`] — the scalar reference: digits of *both*
+//!   operands extracted on the fly with
+//!   [`crate::quant::slicing::slice_digit`] /
+//!   [`crate::quant::slicing::slice_digit_unsigned`] and shift-add
+//!   recombined per MAC over the `S_a × S_w` slice cross-product at
+//!   weight-shift + activation-shift — transparently the Fig 1b PPG +
+//!   shifted adder tree generalized to the paper's 2D operand slicing,
+//!   and the baseline `cargo bench --bench xmp` measures against.
 //! - [`gemm_sliced_fast`] — the serving hot path: digit-plane-major
-//!   packed weights, `i32` per-slice partial accumulators, scoped-thread
-//!   fan-out over im2col rows.
+//!   packed operands on both sides, one tight `i32` dot product per
+//!   `(s_a, s_w)` slice pair, scoped-thread fan-out over im2col rows.
 //!
-//! All three are property-tested bit-identical across every
-//! `(wq, k)` pair including partial top digits; the fast path's `i32`
-//! partials are exact because [`crate::xmp::pack::MAX_KDIM`] bounds the
-//! reduction depth.
+//! All three are property-tested bit-identical across every `(wq, aq, k)`
+//! triple including partial top digits on both operands; the fast path's
+//! `i32` partials are exact because [`crate::xmp::pack::max_kdim`] bounds
+//! the reduction depth as a function of the actual digit magnitudes.
 
-use super::pack::PackedGroup;
-use crate::quant::slicing::{n_slices, slice_digit};
+use super::pack::{max_kdim, PackedGroup, SlicedActs};
+use crate::quant::slicing::{n_slices, slice_digit, slice_digit_unsigned};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Plain `i64` ground truth: direct `Σ a·w` per output element.
@@ -41,11 +48,13 @@ pub fn gemm_codes_i64(cols: &[i16], m: usize, kdim: usize, codes: &[i32], od: us
     out
 }
 
-/// Scalar sliced reference kernel: for every MAC, decompose the weight
-/// into `ceil(wq/k)` digits on the fly and accumulate each digit's
-/// partial product at its shift weight. Single-threaded, unpacked,
-/// allocation-free — slow, but the algebra is the module's correctness
-/// anchor stated in code.
+/// Scalar 2D-sliced reference kernel: for every MAC, decompose the
+/// activation into `ceil(aq/k)` unsigned digits and the weight into
+/// `ceil(wq/k)` signed digits on the fly, and accumulate each digit
+/// pair's partial product at shift `k·(s_a + s_w)`. Single-threaded,
+/// unpacked, allocation-free — slow, but the algebra is the module's
+/// correctness anchor stated in code.
+#[allow(clippy::too_many_arguments)]
 pub fn gemm_sliced_reference(
     cols: &[i16],
     m: usize,
@@ -53,18 +62,23 @@ pub fn gemm_sliced_reference(
     codes: &[i32],
     od: usize,
     wq: u32,
+    aq: u32,
     k: u32,
 ) -> Vec<i64> {
     assert_eq!(cols.len(), m * kdim);
     assert_eq!(codes.len(), od * kdim);
-    let s = n_slices(wq, k);
+    let sw = n_slices(wq, k);
+    let sa = n_slices(aq, k);
     let mut out = vec![0i64; m * od];
     for (row_out, a) in out.chunks_mut(od).zip(cols.chunks_exact(kdim)) {
         for (o, w) in row_out.iter_mut().zip(codes.chunks_exact(kdim)) {
             let mut acc = 0i64;
             for (&x, &c) in a.iter().zip(w) {
-                for si in 0..s {
-                    acc += (x as i64 * slice_digit(c as i64, wq, k, si)) << (k * si);
+                for ai in 0..sa {
+                    let ad = slice_digit_unsigned(x as u64, aq, k, ai);
+                    for si in 0..sw {
+                        acc += (ad * slice_digit(c as i64, wq, k, si)) << (k * (ai + si));
+                    }
                 }
             }
             *o = acc;
@@ -97,34 +111,54 @@ impl Drop for GemmSlot {
     }
 }
 
-/// Inner loop of the fast path for one im2col row: per slice, a tight
-/// `i32` dot product over the digit plane's channel row, recombined by
-/// shift-add. Exact: the plane digits are `slice_signed`'s and the `i32`
-/// partials cannot overflow within [`crate::xmp::pack::MAX_KDIM`].
+/// Inner loop of the fast path for one im2col row: per `(s_w, s_a)` slice
+/// pair, a tight `i32` dot product between the weight plane's channel row
+/// and the activation plane's row, recombined by shift-add at
+/// `k·(s_w + s_a)`. Exact: the plane digits are `slice_signed`'s /
+/// `slice_unsigned`'s, and the `i32` partials cannot overflow within
+/// [`crate::xmp::pack::max_kdim`]`(wq, aq, k)`.
 #[inline]
-fn fast_row(a: &[i16], g: &PackedGroup, row_out: &mut [i64]) {
+fn fast_row(a: &SlicedActs, row: usize, g: &PackedGroup, row_out: &mut [i64]) {
     let kdim = g.kdim;
     for (n, o) in row_out.iter_mut().enumerate() {
         let mut acc = 0i64;
-        for (si, plane) in g.planes.iter().enumerate() {
-            let wrow = &plane[n * kdim..(n + 1) * kdim];
-            let mut p = 0i32;
-            for (&x, &d) in a.iter().zip(wrow) {
-                p += x as i32 * d as i32;
+        for (sw, wplane) in g.planes.iter().enumerate() {
+            let wrow = &wplane[n * kdim..(n + 1) * kdim];
+            for (sa, aplane) in a.planes.iter().enumerate() {
+                let arow = &aplane[row * kdim..(row + 1) * kdim];
+                let mut p = 0i32;
+                for (&x, &d) in arow.iter().zip(wrow) {
+                    p += x as i32 * d as i32;
+                }
+                acc += (p as i64) << (g.k as usize * (sw + sa));
             }
-            acc += (p as i64) << (g.k as usize * si);
         }
         *o = acc;
     }
 }
 
-/// Fast path: digit-plane-major layout, `i32` per-slice partials,
-/// scoped-thread fan-out over im2col rows. Bit-identical to
-/// [`gemm_sliced_reference`] — same digits, same exact integer algebra;
-/// only the evaluation order and layout differ.
-pub fn gemm_sliced_fast(cols: &[i16], m: usize, g: &PackedGroup) -> Vec<i64> {
-    assert_eq!(cols.len(), m * g.kdim);
-    debug_assert!(g.kdim <= super::pack::MAX_KDIM);
+/// Fast path: digit-plane-major layout on both operands, `i32` partials
+/// per slice pair, scoped-thread fan-out over im2col rows. Bit-identical
+/// to [`gemm_sliced_reference`] — same digits, same exact integer
+/// algebra; only the evaluation order and layout differ.
+pub fn gemm_sliced_fast(a: &SlicedActs, g: &PackedGroup) -> Vec<i64> {
+    assert_eq!(a.kdim, g.kdim, "operand reduction depths must agree");
+    assert_eq!(
+        a.k, g.k,
+        "activation and weight planes must slice at the same digit width"
+    );
+    // The re-derived i32 partial-sum bound: a function of the actual
+    // digit magnitudes (wq, aq, k), not the 8-bit worst case.
+    assert!(
+        g.kdim <= max_kdim(g.wq, a.aq, g.k),
+        "reduction depth {} exceeds the i32 bound {} for (w{}, a{}, k{})",
+        g.kdim,
+        max_kdim(g.wq, a.aq, g.k),
+        g.wq,
+        a.aq,
+        g.k
+    );
+    let m = a.m;
     let mut out = vec![0i64; m * g.od];
     if m == 0 || g.od == 0 {
         return out;
@@ -133,12 +167,12 @@ pub fn gemm_sliced_fast(cols: &[i16], m: usize, g: &PackedGroup) -> Vec<i64> {
     // itself (serving runs one GEMM per channel group per layer per image;
     // small-CNN groups are ~1M MACs and sub-millisecond) — stay inline.
     const MIN_WORK_TO_FAN_OUT: usize = 4_000_000;
-    let work = m * g.kdim * g.od * g.planes.len();
+    let work = m * g.kdim * g.od * g.planes.len() * a.planes.len();
     let (_slot, budget) = GemmSlot::acquire();
     let n_threads = budget.min(m).max(1);
     if n_threads == 1 || work < MIN_WORK_TO_FAN_OUT {
-        for (row_out, a) in out.chunks_mut(g.od).zip(cols.chunks_exact(g.kdim)) {
-            fast_row(a, g, row_out);
+        for (row, row_out) in out.chunks_mut(g.od).enumerate() {
+            fast_row(a, row, g, row_out);
         }
         return out;
     }
@@ -148,8 +182,7 @@ pub fn gemm_sliced_fast(cols: &[i16], m: usize, g: &PackedGroup) -> Vec<i64> {
             sc.spawn(move || {
                 let m0 = ci * rows_per_chunk;
                 for (j, row_out) in chunk.chunks_mut(g.od).enumerate() {
-                    let a = &cols[(m0 + j) * g.kdim..(m0 + j + 1) * g.kdim];
-                    fast_row(a, g, row_out);
+                    fast_row(a, m0 + j, g, row_out);
                 }
             });
         }
@@ -162,27 +195,31 @@ mod tests {
     use super::*;
     use crate::util::prop::{check_eq, forall};
     use crate::util::rng::Rng;
-    use crate::xmp::pack::pack_group;
+    use crate::xmp::pack::{pack_activations, pack_group};
     use crate::xmp::Requant;
 
-    fn random_case(rng: &mut Rng) -> (Vec<i16>, usize, usize, Vec<i32>, usize, u32, u32) {
-        let wq = *rng.choose(&[1u32, 2, 3, 4, 5, 6, 7, 8]);
+    #[allow(clippy::type_complexity)]
+    fn random_case(rng: &mut Rng) -> (Vec<i16>, usize, usize, Vec<i32>, usize, u32, u32, u32) {
+        let wq = 1 + rng.range(0, 8) as u32;
+        let aq = 1 + rng.range(0, 8) as u32;
         let k = *rng.choose(&[1u32, 2, 3, 4, 5, 8]);
         let (m, kdim, od) = (1 + rng.range(0, 6), 1 + rng.range(0, 14), 1 + rng.range(0, 6));
-        let cols: Vec<i16> = (0..m * kdim).map(|_| rng.range_i64(0, 255) as i16).collect();
+        let amax = (1i64 << aq) - 1;
+        let cols: Vec<i16> = (0..m * kdim).map(|_| rng.range_i64(0, amax) as i16).collect();
         let (lo, hi) = (-(1i64 << (wq - 1)), (1i64 << (wq - 1)) - 1);
         let codes: Vec<i32> = (0..od * kdim).map(|_| rng.range_i64(lo, hi) as i32).collect();
-        (cols, m, kdim, codes, od, wq, k)
+        (cols, m, kdim, codes, od, wq, aq, k)
     }
 
     #[test]
     fn prop_all_three_kernels_bit_identical() {
-        // The module's anchor: plain i64 == on-the-fly sliced reference ==
-        // packed fast path, across every (wq, k) incl. partial top digits.
+        // The module's anchor: plain i64 == on-the-fly 2D-sliced reference
+        // == packed fast path, across every (wq, aq, k) incl. partial top
+        // digits on BOTH operands.
         forall(800, |rng| {
-            let (cols, m, kdim, codes, od, wq, k) = random_case(rng);
+            let (cols, m, kdim, codes, od, wq, aq, k) = random_case(rng);
             let plain = gemm_codes_i64(&cols, m, kdim, &codes, od);
-            let refr = gemm_sliced_reference(&cols, m, kdim, &codes, od, wq, k);
+            let refr = gemm_sliced_reference(&cols, m, kdim, &codes, od, wq, aq, k);
             check_eq(refr.clone(), plain.clone(), "reference vs plain i64")?;
             let g = pack_group(
                 &codes,
@@ -193,19 +230,44 @@ mod tests {
                 vec![Requant::from_scale(0.5); od],
                 vec![1.0; od],
             );
-            let fast = gemm_sliced_fast(&cols, m, &g);
+            let a = pack_activations(&cols, m, kdim, aq, k);
+            let fast = gemm_sliced_fast(&a, &g);
             check_eq(fast, plain, "fast vs plain i64")
         });
     }
 
     #[test]
+    fn aq8_reproduces_the_weight_only_datapath() {
+        // With aq = 8 the 2D engine must be the same function as the old
+        // weight-only-sliced engine was: the plain i64 truth is unchanged,
+        // so bit-identity to it IS reproduction of every old result.
+        let mut rng = Rng::new(0xA88);
+        for _ in 0..50 {
+            let (m, kdim, od) = (1 + rng.range(0, 5), 1 + rng.range(0, 12), 1 + rng.range(0, 5));
+            let wq = 1 + rng.range(0, 8) as u32;
+            let k = *rng.choose(&[1u32, 2, 3, 4, 8]);
+            let cols: Vec<i16> =
+                (0..m * kdim).map(|_| rng.range_i64(0, 255) as i16).collect();
+            let (lo, hi) = (-(1i64 << (wq - 1)), (1i64 << (wq - 1)) - 1);
+            let codes: Vec<i32> =
+                (0..od * kdim).map(|_| rng.range_i64(lo, hi) as i32).collect();
+            let plain = gemm_codes_i64(&cols, m, kdim, &codes, od);
+            assert_eq!(gemm_sliced_reference(&cols, m, kdim, &codes, od, wq, 8, k), plain);
+            let g = pack_group(&codes, od, kdim, wq, k,
+                vec![Requant::from_scale(0.5); od], vec![1.0; od]);
+            let a = pack_activations(&cols, m, kdim, 8, k);
+            assert_eq!(gemm_sliced_fast(&a, &g), plain);
+        }
+    }
+
+    #[test]
     fn fast_path_threads_agree_with_single_thread() {
-        // Work above MIN_WORK_TO_FAN_OUT (512·128·32·3 ≈ 6.3M digit-MACs)
+        // Work above MIN_WORK_TO_FAN_OUT (512·128·32·3·4 ≈ 25M digit-MACs)
         // so the scoped fan-out engages on multi-core machines;
         // thread-count must not affect the bits.
         let mut rng = Rng::new(99);
-        let (m, kdim, od, wq, k) = (512usize, 128usize, 32usize, 5u32, 2u32);
-        let cols: Vec<i16> = (0..m * kdim).map(|_| rng.range_i64(0, 255) as i16).collect();
+        let (m, kdim, od, wq, aq, k) = (512usize, 128usize, 32usize, 5u32, 7u32, 2u32);
+        let cols: Vec<i16> = (0..m * kdim).map(|_| rng.range_i64(0, 127) as i16).collect();
         let codes: Vec<i32> = (0..od * kdim).map(|_| rng.range_i64(-16, 15) as i32).collect();
         let g = pack_group(
             &codes,
@@ -216,28 +278,33 @@ mod tests {
             vec![Requant::from_scale(0.5); od],
             vec![1.0; od],
         );
-        let fast = gemm_sliced_fast(&cols, m, &g);
+        let a = pack_activations(&cols, m, kdim, aq, k);
+        let fast = gemm_sliced_fast(&a, &g);
         assert_eq!(fast, gemm_codes_i64(&cols, m, kdim, &codes, od));
     }
 
     #[test]
     fn known_tiny_gemm() {
-        // 1x2 · 2x1: a = [3, 5], w = [-2, 1] -> -6 + 5 = -1, across slicings.
+        // 1x2 · 2x1: a = [3, 5], w = [-2, 1] -> -6 + 5 = -1, across 2D
+        // slicings of both operands.
         let cols = vec![3i16, 5];
         let codes = vec![-2i32, 1];
         assert_eq!(gemm_codes_i64(&cols, 1, 2, &codes, 1), vec![-1]);
         for k in [1u32, 2, 3] {
-            assert_eq!(
-                gemm_sliced_reference(&cols, 1, 2, &codes, 1, 3, k),
-                vec![-1],
-                "k={k}"
-            );
+            for aq in [3u32, 4, 8] {
+                assert_eq!(
+                    gemm_sliced_reference(&cols, 1, 2, &codes, 1, 3, aq, k),
+                    vec![-1],
+                    "aq={aq} k={k}"
+                );
+            }
         }
     }
 
     #[test]
     fn empty_dimensions_are_safe() {
         let g = pack_group(&[], 0, 4, 2, 2, vec![], vec![]);
-        assert!(gemm_sliced_fast(&[], 0, &g).is_empty());
+        let a = pack_activations(&[], 0, 4, 8, 2);
+        assert!(gemm_sliced_fast(&a, &g).is_empty());
     }
 }

@@ -3,36 +3,48 @@
 //! Everything below the serving gateway used to be a *model* of compute
 //! (DSE cost models, virtual clocks, mock logits). This module is the
 //! compute: a dependency-free, multithreaded integer inference engine
-//! whose inner MAC **is** the paper's sliced-digit datapath (Fig 1b).
-//! LSQ-quantized weights are decomposed into `k`-bit digit planes
-//! (exactly [`crate::quant::slicing::slice_signed`]: low digits unsigned,
-//! top digit signed, possibly partial), and every convolution accumulates
-//! per-slice partial products that are recombined by shift-add — so the
-//! two's-complement digit identity the property tests anchor is what the
-//! serving path actually executes.
+//! whose inner MAC **is** the paper's 2D-sliced datapath (Fig 1b +
+//! Table IV's operand-slice axis, applied to *both* operands). LSQ-
+//! quantized weights are decomposed into `ceil(wq/k)` signed `k`-bit
+//! digit planes (exactly [`crate::quant::slicing::slice_signed`]: low
+//! digits unsigned, top digit signed, possibly partial) and activations
+//! into `ceil(aq/k)` **unsigned** digit planes (exactly
+//! [`crate::quant::slicing::slice_unsigned`]); every convolution
+//! accumulates the `S_a × S_w` slice cross-product and recombines by
+//! shift-add at weight-shift + activation-shift — so the two's-complement
+//! digit identity the property tests anchor is what the serving path
+//! actually executes, on both axes of the paper's "weight and/or
+//! activation word-length reduction".
 //!
 //! Pipeline, one layer at a time ([`conv`]):
-//! `u8 activations → im2col → per-channel-group sliced GEMM ([`gemm`]) →
-//! per-channel integer requantize ([`Requant`]) → u8 activations`,
+//! `u8 activations (a_in bits) → im2col → per-channel-group 2D-sliced
+//! GEMM ([`gemm`]) → per-channel integer requantize ([`Requant`], clamp
+//! to the layer's `2^aq − 1`) → u8 activations (aq bits)`,
 //! with the FC head running through the same kernels (M = 1) and
-//! dequantizing to `f32` logits. Channel groups at different word-lengths
-//! coexist *within* one layer — the "truly mixed" part — honoring
-//! layerwise and channelwise [`crate::serving::VariantSpec`] plans from
-//! the [`crate::planner`].
+//! dequantizing to `f32` logits. Channel groups at different weight
+//! word-lengths coexist *within* one layer — the "truly mixed" part —
+//! honoring layerwise and channelwise [`crate::serving::VariantSpec`]
+//! plans (now `(wq, aq)` pairs) from the [`crate::planner`].
 //!
-//! Two kernels compute every layer:
+//! Three kernels compute every layer ([`XmpModel::forward_kernel`]):
+//! - the **plain-i64 ground truth** ([`gemm::gemm_codes_i64`]): direct
+//!   `Σ a·w`, no slicing on either operand;
 //! - the **scalar reference** ([`gemm::gemm_sliced_reference`]): digit
-//!   extraction on the fly via [`crate::quant::slicing::slice_digit`],
-//!   transparently the PPG + shifted-adder-tree algebra;
+//!   extraction on the fly for both operands via the allocation-free
+//!   `slice_digit` / `slice_digit_unsigned`, transparently the PPG +
+//!   shifted-adder-tree algebra;
 //! - the **fast path** ([`gemm::gemm_sliced_fast`]): digit-plane-major
-//!   packed weights ([`pack`]), `i32` per-slice accumulators, scoped-thread
-//!   row fan-out (same concurrency discipline as [`crate::array::search`]).
+//!   packed operands ([`pack`]), `i32` per-slice-pair accumulators
+//!   bounded by [`pack::max_kdim`]`(wq, aq, k)`, scoped-thread row
+//!   fan-out (same concurrency discipline as [`crate::array::search`]).
 //!
-//! Both are property-tested bit-identical to a plain `i64` convolution,
-//! and [`backend::XmpBackend`] re-verifies fast == reference on a probe
+//! All three are property-tested bit-identical (the differential harness
+//! in `rust/tests/integration_xmp.rs` + module props), and
+//! [`backend::XmpBackend`] re-verifies fast == reference on a probe
 //! image at warm-up before a variant is announced ready. `cargo bench
 //! --bench xmp` tracks the fast-path-vs-reference baseline
-//! (`BENCH_xmp.json`); reproduction notes live in EXPERIMENTS.md
+//! (`BENCH_xmp.json`), `cargo bench --bench table4_operand_slices` the
+//! 2D operand-slice grid; reproduction notes live in EXPERIMENTS.md
 //! §Execution.
 
 pub mod backend;
@@ -54,7 +66,8 @@ use crate::util::rng::Rng;
 pub struct XmpConfig {
     /// Digit (operand-slice) width `k` in bits — the PPG operand width of
     /// the simulated BP-ST design. Every group's weights decompose into
-    /// `ceil(w_Q / k)` digit planes.
+    /// `ceil(w_Q / k)` digit planes, every layer's activations into
+    /// `ceil(a_Q / k)`.
     pub k: u32,
     /// Base seed for synthetic weight generation; the effective seed also
     /// mixes in the planned CNN's fingerprint, so two independently built
@@ -68,27 +81,50 @@ impl Default for XmpConfig {
     }
 }
 
-/// Integer requantization of an accumulator back to an unsigned 8-bit
-/// activation: `clamp((acc·mult + 2^{shift-1}) >> shift, 0, 255)` —
-/// round-half-up fixed-point scaling, with the clamp at 0 doubling as the
-/// ReLU. Pure function of `acc`, so the scalar reference and the fast
-/// path requantize identically by construction.
+/// Which kernel computes the layers of a forward pass.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelPath {
+    /// Plain `i64` MACs straight from the codes — the ground truth the
+    /// sliced kernels are differentially tested against.
+    PlainI64,
+    /// Scalar 2D-sliced reference (on-the-fly digit extraction per MAC).
+    Reference,
+    /// Digit-plane-major fast path.
+    Fast,
+}
+
+/// Integer requantization of an accumulator back to an unsigned
+/// activation of the layer's word-length:
+/// `clamp((acc·mult + 2^{shift-1}) >> shift, 0, qmax)` — round-half-up
+/// fixed-point scaling with `qmax = 2^{aq} − 1`, the clamp at 0 doubling
+/// as the ReLU and the clamp at `qmax` pinning the output to its
+/// activation range (255 for the legacy 8-bit case). Pure function of
+/// `acc`, so every kernel path requantizes identically by construction.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Requant {
     pub mult: i64,
     pub shift: u32,
+    /// Upper clamp bound, `2^{aq} − 1`.
+    pub qmax: i64,
 }
 
 impl Requant {
     /// Fixed-point `(mult, shift)` approximating the real factor `r`
     /// (`0 < r < 128`): `mult = round(r·2^shift)` with `shift` chosen so
     /// `mult` lands in `[128, 255]` — 8-bit multiplier precision, ~0.4%
-    /// worst-case scale error.
+    /// worst-case scale error. Output clamps to the 8-bit range.
     pub fn from_scale(r: f64) -> Requant {
+        Requant::from_scale_aq(r, 8)
+    }
+
+    /// [`from_scale`](Self::from_scale) with the output clamped to the
+    /// unsigned `aq`-bit activation range `[0, 2^aq − 1]`.
+    pub fn from_scale_aq(r: f64, aq: u32) -> Requant {
         assert!(
             r.is_finite() && r > 0.0 && r < 128.0,
             "requantize scale must be in (0, 128), got {r}"
         );
+        assert!((1..=8).contains(&aq), "activation word-lengths are 1..=8 bit");
         let mut shift = 0u32;
         let mut m = r;
         while m < 128.0 && shift < 62 {
@@ -98,6 +134,7 @@ impl Requant {
         Requant {
             mult: (m.round() as i64).clamp(1, 255),
             shift: shift.max(1),
+            qmax: (1i64 << aq) - 1,
         }
     }
 
@@ -105,12 +142,12 @@ impl Requant {
     #[inline]
     pub fn apply(&self, acc: i64) -> u8 {
         let q = (acc * self.mult + (1i64 << (self.shift - 1))) >> self.shift;
-        q.clamp(0, 255) as u8
+        q.clamp(0, self.qmax) as u8
     }
 }
 
 /// One channel group's weights within a layer: every channel in the group
-/// shares the word-length `wq`.
+/// shares the weight word-length `wq`.
 #[derive(Clone, Debug)]
 pub struct GroupWeights {
     /// Weight word-length of this group (bits).
@@ -120,7 +157,7 @@ pub struct GroupWeights {
     /// Integer weight codes, `od * kdim` row-major per output channel,
     /// each in `[-2^{wq-1}, 2^{wq-1} - 1]`.
     pub codes: Vec<i32>,
-    /// Per-channel requantization back to u8 activations (len `od`).
+    /// Per-channel requantization back to `aq`-bit activations (len `od`).
     pub requant: Vec<Requant>,
     /// Per-channel dequantization scale (the LSQ step γ), used for the
     /// `f32` logits of the FC head (len `od`).
@@ -128,8 +165,9 @@ pub struct GroupWeights {
 }
 
 /// One executable layer: geometry (the [`crate::cnn::Layer`] vocabulary)
-/// plus channel-group weights. `k` is the *spatial* kernel size; the digit
-/// width lives in [`XmpConfig::k`].
+/// plus channel-group weights and the layer's **output activation
+/// word-length** `aq`. `k` is the *spatial* kernel size; the digit width
+/// lives in [`XmpConfig::k`].
 #[derive(Clone, Debug)]
 pub struct XmpLayer {
     pub name: String,
@@ -144,6 +182,9 @@ pub struct XmpLayer {
     pub k: u32,
     /// Stride.
     pub s: u32,
+    /// Output activation word-length (bits): the requantizers clamp to
+    /// `2^aq − 1`, and the consumer layer slices its input at this width.
+    pub aq: u32,
     pub groups: Vec<GroupWeights>,
 }
 
@@ -177,19 +218,38 @@ pub struct XmpModel {
 
 /// Estimated |activation| scale feeding the requantize heuristic: inputs
 /// are u8 with std ≈ 74 when uniform, and we map ~2.5σ of the accumulator
-/// distribution onto the 8-bit output range.
+/// distribution onto the output activation range.
 const REQUANT_SIGMA_TIMES_ASTD: f64 = 185.0;
 
 impl XmpModel {
     /// Generate a synthetic LSQ-quantized model for `base` under a
-    /// per-layer precision plan (one [`ChannelGroup`] list per base layer,
-    /// as produced by [`crate::serving::VariantSpec::per_layer_plan`] or a
-    /// planner [`crate::planner::Assignment`]). Per channel, weights are
-    /// drawn `N(0, 1/√kdim)` and quantized with an LSQ-initialized
-    /// quantizer at the group's word-length; requantization maps the
-    /// accumulator's L2-norm-estimated spread back onto u8. Deterministic
-    /// in `(base, plan, cfg.seed)`.
+    /// per-layer weight precision plan, with every activation at 8 bit —
+    /// see [`synthetic_joint`](Self::synthetic_joint) for the general
+    /// `(wq, aq)` form this delegates to. Bit-for-bit identical to the
+    /// models this constructor produced before activations became
+    /// plannable.
     pub fn synthetic(base: &Cnn, plan: &[Vec<ChannelGroup>], cfg: XmpConfig) -> Result<XmpModel> {
+        XmpModel::synthetic_joint(base, plan, &vec![8; plan.len()], cfg)
+    }
+
+    /// Generate a synthetic LSQ-quantized model for `base` under a joint
+    /// per-layer precision plan: one [`ChannelGroup`] list (weights) and
+    /// one activation word-length `aq` per base layer, as produced by
+    /// [`crate::serving::VariantSpec::per_layer_plan`] /
+    /// [`crate::serving::VariantSpec::per_layer_aq`] or a planner
+    /// [`crate::planner::Assignment`]. Per channel, weights are drawn
+    /// `N(0, 1/√kdim)` and quantized with an LSQ-initialized quantizer at
+    /// the group's word-length; requantization maps the accumulator's
+    /// L2-norm-estimated spread onto the layer's `[0, 2^aq − 1]` output
+    /// range. Deterministic in `(base, plan, aq, cfg.seed)`, and the
+    /// weight draw depends on the *weight* plan only — two variants
+    /// differing solely in activation word-lengths share their codes.
+    pub fn synthetic_joint(
+        base: &Cnn,
+        plan: &[Vec<ChannelGroup>],
+        aq: &[u32],
+        cfg: XmpConfig,
+    ) -> Result<XmpModel> {
         if plan.len() != base.layers.len() {
             crate::bail!(
                 "plan has {} layer entries for a {}-layer CNN",
@@ -197,8 +257,20 @@ impl XmpModel {
                 base.layers.len()
             );
         }
+        if aq.len() != base.layers.len() {
+            crate::bail!(
+                "activation plan has {} entries for a {}-layer CNN",
+                aq.len(),
+                base.layers.len()
+            );
+        }
+        if let Some(bad) = aq.iter().find(|a| !(1..=8).contains(*a)) {
+            crate::bail!("activation word-length {bad} outside the supported 1..=8 bit range");
+        }
         // `apply_plan` validates the plan (fractions, FC splits) and its
         // fingerprint pins the synthetic weights to the planned topology.
+        // Deliberately the weights-only lowering: the draw must not move
+        // when only activation word-lengths change.
         let planned = crate::cnn::channelwise::apply_plan(base, plan);
         let seed = cfg.seed ^ planned.fingerprint();
         let mut layers = Vec::with_capacity(base.layers.len());
@@ -207,6 +279,7 @@ impl XmpModel {
             let counts = group_channel_counts(l.od, groups);
             let kdim = (l.k * l.k * l.iw) as usize;
             let wstd = 1.0 / (kdim.max(1) as f64).sqrt();
+            let qmax = (1u32 << aq[li]) - 1;
             let mut gws = Vec::new();
             for (g, &od) in groups.iter().zip(&counts) {
                 if od == 0 {
@@ -224,8 +297,9 @@ impl XmpModel {
                         .map(|&c| (c as f64) * (c as f64))
                         .sum::<f64>()
                         .sqrt();
-                    requant.push(Requant::from_scale(
-                        255.0 / (REQUANT_SIGMA_TIMES_ASTD * l2.max(1.0)),
+                    requant.push(Requant::from_scale_aq(
+                        qmax as f64 / (REQUANT_SIGMA_TIMES_ASTD * l2.max(1.0)),
+                        aq[li],
                     ));
                     scales.push(q.gamma as f32);
                     codes.extend(ints.iter().map(|&c| c as i32));
@@ -246,6 +320,7 @@ impl XmpModel {
                 od: l.od,
                 k: l.k,
                 s: l.s,
+                aq: aq[li],
                 groups: gws,
             });
         }
@@ -265,7 +340,7 @@ impl XmpModel {
         (self.input_hw * self.input_hw * self.input_channels) as usize
     }
 
-    /// Quantize a flat NHWC f32 image to u8 activation codes.
+    /// Quantize a flat NHWC f32 image to u8 activation codes (8 bit).
     pub fn quantize_input(&self, image: &[f32]) -> Vec<u8> {
         image
             .iter()
@@ -274,19 +349,40 @@ impl XmpModel {
     }
 
     /// Run one image to `f32` logits through the packed kernels.
-    /// `fast = false` routes every layer through the scalar sliced
-    /// reference kernel instead of the digit-plane fast path; the two are
-    /// bit-identical (property-tested, and probed at backend warm-up).
-    ///
-    /// The layer list is executed sequentially. Two ResNet-IR idioms the
-    /// shape chain doesn't encode are reconstructed structurally: an
-    /// elided stride-2 max-pool is inserted when the next layer expects a
-    /// halved map at unchanged depth, and a branch layer whose input
-    /// matches an *earlier* activation (the `downsample` projections) is
-    /// run from that saved activation and merged into the running one by
-    /// saturating add. Identity skips carry no IR at all and are not
-    /// modeled — the kernels, not the topology, are the contract here.
+    /// `fast = false` routes every layer through the scalar 2D-sliced
+    /// reference kernel instead of the digit-plane fast path; see
+    /// [`forward_kernel`](Self::forward_kernel) for the plain-i64 ground
+    /// truth path the golden tests drive.
     pub fn forward(&self, packed: &PackedModel, image: &[f32], fast: bool) -> Result<Vec<f32>> {
+        self.forward_kernel(
+            packed,
+            image,
+            if fast { KernelPath::Fast } else { KernelPath::Reference },
+        )
+    }
+
+    /// Run one image to `f32` logits through the chosen kernel path. All
+    /// three paths are bit-identical (differentially tested, and probed
+    /// at backend warm-up).
+    ///
+    /// The layer list is executed sequentially, tracking the activation
+    /// word-length of every live buffer: each layer slices its input at
+    /// the *producer's* `aq` and clamps its output to its own. Two
+    /// ResNet-IR idioms the shape chain doesn't encode are reconstructed
+    /// structurally: an elided stride-2 max-pool is inserted when the
+    /// next layer expects a halved map at unchanged depth, and a branch
+    /// layer whose input matches an *earlier* activation (the
+    /// `downsample` projections) is run from that saved activation and
+    /// merged into the running one by saturating add — clamped at the
+    /// merged buffers' wider activation bound, so the precision invariant
+    /// survives the join. Identity skips carry no IR at all and are not
+    /// modeled — the kernels, not the topology, are the contract here.
+    pub fn forward_kernel(
+        &self,
+        packed: &PackedModel,
+        image: &[f32],
+        path: KernelPath,
+    ) -> Result<Vec<f32>> {
         if image.len() != self.image_len() {
             crate::bail!(
                 "image has {} elements, model expects {}",
@@ -294,10 +390,18 @@ impl XmpModel {
                 self.image_len()
             );
         }
+        let conv_with = |input: &[u8], a_in: u32, l: &XmpLayer, pl: &pack::PackedLayer| match path
+        {
+            KernelPath::PlainI64 => conv::conv_forward_i64(input, l),
+            KernelPath::Reference => conv::conv_forward(input, a_in, l, pl, false),
+            KernelPath::Fast => conv::conv_forward(input, a_in, l, pl, true),
+        };
         let mut cur = self.quantize_input(image);
         let mut cur_shape = (self.input_hw, self.input_channels);
-        // Activation history for branch layers.
-        let mut history: Vec<((u32, u32), Vec<u8>)> = Vec::new();
+        // The image quantizer emits the full 8-bit range.
+        let mut cur_aq = 8u32;
+        // Activation history for branch layers: (shape, aq, data).
+        let mut history: Vec<((u32, u32), u32, Vec<u8>)> = Vec::new();
         let mut logits: Option<Vec<f32>> = None;
         for (l, pl) in self.layers.iter().zip(&packed.layers) {
             if logits.is_some() {
@@ -306,6 +410,8 @@ impl XmpModel {
             if l.kind == LayerKind::Fc {
                 // Global average pool, then the FC head runs through the
                 // same sliced kernels (M = 1) and dequantizes to logits.
+                // Pooling never exceeds the per-channel max, so the pooled
+                // features keep the running activation word-length.
                 let pooled = avg_pool(&cur, cur_shape.0, cur_shape.1);
                 if pooled.len() != l.iw as usize {
                     crate::bail!(
@@ -315,7 +421,11 @@ impl XmpModel {
                         pooled.len()
                     );
                 }
-                logits = Some(conv::fc_logits(&pooled, l, pl, fast));
+                logits = Some(match path {
+                    KernelPath::PlainI64 => conv::fc_logits_i64(&pooled, l),
+                    KernelPath::Reference => conv::fc_logits(&pooled, cur_aq, l, pl, false),
+                    KernelPath::Fast => conv::fc_logits(&pooled, cur_aq, l, pl, true),
+                });
                 continue;
             }
             let need = (l.ih, l.iw);
@@ -325,12 +435,12 @@ impl XmpModel {
                 cur_shape = (cur_shape.0.div_ceil(2), cur_shape.1);
             }
             let (out, branch) = if need == cur_shape {
-                (conv::conv_forward(&cur, l, pl, fast), false)
+                (conv_with(&cur, cur_aq, l, pl), false)
             } else {
                 let src = history
                     .iter()
                     .rev()
-                    .find(|(s, _)| *s == need)
+                    .find(|(s, _, _)| *s == need)
                     .ok_or_else(|| {
                         crate::anyhow!(
                             "layer '{}' wants a {}x{}-channel input; no live activation matches",
@@ -339,18 +449,24 @@ impl XmpModel {
                             l.iw
                         )
                     })?;
-                (conv::conv_forward(&src.1, l, pl, fast), true)
+                (conv_with(&src.2, src.1, l, pl), true)
             };
             let out_shape = (l.oh(), l.od);
             if branch && out_shape == cur_shape {
-                // Projection shortcut: merge by saturating u8 add.
+                // Projection shortcut: merge by saturating add at the
+                // wider of the two branches' activation bounds (for the
+                // all-8-bit case this is exactly u8 saturating_add).
+                let merged_aq = cur_aq.max(l.aq);
+                let bound = ((1u32 << merged_aq) - 1) as u16;
                 for (c, o) in cur.iter_mut().zip(&out) {
-                    *c = (*c).saturating_add(*o);
+                    *c = (*c as u16 + *o as u16).min(bound) as u8;
                 }
+                cur_aq = merged_aq;
             } else {
-                history.push((cur_shape, std::mem::take(&mut cur)));
+                history.push((cur_shape, cur_aq, std::mem::take(&mut cur)));
                 cur = out;
                 cur_shape = out_shape;
+                cur_aq = l.aq;
             }
         }
         match logits {
@@ -416,13 +532,30 @@ mod tests {
     fn requant_rounds_clamps_and_is_monotone() {
         let r = Requant::from_scale(0.01);
         assert!(r.mult >= 128 && r.mult <= 255, "{r:?}");
+        assert_eq!(r.qmax, 255);
         assert_eq!(r.apply(-1_000_000), 0, "negative accs clamp to 0 (ReLU)");
         assert_eq!(r.apply(1 << 40), 255);
         forall(2000, |rng| {
-            let r = Requant::from_scale(rng.uniform(1e-4, 1.0));
+            let aq = 1 + rng.range(0, 8) as u32;
+            let r = Requant::from_scale_aq(rng.uniform(1e-4, 1.0), aq);
+            check_eq(r.qmax, (1i64 << aq) - 1, "qmax is 2^aq - 1")?;
             let a = rng.range_i64(-(1 << 30), 1 << 30);
             let d = rng.range_i64(0, 1 << 20);
-            check(r.apply(a + d) >= r.apply(a), "requantize must be monotone")
+            check(r.apply(a + d) >= r.apply(a), "requantize must be monotone")?;
+            check(
+                (r.apply(a) as i64) <= r.qmax,
+                "outputs never exceed the aq range",
+            )
+        });
+    }
+
+    #[test]
+    fn requant_aq8_matches_legacy_255_clamp() {
+        // from_scale is from_scale_aq(_, 8): identical (mult, shift, qmax)
+        // — the aq = 8 path reproduces the pre-aq engine bit-for-bit.
+        forall(500, |rng| {
+            let s = rng.uniform(1e-4, 1.0);
+            check_eq(Requant::from_scale(s), Requant::from_scale_aq(s, 8), "aq=8 identity")
         });
     }
 
@@ -448,6 +581,7 @@ mod tests {
         assert_eq!(m.image_len(), 3072);
         for (l, b) in m.layers.iter().zip(&base.layers) {
             assert_eq!(l.od, b.od);
+            assert_eq!(l.aq, 8, "synthetic() pins every activation at 8 bit");
             let mut total = 0u32;
             for g in &l.groups {
                 total += g.od;
@@ -482,6 +616,51 @@ mod tests {
     }
 
     #[test]
+    fn joint_plan_shares_codes_and_scales_requant() {
+        // Two variants differing only in activation word-lengths must
+        // share their weight codes (the draw depends on the weight plan
+        // alone) while their requantizers clamp to their own 2^aq - 1.
+        let base = resnet::resnet_small(1, 10);
+        let plan = uniform_plan(&base, 4);
+        let n = plan.len();
+        let mut aq = vec![8u32; n];
+        for (i, a) in aq.iter_mut().enumerate() {
+            if i != 0 && i + 1 != n && base.layers[i].kind != LayerKind::Fc {
+                *a = 5;
+            }
+        }
+        let a8 = XmpModel::synthetic(&base, &plan, XmpConfig::default()).unwrap();
+        let a5 = XmpModel::synthetic_joint(&base, &plan, &aq, XmpConfig::default()).unwrap();
+        for ((la, lb), &want_aq) in a8.layers.iter().zip(&a5.layers).zip(&aq) {
+            assert_eq!(lb.aq, want_aq);
+            for (ga, gb) in la.groups.iter().zip(&lb.groups) {
+                assert_eq!(ga.codes, gb.codes, "weight draw must not move with aq");
+                for r in &gb.requant {
+                    assert_eq!(r.qmax, (1i64 << want_aq) - 1);
+                }
+            }
+        }
+        // And the narrow-activation model is a genuinely different function.
+        let pa = pack::pack_model(&a8);
+        let pb = pack::pack_model(&a5);
+        let img = vec![0.9f32; a8.image_len()];
+        assert_ne!(
+            a8.forward(&pa, &img, true).unwrap(),
+            a5.forward(&pb, &img, true).unwrap()
+        );
+    }
+
+    #[test]
+    fn synthetic_joint_rejects_bad_aq() {
+        let base = resnet::resnet_small(1, 10);
+        let plan = uniform_plan(&base, 4);
+        let bad = vec![9u32; plan.len()];
+        assert!(XmpModel::synthetic_joint(&base, &plan, &bad, XmpConfig::default()).is_err());
+        let short = vec![8u32; plan.len() - 1];
+        assert!(XmpModel::synthetic_joint(&base, &plan, &short, XmpConfig::default()).is_err());
+    }
+
+    #[test]
     fn forward_runs_resnet8_and_kernels_agree() {
         let base = resnet::resnet_small(1, 10);
         let plan = uniform_plan(&base, 2);
@@ -490,13 +669,46 @@ mod tests {
         let img = vec![0.5f32; m.image_len()];
         let fast = m.forward(&packed, &img, true).unwrap();
         let refr = m.forward(&packed, &img, false).unwrap();
+        let plain = m.forward_kernel(&packed, &img, KernelPath::PlainI64).unwrap();
         assert_eq!(fast.len(), 10);
-        for (a, b) in fast.iter().zip(&refr) {
+        for ((a, b), c) in fast.iter().zip(&refr).zip(&plain) {
             assert_eq!(a.to_bits(), b.to_bits(), "fast/reference logits diverged");
+            assert_eq!(a.to_bits(), c.to_bits(), "fast/plain-i64 logits diverged");
         }
         // Deterministic across calls.
         let again = m.forward(&packed, &img, true).unwrap();
         assert_eq!(fast, again);
+    }
+
+    #[test]
+    fn forward_tracks_activation_precision_on_joint_models() {
+        // A joint (w, a) resnet-8: all three kernel paths stay
+        // bit-identical with narrowed activations flowing between layers
+        // (incl. the branch merges and the elided pool).
+        let base = resnet::resnet_small(1, 10);
+        let plan = uniform_plan(&base, 3);
+        let n = plan.len();
+        let aq: Vec<u32> = (0..n)
+            .map(|i| {
+                if i == 0 || i + 1 == n || base.layers[i].kind == LayerKind::Fc {
+                    8
+                } else {
+                    [3u32, 4, 6][i % 3]
+                }
+            })
+            .collect();
+        let m = XmpModel::synthetic_joint(&base, &plan, &aq, XmpConfig::default()).unwrap();
+        let packed = pack::pack_model(&m);
+        for img_val in [0.1f32, 0.5, 2.0] {
+            let img = vec![img_val; m.image_len()];
+            let fast = m.forward(&packed, &img, true).unwrap();
+            let refr = m.forward(&packed, &img, false).unwrap();
+            let plain = m.forward_kernel(&packed, &img, KernelPath::PlainI64).unwrap();
+            for ((a, b), c) in fast.iter().zip(&refr).zip(&plain) {
+                assert_eq!(a.to_bits(), b.to_bits());
+                assert_eq!(a.to_bits(), c.to_bits());
+            }
+        }
     }
 
     #[test]

@@ -1,25 +1,61 @@
-//! Digit-plane packing: lower LSQ-quantized weight codes into the layout
-//! the sliced kernels execute from.
+//! Digit-plane packing: lower LSQ-quantized weight codes **and** unsigned
+//! activations into the layouts the 2D-sliced kernels execute from.
 //!
-//! A group of `od` channels at word-length `wq` becomes `S = ceil(wq/k)`
-//! **digit planes**: plane `s` holds digit `s` of every `(channel, k)`
-//! weight, row-major per output channel. The digits are exactly
-//! [`crate::quant::slicing::slice_signed`]'s — low planes unsigned in
-//! `[0, 2^k)`, the top plane signed over the (possibly partial) remaining
-//! bits — so `Σ_s plane_s[i] · 2^{k·s}` reconstructs every code, and the
-//! fast GEMM's shift-add recombination is the two's-complement identity
-//! itself. Digits are stored in `i16` lanes (digit-granular, not sub-byte:
-//! the MAC loop reads one lane per operand); [`PackedGroup::packed_bits`]
-//! reports the equivalent at-rest bit-packed footprint, which is what the
-//! Table III models count.
+//! A group of `od` channels at word-length `wq` becomes `S_w = ceil(wq/k)`
+//! **weight digit planes**: plane `s` holds digit `s` of every
+//! `(channel, k)` weight, row-major per output channel. The digits are
+//! exactly [`crate::quant::slicing::slice_signed`]'s — low planes unsigned
+//! in `[0, 2^k)`, the top plane signed over the (possibly partial)
+//! remaining bits — so `Σ_s plane_s[i] · 2^{k·s}` reconstructs every code.
+//!
+//! Activations are the second operand of the paper's 2D-sliced MAC
+//! (Table IV's operand-slice axis applies to *both* sides): an im2col
+//! patch matrix at activation word-length `aq` becomes `S_a = ceil(aq/k)`
+//! **activation digit planes** via
+//! [`crate::quant::slicing::slice_unsigned`] — every plane unsigned, the
+//! top plane included ([`pack_activations`]). The fast GEMM accumulates
+//! over the `S_a × S_w` slice cross-product and recombines by shift-add at
+//! weight-shift + activation-shift, which is the two's-complement identity
+//! itself.
+//!
+//! Digits are stored in `i16` lanes (digit-granular, not sub-byte: the MAC
+//! loop reads one lane per operand); [`PackedGroup::packed_bits`] reports
+//! the equivalent at-rest bit-packed footprint, which is what the Table
+//! III models count.
+//!
+//! ## The i32 partial-sum bound
+//!
+//! The fast path accumulates each `(s_a, s_w)` pair's dot product in
+//! `i32`. A running partial is bounded by `kdim · a_max · w_max` where
+//! `a_max = 2^min(k,aq) − 1` (the widest unsigned activation digit) and
+//! `w_max = 2^min(k,wq) − 1` (the widest weight digit — the signed top
+//! digit's magnitude `2^{b−1}` never exceeds this), so the safe reduction
+//! depth is `max_kdim(wq, aq, k) = floor((2^31 − 1) / (a_max · w_max))`.
+//! The bound **shrinks as the digits widen**: the worst case
+//! `(wq, aq, k) = (8, 8, 8)` gives `255 · 255` and `kdim ≤ 33 025`
+//! (matching the old activation-unsliced constant), while e.g. `k = 2`
+//! digits (`3 · 3`) allow reductions ~7000× deeper. [`pack_group`] gates
+//! at the conservative `aq = 8` bound (activations never exceed 8 bit);
+//! the fast GEMM re-checks the exact `(wq, aq, k)` bound per call.
 
 use super::Requant;
-use crate::quant::slicing::{n_slices, slice_signed};
+use crate::quant::slicing::{n_slices, slice_digit_unsigned, slice_signed};
 
 /// Largest reduction depth (`K²·I_W`) the `i32` per-slice accumulators
-/// tolerate: `kdim · 255 · 255 < 2^31` with headroom. Every CNN in the
-/// repo is far below this (ResNet-152 peaks at 4608).
+/// tolerate in the worst digit-width case `(wq, aq, k) = (8, 8, 8)` —
+/// see [`max_kdim`] for the exact per-shape bound. Every CNN in the repo
+/// is far below this (ResNet-152 peaks at 4608).
 pub const MAX_KDIM: usize = 33_000;
+
+/// Exact safe reduction depth for the `i32` per-slice-pair partials of
+/// the fast GEMM: `floor((2^31 − 1) / (a_max · w_max))` with
+/// `a_max = 2^min(k,aq) − 1`, `w_max = 2^min(k,wq) − 1`.
+pub fn max_kdim(wq: u32, aq: u32, k: u32) -> usize {
+    assert!(wq >= 1 && aq >= 1 && k >= 1);
+    let a_max = (1u64 << k.min(aq).min(8)) - 1;
+    let w_max = (1u64 << k.min(wq).min(8)) - 1;
+    ((i32::MAX as u64) / (a_max * w_max).max(1)) as usize
+}
 
 /// One channel group's weights in digit-plane-major layout.
 #[derive(Clone, Debug)]
@@ -36,7 +72,8 @@ pub struct PackedGroup {
     pub kdim: usize,
     /// `n_slices` planes of `od * kdim` digits, row-major per channel.
     pub planes: Vec<Vec<i16>>,
-    /// Per-channel requantization (len `od`).
+    /// Per-channel requantization back to the layer's output activation
+    /// range (len `od`).
     pub requant: Vec<Requant>,
     /// Per-channel dequantization scale for logits (len `od`).
     pub scales: Vec<f32>,
@@ -75,12 +112,15 @@ pub fn pack_group(
 ) -> PackedGroup {
     assert_eq!(codes.len(), od * kdim, "codes must be od*kdim");
     assert_eq!(requant.len(), od, "one requantizer per channel");
+    // Conservative gate at the 8-bit-activation bound; the GEMM re-checks
+    // the exact (wq, aq, k) bound once the activation word-length is known.
     assert!(
-        kdim <= MAX_KDIM,
-        "reduction depth {kdim} exceeds the i32 accumulator bound {MAX_KDIM}"
+        kdim <= max_kdim(wq, 8, k),
+        "reduction depth {kdim} exceeds the i32 accumulator bound {} for (w{wq}, a8, k{k})",
+        max_kdim(wq, 8, k)
     );
-    // MAX_KDIM's overflow analysis assumes digits of at most 8 bits
-    // (kdim · 255 · 255 < 2^31); the widest digit is min(k, wq) bits.
+    // The i16 digit lanes (and the bound arithmetic) assume digits of at
+    // most 8 bits; the widest digit is min(k, wq) bits.
     assert!(
         wq.min(k) <= 8,
         "digit width {} bits exceeds the 8-bit bound the i32 partials assume",
@@ -102,6 +142,54 @@ pub fn pack_group(
         planes,
         requant,
         scales,
+    }
+}
+
+/// An im2col patch matrix lowered to unsigned activation digit planes —
+/// the activation operand of the 2D-sliced GEMM. Built once per layer and
+/// shared by every channel group slicing at the same digit width.
+#[derive(Clone, Debug)]
+pub struct SlicedActs {
+    /// Activation word-length (bits) the values were sliced at.
+    pub aq: u32,
+    /// Digit width (bits) — must match the weight planes' `k`.
+    pub k: u32,
+    /// im2col rows.
+    pub m: usize,
+    /// Reduction depth per row.
+    pub kdim: usize,
+    /// `ceil(aq/k)` planes of `m * kdim` unsigned digits, row-major.
+    pub planes: Vec<Vec<i16>>,
+}
+
+/// Slice an im2col patch matrix (`m × kdim`, unsigned values `< 2^aq`
+/// widened to `i16`) into `ceil(aq/k)` unsigned digit planes — exactly
+/// [`slice_digit_unsigned`]'s digits, the possibly-partial top plane
+/// unsigned too.
+pub fn pack_activations(cols: &[i16], m: usize, kdim: usize, aq: u32, k: u32) -> SlicedActs {
+    assert_eq!(cols.len(), m * kdim, "cols must be m*kdim");
+    assert!((1..=8).contains(&aq), "activation word-lengths are 1..=8 bit");
+    assert!(k >= 1, "digit width must be >= 1");
+    let s = n_slices(aq, k);
+    let mut planes = vec![vec![0i16; m * kdim]; s as usize];
+    for (idx, &x) in cols.iter().enumerate() {
+        debug_assert!(
+            x >= 0 && (x as u64) < (1u64 << aq),
+            "activation {x} out of unsigned {aq}-bit range"
+        );
+        if x == 0 {
+            continue; // padding taps stay zero in every plane
+        }
+        for si in 0..s {
+            planes[si as usize][idx] = slice_digit_unsigned(x as u64, aq, k, si) as i16;
+        }
+    }
+    SlicedActs {
+        aq,
+        k,
+        m,
+        kdim,
+        planes,
     }
 }
 
@@ -157,6 +245,7 @@ pub fn pack_model(m: &super::XmpModel) -> PackedModel {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::slicing::slice_unsigned;
     use crate::util::prop::{check, check_eq, forall};
 
     #[test]
@@ -199,6 +288,42 @@ mod tests {
     }
 
     #[test]
+    fn prop_activation_planes_reconstruct_values() {
+        // Σ_s plane_s[i] << k·s == cols[i] for every activation, every
+        // plane unsigned — the partial top digit included.
+        forall(500, |rng| {
+            let aq = 1 + rng.range(0, 8) as u32;
+            let k = *rng.choose(&[1u32, 2, 3, 4, 5, 8]);
+            let (m, kdim) = (1 + rng.range(0, 5), 1 + rng.range(0, 9));
+            let cols: Vec<i16> = (0..m * kdim)
+                .map(|_| rng.below(1u64 << aq) as i16)
+                .collect();
+            let a = pack_activations(&cols, m, kdim, aq, k);
+            check_eq(a.planes.len() as u32, n_slices(aq, k), "plane count")?;
+            for (idx, &x) in cols.iter().enumerate() {
+                let recon: i64 = a
+                    .planes
+                    .iter()
+                    .enumerate()
+                    .map(|(s, p)| (p[idx] as i64) << (k as usize * s))
+                    .sum();
+                check_eq(recon, x as i64, "activation plane reconstruction")?;
+                let digits = slice_unsigned(x as u64, aq, k);
+                for (s, &d) in digits.iter().enumerate() {
+                    check_eq(a.planes[s][idx] as i64, d, "digits are slice_unsigned's")?;
+                }
+            }
+            for p in &a.planes {
+                check(
+                    p.iter().all(|&d| (0..(1i16 << k.min(aq))).contains(&d)),
+                    "every activation digit must be unsigned",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn packed_bits_counts_wq_bits_per_weight() {
         // However a wq is sliced, the at-rest footprint is wq bits/weight.
         for (wq, k) in [(8u32, 2u32), (3, 2), (5, 3), (1, 4), (8, 8)] {
@@ -218,15 +343,41 @@ mod tests {
     }
 
     #[test]
+    fn max_kdim_shrinks_with_digit_magnitude() {
+        // Worst case (8,8,8): the old 255·255 constant's neighborhood.
+        assert_eq!(max_kdim(8, 8, 8), (i32::MAX as usize) / (255 * 255));
+        assert!(max_kdim(8, 8, 8) >= MAX_KDIM);
+        // Narrower digits (smaller k, or narrower operands) allow deeper
+        // reductions: the bound is monotone non-increasing in each width.
+        assert!(max_kdim(8, 8, 2) > 1_000_000);
+        assert!(max_kdim(2, 2, 8) > max_kdim(8, 8, 8));
+        assert!(max_kdim(8, 4, 8) > max_kdim(8, 8, 8));
+        for k in 1..=8u32 {
+            for wq in 1..=8u32 {
+                for aq in 1..=8u32 {
+                    let b = max_kdim(wq, aq, k);
+                    let a_max = (1u64 << k.min(aq)) - 1;
+                    let w_max = (1u64 << k.min(wq)) - 1;
+                    // The defining inequality, tight to within one unit.
+                    assert!(b as u64 * a_max * w_max <= i32::MAX as u64);
+                    assert!((b as u64 + 1) * a_max * w_max > i32::MAX as u64);
+                }
+            }
+        }
+    }
+
+    #[test]
     #[should_panic(expected = "i32 accumulator bound")]
     fn rejects_overflowing_reduction_depth() {
-        let codes = vec![0i32; MAX_KDIM + 1];
+        // Must exceed the aq = 8 worst-case bound for (w8, k8): 33 025.
+        let kdim = max_kdim(8, 8, 8) + 1;
+        let codes = vec![0i32; kdim];
         pack_group(
             &codes,
             1,
-            MAX_KDIM + 1,
+            kdim,
             8,
-            2,
+            8,
             vec![Requant::from_scale(0.5)],
             vec![1.0],
         );

@@ -1,34 +1,85 @@
 //! Integration tests for the xmp truly-mixed-precision execution engine:
-//! the sliced-digit kernels against a plain i64 ground truth across random
-//! (w, k, channel-split) plans, and the engine serving real traffic behind
-//! the gateway.
+//! the 2D-sliced kernels differentially tested against a plain i64 ground
+//! truth across random joint (wq, aq, k, channel-split) plans — via the
+//! reusable `util::prop::differential` harness (named kernels,
+//! failing-seed + minimized-input reporting on panic or mismatch) — and
+//! the engine serving real traffic behind the gateway, including a
+//! concurrent mixed-selector storm over a planned (wq, aq) family.
 
 use mpcnn::cnn::{resnet, ChannelGroup, LayerKind};
 use mpcnn::serving::{
     BatcherConfig, InferRequest, InferenceBackend, Server, VariantSelector, VariantSpec,
 };
-use mpcnn::util::prop::{check, check_eq, forall};
+use mpcnn::util::prop::{check, differential, forall};
 use mpcnn::util::rng::Rng;
 use mpcnn::xmp::conv::{conv_forward, conv_forward_i64};
 use mpcnn::xmp::pack::{pack_group, PackedLayer};
 use mpcnn::xmp::{GroupWeights, Requant, XmpBackend, XmpConfig, XmpLayer, XmpModel};
 
-/// Build a random conv layer with 1..=3 channel groups at independent
-/// word-lengths (the truly-mixed case), random codes within each group's
-/// signed range, and random requantizers.
-fn random_layer(rng: &mut Rng) -> (XmpLayer, u32) {
+/// Differential-fuzz case count: CI's `diff-fuzz-smoke` job raises this
+/// via `MPCNN_DIFF_CASES` for a deeper bounded run.
+fn diff_cases(default: u64) -> u64 {
+    std::env::var("MPCNN_DIFF_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// One differential case: a conv layer with 1..=3 channel groups at
+/// independent weight word-lengths, an input activation word-length, a
+/// digit width, and a concrete input map.
+#[derive(Clone, Debug)]
+struct ConvCase {
+    layer: XmpLayer,
+    /// Digit (operand-slice) width the packed kernels run at.
+    slice_k: u32,
+    /// Word-length of the input activations (values are `< 2^a_in`).
+    a_in: u32,
+    input: Vec<u8>,
+}
+
+impl ConvCase {
+    fn packed(&self) -> PackedLayer {
+        PackedLayer {
+            groups: self
+                .layer
+                .groups
+                .iter()
+                .map(|g| {
+                    pack_group(
+                        &g.codes,
+                        g.od as usize,
+                        self.layer.kdim(),
+                        g.wq,
+                        self.slice_k,
+                        g.requant.clone(),
+                        g.scales.clone(),
+                    )
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Build a random joint case: wq 1..=8 per group, aq 1..=8, every digit
+/// width that produces partial top digits on BOTH operands (e.g. w=3 at
+/// k=2, a=5 at k=3, a=7 at k=4), random codes within each group's signed
+/// range, random requantizers, input values `< 2^aq`.
+fn random_case(rng: &mut Rng) -> ConvCase {
     let ih = *rng.choose(&[1u32, 3, 4, 5, 7, 8]);
     let iw = 1 + rng.range(0, 5) as u32;
     let k = *rng.choose(&[1u32, 3]);
     let s = *rng.choose(&[1u32, 2]);
     let slice_k = *rng.choose(&[1u32, 2, 3, 4, 5, 8]);
+    let a_in = 1 + rng.range(0, 8) as u32;
+    let aq_out = 1 + rng.range(0, 8) as u32;
     let kdim = (k * k * iw) as usize;
     let n_groups = 1 + rng.range(0, 3);
     let mut groups = Vec::new();
     let mut od = 0u32;
     for _ in 0..n_groups {
-        // w spans 1..=8 so every slicing shape appears, including partial
-        // top digits (e.g. w=3 at k=2, w=5 at k=3, w=7 at k=4).
+        // wq spans 1..=8 so every slicing shape appears, incl. partial
+        // top digits against every a_in slicing.
         let wq = 1 + rng.range(0, 8) as u32;
         let god = 1 + rng.range(0, 4) as u32;
         let (lo, hi) = (-(1i64 << (wq - 1)), (1i64 << (wq - 1)) - 1);
@@ -36,7 +87,7 @@ fn random_layer(rng: &mut Rng) -> (XmpLayer, u32) {
             .map(|_| rng.range_i64(lo, hi) as i32)
             .collect();
         let requant: Vec<Requant> = (0..god)
-            .map(|_| Requant::from_scale(rng.uniform(1e-4, 1.0)))
+            .map(|_| Requant::from_scale_aq(rng.uniform(1e-4, 1.0), aq_out))
             .collect();
         od += god;
         groups.push(GroupWeights {
@@ -47,8 +98,12 @@ fn random_layer(rng: &mut Rng) -> (XmpLayer, u32) {
             scales: vec![0.01; god as usize],
         });
     }
-    (
-        XmpLayer {
+    let amax = (1i64 << a_in) - 1;
+    let input: Vec<u8> = (0..(ih * ih * iw) as usize)
+        .map(|_| rng.range_i64(0, amax) as u8)
+        .collect();
+    ConvCase {
+        layer: XmpLayer {
             name: "rand".into(),
             kind: LayerKind::Conv,
             ih,
@@ -56,48 +111,131 @@ fn random_layer(rng: &mut Rng) -> (XmpLayer, u32) {
             od,
             k,
             s,
+            aq: aq_out,
             groups,
         },
         slice_k,
-    )
+        a_in,
+        input,
+    }
+}
+
+/// Shrink candidates: drop a channel group, halve a group's channels,
+/// halve the spatial map (cropping the input to match), zero the tail of
+/// the input. The harness keeps whichever still reproduces the failure.
+fn shrink_case(c: &ConvCase) -> Vec<ConvCase> {
+    let mut out = Vec::new();
+    // Drop the last channel group.
+    if c.layer.groups.len() > 1 {
+        let mut s = c.clone();
+        let dropped = s.layer.groups.pop().unwrap();
+        s.layer.od -= dropped.od;
+        out.push(s);
+    }
+    // Halve the last group's channels.
+    if let Some(g) = c.layer.groups.last() {
+        if g.od > 1 {
+            let mut s = c.clone();
+            let kdim = s.layer.kdim();
+            let g = s.layer.groups.last_mut().unwrap();
+            let keep = (g.od / 2).max(1);
+            s.layer.od -= g.od - keep;
+            g.od = keep;
+            g.codes.truncate(keep as usize * kdim);
+            g.requant.truncate(keep as usize);
+            g.scales.truncate(keep as usize);
+            out.push(s);
+        }
+    }
+    // Halve the spatial map, cropping the input's top-left window.
+    if c.layer.ih > 1 {
+        let mut s = c.clone();
+        let (old_ih, iw) = (c.layer.ih as usize, c.layer.iw as usize);
+        let new_ih = old_ih / 2;
+        s.layer.ih = new_ih as u32;
+        let mut input = Vec::with_capacity(new_ih * new_ih * iw);
+        for y in 0..new_ih {
+            let row = &c.input[y * old_ih * iw..(y * old_ih + new_ih) * iw];
+            input.extend_from_slice(row);
+        }
+        s.input = input;
+        out.push(s);
+    }
+    // Zero the tail half of the input (sparser counterexample).
+    if c.input.iter().rev().take(c.input.len() / 2).any(|&v| v != 0) {
+        let mut s = c.clone();
+        let n = s.input.len();
+        for v in &mut s.input[n - n / 2..] {
+            *v = 0;
+        }
+        out.push(s);
+    }
+    out
 }
 
 #[test]
-fn prop_sliced_conv_bit_identical_to_plain_i64() {
-    // The PR's correctness anchor, end to end through im2col + grouped
-    // GEMM + requantize: for random layers mixing word-lengths 1..=8
-    // within one layer and random digit widths (partial top digits
-    // included), the fast path, the scalar reference kernel, and a plain
-    // i64 convolution produce the same u8 activations bit-for-bit.
-    forall(250, |rng| {
-        let (l, slice_k) = random_layer(rng);
-        let pl = PackedLayer {
-            groups: l
-                .groups
-                .iter()
-                .map(|g| {
-                    pack_group(
-                        &g.codes,
-                        g.od as usize,
-                        l.kdim(),
-                        g.wq,
-                        slice_k,
-                        g.requant.clone(),
-                        g.scales.clone(),
-                    )
-                })
-                .collect(),
-        };
-        let input: Vec<u8> = (0..(l.ih * l.ih * l.iw) as usize)
-            .map(|_| rng.range_i64(0, 255) as u8)
-            .collect();
-        let truth = conv_forward_i64(&input, &l);
-        check_eq(truth.len(), (l.oh() * l.oh() * l.od) as usize, "output shape")?;
-        let fast = conv_forward(&input, &l, &pl, true);
-        let refr = conv_forward(&input, &l, &pl, false);
-        check_eq(refr, truth.clone(), "scalar reference vs plain i64")?;
-        check_eq(fast, truth, "fast path vs plain i64")
-    });
+fn diff_fuzz_sliced_conv_bit_identical_to_plain_i64() {
+    // The PR's correctness anchor, end to end through im2col + grouped 2D
+    // GEMM + requantize, on the reusable differential harness: for random
+    // layers mixing weight word-lengths 1..=8 within one layer, random
+    // activation word-lengths 1..=8, and random digit widths (partial top
+    // digits on BOTH operands included), the fast path, the scalar
+    // reference kernel, and a plain i64 convolution produce the same u8
+    // activations bit-for-bit — and any divergence reports a minimized
+    // counterexample with its failing seed.
+    differential(
+        "xmp-conv-2d-sliced",
+        diff_cases(250),
+        random_case,
+        &[
+            ("plain-i64", &|c: &ConvCase| conv_forward_i64(&c.input, &c.layer)),
+            ("scalar-reference", &|c: &ConvCase| {
+                conv_forward(&c.input, c.a_in, &c.layer, &c.packed(), false)
+            }),
+            ("fast-digit-plane", &|c: &ConvCase| {
+                conv_forward(&c.input, c.a_in, &c.layer, &c.packed(), true)
+            }),
+        ],
+        shrink_case,
+    );
+}
+
+#[test]
+fn diff_fuzz_weight_only_aq8_reproduces_legacy_engine() {
+    // With a_in pinned to 8 the 2D datapath must be the same function the
+    // weight-only-sliced engine was — the plain-i64 truth never changed,
+    // so agreement here IS the old engine's property-test, ported onto
+    // the differential harness.
+    differential(
+        "xmp-conv-aq8-legacy",
+        diff_cases(120),
+        |rng| {
+            let mut c = random_case(rng);
+            // Pin the whole activation side to the legacy 8-bit point:
+            // full-range inputs, 255-clamping requantizers.
+            c.a_in = 8;
+            c.layer.aq = 8;
+            for g in &mut c.layer.groups {
+                for r in g.requant.iter_mut() {
+                    *r = Requant::from_scale(rng.uniform(1e-4, 1.0));
+                }
+            }
+            c.input = (0..c.input.len())
+                .map(|_| rng.range_i64(0, 255) as u8)
+                .collect();
+            c
+        },
+        &[
+            ("plain-i64", &|c: &ConvCase| conv_forward_i64(&c.input, &c.layer)),
+            ("scalar-reference", &|c: &ConvCase| {
+                conv_forward(&c.input, c.a_in, &c.layer, &c.packed(), false)
+            }),
+            ("fast-digit-plane", &|c: &ConvCase| {
+                conv_forward(&c.input, c.a_in, &c.layer, &c.packed(), true)
+            }),
+        ],
+        shrink_case,
+    );
 }
 
 #[test]
@@ -106,37 +244,17 @@ fn prop_channel_split_plans_execute_like_their_groups() {
     // conv of that group alone — interleaving groups into one output map
     // is layout, not arithmetic.
     forall(60, |rng| {
-        let (l, slice_k) = random_layer(rng);
-        let pl = PackedLayer {
-            groups: l
-                .groups
-                .iter()
-                .map(|g| {
-                    pack_group(
-                        &g.codes,
-                        g.od as usize,
-                        l.kdim(),
-                        g.wq,
-                        slice_k,
-                        g.requant.clone(),
-                        g.scales.clone(),
-                    )
-                })
-                .collect(),
-        };
-        let input: Vec<u8> = (0..(l.ih * l.ih * l.iw) as usize)
-            .map(|_| rng.range_i64(0, 255) as u8)
-            .collect();
-        let whole = conv_forward(&input, &l, &pl, true);
-        let od = l.od as usize;
+        let c = random_case(rng);
+        let whole = conv_forward(&c.input, c.a_in, &c.layer, &c.packed(), true);
+        let od = c.layer.od as usize;
         let mut base = 0usize;
-        for g in &l.groups {
+        for g in &c.layer.groups {
             let solo = XmpLayer {
                 od: g.od,
                 groups: vec![g.clone()],
-                ..l.clone()
+                ..c.layer.clone()
             };
-            let solo_out = conv_forward_i64(&input, &solo);
+            let solo_out = conv_forward_i64(&c.input, &solo);
             let god = g.od as usize;
             for (mi, row) in solo_out.chunks_exact(god).enumerate() {
                 let slice = &whole[mi * od + base..mi * od + base + god];
@@ -149,11 +267,11 @@ fn prop_channel_split_plans_execute_like_their_groups() {
 }
 
 fn xmp_factory(
-    wq: u32,
+    spec: VariantSpec,
 ) -> impl FnOnce() -> mpcnn::util::error::Result<Box<dyn InferenceBackend>> + Send + 'static {
     move || {
         let base = resnet::resnet_small(1, 10);
-        let b = XmpBackend::from_spec(&base, &VariantSpec::uniform(wq), XmpConfig::default())?;
+        let b = XmpBackend::from_spec(&base, &spec, XmpConfig::default())?;
         Ok(Box::new(b) as Box<dyn InferenceBackend>)
     }
 }
@@ -171,8 +289,8 @@ fn gateway_serves_real_sliced_digit_classes() {
         fpga_fps_sim: 0.0,
     };
     let server = Server::builder()
-        .variant(VariantSpec::uniform(2), bc, xmp_factory(2))
-        .variant(VariantSpec::uniform(8), bc, xmp_factory(8))
+        .variant(VariantSpec::uniform(2), bc, xmp_factory(VariantSpec::uniform(2)))
+        .variant(VariantSpec::uniform(8), bc, xmp_factory(VariantSpec::uniform(8)))
         .build()
         .unwrap();
     let probes = [
@@ -245,4 +363,111 @@ fn channelwise_spec_executes_mixed_groups_in_one_layer() {
     let l1 = b.infer_batch(&img, 1).unwrap();
     let l2 = b.infer_batch(&img, 1).unwrap();
     assert_eq!(l1, l2);
+}
+
+#[test]
+fn planned_joint_family_survives_concurrent_mixed_selector_storm() {
+    // The serving concurrency satellite: a planned (wq, aq) family —
+    // uniform joint variants plus a planner-style layerwise joint plan —
+    // under concurrent mixed-selector load. Every response must agree
+    // with an independently built reference copy of the variant that
+    // served it (the per-response "reference agreement" ledger entry),
+    // and Exact selectors must never fall back to another variant, storm
+    // or no storm.
+    let base = resnet::resnet_small(1, 10);
+    let n = base.layers.len();
+    let layerwise = VariantSpec::uniform(2).per_layer_plan(&base);
+    let layerwise_aq: Vec<u32> = (0..n)
+        .map(|i| {
+            if i == 0 || i + 1 == n || base.layers[i].kind == LayerKind::Fc {
+                8
+            } else {
+                [4u32, 6][i % 2]
+            }
+        })
+        .collect();
+    let specs = vec![
+        VariantSpec::uniform_joint(2, 4),
+        VariantSpec::uniform_joint(8, 8),
+        VariantSpec::planned("mpjoint", layerwise).with_layerwise_aq(layerwise_aq),
+    ];
+    let bc = BatcherConfig {
+        max_batch: 4,
+        max_wait: std::time::Duration::from_millis(1),
+        queue_capacity: 256,
+        fpga_fps_sim: 0.0,
+    };
+    let mut builder = Server::builder();
+    for s in &specs {
+        builder = builder.variant(s.clone(), bc, xmp_factory(s.clone()));
+    }
+    let server = builder.build().unwrap();
+    // Independent reference copies, one per variant (deterministic build).
+    let refs: Vec<(String, XmpBackend)> = specs
+        .iter()
+        .map(|s| {
+            (
+                s.name.clone(),
+                XmpBackend::from_spec(&base, s, XmpConfig::default()).unwrap(),
+            )
+        })
+        .collect();
+
+    const THREADS: usize = 4;
+    const PER_THREAD: usize = 24;
+    std::thread::scope(|sc| {
+        for t in 0..THREADS {
+            let server = &server;
+            let refs = &refs;
+            sc.spawn(move || {
+                let mut rng = Rng::new(0x57AB + t as u64);
+                // Per-response ledger: (variant, reference_agreed).
+                let mut ledger: Vec<(String, bool)> = Vec::with_capacity(PER_THREAD);
+                for i in 0..PER_THREAD {
+                    let img: Vec<f32> =
+                        (0..3072).map(|_| rng.uniform(0.0, 8.0) as f32).collect();
+                    // Mixed selectors: Exact on both uniform wqs, Named on
+                    // the layerwise plan, plus Default.
+                    let sel = match (t + i) % 4 {
+                        0 => VariantSelector::Exact(2),
+                        1 => VariantSelector::Exact(8),
+                        2 => VariantSelector::Named("mpjoint".into()),
+                        _ => VariantSelector::Default,
+                    };
+                    let resp = server
+                        .infer(InferRequest::new(img.clone()).with_variant(sel.clone()))
+                        .unwrap_or_else(|e| panic!("thread {t} req {i} failed: {e}"));
+                    // Exact selectors never fall back mid-storm.
+                    match &sel {
+                        VariantSelector::Exact(2) => assert_eq!(resp.variant, "w2a4"),
+                        VariantSelector::Exact(8) => assert_eq!(resp.variant, "w8"),
+                        VariantSelector::Named(name) => assert_eq!(&resp.variant, name),
+                        _ => {}
+                    }
+                    let reference = refs
+                        .iter()
+                        .find(|(name, _)| *name == resp.variant)
+                        .unwrap_or_else(|| panic!("unknown variant {}", resp.variant));
+                    let want = reference.1.classify_one(&img).unwrap();
+                    ledger.push((resp.variant.clone(), want == resp.class));
+                }
+                // EVERY ledger entry must record agreement.
+                for (variant, agreed) in &ledger {
+                    assert!(
+                        agreed,
+                        "thread {t}: response from '{variant}' disagreed with its \
+                         independent reference copy"
+                    );
+                }
+                // And the storm actually exercised all three variants.
+                for s in ["w2a4", "w8", "mpjoint"] {
+                    assert!(
+                        ledger.iter().any(|(v, _)| v == s),
+                        "thread {t} never reached variant {s}"
+                    );
+                }
+            });
+        }
+    });
+    server.shutdown();
 }
