@@ -97,6 +97,7 @@ fn main() -> Result<()> {
                 max_wait: Duration::from_millis(2),
                 queue_capacity: 256,
                 fpga_fps_sim: 0.0, // builder attaches the profile's DSE fps
+                ..Default::default()
             },
             move || Ok(Box::new(EngineBackend::load(&dir2, wq)?) as Box<dyn InferenceBackend>),
         );

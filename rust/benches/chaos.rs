@@ -1,0 +1,193 @@
+//! Bench chaos: serving latency and deadline-miss rate under fault
+//! injection, against the clean baseline on the identical mock family.
+//!
+//! Two configurations of the same three-variant gateway (retry ×3, 5 ms
+//! request deadlines) are driven with the same sequential request load:
+//! `clean` has no fault injector; `flaky` wraps the default variant in a
+//! [`FaultyBackend`] running the `flaky` scenario (15 % transient errors,
+//! 10 % latency spikes). The gap between the two p99s is the price of
+//! riding out the faults via re-routing retries; the deadline-miss rate is
+//! the fraction the stack could not save. `Bencher` rows track wave wall
+//! time; `BENCH_chaos.json` additionally records p50/p99 and miss rates so
+//! the robustness trajectory is tracked across PRs like the hotpath.
+
+use mpcnn::serving::{
+    BatcherConfig, FaultControls, FaultPlan, FaultyBackend, InferRequest, InferenceBackend,
+    MockBackend, RetryPolicy, Server, VariantProfile, VariantSpec,
+};
+use mpcnn::util::bench::Bencher;
+use mpcnn::util::json::Json;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const WAVE: usize = 64;
+const DEADLINE: Duration = Duration::from_millis(5);
+
+/// The e2e bench's mock ResNet-18 family (service time grows with
+/// precision); when `fault` is given, the default w2 variant is wrapped in
+/// the injector.
+fn family(fault: Option<(FaultPlan, Arc<FaultControls>)>) -> Server {
+    let mut builder = Server::builder().retry_policy(RetryPolicy::attempts(3));
+    for (wq, acc, fps, latency_us) in [
+        (2u32, 87.48, 245.0, 300u64),
+        (4, 89.10, 165.0, 600),
+        (8, 89.62, 47.0, 1200),
+    ] {
+        let fault = (wq == 2).then(|| fault.clone()).flatten();
+        builder = builder.variant_with_profile(
+            VariantSpec::uniform(wq),
+            VariantProfile {
+                top5_accuracy: Some(acc),
+                fpga_fps: fps,
+                fpga_mj_per_frame: 1.0,
+            },
+            BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                queue_capacity: 128,
+                fpga_fps_sim: 0.0,
+                ..Default::default()
+            },
+            move || {
+                let inner = Box::new(MockBackend::new(3072, 10, vec![1, 8], latency_us))
+                    as Box<dyn InferenceBackend>;
+                Ok(match &fault {
+                    Some((plan, controls)) => {
+                        Box::new(FaultyBackend::new(inner, plan.clone(), controls.clone()))
+                            as Box<dyn InferenceBackend>
+                    }
+                    None => inner,
+                })
+            },
+        );
+    }
+    builder.build().unwrap()
+}
+
+/// Drive one wave of deadline-carrying requests through the retrying
+/// `infer` path, appending per-request latency samples and counting
+/// deadline misses (shed, expired, or simply late).
+fn wave(server: &Server, samples_us: &mut Vec<f64>, misses: &mut u64, total: &mut u64) -> u64 {
+    let mut ok = 0u64;
+    for i in 0..WAVE {
+        let img = vec![(i % 10) as f32; 3072];
+        let t0 = Instant::now();
+        let r = server.infer(InferRequest::new(img).with_deadline(DEADLINE));
+        let el = t0.elapsed();
+        samples_us.push(el.as_micros() as f64);
+        *total += 1;
+        if r.is_err() || el > DEADLINE {
+            *misses += 1;
+        } else {
+            ok += 1;
+        }
+    }
+    ok
+}
+
+fn percentile(samples: &[f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.total_cmp(b));
+    s[(((s.len() - 1) as f64) * q).round() as usize]
+}
+
+fn side_json(samples: &[f64], misses: u64, total: u64) -> Json {
+    Json::obj(vec![
+        ("requests", Json::num(total as f64)),
+        ("p50_us", Json::num(percentile(samples, 0.50))),
+        ("p99_us", Json::num(percentile(samples, 0.99))),
+        (
+            "deadline_miss_rate",
+            Json::num(if total == 0 { 0.0 } else { misses as f64 / total as f64 }),
+        ),
+    ])
+}
+
+fn main() {
+    let mut b = Bencher::new();
+
+    // --- clean baseline ---
+    let server = family(None);
+    let mut clean_us = Vec::new();
+    let (mut clean_miss, mut clean_total) = (0u64, 0u64);
+    b.run(&format!("chaos/clean-{WAVE}req-wave"), || {
+        wave(&server, &mut clean_us, &mut clean_miss, &mut clean_total)
+    });
+    server.shutdown();
+
+    // --- flaky scenario on the default variant ---
+    let controls = FaultControls::new();
+    let server = family(Some((FaultPlan::scenario("flaky"), controls.clone())));
+    let mut flaky_us = Vec::new();
+    let (mut flaky_miss, mut flaky_total) = (0u64, 0u64);
+    b.run(&format!("chaos/flaky-{WAVE}req-wave"), || {
+        wave(&server, &mut flaky_us, &mut flaky_miss, &mut flaky_total)
+    });
+    let rc = server.robust_counters();
+    server.shutdown();
+
+    println!("\n== chaos summary ==");
+    for (label, us, miss, total) in [
+        ("clean", &clean_us, clean_miss, clean_total),
+        ("flaky", &flaky_us, flaky_miss, flaky_total),
+    ] {
+        println!(
+            "  {label}: {total} reqs  p50 {:.0} us  p99 {:.0} us  deadline-miss {:.2}%",
+            percentile(us, 0.50),
+            percentile(us, 0.99),
+            100.0 * miss as f64 / total.max(1) as f64,
+        );
+    }
+    println!(
+        "  injected: {} errors, {} latency spikes over {} calls; retried={} fallbacks={}",
+        controls.injected_errors(),
+        controls.injected_latency_spikes(),
+        controls.calls(),
+        rc.retried,
+        rc.fallbacks,
+    );
+
+    // BENCH_chaos.json: the Bencher rows plus the robustness metrics the
+    // rows alone cannot carry (percentiles, miss rates, injection ledger).
+    for r in &b.results {
+        println!("  {}", r.summary());
+    }
+    if std::env::var("MPCNN_BENCH_JSON").ok().as_deref() == Some("0") {
+        return;
+    }
+    let doc = Json::obj(vec![
+        (
+            "results",
+            b.to_json().get("results").cloned().unwrap_or(Json::Arr(Vec::new())),
+        ),
+        (
+            "chaos",
+            Json::obj(vec![
+                ("deadline_ms", Json::num(DEADLINE.as_millis() as f64)),
+                ("clean", side_json(&clean_us, clean_miss, clean_total)),
+                ("flaky", side_json(&flaky_us, flaky_miss, flaky_total)),
+                (
+                    "injected",
+                    Json::obj(vec![
+                        ("calls", Json::num(controls.calls() as f64)),
+                        ("errors", Json::num(controls.injected_errors() as f64)),
+                        (
+                            "latency_spikes",
+                            Json::num(controls.injected_latency_spikes() as f64),
+                        ),
+                    ]),
+                ),
+                ("retried", Json::num(rc.retried as f64)),
+                ("fallbacks", Json::num(rc.fallbacks as f64)),
+            ]),
+        ),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_chaos.json");
+    match std::fs::write(&path, doc.to_string_pretty()) {
+        Ok(()) => println!("  (wrote {})", path.display()),
+        Err(e) => eprintln!("  (could not write {}: {e})", path.display()),
+    }
+}

@@ -34,6 +34,7 @@ fn batcher(max_batch: usize) -> BatcherConfig {
         max_wait: Duration::from_millis(1),
         queue_capacity: 128,
         fpga_fps_sim: 0.0,
+        ..Default::default()
     }
 }
 

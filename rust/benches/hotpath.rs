@@ -86,6 +86,7 @@ fn main() {
                 max_wait: Duration::from_micros(0),
                 queue_capacity: 64,
                 fpga_fps_sim: 0.0,
+                ..Default::default()
             },
             || Ok(Box::new(MockBackend::new(64, 10, vec![1, 8], 0)) as Box<dyn InferenceBackend>),
         )

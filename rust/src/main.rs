@@ -8,7 +8,8 @@ use mpcnn::config::RunConfig;
 use mpcnn::report::{render_checks, tables};
 use mpcnn::runtime::{artifacts_dir, Engine, TestSet};
 use mpcnn::serving::{
-    BatcherConfig, EngineBackend, InferRequest, InferenceBackend, MockBackend, PendingResponse,
+    silence_injected_panics, BatcherConfig, EngineBackend, FaultControls, FaultPlan,
+    FaultyBackend, InferRequest, InferenceBackend, MockBackend, PendingResponse, RetryPolicy,
     Server, VariantProfile, VariantSelector, VariantSpec,
 };
 use mpcnn::util::cli::Args;
@@ -16,6 +17,7 @@ use mpcnn::util::rng::Rng;
 use mpcnn::xmp::{XmpBackend, XmpConfig};
 use mpcnn::{baselines, dse, sim};
 use std::collections::{BTreeMap, VecDeque};
+use std::sync::Arc;
 use std::time::Duration;
 
 const USAGE: &str = "\
@@ -48,6 +50,7 @@ SUBCOMMANDS
              name:NAME|min-accuracy:0.85|max-latency:20ms] [--batch 8]
              [--requests 256] [--window 64] [--artifacts DIR]
              [--backend auto|pjrt|xmp|mock] [--planned]
+             [--fault SCENARIO[:seed][@VARIANT]] [--retry N] [--deadline MS]
              host every listed precision variant in ONE gateway process and
              route a request stream across them; backend fallback order is
              PJRT (compiled artifacts) -> xmp (the native sliced-digit
@@ -58,7 +61,18 @@ SUBCOMMANDS
              precision planner's emitted Pareto family (layerwise plans
              included) on xmp backends instead of the uniform list; --aq N
              hosts every variant at activation word-length N (xmp engine
-             2D-slices both operands; requires --backend xmp/auto-xmp)
+             2D-slices both operands; requires --backend xmp/auto-xmp);
+             --fault wraps one variant (default: the first) in a seeded
+             fault-injecting backend — scenarios flaky|crashy|storm|dead|
+             latency|corrupt — and the supervisor/circuit-breaker keep the
+             gateway serving through it; --retry N allows up to N attempts
+             per request, re-routing policy-routed selectors to the
+             next-best healthy variant (exact:/name: never fall back);
+             --deadline MS attaches a per-request deadline — hopeless
+             requests are shed at admission or dequeue instead of wasting
+             backend time; robustness counters (shed, expired, panics,
+             worker restarts, retried, hedged, fallbacks) print after the
+             per-variant table
   classify   [--wq 4] [--aq 8] [--index 0] [--route exact:4] [--variants 4]
              [--backend auto|pjrt|xmp|mock]
              classify one testset image through the gateway; with
@@ -407,6 +421,66 @@ impl BackendKind {
     }
 }
 
+/// A variant backend factory as the gateway builders pass it around (the
+/// supervisor re-invokes it to rebuild a crashed backend).
+type Factory = Box<dyn Fn() -> Result<Box<dyn InferenceBackend>> + Send>;
+
+/// Parsed `--fault SCENARIO[:seed][@VARIANT]`: which variant (default: the
+/// first registered) gets its factory wrapped in a [`FaultyBackend`], and
+/// the shared controls/ledger that survive supervisor rebuilds.
+struct FaultArg {
+    plan: FaultPlan,
+    scenario: String,
+    variant: Option<String>,
+    controls: Arc<FaultControls>,
+}
+
+impl FaultArg {
+    fn parse(spec: &str) -> Result<FaultArg> {
+        let (plan_spec, variant) = match spec.split_once('@') {
+            Some((p, v)) => (p, Some(v.to_string())),
+            None => (spec, None),
+        };
+        Ok(FaultArg {
+            plan: FaultPlan::parse(plan_spec)?,
+            scenario: plan_spec.to_string(),
+            variant,
+            controls: FaultControls::new(),
+        })
+    }
+
+    /// Does the `index`-th registered variant named `name` get the fault?
+    fn targets(&self, name: &str, index: usize) -> bool {
+        match &self.variant {
+            Some(v) => v == name,
+            None => index == 0,
+        }
+    }
+
+    /// Wrap `inner` so every (re)built backend injects this plan through
+    /// the same shared controls — window scenarios keep progressing and
+    /// injection counts accumulate across supervisor restarts.
+    fn wrap(&self, inner: Factory) -> Factory {
+        let plan = self.plan.clone();
+        let controls = self.controls.clone();
+        Box::new(move || {
+            Ok(Box::new(FaultyBackend::new(inner()?, plan.clone(), controls.clone()))
+                as Box<dyn InferenceBackend>)
+        })
+    }
+
+    /// Fail loudly when `@VARIANT` named nobody: a chaos run that silently
+    /// injects nothing would report misleadingly clean numbers.
+    fn check_bound(&self, registered: &[String]) -> Result<()> {
+        if let Some(v) = &self.variant {
+            if !registered.iter().any(|n| n == v) {
+                bail!("--fault targets unknown variant '{v}' (hosted: {registered:?})");
+            }
+        }
+        Ok(())
+    }
+}
+
 /// What `serve`/`classify` built: the multi-variant gateway plus how to
 /// drive it.
 struct Gateway {
@@ -434,7 +508,7 @@ struct Gateway {
 /// quick small-budget `planner::plan` run on the ResNet-8 topology)
 /// instead of the uniform `--variants` list — every frontier point,
 /// layerwise/channelwise plans included, executes on its own xmp backend.
-fn build_planned_gateway() -> Result<Gateway> {
+fn build_planned_gateway(retry: RetryPolicy, fault: Option<&FaultArg>) -> Result<Gateway> {
     let base = resnet::resnet_small(1, 10);
     let cfg = RunConfig {
         slices: vec![2],
@@ -448,12 +522,36 @@ fn build_planned_gateway() -> Result<Gateway> {
     };
     let report = mpcnn::planner::plan(&base, &cfg, &pcfg)?;
     let xcfg = XmpConfig::default();
+    let variants = mpcnn::planner::emit_variants(&report);
+    if variants.is_empty() {
+        bail!("plan frontier is empty — nothing to serve");
+    }
     let mut xmp_refs = BTreeMap::new();
-    for v in mpcnn::planner::emit_variants(&report) {
+    let mut names = Vec::new();
+    // Registered by hand (rather than through planner::xmp_family_server)
+    // so one planned variant's factory can carry the fault wrapper and the
+    // builder the retry policy.
+    let mut builder = Server::builder().retry_policy(retry);
+    for (i, v) in variants.into_iter().enumerate() {
         xmp_refs.insert(v.spec.name.clone(), XmpBackend::from_spec(&base, &v.spec, xcfg)?);
+        names.push(v.spec.name.clone());
+        let base2 = base.clone();
+        let spec2 = v.spec.clone();
+        let inner: Factory = Box::new(move || {
+            Ok(Box::new(XmpBackend::from_spec(&base2, &spec2, xcfg)?)
+                as Box<dyn InferenceBackend>)
+        });
+        let factory = match fault {
+            Some(f) if f.targets(&v.spec.name, i) => f.wrap(inner),
+            _ => inner,
+        };
+        builder = builder.variant_with_profile(v.spec, v.profile, v.batcher, factory);
+    }
+    if let Some(f) = fault {
+        f.check_bound(&names)?;
     }
     Ok(Gateway {
-        server: mpcnn::planner::xmp_family_server(&report, &base, xcfg)?,
+        server: builder.build()?,
         testset: None,
         backend: BackendKind::Xmp,
         image_len: (base.input_hw * base.input_hw * base.input_channels) as usize,
@@ -468,6 +566,8 @@ fn build_gateway(
     aq: u32,
     max_batch: usize,
     kind: BackendKind,
+    retry: RetryPolicy,
+    fault: Option<&FaultArg>,
 ) -> Result<Gateway> {
     if wqs.is_empty() {
         bail!("--variants must name at least one word-length");
@@ -537,8 +637,9 @@ fn build_gateway(
     // executes (synthetic xmp weights have no use for mismatched images).
     let testset = testset.filter(|ts| ts.h * ts.w * ts.c == image_len);
     let mut xmp_refs = BTreeMap::new();
-    let mut builder = Server::builder();
-    for &wq in wqs {
+    let mut names = Vec::new();
+    let mut builder = Server::builder().retry_policy(retry);
+    for (i, &wq) in wqs.iter().enumerate() {
         let spec = VariantSpec::uniform_joint(wq, aq);
         let profile = VariantProfile::from_dse(&spec, &base, &cfg, "ResNet-18");
         let bc = BatcherConfig {
@@ -546,13 +647,14 @@ fn build_gateway(
             max_wait: Duration::from_millis(2),
             queue_capacity: 256,
             fpga_fps_sim: profile.fpga_fps,
+            ..Default::default()
         };
-        match backend {
+        let inner: Factory = match backend {
             BackendKind::Pjrt => {
                 let dir2 = dir.to_path_buf();
-                builder = builder.variant_with_profile(spec, profile, bc, move || {
+                Box::new(move || {
                     Ok(Box::new(EngineBackend::load(&dir2, wq)?) as Box<dyn InferenceBackend>)
-                });
+                })
             }
             BackendKind::Xmp => {
                 let xcfg = XmpConfig::default();
@@ -562,23 +664,32 @@ fn build_gateway(
                 );
                 let base2 = base.clone();
                 let spec2 = spec.clone();
-                builder = builder.variant_with_profile(spec, profile, bc, move || {
+                Box::new(move || {
                     Ok(Box::new(XmpBackend::from_spec(&base2, &spec2, xcfg)?)
                         as Box<dyn InferenceBackend>)
-                });
+                })
             }
             _ => {
                 let latency_us = (1e6 / profile.fpga_fps.max(1.0)).clamp(100.0, 20_000.0) as u64;
-                builder = builder.variant_with_profile(spec, profile, bc, move || {
+                Box::new(move || {
                     Ok(Box::new(MockBackend::new(
                         image_len,
                         classes,
                         vec![1, max_batch.max(1)],
                         latency_us,
                     )) as Box<dyn InferenceBackend>)
-                });
+                })
             }
-        }
+        };
+        names.push(spec.name.clone());
+        let factory = match fault {
+            Some(f) if f.targets(&spec.name, i) => f.wrap(inner),
+            _ => inner,
+        };
+        builder = builder.variant_with_profile(spec, profile, bc, factory);
+    }
+    if let Some(f) = fault {
+        f.check_bound(&names)?;
     }
     Ok(Gateway {
         server: builder.build()?,
@@ -607,6 +718,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let route_spec = args.get_or("route", "mixed");
     let kind = BackendKind::parse(&args.get_or("backend", "auto"))?;
     let planned = args.has_flag("planned");
+    let retry = RetryPolicy::attempts(args.get_u64("retry", 1).min(16) as u32);
+    let deadline_ms = args.get_u64("deadline", 0);
+    let fault = match args.get("fault") {
+        Some(spec) => {
+            // Injected crashes are expected and fully accounted for in the
+            // metrics; keep the console for the actual report.
+            silence_injected_panics();
+            Some(FaultArg::parse(&spec)?)
+        }
+        None => None,
+    };
 
     let gw = if planned {
         if !matches!(kind, BackendKind::Auto | BackendKind::Xmp) {
@@ -621,9 +743,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
                  configs; ignoring --variants/--aq/--batch/--artifacts)"
             );
         }
-        build_planned_gateway()?
+        build_planned_gateway(retry, fault.as_ref())?
     } else {
-        build_gateway(&dir, &wqs, aq, max_batch, kind)?
+        build_gateway(&dir, &wqs, aq, max_batch, kind, retry, fault.as_ref())?
     };
     println!(
         "gateway up: {} variants {:?} on {} backends\n",
@@ -631,6 +753,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         gw.server.variant_names(),
         gw.backend.label(),
     );
+    if let Some(f) = &fault {
+        let target = f
+            .variant
+            .clone()
+            .unwrap_or_else(|| gw.server.variant_names()[0].clone());
+        println!(
+            "fault injection armed: scenario '{}' on variant '{target}' \
+             (supervisor + circuit breaker keep the gateway serving)\n",
+            f.scenario
+        );
+    }
     if gw.backend == BackendKind::Xmp {
         println!(
             "xmp: every variant verified fast path == scalar reference on its warm-up \
@@ -671,16 +804,35 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Image(Vec<f32>),
     }
 
+    type Pending = (PendingResponse, Truth, VariantSelector, Vec<f32>);
+
     // Drain only *waits* on the oldest response inside the timed window;
     // correctness verification (which on xmp re-runs a full reference
     // forward per response) happens after the clock stops, so the printed
-    // throughput measures the gateway, not the self-check.
-    let drain = |inflight: &mut VecDeque<(PendingResponse, Truth)>,
-                 completed: &mut Vec<(mpcnn::serving::Response, Truth)>,
-                 failed: &mut usize| {
-        if let Some((p, truth)) = inflight.pop_front() {
+    // throughput measures the gateway, not the self-check. With --retry,
+    // a failed response is re-driven through `Server::infer`, the
+    // policy-aware path that re-routes onto the next-best healthy variant.
+    let retry_on_fail = retry.max_attempts > 1;
+    let mut retried_ok = 0usize;
+    let mut drain = |inflight: &mut VecDeque<Pending>,
+                     completed: &mut Vec<(mpcnn::serving::Response, Truth)>,
+                     failed: &mut usize| {
+        if let Some((p, truth, sel, img)) = inflight.pop_front() {
             match p.wait() {
                 Ok(r) => completed.push((r, truth)),
+                Err(_) if retry_on_fail => {
+                    let mut req = InferRequest::new(img).with_variant(sel);
+                    if deadline_ms > 0 {
+                        req = req.with_deadline(Duration::from_millis(deadline_ms));
+                    }
+                    match gw.server.infer(req) {
+                        Ok(r) => {
+                            retried_ok += 1;
+                            completed.push((r, truth));
+                        }
+                        Err(_) => *failed += 1,
+                    }
+                }
                 Err(_) => *failed += 1,
             }
         }
@@ -689,7 +841,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let xmp = gw.backend == BackendKind::Xmp;
     let mut rng = Rng::new(42);
     let (mut failed, mut route_errors) = (0usize, 0usize);
-    let mut inflight: VecDeque<(PendingResponse, Truth)> = VecDeque::new();
+    let mut inflight: VecDeque<Pending> = VecDeque::new();
     let mut completed: Vec<(mpcnn::serving::Response, Truth)> = Vec::with_capacity(n_requests);
     let started = std::time::Instant::now();
     for i in 0..n_requests {
@@ -715,8 +867,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Truth::Label(label)
         };
         let sel = schedule[i % schedule.len()].clone();
-        match gw.server.submit(InferRequest::new(img).with_variant(sel)) {
-            Ok(p) => inflight.push_back((p, truth)),
+        let mut req = InferRequest::new(img.clone()).with_variant(sel.clone());
+        if deadline_ms > 0 {
+            req = req.with_deadline(Duration::from_millis(deadline_ms));
+        }
+        match gw.server.submit(req) {
+            Ok(p) => inflight.push_back((p, truth, sel, img)),
             Err(e) => {
                 route_errors += 1;
                 if route_errors <= 3 {
@@ -770,6 +926,38 @@ fn cmd_serve(args: &Args) -> Result<()> {
         done as f64 / wall.as_secs_f64().max(1e-9),
         wall.as_secs_f64()
     );
+
+    // Robustness ledger: worker-side counters summed over variants, plus
+    // the server-level retry/hedge counters and (if armed) the injector's
+    // own account of what it did.
+    let (mut shed, mut expired, mut panics, mut restarts) = (0u64, 0u64, 0u64, 0u64);
+    for (_, m) in gw.server.metrics_all() {
+        shed += m.shed();
+        expired += m.shed_expired;
+        panics += m.panics;
+        restarts += m.worker_restarts;
+    }
+    let rc = gw.server.robust_counters();
+    println!(
+        "robustness: shed={shed} (expired-at-dequeue {expired}) panics={panics} \
+         worker-restarts={restarts} retried={} hedged={} hedge-wins={} fallbacks={} \
+         client-retries-recovered={retried_ok}",
+        rc.retried, rc.hedged, rc.hedge_wins, rc.fallbacks
+    );
+    if let Some(f) = &fault {
+        let c = &f.controls;
+        println!(
+            "fault '{}': {} backend calls seen, {} faults injected \
+             (errors {}, panics {}, latency spikes {}, corruptions {})",
+            f.scenario,
+            c.calls(),
+            c.injected_total(),
+            c.injected_errors(),
+            c.injected_panics(),
+            c.injected_latency_spikes(),
+            c.injected_corruptions(),
+        );
+    }
     Ok(())
 }
 
@@ -790,7 +978,7 @@ fn cmd_classify(args: &Args) -> Result<()> {
     };
     let kind = BackendKind::parse(&args.get_or("backend", "auto"))?;
     let aq = args.get_u64("aq", 8) as u32;
-    let gw = build_gateway(&dir, &wqs, aq, 1, kind)?;
+    let gw = build_gateway(&dir, &wqs, aq, 1, kind, RetryPolicy::default(), None)?;
     let (img, label) = match &gw.testset {
         Some(ts) => {
             if index >= ts.n {

@@ -62,14 +62,17 @@ impl Quantizer {
         Quantizer { params, gamma }
     }
 
-    /// LSQ initialization: γ = 2·E[|v|] / sqrt(Q_p) (Esser et al. §3).
+    /// LSQ initialization: γ = 2·E[|v|] / sqrt(max(Q_p, 1)) (Esser et al.
+    /// §3). The clamp covers 1-bit signed weights, whose code set {-1, 0}
+    /// has Q_p = 0 — the unclamped formula degenerates to γ = ∞ and every
+    /// downstream statistic (noise power, planner proxy) to NaN.
     pub fn init_from_data(params: QuantParams, data: &[f64]) -> Quantizer {
         let mean_abs = if data.is_empty() {
             1.0
         } else {
             data.iter().map(|v| v.abs()).sum::<f64>() / data.len() as f64
         };
-        let gamma = (2.0 * mean_abs / (params.qp() as f64).sqrt()).max(1e-9);
+        let gamma = (2.0 * mean_abs / (params.qp() as f64).max(1.0).sqrt()).max(1e-9);
         Quantizer::new(params, gamma)
     }
 

@@ -1,0 +1,500 @@
+//! Deterministic fault injection for the serving gateway.
+//!
+//! [`FaultyBackend`] wraps any [`InferenceBackend`] and injects latency
+//! spikes, transient/persistent errors, panics, and corrupt logits
+//! according to a [`FaultPlan`] — a schedule of call-window rules drawn
+//! from a seeded RNG, so a scenario replays identically run after run.
+//! The wrapper shares its call counter and live override switch through an
+//! [`Arc<FaultControls>`]: the counter survives supervisor-driven backend
+//! rebuilds (a window-based scenario keeps progressing across restarts),
+//! and tests flip the override to force a persistent fault and later lift
+//! it to watch the variant recover without a server restart.
+//!
+//! Panics are raised with a typed [`InjectedPanic`] payload so test
+//! binaries can install a panic hook that silences exactly these panics
+//! and no others.
+
+use crate::anyhow;
+use crate::serving::backend::{BackendHealth, InferenceBackend};
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// What a matching [`FaultRule`] does to the call.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// Return a backend error (feeds `ERRORS_TO_UNAVAILABLE`).
+    Error,
+    /// Panic with an [`InjectedPanic`] payload (exercises `catch_unwind`
+    /// isolation and the supervisor).
+    Panic,
+    /// Sleep before delegating (latency spike; the call still succeeds).
+    Latency(Duration),
+    /// Delegate, then rotate each logit row by one so the argmax lands on
+    /// the wrong class (silent corruption — caught only by end-to-end
+    /// agreement checks, never by the health machinery).
+    Corrupt,
+}
+
+/// One scheduled fault: applies to calls in `[from, to)` with probability
+/// `prob` (per call, drawn deterministically from the plan seed).
+#[derive(Clone, Copy, Debug)]
+pub struct FaultRule {
+    pub from: u64,
+    /// Exclusive upper call index; `u64::MAX` means "forever".
+    pub to: u64,
+    pub kind: FaultKind,
+    pub prob: f64,
+}
+
+impl FaultRule {
+    /// A rule active from call 0 forever.
+    pub fn always(kind: FaultKind, prob: f64) -> FaultRule {
+        FaultRule { from: 0, to: u64::MAX, kind, prob }
+    }
+
+    /// A rule active for calls in `[from, to)`.
+    pub fn window(from: u64, to: u64, kind: FaultKind, prob: f64) -> FaultRule {
+        FaultRule { from, to, kind, prob }
+    }
+}
+
+/// A seeded schedule of fault rules. The first rule that is active for the
+/// call index *and* wins its probability draw fires; at most one fault is
+/// injected per call.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    pub rules: Vec<FaultRule>,
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    pub fn new(rules: Vec<FaultRule>, seed: u64) -> FaultPlan {
+        FaultPlan { rules, seed }
+    }
+
+    /// Named scenarios the CLI exposes (`--fault <name>`):
+    ///
+    /// - `flaky`: 15% transient errors + 10% 2 ms latency spikes, forever.
+    /// - `crashy`: 8% panics, forever.
+    /// - `storm`: a burst — calls 8..40 panic at 60% and error at 30%,
+    ///   then the backend is clean again (recovery is observable).
+    /// - `dead`: every call errors (persistent outage).
+    /// - `latency`: 30% 5 ms spikes.
+    /// - `corrupt`: 25% silently-wrong logits.
+    pub fn scenario(name: &str) -> Option<FaultPlan> {
+        let rules = match name {
+            "flaky" => vec![
+                FaultRule::always(FaultKind::Error, 0.15),
+                FaultRule::always(FaultKind::Latency(Duration::from_millis(2)), 0.10),
+            ],
+            "crashy" => vec![FaultRule::always(FaultKind::Panic, 0.08)],
+            "storm" => vec![
+                FaultRule::window(8, 40, FaultKind::Panic, 0.60),
+                FaultRule::window(8, 40, FaultKind::Error, 0.30),
+            ],
+            "dead" => vec![FaultRule::always(FaultKind::Error, 1.0)],
+            "latency" => vec![FaultRule::always(
+                FaultKind::Latency(Duration::from_millis(5)),
+                0.30,
+            )],
+            "corrupt" => vec![FaultRule::always(FaultKind::Corrupt, 0.25)],
+            _ => return None,
+        };
+        Some(FaultPlan::new(rules, 0xFA17))
+    }
+
+    /// Parse `name` or `name:seed` (e.g. `flaky:42`). Unknown names list
+    /// the available scenarios in the error.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let (name, seed) = match spec.split_once(':') {
+            Some((n, s)) => {
+                let seed = s
+                    .parse::<u64>()
+                    .map_err(|_| anyhow!("fault scenario seed must be an integer: {s:?}"))?;
+                (n, Some(seed))
+            }
+            None => (spec, None),
+        };
+        let mut plan = FaultPlan::scenario(name).ok_or_else(|| {
+            anyhow!(
+                "unknown fault scenario {name:?} \
+                 (available: flaky, crashy, storm, dead, latency, corrupt)"
+            )
+        })?;
+        if let Some(seed) = seed {
+            plan.seed = seed;
+        }
+        Ok(plan)
+    }
+}
+
+/// Live override a test (or operator) can flip while the backend serves.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Forced {
+    /// No override: the plan's schedule applies.
+    None,
+    /// Every call panics.
+    Panic,
+    /// Every call errors.
+    Error,
+    /// Every call corrupts its logits.
+    Corrupt,
+}
+
+impl Forced {
+    fn as_u8(self) -> u8 {
+        match self {
+            Forced::None => 0,
+            Forced::Panic => 1,
+            Forced::Error => 2,
+            Forced::Corrupt => 3,
+        }
+    }
+
+    fn from_u8(v: u8) -> Forced {
+        match v {
+            1 => Forced::Panic,
+            2 => Forced::Error,
+            3 => Forced::Corrupt,
+            _ => Forced::None,
+        }
+    }
+}
+
+/// Shared state of one injected variant: survives backend rebuilds (the
+/// factory re-wraps a fresh inner backend around the *same* controls) and
+/// doubles as the test's remote control + injection ledger.
+#[derive(Debug, Default)]
+pub struct FaultControls {
+    calls: AtomicU64,
+    forced: AtomicU8,
+    errors: AtomicU64,
+    panics: AtomicU64,
+    latency_spikes: AtomicU64,
+    corruptions: AtomicU64,
+}
+
+impl FaultControls {
+    pub fn new() -> Arc<FaultControls> {
+        Arc::new(FaultControls::default())
+    }
+
+    /// Force (or lift, with [`Forced::None`]) a persistent fault.
+    pub fn force(&self, f: Forced) {
+        self.forced.store(f.as_u8(), Ordering::SeqCst);
+    }
+
+    pub fn forced(&self) -> Forced {
+        Forced::from_u8(self.forced.load(Ordering::SeqCst))
+    }
+
+    /// Total `infer_batch` calls seen across all backend incarnations.
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::SeqCst)
+    }
+
+    pub fn injected_errors(&self) -> u64 {
+        self.errors.load(Ordering::SeqCst)
+    }
+
+    pub fn injected_panics(&self) -> u64 {
+        self.panics.load(Ordering::SeqCst)
+    }
+
+    pub fn injected_latency_spikes(&self) -> u64 {
+        self.latency_spikes.load(Ordering::SeqCst)
+    }
+
+    pub fn injected_corruptions(&self) -> u64 {
+        self.corruptions.load(Ordering::SeqCst)
+    }
+
+    /// Total faults injected, any kind.
+    pub fn injected_total(&self) -> u64 {
+        self.injected_errors()
+            + self.injected_panics()
+            + self.injected_latency_spikes()
+            + self.injected_corruptions()
+    }
+}
+
+/// Typed panic payload for injected panics, so a test binary's panic hook
+/// can silence exactly these (`payload.downcast_ref::<InjectedPanic>()`)
+/// without hiding real failures.
+#[derive(Debug)]
+pub struct InjectedPanic(pub String);
+
+/// Install a process-wide panic hook that silences the default "thread
+/// panicked" stderr report for [`InjectedPanic`] payloads only — real
+/// panics still print. Idempotent; used by chaos tests and
+/// `mpcnn serve --fault` so injected crashes don't spam the console
+/// (they are fully accounted for in the metrics).
+pub fn silence_injected_panics() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let default = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if info.payload().downcast_ref::<InjectedPanic>().is_none() {
+                default(info);
+            }
+        }));
+    });
+}
+
+/// A fault-injecting wrapper around any inference backend.
+///
+/// Capability calls (`batch_sizes`, `image_len`, `classes`, `warmup`,
+/// `health`) delegate untouched — faults apply only to `infer_batch`, the
+/// path the batcher exercises per batch.
+pub struct FaultyBackend {
+    inner: Box<dyn InferenceBackend>,
+    plan: FaultPlan,
+    controls: Arc<FaultControls>,
+}
+
+impl FaultyBackend {
+    pub fn new(
+        inner: Box<dyn InferenceBackend>,
+        plan: FaultPlan,
+        controls: Arc<FaultControls>,
+    ) -> FaultyBackend {
+        FaultyBackend { inner, plan, controls }
+    }
+
+    pub fn controls(&self) -> Arc<FaultControls> {
+        self.controls.clone()
+    }
+
+    /// The fault (if any) call number `call` injects: the forced override
+    /// first, else the first schedule rule that is active and wins its
+    /// deterministic per-call draw.
+    fn decide(&self, call: u64) -> Option<FaultKind> {
+        match self.controls.forced() {
+            Forced::Panic => return Some(FaultKind::Panic),
+            Forced::Error => return Some(FaultKind::Error),
+            Forced::Corrupt => return Some(FaultKind::Corrupt),
+            Forced::None => {}
+        }
+        // One RNG per (seed, call): replays identically regardless of how
+        // calls interleave with rebuilds, and rules draw in a fixed order.
+        let mut rng = Rng::new(self.plan.seed ^ call.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        for rule in &self.plan.rules {
+            if call >= rule.from && call < rule.to && rng.chance(rule.prob) {
+                return Some(rule.kind);
+            }
+        }
+        None
+    }
+
+    /// Rotate each `classes`-wide logit row left by one: the argmax moves
+    /// to a different class, deterministically, without NaN/Inf games.
+    fn corrupt_rows(&self, logits: &mut [f32]) {
+        let classes = self.inner.classes().max(1);
+        for row in logits.chunks_exact_mut(classes) {
+            row.rotate_left(1);
+        }
+    }
+}
+
+impl InferenceBackend for FaultyBackend {
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.inner.batch_sizes()
+    }
+
+    fn supports_batch(&self, n: usize) -> bool {
+        self.inner.supports_batch(n)
+    }
+
+    fn image_len(&self) -> usize {
+        self.inner.image_len()
+    }
+
+    fn classes(&self) -> usize {
+        self.inner.classes()
+    }
+
+    fn infer_batch(&self, images: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let call = self.controls.calls.fetch_add(1, Ordering::SeqCst);
+        match self.decide(call) {
+            Some(FaultKind::Error) => {
+                self.controls.errors.fetch_add(1, Ordering::SeqCst);
+                Err(anyhow!("injected fault: error on call {call}"))
+            }
+            Some(FaultKind::Panic) => {
+                self.controls.panics.fetch_add(1, Ordering::SeqCst);
+                std::panic::panic_any(InjectedPanic(format!(
+                    "injected fault: panic on call {call}"
+                )))
+            }
+            Some(FaultKind::Latency(d)) => {
+                self.controls.latency_spikes.fetch_add(1, Ordering::SeqCst);
+                std::thread::sleep(d);
+                self.inner.infer_batch(images, batch)
+            }
+            Some(FaultKind::Corrupt) => {
+                self.controls.corruptions.fetch_add(1, Ordering::SeqCst);
+                let mut logits = self.inner.infer_batch(images, batch)?;
+                self.corrupt_rows(&mut logits);
+                Ok(logits)
+            }
+            None => self.inner.infer_batch(images, batch),
+        }
+    }
+
+    /// Warm-up is never injected: a scenario describes serving-time faults,
+    /// and startup must succeed so the variant can begin taking traffic.
+    fn warmup(&self) -> Result<()> {
+        self.inner.warmup()
+    }
+
+    fn health(&self) -> BackendHealth {
+        self.inner.health()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::backend::MockBackend;
+
+    fn wrapped(plan: FaultPlan) -> (FaultyBackend, Arc<FaultControls>) {
+        let controls = FaultControls::new();
+        let inner = Box::new(MockBackend::new(4, 3, vec![1, 2, 4], 0));
+        let b = FaultyBackend::new(inner, plan, controls.clone());
+        (b, controls)
+    }
+
+    #[test]
+    fn clean_plan_is_transparent() {
+        let (b, c) = wrapped(FaultPlan::default());
+        assert_eq!(b.image_len(), 4);
+        assert_eq!(b.classes(), 3);
+        assert!(b.supports_batch(2));
+        b.warmup().unwrap();
+        let img = vec![2.0f32; 4];
+        let logits = b.infer_batch(&img, 1).unwrap();
+        assert_eq!(logits, vec![0.0, 0.0, 1.0]);
+        assert_eq!(c.calls(), 1);
+        assert_eq!(c.injected_total(), 0);
+    }
+
+    #[test]
+    fn dead_scenario_errors_every_call() {
+        let (b, c) = wrapped(FaultPlan::scenario("dead").unwrap());
+        let img = vec![0.0f32; 4];
+        for _ in 0..5 {
+            assert!(b.infer_batch(&img, 1).is_err());
+        }
+        assert_eq!(c.injected_errors(), 5);
+        assert_eq!(b.health(), BackendHealth::Healthy, "inner is fine");
+    }
+
+    #[test]
+    fn scenarios_are_deterministic_in_seed() {
+        let run = |seed: u64| {
+            let mut plan = FaultPlan::scenario("flaky").unwrap();
+            plan.seed = seed;
+            let (b, c) = wrapped(plan);
+            let img = vec![0.0f32; 4];
+            let outcomes: Vec<bool> =
+                (0..64).map(|_| b.infer_batch(&img, 1).is_ok()).collect();
+            (outcomes, c.injected_total())
+        };
+        let (a1, n1) = run(7);
+        let (a2, n2) = run(7);
+        assert_eq!(a1, a2, "same seed, same fault schedule");
+        assert_eq!(n1, n2);
+        assert!(n1 > 0, "flaky over 64 calls must inject something");
+        let (a3, _) = run(8);
+        assert_ne!(a1, a3, "different seed, different schedule");
+    }
+
+    #[test]
+    fn window_rules_expire() {
+        let plan = FaultPlan::new(
+            vec![FaultRule::window(2, 4, FaultKind::Error, 1.0)],
+            0,
+        );
+        let (b, c) = wrapped(plan);
+        let img = vec![0.0f32; 4];
+        let ok: Vec<bool> = (0..6).map(|_| b.infer_batch(&img, 1).is_ok()).collect();
+        assert_eq!(ok, vec![true, true, false, false, true, true]);
+        assert_eq!(c.injected_errors(), 2);
+    }
+
+    #[test]
+    fn call_counter_survives_rebuild() {
+        // The supervisor re-creates the backend from the factory; a shared
+        // FaultControls keeps window scenarios progressing.
+        let plan = FaultPlan::new(
+            vec![FaultRule::window(0, 3, FaultKind::Error, 1.0)],
+            0,
+        );
+        let controls = FaultControls::new();
+        let img = vec![0.0f32; 4];
+        for round in 0..2 {
+            let inner = Box::new(MockBackend::new(4, 3, vec![1], 0));
+            let b = FaultyBackend::new(inner, plan.clone(), controls.clone());
+            let r = b.infer_batch(&img, 1);
+            let s = b.infer_batch(&img, 1);
+            if round == 0 {
+                assert!(r.is_err() && s.is_err());
+            } else {
+                assert!(r.is_err(), "call 2 still inside the window");
+                assert!(s.is_ok(), "call 3 is past the window");
+            }
+        }
+        assert_eq!(controls.calls(), 4);
+    }
+
+    #[test]
+    fn forced_override_and_recovery() {
+        let (b, c) = wrapped(FaultPlan::default());
+        let img = vec![0.0f32; 4];
+        assert!(b.infer_batch(&img, 1).is_ok());
+        c.force(Forced::Error);
+        assert!(b.infer_batch(&img, 1).is_err());
+        c.force(Forced::None);
+        assert!(b.infer_batch(&img, 1).is_ok(), "lifting the fault recovers");
+        assert_eq!(c.injected_errors(), 1);
+    }
+
+    #[test]
+    fn injected_panic_carries_typed_payload() {
+        silence_injected_panics();
+        let (b, c) = wrapped(FaultPlan::default());
+        c.force(Forced::Panic);
+        let img = vec![0.0f32; 4];
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = b.infer_batch(&img, 1);
+        }));
+        let payload = r.unwrap_err();
+        let p = payload.downcast_ref::<InjectedPanic>().expect("typed payload");
+        assert!(p.0.contains("injected fault"), "{}", p.0);
+        assert_eq!(c.injected_panics(), 1);
+    }
+
+    #[test]
+    fn corruption_moves_the_argmax() {
+        let (b, c) = wrapped(FaultPlan::default());
+        c.force(Forced::Corrupt);
+        let img = vec![2.0f32; 4]; // honest class 2
+        let logits = b.infer_batch(&img, 1).unwrap();
+        assert_eq!(logits, vec![0.0, 1.0, 0.0], "row rotated: argmax now 1");
+        assert_eq!(c.injected_corruptions(), 1);
+    }
+
+    #[test]
+    fn parse_accepts_name_and_seed() {
+        assert_eq!(FaultPlan::parse("flaky").unwrap().seed, 0xFA17);
+        assert_eq!(FaultPlan::parse("storm:99").unwrap().seed, 99);
+        assert!(FaultPlan::parse("nope").is_err());
+        assert!(FaultPlan::parse("flaky:x").is_err());
+        for name in ["flaky", "crashy", "storm", "dead", "latency", "corrupt"] {
+            assert!(FaultPlan::scenario(name).is_some(), "{name}");
+        }
+    }
+}

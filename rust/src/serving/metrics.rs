@@ -32,6 +32,16 @@ pub struct Metrics {
     pub fpga_virtual_us: f64,
     /// Wall-clock span of the measurement window, in microseconds.
     pub wall_us: f64,
+    /// Requests shed at dequeue because their deadline had already expired
+    /// before batch assembly (the client gets an error, not silence).
+    pub shed_expired: u64,
+    /// Requests shed at admission because the queue's EWMA wait already
+    /// exceeded the request deadline.
+    pub shed_admission: u64,
+    /// Panics caught inside `infer_batch` and converted to backend errors.
+    pub panics: u64,
+    /// Supervisor-driven backend rebuilds after a crash or wedged worker.
+    pub worker_restarts: u64,
 }
 
 impl Metrics {
@@ -72,14 +82,23 @@ impl Metrics {
         };
     }
 
+    /// Total requests shed without reaching a backend (admission + dequeue).
+    pub fn shed(&self) -> u64 {
+        self.shed_expired + self.shed_admission
+    }
+
     pub fn summary(&self) -> String {
         format!(
-            "requests={} responses={} errors={} batches={} mean_batch={:.2} \
+            "requests={} responses={} errors={} shed={} panics={} restarts={} \
+             batches={} mean_batch={:.2} \
              p50={:.0}us p99={:.0}us max={:.0}us ewma={:.0}us throughput={:.1} rps \
              fpga_sim={:.1} fps",
             self.requests,
             self.responses,
             self.errors,
+            self.shed(),
+            self.panics,
+            self.worker_restarts,
             self.batches,
             self.mean_batch(),
             self.latency.percentile_us(50.0),
@@ -114,6 +133,22 @@ mod tests {
         assert_eq!(m.throughput_rps(), 0.0);
         assert_eq!(m.fpga_fps(), 0.0);
         assert!(m.summary().contains("requests=0"));
+    }
+
+    #[test]
+    fn shed_totals_and_summary_counters() {
+        let m = Metrics {
+            shed_expired: 3,
+            shed_admission: 2,
+            panics: 1,
+            worker_restarts: 4,
+            ..Metrics::default()
+        };
+        assert_eq!(m.shed(), 5);
+        let s = m.summary();
+        assert!(s.contains("shed=5"), "{s}");
+        assert!(s.contains("panics=1"), "{s}");
+        assert!(s.contains("restarts=4"), "{s}");
     }
 
     #[test]

@@ -35,16 +35,37 @@
 //! single-variant `coordinator` shim is gone; its pass-through behaviour
 //! lives on as the single-variant tests in
 //! `rust/tests/integration_serving.rs`.
+//!
+//! Fault tolerance (PR 6): backend panics are caught and supervised (see
+//! [`worker`] and [`supervisor`]), request deadlines are enforced at
+//! admission and dequeue with shed counters in [`Metrics`], a per-variant
+//! circuit breaker ([`retry`]) folds into the health policy routing sees,
+//! and [`Server::infer`] honours a [`RetryPolicy`] — bounded retries and
+//! optional hedging that re-route *policy* selectors to the next-best
+//! healthy variant while `Exact`/`Named` keep the never-fall-back
+//! invariant and fail fast. [`fault::FaultyBackend`] injects all of these
+//! failure modes deterministically for tests and `mpcnn serve --fault`.
 
 pub mod backend;
+pub mod fault;
 pub mod metrics;
+pub mod retry;
 pub mod router;
+pub mod supervisor;
 pub mod variant;
 mod worker;
 
 pub use backend::{BackendHealth, EngineBackend, InferenceBackend, MockBackend};
+pub use fault::{
+    silence_injected_panics, FaultControls, FaultKind, FaultPlan, FaultRule, FaultyBackend,
+    Forced, InjectedPanic,
+};
 pub use metrics::Metrics;
+pub use retry::{
+    BreakerConfig, BreakerState, HedgeTrigger, RetryPolicy, RobustCounters, RobustSnapshot,
+};
 pub use router::{PolicyRouter, RouteError, Router, VariantStatus};
+pub use supervisor::SupervisorConfig;
 pub use variant::{VariantProfile, VariantSpec};
 pub use worker::{BatcherConfig, Client, PendingResponse, Response, SubmitError};
 
@@ -53,7 +74,7 @@ use crate::util::table::{fnum, Table};
 use std::fmt;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
-use worker::{spawn_variant, VariantWorker};
+use worker::{lock_metrics, spawn_variant, VariantWorker};
 
 /// How a request picks its model variant.
 #[derive(Clone, Debug, PartialEq)]
@@ -134,8 +155,10 @@ pub struct InferRequest {
     /// Flattened image (must match the routed variant's `image_len`).
     pub image: Vec<f32>,
     pub variant: VariantSelector,
-    /// Client-side wait budget for [`Server::infer`]; `None` waits
-    /// indefinitely.
+    /// End-to-end answer-by budget; `None` waits indefinitely. Enforced
+    /// three times: at admission (shed if the routed queue's EWMA wait
+    /// already exceeds it), at dequeue (shed if it expired while queued),
+    /// and client-side in [`Server::infer`] (wait at most this long).
     pub deadline: Option<Duration>,
 }
 
@@ -159,7 +182,7 @@ impl InferRequest {
     }
 }
 
-type BackendFactory = Box<dyn FnOnce() -> Result<Box<dyn InferenceBackend>> + Send>;
+type BackendFactory = Box<dyn Fn() -> Result<Box<dyn InferenceBackend>> + Send>;
 
 struct VariantDef {
     spec: VariantSpec,
@@ -174,6 +197,7 @@ pub struct ServerBuilder {
     defs: Vec<VariantDef>,
     router: Box<dyn Router>,
     default_name: Option<String>,
+    retry: RetryPolicy,
 }
 
 impl Default for ServerBuilder {
@@ -188,17 +212,19 @@ impl ServerBuilder {
             defs: Vec::new(),
             router: Box::new(PolicyRouter),
             default_name: None,
+            retry: RetryPolicy::default(),
         }
     }
 
     /// Register a variant. `factory` runs *inside* the variant's worker
-    /// thread (PJRT backends are not `Send`). The routing profile is
+    /// thread (PJRT backends are not `Send`) and is re-invoked there by
+    /// the supervisor to rebuild a crashed backend. The routing profile is
     /// derived from the spec alone (paper ResNet-18 accuracy, no fps
     /// prior); use [`variant_with_profile`](Self::variant_with_profile) to
     /// attach a DSE-derived one.
     pub fn variant<F>(self, spec: VariantSpec, cfg: BatcherConfig, factory: F) -> ServerBuilder
     where
-        F: FnOnce() -> Result<Box<dyn InferenceBackend>> + Send + 'static,
+        F: Fn() -> Result<Box<dyn InferenceBackend>> + Send + 'static,
     {
         let profile = VariantProfile {
             top5_accuracy: spec.estimated_top5("ResNet-18"),
@@ -218,7 +244,7 @@ impl ServerBuilder {
         factory: F,
     ) -> ServerBuilder
     where
-        F: FnOnce() -> Result<Box<dyn InferenceBackend>> + Send + 'static,
+        F: Fn() -> Result<Box<dyn InferenceBackend>> + Send + 'static,
     {
         if cfg.fpga_fps_sim <= 0.0 && profile.fpga_fps > 0.0 {
             cfg.fpga_fps_sim = profile.fpga_fps;
@@ -242,6 +268,13 @@ impl ServerBuilder {
     /// registered wins otherwise).
     pub fn default_variant(mut self, name: impl Into<String>) -> ServerBuilder {
         self.default_name = Some(name.into());
+        self
+    }
+
+    /// Retry/hedge policy applied by [`Server::infer`]. The default is a
+    /// single attempt — exactly the pre-policy behavior.
+    pub fn retry_policy(mut self, policy: RetryPolicy) -> ServerBuilder {
+        self.retry = policy;
         self
     }
 
@@ -280,6 +313,8 @@ impl ServerBuilder {
             router: self.router,
             default_idx,
             started: Instant::now(),
+            retry: self.retry,
+            robust: RobustCounters::default(),
         })
     }
 }
@@ -300,6 +335,8 @@ pub struct Server {
     router: Box<dyn Router>,
     default_idx: usize,
     started: Instant,
+    retry: RetryPolicy,
+    robust: RobustCounters,
 }
 
 impl Server {
@@ -316,19 +353,35 @@ impl Server {
     }
 
     /// Routing snapshot of every variant (static profile + live signals).
+    /// The circuit breaker folds into the health the router sees: an open
+    /// breaker reports `Unavailable` (policy routing excludes it), a
+    /// half-open one `Degraded` (eligible again — the next policy-routed
+    /// request is the probe that closes or re-opens it). `Exact`/`Named`
+    /// ignore health entirely, so pinned traffic still reaches the variant
+    /// either way.
     pub fn statuses(&self) -> Vec<VariantStatus> {
         self.variants
             .iter()
             .enumerate()
-            .map(|(i, v)| VariantStatus {
-                name: v.name.clone(),
-                wq: v.spec.wq,
-                top5_accuracy: v.profile.top5_accuracy,
-                fpga_fps: v.profile.fpga_fps,
-                ewma_latency_us: v.worker.shared.ewma_us(),
-                inflight: v.worker.shared.inflight(),
-                health: v.worker.shared.health(),
-                default: i == self.default_idx,
+            .map(|(i, v)| {
+                let base = v.worker.shared.health();
+                let health = match v.worker.shared.breaker.state() {
+                    BreakerState::Open => BackendHealth::Unavailable,
+                    BreakerState::HalfOpen if base != BackendHealth::Unavailable => {
+                        BackendHealth::Degraded
+                    }
+                    _ => base,
+                };
+                VariantStatus {
+                    name: v.name.clone(),
+                    wq: v.spec.wq,
+                    top5_accuracy: v.profile.top5_accuracy,
+                    fpga_fps: v.profile.fpga_fps,
+                    ewma_latency_us: v.worker.shared.ewma_us(),
+                    inflight: v.worker.shared.inflight(),
+                    health,
+                    default: i == self.default_idx,
+                }
             })
             .collect()
     }
@@ -355,55 +408,284 @@ impl Server {
             .map_err(SubmitError::Route)
     }
 
+    /// Degraded-mode re-route for retries/hedges: route with the already-
+    /// failed indices masked `Unavailable`; if the router still lands on a
+    /// failed variant (`Default` ignores health) or errors out, degrade to
+    /// the cheapest-latency healthy variant not yet tried. `None` means no
+    /// healthy variant is left.
+    fn reroute(&self, sel: &VariantSelector, failed: &[usize]) -> Option<usize> {
+        let mut sts = self.statuses();
+        for &i in failed {
+            if let Some(s) = sts.get_mut(i) {
+                s.health = BackendHealth::Unavailable;
+            }
+        }
+        match self.router.route(sel, &sts) {
+            Ok(idx) if !failed.contains(&idx) => Some(idx),
+            _ => sts
+                .iter()
+                .enumerate()
+                .filter(|(i, s)| {
+                    !failed.contains(i) && s.health != BackendHealth::Unavailable
+                })
+                .min_by(|a, b| {
+                    a.1.latency_estimate_us().total_cmp(&b.1.latency_estimate_us())
+                })
+                .map(|(i, _)| i),
+        }
+    }
+
     /// Route and submit without blocking; sheds load when the routed
-    /// variant's queue is full.
+    /// variant's queue is full or the deadline is already unattainable.
     pub fn try_submit(&self, req: InferRequest) -> Result<PendingResponse, SubmitError> {
         let idx = self.resolve(&req.variant)?;
-        self.variants[idx].worker.client.try_submit(req.image)
+        let deadline = req.deadline.map(|d| Instant::now() + d);
+        self.variants[idx]
+            .worker
+            .client
+            .try_submit_with_deadline(req.image, deadline)
     }
 
-    /// Route and submit, blocking on the routed variant's queue.
+    /// Route and submit, blocking on the routed variant's queue. The
+    /// request's deadline travels with it: the pipeline sheds it at
+    /// admission or dequeue once the deadline is hopeless.
     pub fn submit(&self, req: InferRequest) -> Result<PendingResponse, SubmitError> {
         let idx = self.resolve(&req.variant)?;
-        self.variants[idx].worker.client.submit(req.image)
+        let deadline = req.deadline.map(|d| Instant::now() + d);
+        self.variants[idx]
+            .worker
+            .client
+            .submit_with_deadline(req.image, deadline)
     }
 
-    /// Submit and wait, honouring the request's deadline if set.
+    /// Submit and wait, honouring the request's deadline and the server's
+    /// [`RetryPolicy`]. Policy-routed selectors (`Default`, `MinAccuracy`,
+    /// `MaxLatency`) retry/hedge onto the next-best healthy variant after
+    /// a failure — graceful degradation prefers an answer from a healthy
+    /// variant over an error from the preferred one. `Exact`/`Named`
+    /// selectors never fall back and fail fast: one attempt, no hedge.
     pub fn infer(&self, req: InferRequest) -> Result<Response, String> {
-        let deadline = req.deadline;
-        let pending = self.submit(req).map_err(|e| e.to_string())?;
-        match deadline {
-            Some(d) => pending.wait_timeout(d),
+        let pinned = matches!(
+            req.variant,
+            VariantSelector::Exact(_) | VariantSelector::Named(_)
+        );
+        let abs_deadline = req.deadline.map(|d| Instant::now() + d);
+        let single_shot =
+            pinned || (self.retry.max_attempts <= 1 && self.retry.hedge_after.is_none());
+        if single_shot {
+            // Fast path, identical to the pre-policy gateway: no image
+            // clone, one submission, one wait.
+            let idx = self.resolve(&req.variant).map_err(|e| e.to_string())?;
+            let pending = self.variants[idx]
+                .worker
+                .client
+                .submit_with_deadline(req.image, abs_deadline)
+                .map_err(|e| e.to_string())?;
+            return Self::wait_until(pending, abs_deadline);
+        }
+        let mut failed: Vec<usize> = Vec::new();
+        let mut first_routed: Option<usize> = None;
+        let mut last_err = String::new();
+        for attempt in 0..self.retry.max_attempts.max(1) {
+            let idx = if attempt == 0 {
+                match self.resolve(&req.variant) {
+                    Ok(i) => i,
+                    Err(e) => return Err(e.to_string()),
+                }
+            } else {
+                self.robust.note_retry();
+                let backoff = self.retry.backoff_before(attempt);
+                if !backoff.is_zero() {
+                    std::thread::sleep(backoff);
+                }
+                match self.reroute(&req.variant, &failed) {
+                    Some(i) => i,
+                    None => break, // no healthy variant left to try
+                }
+            };
+            match first_routed {
+                None => first_routed = Some(idx),
+                Some(f) if f != idx => self.robust.note_fallback(),
+                _ => {}
+            }
+            let pending = match self.variants[idx]
+                .worker
+                .client
+                .submit_with_deadline(req.image.clone(), abs_deadline)
+            {
+                Ok(p) => p,
+                Err(e) => {
+                    last_err = e.to_string();
+                    failed.push(idx);
+                    continue;
+                }
+            };
+            match self.await_hedged(&req, idx, pending, abs_deadline, &failed) {
+                Ok(r) => return Ok(r),
+                Err(e) => {
+                    last_err = e;
+                    if !failed.contains(&idx) {
+                        failed.push(idx);
+                    }
+                }
+            }
+        }
+        Err(if last_err.is_empty() {
+            "no healthy variant available".to_string()
+        } else {
+            last_err
+        })
+    }
+
+    fn wait_until(
+        pending: PendingResponse,
+        abs_deadline: Option<Instant>,
+    ) -> Result<Response, String> {
+        match abs_deadline {
+            Some(d) => pending.wait_timeout(d.saturating_duration_since(Instant::now())),
             None => pending.wait(),
         }
+    }
+
+    /// The hedge delay for a variant: the policy's fixed delay, or its
+    /// observed p99 (EWMA fallback while the histogram is empty, 50 ms
+    /// floor so a cold variant isn't hedged instantly).
+    fn hedge_delay(&self, idx: usize, trigger: HedgeTrigger) -> Duration {
+        match trigger {
+            HedgeTrigger::Fixed(d) => d,
+            HedgeTrigger::P99 => {
+                let m = lock_metrics(&self.variants[idx].worker.metrics);
+                let mut us = m.latency.percentile_us(99.0);
+                if us <= 0.0 {
+                    us = m.ewma_latency_us;
+                }
+                drop(m);
+                Duration::from_micros(us.max(0.0) as u64).max(Duration::from_millis(50))
+            }
+        }
+    }
+
+    /// Wait for `pending`, optionally racing a hedge submission to the
+    /// next-best variant once the hedge delay elapses. Returns the first
+    /// success, the first error once no submission is left pending, or
+    /// `timeout` at the absolute deadline.
+    fn await_hedged(
+        &self,
+        req: &InferRequest,
+        idx: usize,
+        pending: PendingResponse,
+        abs_deadline: Option<Instant>,
+        failed: &[usize],
+    ) -> Result<Response, String> {
+        let Some(trigger) = self.retry.hedge_after else {
+            return Self::wait_until(pending, abs_deadline);
+        };
+        let mut delay = self.hedge_delay(idx, trigger);
+        if let Some(d) = abs_deadline {
+            delay = delay.min(d.saturating_duration_since(Instant::now()));
+        }
+        if let Some(r) = pending.poll_timeout(delay) {
+            return r; // answered (or failed) before the hedge fired
+        }
+        // Hedge: duplicate the request onto the next-best healthy variant.
+        let mut mask = failed.to_vec();
+        mask.push(idx);
+        let hedge = self.reroute(&req.variant, &mask).and_then(|hi| {
+            self.variants[hi]
+                .worker
+                .client
+                .try_submit_with_deadline(req.image.clone(), abs_deadline)
+                .ok()
+        });
+        let mut original = Some(pending);
+        let mut hedged = match hedge {
+            Some(p) => {
+                self.robust.note_hedge();
+                Some(p)
+            }
+            None => None, // nowhere to hedge: keep waiting on the original
+        };
+        let mut first_err: Option<String> = None;
+        let slice = Duration::from_millis(1);
+        loop {
+            if let Some(p) = &original {
+                if let Some(r) = p.poll_timeout(slice) {
+                    match r {
+                        Ok(resp) => return Ok(resp),
+                        Err(e) => {
+                            first_err.get_or_insert(e);
+                            original = None;
+                        }
+                    }
+                }
+            }
+            if let Some(p) = &hedged {
+                if let Some(r) = p.poll_timeout(slice) {
+                    match r {
+                        Ok(resp) => {
+                            if original.is_some() {
+                                self.robust.note_hedge_win();
+                            }
+                            self.robust.note_fallback();
+                            return Ok(resp);
+                        }
+                        Err(e) => {
+                            first_err.get_or_insert(e);
+                            hedged = None;
+                        }
+                    }
+                }
+            }
+            if original.is_none() && hedged.is_none() {
+                return Err(first_err.unwrap_or_else(|| "request failed".to_string()));
+            }
+            if let Some(d) = abs_deadline {
+                if Instant::now() >= d {
+                    return Err("timeout".to_string());
+                }
+            }
+        }
+    }
+
+    /// Server-level robustness counters (retries, hedges, fallbacks).
+    pub fn robust_counters(&self) -> RobustSnapshot {
+        self.robust.snapshot()
+    }
+
+    /// Clone a variant's metrics, folding in the signals that live outside
+    /// the mutex (admission sheds are counted lock-free on the client
+    /// path).
+    fn snapshot_metrics(v: &Variant, wall_us: f64) -> Metrics {
+        let mut m = lock_metrics(&v.worker.metrics).clone();
+        m.shed_admission = v.worker.shared.shed_admission();
+        m.wall_us = wall_us;
+        m
     }
 
     /// Snapshot of one variant's metrics (wall window = since server
     /// start).
     pub fn metrics(&self, name: &str) -> Option<Metrics> {
         let v = self.variants.iter().find(|v| v.spec.name == name)?;
-        let mut m = v.worker.metrics.lock().unwrap().clone();
-        m.wall_us = self.started.elapsed().as_micros() as f64;
-        Some(m)
+        Some(Self::snapshot_metrics(
+            v,
+            self.started.elapsed().as_micros() as f64,
+        ))
     }
 
     /// Snapshots of every variant's metrics, in registration order.
     pub fn metrics_all(&self) -> Vec<(String, Metrics)> {
+        let wall_us = self.started.elapsed().as_micros() as f64;
         self.variants
             .iter()
-            .map(|v| {
-                let mut m = v.worker.metrics.lock().unwrap().clone();
-                m.wall_us = self.started.elapsed().as_micros() as f64;
-                (v.spec.name.clone(), m)
-            })
+            .map(|v| (v.spec.name.clone(), Self::snapshot_metrics(v, wall_us)))
             .collect()
     }
 
     /// Per-variant metrics table for end-of-run summaries.
     pub fn summary_table(&self) -> Table {
         let mut t = Table::new("per-variant serving metrics").headers(&[
-            "variant", "wq", "top5 %*", "reqs", "resps", "errs", "mean batch", "p50 ms",
-            "p99 ms", "ewma ms", "rps", "fpga-sim fps",
+            "variant", "wq", "top5 %*", "reqs", "resps", "errs", "shed", "rst", "mean batch",
+            "p50 ms", "p99 ms", "ewma ms", "rps", "fpga-sim fps",
         ]);
         for (name, m) in self.metrics_all() {
             let v = self
@@ -424,6 +706,8 @@ impl Server {
                 m.requests.to_string(),
                 m.responses.to_string(),
                 m.errors.to_string(),
+                m.shed().to_string(),
+                m.worker_restarts.to_string(),
                 fnum(m.mean_batch(), 2),
                 fnum(m.latency.percentile_us(50.0) / 1e3, 2),
                 fnum(m.latency.percentile_us(99.0) / 1e3, 2),
@@ -446,11 +730,7 @@ impl Server {
         }
         self.variants
             .iter()
-            .map(|v| {
-                let mut m = v.worker.metrics.lock().unwrap().clone();
-                m.wall_us = wall_us;
-                (v.spec.name.clone(), m)
-            })
+            .map(|v| (v.spec.name.clone(), Self::snapshot_metrics(v, wall_us)))
             .collect()
     }
 }
@@ -477,6 +757,7 @@ mod tests {
                 max_wait: Duration::from_millis(1),
                 queue_capacity: 64,
                 fpga_fps_sim: 0.0,
+                ..Default::default()
             },
             Box::new(move || {
                 Ok(Box::new(MockBackend::new(12, 4, vec![1, 4], latency_us))
@@ -607,7 +888,11 @@ mod tests {
             InferRequest::new(vec![0.0; 12])
                 .with_deadline(Duration::from_millis(1)),
         );
-        assert_eq!(r.unwrap_err(), "timeout");
+        // With deadline enforcement the server may shed the request at
+        // dequeue before the client's own wait expires; either surface is a
+        // correct "missed deadline" outcome.
+        let e = r.unwrap_err();
+        assert!(e == "timeout" || e.contains("shed"), "{e}");
     }
 
     #[test]
@@ -663,5 +948,92 @@ mod tests {
         for name in ["w2", "w4", "w8"] {
             assert!(rendered.contains(name), "missing {name} in:\n{rendered}");
         }
+    }
+
+    /// A variant that fails every request (`fail_after = Some(0)`): its
+    /// registered factory still builds fine, so routing tries it first.
+    fn failing_variant(
+        wq: u32,
+        acc: f64,
+        fps: f64,
+    ) -> (VariantSpec, VariantProfile, BatcherConfig, BackendFactory) {
+        let (s, p, c, _) = mock_variant(wq, 0, acc, fps);
+        (
+            s,
+            p,
+            c,
+            Box::new(|| {
+                let mut b = MockBackend::new(12, 4, vec![1, 4], 0);
+                b.fail_after = Some(0);
+                Ok(Box::new(b) as Box<dyn InferenceBackend>)
+            }),
+        )
+    }
+
+    #[test]
+    fn retry_reroutes_policy_traffic_away_from_failing_variant() {
+        // w2 looks cheapest (best fps prior) so MinAccuracy routes there
+        // first — but every call fails. The retry must fall back to w8.
+        let (s2, p2, c2, f2) = failing_variant(2, 87.48, 245.0);
+        let (s8, p8, c8, f8) = mock_variant(8, 0, 89.62, 47.0);
+        let server = Server::builder()
+            .variant_with_profile(s2, p2, c2, f2)
+            .variant_with_profile(s8, p8, c8, f8)
+            .retry_policy(RetryPolicy::attempts(3))
+            .build()
+            .unwrap();
+        let resp = server
+            .infer(
+                InferRequest::new(vec![1.0; 12])
+                    .with_variant(VariantSelector::MinAccuracy(87.0)),
+            )
+            .expect("retry should land on the healthy variant");
+        assert_eq!(resp.variant, "w8");
+        let rc = server.robust_counters();
+        assert!(rc.retried >= 1, "{rc:?}");
+        assert!(rc.fallbacks >= 1, "{rc:?}");
+    }
+
+    #[test]
+    fn exact_selector_fails_fast_without_retry() {
+        let (s2, p2, c2, f2) = failing_variant(2, 87.48, 245.0);
+        let (s8, p8, c8, f8) = mock_variant(8, 0, 89.62, 47.0);
+        let server = Server::builder()
+            .variant_with_profile(s2, p2, c2, f2)
+            .variant_with_profile(s8, p8, c8, f8)
+            .retry_policy(RetryPolicy::attempts(3))
+            .build()
+            .unwrap();
+        let err = server
+            .infer(
+                InferRequest::new(vec![1.0; 12]).with_variant(VariantSelector::Exact(2)),
+            )
+            .unwrap_err();
+        assert!(err.contains("injected failure"), "{err}");
+        // Pinned selectors never burn retry attempts or fall back.
+        assert_eq!(server.robust_counters(), RobustSnapshot::default());
+    }
+
+    #[test]
+    fn hedge_races_slow_variant_and_faster_one_wins() {
+        // w2 is the default variant but takes 50 ms per call; w8 answers in
+        // ~0. A 5 ms fixed hedge should duplicate onto w8 and win.
+        let (s2, p2, c2, f2) = mock_variant(2, 50_000, 87.48, 245.0);
+        let (s8, p8, c8, f8) = mock_variant(8, 0, 89.62, 47.0);
+        let server = Server::builder()
+            .variant_with_profile(s2, p2, c2, f2)
+            .variant_with_profile(s8, p8, c8, f8)
+            .retry_policy(
+                RetryPolicy::default().with_hedge(HedgeTrigger::Fixed(Duration::from_millis(5))),
+            )
+            .build()
+            .unwrap();
+        let resp = server
+            .infer(InferRequest::new(vec![0.0; 12]))
+            .expect("hedged request should succeed");
+        assert_eq!(resp.variant, "w8", "hedge to the fast variant should win");
+        let rc = server.robust_counters();
+        assert!(rc.hedged >= 1, "{rc:?}");
+        assert!(rc.hedge_wins >= 1, "{rc:?}");
     }
 }

@@ -1,0 +1,335 @@
+//! Retry, hedging, and circuit-breaking policy for `Server::infer`.
+//!
+//! [`RetryPolicy`] bounds how hard the gateway works to answer one request:
+//! at most `max_attempts` submissions with exponential backoff between
+//! them, plus an optional *hedge* — a duplicate submission raced against a
+//! slow first attempt. Retries and hedges re-route **policy-routed**
+//! selectors (`Default`, `MinAccuracy`, `MaxLatency`) to the next-best
+//! healthy variant; `Exact`/`Named` selectors never fall back (the PR-2
+//! invariant) and therefore fail fast after exhausting attempts on their
+//! one variant.
+//!
+//! [`CircuitBreaker`] is the per-variant failure gate layered over
+//! [`BackendHealth`]: consecutive chunk failures open it, an open breaker
+//! reports the variant `Unavailable` to policy routing, and after
+//! `open_for` it half-opens — one probe request is let through (the
+//! variant shows as `Degraded`), closing on success or re-opening on
+//! failure.
+//!
+//! [`BackendHealth`]: crate::serving::BackendHealth
+
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, Ordering};
+use std::time::{Duration, Instant};
+
+/// When to launch a hedge (duplicate) request against a slow attempt.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum HedgeTrigger {
+    /// Hedge once the attempt has been pending longer than the routed
+    /// variant's observed p99 latency (falls back to its EWMA, then to a
+    /// fixed floor, while the histogram is empty).
+    P99,
+    /// Hedge after a fixed delay.
+    Fixed(Duration),
+}
+
+/// Bounded retry policy for one logical inference request.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Total submissions allowed (1 = no retry, the default).
+    pub max_attempts: u32,
+    /// Backoff before the first retry; doubles per attempt.
+    pub backoff: Duration,
+    /// Optional hedging trigger; `None` disables hedging.
+    pub hedge_after: Option<HedgeTrigger>,
+}
+
+impl Default for RetryPolicy {
+    /// Single attempt, no backoff, no hedge — exactly the pre-retry
+    /// `Server::infer` behavior.
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 1,
+            backoff: Duration::ZERO,
+            hedge_after: None,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// `n` total attempts with a 1 ms initial backoff.
+    pub fn attempts(n: u32) -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: n.max(1),
+            backoff: Duration::from_millis(1),
+            hedge_after: None,
+        }
+    }
+
+    pub fn with_backoff(mut self, backoff: Duration) -> RetryPolicy {
+        self.backoff = backoff;
+        self
+    }
+
+    pub fn with_hedge(mut self, trigger: HedgeTrigger) -> RetryPolicy {
+        self.hedge_after = Some(trigger);
+        self
+    }
+
+    /// Backoff before retry number `retry` (1-based): exponential from
+    /// `self.backoff`, saturating.
+    pub fn backoff_before(&self, retry: u32) -> Duration {
+        let doublings = retry.saturating_sub(1).min(16);
+        self.backoff.saturating_mul(1u32 << doublings)
+    }
+}
+
+/// Circuit-breaker thresholds. `Default`: open after 5 consecutive
+/// failures, probe after 250 ms.
+#[derive(Clone, Copy, Debug)]
+pub struct BreakerConfig {
+    /// Consecutive request failures that open the breaker.
+    pub failure_threshold: u32,
+    /// How long the breaker stays open before half-opening for a probe.
+    pub open_for: Duration,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> BreakerConfig {
+        BreakerConfig {
+            failure_threshold: 5,
+            open_for: Duration::from_millis(250),
+        }
+    }
+}
+
+/// Breaker state, in routing-impact order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Normal service.
+    Closed,
+    /// Tripped: the variant reports `Unavailable` to policy routing until
+    /// `open_for` elapses.
+    Open,
+    /// Probation: one probe is welcome (variant reports `Degraded`);
+    /// success closes, failure re-opens.
+    HalfOpen,
+}
+
+const STATE_CLOSED: u8 = 0;
+const STATE_OPEN: u8 = 1;
+const STATE_HALF_OPEN: u8 = 2;
+
+/// Lock-free per-variant circuit breaker. Workers record per-chunk
+/// outcomes; `Server::statuses` folds [`CircuitBreaker::state`] into the
+/// health the router sees. Time is measured against a private epoch so the
+/// open deadline fits an atomic.
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    cfg: BreakerConfig,
+    state: AtomicU8,
+    consecutive_failures: AtomicU32,
+    open_until_us: AtomicU64,
+    epoch: Instant,
+}
+
+impl CircuitBreaker {
+    pub fn new(cfg: BreakerConfig) -> CircuitBreaker {
+        CircuitBreaker {
+            cfg,
+            state: AtomicU8::new(STATE_CLOSED),
+            consecutive_failures: AtomicU32::new(0),
+            open_until_us: AtomicU64::new(0),
+            epoch: Instant::now(),
+        }
+    }
+
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// A request chunk succeeded: close the breaker and clear the failure
+    /// streak (also how a half-open probe closes it).
+    pub fn record_success(&self) {
+        self.consecutive_failures.store(0, Ordering::SeqCst);
+        self.state.store(STATE_CLOSED, Ordering::SeqCst);
+    }
+
+    /// A request chunk failed. Opens the breaker once the streak reaches
+    /// the threshold; a failure during half-open re-opens immediately.
+    pub fn record_failure(&self) {
+        let streak = self.consecutive_failures.fetch_add(1, Ordering::SeqCst) + 1;
+        let half_open = self.state.load(Ordering::SeqCst) == STATE_HALF_OPEN;
+        if half_open || streak >= self.cfg.failure_threshold {
+            self.open_until_us.store(
+                self.now_us() + self.cfg.open_for.as_micros() as u64,
+                Ordering::SeqCst,
+            );
+            self.state.store(STATE_OPEN, Ordering::SeqCst);
+        }
+    }
+
+    /// Current state; lazily transitions Open → HalfOpen once `open_for`
+    /// has elapsed (the caller reading the state *is* the probe admission).
+    pub fn state(&self) -> BreakerState {
+        match self.state.load(Ordering::SeqCst) {
+            STATE_OPEN => {
+                if self.now_us() >= self.open_until_us.load(Ordering::SeqCst) {
+                    // Racing readers may both CAS; either way the state is
+                    // HalfOpen afterwards, which is what both report.
+                    let _ = self.state.compare_exchange(
+                        STATE_OPEN,
+                        STATE_HALF_OPEN,
+                        Ordering::SeqCst,
+                        Ordering::SeqCst,
+                    );
+                    BreakerState::HalfOpen
+                } else {
+                    BreakerState::Open
+                }
+            }
+            STATE_HALF_OPEN => BreakerState::HalfOpen,
+            _ => BreakerState::Closed,
+        }
+    }
+
+    pub fn consecutive_failures(&self) -> u32 {
+        self.consecutive_failures.load(Ordering::SeqCst)
+    }
+}
+
+/// Server-level robustness counters (atomic: bumped from `infer` calls on
+/// any thread), reported by `mpcnn serve` next to the throughput table.
+#[derive(Debug, Default)]
+pub struct RobustCounters {
+    retried: AtomicU64,
+    hedged: AtomicU64,
+    hedge_wins: AtomicU64,
+    fallbacks: AtomicU64,
+}
+
+/// Point-in-time copy of [`RobustCounters`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RobustSnapshot {
+    /// Re-submissions after a failed attempt.
+    pub retried: u64,
+    /// Hedge (duplicate) submissions launched.
+    pub hedged: u64,
+    /// Hedges that answered before the original attempt.
+    pub hedge_wins: u64,
+    /// Retries/hedges that landed on a *different* variant than the
+    /// original attempt (policy-routed degradation).
+    pub fallbacks: u64,
+}
+
+impl RobustCounters {
+    pub fn note_retry(&self) {
+        self.retried.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_hedge(&self) {
+        self.hedged.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_hedge_win(&self) {
+        self.hedge_wins.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_fallback(&self) {
+        self.fallbacks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> RobustSnapshot {
+        RobustSnapshot {
+            retried: self.retried.load(Ordering::Relaxed),
+            hedged: self.hedged.load(Ordering::Relaxed),
+            hedge_wins: self.hedge_wins.load(Ordering::Relaxed),
+            fallbacks: self.fallbacks.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_policy_is_single_attempt() {
+        let p = RetryPolicy::default();
+        assert_eq!(p.max_attempts, 1);
+        assert_eq!(p.backoff, Duration::ZERO);
+        assert!(p.hedge_after.is_none());
+    }
+
+    #[test]
+    fn backoff_grows_exponentially() {
+        let p = RetryPolicy::attempts(4).with_backoff(Duration::from_millis(2));
+        assert_eq!(p.backoff_before(1), Duration::from_millis(2));
+        assert_eq!(p.backoff_before(2), Duration::from_millis(4));
+        assert_eq!(p.backoff_before(3), Duration::from_millis(8));
+        assert_eq!(RetryPolicy::attempts(0).max_attempts, 1);
+    }
+
+    #[test]
+    fn breaker_opens_after_threshold_and_half_opens() {
+        let b = CircuitBreaker::new(BreakerConfig {
+            failure_threshold: 3,
+            open_for: Duration::from_millis(20),
+        });
+        assert_eq!(b.state(), BreakerState::Closed);
+        b.record_failure();
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Closed, "below threshold");
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(b.state(), BreakerState::HalfOpen, "open_for elapsed");
+    }
+
+    #[test]
+    fn half_open_probe_closes_or_reopens() {
+        let cfg = BreakerConfig {
+            failure_threshold: 2,
+            open_for: Duration::from_millis(10),
+        };
+        let b = CircuitBreaker::new(cfg);
+        b.record_failure();
+        b.record_failure();
+        std::thread::sleep(Duration::from_millis(15));
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Open, "failed probe re-opens");
+        std::thread::sleep(Duration::from_millis(15));
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        b.record_success();
+        assert_eq!(b.state(), BreakerState::Closed, "successful probe closes");
+        assert_eq!(b.consecutive_failures(), 0);
+    }
+
+    #[test]
+    fn success_interrupts_the_streak() {
+        let b = CircuitBreaker::new(BreakerConfig {
+            failure_threshold: 3,
+            open_for: Duration::from_secs(1),
+        });
+        for _ in 0..5 {
+            b.record_failure();
+            b.record_failure();
+            b.record_success();
+        }
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn counters_snapshot() {
+        let c = RobustCounters::default();
+        c.note_retry();
+        c.note_retry();
+        c.note_hedge();
+        c.note_hedge_win();
+        c.note_fallback();
+        assert_eq!(
+            c.snapshot(),
+            RobustSnapshot { retried: 2, hedged: 1, hedge_wins: 1, fallbacks: 1 }
+        );
+    }
+}

@@ -57,6 +57,10 @@ pub struct VariantStatus {
     pub ewma_latency_us: f64,
     /// Requests currently queued or executing.
     pub inflight: u64,
+    /// Effective health as seen by routing. `Server::statuses` folds the
+    /// variant's circuit breaker into the worker-observed health before
+    /// building this snapshot (open breaker → `Unavailable`, half-open →
+    /// `Degraded`), so routing logic here stays breaker-agnostic.
     pub health: BackendHealth,
     /// Is this the server's default variant?
     pub default: bool,

@@ -1,0 +1,151 @@
+//! Worker supervision policy: when a variant's backend crashes (panic
+//! inside `infer_batch`) or wedges (warm-up/rebuild failure), the batcher's
+//! supervised loop asks this state machine what to do next.
+//!
+//! The worker *thread* never dies — panics are caught at the `infer_batch`
+//! boundary — so "restart" means rebuilding the backend from the variant's
+//! registered factory, inside the same thread. The supervisor spaces those
+//! rebuilds with exponential backoff and a restart budget: within budget,
+//! crashes restart eagerly (short backoff); past it, the variant parks at
+//! the maximum backoff and keeps probing slowly — deliberately never giving
+//! up for good, so removing the fault lets the variant return to service
+//! without a server restart. A healthy batch resets both budget and
+//! backoff.
+
+use std::time::Duration;
+
+/// Restart pacing for one variant worker. `Default` restarts eagerly three
+/// times (50 ms, 100 ms, 200 ms), then probes every two seconds.
+#[derive(Clone, Copy, Debug)]
+pub struct SupervisorConfig {
+    /// Crashes allowed at exponential pacing before parking at
+    /// `backoff_max`.
+    pub restart_budget: u32,
+    /// Backoff before the first in-budget rebuild; doubles per consecutive
+    /// crash.
+    pub backoff_initial: Duration,
+    /// Backoff ceiling, and the probe interval once the budget is spent.
+    pub backoff_max: Duration,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> SupervisorConfig {
+        SupervisorConfig {
+            restart_budget: 3,
+            backoff_initial: Duration::from_millis(50),
+            backoff_max: Duration::from_secs(2),
+        }
+    }
+}
+
+/// Per-worker supervisor state: consecutive-crash count and the backoff it
+/// implies. Owned by the batcher thread; no locking.
+#[derive(Clone, Copy, Debug)]
+pub struct Supervisor {
+    cfg: SupervisorConfig,
+    consecutive_crashes: u32,
+    restarts: u64,
+}
+
+impl Supervisor {
+    pub fn new(cfg: SupervisorConfig) -> Supervisor {
+        Supervisor { cfg, consecutive_crashes: 0, restarts: 0 }
+    }
+
+    /// A batch completed without crashing: the variant is live again, so
+    /// future crashes start from a fresh budget and the initial backoff.
+    pub fn on_success(&mut self) {
+        self.consecutive_crashes = 0;
+    }
+
+    /// A crash (caught panic) or failed rebuild: returns how long to wait
+    /// before the next rebuild attempt. Exponential while within budget,
+    /// parked at `backoff_max` after.
+    pub fn on_crash(&mut self) -> Duration {
+        self.consecutive_crashes = self.consecutive_crashes.saturating_add(1);
+        self.restarts += 1;
+        if self.consecutive_crashes > self.cfg.restart_budget {
+            return self.cfg.backoff_max;
+        }
+        let doublings = self.consecutive_crashes.saturating_sub(1).min(20);
+        let backoff = self
+            .cfg
+            .backoff_initial
+            .saturating_mul(1u32 << doublings);
+        backoff.min(self.cfg.backoff_max)
+    }
+
+    /// Crashes since the last successful batch.
+    pub fn consecutive_crashes(&self) -> u32 {
+        self.consecutive_crashes
+    }
+
+    /// Whether the eager restart budget is spent (the worker is in slow
+    /// probe mode until a batch succeeds).
+    pub fn parked(&self) -> bool {
+        self.consecutive_crashes > self.cfg.restart_budget
+    }
+
+    /// Total rebuild attempts over the worker's lifetime.
+    pub fn restarts(&self) -> u64 {
+        self.restarts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_doubles_then_parks() {
+        let cfg = SupervisorConfig {
+            restart_budget: 3,
+            backoff_initial: Duration::from_millis(50),
+            backoff_max: Duration::from_secs(2),
+        };
+        let mut s = Supervisor::new(cfg);
+        assert_eq!(s.on_crash(), Duration::from_millis(50));
+        assert_eq!(s.on_crash(), Duration::from_millis(100));
+        assert_eq!(s.on_crash(), Duration::from_millis(200));
+        assert!(!s.parked());
+        // Budget spent: every further crash parks at the ceiling.
+        assert_eq!(s.on_crash(), Duration::from_secs(2));
+        assert!(s.parked());
+        assert_eq!(s.on_crash(), Duration::from_secs(2));
+        assert_eq!(s.restarts(), 5);
+    }
+
+    #[test]
+    fn success_resets_budget_and_backoff() {
+        let mut s = Supervisor::new(SupervisorConfig::default());
+        for _ in 0..10 {
+            s.on_crash();
+        }
+        assert!(s.parked());
+        s.on_success();
+        assert!(!s.parked());
+        assert_eq!(s.consecutive_crashes(), 0);
+        assert_eq!(
+            s.on_crash(),
+            SupervisorConfig::default().backoff_initial,
+            "backoff restarts from the initial value"
+        );
+    }
+
+    #[test]
+    fn backoff_never_exceeds_max_within_budget() {
+        let cfg = SupervisorConfig {
+            restart_budget: 30,
+            backoff_initial: Duration::from_millis(500),
+            backoff_max: Duration::from_secs(1),
+        };
+        let mut s = Supervisor::new(cfg);
+        let mut prev = Duration::ZERO;
+        for _ in 0..32 {
+            let b = s.on_crash();
+            assert!(b <= cfg.backoff_max);
+            assert!(b >= prev, "backoff is monotone");
+            prev = b;
+        }
+    }
+}

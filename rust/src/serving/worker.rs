@@ -7,17 +7,37 @@
 //! the backend, clients block on per-request channels. The multi-variant
 //! [`Server`](crate::serving::Server) runs one of these pipelines per
 //! registered variant and routes requests between them.
+//!
+//! Fault tolerance (PR 6): `infer_batch` runs under `catch_unwind`, so a
+//! panicking backend fails its chunk's requests like any backend error
+//! instead of killing the thread; the in-thread supervisor then rebuilds
+//! the backend from the variant's factory with exponential backoff (see
+//! [`SupervisorConfig`]). Requests carry an optional deadline that is
+//! enforced at admission (queue-wait EWMA already exceeds it) and at
+//! dequeue (already expired before batching), and a per-variant
+//! [`CircuitBreaker`] records chunk outcomes for the server's status
+//! reporting.
 
 use super::backend::{BackendHealth, InferenceBackend};
-use super::metrics::Metrics;
+use super::metrics::{Metrics, EWMA_ALPHA};
+use super::retry::{BreakerConfig, CircuitBreaker};
 use super::router::RouteError;
+use super::supervisor::{Supervisor, SupervisorConfig};
 use crate::util::error::Result;
 use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// Lock a metrics mutex, tolerating poison: a worker that panicked while
+/// holding the lock must not cascade panics into healthy workers, routing,
+/// or `summary_table` — the counters are plain data and stay usable.
+pub(crate) fn lock_metrics(m: &Mutex<Metrics>) -> MutexGuard<'_, Metrics> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// Batching policy for one variant's pipeline.
 #[derive(Clone, Copy, Debug)]
@@ -33,6 +53,10 @@ pub struct BatcherConfig {
     /// Frames/s of the simulated FPGA design (drives the virtual clock);
     /// 0 disables the virtual clock.
     pub fpga_fps_sim: f64,
+    /// Restart pacing when the backend crashes (panics) or wedges.
+    pub supervisor: SupervisorConfig,
+    /// Per-variant circuit-breaker thresholds.
+    pub breaker: BreakerConfig,
 }
 
 impl Default for BatcherConfig {
@@ -42,6 +66,8 @@ impl Default for BatcherConfig {
             max_wait: Duration::from_millis(5),
             queue_capacity: 128,
             fpga_fps_sim: 0.0,
+            supervisor: SupervisorConfig::default(),
+            breaker: BreakerConfig::default(),
         }
     }
 }
@@ -50,6 +76,9 @@ impl Default for BatcherConfig {
 struct Request {
     image: Vec<f32>,
     enqueued: Instant,
+    /// Answer-by time; expired requests are shed at dequeue instead of
+    /// being batched (a late answer is worth less than a fast failure).
+    deadline: Option<Instant>,
     reply: SyncSender<Result<Response, String>>,
 }
 
@@ -74,6 +103,10 @@ pub enum SubmitError {
     Backpressure,
     Closed,
     BadInput { expected: usize, got: usize },
+    /// Admission-time load shedding: the queue's EWMA wait already exceeds
+    /// the request's deadline, so enqueueing could only produce a late
+    /// answer.
+    DeadlineUnattainable { queue_wait_us: u64 },
     /// The request's [`VariantSelector`](crate::serving::VariantSelector)
     /// could not be resolved to a variant.
     Route(RouteError),
@@ -87,6 +120,10 @@ impl fmt::Display for SubmitError {
             SubmitError::BadInput { expected, got } => {
                 write!(f, "bad input: expected {expected} elements, got {got}")
             }
+            SubmitError::DeadlineUnattainable { queue_wait_us } => write!(
+                f,
+                "deadline unattainable: queue wait ~{queue_wait_us}us already exceeds it (shed)"
+            ),
             SubmitError::Route(e) => write!(f, "routing failed: {e}"),
         }
     }
@@ -95,22 +132,29 @@ impl fmt::Display for SubmitError {
 impl std::error::Error for SubmitError {}
 
 /// Live per-variant state shared between the worker thread, the clients,
-/// and the router: an EWMA latency estimate, a health snapshot, and the
-/// number of in-flight requests. All lock-free so routing never contends
-/// with the serving hot path.
+/// and the router: an EWMA latency estimate, a queue-wait estimate, a
+/// health snapshot, the circuit breaker, and the number of in-flight
+/// requests. All lock-free so routing never contends with the serving hot
+/// path.
 #[derive(Debug)]
 pub(crate) struct VariantShared {
     ewma_us_bits: AtomicU64,
+    queue_wait_ewma_us_bits: AtomicU64,
     health: AtomicU8,
     inflight: AtomicU64,
+    shed_admission: AtomicU64,
+    pub(crate) breaker: CircuitBreaker,
 }
 
 impl VariantShared {
-    pub(crate) fn new() -> VariantShared {
+    pub(crate) fn new(breaker: BreakerConfig) -> VariantShared {
         VariantShared {
             ewma_us_bits: AtomicU64::new(0f64.to_bits()),
+            queue_wait_ewma_us_bits: AtomicU64::new(0f64.to_bits()),
             health: AtomicU8::new(BackendHealth::Healthy.as_u8()),
             inflight: AtomicU64::new(0),
+            shed_admission: AtomicU64::new(0),
+            breaker: CircuitBreaker::new(breaker),
         }
     }
 
@@ -120,6 +164,17 @@ impl VariantShared {
 
     pub(crate) fn set_ewma_us(&self, us: f64) {
         self.ewma_us_bits.store(us.to_bits(), Ordering::Relaxed);
+    }
+
+    /// EWMA of time requests spent queued before batch assembly — the
+    /// admission controller's estimate of what a new request will wait.
+    pub(crate) fn queue_wait_ewma_us(&self) -> f64 {
+        f64::from_bits(self.queue_wait_ewma_us_bits.load(Ordering::Relaxed))
+    }
+
+    pub(crate) fn set_queue_wait_ewma_us(&self, us: f64) {
+        self.queue_wait_ewma_us_bits
+            .store(us.to_bits(), Ordering::Relaxed);
     }
 
     pub(crate) fn health(&self) -> BackendHealth {
@@ -133,6 +188,12 @@ impl VariantShared {
     pub(crate) fn inflight(&self) -> u64 {
         self.inflight.load(Ordering::Relaxed)
     }
+
+    /// Requests shed at admission (deadline unattainable), folded into the
+    /// variant's [`Metrics`] snapshot by the server.
+    pub(crate) fn shed_admission(&self) -> u64 {
+        self.shed_admission.load(Ordering::Relaxed)
+    }
 }
 
 /// Handle for submitting requests to one variant's pipeline; cheap to clone
@@ -145,12 +206,17 @@ pub struct Client {
 }
 
 impl Client {
-    fn make_request(&self, image: Vec<f32>) -> (Request, PendingResponse) {
+    fn make_request(
+        &self,
+        image: Vec<f32>,
+        deadline: Option<Instant>,
+    ) -> (Request, PendingResponse) {
         let (reply_tx, reply_rx) = sync_channel(1);
         (
             Request {
                 image,
                 enqueued: Instant::now(),
+                deadline,
                 reply: reply_tx,
             },
             PendingResponse { rx: reply_rx },
@@ -167,10 +233,38 @@ impl Client {
         Ok(())
     }
 
+    /// Admission control: refuse a deadline the queue alone already makes
+    /// unattainable — shedding here costs nothing, shedding at dequeue
+    /// costs a queue slot and a wasted wait.
+    fn check_deadline(&self, deadline: Option<Instant>) -> Result<(), SubmitError> {
+        let Some(d) = deadline else { return Ok(()) };
+        let wait_us = self.shared.queue_wait_ewma_us();
+        let remaining = d.saturating_duration_since(Instant::now());
+        if wait_us > remaining.as_micros() as f64 {
+            self.shared.shed_admission.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::DeadlineUnattainable {
+                queue_wait_us: wait_us as u64,
+            });
+        }
+        Ok(())
+    }
+
     /// Non-blocking submit; sheds load when the queue is full.
     pub fn try_submit(&self, image: Vec<f32>) -> Result<PendingResponse, SubmitError> {
+        self.try_submit_with_deadline(image, None)
+    }
+
+    /// Non-blocking submit with a deadline the pipeline enforces: shed at
+    /// admission if the queue's EWMA wait already exceeds it, shed at
+    /// dequeue if it expires before batching.
+    pub fn try_submit_with_deadline(
+        &self,
+        image: Vec<f32>,
+        deadline: Option<Instant>,
+    ) -> Result<PendingResponse, SubmitError> {
         self.check_len(&image)?;
-        let (req, pending) = self.make_request(image);
+        self.check_deadline(deadline)?;
+        let (req, pending) = self.make_request(image, deadline);
         // Count in-flight BEFORE the send: a zero-latency worker can serve
         // and decrement in the window after `try_send` returns, and a late
         // increment would wrap the counter below zero.
@@ -190,8 +284,19 @@ impl Client {
 
     /// Blocking submit (applies backpressure to the caller).
     pub fn submit(&self, image: Vec<f32>) -> Result<PendingResponse, SubmitError> {
+        self.submit_with_deadline(image, None)
+    }
+
+    /// Blocking submit with a pipeline-enforced deadline (see
+    /// [`Client::try_submit_with_deadline`]).
+    pub fn submit_with_deadline(
+        &self,
+        image: Vec<f32>,
+        deadline: Option<Instant>,
+    ) -> Result<PendingResponse, SubmitError> {
         self.check_len(&image)?;
-        let (req, pending) = self.make_request(image);
+        self.check_deadline(deadline)?;
+        let (req, pending) = self.make_request(image, deadline);
         self.shared.inflight.fetch_add(1, Ordering::Relaxed);
         if self.tx.send(req).is_err() {
             self.shared.inflight.fetch_sub(1, Ordering::Relaxed);
@@ -225,6 +330,20 @@ impl PendingResponse {
             Err(_) => Err("timeout".to_string()),
         }
     }
+
+    /// Non-consuming wait: `Some(outcome)` if the response (or failure)
+    /// arrived within `d`, `None` on timeout — the handle stays usable, so
+    /// a hedging caller can keep polling the original while racing a
+    /// duplicate.
+    pub fn poll_timeout(&self, d: Duration) -> Option<Result<Response, String>> {
+        match self.rx.recv_timeout(d) {
+            Ok(r) => Some(r),
+            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Disconnected) => {
+                Some(Err("server dropped request".to_string()))
+            }
+        }
+    }
 }
 
 /// One variant's running pipeline: the client side of the queue plus the
@@ -246,7 +365,7 @@ impl VariantWorker {
             let dummy = Client {
                 tx: sync_channel(1).0,
                 image_len: 0,
-                shared: Arc::new(VariantShared::new()),
+                shared: Arc::new(VariantShared::new(BreakerConfig::default())),
             };
             let old = std::mem::replace(&mut self.client, dummy);
             drop(old);
@@ -263,18 +382,20 @@ impl Drop for VariantWorker {
 
 /// Spawn one variant's worker thread. `factory` runs *inside* the worker
 /// thread and builds the backend there — required because the PJRT client
-/// types are not `Send`. The backend is [`warmup`]-ed before the variant is
+/// types are not `Send`. It is a `Fn` (not `FnOnce`) because the
+/// supervisor re-invokes it to rebuild a crashed backend; it never leaves
+/// the worker thread. The backend is [`warmup`]-ed before the variant is
 /// announced ready; factory or warm-up failure fails the spawn.
 ///
 /// [`warmup`]: InferenceBackend::warmup
 pub(crate) fn spawn_variant<F>(name: &str, factory: F, cfg: BatcherConfig) -> Result<VariantWorker>
 where
-    F: FnOnce() -> Result<Box<dyn InferenceBackend>> + Send + 'static,
+    F: Fn() -> Result<Box<dyn InferenceBackend>> + Send + 'static,
 {
     assert!(cfg.max_batch >= 1);
     let (tx, rx) = sync_channel::<Request>(cfg.queue_capacity);
     let metrics = Arc::new(Mutex::new(Metrics::default()));
-    let shared = Arc::new(VariantShared::new());
+    let shared = Arc::new(VariantShared::new(cfg.breaker));
     let m2 = metrics.clone();
     let s2 = shared.clone();
     // The worker reports readiness (and the image length) or the factory's
@@ -296,7 +417,7 @@ where
                     return;
                 }
             };
-            batcher_loop(backend, rx, cfg, label, m2, s2, stop2)
+            supervised_loop(factory, backend, rx, cfg, label, m2, s2, stop2)
         })
         .expect("spawn batcher");
     let image_len = ready_rx
@@ -343,7 +464,9 @@ pub(crate) fn plan_executions(n: usize, supported_sorted: &[usize]) -> Vec<(usiz
 /// Idle decay applied to the EWMA latency estimate once per 25 ms idle
 /// tick (halves in ~0.9 s). Without it a variant that was degraded, then
 /// starved of traffic by the router, would keep its stale high estimate
-/// forever and never be probed again after recovering.
+/// forever and never be probed again after recovering. The queue-wait
+/// EWMA decays on the same tick so admission control unblocks once the
+/// queue drains.
 const IDLE_EWMA_DECAY: f64 = 0.98;
 
 /// After this many consecutive backend errors the worker reports the
@@ -359,18 +482,127 @@ fn worse(a: BackendHealth, b: BackendHealth) -> BackendHealth {
     }
 }
 
-/// The batcher loop: collect up to `max_batch` requests within `max_wait`
-/// of the first, split into supported backend executions (padding the last
-/// one), execute, fan out.
-fn batcher_loop(
-    backend: Box<dyn InferenceBackend>,
+/// Why [`batcher_loop`] returned.
+enum LoopExit {
+    /// Stop flag set or every client dropped — the worker is done.
+    Shutdown,
+    /// The backend panicked inside `infer_batch`: its state is suspect, so
+    /// the supervisor must rebuild it before serving more traffic.
+    Crashed,
+}
+
+/// Human-readable description of a caught panic payload.
+fn describe_panic(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(p) = payload.downcast_ref::<super::fault::InjectedPanic>() {
+        p.0.clone()
+    } else if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+/// The supervision shell around [`batcher_loop`]: serve until the backend
+/// crashes, then back off (failing queued requests fast instead of letting
+/// them rot), rebuild from the factory, and serve again. Within the
+/// restart budget crashes rebuild eagerly at exponential pacing; past it
+/// the worker parks at the maximum backoff and keeps probing — removing
+/// the fault always lets the variant return to service without a server
+/// restart. A successful batch resets the budget.
+#[allow(clippy::too_many_arguments)]
+fn supervised_loop<F>(
+    factory: F,
+    first_backend: Box<dyn InferenceBackend>,
     rx: Receiver<Request>,
     cfg: BatcherConfig,
     label: String,
     metrics: Arc<Mutex<Metrics>>,
     shared: Arc<VariantShared>,
     stop: Arc<AtomicBool>,
-) {
+) where
+    F: Fn() -> Result<Box<dyn InferenceBackend>> + Send + 'static,
+{
+    let mut supervisor = Supervisor::new(cfg.supervisor);
+    let mut backend = Some(first_backend);
+    loop {
+        if let Some(b) = backend.take() {
+            match batcher_loop(
+                b.as_ref(),
+                &rx,
+                &cfg,
+                &label,
+                &metrics,
+                &shared,
+                &stop,
+                &mut supervisor,
+            ) {
+                LoopExit::Shutdown => return,
+                LoopExit::Crashed => {}
+            }
+            // `b` (the crashed backend) drops here.
+        }
+        let backoff = supervisor.on_crash();
+        shared.set_health(BackendHealth::Unavailable);
+        lock_metrics(&metrics).worker_restarts += 1;
+        // Fail queued requests fast during the backoff window: their
+        // backend is gone and making them wait out the rebuild helps no
+        // one (retry policies can re-route them *now*).
+        let until = Instant::now() + backoff;
+        loop {
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            let now = Instant::now();
+            if now >= until {
+                break;
+            }
+            let step = (until - now).min(Duration::from_millis(25));
+            match rx.recv_timeout(step) {
+                Ok(r) => {
+                    lock_metrics(&metrics).errors += 1;
+                    shared.inflight.fetch_sub(1, Ordering::Relaxed);
+                    shared.breaker.record_failure();
+                    let _ = r
+                        .reply
+                        .send(Err("variant restarting after crash (supervisor backoff)"
+                            .to_string()));
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => return,
+            }
+        }
+        // Rebuild under catch_unwind too: a factory or warm-up that
+        // panics/fails is just another crash, paced by the same backoff.
+        match catch_unwind(AssertUnwindSafe(|| {
+            factory().and_then(|b| b.warmup().map(|()| b))
+        })) {
+            Ok(Ok(b)) => {
+                // Probation until the first successful batch promotes it.
+                shared.set_health(worse(b.health(), BackendHealth::Degraded));
+                backend = Some(b);
+            }
+            Ok(Err(_)) | Err(_) => {}
+        }
+    }
+}
+
+/// The batcher loop: collect up to `max_batch` requests within `max_wait`
+/// of the first, shed the expired ones, split into supported backend
+/// executions (padding the last one), execute under `catch_unwind`, fan
+/// out.
+#[allow(clippy::too_many_arguments)]
+fn batcher_loop(
+    backend: &dyn InferenceBackend,
+    rx: &Receiver<Request>,
+    cfg: &BatcherConfig,
+    label: &str,
+    metrics: &Arc<Mutex<Metrics>>,
+    shared: &Arc<VariantShared>,
+    stop: &Arc<AtomicBool>,
+    supervisor: &mut Supervisor,
+) -> LoopExit {
     let supported = {
         let mut s: Vec<usize> = backend
             .batch_sizes()
@@ -395,44 +627,77 @@ fn batcher_loop(
                 // Drain whatever is already queued, then exit.
                 match rx.try_recv() {
                     Ok(r) => break r,
-                    Err(_) => return,
+                    Err(_) => return LoopExit::Shutdown,
                 }
             }
             match rx.recv_timeout(Duration::from_millis(25)) {
                 Ok(r) => break r,
                 Err(RecvTimeoutError::Timeout) => {
                     // Idle tick: decay the latency estimate so excluded
-                    // variants eventually re-qualify and get probed.
-                    let mut m = metrics.lock().unwrap();
+                    // variants eventually re-qualify and get probed, and
+                    // the queue-wait estimate so admission control opens
+                    // back up once the queue has drained.
+                    let mut m = lock_metrics(metrics);
                     m.ewma_latency_us *= IDLE_EWMA_DECAY;
                     shared.set_ewma_us(m.ewma_latency_us);
+                    shared
+                        .set_queue_wait_ewma_us(shared.queue_wait_ewma_us() * IDLE_EWMA_DECAY);
                     continue;
                 }
-                Err(RecvTimeoutError::Disconnected) => return, // all clients dropped
+                Err(RecvTimeoutError::Disconnected) => return LoopExit::Shutdown,
             }
         };
-        let deadline = Instant::now() + cfg.max_wait;
+        let assemble_until = Instant::now() + cfg.max_wait;
         let mut batch = vec![first];
         while batch.len() < cfg.max_batch {
             let now = Instant::now();
-            if now >= deadline {
+            if now >= assemble_until {
                 break;
             }
-            match rx.recv_timeout(deadline - now) {
+            match rx.recv_timeout(assemble_until - now) {
                 Ok(r) => batch.push(r),
                 Err(RecvTimeoutError::Timeout) => break,
                 Err(RecvTimeoutError::Disconnected) => break,
             }
         }
 
-        let n = batch.len();
-        {
-            let mut m = metrics.lock().unwrap();
-            m.requests += n as u64;
-            for r in &batch {
-                m.queue_wait
-                    .record_us(r.enqueued.elapsed().as_micros() as f64);
+        // Deadline enforcement at dequeue: a request that expired while
+        // queued can only yield a late answer — shed it before it costs
+        // backend time that punctual requests need.
+        let now = Instant::now();
+        let mut live = Vec::with_capacity(batch.len());
+        let mut shed = 0u64;
+        for r in batch {
+            if r.deadline.is_some_and(|d| now >= d) {
+                shed += 1;
+                shared.inflight.fetch_sub(1, Ordering::Relaxed);
+                let _ = r
+                    .reply
+                    .send(Err("deadline expired before execution (shed)".to_string()));
+            } else {
+                live.push(r);
             }
+        }
+
+        let n = live.len();
+        {
+            let mut m = lock_metrics(metrics);
+            m.requests += n as u64 + shed;
+            m.shed_expired += shed;
+            let mut qw = shared.queue_wait_ewma_us();
+            for r in &live {
+                let wait_us = r.enqueued.elapsed().as_micros() as f64;
+                m.queue_wait.record_us(wait_us);
+                qw = if qw <= 0.0 {
+                    wait_us
+                } else {
+                    EWMA_ALPHA * wait_us + (1.0 - EWMA_ALPHA) * qw
+                };
+            }
+            shared.set_queue_wait_ewma_us(qw);
+        }
+        if n == 0 {
+            continue;
         }
 
         // Execute in supported-size chunks; each chunk pads up to its
@@ -444,7 +709,8 @@ fn batcher_loop(
         } else {
             plan_executions(n, &supported)
         };
-        let mut queue: std::collections::VecDeque<Request> = batch.into();
+        let mut queue: std::collections::VecDeque<Request> = live.into();
+        let mut crashed = false;
         for (take, exec_size) in plan {
             let chunk: Vec<Request> = queue.drain(..take).collect();
             let mut flat = Vec::with_capacity(exec_size * image_len);
@@ -454,19 +720,37 @@ fn batcher_loop(
             flat.resize(exec_size * image_len, 0.0); // zero padding
 
             {
-                let mut m = metrics.lock().unwrap();
+                let mut m = lock_metrics(metrics);
                 m.batches += 1;
                 m.batched_items += take as u64;
                 m.padded_items += (exec_size - take) as u64;
             }
 
-            let result = backend.infer_batch(&flat, exec_size);
+            // Panic isolation: a backend panic fails this chunk like any
+            // backend error (feeding the same health machinery), then
+            // surrenders the backend to the supervisor for a rebuild.
+            let result = match catch_unwind(AssertUnwindSafe(|| {
+                backend.infer_batch(&flat, exec_size)
+            })) {
+                Ok(r) => r,
+                Err(payload) => {
+                    crashed = true;
+                    lock_metrics(metrics).panics += 1;
+                    Err(crate::anyhow!(
+                        "backend panicked: {}",
+                        describe_panic(payload.as_ref())
+                    ))
+                }
+            };
             consecutive_errors = if result.is_ok() {
+                supervisor.on_success();
+                shared.breaker.record_success();
                 0
             } else {
+                shared.breaker.record_failure();
                 consecutive_errors.saturating_add(1)
             };
-            let observed = if consecutive_errors >= ERRORS_TO_UNAVAILABLE {
+            let observed = if crashed || consecutive_errors >= ERRORS_TO_UNAVAILABLE {
                 BackendHealth::Unavailable
             } else if consecutive_errors > 0 {
                 BackendHealth::Degraded
@@ -476,8 +760,14 @@ fn batcher_loop(
             // The worse of the backend's self-report and what the worker
             // observes: a backend that errors every call must stop
             // attracting policy-routed traffic even if it claims health.
-            shared.set_health(worse(backend.health(), observed));
-            let mut m = metrics.lock().unwrap();
+            // Skip the self-report after a panic — the backend is suspect.
+            let self_report = if crashed {
+                BackendHealth::Unavailable
+            } else {
+                backend.health()
+            };
+            shared.set_health(worse(self_report, observed));
+            let mut m = lock_metrics(metrics);
             if cfg.fpga_fps_sim > 0.0 {
                 m.fpga_virtual_us += take as f64 / cfg.fpga_fps_sim * 1e6;
             }
@@ -496,7 +786,7 @@ fn batcher_loop(
                             class,
                             latency,
                             batch_size: take,
-                            variant: label.clone(),
+                            variant: label.to_string(),
                         }));
                     }
                 }
@@ -509,14 +799,33 @@ fn batcher_loop(
                     }
                 }
             }
+            if crashed {
+                // Fail the rest of the assembled batch too: the backend is
+                // gone and the supervisor owns what happens next.
+                let mut m = lock_metrics(metrics);
+                for r in queue.drain(..) {
+                    m.errors += 1;
+                    shared.inflight.fetch_sub(1, Ordering::Relaxed);
+                    shared.breaker.record_failure();
+                    let _ = r
+                        .reply
+                        .send(Err("backend crashed; variant restarting".to_string()));
+                }
+                break;
+            }
+        }
+        if crashed {
+            return LoopExit::Crashed;
         }
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::fault::InjectedPanic;
     use super::*;
     use crate::serving::backend::MockBackend;
+    use crate::serving::retry::BreakerState;
 
     fn mock_worker(
         batch_sizes: Vec<usize>,
@@ -526,7 +835,7 @@ mod tests {
         spawn_variant(
             "test",
             move || {
-                Ok(Box::new(MockBackend::new(12, 4, batch_sizes, latency_us))
+                Ok(Box::new(MockBackend::new(12, 4, batch_sizes.clone(), latency_us))
                     as Box<dyn InferenceBackend>)
             },
             cfg,
@@ -586,7 +895,7 @@ mod tests {
             max_batch: 16,
             max_wait: Duration::from_millis(500),
             queue_capacity: 32,
-            fpga_fps_sim: 0.0,
+            ..Default::default()
         };
         let w = mock_worker(vec![1, 4], 1_000, cfg);
         let client = w.client.clone();
@@ -602,7 +911,7 @@ mod tests {
             assert_eq!(r.class, want, "split batch must preserve every image");
             assert!(r.batch_size <= 4, "chunks can't exceed the backend max");
         }
-        let m = w.metrics.lock().unwrap().clone();
+        let m = lock_metrics(&w.metrics).clone();
         assert_eq!(m.responses, 11);
         assert_eq!(m.errors, 0);
         assert_eq!(m.requests, 11);
@@ -619,7 +928,7 @@ mod tests {
             max_batch: 1,
             max_wait: Duration::from_millis(0),
             queue_capacity: 64,
-            fpga_fps_sim: 0.0,
+            ..Default::default()
         };
         let w = mock_worker(vec![1], 20_000, cfg);
         let client = w.client.clone();
@@ -702,7 +1011,159 @@ mod tests {
             assert!(client.classify(vec![0.0; 12]).is_err());
         }
         assert_eq!(w.shared.health(), BackendHealth::Unavailable);
-        let m = w.metrics.lock().unwrap().clone();
+        let m = lock_metrics(&w.metrics).clone();
         assert!(m.errors >= 4);
+    }
+
+    #[test]
+    fn breaker_opens_on_consecutive_failures() {
+        let w = spawn_variant(
+            "breaking",
+            || Ok(Box::new(LyingBackend) as Box<dyn InferenceBackend>),
+            BatcherConfig {
+                max_batch: 1,
+                max_wait: Duration::from_millis(0),
+                breaker: BreakerConfig {
+                    failure_threshold: 3,
+                    open_for: Duration::from_secs(60),
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let client = w.client.clone();
+        for _ in 0..4 {
+            assert!(client.classify(vec![0.0; 12]).is_err());
+        }
+        assert_eq!(w.shared.breaker.state(), BreakerState::Open);
+    }
+
+    /// Panics on every `infer_batch` until `calm` flips; tracks factory
+    /// rebuilds through the shared `builds` counter.
+    struct PanickyBackend {
+        calm: Arc<AtomicBool>,
+    }
+
+    impl InferenceBackend for PanickyBackend {
+        fn batch_sizes(&self) -> Vec<usize> {
+            vec![1]
+        }
+        fn image_len(&self) -> usize {
+            12
+        }
+        fn classes(&self) -> usize {
+            4
+        }
+        fn infer_batch(&self, _images: &[f32], batch: usize) -> Result<Vec<f32>> {
+            if !self.calm.load(Ordering::SeqCst) {
+                std::panic::panic_any(InjectedPanic("test panic".to_string()));
+            }
+            Ok(vec![0.25; batch * 4])
+        }
+    }
+
+    #[test]
+    fn panic_is_isolated_and_supervisor_rebuilds() {
+        super::super::fault::silence_injected_panics();
+        let calm = Arc::new(AtomicBool::new(false));
+        let builds = Arc::new(AtomicU64::new(0));
+        let (calm2, builds2) = (calm.clone(), builds.clone());
+        let w = spawn_variant(
+            "panicky",
+            move || {
+                builds2.fetch_add(1, Ordering::SeqCst);
+                Ok(Box::new(PanickyBackend { calm: calm2.clone() })
+                    as Box<dyn InferenceBackend>)
+            },
+            BatcherConfig {
+                max_batch: 1,
+                max_wait: Duration::from_millis(0),
+                supervisor: SupervisorConfig {
+                    restart_budget: 2,
+                    backoff_initial: Duration::from_millis(5),
+                    backoff_max: Duration::from_millis(40),
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let client = w.client.clone();
+        // The panic must surface as an error reply, not a hung request.
+        let err = client.classify(vec![0.0; 12]).unwrap_err();
+        assert!(err.contains("panic"), "{err}");
+        assert_eq!(w.shared.health(), BackendHealth::Unavailable);
+        // Lift the fault: the supervisor's rebuild must bring the variant
+        // back without respawning the worker.
+        calm.store(true, Ordering::SeqCst);
+        let recovered = (0..200).find_map(|_| {
+            std::thread::sleep(Duration::from_millis(10));
+            client.classify(vec![0.0; 12]).ok()
+        });
+        assert!(recovered.is_some(), "variant must recover after the fault lifts");
+        assert_eq!(w.shared.health(), BackendHealth::Healthy);
+        assert!(builds.load(Ordering::SeqCst) >= 2, "factory must have rebuilt");
+        let m = lock_metrics(&w.metrics).clone();
+        assert!(m.panics >= 1, "panic counter: {}", m.panics);
+        assert!(m.worker_restarts >= 1, "restarts: {}", m.worker_restarts);
+    }
+
+    #[test]
+    fn expired_requests_are_shed_at_dequeue() {
+        let cfg = BatcherConfig {
+            max_batch: 1,
+            max_wait: Duration::from_millis(0),
+            ..Default::default()
+        };
+        let w = mock_worker(vec![1], 30_000, cfg);
+        let client = w.client.clone();
+        // Occupy the backend (30 ms mock latency), then queue a request
+        // whose deadline expires while it waits.
+        let blocker = client.submit(vec![0.0; 12]).unwrap();
+        let doomed = client
+            .submit_with_deadline(
+                vec![0.0; 12],
+                Some(Instant::now() + Duration::from_millis(5)),
+            )
+            .unwrap();
+        blocker.wait().unwrap();
+        let err = doomed.wait().unwrap_err();
+        assert!(err.contains("shed"), "{err}");
+        let m = lock_metrics(&w.metrics).clone();
+        assert_eq!(m.shed_expired, 1);
+        assert_eq!(w.shared.inflight(), 0, "shed requests release in-flight");
+    }
+
+    #[test]
+    fn unattainable_deadline_is_shed_at_admission() {
+        let w = mock_worker(vec![1], 0, BatcherConfig::default());
+        let client = w.client.clone();
+        // Pretend the queue is already backed up by a second.
+        w.shared.set_queue_wait_ewma_us(1_000_000.0);
+        let r = client.submit_with_deadline(
+            vec![0.0; 12],
+            Some(Instant::now() + Duration::from_millis(10)),
+        );
+        match r {
+            Err(SubmitError::DeadlineUnattainable { queue_wait_us }) => {
+                assert!(queue_wait_us >= 900_000, "{queue_wait_us}");
+            }
+            other => panic!("expected admission shed, got {other:?}"),
+        }
+        assert_eq!(w.shared.shed_admission(), 1);
+        // A deadline-free request is untouched by admission control.
+        assert!(client.classify(vec![0.0; 12]).is_ok());
+    }
+
+    #[test]
+    fn poll_timeout_is_non_consuming() {
+        let w = mock_worker(vec![1], 20_000, BatcherConfig::default());
+        let client = w.client.clone();
+        let p = client.submit(vec![0.0; 12]).unwrap();
+        assert!(p.poll_timeout(Duration::from_millis(1)).is_none(), "not ready yet");
+        let r = p
+            .poll_timeout(Duration::from_secs(5))
+            .expect("must complete")
+            .unwrap();
+        assert_eq!(r.variant, "test");
     }
 }

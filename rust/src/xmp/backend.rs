@@ -17,12 +17,21 @@ use crate::runtime::argmax_rows;
 use crate::serving::{BackendHealth, InferenceBackend, VariantSpec};
 use crate::util::error::Result;
 use std::cell::OnceCell;
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// Consecutive `infer_batch` errors after which [`XmpBackend::health`]
+/// self-reports `Unavailable` (mirrors the worker's own error threshold);
+/// a single error already reports `Degraded`. Any success resets the
+/// streak back to `Healthy`.
+const ERRORS_TO_UNAVAILABLE: u32 = 3;
 
 /// A truly-mixed-precision execution backend for one served variant.
 pub struct XmpBackend {
     model: XmpModel,
     packed: OnceCell<PackedModel>,
     fast: bool,
+    /// Error streak feeding `health()`; fresh backends start `Healthy`.
+    consecutive_errors: AtomicU32,
 }
 
 impl XmpBackend {
@@ -32,6 +41,7 @@ impl XmpBackend {
             model,
             packed: OnceCell::new(),
             fast: true,
+            consecutive_errors: AtomicU32::new(0),
         }
     }
 
@@ -70,28 +80,8 @@ impl XmpBackend {
         let cols = logits.len().max(1);
         Ok(argmax_rows(&logits, cols).first().copied().unwrap_or(0))
     }
-}
 
-impl InferenceBackend for XmpBackend {
-    fn batch_sizes(&self) -> Vec<usize> {
-        vec![1]
-    }
-
-    /// The engine runs any batch unpadded: the batcher never splits or
-    /// zero-fills for this backend.
-    fn supports_batch(&self, n: usize) -> bool {
-        n >= 1
-    }
-
-    fn image_len(&self) -> usize {
-        self.model.image_len()
-    }
-
-    fn classes(&self) -> usize {
-        self.model.classes as usize
-    }
-
-    fn infer_batch(&self, images: &[f32], batch: usize) -> Result<Vec<f32>> {
+    fn infer_batch_inner(&self, images: &[f32], batch: usize) -> Result<Vec<f32>> {
         if images.len() != batch * self.image_len() {
             crate::bail!(
                 "xmp: bad input length {} for batch {batch} (image_len {})",
@@ -115,6 +105,37 @@ impl InferenceBackend for XmpBackend {
         }
         Ok(logits)
     }
+}
+
+impl InferenceBackend for XmpBackend {
+    fn batch_sizes(&self) -> Vec<usize> {
+        vec![1]
+    }
+
+    /// The engine runs any batch unpadded: the batcher never splits or
+    /// zero-fills for this backend.
+    fn supports_batch(&self, n: usize) -> bool {
+        n >= 1
+    }
+
+    fn image_len(&self) -> usize {
+        self.model.image_len()
+    }
+
+    fn classes(&self) -> usize {
+        self.model.classes as usize
+    }
+
+    fn infer_batch(&self, images: &[f32], batch: usize) -> Result<Vec<f32>> {
+        let r = self.infer_batch_inner(images, batch);
+        match &r {
+            Ok(_) => self.consecutive_errors.store(0, Ordering::Relaxed),
+            Err(_) => {
+                self.consecutive_errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        r
+    }
 
     /// Pre-pack the digit planes, then run one probe image through BOTH
     /// kernels: the fast path must match the scalar reference bit-for-bit
@@ -136,8 +157,17 @@ impl InferenceBackend for XmpBackend {
         Ok(())
     }
 
+    /// Self-reported health from the live error streak: fresh and
+    /// recently-successful backends are `Healthy`, any error degrades, a
+    /// streak of [`ERRORS_TO_UNAVAILABLE`] reports `Unavailable` until a
+    /// success resets it. The worker polls this between batches and merges
+    /// it with its own observations.
     fn health(&self) -> BackendHealth {
-        BackendHealth::Healthy
+        match self.consecutive_errors.load(Ordering::Relaxed) {
+            0 => BackendHealth::Healthy,
+            n if n < ERRORS_TO_UNAVAILABLE => BackendHealth::Degraded,
+            _ => BackendHealth::Unavailable,
+        }
     }
 }
 
@@ -238,6 +268,21 @@ mod tests {
         let w4a8 = XmpBackend::from_spec(&base, &VariantSpec::uniform(4), XmpConfig::default())
             .unwrap();
         assert_ne!(a.infer_batch(&img, 1).unwrap(), w4a8.infer_batch(&img, 1).unwrap());
+    }
+
+    #[test]
+    fn health_tracks_error_streak_and_recovers() {
+        let b = backend(2);
+        assert_eq!(b.health(), BackendHealth::Healthy);
+        assert!(b.infer_batch(&[0.0; 3], 1).is_err());
+        assert_eq!(b.health(), BackendHealth::Degraded, "one error degrades");
+        for _ in 1..ERRORS_TO_UNAVAILABLE {
+            assert!(b.infer_batch(&[0.0; 3], 1).is_err());
+        }
+        assert_eq!(b.health(), BackendHealth::Unavailable);
+        // A success clears the streak entirely.
+        assert!(b.infer_batch(&vec![0.1; 3072], 1).is_ok());
+        assert_eq!(b.health(), BackendHealth::Healthy);
     }
 
     #[test]

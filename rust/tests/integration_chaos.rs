@@ -1,0 +1,317 @@
+//! Chaos tests: the fault-tolerant serving stack under injected failure.
+//!
+//! The planner's joint (wq, aq) Pareto family is hosted in one gateway with
+//! one variant wrapped in a [`FaultyBackend`]. A forced panic storm must
+//! not deadlock the gateway or lose a single reply; policy traffic must
+//! converge onto the healthy variants; the supervisor must restore the
+//! faulty variant to `Healthy` — without a server restart — once the fault
+//! is lifted; and pinned (`Named`/`Exact`) selectors must fail fast rather
+//! than fall back.
+
+use mpcnn::cnn::resnet;
+use mpcnn::config::RunConfig;
+use mpcnn::planner::{emit_variants, plan, PlannerConfig};
+use mpcnn::serving::{
+    silence_injected_panics, BackendHealth, BatcherConfig, BreakerConfig, FaultControls,
+    FaultPlan, FaultyBackend, Forced, InferRequest, InferenceBackend, MockBackend, RetryPolicy,
+    Server, SupervisorConfig, VariantSelector,
+};
+use mpcnn::util::error::Result;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const IMG: usize = 24;
+const CLASSES: usize = 6;
+
+/// Batcher config tuned for chaos tests: fast supervisor rebuilds and a
+/// quick-tripping breaker so transitions are observable in milliseconds.
+fn chaos_cfg() -> BatcherConfig {
+    BatcherConfig {
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+        queue_capacity: 64,
+        supervisor: SupervisorConfig {
+            restart_budget: 2,
+            backoff_initial: Duration::from_millis(5),
+            backoff_max: Duration::from_millis(40),
+        },
+        breaker: BreakerConfig {
+            failure_threshold: 3,
+            open_for: Duration::from_millis(50),
+        },
+        ..Default::default()
+    }
+}
+
+/// The planner's joint (wq, aq) family served on mock backends, with the
+/// first (most accurate) frontier variant wrapped in a fault injector that
+/// shares `controls` across supervisor rebuilds. Returns the server, the
+/// faulty variant's name, and every hosted name.
+fn faulty_family_server(
+    controls: Arc<FaultControls>,
+) -> (Server, String, Vec<String>) {
+    let base = resnet::resnet_small(1, 10);
+    let cfg = RunConfig { slices: vec![2], ..RunConfig::default() };
+    let pcfg = PlannerConfig {
+        wq_choices: vec![2, 8],
+        aq_choices: vec![4, 8],
+        beam_width: 8,
+        max_evals: 4,
+        ..PlannerConfig::default()
+    };
+    let report = plan(&base, &cfg, &pcfg).expect("small planner run");
+    let variants = emit_variants(&report);
+    assert!(variants.len() >= 2, "chaos needs somewhere healthy to fall back to");
+    let faulty_name = variants[0].spec.name.clone();
+    let names: Vec<String> = variants.iter().map(|v| v.spec.name.clone()).collect();
+    let mut builder = Server::builder().retry_policy(RetryPolicy::attempts(3));
+    for (i, v) in variants.into_iter().enumerate() {
+        let wrap = i == 0;
+        let controls = controls.clone();
+        let factory = move || {
+            let inner =
+                Box::new(MockBackend::new(IMG, CLASSES, vec![1, 4], 50)) as Box<dyn InferenceBackend>;
+            Ok(if wrap {
+                Box::new(FaultyBackend::new(inner, FaultPlan::default(), controls.clone()))
+                    as Box<dyn InferenceBackend>
+            } else {
+                inner
+            })
+        };
+        builder = builder.variant_with_profile(v.spec, v.profile, chaos_cfg(), factory);
+    }
+    (builder.build().expect("family boots"), faulty_name, names)
+}
+
+fn health_of(server: &Server, name: &str) -> BackendHealth {
+    server
+        .statuses()
+        .into_iter()
+        .find(|s| &*s.name == name)
+        .map(|s| s.health)
+        .expect("variant is registered")
+}
+
+/// Poll until `pred` holds or `timeout` expires; true iff it held.
+fn eventually(timeout: Duration, mut pred: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + timeout;
+    while Instant::now() < deadline {
+        if pred() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    pred()
+}
+
+/// The lowest accuracy floor every hosted variant clears, so
+/// `MinAccuracy` is a pure "any healthy variant" policy selector here.
+fn min_accuracy_floor(server: &Server) -> f64 {
+    server
+        .statuses()
+        .iter()
+        .filter_map(|s| s.top5_accuracy)
+        .fold(f64::INFINITY, f64::min)
+        - 1.0
+}
+
+#[test]
+fn panic_storm_converges_reroutes_and_recovers_without_restart() -> Result<()> {
+    silence_injected_panics();
+    let controls = FaultControls::new();
+    let (server, faulty, _names) = faulty_family_server(controls.clone());
+    let floor = min_accuracy_floor(&server);
+    let policy = VariantSelector::MinAccuracy(floor);
+    let img = || vec![1.0f32; IMG];
+
+    // Phase 0 — clean: every selector answers, the faulty variant serves
+    // its own pinned traffic.
+    let r = server
+        .infer(InferRequest::new(img()).with_variant(VariantSelector::Named(faulty.clone())))
+        .map_err(|e| mpcnn::anyhow!("{e}"))?;
+    assert_eq!(r.variant, faulty);
+    assert_eq!(health_of(&server, &faulty), BackendHealth::Healthy);
+
+    // Phase 1 — storm: every call into the faulty backend panics.
+    controls.force(Forced::Panic);
+    // Zero lost replies: every submission must come back (Ok or a real
+    // error), never hang and never report a dropped reply channel. Submit
+    // a burst directly (no retry) so the panics actually land on the
+    // faulty variant's queue while it is still routable.
+    let mut pending = Vec::new();
+    for _ in 0..24 {
+        match server.submit(
+            InferRequest::new(img()).with_variant(VariantSelector::Named(faulty.clone())),
+        ) {
+            Ok(p) => pending.push(p),
+            Err(_) => {} // backpressure during the storm is shedding, not loss
+        }
+    }
+    let expected = pending.len();
+    let mut answered = 0usize;
+    for p in pending {
+        let r = p
+            .poll_timeout(Duration::from_secs(10))
+            .expect("reply must arrive before a generous timeout (no deadlock)");
+        if let Err(e) = &r {
+            assert!(
+                !e.contains("server dropped request"),
+                "a crash must fail the request explicitly, not drop it: {e}"
+            );
+        }
+        answered += 1;
+    }
+    assert_eq!(answered, expected, "every accepted request got exactly one reply");
+
+    // Under sustained failing traffic the variant must be observable as
+    // Unavailable: worker-side while the supervisor backs off, and via the
+    // open circuit breaker between rebuild probations. (With the traffic
+    // stopped it may legitimately idle at Degraded probation, so keep
+    // probing while polling.)
+    assert!(
+        eventually(Duration::from_secs(5), || {
+            let _ = server
+                .infer(InferRequest::new(img()).with_variant(VariantSelector::Named(faulty.clone())));
+            health_of(&server, &faulty) == BackendHealth::Unavailable
+        }),
+        "panicking variant must become Unavailable, got {:?}",
+        health_of(&server, &faulty)
+    );
+
+    // Policy traffic converges onto healthy variants: with retry enabled
+    // every request succeeds, and none is served by the faulty variant.
+    // `Default` pins the *first* route onto the (default, storming)
+    // variant, so each of these demonstrably re-routes; `MinAccuracy`
+    // routes around it by health alone.
+    for i in 0..30 {
+        let sel = if i % 2 == 0 { VariantSelector::Default } else { policy.clone() };
+        let r = server
+            .infer(InferRequest::new(img()).with_variant(sel))
+            .map_err(|e| mpcnn::anyhow!("policy traffic must survive the storm: {e}"))?;
+        assert_ne!(r.variant, faulty, "storming variant must not serve policy traffic");
+    }
+
+    // Pinned traffic fails fast — and never comes back under another name.
+    for _ in 0..5 {
+        match server
+            .infer(InferRequest::new(img()).with_variant(VariantSelector::Named(faulty.clone())))
+        {
+            Err(_) => {}
+            Ok(r) => assert_eq!(
+                r.variant, faulty,
+                "Named must never be served by a different variant"
+            ),
+        }
+    }
+
+    // Ledger is consistent: panics were injected and counted, the
+    // supervisor restarted the worker, retries happened.
+    assert!(controls.injected_panics() >= 1, "{}", controls.injected_panics());
+    let m = server.metrics(&faulty).expect("metrics for the faulty variant");
+    assert!(m.panics >= 1, "worker must count caught panics: {m:?}");
+    assert!(m.worker_restarts >= 1, "supervisor must have rebuilt: {m:?}");
+    let rc = server.robust_counters();
+    assert!(rc.retried >= 1, "policy traffic was retried off the storm: {rc:?}");
+
+    // Phase 2 — lift the fault: the supervisor's next rebuild + a
+    // successful batch restore the variant to Healthy, with no server
+    // restart. Pinned probes give it traffic to prove itself on.
+    controls.force(Forced::None);
+    assert!(
+        eventually(Duration::from_secs(10), || {
+            let _ = server.infer(
+                InferRequest::new(img()).with_variant(VariantSelector::Named(faulty.clone())),
+            );
+            health_of(&server, &faulty) == BackendHealth::Healthy
+        }),
+        "variant must recover to Healthy after the fault is lifted, got {:?}",
+        health_of(&server, &faulty)
+    );
+    let r = server
+        .infer(InferRequest::new(img()).with_variant(VariantSelector::Named(faulty.clone())))
+        .map_err(|e| mpcnn::anyhow!("recovered variant must serve again: {e}"))?;
+    assert_eq!(r.variant, faulty);
+
+    // Every request the workers saw is accounted: responses + errors +
+    // dequeue sheds add up to requests, per variant.
+    for (name, m) in server.shutdown() {
+        assert!(
+            m.responses + m.errors + m.shed_expired >= m.requests,
+            "variant {name} leaks requests: {m:?}"
+        );
+    }
+    Ok(())
+}
+
+#[test]
+fn deadlines_shed_instead_of_queueing_forever() {
+    // One slow variant (25 ms/call, batch 1) and a burst of requests with
+    // 5 ms deadlines: almost everything must be shed — at admission once
+    // the queue-wait EWMA learns the pace, or at dequeue — and every
+    // request still gets exactly one reply.
+    let server = Server::builder()
+        .variant_with_profile(
+            mpcnn::serving::VariantSpec::uniform(2),
+            mpcnn::serving::VariantProfile {
+                top5_accuracy: Some(87.48),
+                fpga_fps: 245.0,
+                fpga_mj_per_frame: 1.0,
+            },
+            BatcherConfig {
+                max_batch: 1,
+                max_wait: Duration::from_millis(0),
+                queue_capacity: 64,
+                ..Default::default()
+            },
+            || {
+                Ok(Box::new(MockBackend::new(IMG, CLASSES, vec![1], 25_000))
+                    as Box<dyn InferenceBackend>)
+            },
+        )
+        .build()
+        .unwrap();
+
+    let mut pending = Vec::new();
+    let mut shed_at_admission = 0u64;
+    for _ in 0..30 {
+        match server.submit(
+            InferRequest::new(vec![0.0; IMG]).with_deadline(Duration::from_millis(5)),
+        ) {
+            Ok(p) => pending.push(p),
+            Err(e) => {
+                assert!(
+                    e.to_string().contains("shed") || e.to_string().contains("queue"),
+                    "only shed/backpressure may refuse: {e}"
+                );
+                shed_at_admission += 1;
+            }
+        }
+    }
+    let mut ok = 0u64;
+    let mut shed_at_dequeue = 0u64;
+    let mut other_err = 0u64;
+    for p in pending {
+        match p
+            .poll_timeout(Duration::from_secs(10))
+            .expect("replies must arrive (no deadlock)")
+        {
+            Ok(_) => ok += 1,
+            Err(e) if e.contains("shed") => shed_at_dequeue += 1,
+            Err(_) => other_err += 1,
+        }
+    }
+    assert!(
+        shed_at_admission + shed_at_dequeue > 0,
+        "a 25 ms backend cannot honour thirty 5 ms deadlines: ok={ok} other={other_err}"
+    );
+    let m = server.metrics("w2").unwrap();
+    assert_eq!(
+        m.shed_expired, shed_at_dequeue,
+        "worker-side shed counter must match the shed replies"
+    );
+    assert!(
+        m.shed() >= shed_at_dequeue,
+        "total shed includes admission sheds: {m:?}"
+    );
+    server.shutdown();
+}

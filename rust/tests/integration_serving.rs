@@ -28,15 +28,18 @@ fn cfg(max_batch: usize) -> BatcherConfig {
         max_wait: Duration::from_millis(1),
         queue_capacity: 128,
         fpga_fps_sim: 0.0,
+        ..Default::default()
     }
 }
 
 fn mock_factory(
     latency: Arc<AtomicU64>,
-) -> impl FnOnce() -> Result<Box<dyn InferenceBackend>> + Send + 'static {
+) -> impl Fn() -> Result<Box<dyn InferenceBackend>> + Send + 'static {
+    // `Fn`, not `FnOnce`: the supervisor may re-invoke the factory to
+    // rebuild a crashed backend, so each call clones the shared knob.
     move || {
         Ok(Box::new(
-            MockBackend::new(IMG, CLASSES, vec![1, 4, 8], 0).with_latency_source(latency),
+            MockBackend::new(IMG, CLASSES, vec![1, 4, 8], 0).with_latency_source(latency.clone()),
         ) as Box<dyn InferenceBackend>)
     }
 }
@@ -236,6 +239,7 @@ fn oversized_batches_split_through_the_full_stack() {
                 max_wait: Duration::from_millis(20),
                 queue_capacity: 128,
                 fpga_fps_sim: 0.0,
+                ..Default::default()
             },
             || {
                 Ok(Box::new(MockBackend::new(IMG, CLASSES, vec![1, 4], 2_000))
@@ -281,7 +285,7 @@ fn single_variant(
 ) -> (Server, mpcnn::serving::Client) {
     let server = Server::builder()
         .variant_with_profile(VariantSpec::uniform(4), profile(89.1, 100.0), bc, move || {
-            Ok(Box::new(MockBackend::new(12, 4, batch_sizes, latency_us))
+            Ok(Box::new(MockBackend::new(12, 4, batch_sizes.clone(), latency_us))
                 as Box<dyn InferenceBackend>)
         })
         .build()
@@ -309,6 +313,7 @@ fn single_variant_batching_assembles_multiple() {
         max_wait: Duration::from_millis(50),
         queue_capacity: 128,
         fpga_fps_sim: 0.0,
+        ..Default::default()
     };
     let (server, client) = single_variant(1000, bc, vec![1, 4, 8]);
     let pending: Vec<_> = (0..6)
@@ -342,6 +347,7 @@ fn single_variant_backpressure_sheds_load() {
         max_wait: Duration::from_millis(0),
         queue_capacity: 2,
         fpga_fps_sim: 0.0,
+        ..Default::default()
     };
     let (_server, client) = single_variant(50_000, bc, vec![1]);
     let mut pending = Vec::new();
@@ -418,6 +424,7 @@ fn single_variant_sustained_load() {
         max_wait: Duration::from_millis(1),
         queue_capacity: 64,
         fpga_fps_sim: 245.0, // the paper's headline fps as virtual clock
+        ..Default::default()
     };
     let server = Server::builder()
         .variant_with_profile(VariantSpec::uniform(2), profile(87.48, 245.0), bc, || {
@@ -498,6 +505,7 @@ fn single_variant_pjrt_backed_serving_end_to_end() {
                 max_wait: Duration::from_millis(2),
                 queue_capacity: 64,
                 fpga_fps_sim: 0.0,
+                ..Default::default()
             },
             move || {
                 Ok(Box::new(mpcnn::serving::EngineBackend::load(&dir2, 4)?)

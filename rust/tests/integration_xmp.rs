@@ -287,6 +287,7 @@ fn gateway_serves_real_sliced_digit_classes() {
         max_wait: std::time::Duration::from_millis(1),
         queue_capacity: 64,
         fpga_fps_sim: 0.0,
+        ..Default::default()
     };
     let server = Server::builder()
         .variant(VariantSpec::uniform(2), bc, xmp_factory(VariantSpec::uniform(2)))
@@ -396,6 +397,7 @@ fn planned_joint_family_survives_concurrent_mixed_selector_storm() {
         max_wait: std::time::Duration::from_millis(1),
         queue_capacity: 256,
         fpga_fps_sim: 0.0,
+        ..Default::default()
     };
     let mut builder = Server::builder();
     for s in &specs {
