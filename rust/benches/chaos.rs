@@ -120,7 +120,10 @@ fn main() {
 
     // --- flaky scenario on the default variant ---
     let controls = FaultControls::new();
-    let server = family(Some((FaultPlan::scenario("flaky"), controls.clone())));
+    let server = family(Some((
+        FaultPlan::scenario("flaky").expect("known scenario"),
+        controls.clone(),
+    )));
     let mut flaky_us = Vec::new();
     let (mut flaky_miss, mut flaky_total) = (0u64, 0u64);
     b.run(&format!("chaos/flaky-{WAVE}req-wave"), || {

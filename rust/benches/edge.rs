@@ -1,0 +1,227 @@
+//! Bench edge: the cost of the HTTP front-end, and what the
+//! content-addressed cache buys back.
+//!
+//! One single-variant mock gateway is driven three ways with the same
+//! sequential 64-request waves: `inproc` calls `Server::infer` directly
+//! (no HTTP — the floor), `http-miss` sends every request with a fresh
+//! image over loopback HTTP (connect + parse + classify + respond, cache
+//! cold by construction), and `http-hit` repeats one image so everything
+//! after the first request is served from the cache without touching a
+//! backend. Each `RemoteClient` request opens its own connection, so the
+//! HTTP rows price the full per-request path. `BENCH_edge.json` records
+//! p50/p99/rps per mode, the hit/miss speedup, and the cache ledger so
+//! the edge overhead is tracked across PRs like the hotpath.
+
+use mpcnn::edge::{EdgeConfig, EdgeServer, RemoteClient};
+use mpcnn::serving::{
+    BatcherConfig, InferRequest, InferenceBackend, MockBackend, RetryPolicy, Server,
+    VariantProfile, VariantSpec,
+};
+use mpcnn::util::bench::Bencher;
+use mpcnn::util::json::Json;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const WAVE: usize = 64;
+const IMAGE_LEN: usize = 3072;
+const LATENCY_US: u64 = 300;
+
+fn gateway() -> Server {
+    Server::builder()
+        .retry_policy(RetryPolicy::attempts(3))
+        .variant_with_profile(
+            VariantSpec::uniform(4),
+            VariantProfile {
+                top5_accuracy: Some(89.10),
+                fpga_fps: 165.0,
+                fpga_mj_per_frame: 1.0,
+            },
+            BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                queue_capacity: 128,
+                fpga_fps_sim: 0.0,
+                ..Default::default()
+            },
+            || {
+                Ok(Box::new(MockBackend::new(IMAGE_LEN, 10, vec![1, 8], LATENCY_US))
+                    as Box<dyn InferenceBackend>)
+            },
+        )
+        .build()
+        .unwrap()
+}
+
+/// One wave straight into the gateway — the no-HTTP floor.
+fn wave_inproc(server: &Server, samples_us: &mut Vec<f64>, seq: &mut u64) -> u64 {
+    let mut ok = 0u64;
+    for _ in 0..WAVE {
+        *seq += 1;
+        let img = vec![*seq as f32; IMAGE_LEN];
+        let t0 = Instant::now();
+        let r = server.infer(InferRequest::new(img));
+        samples_us.push(t0.elapsed().as_micros() as f64);
+        ok += r.is_ok() as u64;
+    }
+    ok
+}
+
+/// One wave over loopback HTTP. `unique` sends a fresh image per request
+/// (every one a cache miss); otherwise one image repeats (every one after
+/// the very first a cache hit).
+fn wave_http(client: &RemoteClient, samples_us: &mut Vec<f64>, seq: &mut u64, unique: bool) -> u64 {
+    let mut ok = 0u64;
+    for _ in 0..WAVE {
+        let img = if unique {
+            *seq += 1;
+            vec![*seq as f32; IMAGE_LEN]
+        } else {
+            vec![7.0f32; IMAGE_LEN]
+        };
+        let t0 = Instant::now();
+        let r = client.classify(&img, None, None, None);
+        samples_us.push(t0.elapsed().as_micros() as f64);
+        ok += r.is_ok() as u64;
+    }
+    ok
+}
+
+fn percentile(samples: &[f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.total_cmp(b));
+    s[(((s.len() - 1) as f64) * q).round() as usize]
+}
+
+/// Sequential driver, so throughput is requests over summed latency.
+fn mode_json(samples: &[f64]) -> Json {
+    let total_us: f64 = samples.iter().sum();
+    let rps = if total_us > 0.0 {
+        1e6 * samples.len() as f64 / total_us
+    } else {
+        0.0
+    };
+    Json::obj(vec![
+        ("requests", Json::num(samples.len() as f64)),
+        ("p50_us", Json::num(percentile(samples, 0.50))),
+        ("p99_us", Json::num(percentile(samples, 0.99))),
+        ("rps", Json::num(rps)),
+    ])
+}
+
+fn main() {
+    let mut b = Bencher::new();
+
+    // --- in-process floor ---
+    let server = gateway();
+    let mut inproc_us = Vec::new();
+    let mut seq = 0u64;
+    b.run(&format!("edge/inproc-{WAVE}req-wave"), || {
+        wave_inproc(&server, &mut inproc_us, &mut seq)
+    });
+    server.shutdown();
+
+    // --- the same gateway behind the HTTP edge ---
+    let server = Arc::new(gateway());
+    let edge = EdgeServer::bind(
+        server.clone(),
+        "127.0.0.1:0",
+        EdgeConfig {
+            rate_per_sec: 0.0, // benching the datapath, not the limiter
+            cache_capacity: 65536, // large enough that misses stay misses
+            ..EdgeConfig::default()
+        },
+        None,
+    )
+    .expect("edge binds");
+    let client = RemoteClient::new(&edge.local_addr().to_string(), RetryPolicy::attempts(3));
+
+    let mut miss_us = Vec::new();
+    let mut seq = 1_000_000u64; // disjoint from the inproc images
+    b.run(&format!("edge/http-miss-{WAVE}req-wave"), || {
+        wave_http(&client, &mut miss_us, &mut seq, true)
+    });
+
+    let mut hit_us = Vec::new();
+    b.run(&format!("edge/http-hit-{WAVE}req-wave"), || {
+        wave_http(&client, &mut hit_us, &mut seq, false)
+    });
+
+    let snap = edge.shutdown();
+    let server = Arc::try_unwrap(server).expect("edge released the gateway");
+    server.shutdown();
+
+    let miss_p50 = percentile(&miss_us, 0.50);
+    let hit_p50 = percentile(&hit_us, 0.50);
+    println!("\n== edge summary ==");
+    for (label, us) in [
+        ("inproc   ", &inproc_us),
+        ("http-miss", &miss_us),
+        ("http-hit ", &hit_us),
+    ] {
+        println!(
+            "  {label}: {} reqs  p50 {:.0} us  p99 {:.0} us",
+            us.len(),
+            percentile(us, 0.50),
+            percentile(us, 0.99),
+        );
+    }
+    println!(
+        "  cache: {} hits / {} misses / {} insertions / {} evictions; hit speedup at p50 {:.2}x",
+        snap.cache_hits,
+        snap.cache_misses,
+        snap.cache_insertions,
+        snap.cache_evictions,
+        if hit_p50 > 0.0 { miss_p50 / hit_p50 } else { 0.0 },
+    );
+    for r in &b.results {
+        println!("  {}", r.summary());
+    }
+    if std::env::var("MPCNN_BENCH_JSON").ok().as_deref() == Some("0") {
+        return;
+    }
+    let doc = Json::obj(vec![
+        (
+            "results",
+            b.to_json().get("results").cloned().unwrap_or(Json::Arr(Vec::new())),
+        ),
+        (
+            "edge",
+            Json::obj(vec![
+                ("image_len", Json::num(IMAGE_LEN as f64)),
+                ("wave", Json::num(WAVE as f64)),
+                ("backend_latency_us", Json::num(LATENCY_US as f64)),
+                ("inproc", mode_json(&inproc_us)),
+                ("http_miss", mode_json(&miss_us)),
+                ("http_hit", mode_json(&hit_us)),
+                (
+                    "hit_speedup_p50",
+                    Json::num(if hit_p50 > 0.0 { miss_p50 / hit_p50 } else { 0.0 }),
+                ),
+                (
+                    "cache",
+                    Json::obj(vec![
+                        ("hits", Json::num(snap.cache_hits as f64)),
+                        ("misses", Json::num(snap.cache_misses as f64)),
+                        ("insertions", Json::num(snap.cache_insertions as f64)),
+                        ("evictions", Json::num(snap.cache_evictions as f64)),
+                    ]),
+                ),
+                (
+                    "coalesce",
+                    Json::obj(vec![
+                        ("leaders", Json::num(snap.coalesce_leaders as f64)),
+                        ("joined", Json::num(snap.coalesce_joined as f64)),
+                    ]),
+                ),
+            ]),
+        ),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_edge.json");
+    match std::fs::write(&path, doc.to_string_pretty()) {
+        Ok(()) => println!("  (wrote {})", path.display()),
+        Err(e) => eprintln!("  (could not write {}: {e})", path.display()),
+    }
+}

@@ -1,0 +1,214 @@
+//! Bounded, content-addressed response cache.
+//!
+//! Classification is deterministic per `(variant, image)` — two identical
+//! images routed to the same variant produce bit-identical logits — so the
+//! edge can answer repeats without touching a backend. Keys are
+//! `sha256(variant || 0x00 || image-bytes)`; entries are the full
+//! [`Answer`] (class + logits), evicted LRU once `capacity` is exceeded.
+//!
+//! Only *successful* responses that pass the configured response check are
+//! inserted (see `handlers`): a `FaultyBackend` corrupt-logits response is
+//! counted under `uncacheable` and never stored, so a transient fault can
+//! never be amplified into a sticky wrong answer.
+
+use super::{Answer, Key};
+use crate::util::sha256::sha256;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Content address for one `(variant, image)` request.
+pub fn cache_key(variant: &str, image: &[f32]) -> Key {
+    let mut bytes = Vec::with_capacity(variant.len() + 1 + image.len() * 4);
+    bytes.extend_from_slice(variant.as_bytes());
+    bytes.push(0);
+    for v in image {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    sha256(&bytes)
+}
+
+struct Inner {
+    map: HashMap<Key, Answer>,
+    /// LRU order, least-recent at the front. Touched on hit.
+    order: VecDeque<Key>,
+}
+
+pub struct ResponseCache {
+    capacity: usize,
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    insertions: AtomicU64,
+    evictions: AtomicU64,
+    uncacheable: AtomicU64,
+}
+
+impl ResponseCache {
+    /// `capacity == 0` disables the cache (every lookup is a miss).
+    pub fn new(capacity: usize) -> ResponseCache {
+        ResponseCache {
+            capacity,
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                order: VecDeque::new(),
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            insertions: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            uncacheable: AtomicU64::new(0),
+        }
+    }
+
+    pub fn get(&self, key: &Key) -> Option<Answer> {
+        if self.capacity == 0 {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        match inner.map.get(key).cloned() {
+            Some(answer) => {
+                if let Some(pos) = inner.order.iter().position(|k| k == key) {
+                    inner.order.remove(pos);
+                    inner.order.push_back(*key);
+                }
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(answer)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    pub fn insert(&self, key: Key, answer: Answer) {
+        if self.capacity == 0 {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if inner.map.insert(key, answer).is_none() {
+            inner.order.push_back(key);
+        }
+        self.insertions.fetch_add(1, Ordering::Relaxed);
+        while inner.map.len() > self.capacity {
+            match inner.order.pop_front() {
+                Some(oldest) => {
+                    inner.map.remove(&oldest);
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Record a successful response that failed the cacheability check
+    /// (e.g. disagreed with the reference model) and was NOT stored.
+    pub fn note_uncacheable(&self) {
+        self.uncacheable.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .map
+            .len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn insertions(&self) -> u64 {
+        self.insertions.load(Ordering::Relaxed)
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    pub fn uncacheable(&self) -> u64 {
+        self.uncacheable.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn answer(class: usize) -> Answer {
+        Answer {
+            class,
+            variant: "w2".to_string(),
+            logits: vec![class as f32],
+        }
+    }
+
+    #[test]
+    fn key_separates_variant_and_image() {
+        let img = vec![1.0f32, 2.0, 3.0];
+        assert_ne!(cache_key("w2", &img), cache_key("w4", &img));
+        assert_ne!(cache_key("w2", &img), cache_key("w2", &[1.0, 2.0]));
+        assert_eq!(cache_key("w2", &img), cache_key("w2", &img));
+    }
+
+    #[test]
+    fn hit_miss_and_counters() {
+        let c = ResponseCache::new(8);
+        let k = cache_key("w2", &[1.0]);
+        assert!(c.get(&k).is_none());
+        c.insert(k, answer(5));
+        assert_eq!(c.get(&k).unwrap().class, 5);
+        assert_eq!((c.hits(), c.misses(), c.insertions()), (1, 1, 1));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn lru_eviction_at_capacity() {
+        let c = ResponseCache::new(2);
+        let k1 = cache_key("w2", &[1.0]);
+        let k2 = cache_key("w2", &[2.0]);
+        let k3 = cache_key("w2", &[3.0]);
+        c.insert(k1, answer(1));
+        c.insert(k2, answer(2));
+        // Touch k1 so k2 is the least-recently-used.
+        assert!(c.get(&k1).is_some());
+        c.insert(k3, answer(3));
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.evictions(), 1);
+        assert!(c.get(&k1).is_some(), "recently-used entry survived");
+        assert!(c.get(&k2).is_none(), "LRU entry was evicted");
+        assert!(c.get(&k3).is_some());
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let c = ResponseCache::new(0);
+        let k = cache_key("w2", &[1.0]);
+        c.insert(k, answer(1));
+        assert!(c.get(&k).is_none());
+        assert_eq!(c.insertions(), 0);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn reinsert_same_key_does_not_duplicate_order() {
+        let c = ResponseCache::new(2);
+        let k = cache_key("w2", &[1.0]);
+        c.insert(k, answer(1));
+        c.insert(k, answer(2));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(&k).unwrap().class, 2);
+        assert_eq!(c.evictions(), 0);
+    }
+}

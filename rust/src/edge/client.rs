@@ -1,0 +1,185 @@
+//! `RemoteClient` — the std-only HTTP/1.1 client behind
+//! `mpcnn classify --remote`, also used by the integration tests and the
+//! edge bench.
+//!
+//! Connection-level failures (refused, reset, timed out socket) are
+//! retried under the serving [`RetryPolicy`]'s attempt budget and
+//! exponential backoff — the same policy shape PR 6 gave the gateway.
+//! HTTP error *statuses* are never retried here: the server already ran
+//! its own retry/hedge machinery before answering, and a deterministic
+//! classify is idempotent, so only transport loss is worth a resend.
+
+use super::http;
+use crate::anyhow;
+use crate::serving::RetryPolicy;
+use crate::util::error::Result;
+use crate::util::json::Json;
+use std::time::Duration;
+
+/// A parsed successful `/v1/classify` response.
+#[derive(Clone, Debug)]
+pub struct RemoteAnswer {
+    pub class: usize,
+    pub variant: String,
+    pub logits: Vec<f32>,
+    /// Served from the content-addressed cache (no inference ran).
+    pub cached: bool,
+    /// Rode an in-flight duplicate's inference.
+    pub coalesced: bool,
+}
+
+pub struct RemoteClient {
+    addr: String,
+    pub retry: RetryPolicy,
+    pub timeout: Duration,
+}
+
+impl RemoteClient {
+    /// Accepts `http://HOST:PORT` or bare `HOST:PORT`.
+    pub fn new(addr: &str, retry: RetryPolicy) -> RemoteClient {
+        let addr = addr.strip_prefix("http://").unwrap_or(addr);
+        RemoteClient {
+            addr: addr.trim_end_matches('/').to_string(),
+            retry,
+            timeout: Duration::from_secs(30),
+        }
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// POST one image to `/v1/classify`.
+    pub fn classify(
+        &self,
+        image: &[f32],
+        route: Option<&str>,
+        deadline_ms: Option<u64>,
+        client_id: Option<&str>,
+    ) -> Result<RemoteAnswer> {
+        let mut pairs: Vec<(&str, Json)> = vec![(
+            "image",
+            Json::Arr(image.iter().map(|&v| Json::num(v as f64)).collect()),
+        )];
+        if let Some(r) = route {
+            pairs.push(("route", Json::str(r)));
+        }
+        if let Some(d) = deadline_ms {
+            pairs.push(("deadline_ms", Json::num(d as f64)));
+        }
+        if let Some(c) = client_id {
+            pairs.push(("client", Json::str(c)));
+        }
+        let body = Json::obj(pairs).to_string_compact();
+        let resp = self.send_with_retry("POST", "/v1/classify", body.as_bytes())?;
+        if resp.status != 200 {
+            return Err(anyhow!(
+                "HTTP {} from {}: {}",
+                resp.status,
+                self.addr,
+                resp.body_text().trim()
+            ));
+        }
+        parse_answer(&resp.body)
+    }
+
+    /// GET a path (healthz, metrics); returns (status, body).
+    pub fn get(&self, path: &str) -> Result<(u16, String)> {
+        let resp = self.send_with_retry("GET", path, &[])?;
+        Ok((resp.status, resp.body_text()))
+    }
+
+    fn send_with_retry(
+        &self,
+        method: &str,
+        path: &str,
+        body: &[u8],
+    ) -> Result<http::ClientResponse> {
+        let attempts = self.retry.max_attempts.max(1);
+        let mut last: Option<std::io::Error> = None;
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                let backoff = self.retry.backoff_before(attempt);
+                if !backoff.is_zero() {
+                    std::thread::sleep(backoff);
+                }
+            }
+            let headers = [("Content-Type", "application/json")];
+            match http::request(&self.addr, method, path, &headers, body, self.timeout) {
+                Ok(r) => return Ok(r),
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(anyhow!(
+            "connection to {} failed after {attempts} attempt(s): {}",
+            self.addr,
+            last.map(|e| e.to_string()).unwrap_or_default()
+        ))
+    }
+}
+
+fn parse_answer(body: &[u8]) -> Result<RemoteAnswer> {
+    let text = std::str::from_utf8(body).map_err(|e| anyhow!("response is not UTF-8: {e}"))?;
+    let j = crate::util::json::parse(text).map_err(|e| anyhow!("bad response JSON: {e}"))?;
+    let class = j
+        .get("class")
+        .and_then(|v| v.as_u64())
+        .ok_or_else(|| anyhow!("response is missing \"class\""))? as usize;
+    let variant = j
+        .get("variant")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("response is missing \"variant\""))?
+        .to_string();
+    let logits = j
+        .get("logits")
+        .and_then(|v| v.as_arr())
+        .map(|a| a.iter().filter_map(|v| v.as_f64()).map(|f| f as f32).collect())
+        .unwrap_or_default();
+    Ok(RemoteAnswer {
+        class,
+        variant,
+        logits,
+        cached: j.get("cached").and_then(|v| v.as_bool()).unwrap_or(false),
+        coalesced: j.get("coalesced").and_then(|v| v.as_bool()).unwrap_or(false),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn url_forms_normalize() {
+        let retry = RetryPolicy::default();
+        assert_eq!(
+            RemoteClient::new("http://127.0.0.1:8080/", retry).addr(),
+            "127.0.0.1:8080"
+        );
+        let retry = RetryPolicy::default();
+        assert_eq!(
+            RemoteClient::new("127.0.0.1:8080", retry).addr(),
+            "127.0.0.1:8080"
+        );
+    }
+
+    #[test]
+    fn parse_answer_round_trips() {
+        let body = br#"{"class":7,"variant":"w8","cached":true,"coalesced":false,"logits":[0.5,-1.25]}"#;
+        let a = parse_answer(body).unwrap();
+        assert_eq!(a.class, 7);
+        assert_eq!(a.variant, "w8");
+        assert!(a.cached);
+        assert!(!a.coalesced);
+        assert_eq!(a.logits, vec![0.5, -1.25]);
+        assert!(parse_answer(b"{}").is_err());
+    }
+
+    #[test]
+    fn unreachable_server_fails_after_retries() {
+        // Reserved-but-closed port: connect must fail fast, and the error
+        // must mention the attempt budget.
+        let client = RemoteClient::new("127.0.0.1:1", RetryPolicy::attempts(2));
+        let e = client.get("/healthz").unwrap_err().to_string();
+        assert!(e.contains("2 attempt"), "{e}");
+    }
+}

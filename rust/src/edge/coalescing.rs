@@ -1,0 +1,194 @@
+//! Identical-request coalescing: concurrent duplicates of one
+//! `(variant, image)` key share a single backend inference.
+//!
+//! The first arrival becomes the *leader* and runs the inference; later
+//! arrivals become *followers* and block on a channel. The leader's
+//! [`LeaderGuard`] broadcasts the outcome (success or error) to every
+//! follower on [`complete`](LeaderGuard::complete) — and its `Drop` impl
+//! broadcasts an error if the leader unwinds without completing, so a
+//! panicking handler can never strand its followers.
+
+use super::{Answer, Key};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Mutex;
+
+/// What followers receive: the leader's verbatim outcome.
+pub type Outcome = std::result::Result<Answer, String>;
+
+pub struct Coalescer {
+    /// key -> followers waiting on the in-flight leader.
+    inflight: Mutex<HashMap<Key, Vec<SyncSender<Outcome>>>>,
+    leaders: AtomicU64,
+    joined: AtomicU64,
+}
+
+/// Result of [`Coalescer::join`]: run the inference, or wait for whoever is.
+pub enum Join<'a> {
+    Leader(LeaderGuard<'a>),
+    Follower(Receiver<Outcome>),
+}
+
+/// Held by the thread that owns the in-flight inference for a key.
+pub struct LeaderGuard<'a> {
+    coalescer: &'a Coalescer,
+    key: Key,
+    done: bool,
+}
+
+impl Default for Coalescer {
+    fn default() -> Coalescer {
+        Coalescer::new()
+    }
+}
+
+impl Coalescer {
+    pub fn new() -> Coalescer {
+        Coalescer {
+            inflight: Mutex::new(HashMap::new()),
+            leaders: AtomicU64::new(0),
+            joined: AtomicU64::new(0),
+        }
+    }
+
+    /// Join the in-flight inference for `key`, or claim leadership of it.
+    pub fn join(&self, key: Key) -> Join<'_> {
+        let mut map = self.inflight.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(waiters) = map.get_mut(&key) {
+            // Buffer 1 so the leader's broadcast never blocks on a
+            // follower that timed out and dropped its receiver.
+            let (tx, rx) = sync_channel(1);
+            waiters.push(tx);
+            self.joined.fetch_add(1, Ordering::Relaxed);
+            Join::Follower(rx)
+        } else {
+            map.insert(key, Vec::new());
+            self.leaders.fetch_add(1, Ordering::Relaxed);
+            Join::Leader(LeaderGuard {
+                coalescer: self,
+                key,
+                done: false,
+            })
+        }
+    }
+
+    /// Inferences led (== unique keys that reached a backend).
+    pub fn leaders(&self) -> u64 {
+        self.leaders.load(Ordering::Relaxed)
+    }
+
+    /// Requests that rode an in-flight duplicate instead of inferring.
+    pub fn joined(&self) -> u64 {
+        self.joined.load(Ordering::Relaxed)
+    }
+
+    fn finish(&self, key: &Key, outcome: &Outcome) {
+        let waiters = {
+            let mut map = self.inflight.lock().unwrap_or_else(|e| e.into_inner());
+            map.remove(key).unwrap_or_default()
+        };
+        for w in waiters {
+            // A follower that gave up dropped its receiver; ignore.
+            let _ = w.send(outcome.clone());
+        }
+    }
+}
+
+impl LeaderGuard<'_> {
+    /// Publish the outcome to every follower and release the key.
+    pub fn complete(mut self, outcome: &Outcome) {
+        self.done = true;
+        self.coalescer.finish(&self.key, outcome);
+    }
+}
+
+impl Drop for LeaderGuard<'_> {
+    fn drop(&mut self) {
+        if !self.done {
+            self.coalescer.finish(
+                &self.key,
+                &Err("coalescing leader aborted before completing".to_string()),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn key(b: u8) -> Key {
+        [b; 32]
+    }
+
+    fn answer() -> Answer {
+        Answer {
+            class: 3,
+            variant: "w2".to_string(),
+            logits: vec![0.0, 1.0],
+        }
+    }
+
+    #[test]
+    fn leader_broadcasts_to_followers() {
+        let c = Coalescer::new();
+        let leader = match c.join(key(1)) {
+            Join::Leader(g) => g,
+            Join::Follower(_) => panic!("first join must lead"),
+        };
+        let rx1 = match c.join(key(1)) {
+            Join::Follower(rx) => rx,
+            Join::Leader(_) => panic!("duplicate must follow"),
+        };
+        let rx2 = match c.join(key(1)) {
+            Join::Follower(rx) => rx,
+            Join::Leader(_) => panic!("duplicate must follow"),
+        };
+        leader.complete(&Ok(answer()));
+        assert_eq!(rx1.recv().unwrap().unwrap().class, 3);
+        assert_eq!(rx2.recv().unwrap().unwrap().class, 3);
+        assert_eq!(c.leaders(), 1);
+        assert_eq!(c.joined(), 2);
+        // Key released: next join leads again.
+        assert!(matches!(c.join(key(1)), Join::Leader(_)));
+    }
+
+    #[test]
+    fn distinct_keys_do_not_coalesce() {
+        let c = Coalescer::new();
+        assert!(matches!(c.join(key(1)), Join::Leader(_)));
+        assert!(matches!(c.join(key(2)), Join::Leader(_)));
+    }
+
+    #[test]
+    fn dropped_leader_errors_followers_instead_of_hanging() {
+        let c = Coalescer::new();
+        let leader = match c.join(key(9)) {
+            Join::Leader(g) => g,
+            Join::Follower(_) => panic!(),
+        };
+        let rx = match c.join(key(9)) {
+            Join::Follower(rx) => rx,
+            Join::Leader(_) => panic!(),
+        };
+        drop(leader); // simulates a panicking handler
+        let outcome = rx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert!(outcome.unwrap_err().contains("aborted"));
+    }
+
+    #[test]
+    fn gone_follower_does_not_block_the_broadcast() {
+        let c = Coalescer::new();
+        let leader = match c.join(key(4)) {
+            Join::Leader(g) => g,
+            Join::Follower(_) => panic!(),
+        };
+        match c.join(key(4)) {
+            Join::Follower(rx) => drop(rx), // follower gave up
+            Join::Leader(_) => panic!(),
+        }
+        leader.complete(&Ok(answer())); // must not block or panic
+    }
+}

@@ -1,0 +1,306 @@
+//! Route dispatch and the classify pipeline.
+//!
+//! The classify path is the edge's back-pressure spine, in order:
+//! parse → per-client rate limit (429) → global admission gate (503) →
+//! route resolution → content-addressed cache → coalescer → the gateway's
+//! own bounded queue + deadline shedding + retry/hedge machinery. Every
+//! refusal carries `Retry-After` and a counter; nothing is silently
+//! queued and nothing is silently dropped.
+
+use super::coalescing::Join;
+use super::http::{HttpRequest, HttpResponse};
+use super::{cache, metrics, Answer, EdgeState};
+use crate::serving::{BackendHealth, InferRequest, RouteError, VariantSelector};
+use crate::util::json::Json;
+use std::time::Duration;
+
+/// Fallback bound on a coalescing follower's wait when the request
+/// carries no deadline; generous because the leader's own inference is
+/// already bounded by the gateway's machinery.
+const FOLLOWER_WAIT_DEFAULT: Duration = Duration::from_secs(60);
+/// Extra margin a follower waits past the request deadline (the leader
+/// may have started slightly earlier with a slightly different budget).
+const FOLLOWER_WAIT_MARGIN: Duration = Duration::from_secs(5);
+
+/// Dispatch one parsed request.
+pub fn handle(state: &EdgeState, req: &HttpRequest, peer: &str) -> HttpResponse {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/classify") => classify(state, req, peer),
+        ("GET", "/healthz") => healthz(state),
+        ("GET", "/metrics") => HttpResponse::new(
+            200,
+            "text/plain; version=0.0.4; charset=utf-8",
+            metrics::prometheus(state).into_bytes(),
+        ),
+        ("GET", "/v1/classify") | ("POST", "/healthz") | ("POST", "/metrics") => {
+            HttpResponse::text(405, "method not allowed\n")
+        }
+        (m, p) => HttpResponse::text(404, format!("no route for {m} {p}\n")),
+    }
+}
+
+fn health_str(h: BackendHealth) -> &'static str {
+    match h {
+        BackendHealth::Healthy => "healthy",
+        BackendHealth::Degraded => "degraded",
+        BackendHealth::Unavailable => "unavailable",
+    }
+}
+
+/// 200 while any variant can serve; 503 once every backend is gone.
+fn healthz(state: &EdgeState) -> HttpResponse {
+    let statuses = state.server.statuses();
+    let serving = statuses
+        .iter()
+        .any(|s| s.health != BackendHealth::Unavailable);
+    let body = Json::obj(vec![
+        (
+            "status",
+            Json::str(if serving { "ok" } else { "unavailable" }),
+        ),
+        ("draining", Json::Bool(state.draining())),
+        (
+            "variants",
+            Json::Arr(
+                statuses
+                    .iter()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("name", Json::str(s.name.to_string())),
+                            ("health", Json::str(health_str(s.health))),
+                            ("ewma_latency_us", Json::num(s.ewma_latency_us)),
+                            ("inflight", Json::num(s.inflight as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    HttpResponse::json(if serving { 200 } else { 503 }, &body)
+}
+
+struct ClassifyBody {
+    image: Vec<f32>,
+    selector: VariantSelector,
+    deadline: Option<Duration>,
+    client: Option<String>,
+}
+
+fn parse_body(raw: &[u8]) -> std::result::Result<ClassifyBody, String> {
+    let text = std::str::from_utf8(raw).map_err(|_| "body is not UTF-8".to_string())?;
+    let j = crate::util::json::parse(text).map_err(|e| format!("bad JSON: {e}"))?;
+    let image = j
+        .get("image")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| "missing \"image\" (array of numbers)".to_string())?
+        .iter()
+        .map(|v| v.as_f64().map(|f| f as f32))
+        .collect::<Option<Vec<f32>>>()
+        .ok_or_else(|| "\"image\" must contain only numbers".to_string())?;
+    if image.is_empty() {
+        return Err("\"image\" must not be empty".to_string());
+    }
+    let selector = match j.get("route").and_then(|v| v.as_str()) {
+        Some(s) => VariantSelector::parse(s).map_err(|e| format!("bad \"route\": {e}"))?,
+        None => VariantSelector::Default,
+    };
+    let deadline = j
+        .get("deadline_ms")
+        .and_then(|v| v.as_f64())
+        .filter(|d| d.is_finite() && *d > 0.0)
+        .map(|d| Duration::from_secs_f64(d / 1e3));
+    let client = j
+        .get("client")
+        .and_then(|v| v.as_str())
+        .map(str::to_string);
+    Ok(ClassifyBody {
+        image,
+        selector,
+        deadline,
+        client,
+    })
+}
+
+/// Map a gateway error string onto an HTTP status. The gateway's error
+/// surface is strings (its own public contract), so this is a keyword
+/// map; anything unrecognized is a 502 from the backend.
+fn error_response(e: &str) -> HttpResponse {
+    let lower = e.to_ascii_lowercase();
+    if lower.contains("timeout") {
+        HttpResponse::text(504, format!("{e}\n"))
+    } else if lower.contains("bad input") || lower.contains("image length") {
+        HttpResponse::text(400, format!("{e}\n"))
+    } else if lower.contains("shed")
+        || lower.contains("deadline")
+        || lower.contains("backpressure")
+        || lower.contains("queue full")
+        || lower.contains("restarting")
+        || lower.contains("breaker")
+    {
+        HttpResponse::text(503, format!("{e}\n")).retry_after_secs(1)
+    } else {
+        HttpResponse::text(502, format!("backend error: {e}\n"))
+    }
+}
+
+fn answer_response(a: &Answer, cached: bool, coalesced: bool) -> HttpResponse {
+    let body = Json::obj(vec![
+        ("class", Json::num(a.class as f64)),
+        ("variant", Json::str(a.variant.clone())),
+        ("cached", Json::Bool(cached)),
+        ("coalesced", Json::Bool(coalesced)),
+        (
+            "logits",
+            Json::Arr(a.logits.iter().map(|&l| Json::num(l as f64)).collect()),
+        ),
+    ]);
+    HttpResponse::json(200, &body)
+}
+
+fn classify(state: &EdgeState, req: &HttpRequest, peer: &str) -> HttpResponse {
+    state.metrics.note_classify();
+    let body = match parse_body(&req.body) {
+        Ok(b) => b,
+        Err(e) => {
+            state.metrics.note_bad_request();
+            return HttpResponse::text(400, format!("{e}\n"));
+        }
+    };
+    if state.draining() {
+        return HttpResponse::text(503, "draining\n").retry_after_secs(1);
+    }
+
+    // Client identity for the token bucket: JSON `client` field, else the
+    // X-Client-Id header, else the peer IP.
+    let client = body
+        .client
+        .clone()
+        .or_else(|| req.header("x-client-id").map(str::to_string))
+        .unwrap_or_else(|| peer.to_string());
+    if let Err(retry_after) = state.limiter.acquire(&client) {
+        state.metrics.note_rate_limited();
+        let secs = retry_after.as_secs_f64().ceil().max(1.0) as u64;
+        return HttpResponse::text(429, "rate limited\n").retry_after_secs(secs);
+    }
+
+    // Global admission ahead of the variant queues; RAII permit spans the
+    // whole inference (coalesced waits included).
+    let Some(_permit) = state.gate.try_enter() else {
+        state.metrics.note_admission_shed();
+        return HttpResponse::text(503, "server at capacity\n").retry_after_secs(1);
+    };
+
+    // Resolve the route once so the cache/coalescing key names the
+    // concrete variant this request would land on.
+    let variant = match state.server.route(&body.selector) {
+        Ok(v) => v,
+        Err(RouteError::NoSuchVariant(what)) => {
+            return HttpResponse::text(404, format!("no such variant: {what}\n"));
+        }
+        Err(e) => return HttpResponse::text(503, format!("unroutable: {e}\n")).retry_after_secs(1),
+    };
+    let key = cache::cache_key(&variant, &body.image);
+    if let Some(hit) = state.cache.get(&key) {
+        return answer_response(&hit, true, false);
+    }
+
+    match state.coalescer.join(key) {
+        Join::Follower(rx) => {
+            let wait = body
+                .deadline
+                .map(|d| d + FOLLOWER_WAIT_MARGIN)
+                .unwrap_or(FOLLOWER_WAIT_DEFAULT);
+            match rx.recv_timeout(wait) {
+                Ok(Ok(a)) => answer_response(&a, false, true),
+                Ok(Err(e)) => error_response(&e),
+                Err(_) => HttpResponse::text(504, "coalesced wait timed out\n"),
+            }
+        }
+        Join::Leader(guard) => {
+            let mut infer = InferRequest::new(body.image.clone()).with_variant(body.selector);
+            if let Some(d) = body.deadline {
+                infer = infer.with_deadline(d);
+            }
+            let outcome = state.server.infer(infer).map(|resp| Answer {
+                class: resp.class,
+                variant: resp.variant,
+                logits: resp.logits,
+            });
+            if let Ok(a) = &outcome {
+                // Cache only reference-agreeing successes; a corrupt
+                // response must never become a sticky wrong answer. Keyed
+                // under the variant that actually answered (retries may
+                // have re-routed past the resolved one).
+                let cacheable = state.check.as_ref().map_or(true, |c| c(&body.image, a));
+                if cacheable {
+                    state
+                        .cache
+                        .insert(cache::cache_key(&a.variant, &body.image), a.clone());
+                } else {
+                    state.cache.note_uncacheable();
+                }
+            }
+            guard.complete(&outcome);
+            match outcome {
+                Ok(a) => answer_response(&a, false, false),
+                Err(e) => error_response(&e),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_body_accepts_full_request() {
+        let raw = br#"{"image":[1.0,2.5,3.0],"route":"exact:2","deadline_ms":50,"client":"c1"}"#;
+        let b = parse_body(raw).unwrap();
+        assert_eq!(b.image, vec![1.0, 2.5, 3.0]);
+        assert!(matches!(b.selector, VariantSelector::Exact(2)));
+        assert_eq!(b.deadline, Some(Duration::from_millis(50)));
+        assert_eq!(b.client.as_deref(), Some("c1"));
+    }
+
+    #[test]
+    fn parse_body_defaults_and_rejects() {
+        let b = parse_body(br#"{"image":[0.5]}"#).unwrap();
+        assert!(matches!(b.selector, VariantSelector::Default));
+        assert!(b.deadline.is_none());
+        assert!(parse_body(b"not json").is_err());
+        assert!(parse_body(br#"{"image":[]}"#).is_err());
+        assert!(parse_body(br#"{"image":["x"]}"#).is_err());
+        assert!(parse_body(br#"{"route":"exact:2"}"#).is_err());
+        assert!(parse_body(br#"{"image":[1],"route":"exact:nope"}"#).is_err());
+    }
+
+    #[test]
+    fn error_mapping_statuses() {
+        assert_eq!(error_response("timeout").status, 504);
+        assert_eq!(error_response("bad input: image length 5").status, 400);
+        assert_eq!(error_response("shed: deadline expired in queue").status, 503);
+        assert_eq!(error_response("queue full").status, 503);
+        assert_eq!(error_response("mock backend exploded").status, 502);
+    }
+
+    #[test]
+    fn answer_logits_round_trip_bit_identically() {
+        let a = Answer {
+            class: 2,
+            variant: "w2".to_string(),
+            logits: vec![0.1f32, -3.25, 1e-7, 42.0],
+        };
+        let resp = answer_response(&a, false, false);
+        let j = crate::util::json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        let back: Vec<f32> = j
+            .get("logits")
+            .and_then(|v| v.as_arr())
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect();
+        assert_eq!(back, a.logits, "f32 -> JSON -> f32 must be lossless");
+        assert_eq!(j.get("class").and_then(|v| v.as_u64()), Some(2));
+    }
+}

@@ -1,0 +1,345 @@
+//! Minimal HTTP/1.1 wire protocol, std-only: enough request parsing for
+//! the edge's three routes, a response writer, and a blocking client used
+//! by `mpcnn classify --remote` and the tests.
+//!
+//! Deliberately small: `Content-Length` bodies only (no chunked encoding,
+//! no TLS), headers capped, bodies bounded by the caller. Anything the
+//! parser rejects becomes a 400 at the connection layer — malformed input
+//! must never reach the inference path.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// Parse errors are plain strings; the connection layer folds them into
+/// the 400 body.
+type ParseResult<T> = std::result::Result<T, String>;
+
+/// Upper bound on header count per request (defense against header floods).
+const MAX_HEADERS: usize = 100;
+/// Upper bound on a single line (request line or header).
+const MAX_LINE_BYTES: usize = 8192;
+
+/// One parsed request: method, path, headers (order preserved), body.
+#[derive(Clone, Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// First header matching `name`, case-insensitively.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// HTTP/1.1 default is keep-alive unless the client says `close`.
+    pub fn keep_alive(&self) -> bool {
+        !matches!(self.header("connection"), Some(v) if v.eq_ignore_ascii_case("close"))
+    }
+}
+
+/// Read one request off the stream. `Ok(None)` means the peer closed the
+/// connection cleanly before sending anything (normal keep-alive end).
+pub fn read_request<R: BufRead>(r: &mut R, max_body: usize) -> ParseResult<Option<HttpRequest>> {
+    let mut line = String::new();
+    match r.read_line(&mut line) {
+        Ok(0) => return Ok(None),
+        Ok(n) if n > MAX_LINE_BYTES => return Err("request line too long".to_string()),
+        Ok(_) => {}
+        Err(e) => return Err(format!("io: {e}")),
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| "empty request line".to_string())?
+        .to_string();
+    let path = parts
+        .next()
+        .ok_or_else(|| "request line is missing the path".to_string())?
+        .to_string();
+    let version = parts.next().unwrap_or("HTTP/1.0");
+    if !version.starts_with("HTTP/1.") {
+        return Err(format!("unsupported version {version:?}"));
+    }
+
+    let mut headers = Vec::new();
+    loop {
+        let mut h = String::new();
+        match r.read_line(&mut h) {
+            Ok(0) => return Err("eof inside headers".to_string()),
+            Ok(n) if n > MAX_LINE_BYTES => return Err("header line too long".to_string()),
+            Ok(_) => {}
+            Err(e) => return Err(format!("io: {e}")),
+        }
+        let h = h.trim_end_matches(|c| c == '\r' || c == '\n');
+        if h.is_empty() {
+            break;
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err("too many headers".to_string());
+        }
+        match h.split_once(':') {
+            Some((k, v)) => headers.push((k.trim().to_string(), v.trim().to_string())),
+            None => return Err(format!("malformed header line {h:?}")),
+        }
+    }
+
+    let content_length = headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+        .map(|(_, v)| {
+            v.parse::<usize>()
+                .map_err(|_| format!("bad content-length {v:?}"))
+        })
+        .transpose()?
+        .unwrap_or(0);
+    if content_length > max_body {
+        return Err(format!("body too large ({content_length} > {max_body} bytes)"));
+    }
+    let mut body = vec![0u8; content_length];
+    if content_length > 0 {
+        r.read_exact(&mut body)
+            .map_err(|e| format!("io reading body: {e}"))?;
+    }
+    Ok(Some(HttpRequest {
+        method,
+        path,
+        headers,
+        body,
+    }))
+}
+
+/// One response to serialize: status, extra headers, body.
+/// `Content-Length` is always emitted from the body.
+#[derive(Clone, Debug)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    pub fn new(status: u16, content_type: &str, body: Vec<u8>) -> HttpResponse {
+        HttpResponse {
+            status,
+            headers: vec![("Content-Type".to_string(), content_type.to_string())],
+            body,
+        }
+    }
+
+    pub fn text(status: u16, body: impl Into<String>) -> HttpResponse {
+        HttpResponse::new(status, "text/plain; charset=utf-8", body.into().into_bytes())
+    }
+
+    pub fn json(status: u16, body: &crate::util::json::Json) -> HttpResponse {
+        HttpResponse::new(
+            status,
+            "application/json",
+            body.to_string_compact().into_bytes(),
+        )
+    }
+
+    pub fn with_header(mut self, name: &str, value: impl Into<String>) -> HttpResponse {
+        self.headers.push((name.to_string(), value.into()));
+        self
+    }
+
+    /// Standard back-pressure hint on 429/503.
+    pub fn retry_after_secs(self, secs: u64) -> HttpResponse {
+        self.with_header("Retry-After", secs.to_string())
+    }
+
+    pub fn write<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
+        write!(w, "HTTP/1.1 {} {}\r\n", self.status, reason(self.status))?;
+        write!(w, "Content-Length: {}\r\n", self.body.len())?;
+        for (k, v) in &self.headers {
+            write!(w, "{k}: {v}\r\n")?;
+        }
+        w.write_all(b"\r\n")?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+/// Reason phrase for the statuses the edge emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        502 => "Bad Gateway",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// A response as seen by the client side.
+#[derive(Clone, Debug)]
+pub struct ClientResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl ClientResponse {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn body_text(&self) -> String {
+        String::from_utf8_lossy(&self.body).into_owned()
+    }
+}
+
+/// One blocking HTTP/1.1 exchange: connect, send, read the full response,
+/// close (`Connection: close` is always sent). Connection-level failures
+/// surface as `io::Error` so callers can distinguish "server unreachable"
+/// (retryable) from an HTTP error status (not retryable here — the server
+/// already ran its own retry/hedge policy).
+pub fn request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: &[u8],
+    timeout: Duration,
+) -> std::io::Result<ClientResponse> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    let _ = stream.set_nodelay(true);
+
+    let mut head = String::with_capacity(256);
+    head.push_str(&format!("{method} {path} HTTP/1.1\r\n"));
+    head.push_str(&format!("Host: {addr}\r\n"));
+    head.push_str("Connection: close\r\n");
+    head.push_str(&format!("Content-Length: {}\r\n", body.len()));
+    for (k, v) in headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()?;
+
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let status = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("bad status line {status_line:?}"),
+            )
+        })?;
+
+    let mut resp_headers = Vec::new();
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "eof inside response headers",
+            ));
+        }
+        let h = h.trim_end_matches(|c| c == '\r' || c == '\n');
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            resp_headers.push((k.trim().to_string(), v.trim().to_string()));
+        }
+    }
+
+    let content_length = resp_headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+        .and_then(|(_, v)| v.parse::<usize>().ok());
+    let mut resp_body = Vec::new();
+    match content_length {
+        Some(n) => {
+            resp_body.resize(n, 0);
+            reader.read_exact(&mut resp_body)?;
+        }
+        // Connection: close framing — read to EOF.
+        None => {
+            reader.read_to_end(&mut resp_body)?;
+        }
+    }
+    Ok(ClientResponse {
+        status,
+        headers: resp_headers,
+        body: resp_body,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_post_with_body() {
+        let raw = b"POST /v1/classify HTTP/1.1\r\nHost: x\r\nContent-Length: 5\r\nX-Client-Id: a\r\n\r\nhello";
+        let req = read_request(&mut Cursor::new(&raw[..]), 1024)
+            .unwrap()
+            .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/classify");
+        assert_eq!(req.header("x-client-id"), Some("a"));
+        assert_eq!(req.body, b"hello");
+        assert!(req.keep_alive());
+    }
+
+    #[test]
+    fn clean_eof_is_none_and_errors_are_errors() {
+        assert!(read_request(&mut Cursor::new(&b""[..]), 1024)
+            .unwrap()
+            .is_none());
+        assert!(read_request(&mut Cursor::new(&b"GARBAGE\r\n\r\n"[..]), 1024).is_err());
+        let oversized = b"POST / HTTP/1.1\r\nContent-Length: 9999\r\n\r\n";
+        let e = read_request(&mut Cursor::new(&oversized[..]), 16).unwrap_err();
+        assert!(e.contains("too large"), "{e}");
+        let bad_len = b"POST / HTTP/1.1\r\nContent-Length: nope\r\n\r\n";
+        assert!(read_request(&mut Cursor::new(&bad_len[..]), 16).is_err());
+    }
+
+    #[test]
+    fn connection_close_disables_keep_alive() {
+        let raw = b"GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let req = read_request(&mut Cursor::new(&raw[..]), 1024)
+            .unwrap()
+            .unwrap();
+        assert!(!req.keep_alive());
+    }
+
+    #[test]
+    fn response_wire_format() {
+        let mut out = Vec::new();
+        HttpResponse::text(429, "slow down")
+            .retry_after_secs(2)
+            .write(&mut out)
+            .unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{s}");
+        assert!(s.contains("Retry-After: 2\r\n"), "{s}");
+        assert!(s.contains("Content-Length: 9\r\n"), "{s}");
+        assert!(s.ends_with("\r\n\r\nslow down"), "{s}");
+    }
+}

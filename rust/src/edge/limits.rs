@@ -1,0 +1,189 @@
+//! Edge admission: per-client token buckets and the global inflight gate.
+//!
+//! Both sit *ahead of* the gateway's bounded variant queues — a client that
+//! would be silently absorbed into queueing delay is instead told to back
+//! off (429/503 with `Retry-After`), which keeps the queues short enough
+//! that the worker-side deadline shedding still has headroom to act.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Bound on distinct tracked clients; beyond it, fully-refilled (idle)
+/// buckets are evicted before a new client is admitted.
+const MAX_TRACKED_CLIENTS: usize = 4096;
+
+struct Bucket {
+    tokens: f64,
+    last: Instant,
+}
+
+fn refill(b: &mut Bucket, now: Instant, rate: f64, burst: f64) {
+    let dt = now.saturating_duration_since(b.last).as_secs_f64();
+    b.tokens = (b.tokens + dt * rate).min(burst);
+    b.last = now;
+}
+
+/// Classic token bucket per client id (`X-Client-Id` header, else peer
+/// IP): `burst` tokens capacity, refilled at `rate_per_sec`. A rate of 0
+/// disables limiting entirely.
+pub struct RateLimiter {
+    rate_per_sec: f64,
+    burst: f64,
+    buckets: Mutex<HashMap<String, Bucket>>,
+    limited: AtomicU64,
+}
+
+impl RateLimiter {
+    pub fn new(rate_per_sec: f64, burst: f64) -> RateLimiter {
+        RateLimiter {
+            rate_per_sec,
+            burst: burst.max(1.0),
+            buckets: Mutex::new(HashMap::new()),
+            limited: AtomicU64::new(0),
+        }
+    }
+
+    /// Take one token for `client`. `Err(d)` means limited: retry after
+    /// roughly `d` (the time for one token to refill).
+    pub fn acquire(&self, client: &str) -> std::result::Result<(), Duration> {
+        if self.rate_per_sec <= 0.0 {
+            return Ok(());
+        }
+        let now = Instant::now();
+        let mut buckets = self.buckets.lock().unwrap_or_else(|e| e.into_inner());
+        if buckets.len() >= MAX_TRACKED_CLIENTS && !buckets.contains_key(client) {
+            let (rate, burst) = (self.rate_per_sec, self.burst);
+            // Idle clients are exactly the refilled-to-burst buckets.
+            buckets.retain(|_, b| {
+                refill(b, now, rate, burst);
+                b.tokens < burst - 0.5
+            });
+        }
+        let b = buckets.entry(client.to_string()).or_insert(Bucket {
+            tokens: self.burst,
+            last: now,
+        });
+        refill(b, now, self.rate_per_sec, self.burst);
+        if b.tokens >= 1.0 {
+            b.tokens -= 1.0;
+            Ok(())
+        } else {
+            self.limited.fetch_add(1, Ordering::Relaxed);
+            Err(Duration::from_secs_f64(
+                (1.0 - b.tokens) / self.rate_per_sec,
+            ))
+        }
+    }
+
+    /// Total acquisitions refused since construction.
+    pub fn limited(&self) -> u64 {
+        self.limited.load(Ordering::Relaxed)
+    }
+
+    /// Distinct clients currently tracked.
+    pub fn tracked_clients(&self) -> usize {
+        self.buckets.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+}
+
+/// Global concurrent-request ceiling across every variant queue. RAII:
+/// the permit returns its slot on drop, so error paths can't leak
+/// capacity.
+pub struct AdmissionGate {
+    inflight: AtomicU64,
+    max: u64,
+    shed: AtomicU64,
+}
+
+pub struct AdmissionPermit<'a> {
+    gate: &'a AdmissionGate,
+}
+
+impl AdmissionGate {
+    /// `max == 0` means unlimited.
+    pub fn new(max: u64) -> AdmissionGate {
+        AdmissionGate {
+            inflight: AtomicU64::new(0),
+            max,
+            shed: AtomicU64::new(0),
+        }
+    }
+
+    pub fn try_enter(&self) -> Option<AdmissionPermit<'_>> {
+        let prev = self.inflight.fetch_add(1, Ordering::SeqCst);
+        if self.max > 0 && prev >= self.max {
+            self.inflight.fetch_sub(1, Ordering::SeqCst);
+            self.shed.fetch_add(1, Ordering::Relaxed);
+            None
+        } else {
+            Some(AdmissionPermit { gate: self })
+        }
+    }
+
+    pub fn inflight(&self) -> u64 {
+        self.inflight.load(Ordering::SeqCst)
+    }
+
+    /// Requests refused at the gate since construction.
+    pub fn shed(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for AdmissionPermit<'_> {
+    fn drop(&mut self) {
+        self.gate.inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_admits_burst_then_limits() {
+        let rl = RateLimiter::new(1.0, 3.0);
+        assert!(rl.acquire("a").is_ok());
+        assert!(rl.acquire("a").is_ok());
+        assert!(rl.acquire("a").is_ok());
+        let retry = rl.acquire("a").unwrap_err();
+        assert!(retry > Duration::ZERO && retry <= Duration::from_secs(2));
+        assert_eq!(rl.limited(), 1);
+        // Other clients have their own bucket.
+        assert!(rl.acquire("b").is_ok());
+    }
+
+    #[test]
+    fn zero_rate_means_unlimited() {
+        let rl = RateLimiter::new(0.0, 1.0);
+        for _ in 0..1000 {
+            assert!(rl.acquire("x").is_ok());
+        }
+        assert_eq!(rl.limited(), 0);
+    }
+
+    #[test]
+    fn gate_caps_inflight_and_permits_return_slots() {
+        let g = AdmissionGate::new(2);
+        let p1 = g.try_enter().unwrap();
+        let _p2 = g.try_enter().unwrap();
+        assert!(g.try_enter().is_none());
+        assert_eq!(g.inflight(), 2);
+        assert_eq!(g.shed(), 1);
+        drop(p1);
+        assert_eq!(g.inflight(), 1);
+        assert!(g.try_enter().is_some());
+        assert_eq!(g.inflight(), 1, "dropped permit returned its slot");
+    }
+
+    #[test]
+    fn gate_zero_is_unlimited() {
+        let g = AdmissionGate::new(0);
+        let permits: Vec<_> = (0..64).map(|_| g.try_enter().unwrap()).collect();
+        assert_eq!(g.inflight(), 64);
+        drop(permits);
+        assert_eq!(g.inflight(), 0);
+    }
+}

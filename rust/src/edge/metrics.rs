@@ -1,0 +1,458 @@
+//! Edge-side counters and the Prometheus text exposition.
+//!
+//! Two layers are exposed on `GET /metrics`: the edge's own HTTP-level
+//! counters (`mpcnn_edge_*`, `mpcnn_cache_*`, `mpcnn_coalesce_*`) and the
+//! gateway's per-variant serving signals (`mpcnn_variant_*`, labeled by
+//! variant) drawn from the same [`MetricsSummary`] /
+//! [`RobustnessReport`] structs the CLI report consumes — one export
+//! surface, two renderings.
+
+use super::{Coalescer, EdgeState, ResponseCache};
+use crate::serving::BackendHealth;
+use crate::util::stats::LatencyHistogram;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// HTTP-level counters, all lock-free except the latency histogram.
+pub struct EdgeMetrics {
+    requests: AtomicU64,
+    ok: AtomicU64,
+    client_errors: AtomicU64,
+    server_errors: AtomicU64,
+    rate_limited: AtomicU64,
+    admission_shed: AtomicU64,
+    queue_shed: AtomicU64,
+    bad_requests: AtomicU64,
+    classify_requests: AtomicU64,
+    latency: Mutex<LatencyHistogram>,
+}
+
+impl Default for EdgeMetrics {
+    fn default() -> EdgeMetrics {
+        EdgeMetrics::new()
+    }
+}
+
+impl EdgeMetrics {
+    pub fn new() -> EdgeMetrics {
+        EdgeMetrics {
+            requests: AtomicU64::new(0),
+            ok: AtomicU64::new(0),
+            client_errors: AtomicU64::new(0),
+            server_errors: AtomicU64::new(0),
+            rate_limited: AtomicU64::new(0),
+            admission_shed: AtomicU64::new(0),
+            queue_shed: AtomicU64::new(0),
+            bad_requests: AtomicU64::new(0),
+            classify_requests: AtomicU64::new(0),
+            latency: Mutex::new(LatencyHistogram::default()),
+        }
+    }
+
+    /// Fold one finished request into the counters.
+    pub fn observe(&self, status: u16, latency: Duration) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        match status {
+            200..=299 => self.ok.fetch_add(1, Ordering::Relaxed),
+            400..=499 => self.client_errors.fetch_add(1, Ordering::Relaxed),
+            _ => self.server_errors.fetch_add(1, Ordering::Relaxed),
+        };
+        self.latency
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .record_us(latency.as_micros() as f64);
+    }
+
+    pub fn note_classify(&self) {
+        self.classify_requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_rate_limited(&self) {
+        self.rate_limited.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_admission_shed(&self) {
+        self.admission_shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Connections refused because the acceptor's hand-off queue was full.
+    pub fn note_queue_shed(&self) {
+        self.queue_shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_bad_request(&self) {
+        self.bad_requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Flatten every edge counter (cache and coalescing ledgers included)
+    /// into a plain-number snapshot.
+    pub fn snapshot(&self, cache: &ResponseCache, coalescer: &Coalescer) -> EdgeSnapshot {
+        let (p50_us, p99_us) = {
+            let h = self.latency.lock().unwrap_or_else(|e| e.into_inner());
+            (h.percentile_us(50.0), h.percentile_us(99.0))
+        };
+        EdgeSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            ok: self.ok.load(Ordering::Relaxed),
+            client_errors: self.client_errors.load(Ordering::Relaxed),
+            server_errors: self.server_errors.load(Ordering::Relaxed),
+            rate_limited: self.rate_limited.load(Ordering::Relaxed),
+            admission_shed: self.admission_shed.load(Ordering::Relaxed),
+            queue_shed: self.queue_shed.load(Ordering::Relaxed),
+            bad_requests: self.bad_requests.load(Ordering::Relaxed),
+            classify_requests: self.classify_requests.load(Ordering::Relaxed),
+            coalesce_leaders: coalescer.leaders(),
+            coalesce_joined: coalescer.joined(),
+            cache_hits: cache.hits(),
+            cache_misses: cache.misses(),
+            cache_insertions: cache.insertions(),
+            cache_evictions: cache.evictions(),
+            cache_uncacheable: cache.uncacheable(),
+            p50_us,
+            p99_us,
+        }
+    }
+}
+
+/// Point-in-time copy of every edge counter — what the tests, the drain
+/// report, and the exposition below consume.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EdgeSnapshot {
+    pub requests: u64,
+    pub ok: u64,
+    pub client_errors: u64,
+    pub server_errors: u64,
+    pub rate_limited: u64,
+    pub admission_shed: u64,
+    pub queue_shed: u64,
+    pub bad_requests: u64,
+    pub classify_requests: u64,
+    pub coalesce_leaders: u64,
+    pub coalesce_joined: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_insertions: u64,
+    pub cache_evictions: u64,
+    pub cache_uncacheable: u64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+}
+
+fn metric(out: &mut String, name: &str, kind: &str, help: &str, value: f64) {
+    out.push_str(&format!(
+        "# HELP {name} {help}\n# TYPE {name} {kind}\n{name} {value}\n"
+    ));
+}
+
+fn family_header(out: &mut String, name: &str, kind: &str, help: &str) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+}
+
+fn labeled(out: &mut String, name: &str, variant: &str, value: f64) {
+    out.push_str(&format!("{name}{{variant=\"{variant}\"}} {value}\n"));
+}
+
+fn health_code(h: BackendHealth) -> f64 {
+    match h {
+        BackendHealth::Healthy => 0.0,
+        BackendHealth::Degraded => 1.0,
+        BackendHealth::Unavailable => 2.0,
+    }
+}
+
+/// Render the full exposition (Prometheus text format 0.0.4).
+pub fn prometheus(state: &EdgeState) -> String {
+    let mut out = String::with_capacity(8192);
+    let snap = state.metrics.snapshot(&state.cache, &state.coalescer);
+
+    let up = if state.draining() { 0.0 } else { 1.0 };
+    let edge_metrics: [(&str, &str, &str, f64); 21] = [
+        (
+            "mpcnn_edge_up",
+            "gauge",
+            "edge accepting requests (0 while draining)",
+            up,
+        ),
+        (
+            "mpcnn_edge_requests_total",
+            "counter",
+            "HTTP requests handled",
+            snap.requests as f64,
+        ),
+        (
+            "mpcnn_edge_responses_ok_total",
+            "counter",
+            "2xx responses",
+            snap.ok as f64,
+        ),
+        (
+            "mpcnn_edge_responses_client_error_total",
+            "counter",
+            "4xx responses",
+            snap.client_errors as f64,
+        ),
+        (
+            "mpcnn_edge_responses_server_error_total",
+            "counter",
+            "5xx responses",
+            snap.server_errors as f64,
+        ),
+        (
+            "mpcnn_edge_classify_requests_total",
+            "counter",
+            "POST /v1/classify requests",
+            snap.classify_requests as f64,
+        ),
+        (
+            "mpcnn_edge_rate_limited_total",
+            "counter",
+            "requests refused by the per-client token bucket (429)",
+            snap.rate_limited as f64,
+        ),
+        (
+            "mpcnn_edge_admission_shed_total",
+            "counter",
+            "requests refused by the global inflight gate (503)",
+            snap.admission_shed as f64,
+        ),
+        (
+            "mpcnn_edge_queue_shed_total",
+            "counter",
+            "connections refused: acceptor hand-off queue full",
+            snap.queue_shed as f64,
+        ),
+        (
+            "mpcnn_edge_bad_requests_total",
+            "counter",
+            "malformed requests (400)",
+            snap.bad_requests as f64,
+        ),
+        (
+            "mpcnn_edge_inflight",
+            "gauge",
+            "requests currently inside the admission gate",
+            state.gate.inflight() as f64,
+        ),
+        (
+            "mpcnn_edge_latency_p50_us",
+            "gauge",
+            "median edge-observed request latency (us)",
+            snap.p50_us,
+        ),
+        (
+            "mpcnn_edge_latency_p99_us",
+            "gauge",
+            "p99 edge-observed request latency (us)",
+            snap.p99_us,
+        ),
+        (
+            "mpcnn_cache_hits_total",
+            "counter",
+            "classify responses served from the content-addressed cache",
+            snap.cache_hits as f64,
+        ),
+        (
+            "mpcnn_cache_misses_total",
+            "counter",
+            "cache lookups that missed",
+            snap.cache_misses as f64,
+        ),
+        (
+            "mpcnn_cache_insertions_total",
+            "counter",
+            "responses inserted into the cache",
+            snap.cache_insertions as f64,
+        ),
+        (
+            "mpcnn_cache_evictions_total",
+            "counter",
+            "LRU evictions",
+            snap.cache_evictions as f64,
+        ),
+        (
+            "mpcnn_cache_uncacheable_total",
+            "counter",
+            "successful responses refused by the cacheability check",
+            snap.cache_uncacheable as f64,
+        ),
+        (
+            "mpcnn_cache_entries",
+            "gauge",
+            "entries currently cached",
+            state.cache.len() as f64,
+        ),
+        (
+            "mpcnn_coalesce_leaders_total",
+            "counter",
+            "inferences that led a coalescing group",
+            snap.coalesce_leaders as f64,
+        ),
+        (
+            "mpcnn_coalesce_joined_total",
+            "counter",
+            "requests that joined an in-flight duplicate",
+            snap.coalesce_joined as f64,
+        ),
+    ];
+    for (name, kind, help, value) in edge_metrics {
+        metric(&mut out, name, kind, help, value);
+    }
+
+    // Per-variant gateway signals: live router view (EWMA latency,
+    // inflight, health) plus the cumulative MetricsSummary counters.
+    let statuses = state.server.statuses();
+    type StatusProj = fn(&crate::serving::VariantStatus) -> f64;
+    let status_families: [(&str, &str, StatusProj); 4] = [
+        (
+            "mpcnn_variant_ewma_latency_us",
+            "router-facing EWMA end-to-end latency (us)",
+            |s| s.ewma_latency_us,
+        ),
+        (
+            "mpcnn_variant_inflight",
+            "requests queued or executing on the variant",
+            |s| s.inflight as f64,
+        ),
+        (
+            "mpcnn_variant_health",
+            "backend health (0 healthy, 1 degraded, 2 unavailable)",
+            |s| health_code(s.health),
+        ),
+        (
+            "mpcnn_variant_fpga_fps",
+            "simulated FPGA frames/s from the DSE profile",
+            |s| s.fpga_fps,
+        ),
+    ];
+    for (name, help, project) in status_families {
+        family_header(&mut out, name, "gauge", help);
+        for s in &statuses {
+            labeled(&mut out, name, &s.name, project(s));
+        }
+    }
+
+    let summaries: Vec<(String, crate::serving::MetricsSummary)> = state
+        .server
+        .metrics_all()
+        .into_iter()
+        .map(|(name, m)| (name, m.summarize()))
+        .collect();
+    type SummaryProj = fn(&crate::serving::MetricsSummary) -> f64;
+    let counter_families: [(&str, &str, SummaryProj); 8] = [
+        (
+            "mpcnn_variant_requests_total",
+            "requests submitted to the variant",
+            |s| s.requests as f64,
+        ),
+        (
+            "mpcnn_variant_responses_total",
+            "successful responses",
+            |s| s.responses as f64,
+        ),
+        (
+            "mpcnn_variant_errors_total",
+            "backend errors surfaced to clients",
+            |s| s.errors as f64,
+        ),
+        (
+            "mpcnn_variant_shed_admission_total",
+            "requests shed at admission (queue-wait EWMA past deadline)",
+            |s| s.shed_admission as f64,
+        ),
+        (
+            "mpcnn_variant_shed_expired_total",
+            "requests shed at dequeue (deadline already expired)",
+            |s| s.shed_expired as f64,
+        ),
+        (
+            "mpcnn_variant_panics_total",
+            "backend panics caught and converted to errors",
+            |s| s.panics as f64,
+        ),
+        (
+            "mpcnn_variant_worker_restarts_total",
+            "supervisor-driven backend rebuilds",
+            |s| s.worker_restarts as f64,
+        ),
+        (
+            "mpcnn_variant_throughput_rps",
+            "achieved responses/s over the server's lifetime",
+            |s| s.throughput_rps,
+        ),
+    ];
+    for (name, help, project) in counter_families {
+        let kind = if name.ends_with("_total") {
+            "counter"
+        } else {
+            "gauge"
+        };
+        family_header(&mut out, name, kind, help);
+        for (variant, s) in &summaries {
+            labeled(&mut out, name, variant, project(s));
+        }
+    }
+
+    // Server-level robustness ledger (retry/hedge/breaker effects).
+    let r = state.server.robustness_report();
+    let robust_metrics: [(&str, &str, f64); 7] = [
+        (
+            "mpcnn_robust_shed_total",
+            "requests shed across all variants (admission + dequeue)",
+            r.shed as f64,
+        ),
+        (
+            "mpcnn_robust_panics_total",
+            "backend panics across all variants",
+            r.panics as f64,
+        ),
+        (
+            "mpcnn_robust_worker_restarts_total",
+            "worker restarts across all variants",
+            r.worker_restarts as f64,
+        ),
+        (
+            "mpcnn_robust_retried_total",
+            "requests that consumed at least one retry attempt",
+            r.retried as f64,
+        ),
+        (
+            "mpcnn_robust_hedged_total",
+            "requests that launched a hedge attempt",
+            r.hedged as f64,
+        ),
+        (
+            "mpcnn_robust_hedge_wins_total",
+            "hedge attempts that answered first",
+            r.hedge_wins as f64,
+        ),
+        (
+            "mpcnn_robust_fallbacks_total",
+            "retries that re-routed onto a different variant",
+            r.fallbacks as f64,
+        ),
+    ];
+    for (name, help, value) in robust_metrics {
+        metric(&mut out, name, "counter", help, value);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observe_classifies_status_bands() {
+        let m = EdgeMetrics::new();
+        m.observe(200, Duration::from_micros(100));
+        m.observe(404, Duration::from_micros(100));
+        m.observe(503, Duration::from_micros(100));
+        let snap = m.snapshot(&ResponseCache::new(4), &Coalescer::new());
+        assert_eq!(snap.requests, 3);
+        assert_eq!(snap.ok, 1);
+        assert_eq!(snap.client_errors, 1);
+        assert_eq!(snap.server_errors, 1);
+        assert!(snap.p50_us > 0.0);
+    }
+}

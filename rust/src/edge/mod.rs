@@ -1,0 +1,315 @@
+//! Network edge: a dependency-free HTTP/1.1 front-end over the serving
+//! gateway ([`crate::serving::Server`]).
+//!
+//! The edge owns everything between the TCP socket and the gateway's
+//! bounded variant queues:
+//!
+//! - **Routes** — `POST /v1/classify` (image + route selector + deadline),
+//!   `GET /healthz`, `GET /metrics` (Prometheus text format).
+//! - **Admission** — a per-client token bucket ([`RateLimiter`], 429) and
+//!   a global inflight ceiling ([`AdmissionGate`], 503), both answering
+//!   with `Retry-After` *before* a request can bloat the variant queues.
+//! - **Coalescing** — concurrent duplicates of one `(variant, image)` key
+//!   share a single backend inference ([`Coalescer`]).
+//! - **Caching** — a bounded, sha256 content-addressed [`ResponseCache`];
+//!   classification is deterministic per `(variant, image)`, so repeats
+//!   are answered with bit-identical logits without touching a backend.
+//! - **Observability** — every shed/hit/panic/restart signal the gateway
+//!   and the edge track, rendered by [`metrics::prometheus`].
+//!
+//! Threading: one acceptor thread hands sockets to a fixed pool of
+//! handler threads over a bounded channel (overflow is answered 503, not
+//! queued). [`EdgeServer::shutdown`] drains gracefully: stop admitting,
+//! flush in-flight requests, then stop the threads.
+
+pub mod cache;
+pub mod client;
+pub mod coalescing;
+pub mod handlers;
+pub mod http;
+pub mod limits;
+pub mod metrics;
+
+pub use cache::{cache_key, ResponseCache};
+pub use client::{RemoteAnswer, RemoteClient};
+pub use coalescing::Coalescer;
+pub use http::{HttpRequest, HttpResponse};
+pub use limits::{AdmissionGate, RateLimiter};
+pub use metrics::{EdgeMetrics, EdgeSnapshot};
+
+use crate::serving::Server;
+use crate::util::error::Result;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Content address of one `(variant, image)` request: a sha256 digest.
+pub type Key = [u8; 32];
+
+/// One classification result as the edge caches and serves it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Answer {
+    pub class: usize,
+    /// Variant that actually answered (retries may re-route).
+    pub variant: String,
+    pub logits: Vec<f32>,
+}
+
+/// Cacheability check: `(image, answer) -> ok`. Wired to the xmp reference
+/// models by `mpcnn serve` so a corrupt response is never cached.
+pub type ResponseCheck = Arc<dyn Fn(&[f32], &Answer) -> bool + Send + Sync>;
+
+/// Tuning knobs for the edge. The defaults suit a loopback benchmark;
+/// `mpcnn serve --listen` exposes the interesting ones as flags.
+#[derive(Clone, Debug)]
+pub struct EdgeConfig {
+    /// Handler pool size (concurrent connections being served).
+    pub handler_threads: usize,
+    /// Accepted-but-unclaimed socket queue; overflow is answered 503.
+    pub pending_connections: usize,
+    /// Global concurrent-request ceiling (0 = unlimited).
+    pub max_inflight: u64,
+    /// Per-client token refill rate (0 = rate limiting off).
+    pub rate_per_sec: f64,
+    /// Per-client token bucket capacity.
+    pub burst: f64,
+    /// Response cache entries (0 = cache off).
+    pub cache_capacity: usize,
+    /// Largest request body accepted.
+    pub max_body_bytes: usize,
+    /// Socket read/write timeout.
+    pub io_timeout: Duration,
+}
+
+impl Default for EdgeConfig {
+    fn default() -> EdgeConfig {
+        EdgeConfig {
+            handler_threads: 8,
+            pending_connections: 64,
+            max_inflight: 256,
+            rate_per_sec: 1000.0,
+            burst: 256.0,
+            cache_capacity: 1024,
+            max_body_bytes: 16 << 20,
+            io_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Everything a handler thread needs, shared behind one `Arc`.
+pub struct EdgeState {
+    pub server: Arc<Server>,
+    pub cfg: EdgeConfig,
+    pub limiter: RateLimiter,
+    pub gate: AdmissionGate,
+    pub coalescer: Coalescer,
+    pub cache: ResponseCache,
+    pub metrics: EdgeMetrics,
+    pub check: Option<ResponseCheck>,
+    draining: AtomicBool,
+}
+
+impl EdgeState {
+    pub fn new(server: Arc<Server>, cfg: EdgeConfig, check: Option<ResponseCheck>) -> EdgeState {
+        EdgeState {
+            limiter: RateLimiter::new(cfg.rate_per_sec, cfg.burst),
+            gate: AdmissionGate::new(cfg.max_inflight),
+            coalescer: Coalescer::new(),
+            cache: ResponseCache::new(cfg.cache_capacity),
+            metrics: EdgeMetrics::new(),
+            server,
+            cfg,
+            check,
+            draining: AtomicBool::new(false),
+        }
+    }
+
+    /// True once shutdown has begun: classify refuses (503) and keep-alive
+    /// connections close after the in-flight response.
+    pub fn draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+}
+
+/// Bound on how long [`EdgeServer::shutdown`] waits for in-flight
+/// requests to flush before stopping the threads anyway.
+const DRAIN_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// The running front-end: an acceptor, a handler pool, shared state.
+pub struct EdgeServer {
+    state: Arc<EdgeState>,
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    acceptor: JoinHandle<()>,
+    handlers: Vec<JoinHandle<()>>,
+}
+
+impl EdgeServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0`) and start serving immediately.
+    pub fn bind(
+        server: Arc<Server>,
+        addr: &str,
+        cfg: EdgeConfig,
+        check: Option<ResponseCheck>,
+    ) -> Result<EdgeServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let state = Arc::new(EdgeState::new(server, cfg, check));
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let (conn_tx, conn_rx) = sync_channel::<TcpStream>(
+            state.cfg.pending_connections.max(1),
+        );
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+
+        // The acceptor is the sole owner of `conn_tx`: when it exits, the
+        // channel disconnects and the handler pool drains out.
+        let acceptor = {
+            let state = state.clone();
+            let stop = stop.clone();
+            std::thread::Builder::new()
+                .name("edge-acceptor".to_string())
+                .spawn(move || {
+                    for conn in listener.incoming() {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let stream = match conn {
+                            Ok(s) => s,
+                            Err(_) => continue,
+                        };
+                        match conn_tx.try_send(stream) {
+                            Ok(()) => {}
+                            Err(TrySendError::Full(mut stream)) => {
+                                // Shed at the socket: the hand-off queue is
+                                // the last bound before unbounded memory.
+                                state.metrics.note_queue_shed();
+                                let _ = HttpResponse::text(503, "connection queue full\n")
+                                    .retry_after_secs(1)
+                                    .with_header("Connection", "close")
+                                    .write(&mut stream);
+                            }
+                            Err(TrySendError::Disconnected(_)) => break,
+                        }
+                    }
+                })?
+        };
+
+        let mut handlers = Vec::with_capacity(state.cfg.handler_threads.max(1));
+        for i in 0..state.cfg.handler_threads.max(1) {
+            let state = state.clone();
+            let conn_rx = conn_rx.clone();
+            handlers.push(
+                std::thread::Builder::new()
+                    .name(format!("edge-handler-{i}"))
+                    .spawn(move || loop {
+                        let next = {
+                            let rx = conn_rx.lock().unwrap_or_else(|e| e.into_inner());
+                            rx.recv()
+                        };
+                        match next {
+                            Ok(stream) => serve_connection(&state, stream),
+                            Err(_) => break, // acceptor gone, queue drained
+                        }
+                    })?,
+            );
+        }
+
+        Ok(EdgeServer {
+            state,
+            addr: local,
+            stop,
+            acceptor,
+            handlers,
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn state(&self) -> &Arc<EdgeState> {
+        &self.state
+    }
+
+    /// Point-in-time copy of every edge counter.
+    pub fn snapshot(&self) -> EdgeSnapshot {
+        self.state
+            .metrics
+            .snapshot(&self.state.cache, &self.state.coalescer)
+    }
+
+    /// Graceful drain: stop admitting new classify work, flush what is
+    /// in flight (bounded by [`DRAIN_TIMEOUT`]), then stop the acceptor
+    /// and the handler pool. Returns the final counter snapshot.
+    pub fn shutdown(self) -> EdgeSnapshot {
+        self.state.draining.store(true, Ordering::SeqCst);
+        let deadline = Instant::now() + DRAIN_TIMEOUT;
+        while self.state.gate.inflight() > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+
+        self.stop.store(true, Ordering::SeqCst);
+        // accept() is blocking; a throwaway local connection wakes the
+        // acceptor so it can observe the stop flag and exit.
+        let _ = TcpStream::connect(self.addr);
+        let _ = self.acceptor.join();
+        for h in self.handlers {
+            let _ = h.join();
+        }
+        self.state
+            .metrics
+            .snapshot(&self.state.cache, &self.state.coalescer)
+    }
+}
+
+/// Serve one connection: parse requests in a keep-alive loop, dispatch,
+/// record latency per response. Closes on parse error, io error, client
+/// `Connection: close`, or drain.
+fn serve_connection(state: &EdgeState, mut stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(state.cfg.io_timeout));
+    let _ = stream.set_write_timeout(Some(state.cfg.io_timeout));
+    let _ = stream.set_nodelay(true);
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.ip().to_string())
+        .unwrap_or_else(|_| "unknown".to_string());
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = BufReader::new(read_half);
+
+    loop {
+        let req = match http::read_request(&mut reader, state.cfg.max_body_bytes) {
+            Ok(Some(req)) => req,
+            Ok(None) => break, // clean close between requests
+            Err(e) => {
+                // Parse errors get a 400; io errors (timeout, reset) just
+                // close — there is no one listening to apologize to.
+                if !e.starts_with("io") {
+                    let resp = HttpResponse::text(400, format!("{e}\n"))
+                        .with_header("Connection", "close");
+                    let _ = resp.write(&mut stream);
+                    state.metrics.observe(400, Duration::ZERO);
+                }
+                break;
+            }
+        };
+        let started = Instant::now();
+        let mut resp = handlers::handle(state, &req, &peer);
+        let keep = req.keep_alive() && !state.draining();
+        if !keep {
+            resp = resp.with_header("Connection", "close");
+        }
+        let status = resp.status;
+        let write_ok = resp.write(&mut stream).is_ok();
+        state.metrics.observe(status, started.elapsed());
+        if !keep || !write_ok {
+            break;
+        }
+    }
+}

@@ -18,7 +18,10 @@
 //!   datapath of Fig 1b), and a multi-variant serving gateway
 //!   ([`serving`]) that batches requests and routes them across
 //!   mixed-precision model variants — executing AOT artifacts via PJRT
-//!   ([`runtime`]) when available, the xmp engine otherwise.
+//!   ([`runtime`]) when available, the xmp engine otherwise — and a
+//!   network [`edge`]: an HTTP front-end adding admission control,
+//!   identical-request coalescing, a content-addressed response cache,
+//!   and a Prometheus metrics endpoint over the gateway.
 //!
 //! Start at [`dse`] for the headline methodology, [`sim`] for the
 //! system-level model behind Table IV / Fig 9, [`planner`] for the
@@ -32,6 +35,7 @@ pub mod cnn;
 pub mod config;
 pub mod dataflow;
 pub mod dse;
+pub mod edge;
 pub mod energy;
 pub mod pe;
 pub mod planner;

@@ -2,6 +2,7 @@
 //! reproduction harness, and the PJRT serving path.
 
 use mpcnn::cnn::resnet;
+use mpcnn::edge::{EdgeConfig, EdgeServer, RemoteClient, ResponseCheck};
 use mpcnn::util::error::Result;
 use mpcnn::{anyhow, bail};
 use mpcnn::config::RunConfig;
@@ -17,7 +18,7 @@ use mpcnn::util::rng::Rng;
 use mpcnn::xmp::{XmpBackend, XmpConfig};
 use mpcnn::{baselines, dse, sim};
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 const USAGE: &str = "\
@@ -72,13 +73,28 @@ SUBCOMMANDS
              requests are shed at admission or dequeue instead of wasting
              backend time; robustness counters (shed, expired, panics,
              worker restarts, retried, hedged, fallbacks) print after the
-             per-variant table
+             per-variant table;
+             --listen ADDR hosts the gateway behind the network edge
+             instead of driving a synthetic load loop: an HTTP/1.1
+             front-end with POST /v1/classify, GET /healthz and a
+             Prometheus GET /metrics, per-client token-bucket rate
+             limiting (--rate RPS, --burst N; 429 + Retry-After), a
+             global in-flight ceiling (--max-inflight N; 503),
+             identical-request coalescing, and a sha256
+             content-addressed response cache (--cache ENTRIES);
+             --for SECS drains gracefully after SECS (default: serve
+             until killed)
   classify   [--wq 4] [--aq 8] [--index 0] [--route exact:4] [--variants 4]
              [--backend auto|pjrt|xmp|mock]
              classify one testset image through the gateway; with
              `--backend xmp` the class is computed by the 2D-sliced
              kernels on synthetic weights (no artifacts needed), at the
-             requested (wq, aq) precision pair
+             requested (wq, aq) precision pair;
+             --remote http://ADDR classifies over HTTP against a
+             `serve --listen` edge instead of booting a local gateway
+             (--image-len N synthesizes the request image, --deadline MS
+             attaches a deadline, --client ID names the rate-limit
+             bucket, --retry N retries connection errors with backoff)
   info       print workload statistics for the built-in CNNs
 ";
 
@@ -771,6 +787,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
 
+    if let Some(listen) = args.get("listen") {
+        return serve_listen(args, gw, listen, fault.as_ref());
+    }
+
     // Selector schedule, one per request in round-robin. `mixed` exercises
     // the whole routing surface; any explicit --route applies to every
     // request.
@@ -927,22 +947,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         wall.as_secs_f64()
     );
 
-    // Robustness ledger: worker-side counters summed over variants, plus
-    // the server-level retry/hedge counters and (if armed) the injector's
-    // own account of what it did.
-    let (mut shed, mut expired, mut panics, mut restarts) = (0u64, 0u64, 0u64, 0u64);
-    for (_, m) in gw.server.metrics_all() {
-        shed += m.shed();
-        expired += m.shed_expired;
-        panics += m.panics;
-        restarts += m.worker_restarts;
-    }
-    let rc = gw.server.robust_counters();
+    // Robustness ledger: the same RobustnessReport the /metrics endpoint
+    // renders, plus (if armed) the injector's own account of what it did.
+    let r = gw.server.robustness_report();
     println!(
-        "robustness: shed={shed} (expired-at-dequeue {expired}) panics={panics} \
-         worker-restarts={restarts} retried={} hedged={} hedge-wins={} fallbacks={} \
+        "robustness: shed={} (expired-at-dequeue {}) panics={} \
+         worker-restarts={} retried={} hedged={} hedge-wins={} fallbacks={} \
          client-retries-recovered={retried_ok}",
-        rc.retried, rc.hedged, rc.hedge_wins, rc.fallbacks
+        r.shed, r.shed_expired, r.panics, r.worker_restarts, r.retried, r.hedged,
+        r.hedge_wins, r.fallbacks
     );
     if let Some(f) = &fault {
         let c = &f.controls;
@@ -961,7 +974,155 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `serve --listen ADDR`: host the gateway behind the network edge. The
+/// edge owns the socket; the gateway keeps owning batching, routing,
+/// retries, and supervision. On xmp the cacheability check re-classifies
+/// each response against the independent reference model copy, so a
+/// corrupt answer (e.g. from `--fault corrupt`) is served once, flagged
+/// uncacheable, and never pinned into the response cache.
+fn serve_listen(args: &Args, gw: Gateway, listen: &str, fault: Option<&FaultArg>) -> Result<()> {
+    let run_for = args.get_u64("for", 0);
+    let cfg = EdgeConfig {
+        handler_threads: args.get_usize("threads", 8).max(1),
+        max_inflight: args.get_u64("max-inflight", 256),
+        rate_per_sec: args.get_f64("rate", 1000.0),
+        burst: args.get_f64("burst", 256.0),
+        cache_capacity: args.get_usize("cache", 1024),
+        ..EdgeConfig::default()
+    };
+    let Gateway {
+        server,
+        image_len,
+        xmp_refs,
+        ..
+    } = gw;
+
+    // XmpBackend holds per-instance scratch (not Sync); a mutex per
+    // reference copy lets the Send+Sync check closure share them across
+    // handler threads.
+    let check: Option<ResponseCheck> = if xmp_refs.is_empty() {
+        None
+    } else {
+        let refs: Arc<BTreeMap<String, Mutex<XmpBackend>>> = Arc::new(
+            xmp_refs
+                .into_iter()
+                .map(|(name, b)| (name, Mutex::new(b)))
+                .collect(),
+        );
+        Some(Arc::new(move |image: &[f32], a: &mpcnn::edge::Answer| {
+            match refs.get(&a.variant) {
+                Some(b) => {
+                    let b = b.lock().unwrap_or_else(|e| e.into_inner());
+                    b.classify_one(image).map(|c| c == a.class).unwrap_or(false)
+                }
+                // No reference copy for this variant (pjrt/mock): trust it.
+                None => true,
+            }
+        }))
+    };
+
+    let server = Arc::new(server);
+    let edge = EdgeServer::bind(server.clone(), listen, cfg, check)?;
+    println!("edge listening on http://{}", edge.local_addr());
+    println!("  POST /v1/classify   {{\"image\":[f32; {image_len}], \"route\"?, \"deadline_ms\"?, \"client\"?}}");
+    println!("  GET  /healthz       gateway + per-variant health");
+    println!("  GET  /metrics       Prometheus text exposition");
+    match run_for {
+        0 => {
+            println!("serving until killed (pass --for SECS for a timed run)");
+            loop {
+                std::thread::sleep(Duration::from_secs(3600));
+            }
+        }
+        secs => {
+            println!("serving for {secs}s, then draining");
+            std::thread::sleep(Duration::from_secs(secs));
+        }
+    }
+
+    println!("\ndraining edge (stop admitting -> flush in-flight -> stop threads)...");
+    let s = edge.shutdown();
+    println!(
+        "edge: {} requests ({} ok, {} client-err, {} server-err), p50 {:.0}us p99 {:.0}us",
+        s.requests, s.ok, s.client_errors, s.server_errors, s.p50_us, s.p99_us
+    );
+    println!(
+        "  shed: {} rate-limited (429), {} admission (503), {} at the socket queue",
+        s.rate_limited, s.admission_shed, s.queue_shed
+    );
+    println!(
+        "  cache: {} hits / {} misses, {} inserted, {} evicted, {} uncacheable",
+        s.cache_hits, s.cache_misses, s.cache_insertions, s.cache_evictions, s.cache_uncacheable
+    );
+    println!(
+        "  coalescing: {} led, {} rode an in-flight duplicate",
+        s.coalesce_leaders, s.coalesce_joined
+    );
+
+    let server = Arc::try_unwrap(server)
+        .map_err(|_| anyhow!("edge threads still hold the gateway after shutdown"))?;
+    print!("{}", server.summary_table().render());
+    let r = server.robustness_report();
+    println!(
+        "robustness: shed={} (expired-at-dequeue {}) panics={} worker-restarts={} \
+         retried={} hedged={} hedge-wins={} fallbacks={}",
+        r.shed, r.shed_expired, r.panics, r.worker_restarts, r.retried, r.hedged,
+        r.hedge_wins, r.fallbacks
+    );
+    if let Some(f) = fault {
+        let c = &f.controls;
+        println!(
+            "fault '{}': {} backend calls seen, {} faults injected \
+             (errors {}, panics {}, latency spikes {}, corruptions {})",
+            f.scenario,
+            c.calls(),
+            c.injected_total(),
+            c.injected_errors(),
+            c.injected_panics(),
+            c.injected_latency_spikes(),
+            c.injected_corruptions(),
+        );
+    }
+    server.shutdown();
+    Ok(())
+}
+
+/// `classify --remote http://ADDR`: drive a running `serve --listen` edge
+/// over HTTP instead of booting a local gateway. Connection errors retry
+/// under the same exponential-backoff policy the gateway uses internally.
+fn classify_remote(args: &Args, remote: &str) -> Result<()> {
+    let retry = RetryPolicy::attempts(args.get_u64("retry", 3).min(16) as u32);
+    let client = RemoteClient::new(remote, retry);
+    let image_len = args.get_usize("image-len", 3072);
+    let classes = args.get_usize("classes", 10);
+    let index = args.get_usize("index", 0);
+    // The synthetic-image rule every hosted backend agrees on: a constant
+    // image of value c classifies as c.
+    let class = index % classes;
+    let img = vec![class as f32; image_len];
+    let deadline = args.get_u64("deadline", 0);
+    let route = args.get("route");
+    let a = client.classify(
+        &img,
+        route,
+        (deadline > 0).then_some(deadline),
+        args.get("client"),
+    )?;
+    println!(
+        "remote {}: image {index} predicted class {} via variant '{}'{}{} (label {class})",
+        client.addr(),
+        a.class,
+        a.variant,
+        if a.cached { " [cached]" } else { "" },
+        if a.coalesced { " [coalesced]" } else { "" },
+    );
+    Ok(())
+}
+
 fn cmd_classify(args: &Args) -> Result<()> {
+    if let Some(remote) = args.get("remote") {
+        return classify_remote(args, remote);
+    }
     let dir = args
         .get("artifacts")
         .map(std::path::PathBuf::from)

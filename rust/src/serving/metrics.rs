@@ -87,28 +87,82 @@ impl Metrics {
         self.shed_expired + self.shed_admission
     }
 
+    /// The stable, machine-consumable projection of this variant's
+    /// counters. Every consumer that used to pick fields out of `Metrics`
+    /// ad hoc (the CLI serve report, the edge `/metrics` exposition, the
+    /// one-line [`summary`](Metrics::summary)) reads this one struct, so
+    /// the set of exported signals can only be widened deliberately.
+    pub fn summarize(&self) -> MetricsSummary {
+        MetricsSummary {
+            requests: self.requests,
+            responses: self.responses,
+            errors: self.errors,
+            shed_admission: self.shed_admission,
+            shed_expired: self.shed_expired,
+            shed: self.shed(),
+            panics: self.panics,
+            worker_restarts: self.worker_restarts,
+            batches: self.batches,
+            mean_batch: self.mean_batch(),
+            p50_us: self.latency.percentile_us(50.0),
+            p99_us: self.latency.percentile_us(99.0),
+            max_us: self.latency.max_us(),
+            ewma_us: self.ewma_latency_us,
+            throughput_rps: self.throughput_rps(),
+            fpga_fps: self.fpga_fps(),
+        }
+    }
+
     pub fn summary(&self) -> String {
+        let s = self.summarize();
         format!(
             "requests={} responses={} errors={} shed={} panics={} restarts={} \
              batches={} mean_batch={:.2} \
              p50={:.0}us p99={:.0}us max={:.0}us ewma={:.0}us throughput={:.1} rps \
              fpga_sim={:.1} fps",
-            self.requests,
-            self.responses,
-            self.errors,
-            self.shed(),
-            self.panics,
-            self.worker_restarts,
-            self.batches,
-            self.mean_batch(),
-            self.latency.percentile_us(50.0),
-            self.latency.percentile_us(99.0),
-            self.latency.max_us(),
-            self.ewma_latency_us,
-            self.throughput_rps(),
-            self.fpga_fps(),
+            s.requests,
+            s.responses,
+            s.errors,
+            s.shed,
+            s.panics,
+            s.worker_restarts,
+            s.batches,
+            s.mean_batch,
+            s.p50_us,
+            s.p99_us,
+            s.max_us,
+            s.ewma_us,
+            s.throughput_rps,
+            s.fpga_fps,
         )
     }
+}
+
+/// Point-in-time snapshot of one variant's [`Metrics`], flattened to plain
+/// numbers (histograms already reduced to their percentiles). This is the
+/// single export surface shared by the CLI report and the edge
+/// `/metrics` endpoint.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MetricsSummary {
+    pub requests: u64,
+    pub responses: u64,
+    pub errors: u64,
+    /// Shed at admission: the queue-wait EWMA already exceeded the deadline.
+    pub shed_admission: u64,
+    /// Shed at dequeue: the deadline had expired before batch assembly.
+    pub shed_expired: u64,
+    /// `shed_admission + shed_expired`.
+    pub shed: u64,
+    pub panics: u64,
+    pub worker_restarts: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+    pub ewma_us: f64,
+    pub throughput_rps: f64,
+    pub fpga_fps: f64,
 }
 
 #[cfg(test)]
@@ -149,6 +203,35 @@ mod tests {
         assert!(s.contains("shed=5"), "{s}");
         assert!(s.contains("panics=1"), "{s}");
         assert!(s.contains("restarts=4"), "{s}");
+    }
+
+    #[test]
+    fn summarize_is_the_single_export_surface() {
+        let mut m = Metrics {
+            requests: 10,
+            responses: 7,
+            errors: 1,
+            shed_expired: 1,
+            shed_admission: 1,
+            panics: 2,
+            worker_restarts: 1,
+            batches: 7,
+            batched_items: 7,
+            ..Metrics::default()
+        };
+        m.observe_latency_us(500.0);
+        let s = m.summarize();
+        assert_eq!(s.shed, 2);
+        assert_eq!(s.shed_admission, 1);
+        assert_eq!(s.shed_expired, 1);
+        assert_eq!(s.panics, 2);
+        assert_eq!(s.worker_restarts, 1);
+        assert!((s.ewma_us - 500.0).abs() < 1e-9);
+        // Log2-bucketed histogram: one 500 us sample reports its bucket's
+        // upper bound (512 us).
+        assert!(s.p50_us >= 256.0 && s.p50_us <= 1024.0, "{}", s.p50_us);
+        // The one-line summary is a rendering of the same struct.
+        assert!(m.summary().contains("shed=2"));
     }
 
     #[test]

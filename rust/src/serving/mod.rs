@@ -60,7 +60,7 @@ pub use fault::{
     silence_injected_panics, FaultControls, FaultKind, FaultPlan, FaultRule, FaultyBackend,
     Forced, InjectedPanic,
 };
-pub use metrics::Metrics;
+pub use metrics::{Metrics, MetricsSummary};
 pub use retry::{
     BreakerConfig, BreakerState, HedgeTrigger, RetryPolicy, RobustCounters, RobustSnapshot,
 };
@@ -652,6 +652,29 @@ impl Server {
         self.robust.snapshot()
     }
 
+    /// Gateway-wide robustness ledger: the worker-side counters
+    /// ([`MetricsSummary`]'s shed/panic/restart fields) summed over every
+    /// variant, plus the server-level retry/hedge counters. The CLI's
+    /// end-of-run "robustness:" line and the edge `/metrics` endpoint both
+    /// consume this one struct instead of folding `metrics_all` ad hoc.
+    pub fn robustness_report(&self) -> RobustnessReport {
+        let mut r = RobustnessReport::default();
+        for (_, m) in self.metrics_all() {
+            let s = m.summarize();
+            r.shed += s.shed;
+            r.shed_admission += s.shed_admission;
+            r.shed_expired += s.shed_expired;
+            r.panics += s.panics;
+            r.worker_restarts += s.worker_restarts;
+        }
+        let rc = self.robust.snapshot();
+        r.retried = rc.retried;
+        r.hedged = rc.hedged;
+        r.hedge_wins = rc.hedge_wins;
+        r.fallbacks = rc.fallbacks;
+        r
+    }
+
     /// Clone a variant's metrics, folding in the signals that live outside
     /// the mutex (admission sheds are counted lock-free on the client
     /// path).
@@ -733,6 +756,23 @@ impl Server {
             .map(|v| (v.spec.name.clone(), Self::snapshot_metrics(v, wall_us)))
             .collect()
     }
+}
+
+/// Gateway-wide robustness ledger (see [`Server::robustness_report`]):
+/// worker-side shed/panic/restart counters summed over every variant plus
+/// the server-level retry/hedge counters from [`RobustSnapshot`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RobustnessReport {
+    /// `shed_admission + shed_expired`, summed over variants.
+    pub shed: u64,
+    pub shed_admission: u64,
+    pub shed_expired: u64,
+    pub panics: u64,
+    pub worker_restarts: u64,
+    pub retried: u64,
+    pub hedged: u64,
+    pub hedge_wins: u64,
+    pub fallbacks: u64,
 }
 
 #[cfg(test)]

@@ -15,6 +15,7 @@
 //! - [`prop`] — mini property-based testing harness
 //! - [`error`] — mini-`anyhow` error/result plumbing
 //! - [`fnv`] — process-stable FNV-1a hashing for fingerprints/cache keys
+//! - [`sha256`] — portable content addressing (edge response cache)
 
 pub mod bench;
 pub mod cli;
@@ -23,5 +24,6 @@ pub mod fnv;
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod sha256;
 pub mod stats;
 pub mod table;

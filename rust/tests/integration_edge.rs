@@ -1,0 +1,581 @@
+//! End-to-end tests for the network edge over a real loopback socket:
+//! HTTP classify against the gateway, identical-request coalescing
+//! (duplicates share one backend inference), the content-addressed
+//! response cache (bit-identical repeats, corrupt responses never
+//! cached), per-client rate limiting (429 for the abuser, 200 for the
+//! polite), the Prometheus exposition, and graceful drain — all with
+//! zero lost or hanging replies under injected faults.
+
+use mpcnn::edge::{http, EdgeConfig, EdgeServer, RemoteClient, ResponseCheck};
+use mpcnn::serving::{
+    silence_injected_panics, BatcherConfig, BreakerConfig, FaultControls, FaultKind, FaultPlan,
+    FaultRule, FaultyBackend, InferenceBackend, InjectedPanic, MockBackend, RetryPolicy, Server,
+    SupervisorConfig, VariantProfile, VariantSpec,
+};
+use mpcnn::util::error::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+const IMG: usize = 48;
+const CLASSES: usize = 10;
+
+fn profile(acc: f64, fps: f64) -> VariantProfile {
+    VariantProfile {
+        top5_accuracy: Some(acc),
+        fpga_fps: fps,
+        fpga_mj_per_frame: 1.0,
+    }
+}
+
+fn bc() -> BatcherConfig {
+    BatcherConfig {
+        max_batch: 1,
+        max_wait: Duration::from_millis(1),
+        queue_capacity: 128,
+        supervisor: SupervisorConfig {
+            restart_budget: 8,
+            backoff_initial: Duration::from_millis(5),
+            backoff_max: Duration::from_millis(40),
+        },
+        // High threshold: these tests exercise the edge, not the breaker.
+        breaker: BreakerConfig {
+            failure_threshold: 1000,
+            open_for: Duration::from_millis(50),
+        },
+        ..Default::default()
+    }
+}
+
+/// Mock that counts *executed* inferences (`max_batch` is 1 everywhere
+/// here, so calls == images inferred) — the ground truth for "duplicates
+/// shared one backend inference".
+struct CountingBackend {
+    inner: MockBackend,
+    calls: Arc<AtomicU64>,
+}
+
+impl InferenceBackend for CountingBackend {
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.inner.batch_sizes()
+    }
+    fn image_len(&self) -> usize {
+        self.inner.image_len()
+    }
+    fn classes(&self) -> usize {
+        self.inner.classes()
+    }
+    fn infer_batch(&self, images: &[f32], batch: usize) -> Result<Vec<f32>> {
+        self.calls.fetch_add(batch as u64, Ordering::SeqCst);
+        self.inner.infer_batch(images, batch)
+    }
+}
+
+/// Two-variant gateway behind a loopback edge: `w2` fast (200us mock,
+/// optionally fault-wrapped), `w8` slow-but-accurate (counting mock with
+/// `w8_latency_us`). Returns the edge, the shared server handle, the w8
+/// inference counter, and the fault controls ledger.
+fn boot(
+    ecfg: EdgeConfig,
+    w2_fault: Option<FaultPlan>,
+    w8_latency_us: u64,
+    retry: RetryPolicy,
+    check: Option<ResponseCheck>,
+) -> (EdgeServer, Arc<Server>, Arc<AtomicU64>, Arc<FaultControls>) {
+    let controls = FaultControls::new();
+    let calls = Arc::new(AtomicU64::new(0));
+    let mut builder = Server::builder().retry_policy(retry);
+    {
+        let controls = controls.clone();
+        builder = builder.variant_with_profile(
+            VariantSpec::uniform(2),
+            profile(87.48, 245.0),
+            bc(),
+            move || {
+                let inner = Box::new(MockBackend::new(IMG, CLASSES, vec![1], 200))
+                    as Box<dyn InferenceBackend>;
+                Ok(match &w2_fault {
+                    Some(plan) => Box::new(FaultyBackend::new(
+                        inner,
+                        plan.clone(),
+                        controls.clone(),
+                    )) as Box<dyn InferenceBackend>,
+                    None => inner,
+                })
+            },
+        );
+    }
+    {
+        let calls = calls.clone();
+        builder = builder.variant_with_profile(
+            VariantSpec::uniform(8),
+            profile(89.62, 47.0),
+            bc(),
+            move || {
+                Ok(Box::new(CountingBackend {
+                    inner: MockBackend::new(IMG, CLASSES, vec![1], w8_latency_us),
+                    calls: calls.clone(),
+                }) as Box<dyn InferenceBackend>)
+            },
+        );
+    }
+    let server = Arc::new(builder.build().expect("gateway boots"));
+    let edge = EdgeServer::bind(server.clone(), "127.0.0.1:0", ecfg, check).expect("edge binds");
+    (edge, server, calls, controls)
+}
+
+/// The synthetic-image rule shared with the mock: a constant image of
+/// value `c` classifies as `c % CLASSES`.
+fn image_of(class: usize) -> Vec<f32> {
+    vec![class as f32; IMG]
+}
+
+fn classify_body(
+    image: &[f32],
+    route: Option<&str>,
+    client: Option<&str>,
+    deadline_ms: Option<u64>,
+) -> String {
+    let vals: Vec<String> = image.iter().map(|v| format!("{v}")).collect();
+    let mut s = format!("{{\"image\":[{}]", vals.join(","));
+    if let Some(r) = route {
+        s.push_str(&format!(",\"route\":\"{r}\""));
+    }
+    if let Some(c) = client {
+        s.push_str(&format!(",\"client\":\"{c}\""));
+    }
+    if let Some(d) = deadline_ms {
+        s.push_str(&format!(",\"deadline_ms\":{d}"));
+    }
+    s.push('}');
+    s
+}
+
+fn post_classify(addr: &str, body: &str) -> std::io::Result<http::ClientResponse> {
+    http::request(
+        addr,
+        "POST",
+        "/v1/classify",
+        &[("Content-Type", "application/json")],
+        body.as_bytes(),
+        Duration::from_secs(30),
+    )
+}
+
+/// Value of an unlabeled sample line `NAME <value>` in a Prometheus text
+/// exposition.
+fn metric_value(text: &str, name: &str) -> Option<f64> {
+    text.lines().find_map(|l| {
+        let rest = l.strip_prefix(name)?;
+        let rest = rest.strip_prefix(' ')?;
+        rest.trim().parse::<f64>().ok()
+    })
+}
+
+/// The ISSUE's acceptance test: under the `flaky` fault scenario on `w2`,
+/// duplicates coalesce onto ONE backend inference, repeats are served
+/// bit-identically from the cache, an abusive client is rate limited
+/// while a polite one proceeds, a 64-request concurrent sweep loses no
+/// replies, and /metrics exposes the whole story.
+#[test]
+fn end_to_end_coalescing_cache_rate_limit_and_metrics_under_flaky() {
+    let ecfg = EdgeConfig {
+        rate_per_sec: 2.0,
+        burst: 5.0,
+        handler_threads: 8,
+        max_inflight: 0,
+        ..EdgeConfig::default()
+    };
+    let (edge, server, w8_calls, _controls) = boot(
+        ecfg,
+        Some(FaultPlan::scenario("flaky").expect("known scenario")),
+        60_000, // w8 at 60ms: duplicates overlap its in-flight inference
+        RetryPolicy::attempts(3),
+        None,
+    );
+    let addr = edge.local_addr().to_string();
+
+    // --- Duplicates: 8 concurrent identical requests, 1 backend call. ---
+    let calls_before = w8_calls.load(Ordering::SeqCst);
+    let barrier = Arc::new(Barrier::new(8));
+    let answers: Vec<_> = (0..8)
+        .map(|i| {
+            let addr = addr.clone();
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                let client = RemoteClient::new(&addr, RetryPolicy::default());
+                barrier.wait();
+                client.classify(&image_of(7), Some("name:w8"), None, Some(&format!("dup-{i}")))
+            })
+        })
+        .collect::<Vec<_>>()
+        .into_iter()
+        .map(|h| h.join().expect("no panicking client").expect("duplicate answered"))
+        .collect();
+    assert_eq!(
+        w8_calls.load(Ordering::SeqCst) - calls_before,
+        1,
+        "8 concurrent duplicates must share exactly one backend inference"
+    );
+    let leaders = answers.iter().filter(|a| !a.cached && !a.coalesced).count();
+    assert_eq!(leaders, 1, "exactly one request actually ran the inference");
+    for a in &answers {
+        assert_eq!(a.class, 7);
+        assert_eq!(a.variant, "w8");
+        assert_eq!(a.logits, answers[0].logits, "all duplicates see one result");
+    }
+
+    // --- Cache: the repeat is a hit with bit-identical logits. ---
+    let client = RemoteClient::new(&addr, RetryPolicy::default());
+    let repeat = client
+        .classify(&image_of(7), Some("name:w8"), None, Some("repeat"))
+        .expect("repeat answered");
+    assert!(repeat.cached, "identical request must be served from the cache");
+    assert_eq!(
+        repeat.logits, answers[0].logits,
+        "cached logits are bit-identical to the original inference"
+    );
+    assert_eq!(
+        w8_calls.load(Ordering::SeqCst) - calls_before,
+        1,
+        "the cache hit ran no inference"
+    );
+
+    // --- Rate limiting: the abuser gets 429s, the polite client 200. ---
+    let abuse_body = classify_body(&image_of(7), Some("name:w8"), Some("abuser"), None);
+    let mut limited = 0;
+    let mut admitted = 0;
+    for _ in 0..12 {
+        let resp = post_classify(&addr, &abuse_body).expect("abuser still gets replies");
+        match resp.status {
+            429 => {
+                limited += 1;
+                let retry_after = resp.header("Retry-After").expect("429 carries Retry-After");
+                assert!(retry_after.parse::<u64>().expect("integer seconds") >= 1);
+            }
+            200 => admitted += 1,
+            s => panic!("abuser saw unexpected status {s}"),
+        }
+    }
+    assert!(limited >= 1, "12 rapid requests vs burst 5 must trip the bucket");
+    assert!(admitted >= 1, "the burst allowance admits the first requests");
+    let polite = classify_body(&image_of(7), Some("name:w8"), Some("polite"), None);
+    assert_eq!(
+        post_classify(&addr, &polite).expect("polite reply").status,
+        200,
+        "rate limiting is per client: the abuser's bucket is not the polite client's"
+    );
+
+    // --- Concurrent sweep under flaky: every reply arrives, none hang. ---
+    let sweep: Vec<(usize, u16)> = (0..64)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let body = classify_body(
+                    &image_of(i),
+                    Some("min-accuracy:87"),
+                    Some(&format!("sweep-{i}")),
+                    Some(5_000),
+                );
+                (i, post_classify(&addr, &body).expect("swept reply").status)
+            })
+        })
+        .collect::<Vec<_>>()
+        .into_iter()
+        .map(|h| h.join().expect("no panicking client"))
+        .collect();
+    assert_eq!(sweep.len(), 64, "no reply was lost");
+    for (i, status) in &sweep {
+        assert!(
+            *status == 200 || *status >= 500,
+            "request {i}: got {status}; under faults a reply is success or a \
+             well-formed 5xx, never silence"
+        );
+    }
+    let ok = sweep.iter().filter(|(_, s)| *s == 200).count();
+    assert!(ok >= 32, "retry + fallback should carry most of the sweep: {ok}/64");
+
+    // --- /metrics exposes nonzero latency, cache, and shed counters. ---
+    let (status, text) = client.get("/metrics").expect("metrics scrape");
+    assert_eq!(status, 200);
+    assert!(metric_value(&text, "mpcnn_edge_requests_total").unwrap() > 0.0);
+    assert!(metric_value(&text, "mpcnn_edge_latency_p50_us").unwrap() > 0.0);
+    assert!(metric_value(&text, "mpcnn_cache_hits_total").unwrap() >= 1.0);
+    assert!(
+        metric_value(&text, "mpcnn_edge_rate_limited_total").unwrap() >= 1.0,
+        "the abuser's 429s are the shed signal"
+    );
+    assert!(
+        text.contains("mpcnn_variant_ewma_latency_us{variant=\"w2\"}"),
+        "per-variant gateway signals are labeled"
+    );
+    assert!(text.contains("mpcnn_robust_retried_total"));
+
+    let (status, health) = client.get("/healthz").expect("healthz");
+    assert_eq!(status, 200);
+    assert!(health.contains("\"status\":\"ok\""), "{health}");
+
+    // --- Drain, then verify the ledger adds up. ---
+    let snap = edge.shutdown();
+    assert!(snap.requests > 0);
+    assert!(snap.rate_limited >= 1);
+    assert!(snap.cache_hits >= 1);
+    assert!(
+        snap.coalesce_joined + snap.cache_hits >= 7,
+        "the 7 non-leading duplicates either coalesced or hit the cache: {snap:?}"
+    );
+    let server = Arc::try_unwrap(server).expect("edge released the gateway");
+    server.shutdown();
+}
+
+/// Satellite (c): a corrupt-logits response must never populate the
+/// cache. The first `w2` call is deterministically corrupted; the
+/// response check (the mock's own ground-truth rule) flags it
+/// uncacheable, so repeats re-infer and only verified answers stick.
+#[test]
+fn corrupt_responses_are_never_cached() {
+    let check: ResponseCheck = Arc::new(|image: &[f32], a: &mpcnn::edge::Answer| {
+        let mean = image.iter().sum::<f32>() / image.len() as f32;
+        a.class == (mean.max(0.0) as usize) % CLASSES
+    });
+    let plan = FaultPlan::new(
+        vec![FaultRule::window(0, 1, FaultKind::Corrupt, 1.0)],
+        1,
+    );
+    let (edge, server, _w8_calls, controls) = boot(
+        EdgeConfig {
+            rate_per_sec: 0.0,
+            ..EdgeConfig::default()
+        },
+        Some(plan),
+        0,
+        RetryPolicy::default(),
+        Some(check),
+    );
+    let addr = edge.local_addr().to_string();
+    let client = RemoteClient::new(&addr, RetryPolicy::default());
+
+    // Every image three times, pinned to the faulty variant. Fetch 1 of
+    // image 0 is the corrupted call (served once, wrong, NOT cached);
+    // every cached reply thereafter must satisfy the ground-truth rule.
+    for class in 0..40 {
+        for fetch in 0..3 {
+            let a = client
+                .classify(&image_of(class), Some("name:w2"), None, None)
+                .expect("w2 answers");
+            if a.cached {
+                assert_eq!(
+                    a.class,
+                    class % CLASSES,
+                    "a cached reply must be a verified one (fetch {fetch} of image {class})"
+                );
+            }
+        }
+    }
+    assert!(
+        controls.injected_corruptions() >= 1,
+        "the corruption fired: {}",
+        controls.injected_corruptions()
+    );
+
+    let snap = edge.shutdown();
+    assert!(
+        snap.cache_uncacheable >= 1,
+        "the corrupted response was refused by the check: {snap:?}"
+    );
+    assert_eq!(
+        snap.cache_insertions, 40,
+        "each distinct image is cached exactly once, corruption excluded: {snap:?}"
+    );
+    assert!(snap.cache_hits >= 40, "repeats were served from the cache: {snap:?}");
+    Arc::try_unwrap(server).expect("gateway released").shutdown();
+}
+
+/// Backend whose every inference holds the worker for `delay`, then dies
+/// with a (silenced) typed panic — a deterministically slow, doomed
+/// leader for followers to pile onto.
+struct SlowPanicBackend {
+    delay: Duration,
+}
+
+impl InferenceBackend for SlowPanicBackend {
+    fn batch_sizes(&self) -> Vec<usize> {
+        vec![1]
+    }
+    fn image_len(&self) -> usize {
+        IMG
+    }
+    fn classes(&self) -> usize {
+        CLASSES
+    }
+    fn infer_batch(&self, _images: &[f32], _batch: usize) -> Result<Vec<f32>> {
+        std::thread::sleep(self.delay);
+        std::panic::panic_any(InjectedPanic("slow doomed inference".to_string()))
+    }
+}
+
+/// Satellite (c): coalescing under a panicking backend — the leader's
+/// error is broadcast, every waiter gets a well-formed 5xx, none hang,
+/// and nothing enters the cache. (`exact:` pins are single-shot by the
+/// gateway's retry policy, so the leader's one doomed inference is the
+/// whole story.)
+#[test]
+fn coalescing_under_panic_errors_all_waiters_without_hanging() {
+    silence_injected_panics();
+    let server = Server::builder()
+        .variant_with_profile(VariantSpec::uniform(2), profile(87.48, 245.0), bc(), || {
+            Ok(Box::new(SlowPanicBackend {
+                delay: Duration::from_millis(400),
+            }) as Box<dyn InferenceBackend>)
+        })
+        .build()
+        .expect("gateway boots");
+    let server = Arc::new(server);
+    let edge = EdgeServer::bind(
+        server.clone(),
+        "127.0.0.1:0",
+        EdgeConfig {
+            rate_per_sec: 0.0,
+            ..EdgeConfig::default()
+        },
+        None,
+    )
+    .expect("edge binds");
+    let addr = edge.local_addr().to_string();
+
+    let spawn_one = |i: usize| {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let body = classify_body(
+                &image_of(4),
+                Some("exact:2"),
+                Some(&format!("p-{i}")),
+                Some(10_000),
+            );
+            post_classify(&addr, &body).expect("a reply, not a hang").status
+        })
+    };
+    let leader = spawn_one(0);
+    // Let the leader claim the key and start its doomed 400ms inference.
+    std::thread::sleep(Duration::from_millis(120));
+    let followers: Vec<_> = (1..6).map(spawn_one).collect();
+    let mut statuses = vec![leader.join().expect("leader thread")];
+    for f in followers {
+        statuses.push(f.join().expect("follower thread"));
+    }
+
+    assert_eq!(statuses.len(), 6, "every waiter got a reply");
+    for s in &statuses {
+        assert!(*s >= 500, "a panicking backend yields 5xx, got {s}");
+    }
+    let snap = edge.shutdown();
+    assert!(
+        snap.coalesce_joined >= 1,
+        "followers joined the in-flight doomed inference: {snap:?}"
+    );
+    assert_eq!(snap.cache_insertions, 0, "errors never enter the cache: {snap:?}");
+    Arc::try_unwrap(server).expect("gateway released").shutdown();
+}
+
+/// Graceful drain: a request in flight at shutdown is flushed and
+/// answered; afterwards the socket is closed and the gateway handle is
+/// released for its own shutdown.
+#[test]
+fn graceful_drain_flushes_inflight_then_closes_the_socket() {
+    let (edge, server, _w8_calls, _controls) = boot(
+        EdgeConfig {
+            rate_per_sec: 0.0,
+            ..EdgeConfig::default()
+        },
+        None,
+        300_000, // w8 at 300ms: comfortably in flight when drain begins
+        RetryPolicy::default(),
+        None,
+    );
+    let addr = edge.local_addr().to_string();
+
+    let inflight = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let client = RemoteClient::new(&addr, RetryPolicy::default());
+            client.classify(&image_of(3), Some("name:w8"), None, None)
+        })
+    };
+    std::thread::sleep(Duration::from_millis(100));
+    let snap = edge.shutdown();
+
+    let a = inflight
+        .join()
+        .expect("client thread")
+        .expect("the in-flight request was flushed, not dropped");
+    assert_eq!(a.class, 3);
+    assert_eq!(a.variant, "w8");
+    assert_eq!(snap.ok, 1, "exactly the flushed request completed: {snap:?}");
+
+    let refused = http::request(
+        &addr,
+        "GET",
+        "/healthz",
+        &[],
+        &[],
+        Duration::from_secs(2),
+    );
+    assert!(refused.is_err(), "the socket is closed after drain");
+    Arc::try_unwrap(server).expect("gateway released").shutdown();
+}
+
+/// The plain HTTP surface: healthz, 404/405 routing, 400s for malformed
+/// bodies and wrong image geometry, 404 for unknown variants, and the
+/// Prometheus content type.
+#[test]
+fn http_surface_statuses_and_content_types() {
+    let (edge, server, _w8_calls, _controls) = boot(
+        EdgeConfig {
+            rate_per_sec: 0.0,
+            ..EdgeConfig::default()
+        },
+        None,
+        0,
+        RetryPolicy::default(),
+        None,
+    );
+    let addr = edge.local_addr().to_string();
+    let get = |path: &str| {
+        http::request(&addr, "GET", path, &[], &[], Duration::from_secs(10))
+            .expect("reply")
+    };
+
+    assert_eq!(get("/healthz").status, 200);
+    assert_eq!(get("/nope").status, 404);
+    assert_eq!(get("/v1/classify").status, 405, "classify is POST-only");
+
+    let metrics = get("/metrics");
+    assert_eq!(metrics.status, 200);
+    assert!(
+        metrics.header("Content-Type").unwrap().starts_with("text/plain"),
+        "Prometheus text exposition content type"
+    );
+
+    assert_eq!(
+        post_classify(&addr, "this is not json").expect("reply").status,
+        400
+    );
+    assert_eq!(
+        post_classify(&addr, "{\"image\":[]}").expect("reply").status,
+        400
+    );
+    let short = post_classify(&addr, &classify_body(&[1.0, 2.0, 3.0], None, None, None))
+        .expect("reply");
+    assert_eq!(short.status, 400, "wrong image geometry is the client's fault");
+    assert!(short.body_text().contains("bad input"), "{}", short.body_text());
+    let unknown = post_classify(
+        &addr,
+        &classify_body(&image_of(1), Some("name:nope"), None, None),
+    )
+    .expect("reply");
+    assert_eq!(unknown.status, 404, "unknown variant");
+
+    let snap = edge.shutdown();
+    assert!(snap.bad_requests >= 2, "malformed bodies were counted: {snap:?}");
+    Arc::try_unwrap(server).expect("gateway released").shutdown();
+}
