@@ -1,0 +1,186 @@
+#!/usr/bin/env python3
+"""Perf-regression ratchet over the BENCH_*.json artifacts.
+
+Every bench target writes a ``BENCH_<name>.json`` document at the repo
+root (``Bencher`` rows under ``results`` plus a bench-specific summary
+object). This script compares those documents against the committed
+``bench_baselines.json`` and fails the build when a metric regresses:
+
+* **bounds** — machine-independent invariants on summary metrics
+  (ratios, booleans): ``{"path": "obs.overhead_p50", "max": 0.5}``.
+  A violated bound, or a bound whose path is missing from the document
+  (schema drift), is a failure.
+* **results** — per-row ``mean_ns`` ratchets with a multiplicative
+  tolerance (CI runners are noisy; the default tolerance is generous).
+  A ``null`` baseline means "not yet baselined": it is reported but
+  never fails — run with ``--update`` to pin the current numbers.
+
+Re-baselining after an intentional perf change::
+
+    MPCNN_BENCH_FAST=1 cargo bench --bench obs   # regenerate the artifact
+    python3 python/tools/check_bench.py --update  # pin current numbers
+    git add bench_baselines.json                  # commit the new floor
+
+Exit status: 0 when every present artifact passes, 1 on any regression
+or bound violation. Artifacts named in the baselines but absent on disk
+are skipped (each CI job only generates a subset); pass file names as
+positional arguments to restrict the check to those artifacts.
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[2]
+
+OK = "ok"
+FAIL = "REGRESSED"
+UNSET = "unbaselined"
+
+
+def lookup(doc, dotted):
+    """Resolve a dotted path ("obs.overhead_p50") inside a JSON object."""
+    node = doc
+    for part in dotted.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return node
+
+
+def result_row(doc, name):
+    for row in doc.get("results", []):
+        if row.get("name") == name:
+            return row
+    return None
+
+
+def fmt(v):
+    if isinstance(v, bool) or v is None:
+        return str(v)
+    if isinstance(v, float) and abs(v) >= 1000:
+        return f"{v:,.0f}"
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return f"{v:,}"
+
+
+def check_bounds(fname, doc, bounds, rows):
+    bad = 0
+    for b in bounds:
+        path = b["path"]
+        cur = lookup(doc, path)
+        if cur is None:
+            rows.append((fname, path, "present", "MISSING", FAIL, b.get("why", "")))
+            bad += 1
+            continue
+        if "equals" in b:
+            status = OK if cur == b["equals"] else FAIL
+            want = f"== {fmt(b['equals'])}"
+        elif "max" in b:
+            status = OK if cur <= b["max"] else FAIL
+            want = f"<= {fmt(b['max'])}"
+        else:
+            status = OK if cur >= b["min"] else FAIL
+            want = f">= {fmt(b['min'])}"
+        rows.append((fname, path, want, fmt(cur), status, b.get("why", "")))
+        bad += status == FAIL
+    return bad
+
+
+def check_results(fname, doc, results, default_tol, rows):
+    bad = 0
+    for name, spec in sorted(results.items()):
+        row = result_row(doc, name)
+        base = spec.get("mean_ns")
+        if row is None:
+            rows.append((fname, name, fmt(base), "MISSING", FAIL, "bench row gone"))
+            bad += 1
+            continue
+        cur = row.get("mean_ns")
+        if base is None:
+            rows.append((fname, name, "(none)", fmt(cur), UNSET, "run --update to pin"))
+            continue
+        tol = spec.get("tolerance", default_tol)
+        status = OK if cur <= base * tol else FAIL
+        delta = 100.0 * (cur / base - 1.0) if base else 0.0
+        rows.append((fname, name, fmt(base), fmt(cur), status, f"{delta:+.1f}% (tol x{tol})"))
+        bad += status == FAIL
+    return bad
+
+
+def render(rows):
+    headers = ("artifact", "metric", "baseline", "current", "status", "note")
+    widths = [max(len(h), *(len(r[i]) for r in rows)) if rows else len(h)
+              for i, h in enumerate(headers)]
+    line = "  ".join(h.ljust(w) for h, w in zip(headers, widths))
+    print(line)
+    print("-" * len(line))
+    for r in rows:
+        print("  ".join(c.ljust(w) for c, w in zip(r, widths)))
+
+
+def update_baselines(baselines, path):
+    """Pin current mean_ns values for every artifact present on disk."""
+    pinned = 0
+    for fname, entry in baselines.get("files", {}).items():
+        fpath = REPO_ROOT / fname
+        if not fpath.exists():
+            continue
+        doc = json.loads(fpath.read_text())
+        for name, spec in entry.get("results", {}).items():
+            row = result_row(doc, name)
+            if row is not None:
+                spec["mean_ns"] = row.get("mean_ns")
+                pinned += 1
+    path.write_text(json.dumps(baselines, indent=2, sort_keys=False) + "\n")
+    print(f"pinned {pinned} baseline(s) into {path}")
+    print("commit the updated file to accept the new perf floor")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("artifacts", nargs="*",
+                    help="restrict to these BENCH_*.json files (default: all in baselines)")
+    ap.add_argument("--baselines", default=str(REPO_ROOT / "bench_baselines.json"))
+    ap.add_argument("--update", action="store_true",
+                    help="pin current numbers as the new baseline instead of checking")
+    args = ap.parse_args()
+
+    bpath = Path(args.baselines)
+    baselines = json.loads(bpath.read_text())
+    if args.update:
+        update_baselines(baselines, bpath)
+        return 0
+
+    default_tol = baselines.get("default_tolerance", 1.35)
+    only = {Path(a).name for a in args.artifacts}
+    rows, bad, checked = [], 0, 0
+    for fname, entry in baselines.get("files", {}).items():
+        if only and fname not in only:
+            continue
+        fpath = REPO_ROOT / fname
+        if not fpath.exists():
+            if only:  # explicitly requested but absent: that is a failure
+                rows.append((fname, "-", "-", "MISSING", FAIL, "artifact not generated"))
+                bad += 1
+            else:
+                rows.append((fname, "-", "-", "-", "skipped", "artifact not on disk"))
+            continue
+        doc = json.loads(fpath.read_text())
+        checked += 1
+        bad += check_bounds(fname, doc, entry.get("bounds", []), rows)
+        bad += check_results(fname, doc, entry.get("results", {}), default_tol, rows)
+    render(rows)
+    if bad:
+        print(f"\n{bad} regression(s). If intentional, re-baseline:")
+        print("  MPCNN_BENCH_FAST=1 cargo bench --bench <name>")
+        print("  python3 python/tools/check_bench.py --update  # then commit bench_baselines.json")
+        return 1
+    print(f"\nall checks passed across {checked} artifact(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

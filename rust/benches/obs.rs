@@ -1,0 +1,265 @@
+//! Bench obs: what request tracing costs end to end, plus the tracing and
+//! flight-recorder hot paths in isolation.
+//!
+//! The same single-variant mock gateway is driven over loopback HTTP twice
+//! with identical sequential 64-request waves of unique images (cache
+//! misses by construction): once with the flight recorder off — the
+//! untraced floor — and once with `--trace` armed, where every request
+//! allocates a trace, records the full span taxonomy through the edge and
+//! the batcher worker, and lands in the recorder ring. `BENCH_obs.json`
+//! records p50/p99/rps per mode and the relative overhead at p50/p99
+//! against the documented bound (`overhead_bound_p50`, see EXPERIMENTS.md
+//! §Observability): tracing is a handful of clock reads and one ring
+//! insert per request, so it must stay well inside the bound — the perf
+//! ratchet (`python/tools/check_bench.py`) fails the build if it regresses.
+//! Isolation rows measure raw span recording (9 spans + finish) and one
+//! recorder insert, so an end-to-end regression can be attributed.
+
+use mpcnn::edge::{EdgeConfig, EdgeServer, RemoteClient};
+use mpcnn::obs::{CompletedTrace, FlightRecorder, RecorderConfig, Span, TraceHandle};
+use mpcnn::serving::{
+    BatcherConfig, InferenceBackend, MockBackend, RetryPolicy, Server, VariantProfile,
+    VariantSpec,
+};
+use mpcnn::util::bench::Bencher;
+use mpcnn::util::json::Json;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const WAVE: usize = 64;
+const IMAGE_LEN: usize = 3072;
+const LATENCY_US: u64 = 300;
+
+fn gateway() -> Server {
+    Server::builder()
+        .retry_policy(RetryPolicy::attempts(3))
+        .variant_with_profile(
+            VariantSpec::uniform(4),
+            VariantProfile {
+                top5_accuracy: Some(89.10),
+                fpga_fps: 165.0,
+                fpga_mj_per_frame: 1.0,
+            },
+            BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                queue_capacity: 128,
+                fpga_fps_sim: 0.0,
+                ..Default::default()
+            },
+            || {
+                Ok(Box::new(MockBackend::new(IMAGE_LEN, 10, vec![1, 8], LATENCY_US))
+                    as Box<dyn InferenceBackend>)
+            },
+        )
+        .build()
+        .unwrap()
+}
+
+fn edge(server: Arc<Server>, trace: bool) -> EdgeServer {
+    EdgeServer::bind(
+        server,
+        "127.0.0.1:0",
+        EdgeConfig {
+            rate_per_sec: 0.0,     // benching the datapath, not the limiter
+            cache_capacity: 65536, // large enough that misses stay misses
+            trace,
+            trace_capacity: 1024,
+            ..EdgeConfig::default()
+        },
+        None,
+    )
+    .expect("edge binds")
+}
+
+/// One wave of unique images over loopback HTTP (every request reaches the
+/// gateway — no cache hits, no coalescing).
+fn wave(client: &RemoteClient, samples_us: &mut Vec<f64>, seq: &mut u64) -> u64 {
+    let mut ok = 0u64;
+    for _ in 0..WAVE {
+        *seq += 1;
+        let img = vec![*seq as f32; IMAGE_LEN];
+        let t0 = Instant::now();
+        let r = client.classify(&img, None, None, None);
+        samples_us.push(t0.elapsed().as_micros() as f64);
+        ok += r.is_ok() as u64;
+    }
+    ok
+}
+
+fn percentile(samples: &[f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.total_cmp(b));
+    s[(((s.len() - 1) as f64) * q).round() as usize]
+}
+
+/// Sequential driver, so throughput is requests over summed latency.
+fn mode_json(samples: &[f64]) -> Json {
+    let total_us: f64 = samples.iter().sum();
+    let rps = if total_us > 0.0 {
+        1e6 * samples.len() as f64 / total_us
+    } else {
+        0.0
+    };
+    Json::obj(vec![
+        ("requests", Json::num(samples.len() as f64)),
+        ("p50_us", Json::num(percentile(samples, 0.50))),
+        ("p99_us", Json::num(percentile(samples, 0.99))),
+        ("rps", Json::num(rps)),
+    ])
+}
+
+/// The documented ceiling for tracing overhead at p50 (fraction of the
+/// untraced latency). Mirrored in EXPERIMENTS.md §Observability.
+const OVERHEAD_BOUND_P50: f64 = 0.50;
+
+fn main() {
+    let mut b = Bencher::new();
+
+    // --- untraced floor: recorder off ---
+    let server = Arc::new(gateway());
+    let off_edge = edge(server.clone(), false);
+    let client = RemoteClient::new(&off_edge.local_addr().to_string(), RetryPolicy::attempts(3));
+    let mut off_us = Vec::new();
+    let mut seq = 0u64;
+    b.run(&format!("obs/http-untraced-{WAVE}req-wave"), || {
+        wave(&client, &mut off_us, &mut seq)
+    });
+    off_edge.shutdown();
+    let server = Arc::try_unwrap(server).expect("edge released the gateway");
+    server.shutdown();
+
+    // --- same gateway, flight recorder armed ---
+    let server = Arc::new(gateway());
+    let on_edge = edge(server.clone(), true);
+    let client = RemoteClient::new(&on_edge.local_addr().to_string(), RetryPolicy::attempts(3));
+    let mut on_us = Vec::new();
+    let mut seq = 1_000_000u64; // disjoint from the untraced images
+    b.run(&format!("obs/http-traced-{WAVE}req-wave"), || {
+        wave(&client, &mut on_us, &mut seq)
+    });
+
+    // The read side while traces keep arriving: index render, then one
+    // fetch by id (what a debugging session actually does).
+    b.run("obs/trace-index-get", || client.get("/v1/trace").map(|(s, _)| s).unwrap_or(0));
+    let newest_id = client
+        .get("/v1/trace")
+        .ok()
+        .and_then(|(_, body)| mpcnn::util::json::parse(&body).ok())
+        .and_then(|j| {
+            j.get("recent")
+                .and_then(|v| v.as_arr())
+                .and_then(|a| a.first())
+                .and_then(|r| r.get("id"))
+                .and_then(|v| v.as_u64())
+        });
+    let trace_fetch_ok = match newest_id {
+        Some(id) => client
+            .get(&format!("/v1/trace/{id}"))
+            .map(|(status, _)| status == 200)
+            .unwrap_or(false),
+        None => false,
+    };
+    on_edge.shutdown();
+    let server = Arc::try_unwrap(server).expect("edge released the gateway");
+    server.shutdown();
+
+    // --- isolation: raw span recording and recorder insertion ---
+    b.run("obs/span-record-9spans-finish", || {
+        let t = TraceHandle::start();
+        let now = Instant::now();
+        for name in [
+            "edge.parse",
+            "admission",
+            "route.decide",
+            "cache.lookup",
+            "queue.wait",
+            "batch.assemble",
+            "infer",
+            "infer.wait",
+            "respond",
+        ] {
+            t.add_span(name, now, now, vec![("variant", "w4".to_string())]);
+        }
+        t.finish(Instant::now()).map(|d| d.spans.len()).unwrap_or(0)
+    });
+    let recorder = FlightRecorder::new(RecorderConfig::default());
+    let mut id = 0u64;
+    b.run("obs/recorder-record", || {
+        id += 1;
+        recorder.record(CompletedTrace {
+            id,
+            started_unix_us: 0,
+            total_us: 1_000.0,
+            spans: vec![Span {
+                name: "infer",
+                start_us: 0.0,
+                dur_us: 1_000.0,
+                tags: vec![],
+            }],
+        });
+        id
+    });
+
+    let off_p50 = percentile(&off_us, 0.50);
+    let on_p50 = percentile(&on_us, 0.50);
+    let off_p99 = percentile(&off_us, 0.99);
+    let on_p99 = percentile(&on_us, 0.99);
+    let overhead_p50 = if off_p50 > 0.0 { on_p50 / off_p50 - 1.0 } else { 0.0 };
+    let overhead_p99 = if off_p99 > 0.0 { on_p99 / off_p99 - 1.0 } else { 0.0 };
+    println!("\n== obs summary ==");
+    for (label, us) in [("untraced", &off_us), ("traced  ", &on_us)] {
+        println!(
+            "  {label}: {} reqs  p50 {:.0} us  p99 {:.0} us",
+            us.len(),
+            percentile(us, 0.50),
+            percentile(us, 0.99),
+        );
+    }
+    println!(
+        "  tracing overhead: {:+.1}% p50, {:+.1}% p99 (documented bound {:.0}% p50); \
+         fetch-by-id {}",
+        100.0 * overhead_p50,
+        100.0 * overhead_p99,
+        100.0 * OVERHEAD_BOUND_P50,
+        if trace_fetch_ok { "ok" } else { "FAILED" },
+    );
+    if overhead_p50 > OVERHEAD_BOUND_P50 {
+        println!("  WARNING: tracing overhead exceeds the documented p50 bound");
+    }
+    for r in &b.results {
+        println!("  {}", r.summary());
+    }
+    if std::env::var("MPCNN_BENCH_JSON").ok().as_deref() == Some("0") {
+        return;
+    }
+    let doc = Json::obj(vec![
+        (
+            "results",
+            b.to_json().get("results").cloned().unwrap_or(Json::Arr(Vec::new())),
+        ),
+        (
+            "obs",
+            Json::obj(vec![
+                ("image_len", Json::num(IMAGE_LEN as f64)),
+                ("wave", Json::num(WAVE as f64)),
+                ("backend_latency_us", Json::num(LATENCY_US as f64)),
+                ("untraced", mode_json(&off_us)),
+                ("traced", mode_json(&on_us)),
+                ("overhead_p50", Json::num(overhead_p50)),
+                ("overhead_p99", Json::num(overhead_p99)),
+                ("overhead_bound_p50", Json::num(OVERHEAD_BOUND_P50)),
+                ("within_bound", Json::Bool(overhead_p50 <= OVERHEAD_BOUND_P50)),
+                ("trace_fetch_ok", Json::Bool(trace_fetch_ok)),
+            ]),
+        ),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_obs.json");
+    match std::fs::write(&path, doc.to_string_pretty()) {
+        Ok(()) => println!("  (wrote {})", path.display()),
+        Err(e) => eprintln!("  (could not write {}: {e})", path.display()),
+    }
+}

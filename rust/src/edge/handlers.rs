@@ -10,9 +10,10 @@
 use super::coalescing::Join;
 use super::http::{HttpRequest, HttpResponse};
 use super::{cache, metrics, Answer, EdgeState};
+use crate::obs::{chrome_export, TraceHandle};
 use crate::serving::{BackendHealth, InferRequest, RouteError, VariantSelector};
 use crate::util::json::Json;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Fallback bound on a coalescing follower's wait when the request
 /// carries no deadline; generous because the leader's own inference is
@@ -32,9 +33,11 @@ pub fn handle(state: &EdgeState, req: &HttpRequest, peer: &str) -> HttpResponse 
             "text/plain; version=0.0.4; charset=utf-8",
             metrics::prometheus(state).into_bytes(),
         ),
-        ("GET", "/v1/classify") | ("POST", "/healthz") | ("POST", "/metrics") => {
-            HttpResponse::text(405, "method not allowed\n")
-        }
+        ("GET", "/v1/trace") => trace_index(state),
+        ("GET", "/v1/trace/export") => trace_export(state),
+        ("GET", p) if p.starts_with("/v1/trace/") => trace_get(state, &p["/v1/trace/".len()..]),
+        ("GET", "/v1/classify") | ("POST", "/healthz") | ("POST", "/metrics")
+        | ("POST", "/v1/trace") => HttpResponse::text(405, "method not allowed\n"),
         (m, p) => HttpResponse::text(404, format!("no route for {m} {p}\n")),
     }
 }
@@ -143,6 +146,42 @@ fn error_response(e: &str) -> HttpResponse {
     }
 }
 
+fn trace_unavailable() -> HttpResponse {
+    HttpResponse::text(404, "tracing is off (start the edge with --trace)\n")
+}
+
+/// `GET /v1/trace`: recent trace ids with headline latency.
+fn trace_index(state: &EdgeState) -> HttpResponse {
+    match &state.recorder {
+        Some(r) => HttpResponse::json(200, &r.index_json()),
+        None => trace_unavailable(),
+    }
+}
+
+/// `GET /v1/trace/export`: every retained trace as one Chrome trace-event
+/// JSON document (load in `chrome://tracing` or Perfetto).
+fn trace_export(state: &EdgeState) -> HttpResponse {
+    match &state.recorder {
+        Some(r) => HttpResponse::json(200, &chrome_export(&r.recent())),
+        None => trace_unavailable(),
+    }
+}
+
+/// `GET /v1/trace/<id>`: one trace's spans. Fetching a pinned slow
+/// exemplar unpins it.
+fn trace_get(state: &EdgeState, id: &str) -> HttpResponse {
+    let Some(r) = &state.recorder else {
+        return trace_unavailable();
+    };
+    let Ok(id) = id.parse::<u64>() else {
+        return HttpResponse::text(400, "trace id must be an integer\n");
+    };
+    match r.get(id) {
+        Some(t) => HttpResponse::json(200, &t.to_json()),
+        None => HttpResponse::text(404, format!("no trace {id} (ring may have lapped it)\n")),
+    }
+}
+
 fn answer_response(a: &Answer, cached: bool, coalesced: bool) -> HttpResponse {
     let body = Json::obj(vec![
         ("class", Json::num(a.class as f64)),
@@ -157,8 +196,35 @@ fn answer_response(a: &Answer, cached: bool, coalesced: bool) -> HttpResponse {
     HttpResponse::json(200, &body)
 }
 
+/// Classify entry point: allocates a trace when the flight recorder is on,
+/// runs the pipeline, then seals and records the trace on *every* exit
+/// path (refusals included) and stamps the response with `X-Trace-Id`.
 fn classify(state: &EdgeState, req: &HttpRequest, peer: &str) -> HttpResponse {
+    let trace = if state.recorder.is_some() {
+        TraceHandle::start()
+    } else {
+        TraceHandle::off()
+    };
+    let resp = classify_traced(state, req, peer, &trace);
+    match (&state.recorder, trace.id()) {
+        (Some(rec), Some(id)) => {
+            if let Some(done) = trace.finish(Instant::now()) {
+                rec.record(done);
+            }
+            resp.with_header("X-Trace-Id", id.to_string())
+        }
+        _ => resp,
+    }
+}
+
+fn classify_traced(
+    state: &EdgeState,
+    req: &HttpRequest,
+    peer: &str,
+    trace: &TraceHandle,
+) -> HttpResponse {
     state.metrics.note_classify();
+    let t_parse = Instant::now();
     let body = match parse_body(&req.body) {
         Ok(b) => b,
         Err(e) => {
@@ -166,6 +232,12 @@ fn classify(state: &EdgeState, req: &HttpRequest, peer: &str) -> HttpResponse {
             return HttpResponse::text(400, format!("{e}\n"));
         }
     };
+    trace.add_span(
+        "edge.parse",
+        t_parse,
+        Instant::now(),
+        vec![("bytes", req.body.len().to_string())],
+    );
     if state.draining() {
         return HttpResponse::text(503, "draining\n").retry_after_secs(1);
     }
@@ -177,8 +249,15 @@ fn classify(state: &EdgeState, req: &HttpRequest, peer: &str) -> HttpResponse {
         .clone()
         .or_else(|| req.header("x-client-id").map(str::to_string))
         .unwrap_or_else(|| peer.to_string());
+    let t_adm = Instant::now();
     if let Err(retry_after) = state.limiter.acquire(&client) {
         state.metrics.note_rate_limited();
+        trace.add_span(
+            "admission",
+            t_adm,
+            Instant::now(),
+            vec![("outcome", "rate_limited".to_string())],
+        );
         let secs = retry_after.as_secs_f64().ceil().max(1.0) as u64;
         return HttpResponse::text(429, "rate limited\n").retry_after_secs(secs);
     }
@@ -187,11 +266,24 @@ fn classify(state: &EdgeState, req: &HttpRequest, peer: &str) -> HttpResponse {
     // whole inference (coalesced waits included).
     let Some(_permit) = state.gate.try_enter() else {
         state.metrics.note_admission_shed();
+        trace.add_span(
+            "admission",
+            t_adm,
+            Instant::now(),
+            vec![("outcome", "shed".to_string())],
+        );
         return HttpResponse::text(503, "server at capacity\n").retry_after_secs(1);
     };
+    trace.add_span(
+        "admission",
+        t_adm,
+        Instant::now(),
+        vec![("outcome", "admitted".to_string())],
+    );
 
     // Resolve the route once so the cache/coalescing key names the
     // concrete variant this request would land on.
+    let t_route = Instant::now();
     let variant = match state.server.route(&body.selector) {
         Ok(v) => v,
         Err(RouteError::NoSuchVariant(what)) => {
@@ -199,9 +291,26 @@ fn classify(state: &EdgeState, req: &HttpRequest, peer: &str) -> HttpResponse {
         }
         Err(e) => return HttpResponse::text(503, format!("unroutable: {e}\n")).retry_after_secs(1),
     };
+    trace.add_span(
+        "route.decide",
+        t_route,
+        Instant::now(),
+        vec![("variant", variant.clone())],
+    );
+    let t_cache = Instant::now();
     let key = cache::cache_key(&variant, &body.image);
-    if let Some(hit) = state.cache.get(&key) {
-        return answer_response(&hit, true, false);
+    let hit = state.cache.get(&key);
+    trace.add_span(
+        "cache.lookup",
+        t_cache,
+        Instant::now(),
+        vec![("hit", hit.is_some().to_string())],
+    );
+    if let Some(hit) = hit {
+        let t_resp = Instant::now();
+        let resp = answer_response(&hit, true, false);
+        trace.add_span("respond", t_resp, Instant::now(), vec![]);
+        return resp;
     }
 
     match state.coalescer.join(key) {
@@ -210,22 +319,45 @@ fn classify(state: &EdgeState, req: &HttpRequest, peer: &str) -> HttpResponse {
                 .deadline
                 .map(|d| d + FOLLOWER_WAIT_MARGIN)
                 .unwrap_or(FOLLOWER_WAIT_DEFAULT);
-            match rx.recv_timeout(wait) {
+            let t_wait = Instant::now();
+            let out = rx.recv_timeout(wait);
+            trace.add_span(
+                "coalesce.follower",
+                t_wait,
+                Instant::now(),
+                vec![("ok", matches!(out, Ok(Ok(_))).to_string())],
+            );
+            let t_resp = Instant::now();
+            let resp = match out {
                 Ok(Ok(a)) => answer_response(&a, false, true),
                 Ok(Err(e)) => error_response(&e),
                 Err(_) => HttpResponse::text(504, "coalesced wait timed out\n"),
-            }
+            };
+            trace.add_span("respond", t_resp, Instant::now(), vec![]);
+            resp
         }
         Join::Leader(guard) => {
-            let mut infer = InferRequest::new(body.image.clone()).with_variant(body.selector);
+            trace.add_event("coalesce.leader", Instant::now(), vec![]);
+            let mut infer = InferRequest::new(body.image.clone())
+                .with_variant(body.selector)
+                .with_trace(trace.clone());
             if let Some(d) = body.deadline {
                 infer = infer.with_deadline(d);
             }
+            // The client-observed gateway time; the worker's own
+            // queue.wait / batch.assemble / infer spans nest inside it.
+            let t_infer = Instant::now();
             let outcome = state.server.infer(infer).map(|resp| Answer {
                 class: resp.class,
                 variant: resp.variant,
                 logits: resp.logits,
             });
+            trace.add_span(
+                "infer.wait",
+                t_infer,
+                Instant::now(),
+                vec![("ok", outcome.is_ok().to_string())],
+            );
             if let Ok(a) = &outcome {
                 // Cache only reference-agreeing successes; a corrupt
                 // response must never become a sticky wrong answer. Keyed
@@ -241,10 +373,13 @@ fn classify(state: &EdgeState, req: &HttpRequest, peer: &str) -> HttpResponse {
                 }
             }
             guard.complete(&outcome);
-            match outcome {
+            let t_resp = Instant::now();
+            let resp = match outcome {
                 Ok(a) => answer_response(&a, false, false),
                 Err(e) => error_response(&e),
-            }
+            };
+            trace.add_span("respond", t_resp, Instant::now(), vec![]);
+            resp
         }
     }
 }

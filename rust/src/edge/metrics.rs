@@ -85,6 +85,12 @@ impl EdgeMetrics {
         self.bad_requests.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Copy of the request-latency histogram for the Prometheus
+    /// `_bucket`/`_sum`/`_count` exposition.
+    pub fn latency_histogram(&self) -> LatencyHistogram {
+        self.latency.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
     /// Flatten every edge counter (cache and coalescing ledgers included)
     /// into a plain-number snapshot.
     pub fn snapshot(&self, cache: &ResponseCache, coalescer: &Coalescer) -> EdgeSnapshot {
@@ -151,6 +157,31 @@ fn family_header(out: &mut String, name: &str, kind: &str, help: &str) {
 
 fn labeled(out: &mut String, name: &str, variant: &str, value: f64) {
     out.push_str(&format!("{name}{{variant=\"{variant}\"}} {value}\n"));
+}
+
+/// Append one histogram's cumulative `_bucket` / `_sum` / `_count` series.
+/// `label` is an optional `variant="x"` selector shared by every line.
+/// Buckets are the log2 [`LatencyHistogram`] buckets: `le="2^(i+1)"` counts
+/// samples below that bound, and `+Inf` equals `_count` (samples past the
+/// last bucket clamp into it).
+fn histogram_series(out: &mut String, name: &str, label: Option<&str>, h: &LatencyHistogram) {
+    let with_le = |le: &str| match label {
+        Some(l) => format!("{{{l},le=\"{le}\"}}"),
+        None => format!("{{le=\"{le}\"}}"),
+    };
+    let plain = match label {
+        Some(l) => format!("{{{l}}}"),
+        None => String::new(),
+    };
+    let mut cum = 0u64;
+    for (i, &c) in h.buckets().iter().enumerate() {
+        cum += c;
+        let le = LatencyHistogram::bound(i);
+        out.push_str(&format!("{name}_bucket{} {cum}\n", with_le(&le.to_string())));
+    }
+    out.push_str(&format!("{name}_bucket{} {}\n", with_le("+Inf"), h.count()));
+    out.push_str(&format!("{name}_sum{plain} {}\n", h.sum_us()));
+    out.push_str(&format!("{name}_count{plain} {}\n", h.count()));
 }
 
 fn health_code(h: BackendHealth) -> f64 {
@@ -299,6 +330,20 @@ pub fn prometheus(state: &EdgeState) -> String {
         metric(&mut out, name, kind, help, value);
     }
 
+    // Full latency distribution, not just the p50/p99 gauges above.
+    family_header(
+        &mut out,
+        "mpcnn_edge_latency_us",
+        "histogram",
+        "edge-observed request latency (us)",
+    );
+    histogram_series(
+        &mut out,
+        "mpcnn_edge_latency_us",
+        None,
+        &state.metrics.latency_histogram(),
+    );
+
     // Per-variant gateway signals: live router view (EWMA latency,
     // inflight, health) plus the cumulative MetricsSummary counters.
     let statuses = state.server.statuses();
@@ -332,56 +377,15 @@ pub fn prometheus(state: &EdgeState) -> String {
         }
     }
 
-    let summaries: Vec<(String, crate::serving::MetricsSummary)> = state
-        .server
-        .metrics_all()
-        .into_iter()
-        .map(|(name, m)| (name, m.summarize()))
+    // Cumulative per-variant counters: rendered straight from the shared
+    // SUMMARY_FIELDS table, so the exposition and the CLI report cannot
+    // drift apart (the exposition tests assert against the same table).
+    let variant_metrics = state.server.metrics_all();
+    let summaries: Vec<(String, crate::serving::MetricsSummary)> = variant_metrics
+        .iter()
+        .map(|(name, m)| (name.clone(), m.summarize()))
         .collect();
-    type SummaryProj = fn(&crate::serving::MetricsSummary) -> f64;
-    let counter_families: [(&str, &str, SummaryProj); 8] = [
-        (
-            "mpcnn_variant_requests_total",
-            "requests submitted to the variant",
-            |s| s.requests as f64,
-        ),
-        (
-            "mpcnn_variant_responses_total",
-            "successful responses",
-            |s| s.responses as f64,
-        ),
-        (
-            "mpcnn_variant_errors_total",
-            "backend errors surfaced to clients",
-            |s| s.errors as f64,
-        ),
-        (
-            "mpcnn_variant_shed_admission_total",
-            "requests shed at admission (queue-wait EWMA past deadline)",
-            |s| s.shed_admission as f64,
-        ),
-        (
-            "mpcnn_variant_shed_expired_total",
-            "requests shed at dequeue (deadline already expired)",
-            |s| s.shed_expired as f64,
-        ),
-        (
-            "mpcnn_variant_panics_total",
-            "backend panics caught and converted to errors",
-            |s| s.panics as f64,
-        ),
-        (
-            "mpcnn_variant_worker_restarts_total",
-            "supervisor-driven backend rebuilds",
-            |s| s.worker_restarts as f64,
-        ),
-        (
-            "mpcnn_variant_throughput_rps",
-            "achieved responses/s over the server's lifetime",
-            |s| s.throughput_rps,
-        ),
-    ];
-    for (name, help, project) in counter_families {
+    for (name, help, project) in crate::serving::SUMMARY_FIELDS {
         let kind = if name.ends_with("_total") {
             "counter"
         } else {
@@ -390,6 +394,35 @@ pub fn prometheus(state: &EdgeState) -> String {
         family_header(&mut out, name, kind, help);
         for (variant, s) in &summaries {
             labeled(&mut out, name, variant, project(s));
+        }
+    }
+
+    // Per-variant distributions: latency, queue wait, and batch size (same
+    // log2 histogram type; the batch-size "le" bounds are item counts, not
+    // microseconds).
+    type HistProj = fn(&crate::serving::Metrics) -> &LatencyHistogram;
+    let hist_families: [(&str, &str, HistProj); 3] = [
+        (
+            "mpcnn_variant_latency_us",
+            "end-to-end request latency (us)",
+            |m| &m.latency,
+        ),
+        (
+            "mpcnn_variant_queue_wait_us",
+            "time queued before batch assembly (us)",
+            |m| &m.queue_wait,
+        ),
+        (
+            "mpcnn_variant_batch_size",
+            "executed batch sizes (items per batch, before padding)",
+            |m| &m.batch_sizes,
+        ),
+    ];
+    for (name, help, project) in hist_families {
+        family_header(&mut out, name, "histogram", help);
+        for (variant, m) in &variant_metrics {
+            let label = format!("variant=\"{variant}\"");
+            histogram_series(&mut out, name, Some(&label), project(m));
         }
     }
 
@@ -441,6 +474,35 @@ pub fn prometheus(state: &EdgeState) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn histogram_series_is_cumulative_and_coherent() {
+        let mut h = LatencyHistogram::default();
+        for us in [1.0, 3.0, 3.0, 100.0, 1e12] {
+            h.record_us(us);
+        }
+        let mut out = String::new();
+        histogram_series(&mut out, "x_us", Some("variant=\"w4\""), &h);
+        let bucket = |le: &str| -> u64 {
+            out.lines()
+                .find(|l| l.starts_with(&format!("x_us_bucket{{variant=\"w4\",le=\"{le}\"}}")))
+                .and_then(|l| l.rsplit(' ').next())
+                .unwrap()
+                .parse()
+                .unwrap()
+        };
+        assert_eq!(bucket("2"), 1, "1us lands in [1,2)");
+        assert_eq!(bucket("4"), 3, "3us samples land in [2,4)");
+        assert_eq!(bucket("128"), 4, "100us lands in [64,128)");
+        assert_eq!(bucket("+Inf"), 5, "overflow sample only reaches +Inf via clamp");
+        assert!(out.contains("x_us_count{variant=\"w4\"} 5"), "{out}");
+        let mut prev = 0u64;
+        for l in out.lines().filter(|l| l.contains("_bucket")) {
+            let v: u64 = l.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= prev, "buckets must be cumulative: {l}");
+            prev = v;
+        }
+    }
 
     #[test]
     fn observe_classifies_status_bands() {

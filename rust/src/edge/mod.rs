@@ -5,7 +5,9 @@
 //! bounded variant queues:
 //!
 //! - **Routes** — `POST /v1/classify` (image + route selector + deadline),
-//!   `GET /healthz`, `GET /metrics` (Prometheus text format).
+//!   `GET /healthz`, `GET /metrics` (Prometheus text format), and with
+//!   `--trace`: `GET /v1/trace` (recent trace index), `GET /v1/trace/<id>`
+//!   (one trace's spans), `GET /v1/trace/export` (Chrome trace-event JSON).
 //! - **Admission** — a per-client token bucket ([`RateLimiter`], 429) and
 //!   a global inflight ceiling ([`AdmissionGate`], 503), both answering
 //!   with `Retry-After` *before* a request can bloat the variant queues.
@@ -37,6 +39,7 @@ pub use http::{HttpRequest, HttpResponse};
 pub use limits::{AdmissionGate, RateLimiter};
 pub use metrics::{EdgeMetrics, EdgeSnapshot};
 
+use crate::obs::{FlightRecorder, RecorderConfig};
 use crate::serving::Server;
 use crate::util::error::Result;
 use std::io::BufReader;
@@ -83,6 +86,15 @@ pub struct EdgeConfig {
     pub max_body_bytes: usize,
     /// Socket read/write timeout.
     pub io_timeout: Duration,
+    /// Enable end-to-end request tracing: every classify request gets a
+    /// [`crate::obs::TraceHandle`] and lands in the flight recorder,
+    /// served at `GET /v1/trace`.
+    pub trace: bool,
+    /// Flight-recorder ring capacity (recent completed traces).
+    pub trace_capacity: usize,
+    /// Traces at or above this end-to-end latency are pinned as slow
+    /// exemplars until fetched by id.
+    pub slow_trace_us: f64,
 }
 
 impl Default for EdgeConfig {
@@ -96,6 +108,9 @@ impl Default for EdgeConfig {
             cache_capacity: 1024,
             max_body_bytes: 16 << 20,
             io_timeout: Duration::from_secs(30),
+            trace: false,
+            trace_capacity: 256,
+            slow_trace_us: 50_000.0,
         }
     }
 }
@@ -110,6 +125,9 @@ pub struct EdgeState {
     pub cache: ResponseCache,
     pub metrics: EdgeMetrics,
     pub check: Option<ResponseCheck>,
+    /// Flight recorder behind `/v1/trace`; `None` when tracing is off
+    /// (requests then carry an inert [`crate::obs::TraceHandle`]).
+    pub recorder: Option<Arc<FlightRecorder>>,
     draining: AtomicBool,
 }
 
@@ -121,6 +139,13 @@ impl EdgeState {
             coalescer: Coalescer::new(),
             cache: ResponseCache::new(cfg.cache_capacity),
             metrics: EdgeMetrics::new(),
+            recorder: cfg.trace.then(|| {
+                Arc::new(FlightRecorder::new(RecorderConfig {
+                    capacity: cfg.trace_capacity,
+                    slow_threshold_us: cfg.slow_trace_us,
+                    ..RecorderConfig::default()
+                }))
+            }),
             server,
             cfg,
             check,

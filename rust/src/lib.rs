@@ -37,6 +37,7 @@ pub mod dataflow;
 pub mod dse;
 pub mod edge;
 pub mod energy;
+pub mod obs;
 pub mod pe;
 pub mod planner;
 pub mod quant;

@@ -83,18 +83,41 @@ SUBCOMMANDS
              identical-request coalescing, and a sha256
              content-addressed response cache (--cache ENTRIES);
              --for SECS drains gracefully after SECS (default: serve
-             until killed)
+             until killed);
+             --trace arms the flight recorder: every classify carries an
+             end-to-end trace (spans from edge parse through batcher
+             infer; id returned in the X-Trace-Id response header),
+             browsable at GET /v1/trace (recent ids + slow exemplars),
+             GET /v1/trace/<id> (span JSON), GET /v1/trace/export
+             (Chrome trace-event JSON, Perfetto-loadable);
+             --trace-capacity N sizes the ring (default 256),
+             --slow-trace-us US pins slower-than-US traces until read
   classify   [--wq 4] [--aq 8] [--index 0] [--route exact:4] [--variants 4]
-             [--backend auto|pjrt|xmp|mock]
+             [--backend auto|pjrt|xmp|mock] [--trace]
              classify one testset image through the gateway; with
              `--backend xmp` the class is computed by the 2D-sliced
              kernels on synthetic weights (no artifacts needed), at the
-             requested (wq, aq) precision pair;
+             requested (wq, aq) precision pair; --trace prints the
+             request's span timing table (same taxonomy as the edge's
+             flight recorder);
              --remote http://ADDR classifies over HTTP against a
              `serve --listen` edge instead of booting a local gateway
              (--image-len N synthesizes the request image, --deadline MS
              attaches a deadline, --client ID names the rate-limit
              bucket, --retry N retries connection errors with backoff)
+  trace      --remote http://ADDR [--id N] [--out FILE]
+             inspect a `serve --listen --trace` edge's flight recorder:
+             list recent trace ids (default), print one trace's spans
+             (--id N), or export every retained trace as Chrome
+             trace-event JSON (--out trace.json; load in Perfetto or
+             chrome://tracing)
+  profile    [--cnn resnet18] [--wq 4] [--aq 8] [--k 2] [--json]
+             run one image through the xmp sliced-digit kernels with
+             per-layer stage timing (im2col/pack/gemm/requant) and join
+             the accelerator simulator's modeled cycles for the same
+             layers — measured-host vs virtual-FPGA attribution in one
+             table (resnet8 is the quick topology; resnet18 runs the
+             full ImageNet stem and takes a while on scalar kernels)
   info       print workload statistics for the built-in CNNs
 ";
 
@@ -158,6 +181,8 @@ fn run(args: &Args) -> Result<()> {
         "pe" => cmd_pe(args),
         "serve" => cmd_serve(args),
         "classify" => cmd_classify(args),
+        "trace" => cmd_trace(args),
+        "profile" => cmd_profile(args),
         "info" => cmd_info(),
         "" | "help" => {
             println!("{USAGE}");
@@ -982,12 +1007,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// uncacheable, and never pinned into the response cache.
 fn serve_listen(args: &Args, gw: Gateway, listen: &str, fault: Option<&FaultArg>) -> Result<()> {
     let run_for = args.get_u64("for", 0);
+    let trace = args.has_flag("trace");
     let cfg = EdgeConfig {
         handler_threads: args.get_usize("threads", 8).max(1),
         max_inflight: args.get_u64("max-inflight", 256),
         rate_per_sec: args.get_f64("rate", 1000.0),
         burst: args.get_f64("burst", 256.0),
         cache_capacity: args.get_usize("cache", 1024),
+        trace,
+        trace_capacity: args.get_usize("trace-capacity", 256),
+        slow_trace_us: args.get_f64("slow-trace-us", 50_000.0),
         ..EdgeConfig::default()
     };
     let Gateway {
@@ -1027,6 +1056,11 @@ fn serve_listen(args: &Args, gw: Gateway, listen: &str, fault: Option<&FaultArg>
     println!("  POST /v1/classify   {{\"image\":[f32; {image_len}], \"route\"?, \"deadline_ms\"?, \"client\"?}}");
     println!("  GET  /healthz       gateway + per-variant health");
     println!("  GET  /metrics       Prometheus text exposition");
+    if trace {
+        println!("  GET  /v1/trace      flight recorder index (recent + slow exemplars)");
+        println!("  GET  /v1/trace/<id> one trace's spans as JSON (X-Trace-Id names it)");
+        println!("  GET  /v1/trace/export  Chrome trace-event JSON (Perfetto-loadable)");
+    }
     match run_for {
         0 => {
             println!("serving until killed (pass --for SECS for a timed run)");
@@ -1152,9 +1186,18 @@ fn cmd_classify(args: &Args) -> Result<()> {
             (vec![class as f32; gw.image_len], class)
         }
     };
+    let trace = if args.has_flag("trace") {
+        mpcnn::obs::TraceHandle::start()
+    } else {
+        mpcnn::obs::TraceHandle::off()
+    };
     let resp = gw
         .server
-        .infer(InferRequest::new(img.clone()).with_variant(sel.clone()))
+        .infer(
+            InferRequest::new(img.clone())
+                .with_variant(sel.clone())
+                .with_trace(trace.clone()),
+        )
         .map_err(|e| anyhow!("{e}"))?;
     println!(
         "image {index}: predicted class {} via variant '{}' (route {sel}, label {label}) \
@@ -1171,6 +1214,168 @@ fn cmd_classify(args: &Args) -> Result<()> {
             bail!("served class {} disagrees with the xmp reference ({want})", resp.class);
         }
         println!("xmp reference check: independent model copy agrees (class {want})");
+    }
+    if let Some(done) = trace.finish(std::time::Instant::now()) {
+        print!("{}", span_table(&done).render());
+    }
+    Ok(())
+}
+
+/// Render a locally completed trace's spans as a console table.
+fn span_table(done: &mpcnn::obs::CompletedTrace) -> mpcnn::util::table::Table {
+    let mut t = mpcnn::util::table::Table::new(format!(
+        "trace {} — {:.0}us end to end, {:.0}% span coverage",
+        done.id,
+        done.total_us,
+        100.0 * done.coverage()
+    ))
+    .headers(&["span", "start us", "dur us", "tags"]);
+    for s in &done.spans {
+        let tags: Vec<String> = s.tags.iter().map(|(k, v)| format!("{k}={v}")).collect();
+        t.row(vec![
+            s.name.to_string(),
+            format!("{:.0}", s.start_us),
+            format!("{:.0}", s.dur_us),
+            tags.join(" "),
+        ]);
+    }
+    t
+}
+
+/// `trace --remote http://ADDR`: inspect a running `serve --listen --trace`
+/// edge's flight recorder over HTTP.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let Some(remote) = args.get("remote") else {
+        bail!("trace needs --remote http://ADDR (a `serve --listen --trace` edge)");
+    };
+    let retry = RetryPolicy::attempts(args.get_u64("retry", 3).min(16) as u32);
+    let client = RemoteClient::new(&remote, retry);
+
+    if let Some(out) = args.get("out") {
+        let (status, body) = client.get("/v1/trace/export")?;
+        if status != 200 {
+            bail!("GET /v1/trace/export -> {status}: {}", body.trim());
+        }
+        let events = mpcnn::util::json::parse(&body)
+            .ok()
+            .and_then(|j| j.get("traceEvents").and_then(|v| v.as_arr()).map(<[_]>::len))
+            .unwrap_or(0);
+        std::fs::write(&out, &body)?;
+        println!(
+            "wrote {out}: {events} trace events from {} (load in Perfetto or chrome://tracing)",
+            client.addr()
+        );
+        return Ok(());
+    }
+
+    if let Some(id) = args.get("id") {
+        let (status, body) = client.get(&format!("/v1/trace/{id}"))?;
+        if status != 200 {
+            bail!("GET /v1/trace/{id} -> {status}: {}", body.trim());
+        }
+        let j = mpcnn::util::json::parse(&body).map_err(|e| anyhow!("bad trace JSON: {e}"))?;
+        let total = j.get("total_us").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        let coverage = j.get("coverage").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        let mut t = mpcnn::util::table::Table::new(format!(
+            "trace {id} — {total:.0}us end to end, {:.0}% span coverage",
+            100.0 * coverage
+        ))
+        .headers(&["span", "start us", "dur us", "tags"]);
+        for s in j.get("spans").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+            let tags = match s.get("tags") {
+                Some(mpcnn::util::json::Json::Obj(m)) => m
+                    .iter()
+                    .map(|(k, v)| format!("{k}={}", v.as_str().unwrap_or("?")))
+                    .collect::<Vec<String>>()
+                    .join(" "),
+                _ => String::new(),
+            };
+            t.row(vec![
+                s.get("name").and_then(|v| v.as_str()).unwrap_or("?").to_string(),
+                format!("{:.0}", s.get("start_us").and_then(|v| v.as_f64()).unwrap_or(0.0)),
+                format!("{:.0}", s.get("dur_us").and_then(|v| v.as_f64()).unwrap_or(0.0)),
+                tags,
+            ]);
+        }
+        print!("{}", t.render());
+        return Ok(());
+    }
+
+    let (status, body) = client.get("/v1/trace")?;
+    if status != 200 {
+        bail!("GET /v1/trace -> {status}: {}", body.trim());
+    }
+    let j = mpcnn::util::json::parse(&body).map_err(|e| anyhow!("bad trace index: {e}"))?;
+    let recorded = j.get("recorded").and_then(|v| v.as_u64()).unwrap_or(0);
+    let pinned = j.get("slow_pinned").and_then(|v| v.as_u64()).unwrap_or(0);
+    println!(
+        "flight recorder at {}: {recorded} traces recorded, {pinned} slow exemplars pinned",
+        client.addr()
+    );
+    let mut t = mpcnn::util::table::Table::new("recent traces (newest first)").headers(&[
+        "id", "total us", "spans", "slow",
+    ]);
+    for r in j.get("recent").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+        t.row(vec![
+            r.get("id").and_then(|v| v.as_u64()).unwrap_or(0).to_string(),
+            format!("{:.0}", r.get("total_us").and_then(|v| v.as_f64()).unwrap_or(0.0)),
+            r.get("spans").and_then(|v| v.as_u64()).unwrap_or(0).to_string(),
+            if r.get("slow").and_then(|v| v.as_bool()).unwrap_or(false) {
+                "yes".to_string()
+            } else {
+                String::new()
+            },
+        ]);
+    }
+    print!("{}", t.render());
+    println!("fetch one with `mpcnn trace --remote http://{} --id N`", client.addr());
+    Ok(())
+}
+
+/// `profile`: measured-host vs virtual-FPGA per-layer attribution. One
+/// image runs through the xmp kernels with the stage-timing sink on, then
+/// the accelerator simulator models the same planned network so every conv
+/// layer shows both its measured host microseconds and its modeled cycles.
+fn cmd_profile(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let name = args.get_or("cnn", "resnet18");
+    let base = resnet::by_name(&name).ok_or_else(|| anyhow!("unknown CNN '{name}'"))?;
+    let wq = args.get_u64("wq", 4) as u32;
+    let aq = args.get_u64("aq", 8) as u32;
+    let k = args.get_u64("k", 2) as u32;
+    let spec = VariantSpec::uniform_joint(wq, aq);
+    let backend = XmpBackend::from_spec(&base, &spec, XmpConfig::default())?;
+    let image_len = (base.input_hw * base.input_hw * base.input_channels) as usize;
+    let (_logits, mut prof) = backend.profile_forward(&vec![0.5f32; image_len])?;
+
+    // Modeled side: the DSE's chosen array for this slice width, simulated
+    // on the same uniformly planned network (first/last layers pin to 8
+    // bits in both the xmp spec and the plan, so layer wq tags line up).
+    let planned = base.with_uniform_wq(wq);
+    let out = dse::explore_k(&planned, &cfg, k);
+    let design = sim::AcceleratorDesign::new(
+        mpcnn::pe::PeDesign::bp_st_1d(k),
+        out.array.dims,
+        &planned,
+        &cfg,
+    );
+    let matched = prof.attach_sim(&sim::simulate(&planned, &design));
+
+    if args.has_flag("json") {
+        println!("{}", prof.to_json().to_string_pretty());
+    } else {
+        print!("{}", prof.table().render());
+        println!(
+            "\n{matched}/{} layers matched a modeled schedule; host total {:.0}us vs \
+             modeled FPGA total {:.0}us (BP-ST-1D k={k} @ {})",
+            prof.layers.len(),
+            prof.total_host_us(),
+            prof.total_fpga_us(),
+            out.array.dims,
+        );
+        if !prof.conv_layers_attributed() {
+            bail!("attribution incomplete: a conv layer is missing host time or modeled cycles");
+        }
     }
     Ok(())
 }

@@ -1,0 +1,313 @@
+//! Observability: end-to-end request tracing, per-layer kernel profiling,
+//! and a flight recorder — dependency-free, std only.
+//!
+//! Three pieces, threaded through every layer of the serving stack:
+//!
+//! - **Request tracing** ([`TraceHandle`]): a u64 trace id allocated at the
+//!   network edge (or by `mpcnn classify`), carried through
+//!   [`InferRequest`](crate::serving::InferRequest) into the batcher worker.
+//!   Each layer appends typed [`Span`]s (`edge.parse`, `admission`,
+//!   `coalesce.leader`/`coalesce.follower`, `cache.lookup`, `route.decide`,
+//!   `queue.wait`, `batch.assemble`, `infer`, `respond`) with start/duration
+//!   and key/value tags (variant, batch size, cache hit, retry attempt).
+//!   A disabled handle is a `None` — no allocation, no lock, no clock reads
+//!   beyond what callers already take.
+//! - **Per-layer kernel profiling** ([`profile`]): an `Option<&mut _>` sink
+//!   through `xmp::XmpModel::forward_profiled` capturing im2col / pack /
+//!   GEMM / requant time per layer, joined with the modeled FPGA cycles of
+//!   [`sim::simulate`](crate::sim::simulate) for the same layers so one
+//!   report shows measured-host vs. virtual-FPGA attribution.
+//! - **Flight recorder** ([`recorder::FlightRecorder`]): a bounded ring of
+//!   the last N completed traces plus slow-trace exemplars pinned until
+//!   read, served as `GET /v1/trace` / `GET /v1/trace/<id>` and exported as
+//!   Chrome trace-event JSON ([`chrome::chrome_export`], Perfetto-loadable).
+
+pub mod chrome;
+pub mod profile;
+pub mod recorder;
+
+pub use chrome::chrome_export;
+pub use profile::{LayerProfile, ModelProfile, StageTimes};
+pub use recorder::{FlightRecorder, RecorderConfig};
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Instant, SystemTime};
+
+/// Process-wide trace id allocator. Ids are small monotone integers — easy
+/// to eyeball in logs, unique within one process lifetime, and stable
+/// enough for the flight recorder's lookup-by-id endpoints.
+static NEXT_TRACE_ID: AtomicU64 = AtomicU64::new(1);
+
+fn next_trace_id() -> u64 {
+    NEXT_TRACE_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Lock that tolerates poison: spans are plain data, and a panicking
+/// instrumented thread must not cascade into readers of its trace.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// One timed operation inside a trace. `start_us` is the offset from the
+/// trace's start; spans from different layers may nest or overlap (the
+/// worker's `infer` span sits inside the edge's wait, for example).
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub name: &'static str,
+    pub start_us: f64,
+    pub dur_us: f64,
+    pub tags: Vec<(&'static str, String)>,
+}
+
+impl Span {
+    pub fn to_json(&self) -> Json {
+        let tags = self
+            .tags
+            .iter()
+            .map(|(k, v)| (*k, Json::str(v.clone())))
+            .collect();
+        Json::obj(vec![
+            ("name", Json::str(self.name)),
+            ("start_us", Json::num(self.start_us)),
+            ("dur_us", Json::num(self.dur_us)),
+            ("tags", Json::obj(tags)),
+        ])
+    }
+}
+
+#[derive(Debug)]
+struct TraceInner {
+    id: u64,
+    started: Instant,
+    /// Wall-clock anchor for Chrome trace-event timestamps.
+    started_unix_us: u64,
+    spans: Mutex<Vec<Span>>,
+}
+
+/// Cheap cloneable tracing handle. `TraceHandle::off()` (also `Default`) is
+/// a no-op sink: every recording method returns immediately, so untraced
+/// requests pay a single pointer-sized `Option` check per instrumentation
+/// point. Clones share the same span list, which is how one trace collects
+/// spans from the edge handler thread and the batcher worker thread.
+#[derive(Clone, Debug, Default)]
+pub struct TraceHandle(Option<Arc<TraceInner>>);
+
+impl TraceHandle {
+    /// The disabled handle — all recording is a no-op.
+    pub fn off() -> TraceHandle {
+        TraceHandle(None)
+    }
+
+    /// Start a new trace: allocates an id and anchors the clock.
+    pub fn start() -> TraceHandle {
+        let started_unix_us = SystemTime::now()
+            .duration_since(SystemTime::UNIX_EPOCH)
+            .map(|d| d.as_micros() as u64)
+            .unwrap_or(0);
+        TraceHandle(Some(Arc::new(TraceInner {
+            id: next_trace_id(),
+            started: Instant::now(),
+            started_unix_us,
+            spans: Mutex::new(Vec::new()),
+        })))
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    pub fn id(&self) -> Option<u64> {
+        self.0.as_ref().map(|i| i.id)
+    }
+
+    /// The instant the trace started (span offsets are relative to it).
+    pub fn started(&self) -> Option<Instant> {
+        self.0.as_ref().map(|i| i.started)
+    }
+
+    /// Record a span covering `[start, end]`. Instants before the trace
+    /// start clamp to offset 0; a reversed pair records duration 0.
+    pub fn add_span(
+        &self,
+        name: &'static str,
+        start: Instant,
+        end: Instant,
+        tags: Vec<(&'static str, String)>,
+    ) {
+        let Some(inner) = &self.0 else { return };
+        let start_us = start.saturating_duration_since(inner.started).as_secs_f64() * 1e6;
+        let dur_us = end.saturating_duration_since(start).as_secs_f64() * 1e6;
+        lock(&inner.spans).push(Span {
+            name,
+            start_us,
+            dur_us,
+            tags,
+        });
+    }
+
+    /// Record a zero-duration marker event (e.g. a retry decision).
+    pub fn add_event(&self, name: &'static str, at: Instant, tags: Vec<(&'static str, String)>) {
+        self.add_span(name, at, at, tags);
+    }
+
+    /// Seal the trace at `end`: returns the completed, sorted span list
+    /// ready for the flight recorder. `None` when tracing is off. The
+    /// handle stays usable (a late worker span after `finish` is simply
+    /// not part of the completed snapshot).
+    pub fn finish(&self, end: Instant) -> Option<CompletedTrace> {
+        let inner = self.0.as_ref()?;
+        let mut spans = lock(&inner.spans).clone();
+        spans.sort_by(|a, b| a.start_us.total_cmp(&b.start_us));
+        Some(CompletedTrace {
+            id: inner.id,
+            started_unix_us: inner.started_unix_us,
+            total_us: end.saturating_duration_since(inner.started).as_secs_f64() * 1e6,
+            spans,
+        })
+    }
+}
+
+/// A finished trace: what the flight recorder stores and the `/v1/trace`
+/// endpoints serve.
+#[derive(Clone, Debug)]
+pub struct CompletedTrace {
+    pub id: u64,
+    pub started_unix_us: u64,
+    pub total_us: f64,
+    /// Sorted by `start_us`.
+    pub spans: Vec<Span>,
+}
+
+impl CompletedTrace {
+    /// Fraction of the end-to-end wall time covered by the union of span
+    /// intervals, in [0, 1]. Overlapping spans (edge wait vs. worker infer)
+    /// count once — this is the "no unattributed gaps" metric.
+    pub fn coverage(&self) -> f64 {
+        if self.total_us <= 0.0 {
+            return 1.0;
+        }
+        let mut covered = 0.0f64;
+        let mut cur_start = f64::NEG_INFINITY;
+        let mut cur_end = f64::NEG_INFINITY;
+        for s in &self.spans {
+            let (a, b) = (s.start_us, s.start_us + s.dur_us);
+            if a > cur_end {
+                covered += (cur_end - cur_start).max(0.0);
+                cur_start = a;
+                cur_end = b;
+            } else if b > cur_end {
+                cur_end = b;
+            }
+        }
+        covered += (cur_end - cur_start).max(0.0);
+        (covered / self.total_us).min(1.0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::num(self.id as f64)),
+            ("started_unix_us", Json::num(self.started_unix_us as f64)),
+            ("total_us", Json::num(self.total_us)),
+            ("coverage", Json::num(self.coverage())),
+            (
+                "spans",
+                Json::Arr(self.spans.iter().map(Span::to_json).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn off_handle_is_inert() {
+        let t = TraceHandle::off();
+        assert!(!t.enabled());
+        assert!(t.id().is_none());
+        t.add_span("infer", Instant::now(), Instant::now(), vec![]);
+        assert!(t.finish(Instant::now()).is_none());
+    }
+
+    #[test]
+    fn spans_collect_and_sort() {
+        let t = TraceHandle::start();
+        assert!(t.enabled());
+        let t0 = t.started().unwrap();
+        t.add_span(
+            "respond",
+            t0 + Duration::from_micros(300),
+            t0 + Duration::from_micros(400),
+            vec![],
+        );
+        t.add_span(
+            "infer",
+            t0 + Duration::from_micros(100),
+            t0 + Duration::from_micros(300),
+            vec![("variant", "w4".to_string()), ("batch", "8".to_string())],
+        );
+        let done = t.finish(t0 + Duration::from_micros(400)).unwrap();
+        assert_eq!(done.spans.len(), 2);
+        assert_eq!(done.spans[0].name, "infer");
+        assert!((done.total_us - 400.0).abs() < 50.0, "{}", done.total_us);
+        assert_eq!(done.spans[0].tags[0], ("variant", "w4".to_string()));
+    }
+
+    #[test]
+    fn trace_ids_are_unique() {
+        let a = TraceHandle::start().id().unwrap();
+        let b = TraceHandle::start().id().unwrap();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn coverage_unions_overlaps() {
+        let mk = |spans: Vec<(f64, f64)>, total: f64| CompletedTrace {
+            id: 1,
+            started_unix_us: 0,
+            total_us: total,
+            spans: spans
+                .into_iter()
+                .map(|(s, d)| Span {
+                    name: "x",
+                    start_us: s,
+                    dur_us: d,
+                    tags: vec![],
+                })
+                .collect(),
+        };
+        // Two abutting spans cover everything.
+        assert!((mk(vec![(0.0, 50.0), (50.0, 50.0)], 100.0).coverage() - 1.0).abs() < 1e-9);
+        // Overlap counts once: [0,80) + [40,100) over 100 = 1.0, not 1.4.
+        assert!((mk(vec![(0.0, 80.0), (40.0, 60.0)], 100.0).coverage() - 1.0).abs() < 1e-9);
+        // A gap shows up: [0,40) + [60,100) over 100 = 0.8.
+        assert!((mk(vec![(0.0, 40.0), (60.0, 40.0)], 100.0).coverage() - 0.8).abs() < 1e-9);
+        // Nested spans don't double-count.
+        assert!((mk(vec![(0.0, 100.0), (20.0, 30.0)], 100.0).coverage() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trace_json_shape() {
+        let t = TraceHandle::start();
+        let t0 = t.started().unwrap();
+        t.add_span(
+            "edge.parse",
+            t0,
+            t0 + Duration::from_micros(10),
+            vec![("hit", "true".into())],
+        );
+        let j = t.finish(t0 + Duration::from_micros(20)).unwrap().to_json();
+        assert!(j.get("id").and_then(|v| v.as_u64()).is_some());
+        let spans = j.get("spans").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].get("name").and_then(|v| v.as_str()), Some("edge.parse"));
+        assert_eq!(
+            spans[0].get("tags").and_then(|t| t.get("hit")).and_then(|v| v.as_str()),
+            Some("true")
+        );
+    }
+}

@@ -1,0 +1,262 @@
+//! Per-layer kernel profiling: measured host time per pipeline stage of the
+//! xmp sliced-digit kernels, joined with the modeled FPGA cycles of the
+//! accelerator simulator for the same layers.
+//!
+//! The xmp forward pass fills a [`ModelProfile`] through an
+//! `Option<&mut _>` sink (zero-cost when `None`); [`ModelProfile::attach_sim`]
+//! then matches [`sim::simulate`](crate::sim::simulate) schedules by layer
+//! name, so one report shows measured-host vs. virtual-FPGA attribution —
+//! the FINN-style benchmarking view the paper's fps claims need.
+
+use crate::sim::SimResult;
+use crate::util::json::Json;
+use crate::util::table::{count, fnum, Table};
+
+/// Host time per kernel pipeline stage of one layer, in microseconds.
+/// Stages mirror the xmp conv kernel: im2col patch extraction, digit-plane
+/// activation packing (fast path only), the sliced GEMM, and requantize.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StageTimes {
+    pub im2col_us: f64,
+    pub pack_us: f64,
+    pub gemm_us: f64,
+    pub requant_us: f64,
+}
+
+impl StageTimes {
+    pub fn total_us(&self) -> f64 {
+        self.im2col_us + self.pack_us + self.gemm_us + self.requant_us
+    }
+}
+
+/// One layer's measured + modeled attribution.
+#[derive(Clone, Debug, Default)]
+pub struct LayerProfile {
+    pub name: String,
+    /// "conv3x3", "conv1x1", "fc", ... (display only).
+    pub kind: String,
+    pub wq: u32,
+    pub aq: u32,
+    /// Measured wall time of the layer on the host, including stage time
+    /// and per-layer glue (pooling, branch merges).
+    pub host_us: f64,
+    pub stages: StageTimes,
+    /// Modeled cycles from the accelerator simulator; 0 until
+    /// [`ModelProfile::attach_sim`] finds the matching schedule.
+    pub fpga_cycles: u64,
+    /// `fpga_cycles / fmhz` — the modeled layer latency in microseconds.
+    pub fpga_us: f64,
+    pub fpga_utilization: f64,
+}
+
+impl LayerProfile {
+    pub fn is_conv(&self) -> bool {
+        self.kind.starts_with("conv")
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("kind", Json::str(self.kind.clone())),
+            ("wq", Json::num(self.wq as f64)),
+            ("aq", Json::num(self.aq as f64)),
+            ("host_us", Json::num(self.host_us)),
+            ("im2col_us", Json::num(self.stages.im2col_us)),
+            ("pack_us", Json::num(self.stages.pack_us)),
+            ("gemm_us", Json::num(self.stages.gemm_us)),
+            ("requant_us", Json::num(self.stages.requant_us)),
+            ("fpga_cycles", Json::num(self.fpga_cycles as f64)),
+            ("fpga_us", Json::num(self.fpga_us)),
+            ("fpga_utilization", Json::num(self.fpga_utilization)),
+        ])
+    }
+}
+
+/// Whole-model measured-vs-modeled attribution report.
+#[derive(Clone, Debug, Default)]
+pub struct ModelProfile {
+    pub model: String,
+    /// Which kernel path ran ("fast", "reference", "plain-i64").
+    pub path: String,
+    pub layers: Vec<LayerProfile>,
+    /// Clock of the attached accelerator design (MHz); 0 until attached.
+    pub fmhz: f64,
+}
+
+impl ModelProfile {
+    pub fn total_host_us(&self) -> f64 {
+        self.layers.iter().map(|l| l.host_us).sum()
+    }
+
+    pub fn total_fpga_us(&self) -> f64 {
+        self.layers.iter().map(|l| l.fpga_us).sum()
+    }
+
+    /// Join the simulator's per-layer schedules by layer name; returns how
+    /// many profiled layers found their modeled counterpart. FC layers have
+    /// no conv schedule and keep `fpga_cycles == 0`.
+    pub fn attach_sim(&mut self, sim: &SimResult) -> usize {
+        self.fmhz = sim.fmhz;
+        let mut matched = 0;
+        for l in &mut self.layers {
+            if let Some(s) = sim.layers.iter().find(|s| s.schedule.name == l.name) {
+                l.fpga_cycles = s.schedule.cycles;
+                l.fpga_us = if sim.fmhz > 0.0 {
+                    s.schedule.cycles as f64 / sim.fmhz
+                } else {
+                    0.0
+                };
+                l.fpga_utilization = s.schedule.utilization;
+                matched += 1;
+            }
+        }
+        matched
+    }
+
+    /// True when every conv layer reports both a measured host time and a
+    /// modeled cycle count — the report is only an attribution if both
+    /// sides are present.
+    pub fn conv_layers_attributed(&self) -> bool {
+        let convs: Vec<&LayerProfile> = self.layers.iter().filter(|l| l.is_conv()).collect();
+        !convs.is_empty() && convs.iter().all(|l| l.host_us > 0.0 && l.fpga_cycles > 0)
+    }
+
+    /// Render the measured-vs-virtual attribution table.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(format!(
+            "per-layer profile — {} ({} kernel path, modeled @ {:.0} MHz)",
+            self.model, self.path, self.fmhz
+        ))
+        .headers(&[
+            "layer", "kind", "wq", "aq", "host us", "im2col", "pack", "gemm", "requant",
+            "fpga cyc", "fpga us",
+        ]);
+        for l in &self.layers {
+            t.row(vec![
+                l.name.clone(),
+                l.kind.clone(),
+                l.wq.to_string(),
+                l.aq.to_string(),
+                fnum(l.host_us, 1),
+                fnum(l.stages.im2col_us, 1),
+                fnum(l.stages.pack_us, 1),
+                fnum(l.stages.gemm_us, 1),
+                fnum(l.stages.requant_us, 1),
+                count(l.fpga_cycles),
+                fnum(l.fpga_us, 1),
+            ]);
+        }
+        t.sep();
+        t.row(vec![
+            "total".to_string(),
+            String::new(),
+            String::new(),
+            String::new(),
+            fnum(self.total_host_us(), 1),
+            String::new(),
+            String::new(),
+            String::new(),
+            String::new(),
+            count(self.layers.iter().map(|l| l.fpga_cycles).sum()),
+            fnum(self.total_fpga_us(), 1),
+        ]);
+        t.note("host us: measured wall time per layer on this machine (scalar xmp kernels)");
+        t.note("fpga cyc/us: modeled Eq-3 dataflow schedule for the same layer (virtual clock)");
+        t
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(self.model.clone())),
+            ("path", Json::str(self.path.clone())),
+            ("fmhz", Json::num(self.fmhz)),
+            ("total_host_us", Json::num(self.total_host_us())),
+            ("total_fpga_us", Json::num(self.total_fpga_us())),
+            (
+                "layers",
+                Json::Arr(self.layers.iter().map(LayerProfile::to_json).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::Dims;
+    use crate::cnn::resnet;
+    use crate::config::RunConfig;
+    use crate::pe::PeDesign;
+    use crate::sim::{simulate, AcceleratorDesign};
+
+    #[test]
+    fn attach_sim_matches_conv_layers_by_name() {
+        let cnn = resnet::resnet18().with_uniform_wq(4);
+        let cfg = RunConfig::default();
+        let design =
+            AcceleratorDesign::new(PeDesign::bp_st_1d(2), Dims::new(7, 5, 37), &cnn, &cfg);
+        let sim = simulate(&cnn, &design);
+        // Profile skeleton named after the same conv layers, as the xmp
+        // forward pass would produce it.
+        let mut prof = ModelProfile {
+            model: "resnet18".to_string(),
+            path: "fast".to_string(),
+            layers: cnn
+                .conv_layers()
+                .map(|l| LayerProfile {
+                    name: l.name.clone(),
+                    kind: "conv3x3".to_string(),
+                    wq: 4,
+                    aq: 8,
+                    host_us: 10.0,
+                    ..Default::default()
+                })
+                .collect(),
+            fmhz: 0.0,
+        };
+        let matched = prof.attach_sim(&sim);
+        assert_eq!(matched, prof.layers.len(), "every conv layer must match");
+        assert!(prof.conv_layers_attributed());
+        assert!(prof.fmhz > 0.0);
+        for l in &prof.layers {
+            assert!(l.fpga_cycles > 0, "{} has no modeled cycles", l.name);
+            let want = l.fpga_cycles as f64 / prof.fmhz;
+            assert!((l.fpga_us - want).abs() < 1e-9);
+        }
+        // Table and JSON render without panicking and carry every layer.
+        assert!(prof.table().n_rows() >= prof.layers.len());
+        let j = prof.to_json();
+        assert_eq!(
+            j.get("layers").and_then(|v| v.as_arr()).unwrap().len(),
+            prof.layers.len()
+        );
+    }
+
+    #[test]
+    fn unattributed_layers_fail_the_check() {
+        let prof = ModelProfile {
+            model: "m".into(),
+            path: "fast".into(),
+            layers: vec![LayerProfile {
+                name: "conv1".into(),
+                kind: "conv3x3".into(),
+                host_us: 5.0,
+                ..Default::default()
+            }],
+            fmhz: 0.0,
+        };
+        assert!(!prof.conv_layers_attributed(), "no modeled cycles yet");
+        assert!(!ModelProfile::default().conv_layers_attributed(), "empty");
+    }
+
+    #[test]
+    fn stage_times_total() {
+        let s = StageTimes {
+            im2col_us: 1.0,
+            pack_us: 2.0,
+            gemm_us: 3.0,
+            requant_us: 4.0,
+        };
+        assert!((s.total_us() - 10.0).abs() < 1e-12);
+    }
+}

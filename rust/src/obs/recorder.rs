@@ -1,0 +1,261 @@
+//! Bounded flight recorder: keeps the last N completed traces in a ring
+//! plus slow-trace exemplars pinned until read.
+//!
+//! The hot path (`record`) is designed to never contend: the ring cursor is
+//! a single `fetch_add`, and each slot has its own lock that only the
+//! claiming writer (and an occasional reader) ever touches — two concurrent
+//! writers hit the same slot lock only after a full lap of the ring.
+//! Readers (`recent`, `get`, `export`) walk the slots without stopping
+//! writers.
+
+use super::CompletedTrace;
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct RecorderConfig {
+    /// Ring capacity: how many recent traces are kept.
+    pub capacity: usize,
+    /// Dedicated slots for slow-trace exemplars.
+    pub slow_slots: usize,
+    /// Traces at or above this end-to-end latency are pinned as slow
+    /// exemplars until fetched via `get`.
+    pub slow_threshold_us: f64,
+}
+
+impl Default for RecorderConfig {
+    fn default() -> Self {
+        RecorderConfig {
+            capacity: 256,
+            slow_slots: 8,
+            slow_threshold_us: 50_000.0,
+        }
+    }
+}
+
+type Slot = Mutex<Option<Arc<CompletedTrace>>>;
+
+/// See the module docs. One recorder serves a whole edge process.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    slots: Vec<Slot>,
+    cursor: AtomicU64,
+    slow: Vec<Slot>,
+    slow_threshold_us: f64,
+    recorded: AtomicU64,
+    slow_pinned_total: AtomicU64,
+    slow_dropped: AtomicU64,
+}
+
+impl FlightRecorder {
+    pub fn new(cfg: RecorderConfig) -> FlightRecorder {
+        let mk = |n: usize| (0..n.max(1)).map(|_| Mutex::new(None)).collect();
+        FlightRecorder {
+            slots: mk(cfg.capacity),
+            cursor: AtomicU64::new(0),
+            slow: mk(cfg.slow_slots),
+            slow_threshold_us: cfg.slow_threshold_us,
+            recorded: AtomicU64::new(0),
+            slow_pinned_total: AtomicU64::new(0),
+            slow_dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// The latency at which a trace counts as a slow exemplar.
+    pub fn slow_threshold_us(&self) -> f64 {
+        self.slow_threshold_us
+    }
+
+    /// Total traces ever recorded (the ring only retains the tail).
+    pub fn recorded(&self) -> u64 {
+        self.recorded.load(Ordering::Relaxed)
+    }
+
+    /// Slow exemplars that found no free pin slot (all still unread).
+    pub fn slow_dropped(&self) -> u64 {
+        self.slow_dropped.load(Ordering::Relaxed)
+    }
+
+    /// Store a completed trace; slow ones are additionally pinned in an
+    /// exemplar slot (first free one) until a reader fetches them by id.
+    pub fn record(&self, trace: CompletedTrace) {
+        let t = Arc::new(trace);
+        if t.total_us >= self.slow_threshold_us {
+            let mut pinned = false;
+            for slot in &self.slow {
+                let mut g = lock(slot);
+                if g.is_none() {
+                    *g = Some(t.clone());
+                    pinned = true;
+                    break;
+                }
+            }
+            if pinned {
+                self.slow_pinned_total.fetch_add(1, Ordering::Relaxed);
+            } else {
+                self.slow_dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let i = self.cursor.fetch_add(1, Ordering::Relaxed) as usize % self.slots.len();
+        *lock(&self.slots[i]) = Some(t);
+        self.recorded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Recent traces, newest first, slow pinned exemplars appended (deduped
+    /// by id).
+    pub fn recent(&self) -> Vec<Arc<CompletedTrace>> {
+        let n = self.slots.len();
+        let cur = self.cursor.load(Ordering::Relaxed) as usize;
+        let mut out: Vec<Arc<CompletedTrace>> = Vec::new();
+        for back in 1..=n.min(cur) {
+            let i = (cur - back) % n;
+            if let Some(t) = lock(&self.slots[i]).clone() {
+                if !out.iter().any(|o| o.id == t.id) {
+                    out.push(t);
+                }
+            }
+        }
+        for slot in &self.slow {
+            if let Some(t) = lock(slot).clone() {
+                if !out.iter().any(|o| o.id == t.id) {
+                    out.push(t);
+                }
+            }
+        }
+        out
+    }
+
+    /// Fetch a trace by id. Reading a pinned slow exemplar unpins it (the
+    /// slot frees up for the next outlier); the trace may still be present
+    /// in the main ring until it laps.
+    pub fn get(&self, id: u64) -> Option<Arc<CompletedTrace>> {
+        for slot in &self.slow {
+            let mut g = lock(slot);
+            if g.as_ref().is_some_and(|t| t.id == id) {
+                return g.take();
+            }
+        }
+        self.slots
+            .iter()
+            .filter_map(|s| lock(s).clone())
+            .find(|t| t.id == id)
+    }
+
+    /// How many slow exemplars are currently pinned (unread).
+    pub fn slow_pinned(&self) -> usize {
+        self.slow.iter().filter(|s| lock(s).is_some()).count()
+    }
+
+    /// JSON index for `GET /v1/trace`: recent ids with headline latency,
+    /// newest first.
+    pub fn index_json(&self) -> Json {
+        let recent = self
+            .recent()
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("id", Json::num(t.id as f64)),
+                    ("total_us", Json::num(t.total_us)),
+                    ("spans", Json::num(t.spans.len() as f64)),
+                    ("slow", Json::Bool(t.total_us >= self.slow_threshold_us)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("recorded", Json::num(self.recorded() as f64)),
+            ("slow_threshold_us", Json::num(self.slow_threshold_us)),
+            ("slow_pinned", Json::num(self.slow_pinned() as f64)),
+            ("slow_dropped", Json::num(self.slow_dropped() as f64)),
+            ("recent", Json::Arr(recent)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Span;
+
+    fn trace(id: u64, total_us: f64) -> CompletedTrace {
+        CompletedTrace {
+            id,
+            started_unix_us: 0,
+            total_us,
+            spans: vec![Span {
+                name: "infer",
+                start_us: 0.0,
+                dur_us: total_us,
+                tags: vec![],
+            }],
+        }
+    }
+
+    #[test]
+    fn ring_keeps_last_n_newest_first() {
+        let r = FlightRecorder::new(RecorderConfig {
+            capacity: 4,
+            slow_slots: 2,
+            slow_threshold_us: 1e9,
+        });
+        for id in 1..=6 {
+            r.record(trace(id, 100.0));
+        }
+        let recent = r.recent();
+        let ids: Vec<u64> = recent.iter().map(|t| t.id).collect();
+        assert_eq!(ids, vec![6, 5, 4, 3], "ring of 4 after 6 records");
+        assert_eq!(r.recorded(), 6);
+        assert!(r.get(6).is_some());
+        assert!(r.get(1).is_none(), "lapped out of the ring");
+    }
+
+    #[test]
+    fn slow_traces_pin_until_read() {
+        let r = FlightRecorder::new(RecorderConfig {
+            capacity: 2,
+            slow_slots: 1,
+            slow_threshold_us: 1_000.0,
+        });
+        r.record(trace(1, 5_000.0)); // slow -> pinned
+        r.record(trace(2, 10.0));
+        r.record(trace(3, 20.0)); // laps id 1 out of the ring
+        assert_eq!(r.slow_pinned(), 1);
+        // Still fetchable through the pin even though the ring lapped it.
+        assert_eq!(r.get(1).unwrap().id, 1);
+        // Reading unpinned it.
+        assert_eq!(r.slow_pinned(), 0);
+        assert!(r.get(1).is_none());
+        // A second slow trace can claim the freed slot.
+        r.record(trace(4, 9_000.0));
+        assert_eq!(r.slow_pinned(), 1);
+    }
+
+    #[test]
+    fn slow_overflow_is_counted_not_lost_silently() {
+        let r = FlightRecorder::new(RecorderConfig {
+            capacity: 8,
+            slow_slots: 1,
+            slow_threshold_us: 1_000.0,
+        });
+        r.record(trace(1, 2_000.0));
+        r.record(trace(2, 3_000.0)); // no free pin slot
+        assert_eq!(r.slow_pinned(), 1);
+        assert_eq!(r.slow_dropped(), 1);
+        // The overflowed trace is still in the main ring.
+        assert!(r.get(2).is_some());
+    }
+
+    #[test]
+    fn index_json_lists_recent() {
+        let r = FlightRecorder::new(RecorderConfig::default());
+        r.record(trace(7, 123.0));
+        let j = r.index_json();
+        assert_eq!(j.get("recorded").and_then(|v| v.as_u64()), Some(1));
+        let recent = j.get("recent").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(recent[0].get("id").and_then(|v| v.as_u64()), Some(7));
+    }
+}

@@ -15,6 +15,10 @@ pub struct Metrics {
     pub latency: LatencyHistogram,
     /// Time requests spent queued before batch assembly.
     pub queue_wait: LatencyHistogram,
+    /// Distribution of executed batch sizes (one sample per chunk, before
+    /// padding) — same log-bucketed histogram type, value is a count not
+    /// microseconds.
+    pub batch_sizes: LatencyHistogram,
     pub requests: u64,
     pub responses: u64,
     pub errors: u64,
@@ -138,6 +142,63 @@ impl Metrics {
     }
 }
 
+/// One exported per-variant series: Prometheus family name, help text, and
+/// the projection out of [`MetricsSummary`]. Families ending in `_total`
+/// render as counters, everything else as gauges.
+pub type SummaryField = (&'static str, &'static str, fn(&MetricsSummary) -> f64);
+
+/// The single source of truth for which [`MetricsSummary`] counters are
+/// exported. The edge `/metrics` exposition renders exactly this table and
+/// the exposition tests assert against it, so a new counter added here
+/// ships on every surface at once — it cannot silently appear in only one.
+pub const SUMMARY_FIELDS: &[SummaryField] = &[
+    (
+        "mpcnn_variant_requests_total",
+        "requests submitted to the variant",
+        |s| s.requests as f64,
+    ),
+    (
+        "mpcnn_variant_responses_total",
+        "successful responses",
+        |s| s.responses as f64,
+    ),
+    (
+        "mpcnn_variant_errors_total",
+        "backend errors surfaced to clients",
+        |s| s.errors as f64,
+    ),
+    (
+        "mpcnn_variant_shed_admission_total",
+        "requests shed at admission (queue-wait EWMA past deadline)",
+        |s| s.shed_admission as f64,
+    ),
+    (
+        "mpcnn_variant_shed_expired_total",
+        "requests shed at dequeue (deadline already expired)",
+        |s| s.shed_expired as f64,
+    ),
+    (
+        "mpcnn_variant_panics_total",
+        "backend panics caught and converted to errors",
+        |s| s.panics as f64,
+    ),
+    (
+        "mpcnn_variant_worker_restarts_total",
+        "supervisor-driven backend rebuilds",
+        |s| s.worker_restarts as f64,
+    ),
+    (
+        "mpcnn_variant_batches_total",
+        "batches executed by the worker",
+        |s| s.batches as f64,
+    ),
+    (
+        "mpcnn_variant_throughput_rps",
+        "achieved responses/s over the server's lifetime",
+        |s| s.throughput_rps,
+    ),
+];
+
 /// Point-in-time snapshot of one variant's [`Metrics`], flattened to plain
 /// numbers (histograms already reduced to their percentiles). This is the
 /// single export surface shared by the CLI report and the edge
@@ -232,6 +293,36 @@ mod tests {
         assert!(s.p50_us >= 256.0 && s.p50_us <= 1024.0, "{}", s.p50_us);
         // The one-line summary is a rendering of the same struct.
         assert!(m.summary().contains("shed=2"));
+    }
+
+    #[test]
+    fn summary_field_table_is_coherent() {
+        // Unique family names, valid Prometheus identifiers, and live
+        // projections — the exposition and its tests both trust this table.
+        let mut names: Vec<&str> = SUMMARY_FIELDS.iter().map(|(n, _, _)| *n).collect();
+        names.sort_unstable();
+        let before = names.len();
+        names.dedup();
+        assert_eq!(names.len(), before, "duplicate family name in SUMMARY_FIELDS");
+        for (name, help, project) in SUMMARY_FIELDS {
+            assert!(name.starts_with("mpcnn_variant_"), "{name}");
+            assert!(
+                name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_'),
+                "{name}"
+            );
+            assert!(!help.is_empty());
+            assert!(project(&MetricsSummary::default()) == 0.0, "{name} must zero-init");
+        }
+        // The counters the drive-by is about are all present.
+        for required in [
+            "mpcnn_variant_requests_total",
+            "mpcnn_variant_responses_total",
+            "mpcnn_variant_errors_total",
+            "mpcnn_variant_panics_total",
+            "mpcnn_variant_batches_total",
+        ] {
+            assert!(names.contains(&required), "{required} missing");
+        }
     }
 
     #[test]

@@ -60,7 +60,7 @@ pub use fault::{
     silence_injected_panics, FaultControls, FaultKind, FaultPlan, FaultRule, FaultyBackend,
     Forced, InjectedPanic,
 };
-pub use metrics::{Metrics, MetricsSummary};
+pub use metrics::{Metrics, MetricsSummary, SummaryField, SUMMARY_FIELDS};
 pub use retry::{
     BreakerConfig, BreakerState, HedgeTrigger, RetryPolicy, RobustCounters, RobustSnapshot,
 };
@@ -69,6 +69,7 @@ pub use supervisor::SupervisorConfig;
 pub use variant::{VariantProfile, VariantSpec};
 pub use worker::{BatcherConfig, Client, PendingResponse, Response, SubmitError};
 
+use crate::obs::TraceHandle;
 use crate::util::error::Result;
 use crate::util::table::{fnum, Table};
 use std::fmt;
@@ -160,6 +161,10 @@ pub struct InferRequest {
     /// already exceeds it), at dequeue (shed if it expired while queued),
     /// and client-side in [`Server::infer`] (wait at most this long).
     pub deadline: Option<Duration>,
+    /// Tracing handle carried through the gateway into the batcher worker.
+    /// Off by default — untraced requests pay one `Option` check per
+    /// instrumentation point.
+    pub trace: TraceHandle,
 }
 
 impl InferRequest {
@@ -168,6 +173,7 @@ impl InferRequest {
             image,
             variant: VariantSelector::Default,
             deadline: None,
+            trace: TraceHandle::off(),
         }
     }
 
@@ -178,6 +184,11 @@ impl InferRequest {
 
     pub fn with_deadline(mut self, d: Duration) -> InferRequest {
         self.deadline = Some(d);
+        self
+    }
+
+    pub fn with_trace(mut self, t: TraceHandle) -> InferRequest {
+        self.trace = t;
         self
     }
 }
@@ -443,7 +454,7 @@ impl Server {
         self.variants[idx]
             .worker
             .client
-            .try_submit_with_deadline(req.image, deadline)
+            .try_submit_traced(req.image, deadline, req.trace)
     }
 
     /// Route and submit, blocking on the routed variant's queue. The
@@ -455,7 +466,7 @@ impl Server {
         self.variants[idx]
             .worker
             .client
-            .submit_with_deadline(req.image, deadline)
+            .submit_traced(req.image, deadline, req.trace)
     }
 
     /// Submit and wait, honouring the request's deadline and the server's
@@ -479,7 +490,7 @@ impl Server {
             let pending = self.variants[idx]
                 .worker
                 .client
-                .submit_with_deadline(req.image, abs_deadline)
+                .submit_traced(req.image, abs_deadline, req.trace)
                 .map_err(|e| e.to_string())?;
             return Self::wait_until(pending, abs_deadline);
         }
@@ -503,6 +514,16 @@ impl Server {
                     None => break, // no healthy variant left to try
                 }
             };
+            if attempt > 0 {
+                req.trace.add_event(
+                    "retry",
+                    Instant::now(),
+                    vec![
+                        ("attempt", attempt.to_string()),
+                        ("variant", self.variants[idx].spec.name.clone()),
+                    ],
+                );
+            }
             match first_routed {
                 None => first_routed = Some(idx),
                 Some(f) if f != idx => self.robust.note_fallback(),
@@ -511,7 +532,7 @@ impl Server {
             let pending = match self.variants[idx]
                 .worker
                 .client
-                .submit_with_deadline(req.image.clone(), abs_deadline)
+                .submit_traced(req.image.clone(), abs_deadline, req.trace.clone())
             {
                 Ok(p) => p,
                 Err(e) => {
@@ -594,13 +615,14 @@ impl Server {
             self.variants[hi]
                 .worker
                 .client
-                .try_submit_with_deadline(req.image.clone(), abs_deadline)
+                .try_submit_traced(req.image.clone(), abs_deadline, req.trace.clone())
                 .ok()
         });
         let mut original = Some(pending);
         let mut hedged = match hedge {
             Some(p) => {
                 self.robust.note_hedge();
+                req.trace.add_event("hedge", Instant::now(), vec![]);
                 Some(p)
             }
             None => None, // nowhere to hedge: keep waiting on the original

@@ -23,6 +23,7 @@ use super::metrics::{Metrics, EWMA_ALPHA};
 use super::retry::{BreakerConfig, CircuitBreaker};
 use super::router::RouteError;
 use super::supervisor::{Supervisor, SupervisorConfig};
+use crate::obs::TraceHandle;
 use crate::util::error::Result;
 use std::fmt;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -80,6 +81,10 @@ struct Request {
     /// being batched (a late answer is worth less than a fast failure).
     deadline: Option<Instant>,
     reply: SyncSender<Result<Response, String>>,
+    /// Shared trace: the worker appends `queue.wait` / `batch.assemble` /
+    /// `infer` spans into the same trace the edge handler holds. The
+    /// disabled handle is a no-op.
+    trace: TraceHandle,
 }
 
 /// One inference response.
@@ -210,6 +215,7 @@ impl Client {
         &self,
         image: Vec<f32>,
         deadline: Option<Instant>,
+        trace: TraceHandle,
     ) -> (Request, PendingResponse) {
         let (reply_tx, reply_rx) = sync_channel(1);
         (
@@ -218,6 +224,7 @@ impl Client {
                 enqueued: Instant::now(),
                 deadline,
                 reply: reply_tx,
+                trace,
             },
             PendingResponse { rx: reply_rx },
         )
@@ -262,9 +269,20 @@ impl Client {
         image: Vec<f32>,
         deadline: Option<Instant>,
     ) -> Result<PendingResponse, SubmitError> {
+        self.try_submit_traced(image, deadline, TraceHandle::off())
+    }
+
+    /// [`Client::try_submit_with_deadline`] carrying a request trace the
+    /// worker appends its spans into.
+    pub fn try_submit_traced(
+        &self,
+        image: Vec<f32>,
+        deadline: Option<Instant>,
+        trace: TraceHandle,
+    ) -> Result<PendingResponse, SubmitError> {
         self.check_len(&image)?;
         self.check_deadline(deadline)?;
-        let (req, pending) = self.make_request(image, deadline);
+        let (req, pending) = self.make_request(image, deadline, trace);
         // Count in-flight BEFORE the send: a zero-latency worker can serve
         // and decrement in the window after `try_send` returns, and a late
         // increment would wrap the counter below zero.
@@ -294,9 +312,19 @@ impl Client {
         image: Vec<f32>,
         deadline: Option<Instant>,
     ) -> Result<PendingResponse, SubmitError> {
+        self.submit_traced(image, deadline, TraceHandle::off())
+    }
+
+    /// [`Client::submit_with_deadline`] carrying a request trace.
+    pub fn submit_traced(
+        &self,
+        image: Vec<f32>,
+        deadline: Option<Instant>,
+        trace: TraceHandle,
+    ) -> Result<PendingResponse, SubmitError> {
         self.check_len(&image)?;
         self.check_deadline(deadline)?;
-        let (req, pending) = self.make_request(image, deadline);
+        let (req, pending) = self.make_request(image, deadline, trace);
         self.shared.inflight.fetch_add(1, Ordering::Relaxed);
         if self.tx.send(req).is_err() {
             self.shared.inflight.fetch_sub(1, Ordering::Relaxed);
@@ -687,6 +715,7 @@ fn batcher_loop(
             let mut qw = shared.queue_wait_ewma_us();
             for r in &live {
                 let wait_us = r.enqueued.elapsed().as_micros() as f64;
+                r.trace.add_span("queue.wait", r.enqueued, now, vec![]);
                 m.queue_wait.record_us(wait_us);
                 qw = if qw <= 0.0 {
                     wait_us
@@ -712,6 +741,7 @@ fn batcher_loop(
         let mut queue: std::collections::VecDeque<Request> = live.into();
         let mut crashed = false;
         for (take, exec_size) in plan {
+            let assemble_start = Instant::now();
             let chunk: Vec<Request> = queue.drain(..take).collect();
             let mut flat = Vec::with_capacity(exec_size * image_len);
             for r in &chunk {
@@ -724,6 +754,12 @@ fn batcher_loop(
                 m.batches += 1;
                 m.batched_items += take as u64;
                 m.padded_items += (exec_size - take) as u64;
+                m.batch_sizes.record_us(take as f64);
+            }
+            let infer_start = Instant::now();
+            for r in &chunk {
+                r.trace
+                    .add_span("batch.assemble", assemble_start, infer_start, vec![]);
             }
 
             // Panic isolation: a backend panic fails this chunk like any
@@ -742,6 +778,22 @@ fn batcher_loop(
                     ))
                 }
             };
+            let infer_end = Instant::now();
+            for r in &chunk {
+                if r.trace.enabled() {
+                    r.trace.add_span(
+                        "infer",
+                        infer_start,
+                        infer_end,
+                        vec![
+                            ("variant", label.to_string()),
+                            ("batch", take.to_string()),
+                            ("exec", exec_size.to_string()),
+                            ("ok", result.is_ok().to_string()),
+                        ],
+                    );
+                }
+            }
             consecutive_errors = if result.is_ok() {
                 supervisor.on_success();
                 shared.breaker.record_success();
@@ -1152,6 +1204,30 @@ mod tests {
         assert_eq!(w.shared.shed_admission(), 1);
         // A deadline-free request is untouched by admission control.
         assert!(client.classify(vec![0.0; 12]).is_ok());
+    }
+
+    #[test]
+    fn traced_request_collects_worker_spans() {
+        let w = mock_worker(vec![1, 8], 2_000, BatcherConfig::default());
+        let client = w.client.clone();
+        let trace = TraceHandle::start();
+        let p = client
+            .try_submit_traced(vec![0.0; 12], None, trace.clone())
+            .unwrap();
+        p.wait().unwrap();
+        let done = trace.finish(Instant::now()).unwrap();
+        let names: Vec<&str> = done.spans.iter().map(|s| s.name).collect();
+        for want in ["queue.wait", "batch.assemble", "infer"] {
+            assert!(names.contains(&want), "missing {want} in {names:?}");
+        }
+        let infer = done.spans.iter().find(|s| s.name == "infer").unwrap();
+        assert!(infer.dur_us >= 1_000.0, "mock latency must show: {}", infer.dur_us);
+        assert!(infer.tags.iter().any(|(k, v)| *k == "variant" && v == "test"));
+        assert!(infer.tags.iter().any(|(k, v)| *k == "batch" && v == "1"));
+        // The untraced path is unchanged and allocation-free.
+        assert!(client.classify(vec![0.0; 12]).is_ok());
+        let m = lock_metrics(&w.metrics).clone();
+        assert_eq!(m.batch_sizes.count(), m.batches, "one size sample per batch");
     }
 
     #[test]

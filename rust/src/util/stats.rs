@@ -19,12 +19,14 @@ pub fn stddev(xs: &[f64]) -> f64 {
 }
 
 /// Percentile via linear interpolation on the sorted copy; `p` in [0, 100].
+/// NaN samples are dropped before sorting (they carry no rank information),
+/// so a stray NaN can neither panic the sort nor be returned as a percentile.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    if v.is_empty() {
         return 0.0;
     }
-    let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -79,6 +81,27 @@ impl Default for LatencyHistogram {
 }
 
 impl LatencyHistogram {
+    /// Number of log-spaced buckets (plus the implicit `+Inf` overflow the
+    /// Prometheus exposition appends).
+    pub const BUCKETS: usize = 32;
+
+    /// Inclusive upper bound (the Prometheus `le` label) of bucket `i`:
+    /// bucket `i` covers `[2^i, 2^(i+1))`, so everything it counted is
+    /// `< 2^(i+1)`.
+    pub fn bound(i: usize) -> f64 {
+        (1u128 << (i + 1).min(127)) as f64
+    }
+
+    /// Raw per-bucket counts (non-cumulative), for exposition and tests.
+    pub fn buckets(&self) -> &[u64; 32] {
+        &self.buckets
+    }
+
+    /// Sum of all recorded values (the Prometheus `_sum` sample).
+    pub fn sum_us(&self) -> f64 {
+        self.sum_us
+    }
+
     pub fn record_us(&mut self, us: f64) {
         let idx = if us < 1.0 {
             0
@@ -179,6 +202,37 @@ mod tests {
         assert!(p50 <= p99);
         assert!((h.mean_us() - 500.5).abs() < 1.0);
         assert_eq!(h.max_us(), 1000.0);
+    }
+
+    #[test]
+    fn percentile_ignores_nan() {
+        // Regression: `sort_by(partial_cmp().unwrap())` panicked on NaN and
+        // could surface NaN as a percentile. NaNs now drop out entirely.
+        let xs = [3.0, f64::NAN, 1.0, 2.0, f64::NAN];
+        let p50 = percentile(&xs, 50.0);
+        assert!((p50 - 2.0).abs() < 1e-12, "{p50}");
+        assert_eq!(percentile(&xs, 100.0), 3.0);
+        assert!(!median(&xs).is_nan());
+        // All-NaN input degrades to the empty-slice answer, not a panic.
+        assert_eq!(percentile(&[f64::NAN, f64::NAN], 99.0), 0.0);
+    }
+
+    #[test]
+    fn histogram_buckets_expose_prometheus_series() {
+        let mut h = LatencyHistogram::default();
+        h.record_us(1.5); // bucket 0: [1, 2)
+        h.record_us(3.0); // bucket 1: [2, 4)
+        h.record_us(3.9); // bucket 1
+        assert_eq!(h.buckets()[0], 1);
+        assert_eq!(h.buckets()[1], 2);
+        assert_eq!(h.buckets().iter().sum::<u64>(), h.count());
+        assert!((h.sum_us() - 8.4).abs() < 1e-9);
+        assert_eq!(LatencyHistogram::bound(0), 2.0);
+        assert_eq!(LatencyHistogram::bound(3), 16.0);
+        // Bounds are strictly increasing (cumulative rendering relies on it).
+        for i in 1..LatencyHistogram::BUCKETS {
+            assert!(LatencyHistogram::bound(i) > LatencyHistogram::bound(i - 1));
+        }
     }
 
     #[test]

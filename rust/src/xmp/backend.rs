@@ -11,8 +11,9 @@
 //! size-flexible, unlike compiled PJRT executables.
 
 use super::pack::{pack_model, PackedModel};
-use super::{XmpConfig, XmpModel};
+use super::{KernelPath, XmpConfig, XmpModel};
 use crate::cnn::Cnn;
+use crate::obs::ModelProfile;
 use crate::runtime::argmax_rows;
 use crate::serving::{BackendHealth, InferenceBackend, VariantSpec};
 use crate::util::error::Result;
@@ -79,6 +80,19 @@ impl XmpBackend {
         let logits = self.model.forward(self.packed(), image, self.fast)?;
         let cols = logits.len().max(1);
         Ok(argmax_rows(&logits, cols).first().copied().unwrap_or(0))
+    }
+
+    /// Run one image with per-layer profiling: measured host time and
+    /// kernel stage split for every layer, logits bit-identical to the
+    /// unprofiled forward. Join the modeled FPGA cycles afterwards with
+    /// [`ModelProfile::attach_sim`] for the measured-vs-virtual report.
+    pub fn profile_forward(&self, image: &[f32]) -> Result<(Vec<f32>, ModelProfile)> {
+        let mut prof = ModelProfile::default();
+        let path = if self.fast { KernelPath::Fast } else { KernelPath::Reference };
+        let logits = self
+            .model
+            .forward_profiled(self.packed(), image, path, Some(&mut prof))?;
+        Ok((logits, prof))
     }
 
     fn infer_batch_inner(&self, images: &[f32], batch: usize) -> Result<Vec<f32>> {
@@ -268,6 +282,36 @@ mod tests {
         let w4a8 = XmpBackend::from_spec(&base, &VariantSpec::uniform(4), XmpConfig::default())
             .unwrap();
         assert_ne!(a.infer_batch(&img, 1).unwrap(), w4a8.infer_batch(&img, 1).unwrap());
+    }
+
+    #[test]
+    fn profile_forward_attributes_host_and_modeled_sides() {
+        use crate::array::Dims;
+        use crate::config::RunConfig;
+        use crate::pe::PeDesign;
+        use crate::sim::{simulate, AcceleratorDesign};
+        let base = resnet::resnet_small(1, 10);
+        let b =
+            XmpBackend::from_spec(&base, &VariantSpec::uniform_joint(4, 8), XmpConfig::default())
+                .unwrap();
+        let img = vec![0.6f32; 3072];
+        let (logits, mut prof) = b.profile_forward(&img).unwrap();
+        assert_eq!(logits, b.infer_batch(&img, 1).unwrap(), "profiling changed the math");
+        assert_eq!(prof.layers.len(), b.model().layers.len());
+        // Join the simulator's modeled schedule for the same net: every
+        // conv layer must end up with both host time and modeled cycles.
+        let planned = base.with_uniform_wq(4);
+        let cfg = RunConfig::default();
+        let design =
+            AcceleratorDesign::new(PeDesign::bp_st_1d(2), Dims::new(7, 5, 37), &planned, &cfg);
+        let sim = simulate(&planned, &design);
+        assert!(prof.attach_sim(&sim) > 0, "no layer matched the schedule");
+        assert!(
+            prof.conv_layers_attributed(),
+            "conv layers missing a side:\n{}",
+            prof.table().render()
+        );
+        assert!(prof.total_host_us() > 0.0 && prof.total_fpga_us() > 0.0);
     }
 
     #[test]

@@ -16,6 +16,8 @@
 use super::gemm::{gemm_codes_i64, gemm_sliced_fast, gemm_sliced_reference};
 use super::pack::{pack_activations, PackedLayer, SlicedActs};
 use super::XmpLayer;
+use crate::obs::StageTimes;
+use std::time::Instant;
 
 /// SAME-padding geometry: `(output size, leading pad)` for a square
 /// `ih`-pixel map under a `k`-wide kernel at stride `s`. Matches
@@ -104,7 +106,39 @@ pub fn conv_forward(
     pl: &PackedLayer,
     fast: bool,
 ) -> Vec<u8> {
+    conv_forward_profiled(input, a_in, l, pl, fast, None)
+}
+
+/// Advance the stage clock: charge the time since the last lap to one
+/// [`StageTimes`] field. A `None` sink keeps the hot path clock-free.
+fn lap(
+    prof: &mut Option<&mut StageTimes>,
+    mark: &mut Option<Instant>,
+    add: impl FnOnce(&mut StageTimes, f64),
+) {
+    if let (Some(p), Some(m)) = (prof.as_deref_mut(), mark.as_mut()) {
+        let now = Instant::now();
+        add(p, now.duration_since(*m).as_secs_f64() * 1e6);
+        *m = now;
+    }
+}
+
+/// [`conv_forward`] with a per-stage timing sink: im2col, activation
+/// digit-plane packing (fast path only — the reference kernel extracts
+/// digits on the fly, so its slicing time is charged to the GEMM), the
+/// sliced GEMM itself, and requantize. The computed output is bit-for-bit
+/// the unprofiled one; a `None` sink takes no clock readings at all.
+pub fn conv_forward_profiled(
+    input: &[u8],
+    a_in: u32,
+    l: &XmpLayer,
+    pl: &PackedLayer,
+    fast: bool,
+    mut prof: Option<&mut StageTimes>,
+) -> Vec<u8> {
+    let mut mark = prof.as_ref().map(|_| Instant::now());
     let (cols, m, kdim) = im2col(input, l.ih, l.iw, l.k, l.s);
+    lap(&mut prof, &mut mark, |p, us| p.im2col_us += us);
     debug_assert_eq!(kdim, l.kdim());
     let od = l.od as usize;
     let mut out = vec![0u8; m * od];
@@ -112,16 +146,20 @@ pub fn conv_forward(
     let mut base = 0usize;
     for (g, pg) in l.groups.iter().zip(&pl.groups) {
         let accs = if fast {
-            gemm_sliced_fast(acts.for_k(pg.k), pg)
+            let sliced = acts.for_k(pg.k);
+            lap(&mut prof, &mut mark, |p, us| p.pack_us += us);
+            gemm_sliced_fast(sliced, pg)
         } else {
             gemm_sliced_reference(&cols, m, kdim, &g.codes, pg.od, pg.wq, a_in, pg.k)
         };
+        lap(&mut prof, &mut mark, |p, us| p.gemm_us += us);
         for (row_out, row_acc) in out.chunks_mut(od).zip(accs.chunks_exact(pg.od)) {
             let slots = row_out[base..base + pg.od].iter_mut();
             for ((o, r), &acc) in slots.zip(&pg.requant).zip(row_acc) {
                 *o = r.apply(acc);
             }
         }
+        lap(&mut prof, &mut mark, |p, us| p.requant_us += us);
         base += pg.od;
     }
     out
@@ -264,6 +302,49 @@ mod tests {
         let narrow: Vec<u8> = vec![0, 1, 2, 3, 4, 5, 6, 7, 8];
         assert_eq!(conv_forward(&narrow, 4, &l, &pl, true), narrow);
         assert_eq!(conv_forward(&narrow, 4, &l, &pl, false), narrow);
+    }
+
+    #[test]
+    fn profiled_conv_matches_unprofiled_and_fills_stages() {
+        let requant = crate::xmp::Requant { mult: 256, shift: 8, qmax: 255 };
+        let l = XmpLayer {
+            name: "id".into(),
+            kind: crate::cnn::LayerKind::Conv,
+            ih: 3,
+            iw: 1,
+            od: 1,
+            k: 1,
+            s: 1,
+            aq: 8,
+            groups: vec![crate::xmp::GroupWeights {
+                wq: 2,
+                od: 1,
+                codes: vec![1],
+                requant: vec![requant],
+                scales: vec![1.0],
+            }],
+        };
+        let pl = PackedLayer {
+            groups: vec![crate::xmp::pack::pack_group(
+                &[1],
+                1,
+                1,
+                2,
+                2,
+                vec![requant],
+                vec![1.0],
+            )],
+        };
+        let input: Vec<u8> = vec![0, 50, 100, 150, 200, 250, 3, 9, 27];
+        let mut st = StageTimes::default();
+        let out = conv_forward_profiled(&input, 8, &l, &pl, true, Some(&mut st));
+        assert_eq!(out, conv_forward(&input, 8, &l, &pl, true), "profiling changed the math");
+        assert!(st.total_us() > 0.0, "stages must accumulate wall time");
+        // The reference kernel slices on the fly: no packing stage.
+        let mut st_ref = StageTimes::default();
+        let out_ref = conv_forward_profiled(&input, 8, &l, &pl, false, Some(&mut st_ref));
+        assert_eq!(out_ref, out);
+        assert_eq!(st_ref.pack_us, 0.0, "reference path has no pack stage");
     }
 
     #[test]

@@ -57,9 +57,11 @@ pub use pack::{pack_model, PackedModel};
 
 use crate::cnn::channelwise::group_channel_counts;
 use crate::cnn::{ChannelGroup, Cnn, LayerKind};
+use crate::obs::{LayerProfile, ModelProfile, StageTimes};
 use crate::quant::lsq::{QuantParams, Quantizer};
 use crate::util::error::Result;
 use crate::util::rng::Rng;
+use std::time::Instant;
 
 /// Engine-wide knobs.
 #[derive(Clone, Copy, Debug)]
@@ -383,6 +385,23 @@ impl XmpModel {
         image: &[f32],
         path: KernelPath,
     ) -> Result<Vec<f32>> {
+        self.forward_profiled(packed, image, path, None)
+    }
+
+    /// [`forward_kernel`](Self::forward_kernel) with a per-layer profiling
+    /// sink: each layer's measured wall time (kernel stages plus glue —
+    /// pooling, branch merges) lands in a [`LayerProfile`], with the
+    /// im2col/pack/GEMM/requant stage split from the sliced conv kernels
+    /// (the plain-i64 ground truth and the FC head report wall time only).
+    /// `None` is the zero-cost off switch: no clock reads, no allocation,
+    /// bit-identical logits either way.
+    pub fn forward_profiled(
+        &self,
+        packed: &PackedModel,
+        image: &[f32],
+        path: KernelPath,
+        mut prof: Option<&mut ModelProfile>,
+    ) -> Result<Vec<f32>> {
         if image.len() != self.image_len() {
             crate::bail!(
                 "image has {} elements, model expects {}",
@@ -390,11 +409,23 @@ impl XmpModel {
                 self.image_len()
             );
         }
-        let conv_with = |input: &[u8], a_in: u32, l: &XmpLayer, pl: &pack::PackedLayer| match path
-        {
+        if let Some(p) = prof.as_deref_mut() {
+            p.model = self.name.clone();
+            p.path = match path {
+                KernelPath::PlainI64 => "plain-i64",
+                KernelPath::Reference => "reference",
+                KernelPath::Fast => "fast",
+            }
+            .to_string();
+        }
+        let conv_with = |input: &[u8],
+                         a_in: u32,
+                         l: &XmpLayer,
+                         pl: &pack::PackedLayer,
+                         st: Option<&mut StageTimes>| match path {
             KernelPath::PlainI64 => conv::conv_forward_i64(input, l),
-            KernelPath::Reference => conv::conv_forward(input, a_in, l, pl, false),
-            KernelPath::Fast => conv::conv_forward(input, a_in, l, pl, true),
+            KernelPath::Reference => conv::conv_forward_profiled(input, a_in, l, pl, false, st),
+            KernelPath::Fast => conv::conv_forward_profiled(input, a_in, l, pl, true, st),
         };
         let mut cur = self.quantize_input(image);
         let mut cur_shape = (self.input_hw, self.input_channels);
@@ -404,6 +435,8 @@ impl XmpModel {
         let mut history: Vec<((u32, u32), u32, Vec<u8>)> = Vec::new();
         let mut logits: Option<Vec<f32>> = None;
         for (l, pl) in self.layers.iter().zip(&packed.layers) {
+            let t_layer = prof.as_ref().map(|_| Instant::now());
+            let mut stages = StageTimes::default();
             if logits.is_some() {
                 crate::bail!("layer '{}' follows the FC head; unsupported", l.name);
             }
@@ -426,6 +459,7 @@ impl XmpModel {
                     KernelPath::Reference => conv::fc_logits(&pooled, cur_aq, l, pl, false),
                     KernelPath::Fast => conv::fc_logits(&pooled, cur_aq, l, pl, true),
                 });
+                record_layer(&mut prof, l, t_layer, stages);
                 continue;
             }
             let need = (l.ih, l.iw);
@@ -435,7 +469,8 @@ impl XmpModel {
                 cur_shape = (cur_shape.0.div_ceil(2), cur_shape.1);
             }
             let (out, branch) = if need == cur_shape {
-                (conv_with(&cur, cur_aq, l, pl), false)
+                let st = prof.is_some().then_some(&mut stages);
+                (conv_with(&cur, cur_aq, l, pl, st), false)
             } else {
                 let src = history
                     .iter()
@@ -449,7 +484,8 @@ impl XmpModel {
                             l.iw
                         )
                     })?;
-                (conv_with(&src.2, src.1, l, pl), true)
+                let st = prof.is_some().then_some(&mut stages);
+                (conv_with(&src.2, src.1, l, pl, st), true)
             };
             let out_shape = (l.oh(), l.od);
             if branch && out_shape == cur_shape {
@@ -468,6 +504,7 @@ impl XmpModel {
                 cur_shape = out_shape;
                 cur_aq = l.aq;
             }
+            record_layer(&mut prof, l, t_layer, stages);
         }
         match logits {
             Some(l) => Ok(l),
@@ -478,6 +515,33 @@ impl XmpModel {
                 .collect()),
         }
     }
+}
+
+/// Append one layer's measured profile entry; no-op when profiling is off.
+/// The reported `wq` is the widest-population channel group's word-length
+/// (truly-mixed layers carry several).
+fn record_layer(
+    prof: &mut Option<&mut ModelProfile>,
+    l: &XmpLayer,
+    started: Option<Instant>,
+    stages: StageTimes,
+) {
+    let (Some(p), Some(t0)) = (prof.as_deref_mut(), started) else {
+        return;
+    };
+    let kind = match l.kind {
+        LayerKind::Fc => "fc".to_string(),
+        LayerKind::Conv => format!("conv{}x{}", l.k, l.k),
+    };
+    p.layers.push(LayerProfile {
+        name: l.name.clone(),
+        kind,
+        wq: l.groups.iter().max_by_key(|g| g.od).map(|g| g.wq).unwrap_or(0),
+        aq: l.aq,
+        host_us: t0.elapsed().as_secs_f64() * 1e6,
+        stages,
+        ..Default::default()
+    });
 }
 
 /// Global average pool over an NHWC u8 map: rounded per-channel mean.
@@ -709,6 +773,39 @@ mod tests {
                 assert_eq!(a.to_bits(), c.to_bits());
             }
         }
+    }
+
+    #[test]
+    fn profiled_forward_is_bit_identical_and_covers_every_layer() {
+        let base = resnet::resnet_small(1, 10);
+        let plan = uniform_plan(&base, 4);
+        let m = XmpModel::synthetic(&base, &plan, XmpConfig::default()).unwrap();
+        let packed = pack::pack_model(&m);
+        let img = vec![0.8f32; m.image_len()];
+        let mut prof = ModelProfile::default();
+        let logits = m
+            .forward_profiled(&packed, &img, KernelPath::Fast, Some(&mut prof))
+            .unwrap();
+        assert_eq!(logits, m.forward(&packed, &img, true).unwrap(), "profiling changed logits");
+        assert_eq!(prof.layers.len(), m.layers.len(), "one profile entry per layer");
+        assert_eq!(prof.path, "fast");
+        for (pl, l) in prof.layers.iter().zip(&m.layers) {
+            assert_eq!(pl.name, l.name);
+            assert_eq!(pl.aq, l.aq);
+            assert!(pl.host_us > 0.0, "{} has no measured time", pl.name);
+            assert!(
+                pl.stages.total_us() <= pl.host_us + 1.0,
+                "{}: stages {} exceed wall {}",
+                pl.name,
+                pl.stages.total_us(),
+                pl.host_us
+            );
+        }
+        // Every conv layer gets a stage split; the FC head is wall-only.
+        for c in prof.layers.iter().filter(|l| l.is_conv()) {
+            assert!(c.stages.gemm_us > 0.0, "{} gemm stage untimed", c.name);
+        }
+        assert_eq!(prof.layers.last().unwrap().kind, "fc");
     }
 
     #[test]

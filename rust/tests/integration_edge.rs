@@ -3,8 +3,9 @@
 //! (duplicates share one backend inference), the content-addressed
 //! response cache (bit-identical repeats, corrupt responses never
 //! cached), per-client rate limiting (429 for the abuser, 200 for the
-//! polite), the Prometheus exposition, and graceful drain — all with
-//! zero lost or hanging replies under injected faults.
+//! polite), the Prometheus exposition (histogram coherence included),
+//! end-to-end request tracing through the flight recorder, and graceful
+//! drain — all with zero lost or hanging replies under injected faults.
 
 use mpcnn::edge::{http, EdgeConfig, EdgeServer, RemoteClient, ResponseCheck};
 use mpcnn::serving::{
@@ -521,6 +522,269 @@ fn graceful_drain_flushes_inflight_then_closes_the_socket() {
         Duration::from_secs(2),
     );
     assert!(refused.is_err(), "the socket is closed after drain");
+    Arc::try_unwrap(server).expect("gateway released").shutdown();
+}
+
+/// The ISSUE's tracing acceptance: with the flight recorder armed, a slow
+/// request driven while the `flaky` scenario batters the other variant
+/// yields a fetchable trace whose span union covers >=95% of the measured
+/// end-to-end wall time, with the full span taxonomy present and the
+/// Chrome trace-event export well-formed.
+#[test]
+fn tracing_records_spans_covering_the_request_under_flaky() {
+    let ecfg = EdgeConfig {
+        rate_per_sec: 0.0,
+        trace: true,
+        trace_capacity: 64,
+        slow_trace_us: 10_000.0,
+        ..EdgeConfig::default()
+    };
+    let (edge, server, _w8_calls, _controls) = boot(
+        ecfg,
+        Some(FaultPlan::scenario("flaky").expect("known scenario")),
+        60_000, // w8 at 60ms: comfortably past the 10ms slow threshold
+        RetryPolicy::attempts(3),
+        None,
+    );
+    let addr = edge.local_addr().to_string();
+
+    // Traced traffic through the flaky variant: success or 5xx, every exit
+    // path records a trace and names it in the response header.
+    for i in 0..6 {
+        let body = classify_body(&image_of(i), Some("name:w2"), None, Some(5_000));
+        let resp = post_classify(&addr, &body).expect("reply");
+        assert!(
+            resp.header("X-Trace-Id").is_some(),
+            "every traced classify names its trace (status {})",
+            resp.status
+        );
+    }
+
+    // The acceptance request: deterministically slow (w8 at 60ms).
+    let t0 = std::time::Instant::now();
+    let resp = post_classify(&addr, &classify_body(&image_of(7), Some("name:w8"), None, None))
+        .expect("reply");
+    let wall_us = t0.elapsed().as_secs_f64() * 1e6;
+    assert_eq!(resp.status, 200);
+    let id = resp.header("X-Trace-Id").expect("trace id header").to_string();
+
+    let client = RemoteClient::new(&addr, RetryPolicy::default());
+    let (status, body) = client.get(&format!("/v1/trace/{id}")).expect("trace fetch");
+    assert_eq!(status, 200, "{body}");
+    let j = mpcnn::util::json::parse(&body).expect("trace JSON parses");
+    let total_us = j.get("total_us").and_then(|v| v.as_f64()).unwrap();
+    let coverage = j.get("coverage").and_then(|v| v.as_f64()).unwrap();
+    assert!(total_us >= 55_000.0, "the 60ms inference dominates: {total_us}");
+    assert!(
+        total_us <= wall_us,
+        "the trace cannot outlast the client-observed wall: {total_us} vs {wall_us}"
+    );
+    assert!(
+        coverage >= 0.95,
+        "span union must cover >=95% of end-to-end wall time, got {coverage} over {total_us}us"
+    );
+    let spans = j.get("spans").and_then(|v| v.as_arr()).unwrap();
+    let names: Vec<&str> = spans
+        .iter()
+        .filter_map(|s| s.get("name").and_then(|v| v.as_str()))
+        .collect();
+    for want in [
+        "edge.parse",
+        "admission",
+        "route.decide",
+        "cache.lookup",
+        "queue.wait",
+        "batch.assemble",
+        "infer",
+        "infer.wait",
+        "respond",
+    ] {
+        assert!(names.contains(&want), "span {want} missing from {names:?}");
+    }
+    let infer = spans
+        .iter()
+        .find(|s| s.get("name").and_then(|v| v.as_str()) == Some("infer"))
+        .unwrap();
+    assert_eq!(
+        infer.get("tags").and_then(|t| t.get("variant")).and_then(|v| v.as_str()),
+        Some("w8"),
+        "the worker tags its infer span with the serving variant"
+    );
+
+    // Index: everything was recorded; the slow request shows as slow.
+    let (status, index) = client.get("/v1/trace").expect("index");
+    assert_eq!(status, 200);
+    let idx = mpcnn::util::json::parse(&index).expect("index parses");
+    assert!(idx.get("recorded").and_then(|v| v.as_u64()).unwrap() >= 7);
+    let recent = idx.get("recent").and_then(|v| v.as_arr()).unwrap();
+    assert!(
+        recent.iter().any(|r| {
+            r.get("id").and_then(|v| v.as_u64()) == id.parse::<u64>().ok()
+                && r.get("slow").and_then(|v| v.as_bool()) == Some(true)
+        }),
+        "the 60ms trace is indexed and flagged slow"
+    );
+
+    // Chrome trace-event export: the shape Perfetto loads.
+    let (status, export) = client.get("/v1/trace/export").expect("export");
+    assert_eq!(status, 200);
+    let ev = mpcnn::util::json::parse(&export).expect("export parses");
+    assert_eq!(
+        ev.get("displayTimeUnit").and_then(|v| v.as_str()),
+        Some("ms"),
+        "{export}"
+    );
+    let events = ev.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+    assert!(!events.is_empty());
+    for e in events {
+        let ph = e.get("ph").and_then(|v| v.as_str()).expect("event phase");
+        assert!(ph == "X" || ph == "M", "only complete + metadata events: {ph}");
+        if ph == "X" {
+            assert!(e.get("ts").and_then(|v| v.as_f64()).is_some());
+            assert!(e.get("dur").and_then(|v| v.as_f64()).is_some());
+            assert!(e.get("name").and_then(|v| v.as_str()).is_some());
+        }
+    }
+
+    edge.shutdown();
+    Arc::try_unwrap(server).expect("gateway released").shutdown();
+}
+
+/// Tracing off (the default): trace endpoints answer 404, responses carry
+/// no X-Trace-Id, and POST to the trace surface is a 405.
+#[test]
+fn trace_endpoints_404_when_recorder_is_off() {
+    let (edge, server, _w8_calls, _controls) = boot(
+        EdgeConfig {
+            rate_per_sec: 0.0,
+            ..EdgeConfig::default()
+        },
+        None,
+        0,
+        RetryPolicy::default(),
+        None,
+    );
+    let addr = edge.local_addr().to_string();
+    let resp = post_classify(&addr, &classify_body(&image_of(1), None, None, None))
+        .expect("reply");
+    assert_eq!(resp.status, 200);
+    assert!(resp.header("X-Trace-Id").is_none(), "no recorder, no trace ids");
+    let client = RemoteClient::new(&addr, RetryPolicy::default());
+    for path in ["/v1/trace", "/v1/trace/1", "/v1/trace/export"] {
+        let (status, _) = client.get(path).expect("reply");
+        assert_eq!(status, 404, "{path} must 404 with tracing off");
+    }
+    let post = http::request(
+        &addr,
+        "POST",
+        "/v1/trace",
+        &[],
+        &[],
+        Duration::from_secs(10),
+    )
+    .expect("reply");
+    assert_eq!(post.status, 405, "the trace surface is GET-only");
+    edge.shutdown();
+    Arc::try_unwrap(server).expect("gateway released").shutdown();
+}
+
+/// Walk one histogram family in the exposition: buckets must be cumulative
+/// (monotone nondecreasing in emission order), close with `+Inf`, and agree
+/// with the `_count` sample. Returns (count, sum).
+fn check_histogram(text: &str, name: &str, label: Option<&str>) -> (u64, f64) {
+    let bucket_prefix = match label {
+        Some(l) => format!("{name}_bucket{{{l},le="),
+        None => format!("{name}_bucket{{le="),
+    };
+    let mut prev = 0u64;
+    let mut inf = None;
+    let mut n_buckets = 0usize;
+    for l in text.lines().filter(|l| l.starts_with(&bucket_prefix)) {
+        let v: u64 = l.rsplit(' ').next().unwrap().parse().unwrap();
+        assert!(v >= prev, "cumulative buckets must be monotone: {l}");
+        prev = v;
+        if l.contains("le=\"+Inf\"") {
+            inf = Some(v);
+        }
+        n_buckets += 1;
+    }
+    assert_eq!(n_buckets, 33, "{name}: 32 log2 buckets plus +Inf");
+    let plain = label.map(|l| format!("{{{l}}}")).unwrap_or_default();
+    let count = metric_value(text, &format!("{name}_count{plain}"))
+        .unwrap_or_else(|| panic!("{name}_count{plain} missing")) as u64;
+    let sum = metric_value(text, &format!("{name}_sum{plain}"))
+        .unwrap_or_else(|| panic!("{name}_sum{plain} missing"));
+    assert_eq!(inf.expect("+Inf bucket present"), count, "{name}: +Inf == _count");
+    (count, sum)
+}
+
+/// Satellite: Prometheus exposition coherence. Histogram buckets are
+/// cumulative with `+Inf == _count`, `_sum`/`_count` are coherent, and
+/// every counter in `MetricsSummary`'s SUMMARY_FIELDS table appears
+/// exactly once as a family and once per hosted variant as a sample.
+#[test]
+fn prometheus_exposition_histograms_and_families_are_coherent() {
+    let (edge, server, _w8_calls, _controls) = boot(
+        EdgeConfig {
+            rate_per_sec: 0.0,
+            ..EdgeConfig::default()
+        },
+        None,
+        300,
+        RetryPolicy::default(),
+        None,
+    );
+    let addr = edge.local_addr().to_string();
+    let client = RemoteClient::new(&addr, RetryPolicy::default());
+    for i in 0..8 {
+        // Unique images split across both variants so every per-variant
+        // histogram has samples.
+        let route = if i % 2 == 0 { "name:w2" } else { "name:w8" };
+        client.classify(&image_of(i), Some(route), None, None).expect("classify");
+    }
+    let (status, text) = client.get("/metrics").expect("scrape");
+    assert_eq!(status, 200);
+
+    // Edge-level latency histogram: all handled requests, sum in plausible
+    // relation to count.
+    let (count, sum) = check_histogram(&text, "mpcnn_edge_latency_us", None);
+    assert!(count >= 8, "8 classifies were observed: {count}");
+    assert!(sum > 0.0 && sum >= count as f64, "microsecond sum dominates count: {sum}");
+
+    // Per-variant histograms for both hosted variants.
+    for variant in ["w2", "w8"] {
+        let label = format!("variant=\"{variant}\"");
+        let (lat_n, lat_sum) = check_histogram(&text, "mpcnn_variant_latency_us", Some(&label));
+        assert!(lat_n >= 4, "{variant} served its half of the stream: {lat_n}");
+        assert!(lat_sum > 0.0);
+        let (qw_n, _) = check_histogram(&text, "mpcnn_variant_queue_wait_us", Some(&label));
+        assert!(qw_n >= 4, "every request waited in a queue: {qw_n}");
+        let (b_n, b_sum) = check_histogram(&text, "mpcnn_variant_batch_size", Some(&label));
+        assert!(b_n >= 4, "one batch-size sample per executed batch: {b_n}");
+        assert!(b_sum >= b_n as f64, "batch sizes are >= 1: {b_sum} vs {b_n}");
+    }
+
+    // Every SUMMARY_FIELDS family: exactly one TYPE header, one labeled
+    // sample per hosted variant, counter vs gauge by the _total suffix.
+    for (name, _help, _project) in mpcnn::serving::SUMMARY_FIELDS {
+        let kind = if name.ends_with("_total") { "counter" } else { "gauge" };
+        let headers = text
+            .lines()
+            .filter(|l| *l == format!("# TYPE {name} {kind}"))
+            .count();
+        assert_eq!(headers, 1, "{name}: exactly one TYPE header");
+        let samples = text
+            .lines()
+            .filter(|l| l.starts_with(&format!("{name}{{variant=\"")))
+            .count();
+        assert_eq!(samples, 2, "{name}: one sample per hosted variant");
+    }
+    assert!(
+        metric_value(&text, "mpcnn_variant_requests_total{variant=\"w2\"}").unwrap() >= 4.0,
+        "the table's projections carry live values"
+    );
+
+    edge.shutdown();
     Arc::try_unwrap(server).expect("gateway released").shutdown();
 }
 
