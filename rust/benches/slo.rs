@@ -1,0 +1,284 @@
+//! Bench slo: what the armed SLO layer costs end to end, plus its hot
+//! paths in isolation.
+//!
+//! The same single-variant mock gateway is driven over loopback HTTP
+//! twice with identical sequential 64-request waves of unique images:
+//! once with the SLO layer off — the floor — and once with `--slo
+//! default` armed at a 50 ms sample interval, where a background sampler
+//! thread snapshots every counter into the time-series ring and runs the
+//! burn-rate + drift evaluators on each tick. The request hot path itself
+//! carries no SLO hooks (events derive from sampler deltas), so the
+//! measured overhead is only sampler-thread interference and must stay
+//! well inside the documented bound (`overhead_bound_p50`, see
+//! EXPERIMENTS.md §Observability); the perf ratchet
+//! (`python/tools/check_bench.py`) fails the build if `BENCH_slo.json`
+//! regresses. Isolation rows price one sampler tick's pieces directly:
+//! a tsdb push + 30 s window delta over a full hour-long ring, and a
+//! default-spec burn-rate evaluation fed through the alert engine.
+
+use mpcnn::edge::{EdgeConfig, EdgeServer, RemoteClient};
+use mpcnn::obs::{AlertEngine, DriftConfig, DriftDetector, EventJournal, SloSpec, Tsdb};
+use mpcnn::obs::tsdb::{EdgeCounters, GatewayCounters, Sample, VariantSample};
+use mpcnn::serving::{
+    BatcherConfig, InferenceBackend, MockBackend, RetryPolicy, Server, VariantProfile,
+    VariantSpec,
+};
+use mpcnn::util::bench::Bencher;
+use mpcnn::util::json::Json;
+use mpcnn::util::stats::LatencyHistogram;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const WAVE: usize = 64;
+const IMAGE_LEN: usize = 3072;
+const LATENCY_US: u64 = 300;
+const SAMPLE_MS: u64 = 50;
+
+fn gateway() -> Server {
+    Server::builder()
+        .retry_policy(RetryPolicy::attempts(3))
+        .variant_with_profile(
+            VariantSpec::uniform(4),
+            VariantProfile {
+                top5_accuracy: Some(89.10),
+                fpga_fps: 165.0,
+                fpga_mj_per_frame: 1.0,
+            },
+            BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                queue_capacity: 128,
+                fpga_fps_sim: 0.0,
+                ..Default::default()
+            },
+            || {
+                Ok(Box::new(MockBackend::new(IMAGE_LEN, 10, vec![1, 8], LATENCY_US))
+                    as Box<dyn InferenceBackend>)
+            },
+        )
+        .build()
+        .unwrap()
+}
+
+fn edge(server: Arc<Server>, slo: bool) -> EdgeServer {
+    EdgeServer::bind(
+        server,
+        "127.0.0.1:0",
+        EdgeConfig {
+            rate_per_sec: 0.0,     // benching the datapath, not the limiter
+            cache_capacity: 65536, // large enough that misses stay misses
+            slo: slo.then(SloSpec::default_spec),
+            sample_interval: Duration::from_millis(SAMPLE_MS),
+            ..EdgeConfig::default()
+        },
+        None,
+    )
+    .expect("edge binds")
+}
+
+/// One wave of unique images over loopback HTTP (every request reaches
+/// the gateway — no cache hits, no coalescing).
+fn wave(client: &RemoteClient, samples_us: &mut Vec<f64>, seq: &mut u64) -> u64 {
+    let mut ok = 0u64;
+    for _ in 0..WAVE {
+        *seq += 1;
+        let img = vec![*seq as f32; IMAGE_LEN];
+        let t0 = Instant::now();
+        let r = client.classify(&img, None, None, None);
+        samples_us.push(t0.elapsed().as_micros() as f64);
+        ok += r.is_ok() as u64;
+    }
+    ok
+}
+
+fn percentile(samples: &[f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.total_cmp(b));
+    s[(((s.len() - 1) as f64) * q).round() as usize]
+}
+
+/// Sequential driver, so throughput is requests over summed latency.
+fn mode_json(samples: &[f64]) -> Json {
+    let total_us: f64 = samples.iter().sum();
+    let rps = if total_us > 0.0 {
+        1e6 * samples.len() as f64 / total_us
+    } else {
+        0.0
+    };
+    Json::obj(vec![
+        ("requests", Json::num(samples.len() as f64)),
+        ("p50_us", Json::num(percentile(samples, 0.50))),
+        ("p99_us", Json::num(percentile(samples, 0.99))),
+        ("rps", Json::num(rps)),
+    ])
+}
+
+/// One cumulative sample at tick `t` for a 3-variant fleet, shaped like
+/// what the sampler collects in production.
+fn synth_sample(t: u64) -> Sample {
+    let mut lat = LatencyHistogram::default();
+    for i in 0..(t + 1) * 10 {
+        lat.record_us(250.0 + (i % 7) as f64 * 40.0);
+    }
+    let variants = ["w2", "w4", "w8"]
+        .iter()
+        .map(|name| {
+            let mut v = VariantSample::named(name);
+            v.requests = (t + 1) * 10;
+            v.responses = (t + 1) * 10;
+            v.latency_buckets = *lat.buckets();
+            v.latency_sum_us = lat.sum_us();
+            v.latency_max_us = lat.max_us();
+            v.fpga_fps = 165.0;
+            v
+        })
+        .collect();
+    Sample {
+        at_us: t * 1_000_000,
+        edge: EdgeCounters {
+            requests: (t + 1) * 30,
+            ok: (t + 1) * 30,
+            agreement_checks: (t + 1) * 30,
+            ..EdgeCounters::default()
+        },
+        gateway: GatewayCounters::default(),
+        variants,
+    }
+}
+
+/// The documented ceiling for SLO-layer overhead at p50 (fraction of the
+/// unarmed latency). Mirrored in EXPERIMENTS.md §Observability.
+const OVERHEAD_BOUND_P50: f64 = 0.50;
+
+fn main() {
+    let mut b = Bencher::new();
+
+    // --- floor: SLO layer off ---
+    let server = Arc::new(gateway());
+    let off_edge = edge(server.clone(), false);
+    let client = RemoteClient::new(&off_edge.local_addr().to_string(), RetryPolicy::attempts(3));
+    let mut off_us = Vec::new();
+    let mut seq = 0u64;
+    b.run(&format!("slo/http-unarmed-{WAVE}req-wave"), || {
+        wave(&client, &mut off_us, &mut seq)
+    });
+    off_edge.shutdown();
+    let server = Arc::try_unwrap(server).expect("edge released the gateway");
+    server.shutdown();
+
+    // --- same gateway, SLO engine armed (default spec, 50 ms sampler) ---
+    let server = Arc::new(gateway());
+    let on_edge = edge(server.clone(), true);
+    let client = RemoteClient::new(&on_edge.local_addr().to_string(), RetryPolicy::attempts(3));
+    let mut on_us = Vec::new();
+    let mut seq = 1_000_000u64; // disjoint from the unarmed images
+    b.run(&format!("slo/http-armed-{WAVE}req-wave"), || {
+        wave(&client, &mut on_us, &mut seq)
+    });
+
+    // The read side while the sampler keeps ticking: what `mpcnn top`
+    // polls every refresh.
+    b.run("slo/stats-get-30s-window", || {
+        client.get("/v1/stats?window=30s").map(|(s, _)| s).unwrap_or(0)
+    });
+    b.run("slo/alerts-get", || {
+        client.get("/v1/alerts").map(|(s, _)| s).unwrap_or(0)
+    });
+    let alerts_ok = client
+        .get("/v1/alerts")
+        .map(|(status, _)| status == 200)
+        .unwrap_or(false);
+    on_edge.shutdown();
+    let server = Arc::try_unwrap(server).expect("edge released the gateway");
+    server.shutdown();
+
+    // --- isolation: one sampler tick's pieces against a full ring ---
+    // An hour-long ring at 1 s cadence, fully populated: push must evict
+    // and window must scan the worst-case history.
+    let db = Tsdb::new(3600);
+    for t in 0..3600u64 {
+        db.push(synth_sample(t));
+    }
+    let mut t = 3600u64;
+    b.run("slo/tsdb-push-and-30s-window-3600ring", || {
+        db.push(synth_sample(t));
+        t += 1;
+        db.window(30_000_000).map(|w| w.variants.len()).unwrap_or(0)
+    });
+
+    let spec = SloSpec::default_spec();
+    let engine = AlertEngine::new();
+    let journal = EventJournal::new(1024);
+    let drift = DriftDetector::new(DriftConfig::default());
+    let mut now = 3600u64 * 1_000_000;
+    b.run("slo/evaluate-default-spec-plus-drift", || {
+        now += 1_000_000;
+        let mut signals = mpcnn::obs::slo::evaluate(&spec, &db);
+        signals.extend(drift.evaluate(&db));
+        engine.observe(now, &signals, &journal);
+        signals.len()
+    });
+
+    let off_p50 = percentile(&off_us, 0.50);
+    let on_p50 = percentile(&on_us, 0.50);
+    let off_p99 = percentile(&off_us, 0.99);
+    let on_p99 = percentile(&on_us, 0.99);
+    let overhead_p50 = if off_p50 > 0.0 { on_p50 / off_p50 - 1.0 } else { 0.0 };
+    let overhead_p99 = if off_p99 > 0.0 { on_p99 / off_p99 - 1.0 } else { 0.0 };
+    println!("\n== slo summary ==");
+    for (label, us) in [("unarmed", &off_us), ("armed  ", &on_us)] {
+        println!(
+            "  {label}: {} reqs  p50 {:.0} us  p99 {:.0} us",
+            us.len(),
+            percentile(us, 0.50),
+            percentile(us, 0.99),
+        );
+    }
+    println!(
+        "  slo overhead: {:+.1}% p50, {:+.1}% p99 (documented bound {:.0}% p50); \
+         /v1/alerts {}",
+        100.0 * overhead_p50,
+        100.0 * overhead_p99,
+        100.0 * OVERHEAD_BOUND_P50,
+        if alerts_ok { "ok" } else { "FAILED" },
+    );
+    if overhead_p50 > OVERHEAD_BOUND_P50 {
+        println!("  WARNING: SLO-layer overhead exceeds the documented p50 bound");
+    }
+    for r in &b.results {
+        println!("  {}", r.summary());
+    }
+    if std::env::var("MPCNN_BENCH_JSON").ok().as_deref() == Some("0") {
+        return;
+    }
+    let doc = Json::obj(vec![
+        (
+            "results",
+            b.to_json().get("results").cloned().unwrap_or(Json::Arr(Vec::new())),
+        ),
+        (
+            "slo",
+            Json::obj(vec![
+                ("image_len", Json::num(IMAGE_LEN as f64)),
+                ("wave", Json::num(WAVE as f64)),
+                ("backend_latency_us", Json::num(LATENCY_US as f64)),
+                ("sample_ms", Json::num(SAMPLE_MS as f64)),
+                ("unarmed", mode_json(&off_us)),
+                ("armed", mode_json(&on_us)),
+                ("overhead_p50", Json::num(overhead_p50)),
+                ("overhead_p99", Json::num(overhead_p99)),
+                ("overhead_bound_p50", Json::num(OVERHEAD_BOUND_P50)),
+                ("within_bound", Json::Bool(overhead_p50 <= OVERHEAD_BOUND_P50)),
+                ("alerts_ok", Json::Bool(alerts_ok)),
+            ]),
+        ),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_slo.json");
+    match std::fs::write(&path, doc.to_string_pretty()) {
+        Ok(()) => println!("  (wrote {})", path.display()),
+        Err(e) => eprintln!("  (could not write {}: {e})", path.display()),
+    }
+}

@@ -142,6 +142,144 @@ impl ResponseCache {
     }
 }
 
+/// One remembered deterministic rejection: the status and body the edge
+/// would compute again for the same request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NegativeEntry {
+    pub status: u16,
+    pub message: String,
+}
+
+/// Bounded LRU cache for *deterministic* 4xx refusals.
+///
+/// Some rejections are pure functions of the request: an unknown variant
+/// name stays unknown until the registry changes, and a pinned-route
+/// image-shape mismatch stays wrong for that `(selector, image_len)`
+/// forever. Re-deriving those through route resolution (and, for shape
+/// errors, through the whole gateway queue) on every repeat is wasted
+/// work; a misbehaving client retrying a bad request in a loop would get
+/// amplified into backend load. This cache short-circuits them.
+///
+/// Deliberately separate from [`ResponseCache`]: different key shape
+/// (selector + image length, not content hash), different capacity, and
+/// 4xx entries must never compete with real answers for cache space.
+/// Non-deterministic refusals (429 rate limits, 503 shed, load-dependent
+/// anything) must NOT be inserted — policy enforced at the call site in
+/// `handlers`.
+pub struct NegativeCache {
+    capacity: usize,
+    inner: Mutex<NegativeInner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    insertions: AtomicU64,
+    evictions: AtomicU64,
+}
+
+struct NegativeInner {
+    map: HashMap<Key, NegativeEntry>,
+    order: VecDeque<Key>,
+}
+
+/// Key for a negative entry: the selector string and the image *length*
+/// (shape errors depend only on length, never on pixel values).
+pub fn negative_key(selector: &str, image_len: usize) -> Key {
+    let mut bytes = Vec::with_capacity(selector.len() + 9);
+    bytes.extend_from_slice(selector.as_bytes());
+    bytes.push(0);
+    bytes.extend_from_slice(&(image_len as u64).to_le_bytes());
+    sha256(&bytes)
+}
+
+impl NegativeCache {
+    /// `capacity == 0` disables negative caching entirely.
+    pub fn new(capacity: usize) -> NegativeCache {
+        NegativeCache {
+            capacity,
+            inner: Mutex::new(NegativeInner {
+                map: HashMap::new(),
+                order: VecDeque::new(),
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            insertions: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    pub fn get(&self, key: &Key) -> Option<NegativeEntry> {
+        if self.capacity == 0 {
+            return None;
+        }
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        match inner.map.get(key).cloned() {
+            Some(entry) => {
+                if let Some(pos) = inner.order.iter().position(|k| k == key) {
+                    inner.order.remove(pos);
+                    inner.order.push_back(*key);
+                }
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(entry)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    pub fn insert(&self, key: Key, status: u16, message: impl Into<String>) {
+        if self.capacity == 0 {
+            return;
+        }
+        let entry = NegativeEntry {
+            status,
+            message: message.into(),
+        };
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if inner.map.insert(key, entry).is_none() {
+            inner.order.push_back(key);
+        }
+        self.insertions.fetch_add(1, Ordering::Relaxed);
+        while inner.map.len() > self.capacity {
+            match inner.order.pop_front() {
+                Some(oldest) => {
+                    inner.map.remove(&oldest);
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                None => break,
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .map
+            .len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn insertions(&self) -> u64 {
+        self.insertions.load(Ordering::Relaxed)
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -210,5 +348,44 @@ mod tests {
         assert_eq!(c.len(), 1);
         assert_eq!(c.get(&k).unwrap().class, 2);
         assert_eq!(c.evictions(), 0);
+    }
+
+    #[test]
+    fn negative_key_separates_selector_and_length() {
+        assert_ne!(negative_key("exact:2", 3072), negative_key("exact:4", 3072));
+        assert_ne!(negative_key("exact:2", 3072), negative_key("exact:2", 3073));
+        assert_eq!(negative_key("exact:2", 3072), negative_key("exact:2", 3072));
+    }
+
+    #[test]
+    fn negative_cache_hits_and_evicts_lru() {
+        let c = NegativeCache::new(2);
+        let k1 = negative_key("exact:9", 10);
+        let k2 = negative_key("name:ghost", 10);
+        let k3 = negative_key("exact:9", 11);
+        assert!(c.get(&k1).is_none());
+        c.insert(k1, 404, "no such variant: exact:9\n");
+        c.insert(k2, 404, "no such variant: ghost\n");
+        let hit = c.get(&k1).unwrap();
+        assert_eq!(hit.status, 404);
+        assert!(hit.message.contains("exact:9"));
+        // k2 is now LRU; inserting k3 must evict it.
+        c.insert(k3, 400, "bad input: image length 11\n");
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.evictions(), 1);
+        assert!(c.get(&k2).is_none());
+        assert!(c.get(&k1).is_some());
+        assert_eq!((c.hits(), c.insertions()), (2, 3));
+    }
+
+    #[test]
+    fn negative_cache_zero_capacity_disables() {
+        let c = NegativeCache::new(0);
+        let k = negative_key("exact:9", 10);
+        c.insert(k, 404, "x");
+        assert!(c.get(&k).is_none());
+        assert_eq!(c.insertions(), 0);
+        assert_eq!(c.misses(), 0, "disabled cache does not count misses");
+        assert!(c.is_empty());
     }
 }

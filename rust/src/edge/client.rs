@@ -1,6 +1,14 @@
 //! `RemoteClient` — the std-only HTTP/1.1 client behind
-//! `mpcnn classify --remote`, also used by the integration tests and the
-//! edge bench.
+//! `mpcnn classify --remote` and `mpcnn top`, also used by the
+//! integration tests and the edge bench.
+//!
+//! **Keep-alive:** the client holds one pooled connection and reuses it
+//! across requests (classify loops, `top`'s poll cycle). A stale pooled
+//! socket — the server idled it out between polls — is detected by the
+//! failed exchange and replaced with a fresh connect *within the same
+//! attempt*, so connection reuse never costs an attempt from the retry
+//! budget. A connection goes back in the pool only when the response was
+//! `Content-Length`-framed and the server didn't say `Connection: close`.
 //!
 //! Connection-level failures (refused, reset, timed out socket) are
 //! retried under the serving [`RetryPolicy`]'s attempt budget and
@@ -14,6 +22,9 @@ use crate::anyhow;
 use crate::serving::RetryPolicy;
 use crate::util::error::Result;
 use crate::util::json::Json;
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::sync::Mutex;
 use std::time::Duration;
 
 /// A parsed successful `/v1/classify` response.
@@ -32,6 +43,8 @@ pub struct RemoteClient {
     addr: String,
     pub retry: RetryPolicy,
     pub timeout: Duration,
+    /// One idle keep-alive connection, reused by the next request.
+    pool: Mutex<Option<BufReader<TcpStream>>>,
 }
 
 impl RemoteClient {
@@ -42,6 +55,7 @@ impl RemoteClient {
             addr: addr.trim_end_matches('/').to_string(),
             retry,
             timeout: Duration::from_secs(30),
+            pool: Mutex::new(None),
         }
     }
 
@@ -89,6 +103,14 @@ impl RemoteClient {
         Ok((resp.status, resp.body_text()))
     }
 
+    fn take_pooled(&self) -> Option<BufReader<TcpStream>> {
+        self.pool.lock().unwrap_or_else(|e| e.into_inner()).take()
+    }
+
+    fn put_pooled(&self, conn: BufReader<TcpStream>) {
+        *self.pool.lock().unwrap_or_else(|e| e.into_inner()) = Some(conn);
+    }
+
     fn send_with_retry(
         &self,
         method: &str,
@@ -97,6 +119,7 @@ impl RemoteClient {
     ) -> Result<http::ClientResponse> {
         let attempts = self.retry.max_attempts.max(1);
         let mut last: Option<std::io::Error> = None;
+        let headers = [("Content-Type", "application/json")];
         for attempt in 0..attempts {
             if attempt > 0 {
                 let backoff = self.retry.backoff_before(attempt);
@@ -104,9 +127,41 @@ impl RemoteClient {
                     std::thread::sleep(backoff);
                 }
             }
-            let headers = [("Content-Type", "application/json")];
-            match http::request(&self.addr, method, path, &headers, body, self.timeout) {
-                Ok(r) => return Ok(r),
+            // Reuse the pooled keep-alive connection first. A stale pool
+            // (the server closed the idle socket) falls through to a fresh
+            // connect below WITHOUT consuming this attempt: the request
+            // never reached a live server, and idling out is the normal
+            // fate of a pooled connection, not a server failure.
+            if let Some(mut conn) = self.take_pooled() {
+                if let Ok((resp, reusable)) =
+                    http::exchange(&mut conn, &self.addr, method, path, &headers, body, true)
+                {
+                    if reusable {
+                        self.put_pooled(conn);
+                    }
+                    return Ok(resp);
+                }
+            }
+            match http::connect(&self.addr, self.timeout) {
+                Ok(mut conn) => {
+                    match http::exchange(
+                        &mut conn,
+                        &self.addr,
+                        method,
+                        path,
+                        &headers,
+                        body,
+                        true,
+                    ) {
+                        Ok((resp, reusable)) => {
+                            if reusable {
+                                self.put_pooled(conn);
+                            }
+                            return Ok(resp);
+                        }
+                        Err(e) => last = Some(e),
+                    }
+                }
                 Err(e) => last = Some(e),
             }
         }
@@ -181,5 +236,110 @@ mod tests {
         let client = RemoteClient::new("127.0.0.1:1", RetryPolicy::attempts(2));
         let e = client.get("/healthz").unwrap_err().to_string();
         assert!(e.contains("2 attempt"), "{e}");
+    }
+
+    /// Read one request head (requests here carry no body) off a raw
+    /// socket; panics if the peer closes first.
+    fn read_head(s: &mut std::net::TcpStream) {
+        use std::io::Read;
+        let mut seen = Vec::new();
+        let mut buf = [0u8; 1024];
+        loop {
+            let n = s.read(&mut buf).expect("server read");
+            assert!(n > 0, "client closed before sending a full request");
+            seen.extend_from_slice(&buf[..n]);
+            if seen.windows(4).any(|w| w == b"\r\n\r\n") {
+                return;
+            }
+        }
+    }
+
+    #[test]
+    fn keep_alive_reuses_one_connection() {
+        use std::io::Write;
+        use std::net::TcpListener;
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let conns = Arc::new(AtomicUsize::new(0));
+        let server_conns = conns.clone();
+        let server = std::thread::spawn(move || {
+            // One accepted connection must carry both requests.
+            let (mut s, _) = listener.accept().unwrap();
+            server_conns.fetch_add(1, Ordering::SeqCst);
+            for _ in 0..2 {
+                read_head(&mut s);
+                s.write_all(b"HTTP/1.1 200 OK\r\nContent-Length: 2\r\n\r\nok")
+                    .unwrap();
+            }
+        });
+
+        let client = RemoteClient::new(&addr, RetryPolicy::attempts(1));
+        let (s1, b1) = client.get("/healthz").unwrap();
+        let (s2, b2) = client.get("/healthz").unwrap();
+        server.join().unwrap();
+        assert_eq!((s1, s2), (200, 200));
+        assert_eq!((b1.as_str(), b2.as_str()), ("ok", "ok"));
+        assert_eq!(
+            conns.load(Ordering::SeqCst),
+            1,
+            "second request must ride the pooled connection"
+        );
+    }
+
+    #[test]
+    fn stale_pooled_connection_recovers_without_spending_an_attempt() {
+        use std::io::Write;
+        use std::net::TcpListener;
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            // Two connections: each answers one framed (poolable) response
+            // and then closes, so the pooled socket is stale by the time
+            // the client's next request tries it.
+            for _ in 0..2 {
+                let (mut s, _) = listener.accept().unwrap();
+                read_head(&mut s);
+                s.write_all(b"HTTP/1.1 200 OK\r\nContent-Length: 2\r\n\r\nok")
+                    .unwrap();
+            }
+        });
+
+        // attempts(1): the stale-pool failure must fall through to a fresh
+        // connect within the SAME attempt, or this second get would error.
+        let client = RemoteClient::new(&addr, RetryPolicy::attempts(1));
+        assert_eq!(client.get("/a").unwrap().0, 200);
+        assert_eq!(client.get("/b").unwrap().0, 200);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn eof_framed_response_is_not_pooled() {
+        use std::io::Write;
+        use std::net::TcpListener;
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            // First response has no Content-Length: EOF-framed, so the
+            // client must NOT pool the connection; the second request gets
+            // a fresh one.
+            let (mut s, _) = listener.accept().unwrap();
+            read_head(&mut s);
+            s.write_all(b"HTTP/1.1 200 OK\r\n\r\nok").unwrap();
+            drop(s);
+            let (mut s, _) = listener.accept().unwrap();
+            read_head(&mut s);
+            s.write_all(b"HTTP/1.1 200 OK\r\nContent-Length: 2\r\n\r\nok")
+                .unwrap();
+        });
+
+        let client = RemoteClient::new(&addr, RetryPolicy::attempts(1));
+        assert_eq!(client.get("/a").unwrap().1.as_str(), "ok");
+        assert_eq!(client.get("/b").unwrap().0, 200);
+        server.join().unwrap();
     }
 }

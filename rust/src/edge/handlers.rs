@@ -9,9 +9,10 @@
 
 use super::coalescing::Join;
 use super::http::{HttpRequest, HttpResponse};
-use super::{cache, metrics, Answer, EdgeState};
+use super::{cache, metrics, Answer, EdgeState, ObsRuntime};
+use crate::obs::tsdb::{breaker_name, health_name};
 use crate::obs::{chrome_export, TraceHandle};
-use crate::serving::{BackendHealth, InferRequest, RouteError, VariantSelector};
+use crate::serving::{BackendHealth, Forced, InferRequest, RouteError, VariantSelector};
 use crate::util::json::Json;
 use std::time::{Duration, Instant};
 
@@ -36,8 +37,15 @@ pub fn handle(state: &EdgeState, req: &HttpRequest, peer: &str) -> HttpResponse 
         ("GET", "/v1/trace") => trace_index(state),
         ("GET", "/v1/trace/export") => trace_export(state),
         ("GET", p) if p.starts_with("/v1/trace/") => trace_get(state, &p["/v1/trace/".len()..]),
-        ("GET", "/v1/classify") | ("POST", "/healthz") | ("POST", "/metrics")
-        | ("POST", "/v1/trace") => HttpResponse::text(405, "method not allowed\n"),
+        ("GET", "/v1/alerts") => alerts(state),
+        ("GET", "/v1/events") => events(state),
+        ("GET", p) if p == "/v1/stats" || p.starts_with("/v1/stats?") => stats(state, p),
+        ("POST", "/v1/fault") => fault_override(state, req),
+        ("GET", "/v1/classify") | ("GET", "/v1/fault") | ("POST", "/healthz")
+        | ("POST", "/metrics") | ("POST", "/v1/trace") | ("POST", "/v1/alerts")
+        | ("POST", "/v1/events") | ("POST", "/v1/stats") => {
+            HttpResponse::text(405, "method not allowed\n")
+        }
         (m, p) => HttpResponse::text(404, format!("no route for {m} {p}\n")),
     }
 }
@@ -85,8 +93,23 @@ fn healthz(state: &EdgeState) -> HttpResponse {
 struct ClassifyBody {
     image: Vec<f32>,
     selector: VariantSelector,
+    /// The selector as the client wrote it (`"default"` when omitted) —
+    /// the negative cache's key alongside the image length.
+    route_raw: String,
     deadline: Option<Duration>,
     client: Option<String>,
+}
+
+impl ClassifyBody {
+    /// Pinned selectors never re-route, so a shape mismatch against them
+    /// is deterministic and safe to negative-cache. Policy selectors may
+    /// resolve differently under load and must be re-derived every time.
+    fn pinned(&self) -> bool {
+        matches!(
+            self.selector,
+            VariantSelector::Exact(_) | VariantSelector::Named(_)
+        )
+    }
 }
 
 fn parse_body(raw: &[u8]) -> std::result::Result<ClassifyBody, String> {
@@ -103,9 +126,12 @@ fn parse_body(raw: &[u8]) -> std::result::Result<ClassifyBody, String> {
     if image.is_empty() {
         return Err("\"image\" must not be empty".to_string());
     }
-    let selector = match j.get("route").and_then(|v| v.as_str()) {
-        Some(s) => VariantSelector::parse(s).map_err(|e| format!("bad \"route\": {e}"))?,
-        None => VariantSelector::Default,
+    let (selector, route_raw) = match j.get("route").and_then(|v| v.as_str()) {
+        Some(s) => (
+            VariantSelector::parse(s).map_err(|e| format!("bad \"route\": {e}"))?,
+            s.to_string(),
+        ),
+        None => (VariantSelector::Default, "default".to_string()),
     };
     let deadline = j
         .get("deadline_ms")
@@ -119,6 +145,7 @@ fn parse_body(raw: &[u8]) -> std::result::Result<ClassifyBody, String> {
     Ok(ClassifyBody {
         image,
         selector,
+        route_raw,
         deadline,
         client,
     })
@@ -180,6 +207,206 @@ fn trace_get(state: &EdgeState, id: &str) -> HttpResponse {
         Some(t) => HttpResponse::json(200, &t.to_json()),
         None => HttpResponse::text(404, format!("no trace {id} (ring may have lapped it)\n")),
     }
+}
+
+fn slo_unavailable() -> HttpResponse {
+    HttpResponse::text(404, "the SLO layer is off (start the edge with --slo)\n")
+}
+
+/// `GET /v1/alerts`: every alert's state machine + burn rates, plus the
+/// currently-firing set.
+fn alerts(state: &EdgeState) -> HttpResponse {
+    match &state.obs {
+        Some(obs) => HttpResponse::json(200, &obs.engine.alerts_json()),
+        None => slo_unavailable(),
+    }
+}
+
+/// `GET /v1/events`: the structured event journal as JSONL, oldest first —
+/// alert transitions, worker restarts, breaker flips, health changes,
+/// fault overrides. Every line carries `ts_us`, `seq`, and `kind`.
+fn events(state: &EdgeState) -> HttpResponse {
+    match &state.obs {
+        Some(obs) => HttpResponse::new(
+            200,
+            "application/x-ndjson; charset=utf-8",
+            obs.journal.jsonl().into_bytes(),
+        ),
+        None => slo_unavailable(),
+    }
+}
+
+/// Parse the `window=` query parameter: `1500ms`, `30s`, `5m`, `1h`, or
+/// bare seconds. Defaults to 30 s when absent.
+fn parse_window_us(path: &str) -> std::result::Result<u64, String> {
+    const DEFAULT_US: u64 = 30_000_000;
+    let Some(query) = path.splitn(2, '?').nth(1) else {
+        return Ok(DEFAULT_US);
+    };
+    for pair in query.split('&') {
+        let Some((k, v)) = pair.split_once('=') else {
+            continue;
+        };
+        if k != "window" {
+            continue;
+        }
+        let (digits, scale) = if let Some(d) = v.strip_suffix("ms") {
+            (d, 1_000u64)
+        } else if let Some(d) = v.strip_suffix('s') {
+            (d, 1_000_000)
+        } else if let Some(d) = v.strip_suffix('m') {
+            (d, 60_000_000)
+        } else if let Some(d) = v.strip_suffix('h') {
+            (d, 3_600_000_000)
+        } else {
+            (v, 1_000_000)
+        };
+        return match digits.parse::<u64>() {
+            Ok(n) if n > 0 => Ok(n.saturating_mul(scale)),
+            _ => Err(format!("bad window {v:?} (use e.g. 30s, 5m, 1500ms)")),
+        };
+    }
+    Ok(DEFAULT_US)
+}
+
+/// `GET /v1/stats?window=30s`: per-variant rates and quantiles over the
+/// requested lookback, derived from the time-series ring — the payload
+/// `mpcnn top` renders.
+fn stats(state: &EdgeState, path: &str) -> HttpResponse {
+    let Some(obs) = &state.obs else {
+        return slo_unavailable();
+    };
+    match parse_window_us(path) {
+        Ok(lookback_us) => HttpResponse::json(200, &stats_json(obs, lookback_us)),
+        Err(e) => HttpResponse::text(400, format!("{e}\n")),
+    }
+}
+
+fn stats_json(obs: &ObsRuntime, lookback_us: u64) -> Json {
+    let firing = obs.engine.firing();
+    let mut pairs = vec![
+        ("requested_window_us", Json::num(lookback_us as f64)),
+        ("retained_span_us", Json::num(obs.tsdb.span_us() as f64)),
+        ("samples", Json::num(obs.tsdb.len() as f64)),
+        (
+            "firing",
+            Json::Arr(firing.into_iter().map(Json::str).collect()),
+        ),
+    ];
+    let Some(w) = obs.tsdb.window(lookback_us) else {
+        // Fewer than two samples retained: nothing to delta yet.
+        pairs.push(("ready", Json::Bool(false)));
+        return Json::obj(pairs);
+    };
+    let secs = (w.span_us as f64 / 1e6).max(1e-9);
+    pairs.push(("ready", Json::Bool(true)));
+    pairs.push(("window_us", Json::num(w.span_us as f64)));
+    pairs.push(("at_us", Json::num(w.at_us as f64)));
+    pairs.push((
+        "edge",
+        Json::obj(vec![
+            ("requests", Json::num(w.edge.requests as f64)),
+            ("rps", Json::num(w.edge.requests as f64 / secs)),
+            ("ok", Json::num(w.edge.ok as f64)),
+            ("client_errors", Json::num(w.edge.client_errors as f64)),
+            ("server_errors", Json::num(w.edge.server_errors as f64)),
+            ("rate_limited", Json::num(w.edge.rate_limited as f64)),
+            ("admission_shed", Json::num(w.edge.admission_shed as f64)),
+            ("cache_hits", Json::num(w.edge.cache_hits as f64)),
+            ("negative_hits", Json::num(w.edge.negative_hits as f64)),
+            ("agreement_checks", Json::num(w.edge.agreement_checks as f64)),
+            (
+                "agreement_failures",
+                Json::num(w.edge.agreement_failures as f64),
+            ),
+        ]),
+    ));
+    pairs.push((
+        "gateway",
+        Json::obj(vec![
+            ("shed", Json::num(w.gateway.shed as f64)),
+            ("panics", Json::num(w.gateway.panics as f64)),
+            (
+                "worker_restarts",
+                Json::num(w.gateway.worker_restarts as f64),
+            ),
+            ("retried", Json::num(w.gateway.retried as f64)),
+            ("hedged", Json::num(w.gateway.hedged as f64)),
+            ("fallbacks", Json::num(w.gateway.fallbacks as f64)),
+        ]),
+    ));
+    pairs.push((
+        "variants",
+        Json::Arr(
+            w.variants
+                .iter()
+                .map(|v| {
+                    Json::obj(vec![
+                        ("name", Json::str(v.name.clone())),
+                        ("rps", Json::num(v.rps)),
+                        ("responses", Json::num(v.responses as f64)),
+                        ("errors", Json::num(v.errors as f64)),
+                        (
+                            "shed",
+                            Json::num((v.shed_admission + v.shed_expired) as f64),
+                        ),
+                        ("worker_restarts", Json::num(v.worker_restarts as f64)),
+                        ("p50_us", Json::num(v.latency.percentile_us(50.0))),
+                        ("p99_us", Json::num(v.latency.percentile_us(99.0))),
+                        ("queue_p50_us", Json::num(v.queue_wait.percentile_us(50.0))),
+                        ("queue_p99_us", Json::num(v.queue_wait.percentile_us(99.0))),
+                        ("ewma_us", Json::num(v.ewma_us)),
+                        ("fpga_fps", Json::num(v.fpga_fps)),
+                        ("health", Json::str(health_name(v.health))),
+                        ("breaker", Json::str(breaker_name(v.breaker))),
+                    ])
+                })
+                .collect(),
+        ),
+    ));
+    Json::obj(pairs)
+}
+
+/// `POST /v1/fault` with `{"force":"none"|"error"|"panic"|"corrupt"}`:
+/// flip the live fault-injection override. Exists so the CI smoke test
+/// (and an operator) can lift a seeded fault and watch the alerts resolve
+/// *without a restart*. 404 unless the edge was started with `--fault`.
+fn fault_override(state: &EdgeState, req: &HttpRequest) -> HttpResponse {
+    let Some(controls) = state.fault_controls() else {
+        return HttpResponse::text(404, "no fault injection active (start with --fault)\n");
+    };
+    let force = std::str::from_utf8(&req.body)
+        .ok()
+        .and_then(|t| crate::util::json::parse(t).ok())
+        .and_then(|j| j.get("force").and_then(|v| v.as_str()).map(str::to_string));
+    let forced = match force.as_deref() {
+        Some("none") => Forced::None,
+        Some("error") => Forced::Error,
+        Some("panic") => Forced::Panic,
+        Some("corrupt") => Forced::Corrupt,
+        _ => {
+            return HttpResponse::text(
+                400,
+                "body must be {\"force\":\"none|error|panic|corrupt\"}\n",
+            )
+        }
+    };
+    let name = force.unwrap_or_default();
+    controls.force(forced);
+    if let Some(obs) = &state.obs {
+        obs.journal.record(
+            super::now_unix_us(),
+            "fault_override",
+            vec![("force", Json::str(name.clone()))],
+        );
+    }
+    HttpResponse::json(
+        200,
+        &Json::obj(vec![
+            ("force", Json::str(name)),
+            ("injected_total", Json::num(controls.injected_total() as f64)),
+        ]),
+    )
 }
 
 fn answer_response(a: &Answer, cached: bool, coalesced: bool) -> HttpResponse {
@@ -281,13 +508,26 @@ fn classify_traced(
         vec![("outcome", "admitted".to_string())],
     );
 
+    // Deterministic-refusal fast path: a remembered unknown-variant or
+    // pinned shape-mismatch 4xx answers here, before route resolution and
+    // the gateway ever see the repeat.
+    let neg_key = cache::negative_key(&body.route_raw, body.image.len());
+    if let Some(neg) = state.negative.get(&neg_key) {
+        trace.add_event("negative.hit", Instant::now(), vec![]);
+        return HttpResponse::text(neg.status, neg.message);
+    }
+
     // Resolve the route once so the cache/coalescing key names the
     // concrete variant this request would land on.
     let t_route = Instant::now();
     let variant = match state.server.route(&body.selector) {
         Ok(v) => v,
         Err(RouteError::NoSuchVariant(what)) => {
-            return HttpResponse::text(404, format!("no such variant: {what}\n"));
+            // Unknown variants are deterministic for *any* selector form:
+            // the registry is fixed at boot.
+            let msg = format!("no such variant: {what}\n");
+            state.negative.insert(neg_key, 404, msg.clone());
+            return HttpResponse::text(404, msg);
         }
         Err(e) => return HttpResponse::text(503, format!("unroutable: {e}\n")).retry_after_secs(1),
     };
@@ -362,8 +602,17 @@ fn classify_traced(
                 // Cache only reference-agreeing successes; a corrupt
                 // response must never become a sticky wrong answer. Keyed
                 // under the variant that actually answered (retries may
-                // have re-routed past the resolved one).
-                let cacheable = state.check.as_ref().map_or(true, |c| c(&body.image, a));
+                // have re-routed past the resolved one). Every comparison
+                // also feeds the agreement-rate SLI the accuracy-drift
+                // watchdog consumes.
+                let cacheable = match &state.check {
+                    Some(c) => {
+                        let agreed = c(&body.image, a);
+                        state.metrics.note_agreement(agreed);
+                        agreed
+                    }
+                    None => true,
+                };
                 if cacheable {
                     state
                         .cache
@@ -376,7 +625,20 @@ fn classify_traced(
             let t_resp = Instant::now();
             let resp = match outcome {
                 Ok(a) => answer_response(&a, false, false),
-                Err(e) => error_response(&e),
+                Err(e) => {
+                    let resp = error_response(&e);
+                    // A 400 against a pinned selector is a deterministic
+                    // shape mismatch — remember it so the retry loop stops
+                    // reaching the gateway.
+                    if resp.status == 400 && body.pinned() {
+                        state.negative.insert(
+                            neg_key,
+                            400,
+                            String::from_utf8_lossy(&resp.body).into_owned(),
+                        );
+                    }
+                    resp
+                }
             };
             trace.add_span("respond", t_resp, Instant::now(), vec![]);
             resp
@@ -408,6 +670,36 @@ mod tests {
         assert!(parse_body(br#"{"image":["x"]}"#).is_err());
         assert!(parse_body(br#"{"route":"exact:2"}"#).is_err());
         assert!(parse_body(br#"{"image":[1],"route":"exact:nope"}"#).is_err());
+    }
+
+    #[test]
+    fn window_parsing_units_and_default() {
+        assert_eq!(parse_window_us("/v1/stats").unwrap(), 30_000_000);
+        assert_eq!(parse_window_us("/v1/stats?window=30s").unwrap(), 30_000_000);
+        assert_eq!(parse_window_us("/v1/stats?window=5m").unwrap(), 300_000_000);
+        assert_eq!(parse_window_us("/v1/stats?window=1500ms").unwrap(), 1_500_000);
+        assert_eq!(
+            parse_window_us("/v1/stats?window=1h").unwrap(),
+            3_600_000_000
+        );
+        assert_eq!(parse_window_us("/v1/stats?window=45").unwrap(), 45_000_000);
+        assert_eq!(parse_window_us("/v1/stats?other=1&window=2s").unwrap(), 2_000_000);
+        assert!(parse_window_us("/v1/stats?window=0s").is_err());
+        assert!(parse_window_us("/v1/stats?window=soon").is_err());
+    }
+
+    #[test]
+    fn pinned_selectors_only() {
+        let pinned = parse_body(br#"{"image":[1],"route":"exact:2"}"#).unwrap();
+        assert!(pinned.pinned());
+        assert_eq!(pinned.route_raw, "exact:2");
+        let policy = parse_body(br#"{"image":[1],"route":"min_accuracy:90"}"#);
+        if let Ok(policy) = policy {
+            assert!(!policy.pinned());
+        }
+        let default = parse_body(br#"{"image":[1]}"#).unwrap();
+        assert!(!default.pinned());
+        assert_eq!(default.route_raw, "default");
     }
 
     #[test]

@@ -204,40 +204,56 @@ impl ClientResponse {
     }
 }
 
-/// One blocking HTTP/1.1 exchange: connect, send, read the full response,
-/// close (`Connection: close` is always sent). Connection-level failures
-/// surface as `io::Error` so callers can distinguish "server unreachable"
-/// (retryable) from an HTTP error status (not retryable here — the server
-/// already ran its own retry/hedge policy).
-pub fn request(
+/// Open one client connection with timeouts applied, ready for
+/// [`exchange`]. Returned buffered so pipelined keep-alive responses
+/// that arrive together are not lost between exchanges.
+pub fn connect(addr: &str, timeout: Duration) -> std::io::Result<BufReader<TcpStream>> {
+    let stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    let _ = stream.set_nodelay(true);
+    Ok(BufReader::new(stream))
+}
+
+/// One blocking HTTP/1.1 exchange over an established connection: send
+/// the request, read the full response. With `keep_alive` the connection
+/// is reusable for another exchange afterwards — but only if the returned
+/// flag says so: a response without `Content-Length` is framed by EOF,
+/// and a server `Connection: close` means the peer is done either way.
+///
+/// Connection-level failures surface as `io::Error` so callers can
+/// distinguish "server unreachable / stale socket" (retryable) from an
+/// HTTP error status (not retryable here — the server already ran its own
+/// retry/hedge policy).
+pub fn exchange(
+    conn: &mut BufReader<TcpStream>,
     addr: &str,
     method: &str,
     path: &str,
     headers: &[(&str, &str)],
     body: &[u8],
-    timeout: Duration,
-) -> std::io::Result<ClientResponse> {
-    let mut stream = TcpStream::connect(addr)?;
-    stream.set_read_timeout(Some(timeout))?;
-    stream.set_write_timeout(Some(timeout))?;
-    let _ = stream.set_nodelay(true);
-
+    keep_alive: bool,
+) -> std::io::Result<(ClientResponse, bool)> {
     let mut head = String::with_capacity(256);
     head.push_str(&format!("{method} {path} HTTP/1.1\r\n"));
     head.push_str(&format!("Host: {addr}\r\n"));
-    head.push_str("Connection: close\r\n");
+    if !keep_alive {
+        head.push_str("Connection: close\r\n");
+    }
     head.push_str(&format!("Content-Length: {}\r\n", body.len()));
     for (k, v) in headers {
         head.push_str(&format!("{k}: {v}\r\n"));
     }
     head.push_str("\r\n");
-    stream.write_all(head.as_bytes())?;
-    stream.write_all(body)?;
-    stream.flush()?;
+    {
+        let stream = conn.get_mut();
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(body)?;
+        stream.flush()?;
+    }
 
-    let mut reader = BufReader::new(stream);
     let mut status_line = String::new();
-    reader.read_line(&mut status_line)?;
+    conn.read_line(&mut status_line)?;
     let status = status_line
         .split_whitespace()
         .nth(1)
@@ -252,7 +268,7 @@ pub fn request(
     let mut resp_headers = Vec::new();
     loop {
         let mut h = String::new();
-        if reader.read_line(&mut h)? == 0 {
+        if conn.read_line(&mut h)? == 0 {
             return Err(std::io::Error::new(
                 std::io::ErrorKind::UnexpectedEof,
                 "eof inside response headers",
@@ -275,18 +291,42 @@ pub fn request(
     match content_length {
         Some(n) => {
             resp_body.resize(n, 0);
-            reader.read_exact(&mut resp_body)?;
+            conn.read_exact(&mut resp_body)?;
         }
-        // Connection: close framing — read to EOF.
+        // No Content-Length: the body is framed by EOF, so the connection
+        // is spent regardless of what anyone asked for.
         None => {
-            reader.read_to_end(&mut resp_body)?;
+            conn.read_to_end(&mut resp_body)?;
         }
     }
-    Ok(ClientResponse {
-        status,
-        headers: resp_headers,
-        body: resp_body,
-    })
+    let server_close = resp_headers
+        .iter()
+        .any(|(k, v)| k.eq_ignore_ascii_case("connection") && v.eq_ignore_ascii_case("close"));
+    let reusable = keep_alive && content_length.is_some() && !server_close;
+    Ok((
+        ClientResponse {
+            status,
+            headers: resp_headers,
+            body: resp_body,
+        },
+        reusable,
+    ))
+}
+
+/// One-shot convenience: connect, exchange with `Connection: close`,
+/// drop the socket. The keep-alive pooling lives in
+/// [`super::client::RemoteClient`].
+pub fn request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: &[u8],
+    timeout: Duration,
+) -> std::io::Result<ClientResponse> {
+    let mut conn = connect(addr, timeout)?;
+    let (resp, _reusable) = exchange(&mut conn, addr, method, path, headers, body, false)?;
+    Ok(resp)
 }
 
 #[cfg(test)]

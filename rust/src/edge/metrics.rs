@@ -7,7 +7,7 @@
 //! [`RobustnessReport`] structs the CLI report consumes — one export
 //! surface, two renderings.
 
-use super::{Coalescer, EdgeState, ResponseCache};
+use super::{Coalescer, EdgeState, NegativeCache, ResponseCache};
 use crate::serving::BackendHealth;
 use crate::util::stats::LatencyHistogram;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -25,6 +25,8 @@ pub struct EdgeMetrics {
     queue_shed: AtomicU64,
     bad_requests: AtomicU64,
     classify_requests: AtomicU64,
+    agreement_checks: AtomicU64,
+    agreement_failures: AtomicU64,
     latency: Mutex<LatencyHistogram>,
 }
 
@@ -46,6 +48,8 @@ impl EdgeMetrics {
             queue_shed: AtomicU64::new(0),
             bad_requests: AtomicU64::new(0),
             classify_requests: AtomicU64::new(0),
+            agreement_checks: AtomicU64::new(0),
+            agreement_failures: AtomicU64::new(0),
             latency: Mutex::new(LatencyHistogram::default()),
         }
     }
@@ -85,15 +89,30 @@ impl EdgeMetrics {
         self.bad_requests.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// One response compared against the xmp reference model. The
+    /// agreement *rate* (1 - failures/checks) is the accuracy-drift
+    /// watchdog's and the agreement SLO's raw signal.
+    pub fn note_agreement(&self, agreed: bool) {
+        self.agreement_checks.fetch_add(1, Ordering::Relaxed);
+        if !agreed {
+            self.agreement_failures.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
     /// Copy of the request-latency histogram for the Prometheus
     /// `_bucket`/`_sum`/`_count` exposition.
     pub fn latency_histogram(&self) -> LatencyHistogram {
         self.latency.lock().unwrap_or_else(|e| e.into_inner()).clone()
     }
 
-    /// Flatten every edge counter (cache and coalescing ledgers included)
-    /// into a plain-number snapshot.
-    pub fn snapshot(&self, cache: &ResponseCache, coalescer: &Coalescer) -> EdgeSnapshot {
+    /// Flatten every edge counter (cache, negative-cache, and coalescing
+    /// ledgers included) into a plain-number snapshot.
+    pub fn snapshot(
+        &self,
+        cache: &ResponseCache,
+        negative: &NegativeCache,
+        coalescer: &Coalescer,
+    ) -> EdgeSnapshot {
         let (p50_us, p99_us) = {
             let h = self.latency.lock().unwrap_or_else(|e| e.into_inner());
             (h.percentile_us(50.0), h.percentile_us(99.0))
@@ -108,6 +127,8 @@ impl EdgeMetrics {
             queue_shed: self.queue_shed.load(Ordering::Relaxed),
             bad_requests: self.bad_requests.load(Ordering::Relaxed),
             classify_requests: self.classify_requests.load(Ordering::Relaxed),
+            agreement_checks: self.agreement_checks.load(Ordering::Relaxed),
+            agreement_failures: self.agreement_failures.load(Ordering::Relaxed),
             coalesce_leaders: coalescer.leaders(),
             coalesce_joined: coalescer.joined(),
             cache_hits: cache.hits(),
@@ -115,6 +136,10 @@ impl EdgeMetrics {
             cache_insertions: cache.insertions(),
             cache_evictions: cache.evictions(),
             cache_uncacheable: cache.uncacheable(),
+            negative_hits: negative.hits(),
+            negative_misses: negative.misses(),
+            negative_insertions: negative.insertions(),
+            negative_evictions: negative.evictions(),
             p50_us,
             p99_us,
         }
@@ -134,6 +159,8 @@ pub struct EdgeSnapshot {
     pub queue_shed: u64,
     pub bad_requests: u64,
     pub classify_requests: u64,
+    pub agreement_checks: u64,
+    pub agreement_failures: u64,
     pub coalesce_leaders: u64,
     pub coalesce_joined: u64,
     pub cache_hits: u64,
@@ -141,6 +168,10 @@ pub struct EdgeSnapshot {
     pub cache_insertions: u64,
     pub cache_evictions: u64,
     pub cache_uncacheable: u64,
+    pub negative_hits: u64,
+    pub negative_misses: u64,
+    pub negative_insertions: u64,
+    pub negative_evictions: u64,
     pub p50_us: f64,
     pub p99_us: f64,
 }
@@ -195,10 +226,12 @@ fn health_code(h: BackendHealth) -> f64 {
 /// Render the full exposition (Prometheus text format 0.0.4).
 pub fn prometheus(state: &EdgeState) -> String {
     let mut out = String::with_capacity(8192);
-    let snap = state.metrics.snapshot(&state.cache, &state.coalescer);
+    let snap = state
+        .metrics
+        .snapshot(&state.cache, &state.negative, &state.coalescer);
 
     let up = if state.draining() { 0.0 } else { 1.0 };
-    let edge_metrics: [(&str, &str, &str, f64); 21] = [
+    let edge_metrics: [(&str, &str, &str, f64); 28] = [
         (
             "mpcnn_edge_up",
             "gauge",
@@ -312,6 +345,48 @@ pub fn prometheus(state: &EdgeState) -> String {
             "gauge",
             "entries currently cached",
             state.cache.len() as f64,
+        ),
+        (
+            "mpcnn_cache_negative_hits_total",
+            "counter",
+            "deterministic 4xx refusals served from the negative cache",
+            snap.negative_hits as f64,
+        ),
+        (
+            "mpcnn_cache_negative_misses_total",
+            "counter",
+            "negative-cache lookups that missed",
+            snap.negative_misses as f64,
+        ),
+        (
+            "mpcnn_cache_negative_insertions_total",
+            "counter",
+            "deterministic 4xx refusals remembered",
+            snap.negative_insertions as f64,
+        ),
+        (
+            "mpcnn_cache_negative_evictions_total",
+            "counter",
+            "negative-cache LRU evictions",
+            snap.negative_evictions as f64,
+        ),
+        (
+            "mpcnn_cache_negative_entries",
+            "gauge",
+            "refusals currently remembered",
+            state.negative.len() as f64,
+        ),
+        (
+            "mpcnn_edge_agreement_checks_total",
+            "counter",
+            "responses compared against the reference model",
+            snap.agreement_checks as f64,
+        ),
+        (
+            "mpcnn_edge_agreement_failures_total",
+            "counter",
+            "responses that disagreed with the reference model",
+            snap.agreement_failures as f64,
         ),
         (
             "mpcnn_coalesce_leaders_total",
@@ -468,6 +543,59 @@ pub fn prometheus(state: &EdgeState) -> String {
     for (name, help, value) in robust_metrics {
         metric(&mut out, name, "counter", help, value);
     }
+
+    // SLO engine: per-alert state and burn rates (labeled by alert name,
+    // not variant — one SLO may fan out to one alert per variant and the
+    // alert name already embeds the variant). Absent when the sampler is
+    // off (`serve --listen` without `--slo`).
+    if let Some(obs) = &state.obs {
+        let views = obs.engine.snapshot();
+        type AlertProj = fn(&crate::obs::AlertView) -> f64;
+        let slo_families: [(&str, &str, AlertProj); 3] = [
+            (
+                "mpcnn_slo_alert_state",
+                "alert state (0 inactive, 1 pending, 2 firing, 3 resolved)",
+                |v| v.state.code() as f64,
+            ),
+            (
+                "mpcnn_slo_fast_burn",
+                "error-budget burn rate over the alert's fast window",
+                |v| v.fast_burn,
+            ),
+            (
+                "mpcnn_slo_slow_burn",
+                "error-budget burn rate over the alert's slow window",
+                |v| v.slow_burn,
+            ),
+        ];
+        for (name, help, project) in slo_families {
+            family_header(&mut out, name, "gauge", help);
+            for v in &views {
+                out.push_str(&format!("{name}{{alert=\"{}\"}} {}\n", v.name, project(v)));
+            }
+        }
+        metric(
+            &mut out,
+            "mpcnn_slo_alerts_firing",
+            "gauge",
+            "alerts currently in the firing state",
+            obs.engine.firing().len() as f64,
+        );
+        metric(
+            &mut out,
+            "mpcnn_slo_events_total",
+            "counter",
+            "events appended to the journal (ring may have evicted old ones)",
+            obs.journal.appended() as f64,
+        );
+        metric(
+            &mut out,
+            "mpcnn_slo_samples",
+            "gauge",
+            "snapshots currently retained in the time-series ring",
+            obs.tsdb.len() as f64,
+        );
+    }
     out
 }
 
@@ -510,11 +638,22 @@ mod tests {
         m.observe(200, Duration::from_micros(100));
         m.observe(404, Duration::from_micros(100));
         m.observe(503, Duration::from_micros(100));
-        let snap = m.snapshot(&ResponseCache::new(4), &Coalescer::new());
+        let snap = m.snapshot(&ResponseCache::new(4), &NegativeCache::new(4), &Coalescer::new());
         assert_eq!(snap.requests, 3);
         assert_eq!(snap.ok, 1);
         assert_eq!(snap.client_errors, 1);
         assert_eq!(snap.server_errors, 1);
         assert!(snap.p50_us > 0.0);
+    }
+
+    #[test]
+    fn agreement_counters_track_failures() {
+        let m = EdgeMetrics::new();
+        m.note_agreement(true);
+        m.note_agreement(true);
+        m.note_agreement(false);
+        let snap = m.snapshot(&ResponseCache::new(4), &NegativeCache::new(4), &Coalescer::new());
+        assert_eq!(snap.agreement_checks, 3);
+        assert_eq!(snap.agreement_failures, 1);
     }
 }

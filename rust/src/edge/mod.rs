@@ -18,11 +18,18 @@
 //!   are answered with bit-identical logits without touching a backend.
 //! - **Observability** — every shed/hit/panic/restart signal the gateway
 //!   and the edge track, rendered by [`metrics::prometheus`].
+//! - **SLOs** — with `--slo`, a background [`Sampler`] thread snapshots
+//!   every layer into a fixed-memory time-series ring ([`Tsdb`]), the SLO
+//!   engine evaluates multi-window burn rates and drift watchdogs over
+//!   it, and the results are served at `GET /v1/alerts` (alert states),
+//!   `GET /v1/events` (JSONL transition journal), and
+//!   `GET /v1/stats?window=30s` (windowed per-variant rates) — plus
+//!   `mpcnn_slo_*` series in `/metrics` and the live `mpcnn top` view.
 //!
 //! Threading: one acceptor thread hands sockets to a fixed pool of
 //! handler threads over a bounded channel (overflow is answered 503, not
-//! queued). [`EdgeServer::shutdown`] drains gracefully: stop admitting,
-//! flush in-flight requests, then stop the threads.
+//! queued). [`EdgeServer::shutdown`] drains gracefully: stop the sampler,
+//! stop admitting, flush in-flight requests, then stop the threads.
 
 pub mod cache;
 pub mod client;
@@ -32,23 +39,27 @@ pub mod http;
 pub mod limits;
 pub mod metrics;
 
-pub use cache::{cache_key, ResponseCache};
+pub use cache::{cache_key, negative_key, NegativeCache, NegativeEntry, ResponseCache};
 pub use client::{RemoteAnswer, RemoteClient};
 pub use coalescing::Coalescer;
 pub use http::{HttpRequest, HttpResponse};
 pub use limits::{AdmissionGate, RateLimiter};
 pub use metrics::{EdgeMetrics, EdgeSnapshot};
 
-use crate::obs::{FlightRecorder, RecorderConfig};
-use crate::serving::Server;
+use crate::obs::{
+    AlertEngine, DriftConfig, DriftDetector, EdgeCounters, EventJournal, FlightRecorder,
+    GatewayCounters, RecorderConfig, Sample, Sampler, SloSpec, Tsdb, VariantSample,
+};
+use crate::serving::{BackendHealth, BreakerState, FaultControls, Server};
 use crate::util::error::Result;
+use crate::util::json::Json;
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
 /// Content address of one `(variant, image)` request: a sha256 digest.
 pub type Key = [u8; 32];
@@ -95,6 +106,23 @@ pub struct EdgeConfig {
     /// Traces at or above this end-to-end latency are pinned as slow
     /// exemplars until fetched by id.
     pub slow_trace_us: f64,
+    /// Negative-cache entries: deterministic 4xx refusals remembered so a
+    /// retry loop of a bad request never reaches route resolution twice
+    /// (0 = negative caching off).
+    pub negative_capacity: usize,
+    /// SLO spec evaluated over the time-series ring; `None` disables the
+    /// whole SLO layer (no sampler thread, 404 on `/v1/alerts` etc.).
+    pub slo: Option<SloSpec>,
+    /// Sampler tick interval (`serve --listen --sample-ms`).
+    pub sample_interval: Duration,
+    /// Time-series ring capacity in samples. The default keeps one hour
+    /// at the default 1 s interval in fixed memory.
+    pub tsdb_capacity: usize,
+    /// Event-journal ring capacity (alert transitions, restarts, breaker
+    /// flips, health changes).
+    pub event_capacity: usize,
+    /// Drift-watchdog tuning; the default suits second-scale sampling.
+    pub drift: DriftConfig,
 }
 
 impl Default for EdgeConfig {
@@ -111,8 +139,26 @@ impl Default for EdgeConfig {
             trace: false,
             trace_capacity: 256,
             slow_trace_us: 50_000.0,
+            negative_capacity: 256,
+            slo: None,
+            sample_interval: Duration::from_secs(1),
+            tsdb_capacity: 3600,
+            event_capacity: 1024,
+            drift: DriftConfig::default(),
         }
     }
+}
+
+/// The SLO layer's shared state: the time-series ring the sampler fills,
+/// the alert engine and journal the handlers serve, and the declarative
+/// spec + drift detector evaluated every tick. Lives on [`EdgeState`] as
+/// `Some` only when the edge was configured with an SLO spec.
+pub struct ObsRuntime {
+    pub tsdb: Tsdb,
+    pub engine: AlertEngine,
+    pub journal: EventJournal,
+    pub drift: DriftDetector,
+    pub spec: SloSpec,
 }
 
 /// Everything a handler thread needs, shared behind one `Arc`.
@@ -123,11 +169,21 @@ pub struct EdgeState {
     pub gate: AdmissionGate,
     pub coalescer: Coalescer,
     pub cache: ResponseCache,
+    /// Remembered deterministic 4xx refusals (unknown variant, pinned
+    /// shape mismatch); see [`NegativeCache`].
+    pub negative: NegativeCache,
     pub metrics: EdgeMetrics,
     pub check: Option<ResponseCheck>,
     /// Flight recorder behind `/v1/trace`; `None` when tracing is off
     /// (requests then carry an inert [`crate::obs::TraceHandle`]).
     pub recorder: Option<Arc<FlightRecorder>>,
+    /// SLO layer (tsdb + alert engine + journal + drift); `None` without
+    /// `--slo`.
+    pub obs: Option<ObsRuntime>,
+    /// Live fault-injection override handle, wired by `mpcnn serve
+    /// --listen --fault` so `POST /v1/fault` can lift or force faults
+    /// without a restart. `None` when serving real backends.
+    fault: Mutex<Option<Arc<FaultControls>>>,
     draining: AtomicBool,
 }
 
@@ -138,6 +194,7 @@ impl EdgeState {
             gate: AdmissionGate::new(cfg.max_inflight),
             coalescer: Coalescer::new(),
             cache: ResponseCache::new(cfg.cache_capacity),
+            negative: NegativeCache::new(cfg.negative_capacity),
             metrics: EdgeMetrics::new(),
             recorder: cfg.trace.then(|| {
                 Arc::new(FlightRecorder::new(RecorderConfig {
@@ -146,6 +203,14 @@ impl EdgeState {
                     ..RecorderConfig::default()
                 }))
             }),
+            obs: cfg.slo.clone().map(|spec| ObsRuntime {
+                tsdb: Tsdb::new(cfg.tsdb_capacity),
+                engine: AlertEngine::new(),
+                journal: EventJournal::new(cfg.event_capacity),
+                drift: DriftDetector::new(cfg.drift.clone()),
+                spec,
+            }),
+            fault: Mutex::new(None),
             server,
             cfg,
             check,
@@ -157,6 +222,16 @@ impl EdgeState {
     /// connections close after the in-flight response.
     pub fn draining(&self) -> bool {
         self.draining.load(Ordering::SeqCst)
+    }
+
+    /// Expose a fault-injection handle on `POST /v1/fault`. Called once
+    /// after bind by `mpcnn serve --listen --fault`.
+    pub fn set_fault_controls(&self, controls: Arc<FaultControls>) {
+        *self.fault.lock().unwrap_or_else(|e| e.into_inner()) = Some(controls);
+    }
+
+    pub fn fault_controls(&self) -> Option<Arc<FaultControls>> {
+        self.fault.lock().unwrap_or_else(|e| e.into_inner()).clone()
     }
 }
 
@@ -171,6 +246,8 @@ pub struct EdgeServer {
     stop: Arc<AtomicBool>,
     acceptor: JoinHandle<()>,
     handlers: Vec<JoinHandle<()>>,
+    /// Background SLO sampler; `None` without `--slo`.
+    sampler: Option<Sampler>,
 }
 
 impl EdgeServer {
@@ -244,12 +321,25 @@ impl EdgeServer {
             );
         }
 
+        // The sampler holds its own Arc to the state and a `prev` sample
+        // for event derivation; ticks are cheap (counter loads + histogram
+        // clones) so they share no locks with the request path beyond the
+        // metrics the handlers already touch.
+        let sampler = state.obs.is_some().then(|| {
+            let state = state.clone();
+            let mut prev: Option<Sample> = None;
+            Sampler::spawn(state.cfg.sample_interval, move || {
+                sample_tick(&state, &mut prev);
+            })
+        });
+
         Ok(EdgeServer {
             state,
             addr: local,
             stop,
             acceptor,
             handlers,
+            sampler,
         })
     }
 
@@ -263,15 +353,22 @@ impl EdgeServer {
 
     /// Point-in-time copy of every edge counter.
     pub fn snapshot(&self) -> EdgeSnapshot {
-        self.state
-            .metrics
-            .snapshot(&self.state.cache, &self.state.coalescer)
+        self.state.metrics.snapshot(
+            &self.state.cache,
+            &self.state.negative,
+            &self.state.coalescer,
+        )
     }
 
     /// Graceful drain: stop admitting new classify work, flush what is
     /// in flight (bounded by [`DRAIN_TIMEOUT`]), then stop the acceptor
     /// and the handler pool. Returns the final counter snapshot.
     pub fn shutdown(self) -> EdgeSnapshot {
+        // Stop the sampler first: a tick mid-drain would race the counter
+        // flush and journal a spurious final delta.
+        if let Some(sampler) = &self.sampler {
+            sampler.stop();
+        }
         self.state.draining.store(true, Ordering::SeqCst);
         let deadline = Instant::now() + DRAIN_TIMEOUT;
         while self.state.gate.inflight() > 0 && Instant::now() < deadline {
@@ -286,9 +383,11 @@ impl EdgeServer {
         for h in self.handlers {
             let _ = h.join();
         }
-        self.state
-            .metrics
-            .snapshot(&self.state.cache, &self.state.coalescer)
+        self.state.metrics.snapshot(
+            &self.state.cache,
+            &self.state.negative,
+            &self.state.coalescer,
+        )
     }
 }
 
@@ -337,4 +436,177 @@ fn serve_connection(state: &EdgeState, mut stream: TcpStream) {
             break;
         }
     }
+}
+
+/// Wall-clock microseconds since the Unix epoch — the tsdb's and the
+/// event journal's shared timebase.
+fn now_unix_us() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0)
+}
+
+fn health_byte(h: BackendHealth) -> u8 {
+    match h {
+        BackendHealth::Healthy => 0,
+        BackendHealth::Degraded => 1,
+        BackendHealth::Unavailable => 2,
+    }
+}
+
+fn breaker_byte(b: BreakerState) -> u8 {
+    match b {
+        BreakerState::Closed => 0,
+        BreakerState::Open => 1,
+        BreakerState::HalfOpen => 2,
+    }
+}
+
+/// Snapshot every layer — edge counters, gateway robustness ledger, and
+/// each variant's cumulative metrics + live router/breaker view — into
+/// one [`Sample`].
+fn collect_sample(state: &EdgeState, at_us: u64) -> Sample {
+    let snap = state
+        .metrics
+        .snapshot(&state.cache, &state.negative, &state.coalescer);
+    let edge = EdgeCounters {
+        requests: snap.requests,
+        ok: snap.ok,
+        client_errors: snap.client_errors,
+        server_errors: snap.server_errors,
+        rate_limited: snap.rate_limited,
+        admission_shed: snap.admission_shed,
+        queue_shed: snap.queue_shed,
+        bad_requests: snap.bad_requests,
+        classify_requests: snap.classify_requests,
+        cache_hits: snap.cache_hits,
+        cache_misses: snap.cache_misses,
+        negative_hits: snap.negative_hits,
+        negative_insertions: snap.negative_insertions,
+        agreement_checks: snap.agreement_checks,
+        agreement_failures: snap.agreement_failures,
+    };
+    let r = state.server.robustness_report();
+    let gateway = GatewayCounters {
+        shed: r.shed,
+        shed_admission: r.shed_admission,
+        shed_expired: r.shed_expired,
+        panics: r.panics,
+        worker_restarts: r.worker_restarts,
+        retried: r.retried,
+        hedged: r.hedged,
+        hedge_wins: r.hedge_wins,
+        fallbacks: r.fallbacks,
+    };
+    let statuses = state.server.statuses();
+    let breakers = state.server.breaker_states();
+    let variants = state
+        .server
+        .metrics_all()
+        .into_iter()
+        .map(|(name, m)| {
+            let status = statuses.iter().find(|s| s.name.as_ref() == name.as_str());
+            let breaker = breakers
+                .iter()
+                .find(|(b, _)| b == &name)
+                .map(|(_, s)| *s)
+                .unwrap_or(BreakerState::Closed);
+            VariantSample {
+                requests: m.requests,
+                responses: m.responses,
+                errors: m.errors,
+                shed_admission: m.shed_admission,
+                shed_expired: m.shed_expired,
+                panics: m.panics,
+                worker_restarts: m.worker_restarts,
+                batches: m.batches,
+                latency_buckets: *m.latency.buckets(),
+                latency_sum_us: m.latency.sum_us(),
+                latency_max_us: m.latency.max_us(),
+                queue_buckets: *m.queue_wait.buckets(),
+                queue_sum_us: m.queue_wait.sum_us(),
+                queue_max_us: m.queue_wait.max_us(),
+                ewma_us: status.map_or(m.ewma_latency_us, |s| s.ewma_latency_us),
+                fpga_fps: status.map_or(0.0, |s| s.fpga_fps),
+                health: status.map_or(0, |s| health_byte(s.health)),
+                breaker: breaker_byte(breaker),
+                name,
+            }
+        })
+        .collect();
+    Sample {
+        at_us,
+        edge,
+        gateway,
+        variants,
+    }
+}
+
+/// Journal the discrete state changes between two consecutive samples:
+/// worker restarts, circuit-breaker flips, health transitions (degraded-
+/// mode entry/exit). Derived from sampler deltas, not hot-path hooks, so
+/// the request path pays nothing for the journal.
+fn derive_events(obs: &ObsRuntime, prev: Option<&Sample>, cur: &Sample) {
+    use crate::obs::tsdb::{breaker_name, health_name};
+    let Some(prev) = prev else { return };
+    for v in &cur.variants {
+        let old = prev.variants.iter().find(|p| p.name == v.name);
+        let (old_restarts, old_breaker, old_health) = match old {
+            Some(p) => (p.worker_restarts, p.breaker, p.health),
+            // A variant that appeared mid-flight has no history to diff.
+            None => (v.worker_restarts, v.breaker, v.health),
+        };
+        if v.worker_restarts > old_restarts {
+            obs.journal.record(
+                cur.at_us,
+                "worker_restart",
+                vec![
+                    ("variant", Json::str(v.name.clone())),
+                    (
+                        "restarts",
+                        Json::num((v.worker_restarts - old_restarts) as f64),
+                    ),
+                    ("total", Json::num(v.worker_restarts as f64)),
+                ],
+            );
+        }
+        if v.breaker != old_breaker {
+            obs.journal.record(
+                cur.at_us,
+                "breaker",
+                vec![
+                    ("variant", Json::str(v.name.clone())),
+                    ("from", Json::str(breaker_name(old_breaker))),
+                    ("to", Json::str(breaker_name(v.breaker))),
+                ],
+            );
+        }
+        if v.health != old_health {
+            obs.journal.record(
+                cur.at_us,
+                "health",
+                vec![
+                    ("variant", Json::str(v.name.clone())),
+                    ("from", Json::str(health_name(old_health))),
+                    ("to", Json::str(health_name(v.health))),
+                ],
+            );
+        }
+    }
+}
+
+/// One sampler tick: journal delta events, push the sample, evaluate the
+/// SLO spec and the drift watchdogs over the ring, and step the alert
+/// state machines (which journal their own transitions).
+fn sample_tick(state: &EdgeState, prev: &mut Option<Sample>) {
+    let Some(obs) = &state.obs else { return };
+    let now = now_unix_us();
+    let sample = collect_sample(state, now);
+    derive_events(obs, prev.as_ref(), &sample);
+    obs.tsdb.push(sample.clone());
+    let mut signals = crate::obs::slo::evaluate(&obs.spec, &obs.tsdb);
+    signals.extend(obs.drift.evaluate(&obs.tsdb));
+    obs.engine.observe(now, &signals, &obs.journal);
+    *prev = Some(sample);
 }

@@ -91,7 +91,19 @@ SUBCOMMANDS
              GET /v1/trace/<id> (span JSON), GET /v1/trace/export
              (Chrome trace-event JSON, Perfetto-loadable);
              --trace-capacity N sizes the ring (default 256),
-             --slow-trace-us US pins slower-than-US traces until read
+             --slow-trace-us US pins slower-than-US traces until read;
+             --slo FILE|default arms the SLO engine: a background sampler
+             (--sample-ms MS, default 1000) snapshots every counter into a
+             fixed-memory time-series ring and evaluates each objective as
+             a multi-window burn-rate alert (fast 5m x14.4 + slow 1h x6,
+             pending -> firing -> resolved); alerts at GET /v1/alerts,
+             the operational event journal (alert transitions, worker
+             restarts, breaker flips, fault overrides) as JSONL at
+             GET /v1/events, windowed rates at GET /v1/stats?window=30s,
+             and mpcnn_slo_* series join /metrics; with --fault armed,
+             POST /v1/fault {\"force\":\"none|error|panic|corrupt\"}
+             overrides the injector live (the CI smoke test lifts a fault
+             this way and watches the alert resolve)
   classify   [--wq 4] [--aq 8] [--index 0] [--route exact:4] [--variants 4]
              [--backend auto|pjrt|xmp|mock] [--trace]
              classify one testset image through the gateway; with
@@ -105,6 +117,14 @@ SUBCOMMANDS
              (--image-len N synthesizes the request image, --deadline MS
              attaches a deadline, --client ID names the rate-limit
              bucket, --retry N retries connection errors with backoff)
+  top        --remote http://ADDR [--window 30s] [--interval MS] [--once]
+             live operational console for a `serve --listen --slo` edge:
+             polls GET /v1/stats?window=W and GET /v1/alerts and redraws a
+             per-variant table (rps, p50/p99, queue wait, EWMA, shed,
+             restarts, breaker, health) plus the burn-rate alert board
+             every --interval MS (default 2000); --window accepts
+             ms/s/m/h suffixes (default 30s, the rate denominator);
+             --once prints a single frame and exits (CI-friendly)
   trace      --remote http://ADDR [--id N] [--out FILE]
              inspect a `serve --listen --trace` edge's flight recorder:
              list recent trace ids (default), print one trace's spans
@@ -182,6 +202,7 @@ fn run(args: &Args) -> Result<()> {
         "serve" => cmd_serve(args),
         "classify" => cmd_classify(args),
         "trace" => cmd_trace(args),
+        "top" => cmd_top(args),
         "profile" => cmd_profile(args),
         "info" => cmd_info(),
         "" | "help" => {
@@ -1008,6 +1029,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn serve_listen(args: &Args, gw: Gateway, listen: &str, fault: Option<&FaultArg>) -> Result<()> {
     let run_for = args.get_u64("for", 0);
     let trace = args.has_flag("trace");
+    // `--slo default` arms the built-in objective set; `--slo FILE` loads
+    // a JSON spec (see SloSpec::from_json for the schema).
+    let slo = match args.get("slo") {
+        Some(spec) if spec == "default" => Some(mpcnn::obs::SloSpec::default_spec()),
+        Some(path) => {
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| anyhow!("--slo {path}: {e}"))?;
+            Some(
+                mpcnn::obs::SloSpec::from_json(&text)
+                    .map_err(|e| anyhow!("--slo {path}: {e}"))?,
+            )
+        }
+        None => None,
+    };
+    let slo_armed = slo.is_some();
     let cfg = EdgeConfig {
         handler_threads: args.get_usize("threads", 8).max(1),
         max_inflight: args.get_u64("max-inflight", 256),
@@ -1017,6 +1053,8 @@ fn serve_listen(args: &Args, gw: Gateway, listen: &str, fault: Option<&FaultArg>
         trace,
         trace_capacity: args.get_usize("trace-capacity", 256),
         slow_trace_us: args.get_f64("slow-trace-us", 50_000.0),
+        slo,
+        sample_interval: Duration::from_millis(args.get_u64("sample-ms", 1000).max(10)),
         ..EdgeConfig::default()
     };
     let Gateway {
@@ -1052,6 +1090,11 @@ fn serve_listen(args: &Args, gw: Gateway, listen: &str, fault: Option<&FaultArg>
 
     let server = Arc::new(server);
     let edge = EdgeServer::bind(server.clone(), listen, cfg, check)?;
+    if let Some(f) = fault {
+        // Hand the injector's live controls to the edge so POST /v1/fault
+        // can flip the forced override while the gateway keeps serving.
+        edge.state().set_fault_controls(f.controls.clone());
+    }
     println!("edge listening on http://{}", edge.local_addr());
     println!("  POST /v1/classify   {{\"image\":[f32; {image_len}], \"route\"?, \"deadline_ms\"?, \"client\"?}}");
     println!("  GET  /healthz       gateway + per-variant health");
@@ -1060,6 +1103,15 @@ fn serve_listen(args: &Args, gw: Gateway, listen: &str, fault: Option<&FaultArg>
         println!("  GET  /v1/trace      flight recorder index (recent + slow exemplars)");
         println!("  GET  /v1/trace/<id> one trace's spans as JSON (X-Trace-Id names it)");
         println!("  GET  /v1/trace/export  Chrome trace-event JSON (Perfetto-loadable)");
+    }
+    if slo_armed {
+        println!("  GET  /v1/alerts     burn-rate alert board (pending/firing/resolved)");
+        println!("  GET  /v1/events     operational event journal (JSONL)");
+        println!("  GET  /v1/stats      windowed rates for `mpcnn top` (?window=30s)");
+        if fault.is_some() {
+            println!("  POST /v1/fault      {{\"force\":\"none|error|panic|corrupt\"}} live override");
+        }
+        println!("  (watch live: mpcnn top --remote http://{})", edge.local_addr());
     }
     match run_for {
         0 => {
@@ -1330,6 +1382,153 @@ fn cmd_trace(args: &Args) -> Result<()> {
     print!("{}", t.render());
     println!("fetch one with `mpcnn trace --remote http://{} --id N`", client.addr());
     Ok(())
+}
+
+/// `top --remote http://ADDR`: live operational console over a
+/// `serve --listen --slo` edge. The edge does the math (windowed counter
+/// deltas over its time-series ring, burn-rate evaluation); this client
+/// only polls `/v1/stats` + `/v1/alerts` and redraws the tables.
+fn cmd_top(args: &Args) -> Result<()> {
+    let Some(remote) = args.get("remote") else {
+        bail!("top needs --remote http://ADDR (a `serve --listen --slo` edge)");
+    };
+    let retry = RetryPolicy::attempts(args.get_u64("retry", 3).min(16) as u32);
+    let client = RemoteClient::new(&remote, retry);
+    let window = args.get_or("window", "30s");
+    let interval = Duration::from_millis(args.get_u64("interval", 2000).max(100));
+    let once = args.has_flag("once");
+    loop {
+        let frame = top_frame(&client, &window)?;
+        if once {
+            print!("{frame}");
+            return Ok(());
+        }
+        // Cursor-home + clear-to-end: redraw in place without scrollback
+        // spam; the frame always ends shorter than a terminal screen.
+        print!("\x1b[H\x1b[J{frame}");
+        use std::io::Write as _;
+        std::io::stdout().flush().ok();
+        std::thread::sleep(interval);
+    }
+}
+
+/// Render one `top` frame (header, per-variant table, alert board).
+fn top_frame(client: &RemoteClient, window: &str) -> Result<String> {
+    use mpcnn::util::json::Json;
+    use std::fmt::Write as _;
+
+    let (status, body) = client.get(&format!("/v1/stats?window={window}"))?;
+    if status != 200 {
+        bail!("GET /v1/stats -> {status}: {}", body.trim());
+    }
+    let j = mpcnn::util::json::parse(&body).map_err(|e| anyhow!("bad stats JSON: {e}"))?;
+    let num = |o: Option<&Json>, k: &str| -> f64 {
+        o.and_then(|v| v.get(k)).and_then(|v| v.as_f64()).unwrap_or(0.0)
+    };
+
+    let mut out = String::new();
+    let samples = j.get("samples").and_then(|v| v.as_u64()).unwrap_or(0);
+    if !j.get("ready").and_then(|v| v.as_bool()).unwrap_or(false) {
+        let _ = writeln!(
+            out,
+            "mpcnn top — {} — warming up ({samples} samples retained, need 2)",
+            client.addr()
+        );
+        return Ok(out);
+    }
+    let win_s = j.get("window_us").and_then(|v| v.as_f64()).unwrap_or(0.0) / 1e6;
+    let edge = j.get("edge");
+    let gw = j.get("gateway");
+    let _ = writeln!(
+        out,
+        "mpcnn top — {} — last {win_s:.0}s ({samples} samples retained)",
+        client.addr()
+    );
+    let _ = writeln!(
+        out,
+        "edge: {:.1} req/s | ok {:.0} | 4xx {:.0} | 5xx {:.0} | 429 {:.0} | shed {:.0} | \
+         cache hits {:.0} | negative hits {:.0} | agreement {:.0}/{:.0} failed",
+        num(edge, "rps"),
+        num(edge, "ok"),
+        num(edge, "client_errors"),
+        num(edge, "server_errors"),
+        num(edge, "rate_limited"),
+        num(edge, "admission_shed"),
+        num(edge, "cache_hits"),
+        num(edge, "negative_hits"),
+        num(edge, "agreement_failures"),
+        num(edge, "agreement_checks"),
+    );
+    let _ = writeln!(
+        out,
+        "gateway: shed {:.0} | panics {:.0} | worker restarts {:.0} | retried {:.0} | \
+         hedged {:.0} | fallbacks {:.0}",
+        num(gw, "shed"),
+        num(gw, "panics"),
+        num(gw, "worker_restarts"),
+        num(gw, "retried"),
+        num(gw, "hedged"),
+        num(gw, "fallbacks"),
+    );
+
+    let mut t = mpcnn::util::table::Table::new(format!("variants over the last {win_s:.0}s"))
+        .headers(&[
+            "variant", "req/s", "resp", "err", "shed", "restarts", "p50 us", "p99 us",
+            "q p99 us", "ewma us", "fps", "breaker", "health",
+        ]);
+    for v in j.get("variants").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+        let v = Some(v);
+        t.row(vec![
+            v.and_then(|x| x.get("name")).and_then(|x| x.as_str()).unwrap_or("?").to_string(),
+            format!("{:.1}", num(v, "rps")),
+            format!("{:.0}", num(v, "responses")),
+            format!("{:.0}", num(v, "errors")),
+            format!("{:.0}", num(v, "shed")),
+            format!("{:.0}", num(v, "worker_restarts")),
+            format!("{:.0}", num(v, "p50_us")),
+            format!("{:.0}", num(v, "p99_us")),
+            format!("{:.0}", num(v, "queue_p99_us")),
+            format!("{:.0}", num(v, "ewma_us")),
+            format!("{:.1}", num(v, "fpga_fps")),
+            v.and_then(|x| x.get("breaker")).and_then(|x| x.as_str()).unwrap_or("?").to_string(),
+            v.and_then(|x| x.get("health")).and_then(|x| x.as_str()).unwrap_or("?").to_string(),
+        ]);
+    }
+    out.push_str(&t.render());
+
+    let (status, body) = client.get("/v1/alerts")?;
+    if status != 200 {
+        bail!("GET /v1/alerts -> {status}: {}", body.trim());
+    }
+    let a = mpcnn::util::json::parse(&body).map_err(|e| anyhow!("bad alerts JSON: {e}"))?;
+    let firing: Vec<&str> = a
+        .get("firing")
+        .and_then(|v| v.as_arr())
+        .map(|arr| arr.iter().filter_map(|v| v.as_str()).collect())
+        .unwrap_or_default();
+    let title = if firing.is_empty() {
+        "SLO alerts — all quiet".to_string()
+    } else {
+        format!("SLO alerts — {} FIRING: {}", firing.len(), firing.join(", "))
+    };
+    let mut t = mpcnn::util::table::Table::new(title).headers(&[
+        "alert", "kind", "variant", "state", "fast burn", "slow burn", "flips", "detail",
+    ]);
+    for al in a.get("alerts").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+        let al = Some(al);
+        t.row(vec![
+            al.and_then(|x| x.get("name")).and_then(|x| x.as_str()).unwrap_or("?").to_string(),
+            al.and_then(|x| x.get("kind")).and_then(|x| x.as_str()).unwrap_or("?").to_string(),
+            al.and_then(|x| x.get("variant")).and_then(|x| x.as_str()).unwrap_or("-").to_string(),
+            al.and_then(|x| x.get("state")).and_then(|x| x.as_str()).unwrap_or("?").to_string(),
+            format!("{:.2}", num(al, "fast_burn")),
+            format!("{:.2}", num(al, "slow_burn")),
+            format!("{:.0}", num(al, "transitions")),
+            al.and_then(|x| x.get("detail")).and_then(|x| x.as_str()).unwrap_or("").to_string(),
+        ]);
+    }
+    out.push_str(&t.render());
+    Ok(out)
 }
 
 /// `profile`: measured-host vs virtual-FPGA per-layer attribution. One

@@ -1,0 +1,468 @@
+//! Alert state machine and structured event journal (std-only).
+//!
+//! The SLO engine ([`crate::obs::slo`]) and the drift watchdogs
+//! ([`crate::obs::drift`]) reduce each evaluation tick to a uniform
+//! [`AlertSignal`] — "is this objective burning right now, and how hard".
+//! The [`AlertEngine`] runs one pending→firing→resolved state machine per
+//! signal name on top of that stream: a signal must burn continuously for
+//! `pending_for` before it pages (transient blips cancel back to
+//! inactive), and a firing alert must stay calm for `clear_for` before it
+//! resolves (flapping doesn't re-page). Every transition is appended to
+//! the bounded [`EventJournal`], the JSONL stream behind `GET /v1/events`
+//! that also records worker restarts, breaker opens, and degraded-mode
+//! entries derived by the sampler.
+
+use crate::util::json::Json;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// One evaluation tick's verdict for one objective.
+#[derive(Clone, Debug)]
+pub struct AlertSignal {
+    /// Unique alert key, e.g. `availability:w4`.
+    pub name: String,
+    /// Objective family: `availability`, `latency`, `deadline`,
+    /// `agreement`, `latency_drift`, `agreement_drift`.
+    pub kind: String,
+    pub variant: Option<String>,
+    /// Is the objective over threshold this tick (both windows for SLOs)?
+    pub burning: bool,
+    /// Burn rate over the fast window (for drift: deviation in sigmas).
+    pub fast_burn: f64,
+    /// Burn rate over the slow window.
+    pub slow_burn: f64,
+    pub fast_window_us: u64,
+    pub slow_window_us: u64,
+    /// Must burn continuously this long before pending becomes firing.
+    pub pending_for_us: u64,
+    /// Must stay calm this long before firing becomes resolved.
+    pub clear_for_us: u64,
+    /// Human-readable evaluation detail for `/v1/alerts`.
+    pub detail: String,
+}
+
+/// Alert lifecycle state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlertState {
+    Inactive,
+    Pending,
+    Firing,
+    Resolved,
+}
+
+impl AlertState {
+    pub fn name(self) -> &'static str {
+        match self {
+            AlertState::Inactive => "inactive",
+            AlertState::Pending => "pending",
+            AlertState::Firing => "firing",
+            AlertState::Resolved => "resolved",
+        }
+    }
+
+    /// Stable numeric code for the Prometheus `mpcnn_slo_alert_state` gauge.
+    pub fn code(self) -> u8 {
+        match self {
+            AlertState::Inactive => 0,
+            AlertState::Pending => 1,
+            AlertState::Firing => 2,
+            AlertState::Resolved => 3,
+        }
+    }
+}
+
+struct AlertRecord {
+    signal: AlertSignal,
+    state: AlertState,
+    state_since_us: u64,
+    /// Continuously burning since (None while calm).
+    burn_since_us: Option<u64>,
+    /// Continuously calm since (None while burning).
+    calm_since_us: Option<u64>,
+    transitions: u64,
+}
+
+/// Read-only view of one alert for `/v1/alerts` and `/metrics`.
+#[derive(Clone, Debug)]
+pub struct AlertView {
+    pub name: String,
+    pub kind: String,
+    pub variant: Option<String>,
+    pub state: AlertState,
+    pub state_since_us: u64,
+    pub fast_burn: f64,
+    pub slow_burn: f64,
+    pub fast_window_us: u64,
+    pub slow_window_us: u64,
+    pub transitions: u64,
+    pub detail: String,
+}
+
+/// Bounded ring of structured events, one JSON object per event, served
+/// as JSONL at `GET /v1/events`.
+pub struct EventJournal {
+    capacity: usize,
+    ring: Mutex<VecDeque<Json>>,
+    appended: AtomicU64,
+}
+
+impl EventJournal {
+    pub fn new(capacity: usize) -> EventJournal {
+        EventJournal {
+            capacity: capacity.max(1),
+            ring: Mutex::new(VecDeque::new()),
+            appended: AtomicU64::new(0),
+        }
+    }
+
+    /// Append one event. Every event carries `ts_us`, a monotone `seq`
+    /// (survives ring eviction — consumers can detect gaps), and `kind`.
+    pub fn record(&self, at_us: u64, kind: &str, fields: Vec<(&str, Json)>) {
+        let seq = self.appended.fetch_add(1, Ordering::SeqCst);
+        let mut pairs = vec![
+            ("ts_us", Json::num(at_us as f64)),
+            ("seq", Json::num(seq as f64)),
+            ("kind", Json::str(kind)),
+        ];
+        pairs.extend(fields);
+        let mut ring = lock(&self.ring);
+        while ring.len() >= self.capacity {
+            ring.pop_front();
+        }
+        ring.push_back(Json::obj(pairs));
+    }
+
+    /// Total events ever appended (>= retained).
+    pub fn appended(&self) -> u64 {
+        self.appended.load(Ordering::SeqCst)
+    }
+
+    pub fn events(&self) -> Vec<Json> {
+        lock(&self.ring).iter().cloned().collect()
+    }
+
+    /// One compact JSON object per line, oldest first.
+    pub fn jsonl(&self) -> String {
+        let mut out = String::new();
+        for e in lock(&self.ring).iter() {
+            out.push_str(&e.to_string_compact());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Per-signal pending→firing→resolved state machines over a stream of
+/// [`AlertSignal`] ticks, journaling every transition.
+pub struct AlertEngine {
+    inner: Mutex<BTreeMap<String, AlertRecord>>,
+}
+
+impl AlertEngine {
+    pub fn new() -> AlertEngine {
+        AlertEngine {
+            inner: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Feed one evaluation tick. Signals are matched to state machines by
+    /// `name`; a name not seen before starts `inactive`.
+    pub fn observe(&self, now_us: u64, signals: &[AlertSignal], journal: &EventJournal) {
+        let mut inner = lock(&self.inner);
+        for s in signals {
+            let rec = inner.entry(s.name.clone()).or_insert_with(|| AlertRecord {
+                signal: s.clone(),
+                state: AlertState::Inactive,
+                state_since_us: now_us,
+                burn_since_us: None,
+                calm_since_us: None,
+                transitions: 0,
+            });
+            rec.signal = s.clone();
+            if s.burning {
+                rec.burn_since_us.get_or_insert(now_us);
+                rec.calm_since_us = None;
+            } else {
+                rec.calm_since_us.get_or_insert(now_us);
+                rec.burn_since_us = None;
+            }
+            let next = match rec.state {
+                AlertState::Inactive | AlertState::Resolved => {
+                    if s.burning {
+                        Some(AlertState::Pending)
+                    } else {
+                        None
+                    }
+                }
+                AlertState::Pending => {
+                    if !s.burning {
+                        // Blip: never fired, cancel silently back to inactive.
+                        Some(AlertState::Inactive)
+                    } else if now_us.saturating_sub(rec.burn_since_us.unwrap_or(now_us))
+                        >= s.pending_for_us
+                    {
+                        Some(AlertState::Firing)
+                    } else {
+                        None
+                    }
+                }
+                AlertState::Firing => {
+                    if !s.burning
+                        && now_us.saturating_sub(rec.calm_since_us.unwrap_or(now_us))
+                            >= s.clear_for_us
+                    {
+                        Some(AlertState::Resolved)
+                    } else {
+                        None
+                    }
+                }
+            };
+            if let Some(next) = next {
+                let prev = rec.state;
+                rec.state = next;
+                rec.state_since_us = now_us;
+                rec.transitions += 1;
+                journal.record(
+                    now_us,
+                    "alert",
+                    vec![
+                        ("alert", Json::str(s.name.clone())),
+                        ("alert_kind", Json::str(s.kind.clone())),
+                        ("from", Json::str(prev.name())),
+                        ("to", Json::str(next.name())),
+                        ("fast_burn", Json::num(s.fast_burn)),
+                        ("slow_burn", Json::num(s.slow_burn)),
+                        ("detail", Json::str(s.detail.clone())),
+                    ],
+                );
+            }
+        }
+    }
+
+    pub fn snapshot(&self) -> Vec<AlertView> {
+        lock(&self.inner)
+            .values()
+            .map(|r| AlertView {
+                name: r.signal.name.clone(),
+                kind: r.signal.kind.clone(),
+                variant: r.signal.variant.clone(),
+                state: r.state,
+                state_since_us: r.state_since_us,
+                fast_burn: r.signal.fast_burn,
+                slow_burn: r.signal.slow_burn,
+                fast_window_us: r.signal.fast_window_us,
+                slow_window_us: r.signal.slow_window_us,
+                transitions: r.transitions,
+                detail: r.signal.detail.clone(),
+            })
+            .collect()
+    }
+
+    /// Names of alerts currently firing.
+    pub fn firing(&self) -> Vec<String> {
+        self.snapshot()
+            .into_iter()
+            .filter(|a| a.state == AlertState::Firing)
+            .map(|a| a.name)
+            .collect()
+    }
+
+    /// The `GET /v1/alerts` document.
+    pub fn alerts_json(&self) -> Json {
+        let alerts: Vec<Json> = self
+            .snapshot()
+            .into_iter()
+            .map(|a| {
+                Json::obj(vec![
+                    ("name", Json::str(a.name)),
+                    ("kind", Json::str(a.kind)),
+                    (
+                        "variant",
+                        a.variant.map(Json::str).unwrap_or(Json::Null),
+                    ),
+                    ("state", Json::str(a.state.name())),
+                    ("state_since_us", Json::num(a.state_since_us as f64)),
+                    ("fast_burn", Json::num(a.fast_burn)),
+                    ("slow_burn", Json::num(a.slow_burn)),
+                    ("fast_window_us", Json::num(a.fast_window_us as f64)),
+                    ("slow_window_us", Json::num(a.slow_window_us as f64)),
+                    ("transitions", Json::num(a.transitions as f64)),
+                    ("detail", Json::str(a.detail)),
+                ])
+            })
+            .collect();
+        let firing = self.firing();
+        Json::obj(vec![
+            ("alerts", Json::Arr(alerts)),
+            (
+                "firing",
+                Json::Arr(firing.into_iter().map(Json::str).collect()),
+            ),
+        ])
+    }
+}
+
+impl Default for AlertEngine {
+    fn default() -> Self {
+        AlertEngine::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn signal(name: &str, burning: bool) -> AlertSignal {
+        AlertSignal {
+            name: name.into(),
+            kind: "availability".into(),
+            variant: Some("w4".into()),
+            burning,
+            fast_burn: if burning { 20.0 } else { 0.0 },
+            slow_burn: if burning { 8.0 } else { 0.0 },
+            fast_window_us: 300_000_000,
+            slow_window_us: 3_600_000_000,
+            pending_for_us: 2_000_000,
+            clear_for_us: 3_000_000,
+            detail: "test".into(),
+        }
+    }
+
+    fn state_of(e: &AlertEngine, name: &str) -> AlertState {
+        e.snapshot()
+            .into_iter()
+            .find(|a| a.name == name)
+            .expect("alert exists")
+            .state
+    }
+
+    #[test]
+    fn pending_then_firing_then_resolved() {
+        let j = EventJournal::new(64);
+        let e = AlertEngine::new();
+        // Burning at t=0 -> pending.
+        e.observe(0, &[signal("avail", true)], &j);
+        assert_eq!(state_of(&e, "avail"), AlertState::Pending);
+        // Still burning but pending_for (2s) not yet served.
+        e.observe(1_000_000, &[signal("avail", true)], &j);
+        assert_eq!(state_of(&e, "avail"), AlertState::Pending);
+        // 2s of continuous burn -> firing.
+        e.observe(2_000_000, &[signal("avail", true)], &j);
+        assert_eq!(state_of(&e, "avail"), AlertState::Firing);
+        assert_eq!(e.firing(), vec!["avail".to_string()]);
+        // Calm, but clear_for (3s) not yet served.
+        e.observe(3_000_000, &[signal("avail", false)], &j);
+        assert_eq!(state_of(&e, "avail"), AlertState::Firing);
+        // 3s of calm -> resolved.
+        e.observe(6_000_000, &[signal("avail", false)], &j);
+        assert_eq!(state_of(&e, "avail"), AlertState::Resolved);
+        assert!(e.firing().is_empty());
+
+        // Transitions journaled in order.
+        let kinds: Vec<(String, String)> = j
+            .events()
+            .iter()
+            .map(|ev| {
+                (
+                    ev.get("from").unwrap().as_str().unwrap().to_string(),
+                    ev.get("to").unwrap().as_str().unwrap().to_string(),
+                )
+            })
+            .collect();
+        assert_eq!(
+            kinds,
+            vec![
+                ("inactive".to_string(), "pending".to_string()),
+                ("pending".to_string(), "firing".to_string()),
+                ("firing".to_string(), "resolved".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn blip_cancels_pending_without_firing() {
+        let j = EventJournal::new(64);
+        let e = AlertEngine::new();
+        e.observe(0, &[signal("avail", true)], &j);
+        e.observe(1_000_000, &[signal("avail", false)], &j);
+        assert_eq!(state_of(&e, "avail"), AlertState::Inactive);
+        // A fresh burn starts the pending clock over.
+        e.observe(2_000_000, &[signal("avail", true)], &j);
+        e.observe(3_500_000, &[signal("avail", true)], &j);
+        assert_eq!(state_of(&e, "avail"), AlertState::Pending, "only 1.5s burn");
+        e.observe(4_000_000, &[signal("avail", true)], &j);
+        assert_eq!(state_of(&e, "avail"), AlertState::Firing);
+    }
+
+    #[test]
+    fn resolved_reburn_goes_pending_again() {
+        let j = EventJournal::new(64);
+        let e = AlertEngine::new();
+        e.observe(0, &[signal("a", true)], &j);
+        e.observe(2_000_000, &[signal("a", true)], &j);
+        e.observe(3_000_000, &[signal("a", false)], &j);
+        e.observe(6_000_000, &[signal("a", false)], &j);
+        assert_eq!(state_of(&e, "a"), AlertState::Resolved);
+        e.observe(7_000_000, &[signal("a", true)], &j);
+        assert_eq!(state_of(&e, "a"), AlertState::Pending);
+    }
+
+    #[test]
+    fn flap_does_not_resolve_early() {
+        let j = EventJournal::new(64);
+        let e = AlertEngine::new();
+        e.observe(0, &[signal("a", true)], &j);
+        e.observe(2_000_000, &[signal("a", true)], &j);
+        assert_eq!(state_of(&e, "a"), AlertState::Firing);
+        // Calm 2s (< clear_for 3s), reburn, calm again: clock restarts.
+        e.observe(4_000_000, &[signal("a", false)], &j);
+        e.observe(5_000_000, &[signal("a", true)], &j);
+        e.observe(6_000_000, &[signal("a", false)], &j);
+        e.observe(8_000_000, &[signal("a", false)], &j);
+        assert_eq!(state_of(&e, "a"), AlertState::Firing, "only 2s calm");
+        e.observe(9_000_000, &[signal("a", false)], &j);
+        assert_eq!(state_of(&e, "a"), AlertState::Resolved);
+    }
+
+    #[test]
+    fn journal_ring_bounds_and_seq_survive_eviction() {
+        let j = EventJournal::new(3);
+        for i in 0..10u64 {
+            j.record(i, "tick", vec![("i", Json::num(i as f64))]);
+        }
+        assert_eq!(j.appended(), 10);
+        let events = j.events();
+        assert_eq!(events.len(), 3);
+        assert_eq!(events[0].get("seq").unwrap().as_u64(), Some(7));
+        assert_eq!(events[2].get("seq").unwrap().as_u64(), Some(9));
+        // JSONL: one parseable object per line, required keys present.
+        let jsonl = j.jsonl();
+        assert_eq!(jsonl.lines().count(), 3);
+        for line in jsonl.lines() {
+            let ev = crate::util::json::parse(line).expect("valid json line");
+            assert!(ev.get("ts_us").is_some());
+            assert!(ev.get("seq").is_some());
+            assert!(ev.get("kind").is_some());
+        }
+    }
+
+    #[test]
+    fn alerts_json_shape() {
+        let j = EventJournal::new(8);
+        let e = AlertEngine::new();
+        e.observe(0, &[signal("avail", true)], &j);
+        e.observe(2_000_000, &[signal("avail", true)], &j);
+        let doc = e.alerts_json();
+        let alerts = doc.get("alerts").unwrap().as_arr().unwrap();
+        assert_eq!(alerts.len(), 1);
+        assert_eq!(alerts[0].get("state").unwrap().as_str(), Some("firing"));
+        assert_eq!(alerts[0].get("variant").unwrap().as_str(), Some("w4"));
+        let firing = doc.get("firing").unwrap().as_arr().unwrap();
+        assert_eq!(firing[0].as_str(), Some("avail"));
+    }
+}

@@ -1,0 +1,358 @@
+//! Drift watchdogs: slow degradations the SLO burn-rate math won't catch
+//! (std-only).
+//!
+//! A burn-rate alert needs a hard threshold crossed; drift is the other
+//! failure mode — latency creeping up inside its budget, or the xmp
+//! reference-agreement rate decaying as a corrupt backend serves
+//! plausible-but-wrong logits. Two detectors run on the sampler tick:
+//!
+//! - **Latency drift** (per variant): each tick observes the mean
+//!   service latency over a short tsdb window, smooths it with an EWMA,
+//!   and compares against a robust baseline — the median of a bounded
+//!   ring of past observations, with spread measured by the MAD (median
+//!   absolute deviation, scaled by 1.4826 to estimate sigma and floored
+//!   at a fraction of the median so a perfectly-flat baseline doesn't
+//!   hair-trigger). The detector alarms when the EWMA sits more than
+//!   `mad_sigmas` sigmas above the baseline median. The baseline keeps
+//!   absorbing observations while alarming, so a *permanent* new normal
+//!   eventually resolves on its own (~half the ring) — a watchdog, not a
+//!   pager of record.
+//! - **Agreement drift** (edge-global): the continuous form of the
+//!   corrupt-never-cached check. Each tick observes the xmp
+//!   reference-model agreement rate over a window of the edge's sampled
+//!   checks and alarms when its EWMA decays below the configured floor.
+//!
+//! Both emit [`AlertSignal`]s (deviation reported in the burn fields) so
+//! the [`crate::obs::alerts::AlertEngine`] gives them the same
+//! pending→firing→resolved lifecycle and journaling as the SLOs.
+
+use crate::obs::alerts::AlertSignal;
+use crate::obs::tsdb::Tsdb;
+use crate::util::stats;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Mutex, MutexGuard};
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+#[derive(Clone, Debug)]
+pub struct DriftConfig {
+    /// EWMA smoothing for the per-tick observation.
+    pub ewma_alpha: f64,
+    /// Baseline ring length (observations, i.e. sampler ticks).
+    pub baseline_len: usize,
+    /// Observations required before the latency detector may alarm.
+    pub min_baseline: usize,
+    /// Alarm when the EWMA exceeds median + this many sigmas.
+    pub mad_sigmas: f64,
+    /// Sigma floor as a fraction of the baseline median (guards the
+    /// MAD-is-zero case on flat baselines).
+    pub sigma_floor_frac: f64,
+    /// Tsdb lookback for each latency observation.
+    pub latency_window_us: u64,
+    /// Minimum latency samples inside the window to count a tick.
+    pub min_window_count: u64,
+    /// Tsdb lookback for each agreement observation.
+    pub agreement_window_us: u64,
+    /// Minimum reference checks inside the window to count a tick.
+    pub agreement_min_checks: u64,
+    /// Alarm when the EWMA agreement rate falls below this floor.
+    pub agreement_floor: f64,
+    /// pending→firing / firing→resolved dwell times for both watchdogs.
+    pub pending_for_us: u64,
+    pub clear_for_us: u64,
+}
+
+impl Default for DriftConfig {
+    fn default() -> DriftConfig {
+        DriftConfig {
+            ewma_alpha: 0.3,
+            baseline_len: 300,
+            min_baseline: 30,
+            mad_sigmas: 5.0,
+            sigma_floor_frac: 0.25,
+            latency_window_us: 10_000_000,
+            min_window_count: 5,
+            agreement_window_us: 60_000_000,
+            agreement_min_checks: 10,
+            agreement_floor: 0.95,
+            pending_for_us: 10_000_000,
+            clear_for_us: 15_000_000,
+        }
+    }
+}
+
+struct VariantDrift {
+    ewma: f64,
+    baseline: VecDeque<f64>,
+}
+
+struct AgreementDrift {
+    ewma_rate: f64,
+    seen: bool,
+}
+
+/// Stateful drift detectors, fed once per sampler tick via
+/// [`DriftDetector::evaluate`].
+pub struct DriftDetector {
+    cfg: DriftConfig,
+    variants: Mutex<BTreeMap<String, VariantDrift>>,
+    agreement: Mutex<AgreementDrift>,
+}
+
+impl DriftDetector {
+    pub fn new(cfg: DriftConfig) -> DriftDetector {
+        DriftDetector {
+            cfg,
+            variants: Mutex::new(BTreeMap::new()),
+            agreement: Mutex::new(AgreementDrift {
+                ewma_rate: 1.0,
+                seen: false,
+            }),
+        }
+    }
+
+    pub fn config(&self) -> &DriftConfig {
+        &self.cfg
+    }
+
+    /// Run both watchdogs against the store's current history and return
+    /// their signals (empty until enough history accumulates).
+    pub fn evaluate(&self, db: &Tsdb) -> Vec<AlertSignal> {
+        let mut out = Vec::new();
+        self.latency_signals(db, &mut out);
+        if let Some(s) = self.agreement_signal(db) {
+            out.push(s);
+        }
+        out
+    }
+
+    fn latency_signals(&self, db: &Tsdb, out: &mut Vec<AlertSignal>) {
+        let w = match db.window(self.cfg.latency_window_us) {
+            Some(w) => w,
+            None => return,
+        };
+        let mut variants = lock(&self.variants);
+        for v in &w.variants {
+            if v.latency.count() < self.cfg.min_window_count.max(1) {
+                continue;
+            }
+            let obs = v.latency.mean_us();
+            let d = variants.entry(v.name.clone()).or_insert_with(|| VariantDrift {
+                ewma: obs,
+                baseline: VecDeque::new(),
+            });
+            d.ewma += self.cfg.ewma_alpha * (obs - d.ewma);
+            // Baseline stats over past observations only, so the current
+            // tick can't vouch for itself.
+            let (burning, sigmas, median, sigma) = if d.baseline.len() >= self.cfg.min_baseline {
+                let xs: Vec<f64> = d.baseline.iter().copied().collect();
+                let median = stats::median(&xs);
+                let devs: Vec<f64> = xs.iter().map(|x| (x - median).abs()).collect();
+                let mad = stats::median(&devs);
+                let sigma = (1.4826 * mad)
+                    .max(self.cfg.sigma_floor_frac * median.abs())
+                    .max(1.0);
+                let sigmas = (d.ewma - median) / sigma;
+                (sigmas > self.cfg.mad_sigmas, sigmas, median, sigma)
+            } else {
+                (false, 0.0, 0.0, 0.0)
+            };
+            while d.baseline.len() >= self.cfg.baseline_len.max(1) {
+                d.baseline.pop_front();
+            }
+            d.baseline.push_back(obs);
+            out.push(AlertSignal {
+                name: format!("latency_drift:{}", v.name),
+                kind: "latency_drift".to_string(),
+                variant: Some(v.name.clone()),
+                burning,
+                fast_burn: sigmas.max(0.0),
+                slow_burn: self.cfg.mad_sigmas,
+                fast_window_us: w.span_us,
+                slow_window_us: w.span_us,
+                pending_for_us: self.cfg.pending_for_us,
+                clear_for_us: self.cfg.clear_for_us,
+                detail: format!(
+                    "ewma mean {:.0}us vs baseline median {:.0}us (sigma {:.0}us, \
+                     {:.1} sigmas, alarm > {:.1})",
+                    d.ewma, median, sigma, sigmas, self.cfg.mad_sigmas,
+                ),
+            });
+        }
+    }
+
+    fn agreement_signal(&self, db: &Tsdb) -> Option<AlertSignal> {
+        let w = db.window(self.cfg.agreement_window_us)?;
+        let checks = w.edge.agreement_checks;
+        if checks < self.cfg.agreement_min_checks.max(1) {
+            return None;
+        }
+        let rate = 1.0 - w.edge.agreement_failures as f64 / checks as f64;
+        let mut a = lock(&self.agreement);
+        if !a.seen {
+            a.ewma_rate = rate;
+            a.seen = true;
+        } else {
+            a.ewma_rate += self.cfg.ewma_alpha * (rate - a.ewma_rate);
+        }
+        let burning = a.ewma_rate < self.cfg.agreement_floor;
+        // Deficit relative to the allowed disagreement budget, so the
+        // reported magnitude reads like a burn rate.
+        let budget = (1.0 - self.cfg.agreement_floor).max(1e-9);
+        let deficit = ((1.0 - a.ewma_rate) / budget).max(0.0);
+        Some(AlertSignal {
+            name: "agreement_drift".to_string(),
+            kind: "agreement_drift".to_string(),
+            variant: None,
+            burning,
+            fast_burn: deficit,
+            slow_burn: deficit,
+            fast_window_us: w.span_us,
+            slow_window_us: w.span_us,
+            pending_for_us: self.cfg.pending_for_us,
+            clear_for_us: self.cfg.clear_for_us,
+            detail: format!(
+                "ewma agreement {:.4} over {}/{} checks (floor {:.4})",
+                a.ewma_rate, w.edge.agreement_failures, checks, self.cfg.agreement_floor,
+            ),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::tsdb::{EdgeCounters, GatewayCounters, Sample, VariantSample};
+    use crate::util::stats::LatencyHistogram;
+
+    fn push_lat(db: &Tsdb, at_us: u64, cum: &LatencyHistogram, checks: u64, failures: u64) {
+        let mut v = VariantSample::named("w4");
+        v.responses = cum.count();
+        v.requests = cum.count();
+        v.latency_buckets = *cum.buckets();
+        v.latency_sum_us = cum.sum_us();
+        v.latency_max_us = cum.max_us();
+        db.push(Sample {
+            at_us,
+            edge: EdgeCounters {
+                agreement_checks: checks,
+                agreement_failures: failures,
+                ..EdgeCounters::default()
+            },
+            gateway: GatewayCounters::default(),
+            variants: vec![v],
+        });
+    }
+
+    fn cfg_fast() -> DriftConfig {
+        DriftConfig {
+            min_baseline: 10,
+            baseline_len: 64,
+            latency_window_us: 2_000_000,
+            min_window_count: 3,
+            agreement_window_us: 5_000_000,
+            agreement_min_checks: 5,
+            ..DriftConfig::default()
+        }
+    }
+
+    fn find<'a>(signals: &'a [AlertSignal], name: &str) -> Option<&'a AlertSignal> {
+        signals.iter().find(|s| s.name == name)
+    }
+
+    #[test]
+    fn stable_latency_stays_silent() {
+        let db = Tsdb::new(256);
+        let det = DriftDetector::new(cfg_fast());
+        let mut cum = LatencyHistogram::default();
+        let mut last = Vec::new();
+        for t in 0..40u64 {
+            for _ in 0..10 {
+                cum.record_us(290.0 + (t % 3) as f64 * 10.0); // mild jitter
+            }
+            push_lat(&db, t * 1_000_000, &cum, 0, 0);
+            last = det.evaluate(&db);
+        }
+        let s = find(&last, "latency_drift:w4").expect("signal present");
+        assert!(!s.burning, "stable traffic must not alarm: {}", s.detail);
+    }
+
+    #[test]
+    fn latency_regression_fires_then_new_normal_resolves() {
+        let db = Tsdb::new(512);
+        let det = DriftDetector::new(cfg_fast());
+        let mut cum = LatencyHistogram::default();
+        // 20 ticks of ~300us baseline.
+        for t in 0..20u64 {
+            for _ in 0..10 {
+                cum.record_us(300.0);
+            }
+            push_lat(&db, t * 1_000_000, &cum, 0, 0);
+            det.evaluate(&db);
+        }
+        // Latency jumps to ~3ms: the EWMA crosses within a few ticks.
+        let mut fired = false;
+        for t in 20..30u64 {
+            for _ in 0..10 {
+                cum.record_us(3_000.0);
+            }
+            push_lat(&db, t * 1_000_000, &cum, 0, 0);
+            let signals = det.evaluate(&db);
+            fired |= find(&signals, "latency_drift:w4").map_or(false, |s| s.burning);
+        }
+        assert!(fired, "10x latency regression must alarm");
+        // Hold the new level long enough for the baseline ring to absorb
+        // it: the watchdog accepts the new normal and stops alarming.
+        let mut last_burning = true;
+        for t in 30..140u64 {
+            for _ in 0..10 {
+                cum.record_us(3_000.0);
+            }
+            push_lat(&db, t * 1_000_000, &cum, 0, 0);
+            let signals = det.evaluate(&db);
+            last_burning = find(&signals, "latency_drift:w4").map_or(false, |s| s.burning);
+        }
+        assert!(!last_burning, "a sustained new normal re-baselines");
+    }
+
+    #[test]
+    fn agreement_decay_fires_and_clean_stays_silent() {
+        // Clean run: 100% agreement.
+        let db = Tsdb::new(256);
+        let det = DriftDetector::new(cfg_fast());
+        let mut last = Vec::new();
+        let lat = LatencyHistogram::default();
+        for t in 0..10u64 {
+            push_lat(&db, t * 1_000_000, &lat, t * 20, 0);
+            last = det.evaluate(&db);
+        }
+        let s = find(&last, "agreement_drift").expect("signal present");
+        assert!(!s.burning, "clean agreement must not alarm: {}", s.detail);
+
+        // Corrupt run: 25% disagreement decays the EWMA under the floor.
+        let db = Tsdb::new(256);
+        let det = DriftDetector::new(cfg_fast());
+        let mut fired = false;
+        for t in 0..10u64 {
+            push_lat(&db, t * 1_000_000, &lat, t * 20, t * 5);
+            let signals = det.evaluate(&db);
+            fired |= find(&signals, "agreement_drift").map_or(false, |s| s.burning);
+        }
+        assert!(fired, "25% disagreement must alarm against a 95% floor");
+    }
+
+    #[test]
+    fn too_little_volume_is_ignored() {
+        let db = Tsdb::new(64);
+        let det = DriftDetector::new(cfg_fast());
+        let mut cum = LatencyHistogram::default();
+        push_lat(&db, 0, &cum, 0, 0);
+        cum.record_us(100.0); // 1 sample < min_window_count
+        push_lat(&db, 1_000_000, &cum, 2, 1); // 2 checks < min_checks
+        let signals = det.evaluate(&db);
+        assert!(find(&signals, "latency_drift:w4").is_none());
+        assert!(find(&signals, "agreement_drift").is_none());
+    }
+}

@@ -21,14 +21,41 @@
 //!   the last N completed traces plus slow-trace exemplars pinned until
 //!   read, served as `GET /v1/trace` / `GET /v1/trace/<id>` and exported as
 //!   Chrome trace-event JSON ([`chrome::chrome_export`], Perfetto-loadable).
+//!
+//! On top of those, the SLO layer watches the stack over time:
+//!
+//! - **Time-series store** ([`tsdb`]): a fixed-memory ring of cumulative
+//!   metric snapshots taken by a background sampler, answering counter
+//!   rates and histogram quantiles over arbitrary lookback windows.
+//! - **SLO engine** ([`slo`]): declarative objectives (availability, p99
+//!   latency vs the DSE-modeled fps clock, deadline-miss rate, xmp
+//!   reference agreement) evaluated as multi-window burn-rate alerts.
+//! - **Alerting + events** ([`alerts`]): per-alert pending→firing→resolved
+//!   state machines behind `GET /v1/alerts`, with every transition (plus
+//!   worker restarts, breaker opens, degraded-mode entries) journaled as
+//!   JSONL behind `GET /v1/events`.
+//! - **Drift watchdogs** ([`drift`]): EWMA+MAD latency-drift detection per
+//!   variant and an agreement-rate decay watchdog over the xmp
+//!   reference-model checks.
 
+pub mod alerts;
 pub mod chrome;
+pub mod drift;
 pub mod profile;
 pub mod recorder;
+pub mod slo;
+pub mod tsdb;
 
+pub use alerts::{AlertEngine, AlertSignal, AlertState, AlertView, EventJournal};
 pub use chrome::chrome_export;
+pub use drift::{DriftConfig, DriftDetector};
 pub use profile::{LayerProfile, ModelProfile, StageTimes};
 pub use recorder::{FlightRecorder, RecorderConfig};
+pub use slo::{Slo, SloKind, SloSpec};
+pub use tsdb::{
+    EdgeCounters, GatewayCounters, Sample, Sampler, Tsdb, VariantSample, VariantWindow,
+    WindowDelta,
+};
 
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, Ordering};

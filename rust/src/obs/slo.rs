@@ -1,0 +1,562 @@
+//! Declarative SLOs evaluated as multi-window burn-rate alerts (std-only).
+//!
+//! An SLO states a good-event ratio target (e.g. 99.9% of requests
+//! succeed). The *burn rate* over a window is the observed bad-event
+//! ratio divided by the budgeted bad ratio, `(bad/total) / (1 - target)`:
+//! burn 1.0 spends the error budget exactly at the sustainable pace,
+//! burn 14.4 exhausts 2% of a 30-day budget in one hour. Following the
+//! multi-window discipline, an SLO "burns" only when **both** a fast
+//! window (default 5 m — is it happening *now*?) and a slow window
+//! (default 1 h — is it sustained enough to matter?) exceed their
+//! thresholds (defaults 14.4× / 6×); the fast window makes alerts reset
+//! quickly once the cause is fixed, the slow window suppresses blips.
+//! Windows clamp to the history the [`Tsdb`] actually holds, so a fresh
+//! server evaluates real burn rates from its second sample onward.
+//!
+//! Four objective kinds cover the serving stack: `availability` (worker
+//! errors vs responses), `latency` (p-quantile budget vs the variant's
+//! DSE-modeled fps clock — the paper's throughput figure turned into a
+//! per-variant latency bound), `deadline` (deadline-expired sheds vs
+//! requests), and `agreement` (xmp reference-model disagreements vs
+//! checks, the continuous form of the corrupt-never-cached invariant).
+
+use crate::obs::alerts::AlertSignal;
+use crate::obs::tsdb::{Tsdb, VariantWindow, WindowDelta};
+use crate::util::json::Json;
+use crate::util::stats::LatencyHistogram;
+
+/// Objective family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SloKind {
+    Availability,
+    Latency,
+    DeadlineMiss,
+    Agreement,
+}
+
+impl SloKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SloKind::Availability => "availability",
+            SloKind::Latency => "latency",
+            SloKind::DeadlineMiss => "deadline",
+            SloKind::Agreement => "agreement",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SloKind> {
+        match s {
+            "availability" => Some(SloKind::Availability),
+            "latency" => Some(SloKind::Latency),
+            "deadline" => Some(SloKind::DeadlineMiss),
+            "agreement" => Some(SloKind::Agreement),
+            _ => None,
+        }
+    }
+}
+
+/// One declarative objective.
+#[derive(Clone, Debug)]
+pub struct Slo {
+    /// Family name; per-variant instances get `name:variant` alert keys.
+    pub name: String,
+    pub kind: SloKind,
+    /// Good-event ratio target in (0, 1), e.g. 0.999.
+    pub target: f64,
+    pub fast_window_us: u64,
+    pub slow_window_us: u64,
+    /// Burn-rate thresholds; both windows must exceed theirs to burn.
+    pub fast_burn: f64,
+    pub slow_burn: f64,
+    /// Continuous-burn duration before pending escalates to firing.
+    pub pending_for_us: u64,
+    /// Continuous-calm duration before firing resolves.
+    pub clear_for_us: u64,
+    /// Latency only: fixed threshold in µs; 0 derives from the fps clock.
+    pub latency_threshold_us: f64,
+    /// Latency only: derived threshold = factor × (1e6 / fpga_fps), i.e.
+    /// this many DSE-modeled frame periods.
+    pub latency_fps_factor: f64,
+    /// Restrict to one variant (None = every variant; Agreement is
+    /// edge-global and ignores this).
+    pub variant: Option<String>,
+    /// Minimum in-window total before the objective can burn at all —
+    /// a handful of requests must not page anyone.
+    pub min_events: u64,
+}
+
+impl Slo {
+    /// A named objective with the multi-window defaults (5 m / 1 h,
+    /// 14.4× / 6×, 10 s pending, 15 s clear).
+    pub fn new(name: &str, kind: SloKind, target: f64) -> Slo {
+        Slo {
+            name: name.to_string(),
+            kind,
+            target,
+            fast_window_us: 300_000_000,
+            slow_window_us: 3_600_000_000,
+            fast_burn: 14.4,
+            slow_burn: 6.0,
+            pending_for_us: 10_000_000,
+            clear_for_us: 15_000_000,
+            latency_threshold_us: 0.0,
+            latency_fps_factor: 4.0,
+            variant: None,
+            min_events: 20,
+        }
+    }
+
+    /// The effective latency threshold for a variant: the fixed bound if
+    /// configured, else `latency_fps_factor` modeled frame periods, else
+    /// 1 s when the profile carries no fps estimate.
+    pub fn latency_threshold_for(&self, v: &VariantWindow) -> f64 {
+        if self.latency_threshold_us > 0.0 {
+            self.latency_threshold_us
+        } else if v.fpga_fps > 0.0 {
+            self.latency_fps_factor * 1e6 / v.fpga_fps
+        } else {
+            1e6
+        }
+    }
+}
+
+/// A set of objectives, loadable from JSON (`--slo FILE`) or the built-in
+/// default (`--slo default`).
+#[derive(Clone, Debug, Default)]
+pub struct SloSpec {
+    pub slos: Vec<Slo>,
+}
+
+impl SloSpec {
+    /// The built-in spec: 99.9% availability, 99% of requests within 4
+    /// modeled frame periods, 99.9% deadline attainment, 98% xmp
+    /// reference agreement.
+    pub fn default_spec() -> SloSpec {
+        let mut latency = Slo::new("latency_p99", SloKind::Latency, 0.99);
+        latency.latency_fps_factor = 4.0;
+        let mut agreement = Slo::new("agreement", SloKind::Agreement, 0.98);
+        agreement.min_events = 10;
+        SloSpec {
+            slos: vec![
+                Slo::new("availability", SloKind::Availability, 0.999),
+                latency,
+                Slo::new("deadline", SloKind::DeadlineMiss, 0.999),
+                agreement,
+            ],
+        }
+    }
+
+    /// Parse a spec document: `{"slos": [{...}, ...]}`. Every field except
+    /// `name` and `kind` is optional and falls back to the [`Slo::new`]
+    /// defaults; windows and durations are given in milliseconds.
+    pub fn from_json(text: &str) -> Result<SloSpec, String> {
+        let doc = crate::util::json::parse(text).map_err(|e| e.to_string())?;
+        let arr = doc
+            .get("slos")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| "spec must have a \"slos\" array".to_string())?;
+        let mut slos = Vec::with_capacity(arr.len());
+        for (i, item) in arr.iter().enumerate() {
+            let kind_name = item
+                .get("kind")
+                .and_then(|k| k.as_str())
+                .ok_or_else(|| format!("slos[{i}]: missing \"kind\""))?;
+            let kind = SloKind::parse(kind_name).ok_or_else(|| {
+                format!(
+                    "slos[{i}]: unknown kind {kind_name:?} \
+                     (availability, latency, deadline, agreement)"
+                )
+            })?;
+            let name = item
+                .get("name")
+                .and_then(|n| n.as_str())
+                .unwrap_or(kind.name());
+            let mut slo = Slo::new(name, kind, 0.999);
+            let f = |key: &str, dflt: f64| item.get(key).and_then(|v| v.as_f64()).unwrap_or(dflt);
+            slo.target = f("target", slo.target);
+            if !(0.0..1.0).contains(&slo.target) {
+                return Err(format!("slos[{i}]: target must be in [0, 1)"));
+            }
+            slo.fast_window_us = (f("fast_window_ms", slo.fast_window_us as f64 / 1e3) * 1e3) as u64;
+            slo.slow_window_us = (f("slow_window_ms", slo.slow_window_us as f64 / 1e3) * 1e3) as u64;
+            slo.fast_burn = f("fast_burn", slo.fast_burn);
+            slo.slow_burn = f("slow_burn", slo.slow_burn);
+            slo.pending_for_us = (f("pending_for_ms", slo.pending_for_us as f64 / 1e3) * 1e3) as u64;
+            slo.clear_for_us = (f("clear_for_ms", slo.clear_for_us as f64 / 1e3) * 1e3) as u64;
+            slo.latency_threshold_us = f("latency_threshold_us", slo.latency_threshold_us);
+            slo.latency_fps_factor = f("latency_fps_factor", slo.latency_fps_factor);
+            slo.min_events = f("min_events", slo.min_events as f64) as u64;
+            slo.variant = item
+                .get("variant")
+                .and_then(|v| v.as_str())
+                .map(|s| s.to_string());
+            slos.push(slo);
+        }
+        Ok(SloSpec { slos })
+    }
+
+    /// Serialize (the inverse of [`SloSpec::from_json`]'s schema).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "slos",
+            Json::Arr(
+                self.slos
+                    .iter()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("name", Json::str(s.name.clone())),
+                            ("kind", Json::str(s.kind.name())),
+                            ("target", Json::num(s.target)),
+                            ("fast_window_ms", Json::num(s.fast_window_us as f64 / 1e3)),
+                            ("slow_window_ms", Json::num(s.slow_window_us as f64 / 1e3)),
+                            ("fast_burn", Json::num(s.fast_burn)),
+                            ("slow_burn", Json::num(s.slow_burn)),
+                            ("pending_for_ms", Json::num(s.pending_for_us as f64 / 1e3)),
+                            ("clear_for_ms", Json::num(s.clear_for_us as f64 / 1e3)),
+                            ("latency_threshold_us", Json::num(s.latency_threshold_us)),
+                            ("latency_fps_factor", Json::num(s.latency_fps_factor)),
+                            (
+                                "variant",
+                                s.variant.clone().map(Json::str).unwrap_or(Json::Null),
+                            ),
+                            ("min_events", Json::num(s.min_events as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )])
+    }
+}
+
+/// Samples in `h` at or above `threshold_us`, counted conservatively: a
+/// log2 bucket counts only when its *lower* bound is at or past the
+/// threshold (no bucket partially below the line is blamed).
+fn count_at_or_above(h: &LatencyHistogram, threshold_us: f64) -> u64 {
+    let mut n = 0;
+    for (i, &c) in h.buckets().iter().enumerate() {
+        // Bucket i spans [bound(i)/2, bound(i)); bucket 0 starts at 0.
+        let lower = if i == 0 { 0.0 } else { LatencyHistogram::bound(i) / 2.0 };
+        if lower >= threshold_us {
+            n += c;
+        }
+    }
+    n
+}
+
+/// (bad, total) for one objective over one window delta, for one variant
+/// (None for edge-global kinds).
+fn bad_total(slo: &Slo, w: &WindowDelta, v: Option<&VariantWindow>) -> (u64, u64) {
+    match (slo.kind, v) {
+        (SloKind::Availability, Some(v)) => (v.errors, v.errors + v.responses),
+        (SloKind::Latency, Some(v)) => {
+            let thr = slo.latency_threshold_for(v);
+            (count_at_or_above(&v.latency, thr), v.latency.count())
+        }
+        (SloKind::DeadlineMiss, Some(v)) => (v.shed_expired, v.requests),
+        (SloKind::Agreement, _) => (w.edge.agreement_failures, w.edge.agreement_checks),
+        _ => (0, 0),
+    }
+}
+
+/// Burn rate `(bad/total) / (1 - target)`; 0 below the event floor.
+fn burn_rate(slo: &Slo, bad: u64, total: u64) -> f64 {
+    if total < slo.min_events.max(1) {
+        return 0.0;
+    }
+    let budget = (1.0 - slo.target).max(1e-9);
+    (bad as f64 / total as f64) / budget
+}
+
+fn signal(
+    slo: &Slo,
+    key: String,
+    variant: Option<String>,
+    fast: (u64, u64),
+    slow: (u64, u64),
+    fast_span_us: u64,
+    slow_span_us: u64,
+    extra: &str,
+) -> AlertSignal {
+    let fast_burn = burn_rate(slo, fast.0, fast.1);
+    let slow_burn = burn_rate(slo, slow.0, slow.1);
+    let burning = fast_burn >= slo.fast_burn && slow_burn >= slo.slow_burn;
+    AlertSignal {
+        name: key,
+        kind: slo.kind.name().to_string(),
+        variant,
+        burning,
+        fast_burn,
+        slow_burn,
+        fast_window_us: fast_span_us,
+        slow_window_us: slow_span_us,
+        pending_for_us: slo.pending_for_us,
+        clear_for_us: slo.clear_for_us,
+        detail: format!(
+            "{}bad {}/{} over {:.1}s (fast {:.1}x) and {}/{} over {:.1}s (slow {:.1}x); \
+             target {:.4}, thresholds {:.1}x/{:.1}x",
+            extra,
+            fast.0,
+            fast.1,
+            fast_span_us as f64 / 1e6,
+            fast_burn,
+            slow.0,
+            slow.1,
+            slow_span_us as f64 / 1e6,
+            slow_burn,
+            slo.target,
+            slo.fast_burn,
+            slo.slow_burn,
+        ),
+    }
+}
+
+/// Evaluate every objective in `spec` against the store's current
+/// history. Returns one [`AlertSignal`] per (objective × variant) with at
+/// least two samples of history; feed the result to
+/// [`crate::obs::alerts::AlertEngine::observe`].
+pub fn evaluate(spec: &SloSpec, db: &Tsdb) -> Vec<AlertSignal> {
+    let mut out = Vec::new();
+    for slo in &spec.slos {
+        let fast = match db.window(slo.fast_window_us) {
+            Some(w) => w,
+            None => continue,
+        };
+        let slow = match db.window(slo.slow_window_us) {
+            Some(w) => w,
+            None => continue,
+        };
+        if slo.kind == SloKind::Agreement {
+            let f = bad_total(slo, &fast, None);
+            let s = bad_total(slo, &slow, None);
+            out.push(signal(
+                slo,
+                slo.name.clone(),
+                None,
+                f,
+                s,
+                fast.span_us,
+                slow.span_us,
+                "",
+            ));
+            continue;
+        }
+        for v in &fast.variants {
+            if let Some(only) = &slo.variant {
+                if only != &v.name {
+                    continue;
+                }
+            }
+            let sv = match slow.variant(&v.name) {
+                Some(sv) => sv,
+                None => continue,
+            };
+            let f = bad_total(slo, &fast, Some(v));
+            let s = bad_total(slo, &slow, Some(sv));
+            let extra = if slo.kind == SloKind::Latency {
+                format!("threshold {:.0}us; ", slo.latency_threshold_for(v))
+            } else {
+                String::new()
+            };
+            out.push(signal(
+                slo,
+                format!("{}:{}", slo.name, v.name),
+                Some(v.name.clone()),
+                f,
+                s,
+                fast.span_us,
+                slow.span_us,
+                &extra,
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::tsdb::{EdgeCounters, GatewayCounters, Sample, VariantSample};
+
+    fn push_sample(
+        db: &Tsdb,
+        at_us: u64,
+        responses: u64,
+        errors: u64,
+        lat: &LatencyHistogram,
+        checks: u64,
+        failures: u64,
+    ) {
+        let mut v = VariantSample::named("w4");
+        v.requests = responses + errors;
+        v.responses = responses;
+        v.errors = errors;
+        v.latency_buckets = *lat.buckets();
+        v.latency_sum_us = lat.sum_us();
+        v.latency_max_us = lat.max_us();
+        v.fpga_fps = 2000.0; // 500us frame period
+        db.push(Sample {
+            at_us,
+            edge: EdgeCounters {
+                agreement_checks: checks,
+                agreement_failures: failures,
+                ..EdgeCounters::default()
+            },
+            gateway: GatewayCounters::default(),
+            variants: vec![v],
+        });
+    }
+
+    fn find<'a>(signals: &'a [AlertSignal], name: &str) -> &'a AlertSignal {
+        signals
+            .iter()
+            .find(|s| s.name == name)
+            .unwrap_or_else(|| panic!("signal {name} present"))
+    }
+
+    #[test]
+    fn default_spec_has_all_kinds() {
+        let spec = SloSpec::default_spec();
+        let kinds: Vec<&str> = spec.slos.iter().map(|s| s.kind.name()).collect();
+        assert_eq!(kinds, vec!["availability", "latency", "deadline", "agreement"]);
+    }
+
+    #[test]
+    fn spec_json_round_trip() {
+        let spec = SloSpec::default_spec();
+        let text = spec.to_json().to_string_pretty();
+        let back = SloSpec::from_json(&text).unwrap();
+        assert_eq!(back.slos.len(), spec.slos.len());
+        for (a, b) in back.slos.iter().zip(&spec.slos) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.target, b.target);
+            assert_eq!(a.fast_window_us, b.fast_window_us);
+            assert_eq!(a.pending_for_us, b.pending_for_us);
+            assert_eq!(a.min_events, b.min_events);
+        }
+    }
+
+    #[test]
+    fn from_json_defaults_and_errors() {
+        let spec = SloSpec::from_json(
+            r#"{"slos": [{"kind": "availability", "target": 0.99, "variant": "w4"}]}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.slos[0].name, "availability");
+        assert_eq!(spec.slos[0].fast_burn, 14.4);
+        assert_eq!(spec.slos[0].variant.as_deref(), Some("w4"));
+        assert!(SloSpec::from_json("[]").is_err(), "no slos array");
+        assert!(
+            SloSpec::from_json(r#"{"slos": [{"kind": "bogus"}]}"#).is_err(),
+            "unknown kind"
+        );
+        assert!(
+            SloSpec::from_json(r#"{"slos": [{"kind": "latency", "target": 1.0}]}"#).is_err(),
+            "target must leave a budget"
+        );
+    }
+
+    #[test]
+    fn availability_burn_rates_are_correct() {
+        let db = Tsdb::new(64);
+        let lat = LatencyHistogram::default();
+        // 100 responses + 25 errors over 10s: bad ratio 0.2; with target
+        // 0.999 the burn is 0.2 / 0.001 = 200x on both windows.
+        push_sample(&db, 0, 0, 0, &lat, 0, 0);
+        push_sample(&db, 10_000_000, 100, 25, &lat, 0, 0);
+        let mut spec = SloSpec::default_spec();
+        spec.slos.retain(|s| s.kind == SloKind::Availability);
+        let signals = evaluate(&spec, &db);
+        let s = find(&signals, "availability:w4");
+        assert!((s.fast_burn - 200.0).abs() < 1e-9, "burn {}", s.fast_burn);
+        assert!((s.slow_burn - 200.0).abs() < 1e-9);
+        assert!(s.burning, "200x exceeds 14.4x and 6x");
+        assert_eq!(s.fast_window_us, 10_000_000, "window clamps to history");
+    }
+
+    #[test]
+    fn burn_needs_both_windows() {
+        // Errors confined to the distant past: the slow window still sees
+        // them, the fast window is clean -> not burning.
+        let db = Tsdb::new(1024);
+        let lat = LatencyHistogram::default();
+        push_sample(&db, 0, 0, 0, &lat, 0, 0);
+        push_sample(&db, 1_000_000, 100, 50, &lat, 0, 0); // old burst
+        for i in 2..=120u64 {
+            push_sample(&db, i * 1_000_000, 100 + (i - 1) * 10, 50, &lat, 0, 0);
+        }
+        let mut spec = SloSpec::default_spec();
+        spec.slos.retain(|s| s.kind == SloKind::Availability);
+        // Fast = 60s, slow = full history.
+        spec.slos[0].fast_window_us = 60_000_000;
+        let signals = evaluate(&spec, &db);
+        let s = find(&signals, "availability:w4");
+        assert!(s.slow_burn > 6.0, "slow window still sees the burst");
+        assert!(s.fast_burn < 14.4, "fast window is clean");
+        assert!(!s.burning);
+    }
+
+    #[test]
+    fn latency_threshold_tracks_fps_clock() {
+        let db = Tsdb::new(64);
+        let mut lat = LatencyHistogram::default();
+        push_sample(&db, 0, 0, 0, &lat, 0, 0);
+        // 90 fast (300us) + 30 slow (5ms) responses. fps 2000 -> frame
+        // period 500us; factor 4 -> threshold 2000us. The 5ms bucket
+        // [4096, 8192) lies fully above it: 30/120 bad, target 0.99 ->
+        // burn 25x.
+        for _ in 0..90 {
+            lat.record_us(300.0);
+        }
+        for _ in 0..30 {
+            lat.record_us(5_000.0);
+        }
+        push_sample(&db, 10_000_000, 120, 0, &lat, 0, 0);
+        let mut spec = SloSpec::default_spec();
+        spec.slos.retain(|s| s.kind == SloKind::Latency);
+        let signals = evaluate(&spec, &db);
+        let s = find(&signals, "latency_p99:w4");
+        assert!((s.fast_burn - 25.0).abs() < 1e-9, "burn {}", s.fast_burn);
+        assert!(s.burning);
+        assert!(s.detail.contains("threshold 2000us"), "{}", s.detail);
+    }
+
+    #[test]
+    fn agreement_is_edge_global() {
+        let db = Tsdb::new(64);
+        let lat = LatencyHistogram::default();
+        push_sample(&db, 0, 0, 0, &lat, 0, 0);
+        // 25% disagreement vs a 2% budget: burn 12.5x -> burning.
+        push_sample(&db, 10_000_000, 100, 0, &lat, 80, 20);
+        let mut spec = SloSpec::default_spec();
+        spec.slos.retain(|s| s.kind == SloKind::Agreement);
+        let signals = evaluate(&spec, &db);
+        let s = find(&signals, "agreement");
+        assert!(s.variant.is_none());
+        assert!((s.fast_burn - 12.5).abs() < 1e-9, "burn {}", s.fast_burn);
+        assert!(!s.burning, "12.5x is under the 14.4x fast threshold");
+    }
+
+    #[test]
+    fn min_events_floor_suppresses_noise() {
+        let db = Tsdb::new(64);
+        let lat = LatencyHistogram::default();
+        push_sample(&db, 0, 0, 0, &lat, 0, 0);
+        // 2 requests, 1 error: 50% bad, but far below the 20-event floor.
+        push_sample(&db, 10_000_000, 1, 1, &lat, 0, 0);
+        let mut spec = SloSpec::default_spec();
+        spec.slos.retain(|s| s.kind == SloKind::Availability);
+        let signals = evaluate(&spec, &db);
+        let s = find(&signals, "availability:w4");
+        assert_eq!(s.fast_burn, 0.0);
+        assert!(!s.burning);
+    }
+
+    #[test]
+    fn no_signals_before_two_samples() {
+        let db = Tsdb::new(64);
+        assert!(evaluate(&SloSpec::default_spec(), &db).is_empty());
+        push_sample(&db, 0, 0, 0, &LatencyHistogram::default(), 0, 0);
+        assert!(evaluate(&SloSpec::default_spec(), &db).is_empty());
+    }
+}

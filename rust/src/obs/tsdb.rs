@@ -1,0 +1,561 @@
+//! Fixed-memory time-series store for serving metrics (std-only).
+//!
+//! The edge samples the gateway on a background thread (configurable
+//! interval) and pushes one cumulative [`Sample`] per tick into a bounded
+//! ring. Samples are *cumulative* — each carries the monotone counter
+//! values and log2 latency-bucket arrays as of its timestamp — so a
+//! lookback window is answered by subtracting the oldest in-window sample
+//! from the newest: counters difference cleanly, and the bucketwise
+//! histogram difference is rebuilt into a queryable
+//! [`LatencyHistogram`] via [`LatencyHistogram::from_parts`] for windowed
+//! quantiles. Retention is `capacity × interval` (default 1 h at 1 s) in
+//! O(capacity) memory regardless of traffic volume.
+//!
+//! The store is deliberately independent of the edge types: the sampler
+//! closure (built in `edge::mod`) flattens `Metrics::summarize()`,
+//! `Server::robustness_report()`, and the edge counters into the plain
+//! structs here, so the SLO engine ([`crate::obs::slo`]) and the drift
+//! watchdogs ([`crate::obs::drift`]) read one schema.
+
+use crate::util::stats::LatencyHistogram;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread;
+use std::time::Duration;
+
+/// Health code stored in samples (mirrors `serving::BackendHealth` after
+/// breaker folding): 0 healthy, 1 degraded, 2 unavailable.
+pub fn health_name(code: u8) -> &'static str {
+    match code {
+        0 => "healthy",
+        1 => "degraded",
+        _ => "unavailable",
+    }
+}
+
+/// Breaker code stored in samples: 0 closed, 1 open, 2 half-open.
+pub fn breaker_name(code: u8) -> &'static str {
+    match code {
+        0 => "closed",
+        1 => "open",
+        _ => "half-open",
+    }
+}
+
+/// Cumulative edge-level counters as of one tick (flattened from
+/// `EdgeMetrics`, the response cache, and the negative cache).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EdgeCounters {
+    pub requests: u64,
+    pub ok: u64,
+    pub client_errors: u64,
+    pub server_errors: u64,
+    pub rate_limited: u64,
+    pub admission_shed: u64,
+    pub queue_shed: u64,
+    pub bad_requests: u64,
+    pub classify_requests: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub negative_hits: u64,
+    pub negative_insertions: u64,
+    pub agreement_checks: u64,
+    pub agreement_failures: u64,
+}
+
+impl EdgeCounters {
+    /// Counter-wise `self - old` with saturation (a restarted source never
+    /// produces negative rates, it just re-baselines).
+    pub fn delta(&self, old: &EdgeCounters) -> EdgeCounters {
+        EdgeCounters {
+            requests: self.requests.saturating_sub(old.requests),
+            ok: self.ok.saturating_sub(old.ok),
+            client_errors: self.client_errors.saturating_sub(old.client_errors),
+            server_errors: self.server_errors.saturating_sub(old.server_errors),
+            rate_limited: self.rate_limited.saturating_sub(old.rate_limited),
+            admission_shed: self.admission_shed.saturating_sub(old.admission_shed),
+            queue_shed: self.queue_shed.saturating_sub(old.queue_shed),
+            bad_requests: self.bad_requests.saturating_sub(old.bad_requests),
+            classify_requests: self.classify_requests.saturating_sub(old.classify_requests),
+            cache_hits: self.cache_hits.saturating_sub(old.cache_hits),
+            cache_misses: self.cache_misses.saturating_sub(old.cache_misses),
+            negative_hits: self.negative_hits.saturating_sub(old.negative_hits),
+            negative_insertions: self.negative_insertions.saturating_sub(old.negative_insertions),
+            agreement_checks: self.agreement_checks.saturating_sub(old.agreement_checks),
+            agreement_failures: self.agreement_failures.saturating_sub(old.agreement_failures),
+        }
+    }
+}
+
+/// Cumulative gateway-wide robustness counters (flattened from
+/// `Server::robustness_report()`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GatewayCounters {
+    pub shed: u64,
+    pub shed_admission: u64,
+    pub shed_expired: u64,
+    pub panics: u64,
+    pub worker_restarts: u64,
+    pub retried: u64,
+    pub hedged: u64,
+    pub hedge_wins: u64,
+    pub fallbacks: u64,
+}
+
+impl GatewayCounters {
+    pub fn delta(&self, old: &GatewayCounters) -> GatewayCounters {
+        GatewayCounters {
+            shed: self.shed.saturating_sub(old.shed),
+            shed_admission: self.shed_admission.saturating_sub(old.shed_admission),
+            shed_expired: self.shed_expired.saturating_sub(old.shed_expired),
+            panics: self.panics.saturating_sub(old.panics),
+            worker_restarts: self.worker_restarts.saturating_sub(old.worker_restarts),
+            retried: self.retried.saturating_sub(old.retried),
+            hedged: self.hedged.saturating_sub(old.hedged),
+            hedge_wins: self.hedge_wins.saturating_sub(old.hedge_wins),
+            fallbacks: self.fallbacks.saturating_sub(old.fallbacks),
+        }
+    }
+}
+
+/// Cumulative per-variant state as of one tick.
+#[derive(Clone, Debug)]
+pub struct VariantSample {
+    pub name: String,
+    pub requests: u64,
+    pub responses: u64,
+    pub errors: u64,
+    pub shed_admission: u64,
+    pub shed_expired: u64,
+    pub panics: u64,
+    pub worker_restarts: u64,
+    pub batches: u64,
+    /// Cumulative log2 buckets of the service-latency histogram.
+    pub latency_buckets: [u64; 32],
+    pub latency_sum_us: f64,
+    pub latency_max_us: f64,
+    /// Cumulative log2 buckets of the queue-wait histogram.
+    pub queue_buckets: [u64; 32],
+    pub queue_sum_us: f64,
+    pub queue_max_us: f64,
+    /// Point-in-time gauges (latest value wins in a window).
+    pub ewma_us: f64,
+    pub fpga_fps: f64,
+    pub health: u8,
+    pub breaker: u8,
+}
+
+impl VariantSample {
+    pub fn named(name: impl Into<String>) -> VariantSample {
+        VariantSample {
+            name: name.into(),
+            requests: 0,
+            responses: 0,
+            errors: 0,
+            shed_admission: 0,
+            shed_expired: 0,
+            panics: 0,
+            worker_restarts: 0,
+            batches: 0,
+            latency_buckets: [0; 32],
+            latency_sum_us: 0.0,
+            latency_max_us: 0.0,
+            queue_buckets: [0; 32],
+            queue_sum_us: 0.0,
+            queue_max_us: 0.0,
+            ewma_us: 0.0,
+            fpga_fps: 0.0,
+            health: 0,
+            breaker: 0,
+        }
+    }
+}
+
+/// One tick's cumulative snapshot of the whole serving stack.
+#[derive(Clone, Debug, Default)]
+pub struct Sample {
+    /// Wall-clock timestamp, unix microseconds.
+    pub at_us: u64,
+    pub edge: EdgeCounters,
+    pub gateway: GatewayCounters,
+    pub variants: Vec<VariantSample>,
+}
+
+/// Bucketwise `new - old` with saturation, rebuilt as a histogram. The
+/// cumulative bucket arrays are monotone per source, so the difference is
+/// exactly the histogram of events inside the window.
+fn bucket_delta(
+    new: &[u64; 32],
+    new_sum: f64,
+    new_max: f64,
+    old: &[u64; 32],
+) -> ([u64; 32], f64, f64) {
+    let mut d = [0u64; 32];
+    for i in 0..32 {
+        d[i] = new[i].saturating_sub(old[i]);
+    }
+    (d, new_sum, new_max)
+}
+
+/// A variant's activity over one lookback window: counter deltas plus the
+/// reconstructed in-window histograms, and the latest point-in-time gauges.
+#[derive(Clone, Debug)]
+pub struct VariantWindow {
+    pub name: String,
+    pub requests: u64,
+    pub responses: u64,
+    pub errors: u64,
+    pub shed_admission: u64,
+    pub shed_expired: u64,
+    pub panics: u64,
+    pub worker_restarts: u64,
+    pub batches: u64,
+    pub latency: LatencyHistogram,
+    pub queue_wait: LatencyHistogram,
+    pub rps: f64,
+    pub ewma_us: f64,
+    pub fpga_fps: f64,
+    pub health: u8,
+    pub breaker: u8,
+}
+
+/// The gateway's activity over one lookback window.
+#[derive(Clone, Debug)]
+pub struct WindowDelta {
+    /// Actual covered span (clamped to available history), microseconds.
+    pub span_us: u64,
+    /// Timestamp of the newest sample in the window.
+    pub at_us: u64,
+    /// Number of ring samples the window covered (>= 2).
+    pub samples: usize,
+    pub edge: EdgeCounters,
+    pub gateway: GatewayCounters,
+    pub variants: Vec<VariantWindow>,
+}
+
+impl WindowDelta {
+    pub fn variant(&self, name: &str) -> Option<&VariantWindow> {
+        self.variants.iter().find(|v| v.name == name)
+    }
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Bounded ring of cumulative [`Sample`]s.
+pub struct Tsdb {
+    capacity: usize,
+    ring: Mutex<VecDeque<Sample>>,
+}
+
+impl Tsdb {
+    /// `capacity` samples of retention (e.g. 3600 × 1 s interval = 1 h).
+    pub fn new(capacity: usize) -> Tsdb {
+        Tsdb {
+            capacity: capacity.max(2),
+            ring: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        lock(&self.ring).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Append one cumulative sample, evicting the oldest past capacity.
+    pub fn push(&self, s: Sample) {
+        let mut ring = lock(&self.ring);
+        while ring.len() >= self.capacity {
+            ring.pop_front();
+        }
+        ring.push_back(s);
+    }
+
+    pub fn latest(&self) -> Option<Sample> {
+        lock(&self.ring).back().cloned()
+    }
+
+    pub fn oldest_at_us(&self) -> Option<u64> {
+        lock(&self.ring).front().map(|s| s.at_us)
+    }
+
+    /// Covered history span in microseconds (0 with fewer than 2 samples).
+    pub fn span_us(&self) -> u64 {
+        let ring = lock(&self.ring);
+        match (ring.front(), ring.back()) {
+            (Some(f), Some(b)) => b.at_us.saturating_sub(f.at_us),
+            _ => 0,
+        }
+    }
+
+    /// Activity over the trailing `lookback_us`. The window clamps to the
+    /// available history (a fresh server evaluates over whatever it has),
+    /// and always spans at least the last inter-sample interval, so SLO
+    /// evaluation produces burn rates from the second tick onward. `None`
+    /// until two samples exist.
+    pub fn window(&self, lookback_us: u64) -> Option<WindowDelta> {
+        let ring = lock(&self.ring);
+        if ring.len() < 2 {
+            return None;
+        }
+        let newest = ring.back().expect("len >= 2");
+        let cutoff = newest.at_us.saturating_sub(lookback_us);
+        // Oldest in-window sample; never the newest itself (index capped at
+        // len-2) so the delta is always over at least one interval.
+        let mut idx = ring
+            .iter()
+            .position(|s| s.at_us >= cutoff)
+            .unwrap_or(ring.len() - 1);
+        idx = idx.min(ring.len() - 2);
+        let oldest = &ring[idx];
+        let samples = ring.len() - idx;
+        let span_us = newest.at_us.saturating_sub(oldest.at_us);
+
+        let mut variants = Vec::with_capacity(newest.variants.len());
+        for v in &newest.variants {
+            // Match by name; a variant absent from the old sample (newly
+            // registered) deltas against zero.
+            let blank = VariantSample::named(v.name.clone());
+            let old = oldest
+                .variants
+                .iter()
+                .find(|o| o.name == v.name)
+                .unwrap_or(&blank);
+            let (lb, ls, lm) = bucket_delta(
+                &v.latency_buckets,
+                v.latency_sum_us - old.latency_sum_us,
+                v.latency_max_us,
+                &old.latency_buckets,
+            );
+            let (qb, qs, qm) = bucket_delta(
+                &v.queue_buckets,
+                v.queue_sum_us - old.queue_sum_us,
+                v.queue_max_us,
+                &old.queue_buckets,
+            );
+            let responses = v.responses.saturating_sub(old.responses);
+            let secs = (span_us as f64 / 1e6).max(1e-9);
+            variants.push(VariantWindow {
+                name: v.name.clone(),
+                requests: v.requests.saturating_sub(old.requests),
+                responses,
+                errors: v.errors.saturating_sub(old.errors),
+                shed_admission: v.shed_admission.saturating_sub(old.shed_admission),
+                shed_expired: v.shed_expired.saturating_sub(old.shed_expired),
+                panics: v.panics.saturating_sub(old.panics),
+                worker_restarts: v.worker_restarts.saturating_sub(old.worker_restarts),
+                batches: v.batches.saturating_sub(old.batches),
+                latency: LatencyHistogram::from_parts(lb, ls, lm),
+                queue_wait: LatencyHistogram::from_parts(qb, qs, qm),
+                rps: responses as f64 / secs,
+                ewma_us: v.ewma_us,
+                fpga_fps: v.fpga_fps,
+                health: v.health,
+                breaker: v.breaker,
+            });
+        }
+        Some(WindowDelta {
+            span_us,
+            at_us: newest.at_us,
+            samples,
+            edge: newest.edge.delta(&oldest.edge),
+            gateway: newest.gateway.delta(&oldest.gateway),
+            variants,
+        })
+    }
+}
+
+/// A stoppable background tick thread. The closure runs once per interval;
+/// [`Sampler::stop`] wakes it immediately and joins, so edge shutdown
+/// never waits out a full interval.
+pub struct Sampler {
+    stop: Arc<(Mutex<bool>, Condvar)>,
+    stopped: AtomicBool,
+    handle: Mutex<Option<thread::JoinHandle<()>>>,
+}
+
+impl Sampler {
+    pub fn spawn<F: FnMut() + Send + 'static>(interval: Duration, mut tick: F) -> Sampler {
+        let stop = Arc::new((Mutex::new(false), Condvar::new()));
+        let stop2 = stop.clone();
+        let handle = thread::Builder::new()
+            .name("mpcnn-sampler".into())
+            .spawn(move || loop {
+                tick();
+                let (flag, cv) = &*stop2;
+                let mut stopped = lock(flag);
+                if !*stopped {
+                    let (guard, _timeout) = cv
+                        .wait_timeout(stopped, interval)
+                        .unwrap_or_else(|p| p.into_inner());
+                    stopped = guard;
+                }
+                if *stopped {
+                    return;
+                }
+            })
+            .expect("spawn sampler thread");
+        Sampler {
+            stop,
+            stopped: AtomicBool::new(false),
+            handle: Mutex::new(Some(handle)),
+        }
+    }
+
+    /// Signal and join. Idempotent.
+    pub fn stop(&self) {
+        if self.stopped.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let (flag, cv) = &*self.stop;
+        *lock(flag) = true;
+        cv.notify_all();
+        if let Some(h) = lock(&self.handle).take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Sampler {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    fn sample(at_us: u64, responses: u64, errors: u64, lat_us: &[f64]) -> Sample {
+        let mut h = LatencyHistogram::default();
+        for &us in lat_us {
+            h.record_us(us);
+        }
+        let mut v = VariantSample::named("w4");
+        v.requests = responses + errors;
+        v.responses = responses;
+        v.errors = errors;
+        v.latency_buckets = *h.buckets();
+        v.latency_sum_us = h.sum_us();
+        v.latency_max_us = h.max_us();
+        Sample {
+            at_us,
+            edge: EdgeCounters {
+                requests: responses + errors,
+                ok: responses,
+                server_errors: errors,
+                ..EdgeCounters::default()
+            },
+            gateway: GatewayCounters::default(),
+            variants: vec![v],
+        }
+    }
+
+    #[test]
+    fn ring_evicts_at_capacity() {
+        let db = Tsdb::new(3);
+        for i in 0..10u64 {
+            db.push(sample(i * 1_000_000, i, 0, &[]));
+        }
+        assert_eq!(db.len(), 3);
+        assert_eq!(db.oldest_at_us(), Some(7_000_000));
+        assert_eq!(db.latest().unwrap().at_us, 9_000_000);
+        assert_eq!(db.span_us(), 2_000_000);
+    }
+
+    #[test]
+    fn window_needs_two_samples() {
+        let db = Tsdb::new(8);
+        assert!(db.window(1_000_000).is_none());
+        db.push(sample(0, 0, 0, &[]));
+        assert!(db.window(1_000_000).is_none());
+        db.push(sample(1_000_000, 5, 1, &[100.0; 5]));
+        let w = db.window(10_000_000).expect("two samples");
+        assert_eq!(w.samples, 2);
+        assert_eq!(w.span_us, 1_000_000);
+    }
+
+    #[test]
+    fn window_deltas_counters_and_histograms() {
+        let db = Tsdb::new(16);
+        // t=0: 10 responses, all ~100us. t=1s: +20 responses, the new ones
+        // ~8000us. t=2s: +10 more at ~100us.
+        let mut lat: Vec<f64> = vec![100.0; 10];
+        db.push(sample(0, 10, 0, &lat));
+        lat.extend(std::iter::repeat(8000.0).take(20));
+        db.push(sample(1_000_000, 30, 2, &lat));
+        lat.extend(std::iter::repeat(100.0).take(10));
+        db.push(sample(2_000_000, 40, 2, &lat));
+
+        // Full history: 30 new responses since t=0, 2 errors.
+        let w = db.window(10_000_000).unwrap();
+        let v = w.variant("w4").unwrap();
+        assert_eq!(v.responses, 30);
+        assert_eq!(v.errors, 2);
+        assert_eq!(v.latency.count(), 30);
+        assert!((v.rps - 15.0).abs() < 1e-9, "30 responses / 2s");
+        // 20 of the 30 in-window samples are 8 ms: p50 lands in the 8 ms
+        // bucket (bound 2^13 = 8192), not the 100 us one.
+        assert_eq!(v.latency.percentile_us(50.0), 8192.0);
+
+        // Trailing 1s: only the last 10 (fast) responses.
+        let w1 = db.window(1_000_000).unwrap();
+        let v1 = w1.variant("w4").unwrap();
+        assert_eq!(v1.responses, 10);
+        assert_eq!(v1.latency.count(), 10);
+        assert_eq!(v1.latency.percentile_us(99.0), 128.0, "100us bucket bound");
+    }
+
+    #[test]
+    fn tiny_lookback_clamps_to_last_interval() {
+        let db = Tsdb::new(8);
+        db.push(sample(0, 0, 0, &[]));
+        db.push(sample(5_000_000, 50, 0, &[200.0; 50]));
+        // 1us lookback still yields the last interval.
+        let w = db.window(1).unwrap();
+        assert_eq!(w.samples, 2);
+        assert_eq!(w.span_us, 5_000_000);
+        assert_eq!(w.variant("w4").unwrap().responses, 50);
+    }
+
+    #[test]
+    fn new_variant_deltas_against_zero() {
+        let db = Tsdb::new(8);
+        db.push(sample(0, 10, 0, &[]));
+        let mut s = sample(1_000_000, 12, 0, &[]);
+        let mut extra = VariantSample::named("w8");
+        extra.responses = 7;
+        s.variants.push(extra);
+        db.push(s);
+        let w = db.window(10_000_000).unwrap();
+        assert_eq!(w.variant("w8").unwrap().responses, 7);
+    }
+
+    #[test]
+    fn sampler_ticks_and_stops_promptly() {
+        let n = Arc::new(AtomicU64::new(0));
+        let n2 = n.clone();
+        let s = Sampler::spawn(Duration::from_millis(5), move || {
+            n2.fetch_add(1, Ordering::SeqCst);
+        });
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while n.load(Ordering::SeqCst) < 3 && std::time::Instant::now() < deadline {
+            thread::sleep(Duration::from_millis(2));
+        }
+        assert!(n.load(Ordering::SeqCst) >= 3, "sampler must tick repeatedly");
+        let t0 = std::time::Instant::now();
+        s.stop();
+        assert!(t0.elapsed() < Duration::from_secs(1), "stop joins promptly");
+        s.stop(); // idempotent
+    }
+}

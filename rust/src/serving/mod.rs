@@ -397,6 +397,17 @@ impl Server {
             .collect()
     }
 
+    /// Raw per-variant circuit-breaker states, in registration order. The
+    /// obs sampler records these alongside [`Server::statuses`] (which
+    /// folds the breaker into routing health): the tsdb keeps both so an
+    /// operator can tell "breaker open" apart from "backend unhealthy".
+    pub fn breaker_states(&self) -> Vec<(String, BreakerState)> {
+        self.variants
+            .iter()
+            .map(|v| (v.spec.name.clone(), v.worker.shared.breaker.state()))
+            .collect()
+    }
+
     /// Resolve a selector to the variant name it would route to right now
     /// (introspection; the actual submit re-routes).
     pub fn route(&self, sel: &VariantSelector) -> Result<String, RouteError> {

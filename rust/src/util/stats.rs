@@ -156,6 +156,22 @@ impl LatencyHistogram {
         self.sum_us += other.sum_us;
         self.max_us = self.max_us.max(other.max_us);
     }
+
+    /// Rebuild a histogram from raw bucket counts (plus the `_sum` and max
+    /// that bucket counts alone cannot recover). `count` is derived from
+    /// the buckets, preserving the `sum(buckets) == count` invariant the
+    /// `+Inf` Prometheus series relies on. This is how the obs tsdb turns
+    /// the bucketwise difference of two cumulative snapshots back into a
+    /// queryable histogram for windowed quantiles.
+    pub fn from_parts(buckets: [u64; 32], sum_us: f64, max_us: f64) -> LatencyHistogram {
+        let count = buckets.iter().sum();
+        LatencyHistogram {
+            buckets,
+            count,
+            sum_us: sum_us.max(0.0),
+            max_us: max_us.max(0.0),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -244,5 +260,143 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.count(), 2);
         assert_eq!(a.max_us(), 1000.0);
+    }
+
+    #[test]
+    fn from_parts_round_trips() {
+        let mut h = LatencyHistogram::default();
+        for us in [1.5, 3.0, 700.0, 1e9] {
+            h.record_us(us);
+        }
+        let rebuilt = LatencyHistogram::from_parts(*h.buckets(), h.sum_us(), h.max_us());
+        assert_eq!(rebuilt.buckets(), h.buckets());
+        assert_eq!(rebuilt.count(), h.count());
+        assert_eq!(rebuilt.sum_us(), h.sum_us());
+        assert_eq!(rebuilt.max_us(), h.max_us());
+        assert_eq!(rebuilt.percentile_us(99.0), h.percentile_us(99.0));
+        // Negative parts (a clock skew in a delta) clamp instead of
+        // propagating nonsense.
+        let clamped = LatencyHistogram::from_parts([0; 32], -4.0, -1.0);
+        assert_eq!(clamped.sum_us(), 0.0);
+        assert_eq!(clamped.max_us(), 0.0);
+    }
+
+    /// The merge contract the obs tsdb leans on: merging per-window
+    /// histograms must answer quantile queries as if every sample had been
+    /// recorded into one histogram, and the bucket-sum == count invariant
+    /// (what renders as `+Inf == _count`) must survive any merge chain.
+    mod merge_properties {
+        use super::*;
+        use crate::util::prop::{check, check_eq, forall};
+
+        fn sample_us(rng: &mut crate::util::rng::Rng) -> f64 {
+            // Log-uniform over ~9 decades, the histogram's useful range,
+            // plus occasional sub-1us and overflow extremes.
+            match rng.range_i64(0, 9) {
+                0 => rng.uniform(0.0, 1.0),
+                1 => rng.uniform(1e12, 2e12),
+                _ => 2f64.powf(rng.uniform(0.0, 30.0)),
+            }
+        }
+
+        #[test]
+        fn merge_equals_pooled_recording() {
+            forall(300, |rng| {
+                let na = rng.range_i64(0, 40) as usize;
+                let nb = rng.range_i64(0, 40) as usize;
+                let xs: Vec<f64> = (0..na).map(|_| sample_us(rng)).collect();
+                let ys: Vec<f64> = (0..nb).map(|_| sample_us(rng)).collect();
+                let mut a = LatencyHistogram::default();
+                let mut b = LatencyHistogram::default();
+                let mut pooled = LatencyHistogram::default();
+                for &x in &xs {
+                    a.record_us(x);
+                    pooled.record_us(x);
+                }
+                for &y in &ys {
+                    b.record_us(y);
+                    pooled.record_us(y);
+                }
+                a.merge(&b);
+                check_eq(*a.buckets(), *pooled.buckets(), "merged buckets == pooled")?;
+                check_eq(a.count(), pooled.count(), "merged count == pooled")?;
+                check(
+                    (a.sum_us() - pooled.sum_us()).abs() <= 1e-6 * pooled.sum_us().max(1.0),
+                    "merged sum == pooled sum",
+                )?;
+                check_eq(a.max_us(), pooled.max_us(), "merged max == pooled max")
+            });
+        }
+
+        #[test]
+        fn merged_quantiles_bound_pooled_sample_quantiles_within_one_bucket() {
+            forall(300, |rng| {
+                let na = rng.range_i64(1, 40) as usize;
+                let nb = rng.range_i64(1, 40) as usize;
+                let mut all: Vec<f64> = Vec::with_capacity(na + nb);
+                let mut a = LatencyHistogram::default();
+                let mut b = LatencyHistogram::default();
+                for _ in 0..na {
+                    let x = sample_us(rng);
+                    a.record_us(x);
+                    all.push(x);
+                }
+                for _ in 0..nb {
+                    let y = sample_us(rng);
+                    b.record_us(y);
+                    all.push(y);
+                }
+                a.merge(&b);
+                let mut sorted = all.clone();
+                sorted.sort_by(|x, y| x.total_cmp(y));
+                for p in [50.0, 90.0, 99.0] {
+                    let hq = a.percentile_us(p);
+                    // Nearest-rank pooled quantile — the same rank the
+                    // histogram walk targets, taken over the raw samples.
+                    let target =
+                        ((p / 100.0 * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+                    let sq = sorted[target - 1];
+                    // The histogram answers the upper bound of the log2
+                    // bucket holding the rank-target sample, so it must
+                    // dominate that sample (except past the top bucket's
+                    // bound, where overflow clamps) and sit within one
+                    // bucket — a factor of two — above it (values < 1us
+                    // clamp into bucket 0, whose bound is 2).
+                    check(
+                        hq >= sq.min(LatencyHistogram::bound(31)),
+                        &format!("p{p}: bucket bound {hq} must dominate pooled quantile {sq}"),
+                    )?;
+                    check(
+                        hq <= sq.max(1.0) * 2.0,
+                        &format!("p{p}: bucket bound {hq} within one log2 bucket of {sq}"),
+                    )?;
+                }
+                Ok(())
+            });
+        }
+
+        #[test]
+        fn plus_inf_equals_count_survives_merge_chains() {
+            forall(200, |rng| {
+                // A chain of merges, some via from_parts round trips —
+                // exactly the tsdb's cumulative-delta path.
+                let mut acc = LatencyHistogram::default();
+                for _ in 0..rng.range_i64(1, 6) {
+                    let mut h = LatencyHistogram::default();
+                    for _ in 0..rng.range_i64(0, 30) {
+                        h.record_us(sample_us(rng));
+                    }
+                    let h = LatencyHistogram::from_parts(*h.buckets(), h.sum_us(), h.max_us());
+                    acc.merge(&h);
+                }
+                // `+Inf` renders as count; coherence means the bucket sum
+                // (what the cumulative series converges to) equals it.
+                check_eq(
+                    acc.buckets().iter().sum::<u64>(),
+                    acc.count(),
+                    "sum(buckets) == count after merges",
+                )
+            });
+        }
     }
 }

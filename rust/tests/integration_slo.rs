@@ -1,0 +1,399 @@
+//! End-to-end SLO engine tests over a real loopback edge: a background
+//! sampler snapshots the counters, the burn-rate evaluator turns them
+//! into pending→firing→resolved alerts, the event journal records every
+//! transition in order, and lifting the fault resolves the alert without
+//! any worker restart. Windows/durations are shrunk (25 ms samples,
+//! sub-second windows) so each test completes in a few seconds while
+//! exercising exactly the code paths `serve --listen --slo` runs.
+
+use mpcnn::edge::{Answer, EdgeConfig, EdgeServer, RemoteClient, ResponseCheck};
+use mpcnn::obs::{DriftConfig, Slo, SloKind, SloSpec};
+use mpcnn::serving::{
+    BatcherConfig, BreakerConfig, FaultControls, FaultKind, FaultPlan, FaultRule, FaultyBackend,
+    Forced, InferenceBackend, MockBackend, RetryPolicy, Server, SupervisorConfig, VariantProfile,
+    VariantSpec,
+};
+use mpcnn::util::json::Json;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const IMG: usize = 48;
+const CLASSES: usize = 10;
+const SAMPLE_MS: u64 = 25;
+
+/// An objective scaled for test time: windows clamp to a fraction of a
+/// second, firing after 100 ms of continuous burn, resolving after 150 ms
+/// of calm.
+fn tiny(name: &str, kind: SloKind, target: f64) -> Slo {
+    let mut s = Slo::new(name, kind, target);
+    s.fast_window_us = 400_000;
+    s.slow_window_us = 1_500_000;
+    s.fast_burn = 1.5;
+    s.slow_burn = 1.0;
+    s.pending_for_us = 100_000;
+    s.clear_for_us = 150_000;
+    s.min_events = 5;
+    s
+}
+
+/// One-variant mock gateway (`w4`) wrapped in a [`FaultyBackend`] behind a
+/// loopback edge with the SLO layer armed at a 25 ms sample interval.
+/// Returns the edge, the shared gateway handle, and the live fault
+/// controls (already wired into `POST /v1/fault`'s backing store).
+fn boot(
+    plan: FaultPlan,
+    spec: SloSpec,
+    drift: DriftConfig,
+    check: Option<ResponseCheck>,
+) -> (EdgeServer, Arc<Server>, Arc<FaultControls>) {
+    let controls = FaultControls::new();
+    let factory_controls = controls.clone();
+    let server = Server::builder()
+        .retry_policy(RetryPolicy::attempts(1))
+        .variant_with_profile(
+            VariantSpec::uniform(4),
+            VariantProfile {
+                top5_accuracy: Some(89.10),
+                fpga_fps: 165.0,
+                fpga_mj_per_frame: 1.0,
+            },
+            BatcherConfig {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+                queue_capacity: 128,
+                supervisor: SupervisorConfig {
+                    restart_budget: 32,
+                    backoff_initial: Duration::from_millis(2),
+                    backoff_max: Duration::from_millis(10),
+                },
+                // These tests exercise the SLO layer; the breaker stays
+                // closed so errors keep flowing into the counters.
+                breaker: BreakerConfig {
+                    failure_threshold: 1_000_000,
+                    open_for: Duration::from_millis(50),
+                },
+                ..Default::default()
+            },
+            move || {
+                let inner = Box::new(MockBackend::new(IMG, CLASSES, vec![1], 200))
+                    as Box<dyn InferenceBackend>;
+                Ok(Box::new(FaultyBackend::new(
+                    inner,
+                    plan.clone(),
+                    factory_controls.clone(),
+                )) as Box<dyn InferenceBackend>)
+            },
+        )
+        .build()
+        .expect("gateway boots");
+    let server = Arc::new(server);
+    let edge = EdgeServer::bind(
+        server.clone(),
+        "127.0.0.1:0",
+        EdgeConfig {
+            rate_per_sec: 0.0, // testing the SLO layer, not the limiter
+            cache_capacity: 0, // every request must reach the gateway
+            slo: Some(spec),
+            drift,
+            sample_interval: Duration::from_millis(SAMPLE_MS),
+            ..EdgeConfig::default()
+        },
+        check,
+    )
+    .expect("edge binds");
+    edge.state().set_fault_controls(controls.clone());
+    (edge, server, controls)
+}
+
+/// Background classify driver: unique images (no coalescing), default
+/// route (health-independent, so forced errors keep reaching the
+/// variant). Counts outcomes so tests can assert traffic actually flowed.
+struct Driver {
+    stop: Arc<AtomicBool>,
+    ok: Arc<AtomicU64>,
+    err: Arc<AtomicU64>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Driver {
+    fn spawn(addr: String) -> Driver {
+        let stop = Arc::new(AtomicBool::new(false));
+        let ok = Arc::new(AtomicU64::new(0));
+        let err = Arc::new(AtomicU64::new(0));
+        let (stop2, ok2, err2) = (stop.clone(), ok.clone(), err.clone());
+        let handle = std::thread::spawn(move || {
+            let client = RemoteClient::new(&addr, RetryPolicy::attempts(1));
+            let mut seq = 0u64;
+            while !stop2.load(Ordering::SeqCst) {
+                seq += 1;
+                // Constant image of value c: the mock's class rule, and
+                // the agreement check's reference. The driver is
+                // sequential so identical repeats never coalesce, and the
+                // response cache is disabled in `boot`.
+                let img = vec![(seq % CLASSES as u64) as f32; IMG];
+                match client.classify(&img, None, None, None) {
+                    Ok(_) => ok2.fetch_add(1, Ordering::SeqCst),
+                    Err(_) => err2.fetch_add(1, Ordering::SeqCst),
+                };
+                // ~hundreds of requests per second: plenty per 25 ms
+                // sample without saturating a CI core.
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        });
+        Driver {
+            stop,
+            ok,
+            err,
+            handle: Some(handle),
+        }
+    }
+
+    fn join(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            h.join().expect("driver thread");
+        }
+    }
+}
+
+/// Poll `/v1/alerts` until `alert` reaches `state` (or panic after 20 s).
+/// Returns the alert object at the moment the state was observed.
+fn await_state(client: &RemoteClient, alert: &str, state: &str) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let (status, body) = client.get("/v1/alerts").expect("GET /v1/alerts");
+        assert_eq!(status, 200, "{body}");
+        let j = mpcnn::util::json::parse(&body).expect("alerts JSON");
+        let found = j
+            .get("alerts")
+            .and_then(|v| v.as_arr())
+            .and_then(|arr| {
+                arr.iter()
+                    .find(|a| a.get("name").and_then(|n| n.as_str()) == Some(alert))
+            })
+            .cloned();
+        if let Some(a) = &found {
+            if a.get("state").and_then(|s| s.as_str()) == Some(state) {
+                return a.clone();
+            }
+        }
+        assert!(
+            Instant::now() < deadline,
+            "alert {alert} never reached {state}; last seen: {found:?}"
+        );
+        std::thread::sleep(Duration::from_millis(SAMPLE_MS));
+    }
+}
+
+fn alert_state(client: &RemoteClient, alert: &str) -> Option<String> {
+    let (status, body) = client.get("/v1/alerts").expect("GET /v1/alerts");
+    assert_eq!(status, 200, "{body}");
+    let j = mpcnn::util::json::parse(&body).expect("alerts JSON");
+    j.get("alerts")
+        .and_then(|v| v.as_arr())
+        .and_then(|arr| {
+            arr.iter()
+                .find(|a| a.get("name").and_then(|n| n.as_str()) == Some(alert))
+        })
+        .and_then(|a| a.get("state").and_then(|s| s.as_str()).map(String::from))
+}
+
+/// The tentpole's end-to-end loop: clean traffic stays quiet; a forced
+/// error fault burns the availability objective at exactly the expected
+/// rate and walks pending → firing; lifting the fault over `/v1/fault`
+/// (no restart, same workers) walks it to resolved; the journal has the
+/// transitions in order.
+#[test]
+fn availability_alert_fires_at_the_expected_burn_and_resolves_without_restart() {
+    // target 0.5: an all-errors stream burns at (1.0)/(1-0.5) = 2.0x.
+    let spec = SloSpec {
+        slos: vec![tiny("availability", SloKind::Availability, 0.5)],
+    };
+    let (edge, server, controls) =
+        boot(FaultPlan::default(), spec, DriftConfig::default(), None);
+    let addr = edge.local_addr().to_string();
+    let client = RemoteClient::new(&addr, RetryPolicy::attempts(3));
+    let driver = Driver::spawn(addr);
+
+    // Clean warm-up: the sampler sees healthy traffic; nothing may fire.
+    std::thread::sleep(Duration::from_millis(400));
+    let quiet = alert_state(&client, "availability:w4");
+    assert!(
+        matches!(quiet.as_deref(), None | Some("inactive")),
+        "clean traffic must not raise the availability alert (got {quiet:?})"
+    );
+
+    // Break it: every inference now errors.
+    controls.force(Forced::Error);
+    let firing = await_state(&client, "availability:w4", "firing");
+    assert_eq!(firing.get("kind").and_then(|v| v.as_str()), Some("availability"));
+    assert_eq!(firing.get("variant").and_then(|v| v.as_str()), Some("w4"));
+
+    // Let the fast window fill with pure errors, then check the math:
+    // bad/total = 1.0 against a 0.5 budget is exactly a 2.0x burn.
+    std::thread::sleep(Duration::from_millis(600));
+    let (status, body) = client.get("/v1/alerts").expect("GET /v1/alerts");
+    assert_eq!(status, 200);
+    let j = mpcnn::util::json::parse(&body).expect("alerts JSON");
+    let a = j
+        .get("alerts")
+        .and_then(|v| v.as_arr())
+        .and_then(|arr| {
+            arr.iter()
+                .find(|a| a.get("name").and_then(|n| n.as_str()) == Some("availability:w4"))
+        })
+        .expect("availability alert present");
+    let fast = a.get("fast_burn").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    assert!(
+        (1.9..=2.01).contains(&fast),
+        "all-errors fast burn should be ~2.0x, got {fast}"
+    );
+    assert!(
+        j.get("firing")
+            .and_then(|v| v.as_arr())
+            .map(|arr| arr.iter().any(|f| f.as_str() == Some("availability:w4")))
+            .unwrap_or(false),
+        "firing list must carry the alert"
+    );
+
+    // Lift the fault through the same override endpoint CI uses.
+    let lifted_err = driver.err.load(Ordering::SeqCst);
+    controls.force(Forced::None);
+    await_state(&client, "availability:w4", "resolved");
+    assert!(
+        driver.ok.load(Ordering::SeqCst) > 0,
+        "driver must have seen successes"
+    );
+    assert!(lifted_err > 0, "driver must have seen forced errors");
+    driver.join();
+
+    // The journal proves the walk: pending -> firing -> resolved, in
+    // order, with every line valid JSON carrying ts_us/seq/kind.
+    let (status, jsonl) = client.get("/v1/events").expect("GET /v1/events");
+    assert_eq!(status, 200);
+    let mut transitions = Vec::new();
+    let mut last_seq = -1i64;
+    for line in jsonl.lines() {
+        let e = mpcnn::util::json::parse(line)
+            .unwrap_or_else(|err| panic!("journal line is not JSON ({err}): {line}"));
+        assert!(e.get("ts_us").and_then(|v| v.as_f64()).is_some(), "{line}");
+        let seq = e.get("seq").and_then(|v| v.as_u64()).expect("seq") as i64;
+        assert!(seq > last_seq, "seq must be strictly increasing");
+        last_seq = seq;
+        let kind = e.get("kind").and_then(|v| v.as_str()).expect("kind");
+        if kind == "alert"
+            && e.get("alert").and_then(|v| v.as_str()) == Some("availability:w4")
+        {
+            transitions.push(
+                e.get("to").and_then(|v| v.as_str()).expect("to").to_string(),
+            );
+        }
+    }
+    assert_eq!(
+        transitions,
+        vec!["pending", "firing", "resolved"],
+        "alert transitions must land in the journal in lifecycle order"
+    );
+
+    // "Without restart": a forced error is a clean Err, not a crash —
+    // the same worker served the whole arc.
+    assert_eq!(server.robustness_report().worker_restarts, 0);
+
+    edge.shutdown();
+    let server = Arc::try_unwrap(server).expect("edge released the gateway");
+    server.shutdown();
+}
+
+/// A seeded always-on latency fault (5 ms on every call, probability 1.0)
+/// pushes every request past a 1 ms threshold: the latency objective
+/// burns at exactly 2.0x against a 0.5 target and fires.
+#[test]
+fn latency_slo_fires_under_a_seeded_latency_fault() {
+    let mut slo = tiny("latency_p99", SloKind::Latency, 0.5);
+    slo.latency_threshold_us = 1_000.0;
+    let spec = SloSpec { slos: vec![slo] };
+    let plan = FaultPlan::new(
+        vec![FaultRule::always(
+            FaultKind::Latency(Duration::from_millis(5)),
+            1.0,
+        )],
+        0xFA17,
+    );
+    let (edge, server, _controls) = boot(plan, spec, DriftConfig::default(), None);
+    let addr = edge.local_addr().to_string();
+    let client = RemoteClient::new(&addr, RetryPolicy::attempts(3));
+    let driver = Driver::spawn(addr);
+
+    let firing = await_state(&client, "latency_p99:w4", "firing");
+    let fast = firing.get("fast_burn").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    assert!(
+        (1.9..=2.01).contains(&fast),
+        "every request is slow: fast burn should be ~2.0x, got {fast}"
+    );
+    assert!(
+        firing
+            .get("detail")
+            .and_then(|v| v.as_str())
+            .map(|d| d.contains("threshold 1000us"))
+            .unwrap_or(false),
+        "detail must name the threshold: {firing:?}"
+    );
+    driver.join();
+    edge.shutdown();
+    let server = Arc::try_unwrap(server).expect("edge released the gateway");
+    server.shutdown();
+}
+
+/// The accuracy-drift watchdog: clean traffic (every answer agrees with
+/// the reference rule) stays silent; a forced corruption fault rots the
+/// agreement rate and `agreement_drift` fires.
+#[test]
+fn agreement_drift_fires_under_corrupt_and_stays_silent_clean() {
+    // The mock's contract: a constant image of value c classifies as c.
+    let check: ResponseCheck = Arc::new(|image: &[f32], a: &Answer| {
+        image
+            .first()
+            .map(|v| *v as usize % CLASSES == a.class)
+            .unwrap_or(false)
+    });
+    let drift = DriftConfig {
+        ewma_alpha: 0.5, // decay fast enough for a short test
+        agreement_window_us: 500_000,
+        agreement_min_checks: 5,
+        agreement_floor: 0.95,
+        pending_for_us: 100_000,
+        clear_for_us: 150_000,
+        ..DriftConfig::default()
+    };
+    let (edge, server, controls) = boot(
+        FaultPlan::default(),
+        SloSpec { slos: Vec::new() },
+        drift,
+        Some(check),
+    );
+    let addr = edge.local_addr().to_string();
+    let client = RemoteClient::new(&addr, RetryPolicy::attempts(3));
+    let driver = Driver::spawn(addr);
+
+    // Clean phase: agreement holds at 1.0, the watchdog must stay quiet.
+    std::thread::sleep(Duration::from_millis(800));
+    let quiet = alert_state(&client, "agreement_drift");
+    assert!(
+        matches!(quiet.as_deref(), None | Some("inactive")),
+        "clean traffic must not trip the agreement watchdog (got {quiet:?})"
+    );
+
+    // Silent corruption: answers are wrong but nothing errors — only the
+    // end-to-end agreement check can see it.
+    controls.force(Forced::Corrupt);
+    await_state(&client, "agreement_drift", "firing");
+    // Not a single backend error or crash: the data was wrong, not the
+    // serving machinery.
+    assert_eq!(server.robustness_report().worker_restarts, 0);
+
+    driver.join();
+    edge.shutdown();
+    let server = Arc::try_unwrap(server).expect("edge released the gateway");
+    server.shutdown();
+}
