@@ -8,19 +8,56 @@
 //!    kernels (activations in `ceil(aq/k)` unsigned digit planes ×
 //!    weights in `ceil(wq/k)` signed planes) across a `(wq, aq)` grid on
 //!    the ResNet-18 layer-1 workload, fast path vs scalar reference,
-//!    asserting all three kernels bit-identical before any timing. The
-//!    per-shape fast-vs-reference speedups land in
+//!    asserting all timed kernels bit-identical before any timing. The
+//!    per-shape fast-vs-reference and lane-fusion speedups land in
 //!    `BENCH_table4_operand_slices.json` (CI job `diff-fuzz-smoke`
-//!    uploads it), tracking how the 2D slice cross-product scales with
-//!    `S_a × S_w`.
+//!    uploads it), together with the Pearson correlation between the
+//!    modeled per-cell cost (the `S_a × S_w` slice-pair count) and the
+//!    measured fusion-off kernel time — the executed engine's check that
+//!    runtime really scales with the paper's operand-slice cross-product.
+//!    A failed shape check is an ERROR: the bench exits nonzero after
+//!    writing the JSON (`shape_checks_pass` records the verdict).
 
 use mpcnn::cnn::resnet;
+use mpcnn::quant::slicing::n_slices;
 use mpcnn::util::bench::{black_box, Bencher};
+use mpcnn::util::json::Json;
 use mpcnn::util::rng::Rng;
+use mpcnn::util::simd;
 use mpcnn::xmp::conv::im2col;
-use mpcnn::xmp::gemm::{gemm_codes_i64, gemm_sliced_fast, gemm_sliced_reference};
+use mpcnn::xmp::gemm::{
+    gemm_codes_i64, gemm_sliced_fast, gemm_sliced_fast_opts, gemm_sliced_reference, FastOpts,
+};
 use mpcnn::xmp::pack::{pack_activations, pack_group};
 use mpcnn::xmp::Requant;
+
+/// One measured grid cell of the executed operand-slice table.
+struct Cell {
+    wq: u32,
+    aq: u32,
+    /// Modeled relative cost: the `S_a × S_w` slice-pair count at `k`.
+    pairs: f64,
+    ref_ns: f64,
+    fast_ns: f64,
+    nofuse_ns: f64,
+}
+
+/// Pearson correlation coefficient; 0.0 when either side is constant.
+fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let (mut sxy, mut sxx, mut syy) = (0.0, 0.0, 0.0);
+    for (&x, &y) in xs.iter().zip(ys) {
+        sxy += (x - mx) * (y - my);
+        sxx += (x - mx) * (x - mx);
+        syy += (y - my) * (y - my);
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        return 0.0;
+    }
+    sxy / (sxx * syy).sqrt()
+}
 
 fn main() {
     // --- 1. the model-side Table IV, exactly as before ---
@@ -54,7 +91,11 @@ fn main() {
     // The operand-slice grid: weight-only (the old engine's point), joint
     // reductions, and the partial-top-digit shapes on both operands.
     let grid: [(u32, u32); 5] = [(8, 8), (4, 8), (4, 4), (3, 5), (2, 2)];
-    let mut speedups = Vec::new();
+    let nofuse = FastOpts {
+        fuse: false,
+        simd: true,
+    };
+    let mut cells: Vec<Cell> = Vec::new();
     for (wq, aq) in grid {
         let (lo, hi) = (-(1i64 << (wq - 1)), (1i64 << (wq - 1)) - 1);
         let codes: Vec<i32> = (0..od * kdim)
@@ -74,13 +115,16 @@ fn main() {
         );
         let acts = pack_activations(&cols, m, kdim, aq, k);
 
-        // Correctness gate before any timing: three kernels, one answer.
+        // Correctness gate before any timing: every timed kernel —
+        // including the fusion-off datapath — one answer.
         {
             let truth = gemm_codes_i64(&cols, m, kdim, &codes, od);
             let refr = gemm_sliced_reference(&cols, m, kdim, &codes, od, wq, aq, k);
             let fast = gemm_sliced_fast(&acts, &packed);
+            let unfused = gemm_sliced_fast_opts(&acts, &packed, nofuse);
             assert_eq!(refr, truth, "w{wq}a{aq}: reference diverged from plain i64");
             assert_eq!(fast, truth, "w{wq}a{aq}: fast path diverged from plain i64");
+            assert_eq!(unfused, truth, "w{wq}a{aq}: fusion-off path diverged");
         }
 
         let tag = format!("w{wq}a{aq}k{k}");
@@ -97,18 +141,88 @@ fn main() {
                 black_box(gemm_sliced_fast(&acts, &packed)[0])
             })
             .mean_ns;
-        speedups.push((tag, r_ref / r_fast));
+        let r_nofuse = b
+            .run(&format!("gemm-fast-nofuse/{tag}"), || {
+                black_box(gemm_sliced_fast_opts(&acts, &packed, nofuse)[0])
+            })
+            .mean_ns;
+        cells.push(Cell {
+            wq,
+            aq,
+            pairs: (n_slices(wq, k) * n_slices(aq, k)) as f64,
+            ref_ns: r_ref,
+            fast_ns: r_fast,
+            nofuse_ns: r_nofuse,
+        });
     }
 
-    println!("\n2D-slice fast-vs-reference speedups (resnet18 layer-1, k={k}):");
-    for (tag, s) in &speedups {
-        println!("  {tag}: {s:.2}x");
-    }
+    // Modeled-vs-measured: the paper's operand-slice cost model says each
+    // cell costs ∝ S_a × S_w digit-plane passes; the fusion-off kernel
+    // actually executes that many plane pairs, so its measured time
+    // should correlate strongly with the pair count across the grid.
+    let pairs: Vec<f64> = cells.iter().map(|c| c.pairs).collect();
+    let nofuse_ns: Vec<f64> = cells.iter().map(|c| c.nofuse_ns).collect();
+    let correlation = pearson(&pairs, &nofuse_ns);
 
-    b.finish("table4_operand_slices");
-    let failed = checks.iter().filter(|c| !c.pass).count();
-    if failed > 0 {
-        eprintln!("WARNING: {failed} shape checks failed in table4_operand_slices");
+    println!("\n2D-slice speedups (resnet18 layer-1, k={k}):");
+    for c in &cells {
+        println!(
+            "  w{}a{}: fast-vs-reference {:.2}x, lane fusion {:.2}x ({} slice pairs)",
+            c.wq,
+            c.aq,
+            c.ref_ns / c.fast_ns,
+            c.nofuse_ns / c.fast_ns,
+            c.pairs
+        );
+    }
+    println!("model-vs-measured correlation (S_a*S_w pairs vs fusion-off ns): {correlation:.3}");
+
+    println!("\n== bench summary: table4_operand_slices ==");
+    for r in &b.results {
+        println!("  {}", r.summary());
+    }
+    let shape_ok = checks.iter().all(|c| c.pass);
+    if std::env::var("MPCNN_BENCH_JSON").ok().as_deref() != Some("0") {
+        let grid_json: Vec<Json> = cells
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("wq", Json::num(c.wq as f64)),
+                    ("aq", Json::num(c.aq as f64)),
+                    ("modeled_pairs", Json::num(c.pairs)),
+                    ("ref_ns", Json::num(c.ref_ns)),
+                    ("fast_ns", Json::num(c.fast_ns)),
+                    ("nofuse_ns", Json::num(c.nofuse_ns)),
+                    ("speedup", Json::num(c.ref_ns / c.fast_ns)),
+                    ("fusion_speedup", Json::num(c.nofuse_ns / c.fast_ns)),
+                ])
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            (
+                "results",
+                b.to_json().get("results").cloned().unwrap_or(Json::Arr(Vec::new())),
+            ),
+            (
+                "table4",
+                Json::obj(vec![
+                    ("simd", Json::str(simd::level().name().to_string())),
+                    ("model_measure_correlation", Json::num(correlation)),
+                    ("shape_checks_pass", Json::Bool(shape_ok)),
+                    ("grid", Json::Arr(grid_json)),
+                ]),
+            ),
+        ]);
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("BENCH_table4_operand_slices.json");
+        match std::fs::write(&path, doc.to_string_pretty()) {
+            Ok(()) => println!("  (wrote {})", path.display()),
+            Err(e) => eprintln!("  (could not write {}: {e})", path.display()),
+        }
+    }
+    if !shape_ok {
+        let failed = checks.iter().filter(|c| !c.pass).count();
+        eprintln!("ERROR: {failed} shape checks failed in table4_operand_slices");
         std::process::exit(1);
     }
 }

@@ -1,20 +1,32 @@
 //! PERF: the xmp sliced-digit kernels — fast path (digit-plane-major,
-//! i32 per-slice partials, scoped-thread row fan-out) vs the scalar
-//! reference kernel (on-the-fly digit extraction per MAC), on the
-//! ResNet-18 layer-1 workload. This is the fast-path-vs-reference
-//! baseline tracked in `BENCH_xmp.json` (EXPERIMENTS.md §Execution);
-//! the two kernels are asserted bit-identical before timing starts.
+//! lane-fused, MR×NR/KC-tiled, SIMD inner dots, scoped-thread row
+//! fan-out) vs the scalar reference kernel (on-the-fly digit extraction
+//! per MAC), on the ResNet-18 layer-1 workload, plus the fast path with
+//! each datapath switch pinned off (`gemm-fast-scalar`,
+//! `gemm-fast-nofuse`) so `BENCH_xmp.json` carries the SIMD and
+//! lane-fusion speedups separately from the headline
+//! fast-vs-reference ratio (EXPERIMENTS.md §Execution). Every timed
+//! kernel is asserted bit-identical before timing starts.
 //!
-//! Run with `cargo bench --bench xmp` (`MPCNN_BENCH_FAST=1` for smoke).
+//! Run with `cargo bench --bench xmp` (`MPCNN_BENCH_FAST=1` for smoke;
+//! build with `--features simd` for the vector inner kernels).
 
 use mpcnn::cnn::resnet;
 use mpcnn::serving::VariantSpec;
 use mpcnn::util::bench::{black_box, Bencher};
+use mpcnn::util::json::Json;
 use mpcnn::util::rng::Rng;
+use mpcnn::util::simd;
 use mpcnn::xmp::conv::im2col;
-use mpcnn::xmp::gemm::{gemm_codes_i64, gemm_sliced_fast, gemm_sliced_reference};
+use mpcnn::xmp::gemm::{
+    gemm_codes_i64, gemm_sliced_fast, gemm_sliced_fast_opts, gemm_sliced_reference, FastOpts,
+};
 use mpcnn::xmp::pack::{pack_activations, pack_group};
 use mpcnn::xmp::{pack_model, Requant, XmpBackend, XmpConfig, XmpModel};
+
+fn opts(fuse: bool, simd: bool) -> FastOpts {
+    FastOpts { fuse, simd }
+}
 
 fn main() {
     let mut b = Bencher::new();
@@ -54,14 +66,19 @@ fn main() {
     // the 2D fast path (aq = 8 reproduces the weight-only results).
     let acts = pack_activations(&cols, m, kdim, 8, k);
 
-    // Correctness gate before any timing: the three kernels must agree
-    // bit-for-bit on the full workload.
+    // Correctness gate before any timing: every kernel about to be timed
+    // — including each fast-path datapath combination — must agree
+    // bit-for-bit with the plain-i64 truth on the full workload.
     {
         let truth = gemm_codes_i64(&cols, m, kdim, &codes, od);
         let refr = gemm_sliced_reference(&cols, m, kdim, &codes, od, wq, 8, k);
-        let fast = gemm_sliced_fast(&acts, &packed);
         assert_eq!(refr, truth, "scalar reference diverged from plain i64");
-        assert_eq!(fast, truth, "fast path diverged from plain i64");
+        for fuse in [false, true] {
+            for simd_on in [false, true] {
+                let fast = gemm_sliced_fast_opts(&acts, &packed, opts(fuse, simd_on));
+                assert_eq!(fast, truth, "fast (fuse={fuse}, simd={simd_on}) diverged");
+            }
+        }
     }
 
     b.run("pack/resnet18-layer1-w4k2", || {
@@ -73,6 +90,17 @@ fn main() {
     });
     b.run("gemm-fast/resnet18-layer1-w4k2", || {
         black_box(gemm_sliced_fast(&acts, &packed)[0])
+    });
+    // The same kernel with each datapath switch pinned off, so the JSON
+    // attributes the speedup between SIMD lanes and lane fusion. On a
+    // default (scalar-only) build gemm-fast-scalar ≈ gemm-fast.
+    let scalar_opts = opts(true, false);
+    let nofuse_opts = opts(false, true);
+    b.run("gemm-fast-scalar/resnet18-layer1-w4k2", || {
+        black_box(gemm_sliced_fast_opts(&acts, &packed, scalar_opts)[0])
+    });
+    b.run("gemm-fast-nofuse/resnet18-layer1-w4k2", || {
+        black_box(gemm_sliced_fast_opts(&acts, &packed, nofuse_opts)[0])
     });
 
     // --- whole-model forward on the exported ResNet-8 topology (what the
@@ -95,7 +123,8 @@ fn main() {
     });
 
     // The acceptance metric: fast-path speedup over the scalar reference
-    // on the layer-1 workload, derivable from BENCH_xmp.json.
+    // on the layer-1 workload, plus the per-switch attribution — all
+    // pinned as bounds in bench_baselines.json via BENCH_xmp.json.
     let mean = |name: &str| {
         b.results
             .iter()
@@ -103,9 +132,43 @@ fn main() {
             .map(|r| r.mean_ns)
             .unwrap_or(f64::NAN)
     };
-    let speedup = mean("gemm-reference/resnet18-layer1-w4k2")
-        / mean("gemm-fast/resnet18-layer1-w4k2");
-    println!("\nfast-path speedup over scalar reference (resnet18 layer-1): {speedup:.2}x");
+    let fast_ns = mean("gemm-fast/resnet18-layer1-w4k2");
+    let fast_speedup = mean("gemm-reference/resnet18-layer1-w4k2") / fast_ns;
+    let simd_speedup = mean("gemm-fast-scalar/resnet18-layer1-w4k2") / fast_ns;
+    let fusion_speedup = mean("gemm-fast-nofuse/resnet18-layer1-w4k2") / fast_ns;
+    let level = simd::level().name();
+    println!("\nfast-path speedup over scalar reference (resnet18 layer-1): {fast_speedup:.2}x");
+    println!(
+        "  from SIMD lanes ({level}): {simd_speedup:.2}x, from lane fusion: {fusion_speedup:.2}x"
+    );
 
-    b.finish("xmp");
+    println!("\n== bench summary: xmp ==");
+    for r in &b.results {
+        println!("  {}", r.summary());
+    }
+    if std::env::var("MPCNN_BENCH_JSON").ok().as_deref() == Some("0") {
+        return;
+    }
+    let doc = Json::obj(vec![
+        (
+            "results",
+            b.to_json().get("results").cloned().unwrap_or(Json::Arr(Vec::new())),
+        ),
+        (
+            "xmp",
+            Json::obj(vec![
+                ("workload", Json::str("resnet18-layer1-w4k2".to_string())),
+                ("simd", Json::str(level.to_string())),
+                ("fast_speedup", Json::num(fast_speedup)),
+                ("simd_speedup", Json::num(simd_speedup)),
+                ("fusion_speedup", Json::num(fusion_speedup)),
+                ("bit_identical", Json::Bool(true)),
+            ]),
+        ),
+    ]);
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_xmp.json");
+    match std::fs::write(&path, doc.to_string_pretty()) {
+        Ok(()) => println!("  (wrote {})", path.display()),
+        Err(e) => eprintln!("  (could not write {}: {e})", path.display()),
+    }
 }

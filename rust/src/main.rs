@@ -139,6 +139,12 @@ SUBCOMMANDS
              table (resnet8 is the quick topology; resnet18 runs the
              full ImageNet stem and takes a while on scalar kernels)
   info       print workload statistics for the built-in CNNs
+
+BUILD FEATURES
+  --features simd   compile the xmp fast GEMM's vector inner kernels
+             (AVX2, runtime-detected; NEON on aarch64). The default
+             build is pure scalar; results are bit-identical either
+             way, and MPCNN_SIMD=0 forces the scalar tile at runtime
 ";
 
 fn main() {

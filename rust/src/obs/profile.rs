@@ -78,6 +78,9 @@ pub struct ModelProfile {
     pub model: String,
     /// Which kernel path ran ("fast", "reference", "plain-i64").
     pub path: String,
+    /// Which SIMD dot-product level the fast path had available when the
+    /// pass ran ("scalar", "avx2", "neon") — scalar on default builds.
+    pub simd: String,
     pub layers: Vec<LayerProfile>,
     /// Clock of the attached accelerator design (MHz); 0 until attached.
     pub fmhz: f64,
@@ -169,6 +172,7 @@ impl ModelProfile {
         Json::obj(vec![
             ("model", Json::str(self.model.clone())),
             ("path", Json::str(self.path.clone())),
+            ("simd", Json::str(self.simd.clone())),
             ("fmhz", Json::num(self.fmhz)),
             ("total_host_us", Json::num(self.total_host_us())),
             ("total_fpga_us", Json::num(self.total_fpga_us())),
@@ -201,6 +205,7 @@ mod tests {
         let mut prof = ModelProfile {
             model: "resnet18".to_string(),
             path: "fast".to_string(),
+            simd: "scalar".to_string(),
             layers: cnn
                 .conv_layers()
                 .map(|l| LayerProfile {
@@ -237,6 +242,7 @@ mod tests {
         let prof = ModelProfile {
             model: "m".into(),
             path: "fast".into(),
+            simd: "scalar".into(),
             layers: vec![LayerProfile {
                 name: "conv1".into(),
                 kind: "conv3x3".into(),

@@ -16,6 +16,7 @@
 //! - [`error`] — mini-`anyhow` error/result plumbing
 //! - [`fnv`] — process-stable FNV-1a hashing for fingerprints/cache keys
 //! - [`sha256`] — portable content addressing (edge response cache)
+//! - [`simd`] — runtime SIMD capability detection for the xmp fast GEMM
 
 pub mod bench;
 pub mod cli;
@@ -25,5 +26,6 @@ pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod sha256;
+pub mod simd;
 pub mod stats;
 pub mod table;

@@ -1,0 +1,154 @@
+//! Runtime SIMD capability detection for the xmp fast GEMM.
+//!
+//! The fast kernel (`crate::xmp::gemm`) has three bit-identical inner dot
+//! products: a scalar tiled loop (always compiled, always the fallback),
+//! an AVX2 `madd_epi16` path, and a NEON `vmlal_s16` path. The vector
+//! paths only exist when the crate is built with `--features simd`; which
+//! one actually runs is decided here, once per process:
+//!
+//! - without the `simd` cargo feature, [`level`] is always
+//!   [`SimdLevel::Scalar`] — scalar-only machines never see vector code;
+//! - with the feature on `x86_64`, AVX2 is probed at runtime via
+//!   `is_x86_feature_detected!` (an AVX2-less CPU falls back to scalar);
+//! - with the feature on `aarch64`, NEON is baseline and used directly;
+//! - `MPCNN_SIMD=0` (or `off`) in the environment forces scalar even on a
+//!   capable build — the escape hatch for benchmarking and bug triage;
+//! - [`force_scalar`] flips the same switch programmatically so tests and
+//!   benches can pin both datapaths in one process and assert they agree.
+//!
+//! Every consumer must treat the level as a pure performance hint: all
+//! levels produce bit-identical results (enforced by the differential net
+//! in `rust/tests/integration_xmp.rs` and the golden-logit fixtures).
+
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+
+/// Which inner dot-product implementation the fast GEMM will use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Portable scalar loop — the default build and the universal fallback.
+    Scalar,
+    /// AVX2 `_mm256_madd_epi16` (x86_64, `simd` feature, runtime-detected).
+    Avx2,
+    /// NEON `vmlal_s16` (aarch64 baseline, `simd` feature).
+    Neon,
+}
+
+impl SimdLevel {
+    /// Stable lower-case name for bench JSON and profile output.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Neon => "neon",
+        }
+    }
+}
+
+/// Programmatic scalar override (tests/benches); checked on every query.
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+/// Cached detection result: 0 = not probed yet, else `code(level) + 1`.
+static DETECTED: AtomicU8 = AtomicU8::new(0);
+
+fn code(l: SimdLevel) -> u8 {
+    match l {
+        SimdLevel::Scalar => 1,
+        SimdLevel::Avx2 => 2,
+        SimdLevel::Neon => 3,
+    }
+}
+
+/// Force (or stop forcing) the scalar fallback for this process.
+///
+/// Unlike the `MPCNN_SIMD` environment variable this takes effect
+/// immediately, even after detection has been cached — the golden-fixture
+/// tests use it to assert exact logit bits through the SIMD path *and*
+/// the scalar fallback in the same run.
+pub fn force_scalar(on: bool) {
+    FORCE_SCALAR.store(on, Ordering::Relaxed);
+}
+
+/// True while [`force_scalar`] is holding the fast path on scalar.
+pub fn scalar_forced() -> bool {
+    FORCE_SCALAR.load(Ordering::Relaxed)
+}
+
+/// The dot-product level the fast GEMM should use right now.
+///
+/// Hardware/environment detection runs once and is cached; the
+/// [`force_scalar`] override is consulted on every call.
+pub fn level() -> SimdLevel {
+    if scalar_forced() {
+        return SimdLevel::Scalar;
+    }
+    match DETECTED.load(Ordering::Relaxed) {
+        1 => SimdLevel::Scalar,
+        2 => SimdLevel::Avx2,
+        3 => SimdLevel::Neon,
+        _ => {
+            let l = detect();
+            DETECTED.store(code(l), Ordering::Relaxed);
+            l
+        }
+    }
+}
+
+fn detect() -> SimdLevel {
+    let env_off = std::env::var("MPCNN_SIMD")
+        .map(|v| v == "0" || v.eq_ignore_ascii_case("off"))
+        .unwrap_or(false);
+    if env_off {
+        SimdLevel::Scalar
+    } else {
+        arch_level()
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+fn arch_level() -> SimdLevel {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        SimdLevel::Avx2
+    } else {
+        SimdLevel::Scalar
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+fn arch_level() -> SimdLevel {
+    SimdLevel::Neon
+}
+
+#[cfg(not(all(feature = "simd", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+fn arch_level() -> SimdLevel {
+    SimdLevel::Scalar
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn force_scalar_overrides_detection_and_releases() {
+        let before = level();
+        force_scalar(true);
+        assert_eq!(level(), SimdLevel::Scalar);
+        assert!(scalar_forced());
+        force_scalar(false);
+        assert!(!scalar_forced());
+        // Detection is cached, so releasing the override restores whatever
+        // the build/hardware supports.
+        assert_eq!(level(), before);
+    }
+
+    #[test]
+    fn level_matches_build_configuration() {
+        let l = level();
+        #[cfg(not(feature = "simd"))]
+        assert_eq!(l, SimdLevel::Scalar, "scalar is the default build's only level");
+        #[cfg(feature = "simd")]
+        assert!(
+            matches!(l, SimdLevel::Scalar | SimdLevel::Avx2 | SimdLevel::Neon),
+            "detected level must be one of the compiled paths"
+        );
+        assert!(!l.name().is_empty());
+    }
+}

@@ -103,19 +103,21 @@ impl XmpBackend {
                 self.image_len()
             );
         }
-        let packed = self.packed();
-        let mut logits = Vec::with_capacity(batch * self.classes());
-        for img in images.chunks_exact(self.image_len()) {
-            let l = self.model.forward(packed, img, self.fast)?;
-            if l.len() != self.classes() {
-                crate::bail!(
-                    "xmp: model '{}' produced {} logits, expected {}",
-                    self.model.name,
-                    l.len(),
-                    self.classes()
-                );
-            }
-            logits.extend_from_slice(&l);
+        // One batched forward: every layer's im2col and digit-plane
+        // packing runs once for the whole batch, and each GEMM sees
+        // `batch` times the rows. Bit-identical to a per-image loop
+        // (pinned by `infer_batch_layout_and_determinism` and the
+        // forward_batch property test).
+        let path = if self.fast { KernelPath::Fast } else { KernelPath::Reference };
+        let logits = self.model.forward_batch(self.packed(), images, batch, path)?;
+        if logits.len() != batch * self.classes() {
+            crate::bail!(
+                "xmp: model '{}' produced {} logits, expected {} x {}",
+                self.model.name,
+                logits.len(),
+                batch,
+                self.classes()
+            );
         }
         Ok(logits)
     }
@@ -226,6 +228,12 @@ mod tests {
         // classify_one agrees with argmax over infer_batch.
         let want = argmax_rows(&logits[..10], 10)[0];
         assert_eq!(b.classify_one(&img0).unwrap(), want);
+        // The scalar-reference backend batches identically, and the two
+        // kernel paths agree on the whole batched result.
+        let r = backend(2).reference_kernels();
+        let lr = r.infer_batch(&batch, 2).unwrap();
+        assert_eq!(&lr[..10], &r.infer_batch(&img0, 1).unwrap()[..]);
+        assert_eq!(logits, lr, "fast and reference disagree on the batch");
     }
 
     #[test]

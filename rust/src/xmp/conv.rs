@@ -92,6 +92,34 @@ impl<'a> ActPlaneCache<'a> {
     }
 }
 
+/// im2col over a whole batch of NHWC maps: each image's patch matrix,
+/// stacked row-major into one `(batch·oh², kdim)` operand so the batch
+/// shares one activation slicing and ONE GEMM per channel group. Row
+/// `b·oh² + r` is row `r` of image `b`'s own im2col; GEMM output rows
+/// depend only on their own input row, so batching cannot change any
+/// image's bits.
+pub fn im2col_batch(
+    inputs: &[u8],
+    batch: usize,
+    ih: u32,
+    iw: u32,
+    k: u32,
+    s: u32,
+) -> (Vec<i16>, usize, usize) {
+    let img = (ih * ih * iw) as usize;
+    assert_eq!(inputs.len(), batch * img, "inputs must be batch·ih²·iw");
+    let (oh, _) = same_pad(ih, k, s);
+    let kdim = (k * k * iw) as usize;
+    let m1 = (oh * oh) as usize;
+    let mut cols = Vec::with_capacity(batch * m1 * kdim);
+    for image in inputs.chunks_exact(img) {
+        let (c, m, kd) = im2col(image, ih, iw, k, s);
+        debug_assert_eq!((m, kd), (m1, kdim));
+        cols.extend_from_slice(&c);
+    }
+    (cols, batch * m1, kdim)
+}
+
 /// One conv layer forward: im2col once, slice the activations once per
 /// digit width, then one 2D-sliced GEMM per channel group (`fast` picks
 /// the digit-plane fast path or the scalar reference kernel), per-channel
@@ -106,7 +134,23 @@ pub fn conv_forward(
     pl: &PackedLayer,
     fast: bool,
 ) -> Vec<u8> {
-    conv_forward_profiled(input, a_in, l, pl, fast, None)
+    conv_forward_batch_profiled(input, 1, a_in, l, pl, fast, None)
+}
+
+/// [`conv_forward`] over a batch of images in one pass: one batched
+/// im2col, one activation digit-plane slicing per digit width, and one
+/// GEMM per channel group for the whole batch — the batch-level operand
+/// reuse the serving path runs on. Output is the per-image outputs
+/// concatenated, bit-identical to calling [`conv_forward`] per image.
+pub fn conv_forward_batch(
+    inputs: &[u8],
+    batch: usize,
+    a_in: u32,
+    l: &XmpLayer,
+    pl: &PackedLayer,
+    fast: bool,
+) -> Vec<u8> {
+    conv_forward_batch_profiled(inputs, batch, a_in, l, pl, fast, None)
 }
 
 /// Advance the stage clock: charge the time since the last lap to one
@@ -134,10 +178,24 @@ pub fn conv_forward_profiled(
     l: &XmpLayer,
     pl: &PackedLayer,
     fast: bool,
+    prof: Option<&mut StageTimes>,
+) -> Vec<u8> {
+    conv_forward_batch_profiled(input, 1, a_in, l, pl, fast, prof)
+}
+
+/// The one conv implementation everything above delegates to:
+/// [`conv_forward_batch`] with an optional per-stage timing sink.
+pub fn conv_forward_batch_profiled(
+    inputs: &[u8],
+    batch: usize,
+    a_in: u32,
+    l: &XmpLayer,
+    pl: &PackedLayer,
+    fast: bool,
     mut prof: Option<&mut StageTimes>,
 ) -> Vec<u8> {
     let mut mark = prof.as_ref().map(|_| Instant::now());
-    let (cols, m, kdim) = im2col(input, l.ih, l.iw, l.k, l.s);
+    let (cols, m, kdim) = im2col_batch(inputs, batch, l.ih, l.iw, l.k, l.s);
     lap(&mut prof, &mut mark, |p, us| p.im2col_us += us);
     debug_assert_eq!(kdim, l.kdim());
     let od = l.od as usize;
@@ -188,23 +246,61 @@ pub fn conv_forward_i64(input: &[u8], l: &XmpLayer) -> Vec<u8> {
     out
 }
 
+/// Batched plain-i64 oracle: image-by-image [`conv_forward_i64`], outputs
+/// concatenated. Deliberately does NO cross-image reuse — it is the
+/// definition the batched sliced paths must reproduce bit-for-bit.
+pub fn conv_forward_i64_batch(inputs: &[u8], batch: usize, l: &XmpLayer) -> Vec<u8> {
+    let img = (l.ih * l.ih * l.iw) as usize;
+    assert_eq!(inputs.len(), batch * img, "inputs must be batch·ih²·iw");
+    let mut out = Vec::with_capacity(batch * img);
+    for image in inputs.chunks_exact(img) {
+        out.extend_from_slice(&conv_forward_i64(image, l));
+    }
+    out
+}
+
 /// The FC head through the same 2D-sliced kernels (`M = 1`): pooled u8
 /// features (at word-length `a_in`) in, `f32` logits out via the
 /// per-class dequant scale.
 pub fn fc_logits(pooled: &[u8], a_in: u32, l: &XmpLayer, pl: &PackedLayer, fast: bool) -> Vec<f32> {
+    fc_logits_batch(pooled, 1, a_in, l, pl, fast)
+}
+
+/// Batched FC head (`M = batch`): pooled feature rows in, `batch × od`
+/// logit rows out — one sliced GEMM per channel group for the whole
+/// batch, each group's classes written at their offsets exactly like the
+/// conv channel interleave. Bit-identical to per-image [`fc_logits`].
+pub fn fc_logits_batch(
+    pooled: &[u8],
+    batch: usize,
+    a_in: u32,
+    l: &XmpLayer,
+    pl: &PackedLayer,
+    fast: bool,
+) -> Vec<f32> {
+    assert!(
+        batch > 0 && pooled.len() % batch == 0,
+        "pooled features must be whole batch rows"
+    );
+    let kdim = pooled.len() / batch;
     let cols: Vec<i16> = pooled.iter().map(|&v| v as i16).collect();
-    let kdim = pooled.len();
-    let mut logits = Vec::with_capacity(l.od as usize);
-    let mut acts = ActPlaneCache::new(&cols, 1, kdim, a_in);
+    let od = l.od as usize;
+    let mut logits = vec![0f32; batch * od];
+    let mut acts = ActPlaneCache::new(&cols, batch, kdim, a_in);
+    let mut base = 0usize;
     for (g, pg) in l.groups.iter().zip(&pl.groups) {
         let accs = if fast {
             gemm_sliced_fast(acts.for_k(pg.k), pg)
         } else {
-            gemm_sliced_reference(&cols, 1, kdim, &g.codes, pg.od, pg.wq, a_in, pg.k)
+            gemm_sliced_reference(&cols, batch, kdim, &g.codes, pg.od, pg.wq, a_in, pg.k)
         };
-        for (&acc, &scale) in accs.iter().zip(&pg.scales) {
-            logits.push(acc as f32 * scale);
+        for (row_out, row_acc) in logits.chunks_mut(od).zip(accs.chunks_exact(pg.od)) {
+            let slots = row_out[base..base + pg.od].iter_mut();
+            for ((o, &acc), &scale) in slots.zip(row_acc).zip(&pg.scales) {
+                *o = acc as f32 * scale;
+            }
         }
+        base += pg.od;
     }
     logits
 }
@@ -345,6 +441,96 @@ mod tests {
         let out_ref = conv_forward_profiled(&input, 8, &l, &pl, false, Some(&mut st_ref));
         assert_eq!(out_ref, out);
         assert_eq!(st_ref.pack_us, 0.0, "reference path has no pack stage");
+    }
+
+    #[test]
+    fn batched_conv_matches_per_image_loops() {
+        // The batched forward is one big GEMM over stacked im2col rows:
+        // its output must be the per-image outputs concatenated, on every
+        // kernel path.
+        let requant = crate::xmp::Requant { mult: 256, shift: 8, qmax: 255 };
+        let l = XmpLayer {
+            name: "id".into(),
+            kind: crate::cnn::LayerKind::Conv,
+            ih: 3,
+            iw: 1,
+            od: 1,
+            k: 3,
+            s: 1,
+            aq: 8,
+            groups: vec![crate::xmp::GroupWeights {
+                wq: 4,
+                od: 1,
+                codes: vec![0, 1, 0, -2, 3, 1, 0, -1, 0],
+                requant: vec![requant],
+                scales: vec![1.0],
+            }],
+        };
+        let pl = PackedLayer {
+            groups: vec![crate::xmp::pack::pack_group(
+                &l.groups[0].codes,
+                1,
+                9,
+                4,
+                2,
+                vec![requant],
+                vec![1.0],
+            )],
+        };
+        let inputs: Vec<u8> = (0u8..27).map(|i| i.wrapping_mul(9)).collect();
+        for fast in [true, false] {
+            let mut per_image = Vec::new();
+            for image in inputs.chunks_exact(9) {
+                per_image.extend_from_slice(&conv_forward(image, 8, &l, &pl, fast));
+            }
+            let batched = conv_forward_batch(&inputs, 3, 8, &l, &pl, fast);
+            assert_eq!(batched, per_image, "fast={fast}");
+        }
+        assert_eq!(
+            conv_forward_i64_batch(&inputs, 3, &l),
+            conv_forward_batch(&inputs, 3, 8, &l, &pl, true)
+        );
+    }
+
+    #[test]
+    fn batched_fc_matches_per_row_loops() {
+        let l = XmpLayer {
+            name: "fc".into(),
+            kind: crate::cnn::LayerKind::Fc,
+            ih: 1,
+            iw: 4,
+            od: 2,
+            k: 1,
+            s: 1,
+            aq: 8,
+            groups: vec![crate::xmp::GroupWeights {
+                wq: 4,
+                od: 2,
+                codes: vec![1, -2, 3, -4, 5, -6, 7, 7],
+                requant: vec![crate::xmp::Requant { mult: 256, shift: 8, qmax: 255 }; 2],
+                scales: vec![0.5, -0.25],
+            }],
+        };
+        let pl = PackedLayer {
+            groups: vec![crate::xmp::pack::pack_group(
+                &l.groups[0].codes,
+                2,
+                4,
+                4,
+                2,
+                l.groups[0].requant.clone(),
+                l.groups[0].scales.clone(),
+            )],
+        };
+        let pooled: Vec<u8> = vec![3, 0, 255, 17, 9, 8, 7, 6, 1, 2, 3, 4];
+        for fast in [true, false] {
+            let mut per_row = Vec::new();
+            for row in pooled.chunks_exact(4) {
+                per_row.extend_from_slice(&fc_logits(row, 8, &l, &pl, fast));
+            }
+            let batched = fc_logits_batch(&pooled, 3, 8, &l, &pl, fast);
+            assert_eq!(batched, per_row, "fast={fast}");
+        }
     }
 
     #[test]

@@ -19,16 +19,46 @@
 //!   shifted adder tree generalized to the paper's 2D operand slicing,
 //!   and the baseline `cargo bench --bench xmp` measures against.
 //! - [`gemm_sliced_fast`] — the serving hot path: digit-plane-major
-//!   packed operands on both sides, one tight `i32` dot product per
-//!   `(s_a, s_w)` slice pair, scoped-thread fan-out over im2col rows.
+//!   packed operands, lane-fused, register/cache-tiled and (optionally)
+//!   SIMD. See below.
 //!
-//! All three are property-tested bit-identical across every `(wq, aq, k)`
-//! triple including partial top digits on both operands; the fast path's
-//! `i32` partials are exact because [`crate::xmp::pack::max_kdim`] bounds
-//! the reduction depth as a function of the actual digit magnitudes.
+//! ## The fast path
+//!
+//! Three independent mechanisms, each bit-exact:
+//!
+//! 1. **Lane fusion.** Adjacent digit planes fuse pairwise into planes of
+//!    twice the digit width ([`crate::xmp::pack::fuse_plane_pairs`]:
+//!    provably identical to re-slicing at `2k`), and the ladder keeps
+//!    doubling the effective width `k_eff` while
+//!    [`crate::xmp::pack::max_kdim`]`(wq, aq, 2·k_eff)` still admits the
+//!    reduction depth — each rung quarters the `S_a × S_w` slice
+//!    cross-product. ResNet-family depths (`kdim ≤ 4608`) sit far below
+//!    every bound, so serving workloads typically fuse all the way to a
+//!    single plane pair; Table-IV-style wide-digit/deep-reduction cells
+//!    stay bound-limited and keep their slice cost (`benches/
+//!    table4_operand_slices.rs` measures exactly this grid).
+//! 2. **Register/cache tiling.** [`MR`]`×`[`NR`] output tiles accumulate
+//!    in `i32` registers over the whole reduction (exact within the
+//!    re-checked `max_kdim(wq, aq, k_eff)` bound), with the reduction cut
+//!    into [`KC`]-lane blocks so a tile's working set stays L1-resident
+//!    at any depth; row tiles are swept outermost so the activation rows
+//!    stay hot across the whole channel sweep.
+//! 3. **SIMD dot products.** The innermost dot is scalar by default, and
+//!    AVX2 (`madd_epi16`) or NEON (`vmlal_s16`) when the crate is built
+//!    with `--features simd` and [`crate::util::simd::level`] detects the
+//!    hardware. Per-lane partials are bounded by `kdim/lanes · a_max ·
+//!    w_max` — stricter than the scalar bound — so vector accumulation is
+//!    exact wherever scalar accumulation is.
+//!
+//! All paths (fusion on/off × SIMD on/off × thread fan-out) are
+//! property-tested bit-identical to the two oracle kernels across every
+//! `(wq, aq, k)` triple including partial top digits on both operands and
+//! tile-remainder shapes; [`gemm_sliced_fast_opts`] exposes the switches
+//! so the differential net and the benches can pin each datapath.
 
-use super::pack::{max_kdim, PackedGroup, SlicedActs};
+use super::pack::{fuse_plane_pairs, max_kdim, PackedGroup, SlicedActs};
 use crate::quant::slicing::{n_slices, slice_digit, slice_digit_unsigned};
+use crate::util::simd::{self, SimdLevel};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Plain `i64` ground truth: direct `Σ a·w` per output element.
@@ -111,37 +141,246 @@ impl Drop for GemmSlot {
     }
 }
 
-/// Inner loop of the fast path for one im2col row: per `(s_w, s_a)` slice
-/// pair, a tight `i32` dot product between the weight plane's channel row
-/// and the activation plane's row, recombined by shift-add at
-/// `k·(s_w + s_a)`. Exact: the plane digits are `slice_signed`'s /
-/// `slice_unsigned`'s, and the `i32` partials cannot overflow within
-/// [`crate::xmp::pack::max_kdim`]`(wq, aq, k)`.
-#[inline]
-fn fast_row(a: &SlicedActs, row: usize, g: &PackedGroup, row_out: &mut [i64]) {
-    let kdim = g.kdim;
-    for (n, o) in row_out.iter_mut().enumerate() {
-        let mut acc = 0i64;
-        for (sw, wplane) in g.planes.iter().enumerate() {
-            let wrow = &wplane[n * kdim..(n + 1) * kdim];
-            for (sa, aplane) in a.planes.iter().enumerate() {
-                let arow = &aplane[row * kdim..(row + 1) * kdim];
-                let mut p = 0i32;
-                for (&x, &d) in arow.iter().zip(wrow) {
-                    p += x as i32 * d as i32;
-                }
-                acc += (p as i64) << (g.k as usize * (sw + sa));
-            }
+/// Register-tile rows (im2col rows per output tile) of the fast kernel.
+pub const MR: usize = 4;
+/// Register-tile columns (output channels per output tile).
+pub const NR: usize = 4;
+/// Cache block along the reduction dimension, in `i16` lanes: one tile's
+/// live operands are `(MR + NR) · KC · 2` bytes = 8 KiB — L1-resident
+/// however deep the layer's reduction is.
+pub const KC: usize = 512;
+
+/// Switches for [`gemm_sliced_fast_opts`]: the differential tests and the
+/// benches pin each datapath (lane fusion on/off × SIMD on/off) and
+/// assert bit-identity; serving uses [`FastOpts::default`] (both on).
+#[derive(Clone, Copy, Debug)]
+pub struct FastOpts {
+    /// Fuse low-width slice pairs into wider digit lanes while
+    /// [`max_kdim`] at the doubled width admits the reduction depth.
+    pub fuse: bool,
+    /// Use the runtime-detected SIMD level ([`crate::util::simd::level`]);
+    /// `false` pins the scalar tiled dot product.
+    pub simd: bool,
+}
+
+impl Default for FastOpts {
+    fn default() -> FastOpts {
+        FastOpts {
+            fuse: true,
+            simd: true,
         }
-        *o = acc;
     }
 }
 
-/// Fast path: digit-plane-major layout on both operands, `i32` partials
-/// per slice pair, scoped-thread fan-out over im2col rows. Bit-identical
-/// to [`gemm_sliced_reference`] — same digits, same exact integer
-/// algebra; only the evaluation order and layout differ.
+/// The effective digit width the lane-fusion ladder reaches: starting
+/// from the packed width `k`, keep doubling while either operand still
+/// has more than one plane and the `i32` bound at the doubled width still
+/// admits the reduction depth. Terminates because once `k_eff` covers
+/// both word-lengths each operand is a single plane.
+fn fused_width(wq: u32, aq: u32, k: u32, kdim: usize) -> u32 {
+    let mut k_eff = k;
+    while (n_slices(wq, k_eff) > 1 || n_slices(aq, k_eff) > 1)
+        && kdim <= max_kdim(wq, aq, k_eff * 2)
+    {
+        k_eff *= 2;
+    }
+    k_eff
+}
+
+/// Run the fusion ladder from width `k` up to `target` (a power-of-two
+/// multiple of `k` chosen by [`fused_width`]), one pairwise rung at a
+/// time — each rung is exactly a re-slicing at the doubled width.
+fn fuse_to(planes: &[Vec<i16>], k: u32, target: u32) -> Vec<Vec<i16>> {
+    let mut out = fuse_plane_pairs(planes, k);
+    let mut k_cur = k * 2;
+    while k_cur < target {
+        out = fuse_plane_pairs(&out, k_cur);
+        k_cur *= 2;
+    }
+    out
+}
+
+/// Everything a worker needs to run the tiled kernel over its row range:
+/// the (possibly fused) digit planes of both operands plus the shared
+/// shape/dispatch parameters.
+struct TileJob<'p> {
+    aplanes: &'p [Vec<i16>],
+    wplanes: &'p [Vec<i16>],
+    k_eff: u32,
+    kdim: usize,
+    od: usize,
+    level: SimdLevel,
+}
+
+/// Run every `(s_w, s_a)` plane pair's tiled GEMM over the rows of `out`
+/// (a `rows × od` slab whose first row is global im2col row `r0`),
+/// shift-adding each pair's `i32` tile accumulators into the `i64`
+/// output at `k_eff·(s_w + s_a)`.
+fn fast_block(job: &TileJob, r0: usize, out: &mut [i64]) {
+    for (sw, wplane) in job.wplanes.iter().enumerate() {
+        for (sa, aplane) in job.aplanes.iter().enumerate() {
+            let sh = job.k_eff as usize * (sw + sa);
+            pair_block(job, aplane, wplane, r0, sh, out);
+        }
+    }
+}
+
+/// One plane pair's register/cache-tiled GEMM: MR×NR output tiles
+/// accumulated in `i32` over the whole reduction (exact within
+/// [`max_kdim`]`(wq, aq, k_eff)`), the reduction cut into KC-lane cache
+/// blocks. Row tiles are outermost so the MR activation rows stay hot
+/// across the whole channel sweep.
+fn pair_block(
+    job: &TileJob,
+    aplane: &[i16],
+    wplane: &[i16],
+    r0: usize,
+    sh: usize,
+    out: &mut [i64],
+) {
+    let (kdim, od) = (job.kdim, job.od);
+    let rows = out.len() / od;
+    let mut acc = [[0i32; NR]; MR];
+    for rt in (0..rows).step_by(MR) {
+        let mr = MR.min(rows - rt);
+        for ct in (0..od).step_by(NR) {
+            let nr = NR.min(od - ct);
+            for row in acc.iter_mut() {
+                *row = [0i32; NR];
+            }
+            for kb in (0..kdim).step_by(KC) {
+                let kc = KC.min(kdim - kb);
+                for (i, arow) in acc.iter_mut().take(mr).enumerate() {
+                    let a = &aplane[(r0 + rt + i) * kdim + kb..][..kc];
+                    for (j, cell) in arow.iter_mut().take(nr).enumerate() {
+                        let w = &wplane[(ct + j) * kdim + kb..][..kc];
+                        *cell += dot_i16(a, w, job.level);
+                    }
+                }
+            }
+            for (i, arow) in acc.iter().take(mr).enumerate() {
+                let orow = &mut out[(rt + i) * od + ct..][..nr];
+                for (o, &p) in orow.iter_mut().zip(arow.iter()) {
+                    *o += (p as i64) << sh;
+                }
+            }
+        }
+    }
+}
+
+/// Innermost dot product between one activation row block and one weight
+/// channel block — dispatched on the detected SIMD level. Every level is
+/// bit-identical: the products are exact in `i32` and integer addition is
+/// associative, so lane order cannot change the sum.
+#[inline]
+fn dot_i16(a: &[i16], w: &[i16], level: SimdLevel) -> i32 {
+    match level {
+        SimdLevel::Scalar => dot_scalar(a, w),
+        SimdLevel::Avx2 => dot_avx2_or_scalar(a, w),
+        SimdLevel::Neon => dot_neon_or_scalar(a, w),
+    }
+}
+
+#[inline]
+fn dot_scalar(a: &[i16], w: &[i16]) -> i32 {
+    let mut p = 0i32;
+    for (&x, &d) in a.iter().zip(w) {
+        p += x as i32 * d as i32;
+    }
+    p
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[inline]
+fn dot_avx2_or_scalar(a: &[i16], w: &[i16]) -> i32 {
+    // Safety: `SimdLevel::Avx2` is only ever produced by
+    // `util::simd::level()` after `is_x86_feature_detected!("avx2")`.
+    unsafe { dot_avx2(a, w) }
+}
+
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+#[inline]
+fn dot_avx2_or_scalar(a: &[i16], w: &[i16]) -> i32 {
+    dot_scalar(a, w)
+}
+
+/// AVX2 dot product: 16 `i16` lanes per step. `madd_epi16` sums adjacent
+/// `i16·i16` products into 8 `i32` lanes (exact: each pairwise sum is
+/// `< 2·2^15·2^15 = 2^31`); each lane then accumulates `≤ kdim/8`
+/// partials of magnitude `≤ a_max·w_max`, within the scalar bound that
+/// [`max_kdim`] already enforces for the full `kdim`.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_avx2(a: &[i16], w: &[i16]) -> i32 {
+    use std::arch::x86_64::*;
+    let mut acc = _mm256_setzero_si256();
+    let mut ia = a.chunks_exact(16);
+    let mut iw = w.chunks_exact(16);
+    for (ca, cw) in (&mut ia).zip(&mut iw) {
+        let av = _mm256_loadu_si256(ca.as_ptr() as *const __m256i);
+        let wv = _mm256_loadu_si256(cw.as_ptr() as *const __m256i);
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(av, wv));
+    }
+    // Horizontal sum of the 8 i32 lanes.
+    let s = _mm_add_epi32(_mm256_extracti128_si256(acc, 1), _mm256_castsi256_si128(acc));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b0100_1110));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b1011_0001));
+    let mut p = _mm_cvtsi128_si32(s);
+    for (&x, &d) in ia.remainder().iter().zip(iw.remainder()) {
+        p += x as i32 * d as i32;
+    }
+    p
+}
+
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+#[inline]
+fn dot_neon_or_scalar(a: &[i16], w: &[i16]) -> i32 {
+    // Safety: NEON is baseline on aarch64 (std itself assumes it).
+    unsafe { dot_neon(a, w) }
+}
+
+#[cfg(not(all(feature = "simd", target_arch = "aarch64")))]
+#[inline]
+fn dot_neon_or_scalar(a: &[i16], w: &[i16]) -> i32 {
+    dot_scalar(a, w)
+}
+
+/// NEON dot product: 8 `i16` lanes per step via widening multiply-add
+/// (`vmlal_s16`) on the low/high halves. Each of the 4 `i32` lanes
+/// accumulates `≤ kdim/4` exact products, within the scalar bound.
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+#[target_feature(enable = "neon")]
+unsafe fn dot_neon(a: &[i16], w: &[i16]) -> i32 {
+    use std::arch::aarch64::*;
+    let mut acc = vdupq_n_s32(0);
+    let mut ia = a.chunks_exact(8);
+    let mut iw = w.chunks_exact(8);
+    for (ca, cw) in (&mut ia).zip(&mut iw) {
+        let av = vld1q_s16(ca.as_ptr());
+        let wv = vld1q_s16(cw.as_ptr());
+        acc = vmlal_s16(acc, vget_low_s16(av), vget_low_s16(wv));
+        acc = vmlal_high_s16(acc, av, wv);
+    }
+    let mut p = vaddvq_s32(acc);
+    for (&x, &d) in ia.remainder().iter().zip(iw.remainder()) {
+        p += x as i32 * d as i32;
+    }
+    p
+}
+
+/// Fast path with the default switches (lane fusion + SIMD on) — the
+/// kernel [`crate::xmp::XmpBackend`] serves from.
 pub fn gemm_sliced_fast(a: &SlicedActs, g: &PackedGroup) -> Vec<i64> {
+    gemm_sliced_fast_opts(a, g, FastOpts::default())
+}
+
+/// Fast path with explicit datapath switches: digit-plane-major layout on
+/// both operands, lane fusion to the widest bound-admitted digit width,
+/// MR×NR/KC-tiled `i32` partials, SIMD inner dots, scoped-thread fan-out
+/// over im2col rows. Bit-identical to [`gemm_sliced_reference`] under
+/// every switch combination — same digits, same exact integer algebra;
+/// only evaluation order and layout differ.
+pub fn gemm_sliced_fast_opts(a: &SlicedActs, g: &PackedGroup, opts: FastOpts) -> Vec<i64> {
     assert_eq!(a.kdim, g.kdim, "operand reduction depths must agree");
     assert_eq!(
         a.k, g.k,
@@ -163,27 +402,54 @@ pub fn gemm_sliced_fast(a: &SlicedActs, g: &PackedGroup) -> Vec<i64> {
     if m == 0 || g.od == 0 {
         return out;
     }
+    let level = if opts.simd {
+        simd::level()
+    } else {
+        SimdLevel::Scalar
+    };
+    // Lane-fusion ladder: rebuild both operands' planes at the widest
+    // bound-admitted digit width (skipped when that width is k itself).
+    let target = if opts.fuse {
+        fused_width(g.wq, a.aq, g.k, g.kdim)
+    } else {
+        g.k
+    };
+    let fused = if target > g.k {
+        let w = fuse_to(&g.planes, g.k, target);
+        let a2 = fuse_to(&a.planes, g.k, target);
+        Some((w, a2))
+    } else {
+        None
+    };
+    let (wplanes, aplanes): (&[Vec<i16>], &[Vec<i16>]) = match &fused {
+        Some((w, a2)) => (w, a2),
+        None => (&g.planes, &a.planes),
+    };
+    let job = TileJob {
+        aplanes,
+        wplanes,
+        k_eff: target,
+        kdim: g.kdim,
+        od: g.od,
+        level,
+    };
     // Below this many digit-MACs, thread spawn/teardown rivals the kernel
     // itself (serving runs one GEMM per channel group per layer per image;
     // small-CNN groups are ~1M MACs and sub-millisecond) — stay inline.
     const MIN_WORK_TO_FAN_OUT: usize = 4_000_000;
-    let work = m * g.kdim * g.od * g.planes.len() * a.planes.len();
+    let work = m * g.kdim * g.od * job.wplanes.len() * job.aplanes.len();
     let (_slot, budget) = GemmSlot::acquire();
     let n_threads = budget.min(m).max(1);
     if n_threads == 1 || work < MIN_WORK_TO_FAN_OUT {
-        for (row, row_out) in out.chunks_mut(g.od).enumerate() {
-            fast_row(a, row, g, row_out);
-        }
+        fast_block(&job, 0, &mut out);
         return out;
     }
     let rows_per_chunk = m.div_ceil(n_threads);
+    let job = &job;
     std::thread::scope(|sc| {
         for (ci, chunk) in out.chunks_mut(rows_per_chunk * g.od).enumerate() {
             sc.spawn(move || {
-                let m0 = ci * rows_per_chunk;
-                for (j, row_out) in chunk.chunks_mut(g.od).enumerate() {
-                    fast_row(a, m0 + j, g, row_out);
-                }
+                fast_block(job, ci * rows_per_chunk, chunk);
             });
         }
     });
@@ -211,6 +477,31 @@ mod tests {
         (cols, m, kdim, codes, od, wq, aq, k)
     }
 
+    fn packed(codes: &[i32], od: usize, kdim: usize, wq: u32, k: u32) -> PackedGroup {
+        pack_group(
+            codes,
+            od,
+            kdim,
+            wq,
+            k,
+            vec![Requant::from_scale(0.5); od],
+            vec![1.0; od],
+        )
+    }
+
+    /// Every switch combination of the fast path.
+    fn opts_grid() -> [FastOpts; 4] {
+        let mut grid = [FastOpts::default(); 4];
+        let mut i = 0;
+        for fuse in [true, false] {
+            for simd in [true, false] {
+                grid[i] = FastOpts { fuse, simd };
+                i += 1;
+            }
+        }
+        grid
+    }
+
     #[test]
     fn prop_all_three_kernels_bit_identical() {
         // The module's anchor: plain i64 == on-the-fly 2D-sliced reference
@@ -221,18 +512,109 @@ mod tests {
             let plain = gemm_codes_i64(&cols, m, kdim, &codes, od);
             let refr = gemm_sliced_reference(&cols, m, kdim, &codes, od, wq, aq, k);
             check_eq(refr.clone(), plain.clone(), "reference vs plain i64")?;
-            let g = pack_group(
-                &codes,
-                od,
-                kdim,
-                wq,
-                k,
-                vec![Requant::from_scale(0.5); od],
-                vec![1.0; od],
-            );
+            let g = packed(&codes, od, kdim, wq, k);
             let a = pack_activations(&cols, m, kdim, aq, k);
             let fast = gemm_sliced_fast(&a, &g);
             check_eq(fast, plain, "fast vs plain i64")
+        });
+    }
+
+    #[test]
+    fn prop_fusion_and_simd_switches_agree() {
+        // The lane-fusion on/off × SIMD on/off agreement loop: all four
+        // datapaths of the fast kernel are the same function as the plain
+        // i64 oracle on random shapes.
+        forall(300, |rng| {
+            let (cols, m, kdim, codes, od, wq, aq, k) = random_case(rng);
+            let plain = gemm_codes_i64(&cols, m, kdim, &codes, od);
+            let g = packed(&codes, od, kdim, wq, k);
+            let a = pack_activations(&cols, m, kdim, aq, k);
+            for opts in opts_grid() {
+                check_eq(
+                    gemm_sliced_fast_opts(&a, &g, opts),
+                    plain.clone(),
+                    "fast datapath vs plain i64",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn adversarial_tile_remainder_shapes_are_bit_identical() {
+        // M, od and kdim at tile boundaries ±1 (register tiles MR/NR, the
+        // KC cache block, and the 8/16-lane SIMD widths), against word
+        // lengths with partial top digits on both operands. Every fast
+        // datapath must agree with the plain i64 oracle at every shape.
+        let mut rng = Rng::new(0x7117);
+        for (wq, aq, k) in [(8u32, 8u32, 8u32), (3, 5, 2), (5, 7, 2), (7, 3, 3)] {
+            for m in [1usize, MR - 1, MR, MR + 1, 2 * MR + 1] {
+                for od in [1usize, NR - 1, NR, NR + 1] {
+                    for kdim in [1usize, 7, 8, 9, 15, 16, 17, KC - 1, KC, KC + 1] {
+                        let amax = (1i64 << aq) - 1;
+                        let cols: Vec<i16> =
+                            (0..m * kdim).map(|_| rng.range_i64(0, amax) as i16).collect();
+                        let (lo, hi) = (-(1i64 << (wq - 1)), (1i64 << (wq - 1)) - 1);
+                        let codes: Vec<i32> =
+                            (0..od * kdim).map(|_| rng.range_i64(lo, hi) as i32).collect();
+                        let plain = gemm_codes_i64(&cols, m, kdim, &codes, od);
+                        let g = packed(&codes, od, kdim, wq, k);
+                        let a = pack_activations(&cols, m, kdim, aq, k);
+                        for opts in opts_grid() {
+                            assert_eq!(
+                                gemm_sliced_fast_opts(&a, &g, opts),
+                                plain,
+                                "(w{wq} a{aq} k{k}) m={m} od={od} kdim={kdim} {opts:?}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_tile_decomposition_matches_whole_matrix() {
+        // Stitching row-strip × channel-group sub-GEMMs back together is
+        // the whole GEMM: the tiled kernel may partition work any way it
+        // likes without changing a bit.
+        forall(150, |rng| {
+            let (cols, m, kdim, codes, od, wq, aq, k) = random_case(rng);
+            let a = pack_activations(&cols, m, kdim, aq, k);
+            let g = packed(&codes, od, kdim, wq, k);
+            let whole = gemm_sliced_fast(&a, &g);
+            let rsplit = 1 + rng.range(0, m);
+            let csplit = 1 + rng.range(0, od);
+            let mut stitched = vec![0i64; m * od];
+            for (r0, r1) in [(0, rsplit.min(m)), (rsplit.min(m), m)] {
+                if r0 == r1 {
+                    continue;
+                }
+                let mut sub_planes = Vec::with_capacity(a.planes.len());
+                for p in &a.planes {
+                    sub_planes.push(p[r0 * kdim..r1 * kdim].to_vec());
+                }
+                let sub_a = SlicedActs {
+                    aq: a.aq,
+                    k: a.k,
+                    m: r1 - r0,
+                    kdim,
+                    planes: sub_planes,
+                };
+                for (c0, c1) in [(0, csplit.min(od)), (csplit.min(od), od)] {
+                    if c0 == c1 {
+                        continue;
+                    }
+                    let sub_g = packed(&codes[c0 * kdim..c1 * kdim], c1 - c0, kdim, wq, k);
+                    let part = gemm_sliced_fast(&sub_a, &sub_g);
+                    for r in r0..r1 {
+                        for c in c0..c1 {
+                            stitched[r * od + c] = part[(r - r0) * (c1 - c0) + (c - c0)];
+                        }
+                    }
+                }
+            }
+            check_eq(stitched, whole, "stitched tiles vs whole-matrix GEMM")
         });
     }
 
@@ -253,8 +635,7 @@ mod tests {
                 (0..od * kdim).map(|_| rng.range_i64(lo, hi) as i32).collect();
             let plain = gemm_codes_i64(&cols, m, kdim, &codes, od);
             assert_eq!(gemm_sliced_reference(&cols, m, kdim, &codes, od, wq, 8, k), plain);
-            let g = pack_group(&codes, od, kdim, wq, k,
-                vec![Requant::from_scale(0.5); od], vec![1.0; od]);
+            let g = packed(&codes, od, kdim, wq, k);
             let a = pack_activations(&cols, m, kdim, 8, k);
             assert_eq!(gemm_sliced_fast(&a, &g), plain);
         }
@@ -262,25 +643,39 @@ mod tests {
 
     #[test]
     fn fast_path_threads_agree_with_single_thread() {
-        // Work above MIN_WORK_TO_FAN_OUT (512·128·32·3·4 ≈ 25M digit-MACs)
-        // so the scoped fan-out engages on multi-core machines;
-        // thread-count must not affect the bits.
+        // Enough post-fusion work (2048·128·64 ≈ 16.8M digit-MACs even
+        // after the ladder collapses (w5, a7, k2) to one plane pair) that
+        // the scoped fan-out engages on multi-core machines; thread count
+        // must not affect the bits.
         let mut rng = Rng::new(99);
-        let (m, kdim, od, wq, aq, k) = (512usize, 128usize, 32usize, 5u32, 7u32, 2u32);
+        let (m, kdim, od, wq, aq, k) = (2048usize, 128usize, 64usize, 5u32, 7u32, 2u32);
         let cols: Vec<i16> = (0..m * kdim).map(|_| rng.range_i64(0, 127) as i16).collect();
         let codes: Vec<i32> = (0..od * kdim).map(|_| rng.range_i64(-16, 15) as i32).collect();
-        let g = pack_group(
-            &codes,
-            od,
-            kdim,
-            wq,
-            k,
-            vec![Requant::from_scale(0.5); od],
-            vec![1.0; od],
-        );
+        let g = packed(&codes, od, kdim, wq, k);
         let a = pack_activations(&cols, m, kdim, aq, k);
         let fast = gemm_sliced_fast(&a, &g);
         assert_eq!(fast, gemm_codes_i64(&cols, m, kdim, &codes, od));
+    }
+
+    #[test]
+    fn fused_width_respects_the_bound_and_the_operands() {
+        // ResNet depths fuse all the way to single planes; wide digits at
+        // deep reductions stay bound-limited; single-plane operands never
+        // widen at all.
+        assert_eq!(fused_width(4, 8, 2, 576), 8); // resnet18 layer-1: full fuse
+        assert_eq!(fused_width(8, 8, 8, 576), 8); // already single planes
+        assert_eq!(fused_width(2, 2, 2, 576), 2); // nothing to fuse
+        // Depth beyond max_kdim(2, 3, 2) forbids even the first rung...
+        let deep = max_kdim(2, 3, 2) + 1;
+        assert_eq!(fused_width(2, 3, 1, deep), 1);
+        // ...while a shallow reduction takes it.
+        assert_eq!(fused_width(2, 3, 1, 16), 4);
+        // The reached width always admits the depth.
+        let cases = [(4u32, 8u32, 2u32, 576usize), (8, 8, 1, 33_000), (5, 7, 2, 128)];
+        for (wq, aq, k, kdim) in cases {
+            let k_eff = fused_width(wq, aq, k, kdim);
+            assert!(kdim <= max_kdim(wq, aq, k_eff), "(w{wq} a{aq} k{k}→{k_eff})");
+        }
     }
 
     #[test]
@@ -297,6 +692,11 @@ mod tests {
                     vec![-1],
                     "aq={aq} k={k}"
                 );
+                let g = packed(&codes, 1, 2, 3, k);
+                let a = pack_activations(&cols, 1, 2, aq, k);
+                for opts in OPTS_GRID {
+                    assert_eq!(gemm_sliced_fast_opts(&a, &g, opts), vec![-1], "aq={aq} k={k}");
+                }
             }
         }
     }

@@ -400,13 +400,51 @@ impl XmpModel {
         packed: &PackedModel,
         image: &[f32],
         path: KernelPath,
+        prof: Option<&mut ModelProfile>,
+    ) -> Result<Vec<f32>> {
+        self.forward_batch_profiled(packed, image, 1, path, prof)
+    }
+
+    /// Run a whole batch of images to `batch × classes` logit rows in one
+    /// pass: every layer executes **once** for the batch, so the im2col
+    /// patch matrices and digit-plane packing are built once per layer
+    /// per batch instead of once per image, and each GEMM sees `batch`
+    /// times the rows (deeper thread fan-out, better plane reuse). Rows
+    /// of a GEMM are independent, so the result is bit-identical to
+    /// looping [`forward_kernel`](Self::forward_kernel) per image — the
+    /// batching property test and the backend's `infer_batch` regression
+    /// both pin that.
+    pub fn forward_batch(
+        &self,
+        packed: &PackedModel,
+        images: &[f32],
+        batch: usize,
+        path: KernelPath,
+    ) -> Result<Vec<f32>> {
+        self.forward_batch_profiled(packed, images, batch, path, None)
+    }
+
+    /// [`forward_batch`](Self::forward_batch) with the profiling sink —
+    /// the single implementation behind every forward entry point
+    /// (single-image calls are `batch = 1`), so the batched and
+    /// per-image paths cannot drift apart.
+    pub fn forward_batch_profiled(
+        &self,
+        packed: &PackedModel,
+        images: &[f32],
+        batch: usize,
+        path: KernelPath,
         mut prof: Option<&mut ModelProfile>,
     ) -> Result<Vec<f32>> {
-        if image.len() != self.image_len() {
+        if batch == 0 {
+            return Ok(Vec::new());
+        }
+        if images.len() != batch * self.image_len() {
             crate::bail!(
-                "image has {} elements, model expects {}",
-                image.len(),
-                self.image_len()
+                "batch of {} images has {} elements, model expects {}",
+                batch,
+                images.len(),
+                batch * self.image_len()
             );
         }
         if let Some(p) = prof.as_deref_mut() {
@@ -417,17 +455,23 @@ impl XmpModel {
                 KernelPath::Fast => "fast",
             }
             .to_string();
+            p.simd = crate::util::simd::level().name().to_string();
         }
         let conv_with = |input: &[u8],
                          a_in: u32,
                          l: &XmpLayer,
                          pl: &pack::PackedLayer,
                          st: Option<&mut StageTimes>| match path {
-            KernelPath::PlainI64 => conv::conv_forward_i64(input, l),
-            KernelPath::Reference => conv::conv_forward_profiled(input, a_in, l, pl, false, st),
-            KernelPath::Fast => conv::conv_forward_profiled(input, a_in, l, pl, true, st),
+            KernelPath::PlainI64 => conv::conv_forward_i64_batch(input, batch, l),
+            KernelPath::Reference => {
+                conv::conv_forward_batch_profiled(input, batch, a_in, l, pl, false, st)
+            }
+            KernelPath::Fast => {
+                conv::conv_forward_batch_profiled(input, batch, a_in, l, pl, true, st)
+            }
         };
-        let mut cur = self.quantize_input(image);
+        // The quantizer is elementwise, so the batch quantizes in one go.
+        let mut cur = self.quantize_input(images);
         let mut cur_shape = (self.input_hw, self.input_channels);
         // The image quantizer emits the full 8-bit range.
         let mut cur_aq = 8u32;
@@ -445,19 +489,30 @@ impl XmpModel {
                 // same sliced kernels (M = 1) and dequantizes to logits.
                 // Pooling never exceeds the per-channel max, so the pooled
                 // features keep the running activation word-length.
-                let pooled = avg_pool(&cur, cur_shape.0, cur_shape.1);
-                if pooled.len() != l.iw as usize {
+                let pooled = avg_pool_batch(&cur, batch, cur_shape.0, cur_shape.1);
+                if pooled.len() != batch * l.iw as usize {
                     crate::bail!(
                         "FC '{}' expects {} features, pooled map has {}",
                         l.name,
                         l.iw,
-                        pooled.len()
+                        pooled.len() / batch
                     );
                 }
                 logits = Some(match path {
-                    KernelPath::PlainI64 => conv::fc_logits_i64(&pooled, l),
-                    KernelPath::Reference => conv::fc_logits(&pooled, cur_aq, l, pl, false),
-                    KernelPath::Fast => conv::fc_logits(&pooled, cur_aq, l, pl, true),
+                    KernelPath::PlainI64 => {
+                        // The ground-truth path stays deliberately
+                        // per-image: it is the definition batching must
+                        // reproduce, so it gets no batched shortcuts.
+                        let mut all = Vec::with_capacity(batch * l.od as usize);
+                        for row in pooled.chunks_exact(l.iw as usize) {
+                            all.extend_from_slice(&conv::fc_logits_i64(row, l));
+                        }
+                        all
+                    }
+                    KernelPath::Reference => {
+                        conv::fc_logits_batch(&pooled, batch, cur_aq, l, pl, false)
+                    }
+                    KernelPath::Fast => conv::fc_logits_batch(&pooled, batch, cur_aq, l, pl, true),
                 });
                 record_layer(&mut prof, l, t_layer, stages);
                 continue;
@@ -465,7 +520,7 @@ impl XmpModel {
             let need = (l.ih, l.iw);
             if need != cur_shape && cur_shape.1 == l.iw && cur_shape.0.div_ceil(2) == l.ih {
                 // The IR elides conv1's 2x stride max-pool (shapes only).
-                cur = max_pool2(&cur, cur_shape.0, cur_shape.1);
+                cur = max_pool2_batch(&cur, batch, cur_shape.0, cur_shape.1);
                 cur_shape = (cur_shape.0.div_ceil(2), cur_shape.1);
             }
             let (out, branch) = if need == cur_shape {
@@ -509,7 +564,7 @@ impl XmpModel {
         match logits {
             Some(l) => Ok(l),
             // Conv-only nets: per-channel pooled activations as logits.
-            None => Ok(avg_pool(&cur, cur_shape.0, cur_shape.1)
+            None => Ok(avg_pool_batch(&cur, batch, cur_shape.0, cur_shape.1)
                 .into_iter()
                 .map(|v| v as f32)
                 .collect()),
@@ -542,6 +597,29 @@ fn record_layer(
         stages,
         ..Default::default()
     });
+}
+
+/// [`avg_pool`] applied per image over a batch-concatenated NHWC map.
+fn avg_pool_batch(act: &[u8], batch: usize, h: u32, c: u32) -> Vec<u8> {
+    let img = (h * h * c) as usize;
+    debug_assert_eq!(act.len(), batch * img, "batched map must be whole images");
+    let mut out = Vec::with_capacity(batch * c as usize);
+    for image in act.chunks_exact(img) {
+        out.extend_from_slice(&avg_pool(image, h, c));
+    }
+    out
+}
+
+/// [`max_pool2`] applied per image over a batch-concatenated NHWC map.
+fn max_pool2_batch(act: &[u8], batch: usize, h: u32, c: u32) -> Vec<u8> {
+    let img = (h * h * c) as usize;
+    debug_assert_eq!(act.len(), batch * img, "batched map must be whole images");
+    let oh = h.div_ceil(2);
+    let mut out = Vec::with_capacity(batch * (oh * oh * c) as usize);
+    for image in act.chunks_exact(img) {
+        out.extend_from_slice(&max_pool2(image, h, c));
+    }
+    out
 }
 
 /// Global average pool over an NHWC u8 map: rounded per-channel mean.
@@ -776,6 +854,49 @@ mod tests {
     }
 
     #[test]
+    fn batched_forward_matches_per_image_forward() {
+        // A joint (w, a) resnet-8: forward_batch over 3 images is
+        // bit-identical to looping forward_kernel per image on all three
+        // kernel paths — GEMM rows are independent, so batch-level
+        // im2col/digit-plane reuse must not move a single logit bit.
+        let base = resnet::resnet_small(1, 10);
+        let plan = uniform_plan(&base, 3);
+        let n = plan.len();
+        let aq: Vec<u32> = (0..n)
+            .map(|i| {
+                if i == 0 || i + 1 == n || base.layers[i].kind == LayerKind::Fc {
+                    8
+                } else {
+                    [4u32, 6, 8][i % 3]
+                }
+            })
+            .collect();
+        let m = XmpModel::synthetic_joint(&base, &plan, &aq, XmpConfig::default()).unwrap();
+        let packed = pack::pack_model(&m);
+        let batch = 3usize;
+        let mut rng = Rng::new(0xBA7C);
+        let images: Vec<f32> = (0..batch * m.image_len())
+            .map(|_| rng.uniform(0.0, 8.0) as f32)
+            .collect();
+        let paths = [KernelPath::PlainI64, KernelPath::Reference, KernelPath::Fast];
+        for path in paths {
+            let batched = m.forward_batch(&packed, &images, batch, path).unwrap();
+            assert_eq!(batched.len(), batch * 10);
+            for (b, img) in images.chunks_exact(m.image_len()).enumerate() {
+                let single = m.forward_kernel(&packed, img, path).unwrap();
+                let row = &batched[b * 10..(b + 1) * 10];
+                for (x, y) in row.iter().zip(&single) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{path:?} batch row {b} diverged");
+                }
+            }
+        }
+        // Degenerate batches: empty is fine, a ragged batch is an error.
+        let empty = m.forward_batch(&packed, &[], 0, KernelPath::Fast).unwrap();
+        assert!(empty.is_empty());
+        assert!(m.forward_batch(&packed, &images, 2, KernelPath::Fast).is_err());
+    }
+
+    #[test]
     fn profiled_forward_is_bit_identical_and_covers_every_layer() {
         let base = resnet::resnet_small(1, 10);
         let plan = uniform_plan(&base, 4);
@@ -789,6 +910,7 @@ mod tests {
         assert_eq!(logits, m.forward(&packed, &img, true).unwrap(), "profiling changed logits");
         assert_eq!(prof.layers.len(), m.layers.len(), "one profile entry per layer");
         assert_eq!(prof.path, "fast");
+        assert!(!prof.simd.is_empty(), "profile must record the SIMD level");
         for (pl, l) in prof.layers.iter().zip(&m.layers) {
             assert_eq!(pl.name, l.name);
             assert_eq!(pl.aq, l.aq);

@@ -193,6 +193,36 @@ pub fn pack_activations(cols: &[i16], m: usize, kdim: usize, aq: u32, k: u32) ->
     }
 }
 
+/// Fuse adjacent digit planes into planes of twice the digit width: the
+/// pair `(2j, 2j+1)` becomes `plane_{2j} + (plane_{2j+1} << k)`; a
+/// trailing unpaired plane passes through unchanged. Because digit planes
+/// are positional, the result is EXACTLY the digit planes of re-slicing
+/// the original values at width `2k` — for signed weight planes (two's
+/// complement top digit included, even and odd plane counts alike) and
+/// for unsigned activation planes (property-tested below). The fast GEMM
+/// uses this ladder to fuse low-(wq, aq) slice pairs into wider lanes
+/// wherever [`max_kdim`] at the doubled width still admits the reduction
+/// depth, quartering the slice cross-product per rung.
+///
+/// Fused digits stay well inside `i16`: a pair only exists when
+/// `k < word-length ≤ 8`, so the fused width is at most 14 bits.
+pub fn fuse_plane_pairs(planes: &[Vec<i16>], k: u32) -> Vec<Vec<i16>> {
+    let mut out = Vec::with_capacity(planes.len().div_ceil(2));
+    for pair in planes.chunks(2) {
+        if let [lo, hi] = pair {
+            debug_assert!(k <= 7, "fusable planes imply k < word-length <= 8");
+            let mut fused = Vec::with_capacity(lo.len());
+            for (&l, &h) in lo.iter().zip(hi.iter()) {
+                fused.push((l as i32 + ((h as i32) << k)) as i16);
+            }
+            out.push(fused);
+        } else {
+            out.push(pair[0].clone());
+        }
+    }
+    out
+}
+
 /// One layer's packed groups, in the same order as
 /// [`super::XmpLayer::groups`].
 #[derive(Clone, Debug)]
@@ -361,6 +391,95 @@ mod tests {
                     // The defining inequality, tight to within one unit.
                     assert!(b as u64 * a_max * w_max <= i32::MAX as u64);
                     assert!((b as u64 + 1) * a_max * w_max > i32::MAX as u64);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_fused_planes_equal_reslicing_at_double_width() {
+        // The lane-fusion identity the fast GEMM rests on: fusing adjacent
+        // plane pairs at width k yields bit-for-bit the planes of slicing
+        // the original values at width 2k — signed weight planes (partial
+        // top digits, even and odd plane counts) and unsigned activation
+        // planes alike. So "fused" and "unfused per slice pair" recombine
+        // to the same accumulator by construction.
+        forall(400, |rng| {
+            let wq = 1 + rng.range(0, 8) as u32;
+            let k = *rng.choose(&[1u32, 2, 3, 4, 5]);
+            let (od, kdim) = (1 + rng.range(0, 4), 1 + rng.range(0, 9));
+            let (lo, hi) = (-(1i64 << (wq - 1)), (1i64 << (wq - 1)) - 1);
+            let codes: Vec<i32> = (0..od * kdim)
+                .map(|_| rng.range_i64(lo, hi) as i32)
+                .collect();
+            let requant = vec![Requant::from_scale(0.01); od];
+            let g = pack_group(&codes, od, kdim, wq, k, requant.clone(), vec![1.0; od]);
+            let g2 = pack_group(&codes, od, kdim, wq, 2 * k, requant, vec![1.0; od]);
+            check_eq(
+                fuse_plane_pairs(&g.planes, k),
+                g2.planes,
+                "fused weight planes == planes sliced at 2k",
+            )?;
+
+            let aq = 1 + rng.range(0, 8) as u32;
+            let m = 1 + rng.range(0, 5);
+            let cols: Vec<i16> = (0..m * kdim)
+                .map(|_| rng.below(1u64 << aq) as i16)
+                .collect();
+            let a = pack_activations(&cols, m, kdim, aq, k);
+            let a2 = pack_activations(&cols, m, kdim, aq, 2 * k);
+            check_eq(
+                fuse_plane_pairs(&a.planes, k),
+                a2.planes,
+                "fused activation planes == planes sliced at 2k",
+            )?;
+
+            // The ladder composes: two fusion rungs == slicing at 4k.
+            if k <= 3 {
+                let a4 = pack_activations(&cols, m, kdim, aq, 4 * k);
+                check_eq(
+                    fuse_plane_pairs(&fuse_plane_pairs(&a.planes, k), 2 * k),
+                    a4.planes,
+                    "two fusion rungs == planes sliced at 4k",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fuse_plane_pairs_passes_single_planes_through() {
+        let planes = vec![vec![3i16, -2, 0, 7]];
+        assert_eq!(fuse_plane_pairs(&planes, 4), planes);
+        assert!(fuse_plane_pairs(&[], 2).is_empty());
+    }
+
+    #[test]
+    fn max_kdim_stays_tight_at_fused_widths() {
+        // The fusion ladder evaluates the bound at doubled digit widths
+        // k·2^t (capped only by the operands themselves, so up to 16 for
+        // 8-bit words): the defining inequality must stay tight at every
+        // width the ladder can reach, exhaustively over (wq, aq, k).
+        for wq in 1..=8u32 {
+            for aq in 1..=8u32 {
+                for k in 1..=8u32 {
+                    let mut k_eff = k;
+                    while k_eff <= 16 {
+                        let b = max_kdim(wq, aq, k_eff) as u64;
+                        let a_max = (1u64 << k_eff.min(aq)) - 1;
+                        let w_max = (1u64 << k_eff.min(wq)) - 1;
+                        assert!(
+                            b * a_max * w_max <= i32::MAX as u64,
+                            "(w{wq}, a{aq}, k{k_eff}) bound unsafe"
+                        );
+                        assert!(
+                            (b + 1) * a_max * w_max > i32::MAX as u64,
+                            "(w{wq}, a{aq}, k{k_eff}) bound not tight"
+                        );
+                        // Doubling the width never widens the safe depth.
+                        assert!(max_kdim(wq, aq, k_eff * 2) <= max_kdim(wq, aq, k_eff));
+                        k_eff *= 2;
+                    }
                 }
             }
         }

@@ -13,7 +13,10 @@ use mpcnn::serving::{
 use mpcnn::util::prop::{check, differential, forall};
 use mpcnn::util::rng::Rng;
 use mpcnn::xmp::conv::{conv_forward, conv_forward_i64};
-use mpcnn::xmp::pack::{pack_group, PackedLayer};
+use mpcnn::xmp::gemm::{
+    gemm_codes_i64, gemm_sliced_fast_opts, gemm_sliced_reference, FastOpts, KC, MR, NR,
+};
+use mpcnn::xmp::pack::{pack_activations, pack_group, PackedLayer};
 use mpcnn::xmp::{GroupWeights, Requant, XmpBackend, XmpConfig, XmpLayer, XmpModel};
 
 /// Differential-fuzz case count: CI's `diff-fuzz-smoke` job raises this
@@ -235,6 +238,133 @@ fn diff_fuzz_weight_only_aq8_reproduces_legacy_engine() {
             }),
         ],
         shrink_case,
+    );
+}
+
+/// One GEMM-level differential case: a raw `(m × kdim) · (kdim × od)`
+/// sliced multiply with independently drawn word-lengths — exercising the
+/// fast kernel's tile and lane-fusion machinery below the conv-layer glue
+/// (no im2col, no requantize: the compared values are the i64
+/// accumulators themselves).
+#[derive(Clone, Debug)]
+struct GemmCase {
+    m: usize,
+    od: usize,
+    kdim: usize,
+    wq: u32,
+    aq: u32,
+    k: u32,
+    codes: Vec<i32>,
+    cols: Vec<i16>,
+}
+
+impl GemmCase {
+    fn fast(&self, o: FastOpts) -> Vec<i64> {
+        let rq = vec![Requant::from_scale(0.5); self.od];
+        let scales = vec![0.01f32; self.od];
+        let g = pack_group(&self.codes, self.od, self.kdim, self.wq, self.k, rq, scales);
+        let a = pack_activations(&self.cols, self.m, self.kdim, self.aq, self.k);
+        gemm_sliced_fast_opts(&a, &g, o)
+    }
+}
+
+fn opts(fuse: bool, simd: bool) -> FastOpts {
+    FastOpts { fuse, simd }
+}
+
+/// Adversarial shape generator: every dimension lands on a register-tile
+/// or SIMD-lane boundary (`MR`/`NR`, the 8/16-lane vector widths, `KC`)
+/// ±1 as often as on a random interior point, with free `(wq, aq, k)`
+/// draws so partial top digits appear on both operands.
+fn random_gemm_case(rng: &mut Rng) -> GemmCase {
+    let m_pool = [1, MR - 1, MR, MR + 1, 2 * MR + 1, 1 + rng.range(0, 24)];
+    let od_pool = [1, NR - 1, NR, NR + 1, 3 * NR + 2, 1 + rng.range(0, 24)];
+    let kd_pool = [1, 7, 8, 9, 15, 16, 17, KC - 1, KC, KC + 1, 1 + rng.range(0, 64)];
+    let m = *rng.choose(&m_pool);
+    let od = *rng.choose(&od_pool);
+    let kdim = *rng.choose(&kd_pool);
+    let wq = 1 + rng.range(0, 8) as u32;
+    let aq = 1 + rng.range(0, 8) as u32;
+    let k = *rng.choose(&[1u32, 2, 3, 4, 5, 8]);
+    let (lo, hi) = (-(1i64 << (wq - 1)), (1i64 << (wq - 1)) - 1);
+    let codes: Vec<i32> = (0..od * kdim).map(|_| rng.range_i64(lo, hi) as i32).collect();
+    let amax = (1i64 << aq) - 1;
+    let cols: Vec<i16> = (0..m * kdim).map(|_| rng.range_i64(0, amax) as i16).collect();
+    GemmCase {
+        m,
+        od,
+        kdim,
+        wq,
+        aq,
+        k,
+        codes,
+        cols,
+    }
+}
+
+/// Shrink candidates: halve the channels, the rows, or the reduction
+/// depth (keeping each row's leading taps). The harness keeps whichever
+/// still reproduces the failure.
+fn shrink_gemm_case(c: &GemmCase) -> Vec<GemmCase> {
+    let mut out = Vec::new();
+    if c.od > 1 {
+        let mut s = c.clone();
+        s.od = c.od / 2;
+        s.codes.truncate(s.od * s.kdim);
+        out.push(s);
+    }
+    if c.m > 1 {
+        let mut s = c.clone();
+        s.m = c.m / 2;
+        s.cols.truncate(s.m * s.kdim);
+        out.push(s);
+    }
+    if c.kdim > 1 {
+        let mut s = c.clone();
+        let kd = c.kdim / 2;
+        let mut codes = Vec::with_capacity(c.od * kd);
+        for row in c.codes.chunks_exact(c.kdim) {
+            codes.extend_from_slice(&row[..kd]);
+        }
+        let mut cols = Vec::with_capacity(c.m * kd);
+        for row in c.cols.chunks_exact(c.kdim) {
+            cols.extend_from_slice(&row[..kd]);
+        }
+        s.kdim = kd;
+        s.codes = codes;
+        s.cols = cols;
+        out.push(s);
+    }
+    out
+}
+
+#[test]
+fn diff_fuzz_gemm_tile_and_fusion_grid_bit_identical() {
+    // The tentpole's correctness anchor at the GEMM level: on shapes
+    // pinned to the fast kernel's tile remainders, the plain-i64 product,
+    // the scalar sliced reference, and every fast-path datapath
+    // combination (lane fusion on/off × SIMD on/off) must agree
+    // bit-for-bit on the raw i64 accumulators. On a default (scalar-only)
+    // build the SIMD switch is inert and the four fast variants collapse
+    // to two genuinely distinct datapaths — the `--features simd` CI leg
+    // is where the vector kernels enter this net.
+    differential(
+        "xmp-gemm-tile-fusion",
+        diff_cases(150),
+        random_gemm_case,
+        &[
+            ("plain-i64", &|c: &GemmCase| {
+                gemm_codes_i64(&c.cols, c.m, c.kdim, &c.codes, c.od)
+            }),
+            ("scalar-reference", &|c: &GemmCase| {
+                gemm_sliced_reference(&c.cols, c.m, c.kdim, &c.codes, c.od, c.wq, c.aq, c.k)
+            }),
+            ("fast-digit-plane", &|c: &GemmCase| c.fast(opts(true, true))),
+            ("fast-nofuse", &|c: &GemmCase| c.fast(opts(false, true))),
+            ("fast-scalar", &|c: &GemmCase| c.fast(opts(true, false))),
+            ("fast-scalar-nofuse", &|c: &GemmCase| c.fast(opts(false, false))),
+        ],
+        shrink_gemm_case,
     );
 }
 
